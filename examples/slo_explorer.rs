@@ -1,0 +1,140 @@
+//! SLO and capacity exploration — the "what would it take?" follow-up the
+//! paper's discussion motivates (§VIII: autoscaling the cheap pipeline
+//! might beat the fast one).
+//!
+//! Three sweeps over the fitted twins, all through the AOT artifacts:
+//!
+//!  1. **SLO frontier**: how the %-of-hours-met varies with the latency
+//!     limit (1 min … 48 h) for each twin under each forecast.
+//!  2. **Capacity sweep**: scale the blocking-write twin's capacity
+//!     (×1 … ×4, i.e. 1–4 replicas) and find the cheapest configuration
+//!     that meets the 4 h / 95 % SLO under the High forecast — the paper's
+//!     "just duplicate the cheap pipeline" hypothesis, quantified.
+//!  3. **Quickscaling comparison**: the same twins under the optimal
+//!     horizontal-scaling model (no queueing, cost scales with replicas).
+//!
+//! Run with: `cargo run --release --example slo_explorer`
+
+use std::path::Path;
+
+use plantd::bizsim::{simulate, simulate_batch, SloSpec};
+use plantd::runtime::default_backend;
+use plantd::traffic::TrafficModel;
+use plantd::twin::TwinParams;
+use plantd::util::table::{fnum, Table};
+use plantd::util::units;
+
+fn main() -> anyhow::Result<()> {
+    let backend = default_backend(Path::new("artifacts"));
+    println!("backend: {}\n", backend.name());
+    let twins = TwinParams::paper_table1();
+    let nominal = TrafficModel::nominal();
+    let high = TrafficModel::high();
+
+    // ---- 1. SLO frontier ------------------------------------------------
+    let limits_h = [1.0 / 60.0, 0.25, 1.0, 4.0, 12.0, 24.0, 48.0];
+    let mut t = Table::new(&[
+        "twin / forecast",
+        "1min",
+        "15min",
+        "1h",
+        "4h",
+        "12h",
+        "24h",
+        "48h",
+    ])
+    .with_title("SLO frontier: % of hours with latency within the limit");
+    for forecast in [&nominal, &high] {
+        // one backend execution per forecast covers all twins
+        let base = simulate_batch(
+            backend.as_ref(),
+            &twins,
+            forecast,
+            &SloSpec::default(),
+        )?;
+        for r in &base {
+            let mut row = vec![format!("{} / {}", r.twin.name, forecast.name)];
+            for &lim in &limits_h {
+                let met = r
+                    .latency
+                    .iter()
+                    .filter(|&&l| l <= lim * 3600.0)
+                    .count() as f64
+                    / r.latency.len() as f64;
+                row.push(fnum(met * 100.0, 1));
+            }
+            t.row(row);
+        }
+    }
+    println!("{}", t.render());
+
+    // ---- 2. capacity sweep: replicate the cheap pipeline ----------------
+    let slo = SloSpec::default();
+    let block = &twins[0];
+    let noblock_cost = {
+        let r = simulate(backend.as_ref(), &twins[1], &high, &slo)?;
+        r.cost_usd
+    };
+    let mut sweep = Table::new(&[
+        "replicas",
+        "capacity (rec/s)",
+        "cost ($/yr)",
+        "% hours met",
+        "SLO met",
+        "vs no-blocking",
+    ])
+    .with_title("Capacity sweep: N x blocking-write under the High forecast");
+    let mut cheapest_ok: Option<(usize, f64)> = None;
+    for n in 1..=4usize {
+        let scaled = TwinParams {
+            name: format!("{}x{n}", block.name),
+            max_rps: block.max_rps * n as f64,
+            cost_per_hr: block.cost_per_hr * n as f64,
+            ..block.clone()
+        };
+        let r = simulate(backend.as_ref(), &scaled, &high, &slo)?;
+        if r.slo_met && cheapest_ok.is_none() {
+            cheapest_ok = Some((n, r.cost_usd));
+        }
+        sweep.row(vec![
+            n.to_string(),
+            fnum(scaled.max_rps, 2),
+            fnum(r.cost_usd, 2),
+            fnum(r.pct_latency_met * 100.0, 2),
+            r.slo_met.to_string(),
+            format!("{:.1}%", r.cost_usd / noblock_cost * 100.0),
+        ]);
+    }
+    println!("{}", sweep.render());
+    if let Some((n, cost)) = cheapest_ok {
+        println!(
+            "→ {n} replicas of blocking-write meet the High-forecast SLO for {} — \
+             {:.0}% of no-blocking-write's {}\n",
+            units::dollars(cost),
+            cost / noblock_cost * 100.0,
+            units::dollars(noblock_cost)
+        );
+    }
+
+    // ---- 3. quickscaling twins ------------------------------------------
+    let mut qt = Table::new(&["twin", "forecast", "cost ($/yr)", "SLO met"])
+        .with_title("Quickscaling model: optimal horizontal scaling, no queueing");
+    for forecast in [&nominal, &high] {
+        for twin in &twins {
+            let r = simulate(
+                backend.as_ref(),
+                &twin.as_quickscaling(),
+                forecast,
+                &slo,
+            )?;
+            qt.row(vec![
+                twin.name.clone(),
+                forecast.name.clone(),
+                fnum(r.cost_usd, 2),
+                r.slo_met.to_string(),
+            ]);
+        }
+    }
+    println!("{}", qt.render());
+    Ok(())
+}

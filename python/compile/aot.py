@@ -1,0 +1,120 @@
+"""AOT lowering: JAX/Pallas business-analysis graphs → HLO text artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one HLO **text** file per entry point; the Rust runtime loads them with
+``HloModuleProto::from_text_file`` and compiles them on the PJRT CPU client.
+
+Interchange is HLO text, *not* ``lowered.compile().serialize()`` /
+serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the ``xla`` crate's pinned xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/gen_hlo.py and README gotchas).
+
+Every artifact is lowered with ``return_tuple=True`` so the Rust side always
+unwraps a tuple, regardless of arity.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax ``Lowered`` to XLA HLO text via stablehlo.
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides big constant literals as ``{...}``, which the Rust side's text
+    parser then silently misreads (the calendar gather indices became
+    garbage and the traffic projection came out constant). Never emit
+    elided text.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO printer elided constants; artifact would be corrupt")
+    return text
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (fn, example arg specs).  Shapes here are the binding contract
+# with rust/src/runtime/artifacts.rs — keep the two in sync.
+ENTRY_POINTS = {
+    "traffic": (
+        model.traffic_projection_fn,
+        [_spec(()), _spec(()), _spec((12,)), _spec((168,))],
+    ),
+    "twin_sim": (
+        model.twin_sim_fn,
+        [
+            _spec(()),
+            _spec(()),
+            _spec((12,)),
+            _spec((168,)),
+            _spec((model.SCENARIOS,)),
+            _spec((model.SCENARIOS,)),
+        ],
+    ),
+    "retention": (
+        model.retention_fn,
+        [_spec((model.DAYS,)), _spec(())],
+    ),
+}
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "hlo_bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "hours": model.HOURS,
+                "days": model.DAYS,
+                "scenarios": model.SCENARIOS,
+                "entry_points": manifest,
+            },
+            f,
+            indent=2,
+        )
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    lower_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Pallas kernel: batched FIFO (Lindley) queue scan — the hot spot of the
+PlantD business simulation.
+
+The Simple digital twin (paper §V.G) models the pipeline as a fixed-capacity
+server with an infinite FIFO queue.  Simulating a year of hourly traffic for
+a *batch* of twin scenarios (every pipeline-variant × forecast combination of
+Table II at once) means evaluating, per scenario ``s``::
+
+    q[s, t] = max(0, q[s, t-1] + d[s, t])          q[s, -1] = 0
+
+where ``d = arrivals − capacity`` per hour.  A naive implementation is an
+8760-step serial dependency chain.  The kernel instead uses the max-plus
+reformulation (see ``ref.lindley_scan_ref``): each step is the affine-max map
+``f(q) = max(b, q + a)``; composition of such maps is associative, so the
+whole recursion becomes a *parallel prefix scan* over ``(a, b)`` pairs —
+log-depth instead of linear-depth.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation):
+
+* scenarios ride the 8-sublane axis (block ``S_BLK = 8``), hours ride the
+  128-lane axis — every VPU op processes a full ``(8, 128)`` register tile;
+* the grid iterates over scenario blocks; each grid step owns the whole
+  time axis so the scan never crosses a grid boundary;
+* VMEM: the ``(S_BLK, T)`` deficit tile plus two scan scratch tiles at
+  f32 — for T = 8760 that is 3 · 8 · 8760 · 4 B ≈ 840 KiB, comfortably
+  inside the ~16 MiB VMEM budget, so no double-buffering is needed;
+* no MXU use — the kernel is VPU/bandwidth bound.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter into plain
+HLO, which is exactly what the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+S_BLK = 8  # scenario block: one f32 sublane tile
+
+
+def _lindley_kernel(d_ref, q_ref):
+    """One scenario block: max-plus associative scan along the time axis.
+
+    in : d_ref [S_BLK, T]  — arrivals − capacity per hour
+    out: q_ref [S_BLK, T]  — queue length at the end of each hour
+    """
+    d = d_ref[...]
+
+    def combine(left, right):
+        # (a, b) represents f(q) = max(b, q + a); right is applied after left.
+        a1, b1 = left
+        a2, b2 = right
+        return a1 + a2, jnp.maximum(b2, b1 + a2)
+
+    a, b = jax.lax.associative_scan(combine, (d, jnp.zeros_like(d)), axis=1)
+    # Prefix map applied to the empty queue q0 = 0.
+    q_ref[...] = jnp.maximum(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lindley_queue(deficit, *, interpret=True):
+    """Batched Lindley queue lengths via the Pallas scan kernel.
+
+    Args:
+      deficit: ``[S, T]`` f32, arrivals − capacity per step.  ``S`` must be
+        a multiple of ``S_BLK`` (the AOT artifact uses S = 8).
+      interpret: lower through the Pallas interpreter (required for CPU
+        PJRT; a real TPU build would flip this off).
+
+    Returns:
+      ``[S, T]`` f32 queue lengths.
+    """
+    s, t = deficit.shape
+    if s % S_BLK != 0:
+        raise ValueError(f"scenario count {s} must be a multiple of {S_BLK}")
+    grid = (s // S_BLK,)
+    return pl.pallas_call(
+        _lindley_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((S_BLK, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((S_BLK, t), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, t), jnp.float32),
+        interpret=interpret,
+    )(deficit.astype(jnp.float32))

@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for the PlantD business-analysis kernels.
+
+These are the correctness ground truth for the Pallas kernels in this
+package (see ``traffic.py`` and ``queue_scan.py``): pytest compares kernel
+output against these references across shapes, dtypes, and adversarial
+inputs (hypothesis sweeps).
+
+Everything here mirrors §V.G of the PlantD paper:
+
+* ``traffic_ref``     — the hourly load projection
+  ``Load_h = R·3600 · (1 + doy(h)·g/365) · H[how(h)] · M[month(h)]``
+  where ``g`` is the *net* annual growth (the paper's ``G − 1``; the text
+  defines G=1.0 as "no growth", see DESIGN.md §3).
+* ``lindley_ref``     — the FIFO queue recursion
+  ``q_t = max(0, q_{t-1} + d_t)`` (d = arrivals − capacity per step),
+  i.e. the Simple digital-twin model: fixed throughput capacity with an
+  infinite queue.
+* ``retention_ref``   — rolling-retention-window storage accumulation used
+  by the Table IV storage-policy what-if.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+HOURS_PER_YEAR = 8760
+DAYS_PER_YEAR = 365
+HOURS_PER_WEEK = 168
+
+# Cumulative days at the start of each month, non-leap year.
+_MONTH_STARTS = np.array(
+    [0, 31, 59, 90, 120, 151, 181, 212, 243, 273, 304, 334], dtype=np.int32
+)
+
+
+def calendar_indices(hours: int = HOURS_PER_YEAR, year_start_dow: int = 0):
+    """Static calendar index arrays for each hour of the year.
+
+    Returns ``(doy, month_idx, how_idx)`` — day-of-year (0-based), month
+    (0..11), and hour-of-week (0..167, where 0 is ``year_start_dow`` 00:00).
+    These are compile-time constants baked into the AOT artifact; the year
+    is modeled as starting on a Monday (``year_start_dow=0``) as in the
+    paper's Fig. 5 hour-of-week axis.
+    """
+    h = np.arange(hours, dtype=np.int32)
+    doy = h // 24
+    month_idx = np.searchsorted(_MONTH_STARTS, doy % DAYS_PER_YEAR, side="right") - 1
+    dow = (year_start_dow + doy) % 7
+    how_idx = dow * 24 + (h % 24)
+    return doy, month_idx.astype(np.int32), how_idx
+
+
+def traffic_ref(base_rps, growth_net, month_f, hw_f, *, hours=HOURS_PER_YEAR,
+                year_start_dow=0):
+    """Reference hourly load projection (records/hour), §V.G formula."""
+    doy, month_idx, how_idx = calendar_indices(hours, year_start_dow)
+    doy = jnp.asarray(doy, dtype=jnp.float32)
+    growth_mult = 1.0 + doy * growth_net / float(DAYS_PER_YEAR)
+    return (
+        base_rps
+        * 3600.0
+        * growth_mult
+        * jnp.asarray(hw_f)[how_idx]
+        * jnp.asarray(month_f)[month_idx]
+    )
+
+
+def lindley_ref(deficit):
+    """Reference FIFO queue lengths.
+
+    ``deficit`` is ``arrivals − capacity`` per step, shape ``[S, T]``
+    (S scenarios simulated simultaneously).  Returns ``q`` of the same
+    shape with ``q[:, t] = max(0, q[:, t-1] + deficit[:, t])``, ``q0 = 0``.
+
+    Implemented as a plain sequential loop in numpy — deliberately the
+    dumbest possible spelling, so it cannot share bugs with the
+    associative-scan kernel.
+    """
+    d = np.asarray(deficit, dtype=np.float64)
+    q = np.zeros_like(d)
+    carry = np.zeros(d.shape[0], dtype=np.float64)
+    for t in range(d.shape[1]):
+        carry = np.maximum(0.0, carry + d[:, t])
+        q[:, t] = carry
+    return jnp.asarray(q, dtype=jnp.float32)
+
+
+def lindley_scan_ref(deficit):
+    """Same recursion via the max-plus associative scan (jnp, no Pallas).
+
+    The Lindley step ``q ↦ max(0, q + d_t)`` is the affine-max map
+    ``f(q) = max(b, q + a)`` with ``(a, b) = (d_t, 0)``.  Composition is
+    closed and associative: composing "apply f₁ then f₂" gives
+    ``(a₁+a₂, max(b₂, b₁+a₂))``.  The prefix-composed map applied to
+    ``q₀ = 0`` gives ``q_t = max(A_t, B_t)``.  This is the algebra the
+    Pallas kernel uses; it is itself verified against ``lindley_ref``.
+    """
+    import jax
+
+    d = jnp.asarray(deficit, dtype=jnp.float32)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 + a2, jnp.maximum(b2, b1 + a2)
+
+    a, b = jax.lax.associative_scan(combine, (d, jnp.zeros_like(d)), axis=1)
+    return jnp.maximum(a, b)
+
+
+def retention_ref(daily_gb, window_days):
+    """Reference rolling-retention storage series.
+
+    ``stored[d] = Σ_{i = max(0, d−window+1)}^{d} daily_gb[i]`` — data
+    accumulates daily and is deleted once it ages past the retention
+    window (paper §VII.C).
+    """
+    daily = np.asarray(daily_gb, dtype=np.float64)
+    n = daily.shape[0]
+    out = np.zeros(n)
+    for d in range(n):
+        lo = max(0, d - int(window_days) + 1)
+        out[d] = daily[lo : d + 1].sum()
+    return jnp.asarray(out, dtype=jnp.float32)

@@ -1,0 +1,110 @@
+"""Layer 2 — the PlantD business-analysis compute graph (build-time JAX).
+
+Three jittable entry points, each AOT-lowered to HLO text by ``aot.py`` and
+executed from the Rust coordinator via PJRT (Python is never on the request
+path):
+
+* ``traffic_projection_fn`` — §V.G hourly load projection for a year.
+* ``twin_sim_fn``           — the digital-twin year simulation: traffic →
+  batched FIFO queue scan (L1 Pallas kernel) → per-hour throughput and
+  latency for ``S`` twin scenarios at once.  One execute call covers every
+  (pipeline-variant × forecast) cell of the paper's Table II.
+* ``retention_fn``          — rolling-retention storage accumulation for the
+  Table IV storage-policy what-if.
+
+Shapes are fixed at lowering time (see ``aot.py``): S = 8 scenarios,
+T = 8760 hours, D = 365 days.  The Rust side pads unused scenario slots.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.queue_scan import lindley_queue
+from .kernels.traffic import traffic_projection
+
+HOURS = ref.HOURS_PER_YEAR
+DAYS = ref.DAYS_PER_YEAR
+SCENARIOS = 8
+
+
+def traffic_projection_fn(base_rps, growth_net, month_f, hw_f):
+    """Hourly load (records/hour) for a year.  Returns a 1-tuple.
+
+    Args (f32): base_rps ``[]``, growth_net ``[]``, month_f ``[12]``,
+    hw_f ``[168]``.
+    """
+    return (traffic_projection(base_rps, growth_net, month_f, hw_f),)
+
+
+def twin_sim_fn(base_rps, growth_net, month_f, hw_f, cap_rps, base_lat_s):
+    """Simulate ``SCENARIOS`` digital twins over one projected year.
+
+    Args (f32):
+      base_rps ``[]``, growth_net ``[]``: traffic model scalars.
+      month_f ``[12]``, hw_f ``[168]``: correction factors.
+      cap_rps ``[S]``: per-twin sustained capacity, records/second
+        (Table I "max rec/s").  Unused slots should carry a large capacity
+        so their queues stay empty.
+      base_lat_s ``[S]``: per-twin no-queue processing latency, seconds
+        (Table I "avg latency").
+
+    Returns (tuple of f32 arrays):
+      load ``[T]``       — records/hour offered (shared by all twins);
+      queue ``[S, T]``   — records queued at the end of each hour;
+      throughput ``[S,T]`` — records processed during each hour;
+      latency ``[S, T]`` — seconds a record arriving in hour t waits
+        (queue-ahead-of-it drain time + base latency, FIFO).
+
+    Cost, SLO attainment, and backlog pricing are cheap scalar folds done in
+    Rust over these series (they vary per what-if question; the heavy
+    per-hour compute does not).
+    """
+    load = traffic_projection(base_rps, growth_net, month_f, hw_f)  # [T]
+
+    cap_hr = cap_rps[:, None] * 3600.0                 # [S, 1] rec/hour
+    arrivals = jnp.broadcast_to(load[None, :], (SCENARIOS, HOURS))
+    deficit = arrivals - cap_hr                        # [S, T]
+
+    queue = lindley_queue(deficit)                     # [S, T] — L1 kernel
+
+    # processed_t = min(capacity, backlog + arrivals).  Algebraically equal
+    # to arrivals_t + q_{t-1} - q_t, but the min() form avoids catastrophic
+    # f32 cancellation when the queue has diverged to ~1e7 records (the
+    # cpu-limited collapse of Fig. 6).
+    q_prev = jnp.concatenate(
+        [jnp.zeros((SCENARIOS, 1), jnp.float32), queue[:, :-1]], axis=1
+    )
+    throughput = jnp.minimum(
+        jnp.broadcast_to(cap_hr, (SCENARIOS, HOURS)), q_prev + arrivals
+    )                                                  # [S, T]
+
+    # FIFO wait: a record arriving during hour t sits behind the queue left
+    # at the end of the hour; draining it takes q_t / cap seconds.
+    latency = base_lat_s[:, None] + queue / jnp.maximum(cap_rps[:, None], 1e-9)
+
+    return load, queue, throughput, latency
+
+
+def retention_fn(daily_gb, window_days):
+    """Rolling-retention stored-volume series (Table IV).
+
+    Args:
+      daily_gb ``[D]`` f32 — data volume ingested each day, GB.
+      window_days ``[]`` f32 — retention window in days (e.g. 91 or 182).
+
+    Returns a 1-tuple: stored ``[D]`` f32 — GB held in storage at the end of
+    each day.  ``stored[d] = Σ daily[i]`` over ``d − window < i ≤ d``.
+
+    The window is a *runtime* input (so one artifact serves every retention
+    what-if); implemented as a banded mask contraction, which XLA fuses into
+    a single pass — D = 365, so the [D, D] mask is 520 KB of f32, trivial.
+    """
+    d_idx = jnp.arange(DAYS, dtype=jnp.float32)
+    # mask[d, i] = 1 where d - window < i <= d
+    i_idx = d_idx[None, :]
+    dd = d_idx[:, None]
+    mask = (i_idx <= dd) & (i_idx > dd - window_days)
+    stored = (mask.astype(jnp.float32) * daily_gb[None, :]).sum(axis=1)
+    return (stored,)

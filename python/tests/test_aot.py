@@ -1,0 +1,83 @@
+"""AOT artifact checks: the HLO text files Rust loads are well-formed and
+their manifest matches the lowering contract in ``aot.py`` (which must stay
+in sync with ``rust/src/runtime/artifacts.rs``)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _artifacts_built():
+    return os.path.exists(os.path.join(ART_DIR, "manifest.json"))
+
+
+def test_entry_point_table_covers_all_models():
+    assert set(aot.ENTRY_POINTS) == {"traffic", "twin_sim", "retention"}
+
+
+def test_lowering_produces_parsable_hlo(tmp_path):
+    # lower the smallest entry point from scratch and sanity-check the text
+    import jax
+
+    fn, specs = aot.ENTRY_POINTS["retention"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root is a tuple
+    assert "tuple(" in text.replace(" ", "") or ") tuple" in text or "(f32[365]" in text
+
+
+@pytest.mark.skipif(not _artifacts_built(), reason="run `make artifacts` first")
+def test_manifest_matches_entry_points():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["hours"] == model.HOURS == 8760
+    assert man["days"] == model.DAYS == 365
+    assert man["scenarios"] == model.SCENARIOS == 8
+    for name, (fn, specs) in aot.ENTRY_POINTS.items():
+        entry = man["entry_points"][name]
+        assert entry["file"] == f"{name}.hlo.txt"
+        assert [tuple(i["shape"]) for i in entry["inputs"]] == [
+            s.shape for s in specs
+        ]
+        path = os.path.join(ART_DIR, entry["file"])
+        assert os.path.exists(path)
+        head = open(path).read(4096)
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(not _artifacts_built(), reason="run `make artifacts` first")
+def test_artifact_hlo_has_expected_parameter_count():
+    for name, (fn, specs) in aot.ENTRY_POINTS.items():
+        text = open(os.path.join(ART_DIR, f"{name}.hlo.txt")).read()
+        entry = text[text.index("ENTRY") :]
+        # every lowered input appears as a parameter(i) instruction
+        n_params = sum(
+            1 for line in entry.splitlines() if " parameter(" in line
+        )
+        assert n_params == len(specs), (name, n_params, len(specs))
+
+
+def test_hlo_text_never_elides_constants():
+    """Regression: the default HLO printer elides big constants as `{...}`,
+    which the Rust text parser silently misreads (the traffic projection
+    came out constant). to_hlo_text must print full literals or raise."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    big = np.arange(10_000, dtype=np.float32)
+
+    def fn(x):
+        return (x + jnp.asarray(big),)
+
+    text = aot.to_hlo_text(
+        jax.jit(fn).lower(jax.ShapeDtypeStruct((10_000,), jnp.float32))
+    )
+    assert "{...}" not in text
+    # the constant's payload is actually present
+    assert "9999" in text

@@ -1,0 +1,228 @@
+"""L1 correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+This is the CORE numerical correctness signal for the whole stack — the Rust
+runtime executes exactly the HLO these kernels lower to, so agreement with
+the oracles here transfers to the request path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.queue_scan import S_BLK, lindley_queue
+from compile.kernels.traffic import traffic_projection
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Lindley queue scan
+# ---------------------------------------------------------------------------
+
+
+def _check_lindley(d):
+    got = np.asarray(lindley_queue(jnp.asarray(d, jnp.float32)))
+    want = np.asarray(ref.lindley_ref(d))
+    # Tolerance is scale-aware: the log-depth scan reassociates f32 sums, so
+    # rounding grows with the magnitude of the running queue, not with T.
+    scale = max(1.0, float(np.abs(want).max()))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3 * scale)
+
+
+def test_lindley_all_positive_deficit_accumulates():
+    d = np.ones((8, 16), np.float32)
+    q = np.asarray(lindley_queue(jnp.asarray(d)))
+    np.testing.assert_allclose(q, np.cumsum(d, axis=1))
+
+
+def test_lindley_all_negative_deficit_stays_empty():
+    d = -np.ones((8, 16), np.float32)
+    q = np.asarray(lindley_queue(jnp.asarray(d)))
+    assert (q == 0).all()
+
+
+def test_lindley_zero_deficit():
+    _check_lindley(np.zeros((8, 8), np.float32))
+
+
+def test_lindley_single_step():
+    _check_lindley(RNG.normal(size=(8, 1)).astype(np.float32))
+
+
+def test_lindley_build_then_drain():
+    # queue builds for 10 steps then drains to exactly zero
+    d = np.concatenate(
+        [np.full((8, 10), 2.0), np.full((8, 20), -1.0)], axis=1
+    ).astype(np.float32)
+    q = np.asarray(lindley_queue(jnp.asarray(d)))
+    np.testing.assert_allclose(q[:, 9], 20.0)
+    np.testing.assert_allclose(q[:, -1], 0.0)
+    _check_lindley(d)
+
+
+def test_lindley_matches_serial_ref_random():
+    _check_lindley(RNG.normal(scale=100.0, size=(8, 512)).astype(np.float32))
+
+
+def test_lindley_scan_ref_matches_serial_ref():
+    d = RNG.normal(scale=10.0, size=(16, 300)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ref.lindley_scan_ref(d)),
+        np.asarray(ref.lindley_ref(d)),
+        rtol=1e-5,
+        atol=1e-3,
+    )
+
+
+def test_lindley_multiple_scenario_blocks():
+    # grid > 1: 32 scenarios = 4 blocks of S_BLK
+    d = RNG.normal(scale=5.0, size=(4 * S_BLK, 64)).astype(np.float32)
+    _check_lindley(d)
+
+
+def test_lindley_scenarios_independent():
+    # changing one scenario row must not affect the others
+    d = RNG.normal(size=(8, 100)).astype(np.float32)
+    q1 = np.asarray(lindley_queue(jnp.asarray(d)))
+    d2 = d.copy()
+    d2[3] += 100.0
+    q2 = np.asarray(lindley_queue(jnp.asarray(d2)))
+    rows = [i for i in range(8) if i != 3]
+    np.testing.assert_array_equal(q1[rows], q2[rows])
+    assert not np.array_equal(q1[3], q2[3])
+
+
+def test_lindley_rejects_bad_scenario_count():
+    with pytest.raises(ValueError, match="multiple"):
+        lindley_queue(jnp.zeros((3, 10), jnp.float32))
+
+
+def test_lindley_year_length():
+    # full paper shape: 8 scenarios x 8760 hours
+    d = RNG.normal(scale=1000.0, size=(8, ref.HOURS_PER_YEAR)).astype(np.float32)
+    _check_lindley(d)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    s_blocks=st.integers(1, 3),
+    t=st.integers(1, 200),
+    scale=st.floats(0.1, 1e4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lindley_hypothesis_random(s_blocks, t, scale, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.normal(scale=scale, size=(s_blocks * S_BLK, t)).astype(np.float32)
+    _check_lindley(d)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(2, 128), seed=st.integers(0, 2**31 - 1))
+def test_lindley_nonnegative_and_lipschitz(t, seed):
+    """Invariants: q >= 0 and |q_t - q_{t-1}| <= |d_t|."""
+    rng = np.random.default_rng(seed)
+    d = rng.normal(scale=50.0, size=(S_BLK, t)).astype(np.float32)
+    q = np.asarray(lindley_queue(jnp.asarray(d)))
+    assert (q >= 0).all()
+    dq = np.diff(np.concatenate([np.zeros((S_BLK, 1)), q], axis=1), axis=1)
+    assert (np.abs(dq) <= np.abs(d) + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# Traffic projection
+# ---------------------------------------------------------------------------
+
+
+def _rand_factors(rng):
+    month = rng.uniform(0.5, 1.5, 12).astype(np.float32)
+    hw = rng.uniform(0.01, 2.5, 168).astype(np.float32)
+    return month, hw
+
+
+def _check_traffic(r, g, month, hw, hours=ref.HOURS_PER_YEAR):
+    got = np.asarray(traffic_projection(r, g, month, hw, hours=hours))
+    want = np.asarray(ref.traffic_ref(r, g, month, hw, hours=hours))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_traffic_matches_ref_full_year():
+    month, hw = _rand_factors(RNG)
+    _check_traffic(3.5, 0.0, month, hw)
+
+
+def test_traffic_with_growth():
+    month, hw = _rand_factors(RNG)
+    _check_traffic(3.5, 0.5, month, hw)
+
+
+def test_traffic_unit_factors_flat_no_growth():
+    # all factors 1, no growth -> constant R*3600
+    got = np.asarray(
+        traffic_projection(2.0, 0.0, np.ones(12, np.float32), np.ones(168, np.float32))
+    )
+    np.testing.assert_allclose(got, 7200.0, rtol=1e-6)
+
+
+def test_traffic_growth_endpoints():
+    # with g=1.0 and unit factors, the last day is ~2x the first day
+    got = np.asarray(
+        traffic_projection(1.0, 1.0, np.ones(12, np.float32), np.ones(168, np.float32))
+    )
+    assert abs(got[0] - 3600.0) < 1e-2
+    assert abs(got[-1] / got[0] - (1 + 364 / 365)) < 1e-3
+
+
+def test_traffic_zero_rate_is_zero():
+    month, hw = _rand_factors(RNG)
+    got = np.asarray(traffic_projection(0.0, 0.3, month, hw))
+    np.testing.assert_array_equal(got, 0.0)
+
+
+def test_traffic_nonpadded_hours():
+    # hours not a multiple of the tile: padding must be sliced away exactly
+    month, hw = _rand_factors(RNG)
+    _check_traffic(1.25, 0.1, month, hw, hours=1000)
+
+
+def test_traffic_hour_of_week_periodicity():
+    # with unit month factors and no growth, load is 168h-periodic
+    hw = RNG.uniform(0.1, 2.0, 168).astype(np.float32)
+    got = np.asarray(
+        traffic_projection(1.0, 0.0, np.ones(12, np.float32), hw, hours=168 * 4)
+    )
+    np.testing.assert_allclose(got[:168], got[168:336], rtol=1e-6)
+
+
+def test_traffic_month_factor_applies_to_january():
+    month = np.ones(12, np.float32)
+    month[0] = 0.5
+    got = np.asarray(
+        traffic_projection(1.0, 0.0, month, np.ones(168, np.float32))
+    )
+    np.testing.assert_allclose(got[: 31 * 24], 1800.0, rtol=1e-6)
+    np.testing.assert_allclose(got[31 * 24 + 1], 3600.0, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.floats(0.0, 100.0),
+    g=st.floats(-0.9, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+    hours=st.sampled_from([24, 168, 1000, 1024, 8760]),
+)
+def test_traffic_hypothesis(r, g, seed, hours):
+    rng = np.random.default_rng(seed)
+    month, hw = _rand_factors(rng)
+    _check_traffic(np.float32(r), np.float32(g), month, hw, hours=hours)
+
+
+def test_calendar_indices_sane():
+    doy, month_idx, how_idx = ref.calendar_indices()
+    assert doy[0] == 0 and doy[-1] == 364
+    assert month_idx[0] == 0 and month_idx[-1] == 11
+    assert month_idx[31 * 24] == 1  # Feb 1
+    assert how_idx.min() == 0 and how_idx.max() == 167
+    # hour-of-week advances by 1 each hour (mod 168)
+    assert ((np.diff(how_idx) - 1) % 168 == 0).all()

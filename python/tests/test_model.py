@@ -1,0 +1,168 @@
+"""L2 correctness: the twin-simulation and retention graphs.
+
+Checks the conservation laws and invariants the Rust business-analysis layer
+relies on when it folds these series into Table II / Table IV numbers.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def _factors(rng=RNG):
+    return (
+        rng.uniform(0.8, 1.2, 12).astype(np.float32),
+        rng.uniform(0.05, 2.3, 168).astype(np.float32),
+    )
+
+
+def _run_twin(r=3.5, g=0.0, cap=None, lat=None):
+    month, hw = _factors()
+    cap = np.asarray(
+        cap if cap is not None else [1.95, 6.15, 0.66, 1e6, 1e6, 1e6, 1e6, 1e6],
+        np.float32,
+    )
+    lat = np.asarray(lat if lat is not None else [0.15] * 8, np.float32)
+    out = model.twin_sim_fn(
+        jnp.float32(r), jnp.float32(g), jnp.asarray(month), jnp.asarray(hw),
+        jnp.asarray(cap), jnp.asarray(lat)
+    )
+    return [np.asarray(o, np.float64) for o in out], cap, lat
+
+
+def test_twin_sim_shapes():
+    (load, q, thr, lat), _, _ = _run_twin()
+    assert load.shape == (model.HOURS,)
+    assert q.shape == thr.shape == lat.shape == (model.SCENARIOS, model.HOURS)
+
+
+def test_twin_sim_record_conservation():
+    """arrivals == processed + still-queued, cumulatively at every hour."""
+    (load, q, thr, _), _, _ = _run_twin(r=3.5)
+    cum_arr = np.cumsum(load)
+    for s in range(model.SCENARIOS):
+        lhs = np.cumsum(thr[s]) + q[s]
+        np.testing.assert_allclose(lhs, cum_arr, rtol=1e-4, atol=2.0)
+
+
+def test_twin_sim_infinite_capacity_never_queues():
+    (load, q, thr, lat), cap, base_lat = _run_twin()
+    # slots 3..7 have cap 1e6 rec/s >> any load
+    assert (q[3:] == 0).all()
+    np.testing.assert_allclose(thr[3:], np.broadcast_to(load, thr[3:].shape), rtol=1e-5)
+    np.testing.assert_allclose(
+        lat[3:], np.broadcast_to(base_lat[3:, None], lat[3:].shape), rtol=1e-5
+    )
+
+
+def test_twin_sim_undercapacity_queue_diverges():
+    """A twin slower than mean load must end the year with a huge backlog
+    (the paper's cpu-limited collapse, Fig. 6)."""
+    (load, q, _, _), cap, _ = _run_twin(r=3.5)
+    mean_load_rps = load.mean() / 3600.0
+    assert cap[2] < mean_load_rps  # cpu-limited: 0.66 < ~3.5
+    assert q[2, -1] > 1e6
+    # and it is (weakly) worse with growth
+    (_, q_hi, _, _), _, _ = _run_twin(r=3.5, g=0.5)
+    assert q_hi[2, -1] > q[2, -1]
+
+
+def test_twin_sim_throughput_capped_by_capacity():
+    (_, _, thr, _), cap, _ = _run_twin()
+    cap_hr = cap * 3600.0
+    assert (thr <= cap_hr[:, None] * (1 + 1e-5) + 1e-3).all()
+
+
+def test_twin_sim_latency_floor_is_base_latency():
+    (_, _, _, lat), _, base_lat = _run_twin()
+    assert (lat >= base_lat[:, None] - 1e-6).all()
+
+
+def test_twin_sim_throughput_nonnegative():
+    (_, _, thr, _), _, _ = _run_twin(r=10.0)
+    assert (thr >= -1e-3).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    r=st.floats(0.1, 20.0),
+    g=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_twin_sim_hypothesis_invariants(r, g, seed):
+    rng = np.random.default_rng(seed)
+    cap = rng.uniform(0.2, 30.0, model.SCENARIOS).astype(np.float32)
+    lat = rng.uniform(0.01, 1.0, model.SCENARIOS).astype(np.float32)
+    (load, q, thr, l), _, _ = _run_twin(r=r, g=g, cap=cap, lat=lat)
+    assert (q >= 0).all()
+    assert (thr >= -1e-2).all()
+    assert (l >= lat[:, None] - 1e-5).all()
+    # conservation at year end
+    np.testing.assert_allclose(
+        thr.sum(axis=1) + q[:, -1], load.sum(), rtol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# Retention
+# ---------------------------------------------------------------------------
+
+
+def _run_retention(daily, window):
+    (stored,) = model.retention_fn(
+        jnp.asarray(daily, jnp.float32), jnp.float32(window)
+    )
+    return np.asarray(stored, np.float64)
+
+
+def test_retention_matches_ref():
+    daily = RNG.uniform(0.5, 3.0, model.DAYS).astype(np.float32)
+    for w in (1, 7, 91, 182, 365):
+        got = _run_retention(daily, w)
+        want = np.asarray(ref.retention_ref(daily, w), np.float64)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-2)
+
+
+def test_retention_window_one_is_identity():
+    daily = RNG.uniform(0.0, 5.0, model.DAYS).astype(np.float32)
+    np.testing.assert_allclose(_run_retention(daily, 1), daily, rtol=1e-6)
+
+
+def test_retention_window_full_year_is_cumsum():
+    daily = RNG.uniform(0.0, 5.0, model.DAYS).astype(np.float32)
+    np.testing.assert_allclose(
+        _run_retention(daily, 365), np.cumsum(daily), rtol=1e-5
+    )
+
+
+def test_retention_steady_state_constant_input():
+    daily = np.ones(model.DAYS, np.float32)
+    stored = _run_retention(daily, 91)
+    # ramps for the first window, then steady at window * rate
+    np.testing.assert_allclose(stored[:91], np.arange(1, 92), rtol=1e-6)
+    np.testing.assert_allclose(stored[91:], 91.0, rtol=1e-6)
+
+
+def test_retention_doubling_window_doubles_steady_state():
+    """The Table IV headline: 6-month retention holds ~2x the data of
+    3-month at steady state."""
+    daily = np.ones(model.DAYS, np.float32)
+    s3 = _run_retention(daily, 91)
+    s6 = _run_retention(daily, 182)
+    assert abs(s6[250] / s3[250] - 2.0) < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(w=st.integers(1, 365), seed=st.integers(0, 2**31 - 1))
+def test_retention_hypothesis(w, seed):
+    rng = np.random.default_rng(seed)
+    daily = rng.uniform(0.0, 10.0, model.DAYS).astype(np.float32)
+    got = _run_retention(daily, w)
+    want = np.asarray(ref.retention_ref(daily, w), np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)

@@ -1,0 +1,109 @@
+//! BENCH — ablations: the paper's named future-work items implemented and
+//! measured (§VI.C autoscaling rules, §IX traffic burstiness), plus the
+//! batched-vs-sequential simulation design choice from DESIGN.md.
+//!
+//! 1. Twin-model ablation: fixed vs quickscaling vs reactive-autoscaling
+//!    wrappers around the same fitted blocking-write parameters, under the
+//!    High forecast — quantifying §VII.B's "adding some autoscaling to
+//!    this model might be a better choice".
+//! 2. Burstiness ablation: blocking-write under Nominal with increasing
+//!    short-term burst magnitude (native backend: the AOT artifact covers
+//!    the closed-form projection only — documented substitution).
+//! 3. Batch-vs-sequential: one 8-scenario twin_sim execution vs eight
+//!    1-scenario executions (why the artifact is batched).
+
+use plantd::bizsim::{simulate, simulate_batch, SloSpec};
+use plantd::runtime::{native::NativeBackend, Engine};
+use plantd::traffic::TrafficModel;
+use plantd::twin::{AutoscalePolicy, TwinParams};
+use plantd::util::bench;
+use plantd::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let native = NativeBackend;
+    let slo = SloSpec::default();
+    let twins = TwinParams::paper_table1();
+    let block = &twins[0];
+    let high = TrafficModel::high();
+
+    // ---- 1. twin-model ablation -----------------------------------------
+    println!("== ablation 1: scaling model wrapped around blocking-write (High forecast) ==");
+    let candidates = vec![
+        ("fixed (paper)", block.clone()),
+        ("quickscaling", block.as_quickscaling()),
+        (
+            "autoscaling (1..8, lagged)",
+            block.as_autoscaling(AutoscalePolicy::default()),
+        ),
+        (
+            "autoscaling (1..2)",
+            block.as_autoscaling(AutoscalePolicy {
+                max_replicas: 2,
+                ..Default::default()
+            }),
+        ),
+    ];
+    let mut t = Table::new(&["model", "cost ($/yr)", "% hours met", "SLO met", "backlog (days)"]);
+    for (label, twin) in &candidates {
+        let (_b, r) = bench::run(&format!("ablation/{label}"), 1, 5, || {
+            simulate(&native, twin, &high, &slo).unwrap()
+        });
+        t.row(vec![
+            label.to_string(),
+            fnum(r.cost_usd, 2),
+            fnum(r.pct_latency_met * 100.0, 2),
+            r.slo_met.to_string(),
+            fnum(r.backlog_latency_s / 86_400.0, 1),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    // ---- 2. burstiness ablation -------------------------------------------
+    println!("== ablation 2: short-term bursts (5% of hours) vs blocking-write, Nominal ==");
+    let mut bt = Table::new(&["burst magnitude", "% hours met", "SLO met", "mean load (rec/h)"]);
+    for mag in [1.0, 2.0, 3.0, 5.0] {
+        let model = if mag == 1.0 {
+            TrafficModel::nominal()
+        } else {
+            TrafficModel::nominal().with_bursts(0.05, mag, 42)
+        };
+        let r = simulate(&native, block, &model, &slo)?;
+        let mean = r.load.iter().sum::<f64>() / r.load.len() as f64;
+        bt.row(vec![
+            format!("x{mag}"),
+            fnum(r.pct_latency_met * 100.0, 2),
+            r.slo_met.to_string(),
+            fnum(mean, 0),
+        ]);
+    }
+    println!("{}", bt.render());
+
+    // ---- 3. batched vs sequential twin_sim ---------------------------------
+    println!("== ablation 3: batched (8-wide) vs sequential twin_sim executions ==");
+    let nominal = TrafficModel::nominal();
+    if let Ok(engine) = Engine::load(std::path::Path::new("artifacts")) {
+        let eight: Vec<TwinParams> = (0..8)
+            .map(|i| TwinParams {
+                name: format!("s{i}"),
+                max_rps: 0.5 + i as f64,
+                ..block.clone()
+            })
+            .collect();
+        let (batched, _) = bench::run("twin_sim/pjrt-batched-8", 1, 10, || {
+            simulate_batch(&engine, &eight, &nominal, &slo).unwrap()
+        });
+        let (sequential, _) = bench::run("twin_sim/pjrt-sequential-8x1", 1, 10, || {
+            eight
+                .iter()
+                .map(|tw| simulate(&engine, tw, &nominal, &slo).unwrap())
+                .collect::<Vec<_>>()
+        });
+        println!(
+            "    batching speedup: {:.1}x (the Pallas kernel rides 8 scenarios per sublane tile)",
+            sequential.mean_s / batched.mean_s
+        );
+    } else {
+        println!("    (PJRT artifacts unavailable; skipped)");
+    }
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! BENCH — FIG 5: correction factors and the Nominal/High projections.
+//!
+//! Times the §V.G traffic projection (8760 hourly loads from R, G, 12
+//! month factors, 168 hour-of-week factors) on the PJRT artifact (Pallas
+//! elementwise kernel) vs the native evaluator, cross-checks numerics,
+//! and writes the Fig. 5 CSV series.
+//!
+//! Paper anchors: month factors 0.84 (Jan) … 1.14 (Aug); hour-of-week
+//! 2.26 (Fri 20:00) … 0.04 (Wed 06:00); Nominal ≈ 5000 rec/h mean.
+
+use std::path::Path;
+
+use plantd::report;
+use plantd::runtime::{native::NativeBackend, Engine, SimBackend};
+use plantd::traffic::TrafficModel;
+use plantd::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("== FIG 5 bench: traffic projection ==");
+    let nominal = TrafficModel::nominal();
+    let high = TrafficModel::high();
+    let native = NativeBackend;
+
+    let (_t, nl_native) =
+        bench::run("traffic/native/nominal", 2, 20, || native.traffic(&nominal).unwrap());
+
+    let (nl, hl) = match Engine::load(Path::new("artifacts")) {
+        Ok(engine) => {
+            let (_t, nl) =
+                bench::run("traffic/pjrt/nominal", 2, 20, || engine.traffic(&nominal).unwrap());
+            let max_rel = nl
+                .iter()
+                .zip(&nl_native)
+                .map(|(a, b)| (a - b).abs() / b.max(1.0))
+                .fold(0.0f64, f64::max)
+                ;
+            assert!(max_rel < 1e-4, "pjrt/native divergence {max_rel}");
+            println!("    pjrt matches native (max rel err {max_rel:.2e})");
+            let hl = engine.traffic(&high)?;
+            (nl, hl)
+        }
+        Err(e) => {
+            println!("    (PJRT artifacts unavailable: {e:#}; native only)");
+            (nl_native.clone(), native.traffic(&high)?)
+        }
+    };
+
+    let out = Path::new("out");
+    std::fs::create_dir_all(out)?;
+    report::fig5_csvs(out, &nominal, &high, &nl, &hl)?;
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let max = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+    println!();
+    println!(
+        "Nominal: mean {:.0} rec/h (paper ~5000), peak {:.0} rec/h",
+        mean(&nl),
+        max(&nl)
+    );
+    println!(
+        "High:    mean {:.0} rec/h, end-of-year growth x{:.3} (paper x1.499)",
+        mean(&hl),
+        hl[8759] / nl[8759]
+    );
+    println!(
+        "factor anchors: Jan {:.2} / Aug {:.2}; Fri20 {:.2} / Wed06 {:.3}",
+        nominal.month_f[0],
+        nominal.month_f[7],
+        nominal.hw_f[4 * 24 + 20],
+        nominal.hw_f[2 * 24 + 6]
+    );
+    println!("CSV series: out/fig5_month_factors.csv, out/fig5_hourweek_factors.csv, out/fig5_projections.csv");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! BENCH — FIG 7: the daily build-up/drain dynamic (blocking-write,
+//! Nominal).
+//!
+//! Regenerates Fig. 7: a few consecutive August days where incoming load
+//! tracks throughput until the pipeline saturates at ≈ 7000 rec/h, the
+//! queue grows through the evening peak, and drains when load falls back
+//! below capacity overnight.
+
+use std::path::Path;
+
+use plantd::bizsim::{simulate, SloSpec};
+use plantd::report;
+use plantd::runtime::{native::NativeBackend, Engine, SimBackend};
+use plantd::traffic::TrafficModel;
+use plantd::twin::TwinParams;
+use plantd::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("== FIG 7 bench: blocking-write daily queue dynamic ==");
+    let block = TwinParams::paper_table1()[0].clone();
+    let backend: Box<dyn SimBackend> = match Engine::load(Path::new("artifacts")) {
+        Ok(e) => Box::new(e),
+        Err(e) => {
+            println!("    (PJRT artifacts unavailable: {e:#}; native)");
+            Box::new(NativeBackend)
+        }
+    };
+    let (_t, result) = bench::run(&format!("year_sim/{}", backend.name()), 1, 10, || {
+        simulate(backend.as_ref(), &block, &TrafficModel::nominal(), &SloSpec::default())
+            .unwrap()
+    });
+
+    let out = Path::new("out");
+    std::fs::create_dir_all(out)?;
+    let (start_day, n_days) = (215, 4); // an August Mon-Thu stretch
+    report::fig7_csv(out, &result, start_day, n_days)?;
+
+    // verify the Fig. 7 dynamic on the excerpt: throughput caps at
+    // capacity, the queue peaks in the evening and returns to ~zero
+    // before the next morning
+    let cap_hr = block.max_rps * 3600.0;
+    let h0 = start_day * 24;
+    println!();
+    for d in 0..n_days {
+        let day = &result.queue[h0 + d * 24..h0 + (d + 1) * 24];
+        let load = &result.load[h0 + d * 24..h0 + (d + 1) * 24];
+        let peak_q = day.iter().cloned().fold(f64::MIN, f64::max);
+        let peak_load = load.iter().cloned().fold(f64::MIN, f64::max);
+        let morning_q = day[8]; // 08:00
+        println!(
+            "day {}: peak load {:>7.0} rec/h (cap {:.0}), queue peak {:>7.0}, 08:00 queue {:>6.0}",
+            start_day + d,
+            peak_load,
+            cap_hr,
+            peak_q,
+            morning_q
+        );
+    }
+    let thr_max = result.throughput[h0..h0 + n_days * 24]
+        .iter()
+        .cloned()
+        .fold(f64::MIN, f64::max);
+    println!(
+        "max throughput in excerpt: {:.0} rec/h (paper: maxes out ~7000 rec/h)",
+        thr_max
+    );
+    println!("hourly series: out/fig7_excerpt.csv");
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! BENCH — §Perf: the wind tunnel's own hot paths.
+//!
+//! Microbenchmarks for the L3 components that sit on the measurement path
+//! (their overhead bounds the load the harness can honestly deliver,
+//! §II), plus the L2/L1 simulation execution:
+//!
+//!  - TSDB sample ingest (target ≥ 5 M samples/s)
+//!  - span collection (span → 3-4 TSDB samples)
+//!  - dataset synthesis (zip building, MB/s)
+//!  - zip inflation + binary decode (the unzipper/v2x real work)
+//!  - load-pattern schedule computation (2400-send ramp)
+//!  - Lindley queue scan, native Rust (records/s)
+//!  - full year-sim execute: PJRT artifact vs native evaluator
+//!  - JSON parse/serialize (manifest-sized document)
+
+use std::path::Path;
+
+use plantd::bizsim::{simulate_batch, SloSpec};
+use plantd::datagen::{decode_subsystem_binary, DataSet, DataSetSpec};
+use plantd::loadgen::LoadPattern;
+use plantd::runtime::{native::NativeBackend, Engine};
+use plantd::telemetry::{Collector, Span, Tsdb};
+use plantd::traffic::TrafficModel;
+use plantd::twin::TwinParams;
+use plantd::util::bench::{self, throughput};
+use plantd::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    println!("== §Perf hot paths ==");
+
+    // --- TSDB ingest -----------------------------------------------------
+    let db = Tsdb::new();
+    let h = db.series("bench_metric", &[("stage", "v2x")]);
+    const N: u64 = 1_000_000;
+    let (r, _) = bench::run("tsdb/ingest-1M-samples", 1, 5, || {
+        for i in 0..N {
+            h.push(i as f64, 1.0);
+        }
+    });
+    println!("    {:.2} M samples/s", throughput(N, &r) / 1e6);
+    db.clear();
+
+    // --- span collection ---------------------------------------------------
+    let collector = Collector::new(db.clone());
+    let span = Span {
+        trace_id: 1,
+        stage: "v2x_phase",
+        start_s: 1.0,
+        duration_s: 0.1,
+        records: 1,
+        bytes: 900,
+        ok: true,
+    };
+    let (r, _) = bench::run("telemetry/collect-100k-spans", 1, 5, || {
+        for _ in 0..100_000 {
+            collector.record(&span);
+        }
+    });
+    println!("    {:.2} M spans/s", throughput(100_000, &r) / 1e6);
+    db.clear();
+
+    // --- dataset synthesis -------------------------------------------------
+    let spec = DataSetSpec {
+        payloads: 64,
+        records_per_subsystem: 20,
+        bad_rate: 0.01,
+        seed: 7,
+    };
+    let (r, ds) = bench::run("datagen/64-vehicle-zips", 1, 5, || {
+        DataSet::generate(spec.clone())
+    });
+    println!(
+        "    {:.1} MB/s zip synthesis ({} total)",
+        ds.total_bytes() as f64 / (1024.0 * 1024.0) / r.mean_s,
+        plantd::util::units::human_bytes(ds.total_bytes())
+    );
+
+    // --- unzip + decode (the pipeline's real work) --------------------------
+    let zip0 = ds.payload(0).zip_bytes.clone();
+    let (r, _) = bench::run("pipeline/unzip+decode-1-transmission", 2, 200, || {
+        let members = plantd::datagen::package::unpack_vehicle_zip(&zip0).unwrap();
+        members
+            .iter()
+            .map(|(_, bin)| decode_subsystem_binary(bin).unwrap().1.len())
+            .sum::<usize>()
+    });
+    println!(
+        "    {:.0} transmissions/s real work",
+        1.0 / r.mean_s
+    );
+
+    // --- load schedule -------------------------------------------------------
+    let pattern = LoadPattern::ramp(120.0, 0.0, 40.0);
+    let (r, times) = bench::run("loadgen/schedule-2400-sends", 2, 50, || pattern.send_times());
+    println!(
+        "    {:.1} M send-times/s",
+        throughput(times.len() as u64, &r) / 1e6
+    );
+
+    // --- native Lindley scan -------------------------------------------------
+    let native = NativeBackend;
+    let twins = TwinParams::paper_table1();
+    let nominal = TrafficModel::nominal();
+    let slo = SloSpec::default();
+    let (r, _) = bench::run("year_sim/native-8-scenarios", 1, 10, || {
+        simulate_batch(&native, &twins, &nominal, &slo).unwrap()
+    });
+    println!(
+        "    {:.1} M scenario-hours/s",
+        throughput(8 * 8760, &r) / 1e6
+    );
+
+    // --- PJRT year sim ---------------------------------------------------------
+    match Engine::load(Path::new("artifacts")) {
+        Ok(engine) => {
+            let (r, _) = bench::run("year_sim/pjrt-8-scenarios", 1, 10, || {
+                simulate_batch(&engine, &twins, &nominal, &slo).unwrap()
+            });
+            println!(
+                "    {:.1} M scenario-hours/s (incl. literal marshalling)",
+                throughput(8 * 8760, &r) / 1e6
+            );
+        }
+        Err(e) => println!("    (PJRT artifacts unavailable: {e:#})"),
+    }
+
+    // --- JSON ---------------------------------------------------------------
+    let manifest = std::fs::read_to_string("artifacts/manifest.json")
+        .unwrap_or_else(|_| r#"{"hours":8760,"days":365,"scenarios":8}"#.into());
+    let (r, parsed) = bench::run("json/parse-manifest", 5, 1000, || {
+        Json::parse(&manifest).unwrap()
+    });
+    println!(
+        "    {:.0} MB/s parse",
+        manifest.len() as f64 / (1024.0 * 1024.0) / r.mean_s
+    );
+    let (_r, _) = bench::run("json/serialize-manifest", 5, 1000, || {
+        parsed.to_string_pretty()
+    });
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! BENCH — TABLE I: digital-twin fitting from wind-tunnel experiments.
+//!
+//! Runs a reduced saturating ramp against each variant, fits the Simple
+//! twin, and times both the experiment and the fit itself. Compares the
+//! fitted parameters against the paper's published Table I and against
+//! the variants' analytic capacities.
+//!
+//! Paper values: max rec/s 1.95 / 6.15 / 0.66; $/hr (¢) 0.82 / 7.03 /
+//! 0.27; avg latency 0.15 / 0.06 / 0.29 s.
+
+use plantd::datagen::{DataSet, DataSetSpec};
+use plantd::experiment::{Experiment, ExperimentHarness};
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::report;
+use plantd::twin::TwinParams;
+use plantd::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    // reduced ramp (600 zips) at a faster clock: fitting accuracy within a
+    // few % of the full paper run, at a fraction of the bench time
+    let harness = ExperimentHarness::new(240.0);
+    let exp = Experiment::new(
+        "fit-ramp",
+        LoadPattern::ramp(30.0, 0.0, 40.0),
+        DataSet::generate(DataSetSpec {
+            payloads: 64,
+            records_per_subsystem: 8,
+            bad_rate: 0.01,
+            seed: 0xD5,
+        }),
+    );
+    println!("== TABLE I bench: twin fitting ({} records/variant) ==", exp.pattern.total_records());
+    let mut twins = Vec::new();
+    for cfg in VariantConfig::paper_variants() {
+        let (_t, rec) = bench::run(&format!("experiment/{}", cfg.name), 0, 1, || {
+            harness.run(&cfg, &exp).expect("experiment failed")
+        });
+        // the fit itself is nanoseconds; time it honestly anyway
+        let (_t2, twin) =
+            bench::run(&format!("fit/{}", cfg.name), 2, 100, || TwinParams::fit(&rec));
+        println!(
+            "    fitted cap {:.2} rec/s (analytic {:.2}, paper {})",
+            twin.max_rps,
+            cfg.analytic_capacity_zps(),
+            match cfg.name {
+                "blocking-write" => "1.95",
+                "no-blocking-write" => "6.15",
+                _ => "0.66",
+            }
+        );
+        twins.push(twin);
+    }
+    println!();
+    println!("{}", report::table1_twins(&twins));
+    println!("cost per record: {}", twins
+        .iter()
+        .map(|t| format!("{} ${:.5}", t.name, t.cost_per_record()))
+        .collect::<Vec<_>>()
+        .join("  |  "));
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! BENCH — TABLE II: the six twin × forecast year simulations.
+//!
+//! This is the PJRT hot path: one `twin_sim` artifact execution simulates
+//! a whole year (8760 h) for a batch of 8 twin scenarios via the Pallas
+//! max-plus queue-scan kernel. Benches PJRT against the pure-Rust native
+//! evaluator, checks they agree, and prints the regenerated Table II.
+//!
+//! Paper shape: nominal — block barely meets SLO, non-block meets at ~8.6×
+//! cost, cpu-lim collapses (≈ 406-day backlog); high — block fails,
+//! non-block holds, cpu-lim ≈ 611-day backlog.
+
+use std::path::Path;
+
+use plantd::bizsim::{simulate_batch, SloSpec};
+use plantd::report;
+use plantd::runtime::{native::NativeBackend, Engine};
+use plantd::traffic::TrafficModel;
+use plantd::twin::TwinParams;
+use plantd::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let twins = TwinParams::paper_table1();
+    let slo = SloSpec::default();
+    let nominal = TrafficModel::nominal();
+    let high = TrafficModel::high();
+
+    println!("== TABLE II bench: year simulation, 3 twins x 2 forecasts ==");
+    let native = NativeBackend;
+    let (_t, native_results) = bench::run("twin_sim/native/both-forecasts", 1, 5, || {
+        let mut all = simulate_batch(&native, &twins, &nominal, &slo).unwrap();
+        all.extend(simulate_batch(&native, &twins, &high, &slo).unwrap());
+        all
+    });
+
+    let results = match Engine::load(Path::new("artifacts")) {
+        Ok(engine) => {
+            let (_t, results) = bench::run("twin_sim/pjrt/both-forecasts", 1, 5, || {
+                let mut all = simulate_batch(&engine, &twins, &nominal, &slo).unwrap();
+                all.extend(simulate_batch(&engine, &twins, &high, &slo).unwrap());
+                all
+            });
+            // cross-validate PJRT vs native
+            for (p, n) in results.iter().zip(&native_results) {
+                let rel = (p.cost_usd - n.cost_usd).abs() / n.cost_usd.max(1.0);
+                assert!(rel < 0.01, "pjrt/native cost divergence: {rel}");
+                assert_eq!(p.slo_met, n.slo_met, "SLO verdict diverged");
+            }
+            println!("    pjrt and native backends agree (cost <1%, same SLO verdicts)");
+            results
+        }
+        Err(e) => {
+            println!("    (PJRT artifacts unavailable: {e:#}; native only)");
+            native_results
+        }
+    };
+    println!();
+    println!("{}", report::table2_simulations(&results));
+    println!("paper Table II: SLO met = {{nom: T/T/F, high: F/T/F}}; cpu-lim backlog ~406/611 days");
+    let days = |r: &plantd::bizsim::SimulationResult| r.backlog_latency_s / 86_400.0;
+    println!(
+        "measured cpu-lim backlog: nominal {:.0} days, high {:.0} days",
+        days(&results[2]),
+        days(&results[5])
+    );
+    Ok(())
+}

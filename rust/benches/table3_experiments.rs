@@ -1,0 +1,65 @@
+//! BENCH — TABLE III: the wind-tunnel experiments themselves.
+//!
+//! Regenerates the paper's Table III by running the full 120 s / 0→40 rps
+//! ramp against all three pipeline variants on the scaled clock, and
+//! reports the wall time of each experiment (the wind tunnel's own
+//! "experiment turnaround" metric).
+//!
+//! Paper values: throughput 1.95 / 6.15 / 0.66 rec/s; exp length 1230 /
+//! 390 / 3630 s; cost 0.28 / 0.76 / 0.28 ¢; cost/hr 0.82 / 7.03 / 0.27 ¢.
+//!
+//! Set `PLANTD_BENCH_FAST=1` for a shortened ramp (CI-speed smoke run).
+
+use plantd::datagen::{DataSet, DataSetSpec};
+use plantd::experiment::{Experiment, ExperimentHarness};
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::report;
+use plantd::twin::TwinParams;
+use plantd::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("PLANTD_BENCH_FAST").is_ok();
+    let (duration, peak, scale) = if fast {
+        (30.0, 40.0, 240.0)
+    } else {
+        (120.0, 40.0, 60.0)
+    };
+    let harness = ExperimentHarness::new(scale);
+    let exp = Experiment::new(
+        "telematics-ramp",
+        LoadPattern::ramp(duration, 0.0, peak),
+        DataSet::generate(DataSetSpec {
+            payloads: 64,
+            records_per_subsystem: 8,
+            bad_rate: 0.01,
+            seed: 0xD5,
+        }),
+    );
+    println!(
+        "== TABLE III bench: {} records per variant, clock {scale}x ==",
+        exp.pattern.total_records()
+    );
+    let mut records = Vec::new();
+    for cfg in VariantConfig::paper_variants() {
+        let (_r, rec) = bench::run(&format!("experiment/{}", cfg.name), 0, 1, || {
+            harness.run(&cfg, &exp).expect("experiment failed")
+        });
+        println!(
+            "    virtual {:.0}s, analytic capacity {:.2} rec/s",
+            rec.duration_s,
+            cfg.analytic_capacity_zps()
+        );
+        records.push(rec);
+    }
+    println!();
+    println!("{}", report::table3_experiments(&records));
+    println!(
+        "{}",
+        report::table1_twins(
+            &records.iter().map(TwinParams::fit).collect::<Vec<_>>()
+        )
+    );
+    println!("paper Table III: thr 1.95/6.15/0.66 rec/s, len 1230/390/3630 s, cost/hr 0.82/7.03/0.27 c");
+    Ok(())
+}

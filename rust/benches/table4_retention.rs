@@ -1,0 +1,70 @@
+//! BENCH — TABLE IV: storage-policy what-if (3- vs 6-month retention).
+//!
+//! Times the retention artifact (rolling-window storage accumulation over
+//! 365 days, window as a runtime input) on PJRT vs the native evaluator,
+//! and prints the regenerated Table IV for the no-blocking twin under the
+//! Nominal forecast.
+//!
+//! Paper shape: 6-month retention ≈ 1.3× the annual total of 3-month;
+//! storage reaches steady state one retention window after ramp-in;
+//! cloud column ≈ $52.30 in 31-day months (= 744 h × $0.0703).
+
+use std::path::Path;
+
+use plantd::bizsim::{annual_totals, monthly_costs, CostSpec};
+use plantd::report;
+use plantd::runtime::{native::NativeBackend, Engine, SimBackend};
+use plantd::traffic::TrafficModel;
+use plantd::twin::TwinParams;
+use plantd::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    println!("== TABLE IV bench: retention what-if ==");
+    let native = NativeBackend;
+    let load = native.traffic(&TrafficModel::nominal())?;
+    let noblock = &TwinParams::paper_table1()[1];
+    let spec3 = CostSpec::default();
+    let spec6 = CostSpec {
+        retention_days: 182.0,
+        ..spec3
+    };
+
+    let (_t, native_pair) = bench::run("retention/native/3+6mo", 1, 10, || {
+        let a = monthly_costs(&native, &load, noblock.cost_per_hr, &spec3).unwrap();
+        let b = monthly_costs(&native, &load, noblock.cost_per_hr, &spec6).unwrap();
+        (a, b)
+    });
+
+    let (m3, m6) = match Engine::load(Path::new("artifacts")) {
+        Ok(engine) => {
+            let (_t, pair) = bench::run("retention/pjrt/3+6mo", 1, 10, || {
+                let a = monthly_costs(&engine, &load, noblock.cost_per_hr, &spec3).unwrap();
+                let b = monthly_costs(&engine, &load, noblock.cost_per_hr, &spec6).unwrap();
+                (a, b)
+            });
+            for (p, n) in pair.0.iter().zip(&native_pair.0) {
+                assert!(
+                    (p.storage - n.storage).abs() < 0.05,
+                    "pjrt/native storage divergence in month {}",
+                    p.month
+                );
+            }
+            println!("    pjrt and native retention series agree (<$0.05/month)");
+            pair
+        }
+        Err(e) => {
+            println!("    (PJRT artifacts unavailable: {e:#}; native only)");
+            native_pair
+        }
+    };
+    println!();
+    println!("{}", report::table4_retention(&m3, &m6, "3 mo", "6 mo"));
+    let (t3, t6) = (annual_totals(&m3), annual_totals(&m6));
+    println!(
+        "annual totals: ${:.2} vs ${:.2} (x{:.2}; paper: $1172.76 vs $1554.20, x1.33)",
+        t3.total(),
+        t6.total(),
+        t6.total() / t3.total()
+    );
+    Ok(())
+}

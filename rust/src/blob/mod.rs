@@ -1,0 +1,308 @@
+//! Blob store substrate (the S3 stand-in).
+//!
+//! An in-memory object store with a configurable latency model and byte/op
+//! accounting. The paper's blocking-write defect (§VII.A) is *synchronous
+//! put latency on a pipeline stage's critical path* — so puts here cost
+//! virtual time through the shared [`Clock`], and the no-blocking-write
+//! variant routes puts through [`AsyncWriter`], a background upload thread
+//! that takes them off the critical path (at the price of an extra
+//! always-on worker, which is what makes that variant expensive in the
+//! cost model — reproducing the paper's "faster but 3× the per-record
+//! cost" finding).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bus::Topic;
+use crate::util::clock::SharedClock;
+
+/// Latency model for blob operations (virtual seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct BlobLatency {
+    /// Fixed per-request overhead.
+    pub base_s: f64,
+    /// Per-megabyte transfer time.
+    pub per_mb_s: f64,
+}
+
+impl Default for BlobLatency {
+    fn default() -> Self {
+        // ~30 ms request overhead + ~25 MB/s effective single-stream PUT
+        BlobLatency {
+            base_s: 0.030,
+            per_mb_s: 0.040,
+        }
+    }
+}
+
+impl BlobLatency {
+    pub fn put_latency_s(&self, bytes: usize) -> f64 {
+        self.base_s + self.per_mb_s * bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    puts: AtomicU64,
+    gets: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+}
+
+/// The store. Clones share contents and counters.
+#[derive(Clone)]
+pub struct BlobStore {
+    clock: SharedClock,
+    latency: BlobLatency,
+    objects: Arc<Mutex<HashMap<String, Arc<Vec<u8>>>>>,
+    counters: Arc<Counters>,
+}
+
+impl BlobStore {
+    pub fn new(clock: SharedClock, latency: BlobLatency) -> Self {
+        BlobStore {
+            clock,
+            latency,
+            objects: Arc::new(Mutex::new(HashMap::new())),
+            counters: Arc::new(Counters::default()),
+        }
+    }
+
+    /// Synchronous put: blocks the caller for the modeled latency.
+    /// Returns the virtual seconds spent.
+    pub fn put(&self, key: &str, data: Vec<u8>) -> f64 {
+        let wait = self.put_nosleep(key, data);
+        self.clock.sleep_s(wait);
+        wait
+    }
+
+    /// Store the object and account for it, but let the *caller* charge
+    /// the returned latency (used to merge a stage's CPU service and its
+    /// blocking put into a single precise clock wait, §Perf).
+    pub fn put_nosleep(&self, key: &str, data: Vec<u8>) -> f64 {
+        let wait = self.latency.put_latency_s(data.len());
+        self.counters.puts.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .bytes_in
+            .fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.objects
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(data));
+        wait
+    }
+
+    /// Get (also pays the latency model, on the read path).
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let obj = self.objects.lock().unwrap().get(key).cloned();
+        if let Some(o) = &obj {
+            self.clock.sleep_s(self.latency.put_latency_s(o.len()));
+            self.counters.gets.fetch_add(1, Ordering::Relaxed);
+            self.counters
+                .bytes_out
+                .fetch_add(o.len() as u64, Ordering::Relaxed);
+        }
+        obj
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.objects.lock().unwrap().contains_key(key)
+    }
+
+    pub fn object_count(&self) -> usize {
+        self.objects.lock().unwrap().len()
+    }
+
+    /// (puts, gets, bytes_in, bytes_out)
+    pub fn stats(&self) -> (u64, u64, u64, u64) {
+        (
+            self.counters.puts.load(Ordering::Relaxed),
+            self.counters.gets.load(Ordering::Relaxed),
+            self.counters.bytes_in.load(Ordering::Relaxed),
+            self.counters.bytes_out.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn total_stored_bytes(&self) -> u64 {
+        self.objects
+            .lock()
+            .unwrap()
+            .values()
+            .map(|v| v.len() as u64)
+            .sum()
+    }
+}
+
+/// Background uploader: accepts `(key, data)` jobs on a bounded topic and
+/// performs the blocking puts on a dedicated thread, keeping them off the
+/// submitting stage's critical path.
+pub struct AsyncWriter {
+    jobs: Topic<(String, Vec<u8>)>,
+    workers: Vec<std::thread::JoinHandle<u64>>,
+}
+
+impl AsyncWriter {
+    /// `queue_cap` bounds in-flight uploads; a full queue applies
+    /// backpressure to the submitting stage (so "async" cannot silently
+    /// buffer unbounded data — mirroring a real uploader pool).
+    pub fn new(store: BlobStore, queue_cap: usize) -> Self {
+        Self::with_workers(store, queue_cap, 1)
+    }
+
+    /// Uploader pool with `n_workers` concurrent upload threads — the
+    /// no-blocking-write variant needs enough upload parallelism to keep
+    /// pace with its faster v2x stage (and pays for it, §VII.B).
+    pub fn with_workers(store: BlobStore, queue_cap: usize, n_workers: usize) -> Self {
+        assert!(n_workers >= 1);
+        let jobs: Topic<(String, Vec<u8>)> = Topic::new("blob-uploads", queue_cap);
+        let workers = (0..n_workers)
+            .map(|_| {
+                let consumer = jobs.clone();
+                let store = store.clone();
+                std::thread::spawn(move || {
+                    let mut uploaded = 0u64;
+                    while let Some((key, data)) = consumer.recv() {
+                        // coarse sleep: background uploads must not burn
+                        // CPU spinning next to the timed foreground stages
+                        let wait = store.put_nosleep(&key, data);
+                        store.clock.sleep_coarse_s(wait);
+                        uploaded += 1;
+                    }
+                    uploaded
+                })
+            })
+            .collect();
+        AsyncWriter { jobs, workers }
+    }
+
+    /// Submit an upload; returns immediately unless the queue is full.
+    pub fn submit(&self, key: String, data: Vec<u8>) {
+        // Ignore Closed: shutdown drops late uploads, like a real drain.
+        let _ = self.jobs.send((key, data));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.jobs.depth()
+    }
+
+    /// Close the queue, wait for all workers, return #objects uploaded.
+    pub fn shutdown(mut self) -> u64 {
+        self.jobs.close();
+        self.workers.drain(..).map(|w| w.join().unwrap()).sum()
+    }
+}
+
+impl Drop for AsyncWriter {
+    fn drop(&mut self) {
+        self.jobs.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::{Clock, ManualClock, ScaledClock};
+
+    fn fast_store() -> BlobStore {
+        BlobStore::new(
+            ScaledClock::new(1e6), // effectively free sleeps
+            BlobLatency::default(),
+        )
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s = fast_store();
+        s.put("a/b", vec![1, 2, 3]);
+        assert_eq!(*s.get("a/b").unwrap(), vec![1, 2, 3]);
+        assert!(s.contains("a/b"));
+        assert!(!s.contains("a/c"));
+    }
+
+    #[test]
+    fn put_costs_modeled_latency_on_manual_clock() {
+        let clock = ManualClock::new();
+        let s = BlobStore::new(
+            clock.clone(),
+            BlobLatency {
+                base_s: 0.03,
+                per_mb_s: 0.04,
+            },
+        );
+        let spent = s.put("k", vec![0u8; 1024 * 1024]); // 1 MB
+        assert!((spent - 0.07).abs() < 1e-9);
+        assert!((clock.now_s() - 0.07).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counters_track_ops_and_bytes() {
+        let s = fast_store();
+        s.put("a", vec![0u8; 100]);
+        s.put("b", vec![0u8; 50]);
+        s.get("a");
+        let (puts, gets, b_in, b_out) = s.stats();
+        assert_eq!((puts, gets), (2, 1));
+        assert_eq!(b_in, 150);
+        assert_eq!(b_out, 100);
+        assert_eq!(s.total_stored_bytes(), 150);
+        assert_eq!(s.object_count(), 2);
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let s = fast_store();
+        s.put("k", vec![1]);
+        s.put("k", vec![2, 3]);
+        assert_eq!(*s.get("k").unwrap(), vec![2, 3]);
+        assert_eq!(s.object_count(), 1);
+    }
+
+    #[test]
+    fn async_writer_uploads_off_thread() {
+        let s = fast_store();
+        let w = AsyncWriter::new(s.clone(), 16);
+        for i in 0..20 {
+            w.submit(format!("k{i}"), vec![0u8; 10]);
+        }
+        let uploaded = w.shutdown();
+        assert_eq!(uploaded, 20);
+        assert_eq!(s.object_count(), 20);
+    }
+
+    #[test]
+    fn async_writer_pool_uploads_concurrently() {
+        let clock = ScaledClock::new(100.0);
+        let s = BlobStore::new(
+            clock,
+            BlobLatency {
+                base_s: 0.05,
+                per_mb_s: 0.0,
+            },
+        );
+        let w = AsyncWriter::with_workers(s.clone(), 64, 4);
+        let t0 = std::time::Instant::now();
+        for i in 0..40 {
+            w.submit(format!("k{i}"), vec![0u8; 8]);
+        }
+        assert_eq!(w.shutdown(), 40);
+        // 40 puts × 0.05 s / 100× scale = 20 ms serial; 4 workers ≈ 5 ms
+        // (coarse background sleeps overshoot a little; allow headroom)
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(wall < 0.016, "pool too slow: {wall}s");
+        assert_eq!(s.object_count(), 40);
+    }
+
+    #[test]
+    fn async_writer_drop_joins_worker() {
+        let s = fast_store();
+        {
+            let w = AsyncWriter::new(s.clone(), 4);
+            w.submit("x".into(), vec![1]);
+        } // drop
+        assert!(s.object_count() <= 1); // no panic, worker joined
+    }
+}

@@ -1,0 +1,295 @@
+//! Message bus substrate (the Kafka stand-in).
+//!
+//! A [`Topic`] is a bounded, ordered, multi-producer/multi-consumer queue
+//! with the observability the wind tunnel needs: depth (queue length) and
+//! cumulative enqueue/dequeue counters, which the experiment controller
+//! uses for consumer-lag metrics and drain detection. `close()` gives
+//! downstream stages a clean end-of-stream.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+    enqueued: u64,
+    dequeued: u64,
+}
+
+/// Bounded MPMC topic. Cheap to clone; all clones share the queue.
+pub struct Topic<T> {
+    name: &'static str,
+    capacity: usize,
+    inner: Arc<(Mutex<Inner<T>>, Condvar, Condvar)>, // (state, not_empty, not_full)
+}
+
+impl<T> Clone for Topic<T> {
+    fn clone(&self) -> Self {
+        Topic {
+            name: self.name,
+            capacity: self.capacity,
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+/// Error returned when sending to a closed topic.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("topic '{0}' is closed")]
+pub struct Closed(pub &'static str);
+
+impl<T> Topic<T> {
+    pub fn new(name: &'static str, capacity: usize) -> Self {
+        assert!(capacity > 0, "topic capacity must be positive");
+        Topic {
+            name,
+            capacity,
+            inner: Arc::new((
+                Mutex::new(Inner {
+                    queue: VecDeque::new(),
+                    closed: false,
+                    enqueued: 0,
+                    dequeued: 0,
+                }),
+                Condvar::new(),
+                Condvar::new(),
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Blocking send; waits while the topic is full (backpressure).
+    /// Fails if the topic is (or becomes) closed.
+    pub fn send(&self, item: T) -> Result<(), Closed> {
+        let (lock, not_empty, not_full) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        while st.queue.len() >= self.capacity && !st.closed {
+            st = not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return Err(Closed(self.name));
+        }
+        st.queue.push_back(item);
+        st.enqueued += 1;
+        not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive. `None` means the topic is closed *and* drained.
+    ///
+    /// Fast path: spin-yield briefly before parking on the condvar. Under
+    /// a scaled clock the pipeline's modeled service times are tens of
+    /// microseconds of wall time, so condvar wake latency (~50 µs plus
+    /// scheduling) would otherwise dominate every stage hop and corrupt
+    /// measured throughput (see `util::clock`).
+    pub fn recv(&self) -> Option<T> {
+        let (lock, not_empty, not_full) = &*self.inner;
+        let spin_deadline =
+            std::time::Instant::now() + std::time::Duration::from_micros(500);
+        loop {
+            {
+                let mut st = lock.lock().unwrap();
+                if let Some(item) = st.queue.pop_front() {
+                    st.dequeued += 1;
+                    not_full.notify_one();
+                    return Some(item);
+                }
+                if st.closed {
+                    return None;
+                }
+                if std::time::Instant::now() >= spin_deadline {
+                    // slow path: park until something changes
+                    let (st2, _timeout) = not_empty
+                        .wait_timeout(st, std::time::Duration::from_millis(5))
+                        .unwrap();
+                    drop(st2);
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let (lock, _, not_full) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        let item = st.queue.pop_front();
+        if item.is_some() {
+            st.dequeued += 1;
+            not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the topic: senders fail, receivers drain then get `None`.
+    pub fn close(&self) {
+        let (lock, not_empty, not_full) = &*self.inner;
+        let mut st = lock.lock().unwrap();
+        st.closed = true;
+        not_empty.notify_all();
+        not_full.notify_all();
+    }
+
+    /// Current queue depth (consumer lag in records).
+    pub fn depth(&self) -> usize {
+        self.inner.0.lock().unwrap().queue.len()
+    }
+
+    /// Cumulative (enqueued, dequeued) counters.
+    pub fn counters(&self) -> (u64, u64) {
+        let st = self.inner.0.lock().unwrap();
+        (st.enqueued, st.dequeued)
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.0.lock().unwrap().closed
+    }
+
+    /// True when closed and fully drained.
+    pub fn is_drained(&self) -> bool {
+        let st = self.inner.0.lock().unwrap();
+        st.closed && st.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let t = Topic::new("t", 10);
+        t.send(1).unwrap();
+        t.send(2).unwrap();
+        t.send(3).unwrap();
+        assert_eq!(t.recv(), Some(1));
+        assert_eq!(t.recv(), Some(2));
+        assert_eq!(t.recv(), Some(3));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let t = Topic::new("t", 10);
+        t.send("a").unwrap();
+        t.close();
+        assert_eq!(t.recv(), Some("a"));
+        assert_eq!(t.recv(), None);
+        assert!(t.is_drained());
+    }
+
+    #[test]
+    fn send_after_close_fails() {
+        let t = Topic::new("t", 2);
+        t.close();
+        assert_eq!(t.send(1), Err(Closed("t")));
+    }
+
+    #[test]
+    fn counters_and_depth() {
+        let t = Topic::new("t", 10);
+        t.send(1).unwrap();
+        t.send(2).unwrap();
+        assert_eq!(t.depth(), 2);
+        t.recv();
+        assert_eq!(t.depth(), 1);
+        assert_eq!(t.counters(), (2, 1));
+    }
+
+    #[test]
+    fn backpressure_blocks_until_consumed() {
+        let t = Topic::new("t", 1);
+        t.send(1).unwrap();
+        let t2 = t.clone();
+        let producer = thread::spawn(move || {
+            t2.send(2).unwrap(); // blocks until a recv frees space
+            true
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert!(!producer.is_finished(), "send should still be blocked");
+        assert_eq!(t.recv(), Some(1));
+        assert!(producer.join().unwrap());
+        assert_eq!(t.recv(), Some(2));
+    }
+
+    #[test]
+    fn recv_blocks_until_send() {
+        let t: Topic<u32> = Topic::new("t", 4);
+        let t2 = t.clone();
+        let consumer = thread::spawn(move || t2.recv());
+        thread::sleep(Duration::from_millis(10));
+        t.send(42).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn close_wakes_blocked_receiver() {
+        let t: Topic<u32> = Topic::new("t", 4);
+        let t2 = t.clone();
+        let consumer = thread::spawn(move || t2.recv());
+        thread::sleep(Duration::from_millis(10));
+        t.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_sender() {
+        let t = Topic::new("t", 1);
+        t.send(1).unwrap();
+        let t2 = t.clone();
+        let producer = thread::spawn(move || t2.send(2));
+        thread::sleep(Duration::from_millis(10));
+        t.close();
+        assert_eq!(producer.join().unwrap(), Err(Closed("t")));
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_duplication() {
+        let t = Topic::new("t", 8);
+        let n_producers = 4;
+        let per_producer = 500u64;
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let t2 = t.clone();
+            producers.push(thread::spawn(move || {
+                for i in 0..per_producer {
+                    t2.send(p * per_producer + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let t2 = t.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = t2.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        t.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let expect: Vec<u64> = (0..n_producers * per_producer).collect();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let t: Topic<u32> = Topic::new("t", 2);
+        assert_eq!(t.try_recv(), None);
+        t.send(5).unwrap();
+        assert_eq!(t.try_recv(), Some(5));
+    }
+}

@@ -1,0 +1,275 @@
+//! Simulated cloud substrate: nodes, containers, namespaces, and usage
+//! metering.
+//!
+//! Stands in for the paper's AWS/EKS testbed. A [`Cloud`] hosts [`Node`]s
+//! (priced per hour); [`Container`]s are placed on nodes, belong to a
+//! namespace (the paper's mechanism for isolating the pipeline-under-test's
+//! cost), and meter their own resource consumption (CPU-core-seconds and
+//! memory) into hourly buckets — the granularity cloud billing actually
+//! provides (§V.E), so the cost layer has to do the same proration a real
+//! harness does.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Resource request/usage pair: vCPU cores and memory GB.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub vcpus: f64,
+    pub mem_gb: f64,
+}
+
+impl Resources {
+    pub fn new(vcpus: f64, mem_gb: f64) -> Self {
+        Resources { vcpus, mem_gb }
+    }
+}
+
+/// A virtual machine with an hourly price.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: String,
+    pub capacity: Resources,
+    pub price_per_hr: f64,
+}
+
+/// Hour-bucketed usage for one container.
+#[derive(Debug, Clone, Default)]
+pub struct HourlyUsage {
+    /// hour index (floor(t/3600)) → CPU core-seconds consumed in that hour.
+    pub cpu_core_s: BTreeMap<u64, f64>,
+    /// hour index → GB·seconds of memory residency.
+    pub mem_gb_s: BTreeMap<u64, f64>,
+}
+
+impl HourlyUsage {
+    pub fn total_cpu_core_s(&self) -> f64 {
+        self.cpu_core_s.values().sum()
+    }
+
+    pub fn total_mem_gb_s(&self) -> f64 {
+        self.mem_gb_s.values().sum()
+    }
+}
+
+#[derive(Debug)]
+struct ContainerState {
+    usage: HourlyUsage,
+}
+
+/// A deployed container with a usage meter.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: String,
+    pub namespace: String,
+    pub node_id: String,
+    pub requests: Resources,
+    state: Arc<Mutex<ContainerState>>,
+}
+
+impl Container {
+    /// Record `cpu_core_s` of CPU burn and `mem_gb` held for `duration_s`,
+    /// starting at virtual time `t`. Usage spanning hour boundaries is
+    /// split proportionally into the right buckets.
+    pub fn record_usage(&self, t: f64, duration_s: f64, cpu_core_s: f64, mem_gb: f64) {
+        if duration_s <= 0.0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let mut remaining = duration_s;
+        let mut cursor = t.max(0.0);
+        while remaining > 1e-12 {
+            let hour = (cursor / 3600.0).floor() as u64;
+            let hour_end = (hour + 1) as f64 * 3600.0;
+            let span = remaining.min(hour_end - cursor);
+            let frac = span / duration_s;
+            *st.usage.cpu_core_s.entry(hour).or_insert(0.0) += cpu_core_s * frac;
+            *st.usage.mem_gb_s.entry(hour).or_insert(0.0) += mem_gb * span;
+            cursor += span;
+            remaining -= span;
+        }
+    }
+
+    pub fn usage(&self) -> HourlyUsage {
+        self.state.lock().unwrap().usage.clone()
+    }
+}
+
+/// The simulated cloud: node inventory + container placements.
+#[derive(Debug, Clone, Default)]
+pub struct Cloud {
+    inner: Arc<Mutex<CloudState>>,
+}
+
+#[derive(Debug, Default)]
+struct CloudState {
+    nodes: BTreeMap<String, Node>,
+    containers: BTreeMap<String, Container>,
+}
+
+impl Cloud {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&self, id: &str, capacity: Resources, price_per_hr: f64) -> Node {
+        let node = Node {
+            id: id.to_string(),
+            capacity,
+            price_per_hr,
+        };
+        self.inner
+            .lock()
+            .unwrap()
+            .nodes
+            .insert(id.to_string(), node.clone());
+        node
+    }
+
+    /// Place a container on a node. Panics if the node does not exist or
+    /// its remaining capacity is exceeded (a scheduler would reject it).
+    pub fn deploy(
+        &self,
+        id: &str,
+        namespace: &str,
+        node_id: &str,
+        requests: Resources,
+    ) -> Container {
+        let mut st = self.inner.lock().unwrap();
+        let node = st
+            .nodes
+            .get(node_id)
+            .unwrap_or_else(|| panic!("unknown node '{node_id}'"))
+            .clone();
+        let used: Resources = st
+            .containers
+            .values()
+            .filter(|c| c.node_id == node_id)
+            .fold(Resources::default(), |acc, c| Resources {
+                vcpus: acc.vcpus + c.requests.vcpus,
+                mem_gb: acc.mem_gb + c.requests.mem_gb,
+            });
+        assert!(
+            used.vcpus + requests.vcpus <= node.capacity.vcpus + 1e-9
+                && used.mem_gb + requests.mem_gb <= node.capacity.mem_gb + 1e-9,
+            "node '{node_id}' capacity exceeded"
+        );
+        let c = Container {
+            id: id.to_string(),
+            namespace: namespace.to_string(),
+            node_id: node_id.to_string(),
+            requests,
+            state: Arc::new(Mutex::new(ContainerState {
+                usage: HourlyUsage::default(),
+            })),
+        };
+        st.containers.insert(id.to_string(), c.clone());
+        c
+    }
+
+    /// Remove a container (end of experiment).
+    pub fn remove(&self, container_id: &str) {
+        self.inner.lock().unwrap().containers.remove(container_id);
+    }
+
+    pub fn nodes(&self) -> Vec<Node> {
+        self.inner.lock().unwrap().nodes.values().cloned().collect()
+    }
+
+    pub fn containers(&self) -> Vec<Container> {
+        self.inner
+            .lock()
+            .unwrap()
+            .containers
+            .values()
+            .cloned()
+            .collect()
+    }
+
+    pub fn containers_in(&self, namespace: &str) -> Vec<Container> {
+        self.containers()
+            .into_iter()
+            .filter(|c| c.namespace == namespace)
+            .collect()
+    }
+
+    pub fn node(&self, id: &str) -> Option<Node> {
+        self.inner.lock().unwrap().nodes.get(id).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud_with_node() -> Cloud {
+        let c = Cloud::new();
+        c.add_node("n1", Resources::new(8.0, 32.0), 0.40);
+        c
+    }
+
+    #[test]
+    fn deploy_and_list() {
+        let cloud = cloud_with_node();
+        cloud.deploy("a", "pipeline", "n1", Resources::new(1.0, 2.0));
+        cloud.deploy("b", "other", "n1", Resources::new(1.0, 2.0));
+        assert_eq!(cloud.containers().len(), 2);
+        assert_eq!(cloud.containers_in("pipeline").len(), 1);
+        assert_eq!(cloud.containers_in("pipeline")[0].id, "a");
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity exceeded")]
+    fn over_capacity_rejected() {
+        let cloud = cloud_with_node();
+        cloud.deploy("a", "ns", "n1", Resources::new(6.0, 8.0));
+        cloud.deploy("b", "ns", "n1", Resources::new(4.0, 8.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown node")]
+    fn unknown_node_rejected() {
+        Cloud::new().deploy("a", "ns", "ghost", Resources::new(1.0, 1.0));
+    }
+
+    #[test]
+    fn usage_accumulates() {
+        let cloud = cloud_with_node();
+        let c = cloud.deploy("a", "ns", "n1", Resources::new(2.0, 4.0));
+        c.record_usage(0.0, 10.0, 5.0, 4.0);
+        c.record_usage(100.0, 10.0, 3.0, 4.0);
+        let u = c.usage();
+        assert!((u.total_cpu_core_s() - 8.0).abs() < 1e-9);
+        assert!((u.total_mem_gb_s() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn usage_splits_across_hour_boundary() {
+        let cloud = cloud_with_node();
+        let c = cloud.deploy("a", "ns", "n1", Resources::new(1.0, 1.0));
+        // 200 s of work starting 100 s before the hour boundary
+        c.record_usage(3500.0, 200.0, 200.0, 1.0);
+        let u = c.usage();
+        assert!((u.cpu_core_s[&0] - 100.0).abs() < 1e-6);
+        assert!((u.cpu_core_s[&1] - 100.0).abs() < 1e-6);
+        assert!((u.mem_gb_s[&0] - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_duration_ignored() {
+        let cloud = cloud_with_node();
+        let c = cloud.deploy("a", "ns", "n1", Resources::new(1.0, 1.0));
+        c.record_usage(0.0, 0.0, 1.0, 1.0);
+        assert_eq!(c.usage().total_cpu_core_s(), 0.0);
+    }
+
+    #[test]
+    fn remove_container() {
+        let cloud = cloud_with_node();
+        cloud.deploy("a", "ns", "n1", Resources::new(1.0, 1.0));
+        cloud.remove("a");
+        assert!(cloud.containers().is_empty());
+        // capacity is freed
+        cloud.deploy("big", "ns", "n1", Resources::new(8.0, 32.0));
+    }
+}

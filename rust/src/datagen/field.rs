@@ -1,0 +1,344 @@
+//! Field generators: the domain-specific typed value synthesizers a schema
+//! is built from (GoFakeIt's role in the paper's data generator).
+
+use crate::tablestore::Value;
+use crate::util::rng::Rng;
+
+/// What a field generates.
+#[derive(Debug, Clone)]
+pub enum FieldKind {
+    /// Uniform integer in `[lo, hi]`.
+    IntRange { lo: i64, hi: i64 },
+    /// Uniform float in `[lo, hi)`.
+    FloatRange { lo: f64, hi: f64 },
+    /// Normal(mean, std), clamped to `[lo, hi]`.
+    NormalClamped {
+        mean: f64,
+        std: f64,
+        lo: f64,
+        hi: f64,
+    },
+    /// One of a fixed vocabulary.
+    Enum(Vec<String>),
+    /// Person-style name "First Last".
+    Name,
+    /// Email address.
+    Email,
+    /// 17-character vehicle identification number.
+    Vin,
+    /// Latitude/longitude pair, biased to land; encoded "lat,lon".
+    LatLon,
+    /// Unix-ish timestamp (seconds) in `[start, start+span_s]`.
+    Timestamp { start: u64, span_s: u64 },
+    /// 128-bit random identifier as hex.
+    Uuid,
+    /// Boolean with `p(true)`.
+    Bool { p_true: f64 },
+    /// IPv4 address.
+    Ipv4,
+    /// Random word from a small lexicon.
+    Word,
+}
+
+/// A named field with a generator and an optional bad-data injection rate
+/// (probability a generated value is Null/corrupt — exercising the
+/// pipeline's scrubbing path).
+#[derive(Debug, Clone)]
+pub struct FieldSpec {
+    pub name: String,
+    pub kind: FieldKind,
+    pub bad_rate: f64,
+}
+
+impl FieldSpec {
+    pub fn new(name: &str, kind: FieldKind) -> Self {
+        FieldSpec {
+            name: name.to_string(),
+            kind,
+            bad_rate: 0.0,
+        }
+    }
+
+    /// Inject Null with this probability (default 0).
+    pub fn with_bad_rate(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p));
+        self.bad_rate = p;
+        self
+    }
+
+    pub fn generate(&self, rng: &mut Rng) -> Value {
+        if self.bad_rate > 0.0 && rng.chance(self.bad_rate) {
+            return Value::Null;
+        }
+        self.kind.generate(rng)
+    }
+}
+
+const FIRST_NAMES: &[&str] = &[
+    "Akira", "Beth", "Carlos", "Dana", "Emeka", "Fatima", "Goro", "Hana",
+    "Ivan", "Jin", "Keiko", "Liam", "Mei", "Noor", "Omar", "Priya",
+];
+const LAST_NAMES: &[&str] = &[
+    "Abe", "Brown", "Chen", "Diaz", "Endo", "Fischer", "Garcia", "Honda",
+    "Ito", "Jones", "Kato", "Lopez", "Mori", "Nguyen", "Okada", "Patel",
+];
+const WORDS: &[&str] = &[
+    "route", "sensor", "merge", "brake", "signal", "lane", "torque",
+    "charge", "assist", "radar", "camera", "telemetry", "battery", "drive",
+];
+const EMAIL_DOMAINS: &[&str] = &["example.com", "fleet.test", "cars.dev"];
+
+/// Crude land bounding boxes (lat_lo, lat_hi, lon_lo, lon_hi, weight):
+/// N.America, S.America, Europe, Africa, Asia, Australia. Coarse, but it
+/// puts ~90+% of points on plausible land instead of ~29%.
+const LAND_BOXES: &[(f64, f64, f64, f64, f64)] = &[
+    (28.0, 50.0, -122.0, -72.0, 0.25),
+    (-35.0, 0.0, -70.0, -45.0, 0.08),
+    (37.0, 58.0, -8.0, 30.0, 0.22),
+    (-30.0, 25.0, -10.0, 40.0, 0.10),
+    (10.0, 50.0, 70.0, 125.0, 0.30),
+    (-35.0, -15.0, 118.0, 148.0, 0.05),
+];
+
+// VIN alphabet excludes I, O, Q per ISO 3779.
+const VIN_CHARS: &[u8] = b"ABCDEFGHJKLMNPRSTUVWXYZ0123456789";
+
+impl FieldKind {
+    pub fn generate(&self, rng: &mut Rng) -> Value {
+        match self {
+            FieldKind::IntRange { lo, hi } => Value::Int(rng.int_range(*lo, *hi)),
+            FieldKind::FloatRange { lo, hi } => Value::Float(rng.uniform(*lo, *hi)),
+            FieldKind::NormalClamped { mean, std, lo, hi } => {
+                Value::Float(rng.normal(*mean, *std).clamp(*lo, *hi))
+            }
+            FieldKind::Enum(options) => Value::Text(rng.choice(options).clone()),
+            FieldKind::Name => Value::Text(format!(
+                "{} {}",
+                rng.choice(FIRST_NAMES),
+                rng.choice(LAST_NAMES)
+            )),
+            FieldKind::Email => {
+                let user = format!(
+                    "{}.{}",
+                    rng.choice(FIRST_NAMES).to_lowercase(),
+                    rng.choice(LAST_NAMES).to_lowercase()
+                );
+                Value::Text(format!("{user}@{}", rng.choice(EMAIL_DOMAINS)))
+            }
+            FieldKind::Vin => {
+                let vin: String = (0..17)
+                    .map(|_| *rng.choice(VIN_CHARS) as char)
+                    .collect();
+                Value::Text(vin)
+            }
+            FieldKind::LatLon => {
+                let (lat, lon) = gen_latlon(rng);
+                Value::Text(format!("{lat:.6},{lon:.6}"))
+            }
+            FieldKind::Timestamp { start, span_s } => {
+                Value::Int(rng.int_range(*start as i64, (*start + *span_s) as i64))
+            }
+            FieldKind::Uuid => Value::Text(format!(
+                "{:016x}{:016x}",
+                rng.next_u64(),
+                rng.next_u64()
+            )),
+            FieldKind::Bool { p_true } => Value::Int(rng.chance(*p_true) as i64),
+            FieldKind::Ipv4 => Value::Text(format!(
+                "{}.{}.{}.{}",
+                rng.int_range(1, 254),
+                rng.int_range(0, 255),
+                rng.int_range(0, 255),
+                rng.int_range(1, 254)
+            )),
+            FieldKind::Word => Value::Text(rng.choice(WORDS).to_string()),
+        }
+    }
+}
+
+/// Land-biased latitude/longitude.
+pub fn gen_latlon(rng: &mut Rng) -> (f64, f64) {
+    let roll = rng.f64();
+    let mut acc = 0.0;
+    for (lat_lo, lat_hi, lon_lo, lon_hi, w) in LAND_BOXES {
+        acc += w;
+        if roll < acc {
+            return (rng.uniform(*lat_lo, *lat_hi), rng.uniform(*lon_lo, *lon_hi));
+        }
+    }
+    // residual mass: anywhere (ships, islands, bad GPS)
+    (rng.uniform(-90.0, 90.0), rng.uniform(-180.0, 180.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(1234)
+    }
+
+    #[test]
+    fn int_range_bounds() {
+        let mut r = rng();
+        let k = FieldKind::IntRange { lo: -5, hi: 5 };
+        for _ in 0..1000 {
+            match k.generate(&mut r) {
+                Value::Int(v) => assert!((-5..=5).contains(&v)),
+                v => panic!("wrong type {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn float_range_bounds() {
+        let mut r = rng();
+        let k = FieldKind::FloatRange { lo: 0.0, hi: 2.5 };
+        for _ in 0..1000 {
+            match k.generate(&mut r) {
+                Value::Float(v) => assert!((0.0..2.5).contains(&v)),
+                v => panic!("wrong type {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn normal_clamped_respects_bounds() {
+        let mut r = rng();
+        let k = FieldKind::NormalClamped {
+            mean: 100.0,
+            std: 50.0,
+            lo: 0.0,
+            hi: 120.0,
+        };
+        for _ in 0..1000 {
+            match k.generate(&mut r) {
+                Value::Float(v) => assert!((0.0..=120.0).contains(&v)),
+                v => panic!("wrong type {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn vin_shape() {
+        let mut r = rng();
+        for _ in 0..50 {
+            match FieldKind::Vin.generate(&mut r) {
+                Value::Text(v) => {
+                    assert_eq!(v.len(), 17);
+                    assert!(!v.contains('I') && !v.contains('O') && !v.contains('Q'));
+                }
+                v => panic!("wrong type {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn latlon_mostly_on_land() {
+        let mut r = rng();
+        let mut on_land = 0;
+        let n = 2000;
+        for _ in 0..n {
+            let (lat, lon) = gen_latlon(&mut r);
+            assert!((-90.0..=90.0).contains(&lat));
+            assert!((-180.0..=180.0).contains(&lon));
+            if LAND_BOXES
+                .iter()
+                .any(|(a, b, c, d, _)| (*a..*b).contains(&lat) && (*c..*d).contains(&lon))
+            {
+                on_land += 1;
+            }
+        }
+        assert!(
+            on_land as f64 / n as f64 > 0.85,
+            "only {on_land}/{n} on land"
+        );
+    }
+
+    #[test]
+    fn email_contains_at() {
+        let mut r = rng();
+        match FieldKind::Email.generate(&mut r) {
+            Value::Text(e) => assert!(e.contains('@') && e.contains('.')),
+            v => panic!("wrong type {v:?}"),
+        }
+    }
+
+    #[test]
+    fn enum_only_vocabulary() {
+        let mut r = rng();
+        let vocab = vec!["P".to_string(), "R".to_string(), "D".to_string()];
+        let k = FieldKind::Enum(vocab.clone());
+        for _ in 0..100 {
+            match k.generate(&mut r) {
+                Value::Text(t) => assert!(vocab.contains(&t)),
+                v => panic!("wrong type {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn timestamp_within_span() {
+        let mut r = rng();
+        let k = FieldKind::Timestamp {
+            start: 1_700_000_000,
+            span_s: 3600,
+        };
+        for _ in 0..200 {
+            match k.generate(&mut r) {
+                Value::Int(t) => {
+                    assert!((1_700_000_000..=1_700_003_600).contains(&t))
+                }
+                v => panic!("wrong type {v:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_rate_injects_nulls() {
+        let mut r = rng();
+        let f = FieldSpec::new("x", FieldKind::Word).with_bad_rate(0.5);
+        let nulls = (0..1000)
+            .filter(|_| matches!(f.generate(&mut r), Value::Null))
+            .count();
+        assert!((350..650).contains(&nulls), "nulls={nulls}");
+    }
+
+    #[test]
+    fn zero_bad_rate_never_null() {
+        let mut r = rng();
+        let f = FieldSpec::new("x", FieldKind::Word);
+        assert!((0..500).all(|_| !matches!(f.generate(&mut r), Value::Null)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let f = FieldSpec::new("x", FieldKind::Uuid);
+        let a = f.generate(&mut Rng::new(9));
+        let b = f.generate(&mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bool_probability() {
+        let mut r = rng();
+        let k = FieldKind::Bool { p_true: 0.8 };
+        let trues = (0..2000)
+            .filter(|_| matches!(k.generate(&mut r), Value::Int(1)))
+            .count();
+        assert!((1450..1950).contains(&trues), "trues={trues}");
+    }
+
+    #[test]
+    fn ipv4_shape() {
+        let mut r = rng();
+        match FieldKind::Ipv4.generate(&mut r) {
+            Value::Text(ip) => {
+                let parts: Vec<&str> = ip.split('.').collect();
+                assert_eq!(parts.len(), 4);
+                assert!(parts.iter().all(|p| p.parse::<u16>().unwrap() <= 255));
+            }
+            v => panic!("wrong type {v:?}"),
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Payload formats: the Honda-style custom binary telematics format, plus
+//! CSV and JSON-lines for generic pipelines.
+//!
+//! The paper's fleet data arrives as "a stream of zip files … each contains
+//! five files in a custom binary format representing data from five
+//! different automotive subsystems" (§VI.A). This module defines that
+//! binary format; `package.rs` wraps five of these into a zip per vehicle
+//! transmission, and the pipeline's `v2x_phase` uses [`decode_subsystem_binary`]
+//! to parse them back.
+//!
+//! Binary layout (little-endian):
+//!
+//! ```text
+//! magic   [4]  b"HBIN"
+//! version u8   1
+//! subsys  u8   index into SUBSYSTEMS
+//! count   u32  record count
+//! records      count × { ts_ms u64, vin [17]u8, values [n_fields]f32 }
+//! crc     u32  CRC-32 of everything above
+//! ```
+
+use crate::tablestore::Value;
+use crate::util::rng::Rng;
+
+/// The five automotive subsystems of the paper's example fleet, with their
+/// per-record float fields.
+pub const SUBSYSTEMS: &[(&str, &[&str])] = &[
+    ("engine", &["rpm", "coolant_temp_c", "throttle_pct"]),
+    ("location", &["lat", "lon", "heading_deg"]),
+    ("speed", &["speed_kph", "accel_ms2"]),
+    ("battery", &["soc_pct", "voltage_v"]),
+    ("adas", &["alert_level", "confidence"]),
+];
+
+const MAGIC: &[u8; 4] = b"HBIN";
+const VERSION: u8 = 1;
+const VIN_LEN: usize = 17;
+
+/// One decoded telematics record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubsystemRecord {
+    pub timestamp_ms: u64,
+    pub vin: String,
+    pub values: Vec<f32>,
+}
+
+/// Errors from the binary decoder.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum DecodeError {
+    #[error("bad magic")]
+    BadMagic,
+    #[error("unsupported version {0}")]
+    BadVersion(u8),
+    #[error("unknown subsystem id {0}")]
+    BadSubsystem(u8),
+    #[error("truncated payload (need {need}, have {have})")]
+    Truncated { need: usize, have: usize },
+    #[error("crc mismatch")]
+    BadCrc,
+    #[error("vin is not utf-8")]
+    BadVin,
+}
+
+/// Encode records for one subsystem into the custom binary format.
+pub fn encode_subsystem_binary(subsys_idx: usize, records: &[SubsystemRecord]) -> Vec<u8> {
+    let (_, fields) = SUBSYSTEMS[subsys_idx];
+    let mut out = Vec::with_capacity(10 + records.len() * (8 + VIN_LEN + 4 * fields.len()));
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.push(subsys_idx as u8);
+    out.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for r in records {
+        assert_eq!(
+            r.values.len(),
+            fields.len(),
+            "subsystem {subsys_idx} expects {} values",
+            fields.len()
+        );
+        out.extend_from_slice(&r.timestamp_ms.to_le_bytes());
+        let mut vin = [b' '; VIN_LEN];
+        let vb = r.vin.as_bytes();
+        vin[..vb.len().min(VIN_LEN)].copy_from_slice(&vb[..vb.len().min(VIN_LEN)]);
+        out.extend_from_slice(&vin);
+        for v in &r.values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let crc = crc32fast::hash(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Decode a subsystem binary. Returns `(subsystem_index, records)`.
+pub fn decode_subsystem_binary(
+    data: &[u8],
+) -> Result<(usize, Vec<SubsystemRecord>), DecodeError> {
+    let need_header = 4 + 1 + 1 + 4;
+    if data.len() < need_header + 4 {
+        return Err(DecodeError::Truncated {
+            need: need_header + 4,
+            have: data.len(),
+        });
+    }
+    if &data[..4] != MAGIC {
+        return Err(DecodeError::BadMagic);
+    }
+    if data[4] != VERSION {
+        return Err(DecodeError::BadVersion(data[4]));
+    }
+    let subsys = data[5] as usize;
+    if subsys >= SUBSYSTEMS.len() {
+        return Err(DecodeError::BadSubsystem(data[5]));
+    }
+    let n_fields = SUBSYSTEMS[subsys].1.len();
+    let count = u32::from_le_bytes(data[6..10].try_into().unwrap()) as usize;
+    let rec_size = 8 + VIN_LEN + 4 * n_fields;
+    let need = need_header + count * rec_size + 4;
+    if data.len() < need {
+        return Err(DecodeError::Truncated {
+            need,
+            have: data.len(),
+        });
+    }
+    let body_end = need - 4;
+    let crc_stored = u32::from_le_bytes(data[body_end..body_end + 4].try_into().unwrap());
+    if crc32fast::hash(&data[..body_end]) != crc_stored {
+        return Err(DecodeError::BadCrc);
+    }
+    let mut records = Vec::with_capacity(count);
+    let mut pos = need_header;
+    for _ in 0..count {
+        let ts = u64::from_le_bytes(data[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        let vin = std::str::from_utf8(&data[pos..pos + VIN_LEN])
+            .map_err(|_| DecodeError::BadVin)?
+            .trim_end()
+            .to_string();
+        pos += VIN_LEN;
+        let mut values = Vec::with_capacity(n_fields);
+        for _ in 0..n_fields {
+            values.push(f32::from_le_bytes(data[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        records.push(SubsystemRecord {
+            timestamp_ms: ts,
+            vin,
+            values,
+        });
+    }
+    Ok((subsys, records))
+}
+
+/// Synthesize plausible records for one subsystem. `bad_rate` injects NaN
+/// values that the ETL stage must scrub.
+pub fn generate_subsystem_records(
+    subsys_idx: usize,
+    vin: &str,
+    base_ts_ms: u64,
+    n: usize,
+    bad_rate: f64,
+    rng: &mut Rng,
+) -> Vec<SubsystemRecord> {
+    let (_, fields) = SUBSYSTEMS[subsys_idx];
+    (0..n)
+        .map(|i| {
+            let values = fields
+                .iter()
+                .map(|f| {
+                    if bad_rate > 0.0 && rng.chance(bad_rate) {
+                        return f32::NAN;
+                    }
+                    let v = match *f {
+                        "rpm" => rng.normal(2200.0, 800.0).clamp(600.0, 8000.0),
+                        "coolant_temp_c" => rng.normal(92.0, 6.0).clamp(-40.0, 130.0),
+                        "throttle_pct" => rng.uniform(0.0, 100.0),
+                        "lat" => rng.uniform(38.0, 42.0),   // Ohio-ish test fleet
+                        "lon" => rng.uniform(-85.0, -80.0),
+                        "heading_deg" => rng.uniform(0.0, 360.0),
+                        "speed_kph" => rng.normal(65.0, 25.0).clamp(0.0, 200.0),
+                        "accel_ms2" => rng.normal(0.0, 1.2).clamp(-9.0, 9.0),
+                        "soc_pct" => rng.uniform(5.0, 100.0),
+                        "voltage_v" => rng.normal(360.0, 15.0).clamp(250.0, 450.0),
+                        "alert_level" => rng.int_range(0, 3) as f64,
+                        "confidence" => rng.uniform(0.0, 1.0),
+                        _ => rng.f64(),
+                    };
+                    v as f32
+                })
+                .collect();
+            SubsystemRecord {
+                timestamp_ms: base_ts_ms + (i as u64) * 100, // 10 Hz samples
+                vin: vin.to_string(),
+                values,
+            }
+        })
+        .collect()
+}
+
+/// Format schema-generated records as CSV (header + rows).
+pub fn records_to_csv(field_names: &[&str], records: &[Vec<Value>]) -> Vec<u8> {
+    let mut doc = crate::util::csv::CsvDoc::new(field_names);
+    for rec in records {
+        doc.push(rec.iter().map(value_to_string).collect());
+    }
+    doc.as_bytes().to_vec()
+}
+
+/// Format schema-generated records as JSON lines.
+pub fn records_to_jsonl(field_names: &[&str], records: &[Vec<Value>]) -> Vec<u8> {
+    use crate::util::json::Json;
+    let mut out = Vec::new();
+    for rec in records {
+        let obj = Json::obj(
+            field_names
+                .iter()
+                .zip(rec)
+                .map(|(n, v)| {
+                    let jv = match v {
+                        Value::Int(i) => Json::num(*i as f64),
+                        Value::Float(f) => Json::num(*f),
+                        Value::Text(t) => Json::str(t.clone()),
+                        Value::Null => Json::Null,
+                    };
+                    (*n, jv)
+                })
+                .collect(),
+        );
+        out.extend_from_slice(obj.to_string_compact().as_bytes());
+        out.push(b'\n');
+    }
+    out
+}
+
+fn value_to_string(v: &Value) -> String {
+    match v {
+        Value::Int(i) => i.to_string(),
+        Value::Float(f) => format!("{f}"),
+        Value::Text(t) => t.clone(),
+        Value::Null => String::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records(subsys: usize, n: usize) -> Vec<SubsystemRecord> {
+        let mut rng = Rng::new(11);
+        generate_subsystem_records(subsys, "1HGCM82633A004352", 1_000, n, 0.0, &mut rng)
+    }
+
+    #[test]
+    fn roundtrip_all_subsystems() {
+        for idx in 0..SUBSYSTEMS.len() {
+            let recs = sample_records(idx, 7);
+            let bin = encode_subsystem_binary(idx, &recs);
+            let (got_idx, got) = decode_subsystem_binary(&bin).unwrap();
+            assert_eq!(got_idx, idx);
+            assert_eq!(got, recs);
+        }
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let bin = encode_subsystem_binary(0, &[]);
+        let (idx, recs) = decode_subsystem_binary(&bin).unwrap();
+        assert_eq!(idx, 0);
+        assert!(recs.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bin = encode_subsystem_binary(0, &sample_records(0, 1));
+        bin[0] = b'X';
+        assert_eq!(decode_subsystem_binary(&bin), Err(DecodeError::BadMagic));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut bin = encode_subsystem_binary(0, &sample_records(0, 1));
+        bin[4] = 9;
+        assert_eq!(
+            decode_subsystem_binary(&bin),
+            Err(DecodeError::BadVersion(9))
+        );
+    }
+
+    #[test]
+    fn rejects_bad_subsystem() {
+        let mut bin = encode_subsystem_binary(0, &sample_records(0, 1));
+        bin[5] = 200;
+        assert_eq!(
+            decode_subsystem_binary(&bin),
+            Err(DecodeError::BadSubsystem(200))
+        );
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bin = encode_subsystem_binary(1, &sample_records(1, 3));
+        let cut = &bin[..bin.len() - 10];
+        assert!(matches!(
+            decode_subsystem_binary(cut),
+            Err(DecodeError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_corrupted_payload_via_crc() {
+        let mut bin = encode_subsystem_binary(2, &sample_records(2, 3));
+        let mid = bin.len() / 2;
+        bin[mid] ^= 0xFF;
+        assert_eq!(decode_subsystem_binary(&bin), Err(DecodeError::BadCrc));
+    }
+
+    #[test]
+    fn nan_values_survive_roundtrip() {
+        let mut rng = Rng::new(5);
+        let recs = generate_subsystem_records(0, "VIN", 0, 50, 1.0, &mut rng);
+        let bin = encode_subsystem_binary(0, &recs);
+        let (_, got) = decode_subsystem_binary(&bin).unwrap();
+        assert!(got.iter().all(|r| r.values.iter().all(|v| v.is_nan())));
+    }
+
+    #[test]
+    fn short_vin_padded_and_trimmed() {
+        let rec = SubsystemRecord {
+            timestamp_ms: 1,
+            vin: "SHORT".into(),
+            values: vec![1.0, 2.0, 3.0],
+        };
+        let bin = encode_subsystem_binary(0, &[rec]);
+        let (_, got) = decode_subsystem_binary(&bin).unwrap();
+        assert_eq!(got[0].vin, "SHORT");
+    }
+
+    #[test]
+    fn generated_values_in_plausible_ranges() {
+        let recs = sample_records(2, 100); // speed subsystem
+        for r in &recs {
+            assert!((0.0..=200.0).contains(&r.values[0]));
+            assert!((-9.0..=9.0).contains(&r.values[1]));
+        }
+    }
+
+    #[test]
+    fn csv_and_jsonl_formats() {
+        let names = ["a", "b"];
+        let recs = vec![
+            vec![Value::Int(1), Value::Text("x,y".into())],
+            vec![Value::Float(2.5), Value::Null],
+        ];
+        let csv = String::from_utf8(records_to_csv(&names, &recs)).unwrap();
+        assert!(csv.starts_with("a,b\n"));
+        assert!(csv.contains("\"x,y\""));
+        let jsonl = String::from_utf8(records_to_jsonl(&names, &recs)).unwrap();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].contains("\"b\":null"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Synthetic data generation (the GoFakeIt-service stand-in, §V.C).
+//!
+//! A [`Schema`] lists typed, constrained fields; the generator synthesizes
+//! records deterministically from a seed. Records can be formatted as CSV,
+//! JSON-lines, or the Honda-style custom telematics binary, and packaged
+//! into the paper's wire format: one zip per vehicle transmission holding
+//! five binary subsystem files ([`package::VehicleZip`]).
+//!
+//! Design note from the paper (§II): naive uniform lat/lon generation puts
+//! most points in the ocean, undersampling the map-matching code paths a
+//! telemetry pipeline actually exercises — so [`field::FieldKind::LatLon`]
+//! is biased toward (crudely boxed) land masses.
+
+pub mod field;
+pub mod format;
+pub mod package;
+pub mod schema;
+
+pub use field::{FieldKind, FieldSpec};
+pub use format::{
+    decode_subsystem_binary, encode_subsystem_binary, records_to_csv, records_to_jsonl,
+    SubsystemRecord, SUBSYSTEMS,
+};
+pub use package::{DataSet, DataSetSpec, VehicleZip};
+pub use schema::{Record, Schema};

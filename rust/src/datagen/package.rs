@@ -1,0 +1,265 @@
+//! Packaging: vehicle transmission zips and pre-generated datasets.
+//!
+//! PlantD "generates a quantity of data and stores it in advance of an
+//! experiment" (§V.C). A [`DataSet`] here is exactly that: a pool of
+//! ready-to-send payloads, each a [`VehicleZip`] — one zip archive per
+//! vehicle transmission containing five custom-binary subsystem files —
+//! built deterministically from a [`DataSetSpec`].
+
+use std::io::{Cursor, Read, Write};
+
+use zip::write::FileOptions;
+
+use crate::util::rng::Rng;
+
+use super::format::{
+    encode_subsystem_binary, generate_subsystem_records, SubsystemRecord, SUBSYSTEMS,
+};
+
+/// Configuration for dataset synthesis.
+#[derive(Debug, Clone)]
+pub struct DataSetSpec {
+    /// Number of distinct payloads to pre-generate (the load generator
+    /// cycles through them).
+    pub payloads: usize,
+    /// Telemetry samples per subsystem file.
+    pub records_per_subsystem: usize,
+    /// Probability a generated value is corrupt (NaN) — exercises ETL
+    /// scrubbing.
+    pub bad_rate: f64,
+    /// RNG seed (datasets replay bit-identically).
+    pub seed: u64,
+}
+
+impl Default for DataSetSpec {
+    fn default() -> Self {
+        DataSetSpec {
+            payloads: 64,
+            records_per_subsystem: 20,
+            bad_rate: 0.01,
+            seed: 0xD5,
+        }
+    }
+}
+
+/// One vehicle transmission: the zip bytes plus ground-truth metadata the
+/// experiment uses for verification.
+#[derive(Debug, Clone)]
+pub struct VehicleZip {
+    pub vin: String,
+    pub zip_bytes: Vec<u8>,
+    /// Total telemetry records across the five subsystem files.
+    pub total_records: usize,
+}
+
+/// Build one vehicle zip: five subsystem binaries, deflate-compressed.
+pub fn build_vehicle_zip(
+    vin: &str,
+    base_ts_ms: u64,
+    records_per_subsystem: usize,
+    bad_rate: f64,
+    rng: &mut Rng,
+) -> VehicleZip {
+    let mut cursor = Cursor::new(Vec::new());
+    {
+        let mut zw = zip::ZipWriter::new(&mut cursor);
+        // fastest deflate level: the wire format must be a real compressed
+        // zip (the unzipper does real inflation) but synthesis throughput
+        // is a harness hot path (§Perf)
+        let opts: FileOptions = FileOptions::default()
+            .compression_method(zip::CompressionMethod::Deflated)
+            .compression_level(Some(1));
+        for (idx, (name, _)) in SUBSYSTEMS.iter().enumerate() {
+            let recs = generate_subsystem_records(
+                idx,
+                vin,
+                base_ts_ms,
+                records_per_subsystem,
+                bad_rate,
+                rng,
+            );
+            let bin = encode_subsystem_binary(idx, &recs);
+            zw.start_file(format!("{name}.bin"), opts).expect("zip start");
+            zw.write_all(&bin).expect("zip write");
+        }
+        zw.finish().expect("zip finish");
+    }
+    VehicleZip {
+        vin: vin.to_string(),
+        zip_bytes: cursor.into_inner(),
+        total_records: records_per_subsystem * SUBSYSTEMS.len(),
+    }
+}
+
+/// Unpack a vehicle zip into its named binary members.
+pub fn unpack_vehicle_zip(zip_bytes: &[u8]) -> std::io::Result<Vec<(String, Vec<u8>)>> {
+    let mut archive = zip::ZipArchive::new(Cursor::new(zip_bytes))
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    let mut out = Vec::with_capacity(archive.len());
+    for i in 0..archive.len() {
+        let mut f = archive
+            .by_index(i)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let mut buf = Vec::with_capacity(f.size() as usize);
+        f.read_to_end(&mut buf)?;
+        out.push((f.name().to_string(), buf));
+    }
+    Ok(out)
+}
+
+/// A pre-generated pool of payloads.
+#[derive(Debug, Clone)]
+pub struct DataSet {
+    pub spec: DataSetSpec,
+    pub payloads: Vec<VehicleZip>,
+}
+
+impl DataSet {
+    /// Synthesize the dataset (deterministic in `spec.seed`).
+    pub fn generate(spec: DataSetSpec) -> DataSet {
+        let mut rng = Rng::new(spec.seed);
+        let mut payloads = Vec::with_capacity(spec.payloads);
+        for i in 0..spec.payloads {
+            let vin: String = {
+                const VIN_CHARS: &[u8] = b"ABCDEFGHJKLMNPRSTUVWXYZ0123456789";
+                (0..17).map(|_| *rng.choice(VIN_CHARS) as char).collect()
+            };
+            payloads.push(build_vehicle_zip(
+                &vin,
+                1_700_000_000_000 + i as u64 * 60_000,
+                spec.records_per_subsystem,
+                spec.bad_rate,
+                &mut rng,
+            ));
+        }
+        DataSet { spec, payloads }
+    }
+
+    /// Payload for the `i`-th send (cycles through the pool).
+    pub fn payload(&self, i: usize) -> &VehicleZip {
+        &self.payloads[i % self.payloads.len()]
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.payloads.iter().map(|p| p.zip_bytes.len() as u64).sum()
+    }
+
+    pub fn mean_payload_bytes(&self) -> f64 {
+        if self.payloads.is_empty() {
+            0.0
+        } else {
+            self.total_bytes() as f64 / self.payloads.len() as f64
+        }
+    }
+}
+
+/// Decode every subsystem file in a vehicle zip (helper for tests and the
+/// pipeline's parser stage).
+pub fn decode_all(
+    zip_bytes: &[u8],
+) -> std::io::Result<Vec<(usize, Vec<SubsystemRecord>)>> {
+    let members = unpack_vehicle_zip(zip_bytes)?;
+    let mut out = Vec::with_capacity(members.len());
+    for (_, bin) in members {
+        let parsed = super::format::decode_subsystem_binary(&bin)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        out.push(parsed);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vehicle_zip_contains_five_members() {
+        let mut rng = Rng::new(1);
+        let vz = build_vehicle_zip("VIN00000000000001", 0, 10, 0.0, &mut rng);
+        let members = unpack_vehicle_zip(&vz.zip_bytes).unwrap();
+        assert_eq!(members.len(), 5);
+        let names: Vec<&str> = members.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"engine.bin"));
+        assert!(names.contains(&"location.bin"));
+        assert!(names.contains(&"adas.bin"));
+    }
+
+    #[test]
+    fn zip_members_decode_to_requested_counts() {
+        let mut rng = Rng::new(2);
+        let vz = build_vehicle_zip("V", 5_000, 13, 0.0, &mut rng);
+        assert_eq!(vz.total_records, 65);
+        let decoded = decode_all(&vz.zip_bytes).unwrap();
+        let total: usize = decoded.iter().map(|(_, r)| r.len()).sum();
+        assert_eq!(total, 65);
+        for (idx, recs) in &decoded {
+            assert_eq!(recs.len(), 13);
+            assert!(recs.iter().all(|r| r.vin == "V"));
+            assert_eq!(recs[0].values.len(), SUBSYSTEMS[*idx].1.len());
+        }
+    }
+
+    #[test]
+    fn zip_compresses() {
+        let mut rng = Rng::new(3);
+        let vz = build_vehicle_zip("V", 0, 200, 0.0, &mut rng);
+        let raw_size: usize = decode_all(&vz.zip_bytes)
+            .unwrap()
+            .iter()
+            .map(|(idx, r)| 14 + r.len() * (25 + 4 * SUBSYSTEMS[*idx].1.len()))
+            .sum();
+        assert!(
+            vz.zip_bytes.len() < raw_size,
+            "zip {} >= raw {raw_size}",
+            vz.zip_bytes.len()
+        );
+    }
+
+    #[test]
+    fn dataset_deterministic() {
+        let spec = DataSetSpec {
+            payloads: 4,
+            records_per_subsystem: 5,
+            bad_rate: 0.1,
+            seed: 42,
+        };
+        let a = DataSet::generate(spec.clone());
+        let b = DataSet::generate(spec);
+        for (pa, pb) in a.payloads.iter().zip(&b.payloads) {
+            assert_eq!(pa.zip_bytes, pb.zip_bytes);
+            assert_eq!(pa.vin, pb.vin);
+        }
+    }
+
+    #[test]
+    fn dataset_payload_cycles() {
+        let ds = DataSet::generate(DataSetSpec {
+            payloads: 3,
+            records_per_subsystem: 2,
+            bad_rate: 0.0,
+            seed: 7,
+        });
+        assert_eq!(ds.payload(0).vin, ds.payload(3).vin);
+        assert_eq!(ds.payload(2).vin, ds.payload(5).vin);
+        assert!(ds.mean_payload_bytes() > 0.0);
+    }
+
+    #[test]
+    fn bad_rate_produces_nans_after_decode() {
+        let mut rng = Rng::new(8);
+        let vz = build_vehicle_zip("V", 0, 50, 0.5, &mut rng);
+        let decoded = decode_all(&vz.zip_bytes).unwrap();
+        let nan_count: usize = decoded
+            .iter()
+            .flat_map(|(_, recs)| recs.iter())
+            .flat_map(|r| r.values.iter())
+            .filter(|v| v.is_nan())
+            .count();
+        assert!(nan_count > 100, "nan_count={nan_count}");
+    }
+
+    #[test]
+    fn unpack_rejects_garbage() {
+        assert!(unpack_vehicle_zip(b"not a zip").is_err());
+    }
+}

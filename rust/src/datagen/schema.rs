@@ -1,0 +1,218 @@
+//! Schemas: named, ordered field lists that generate whole records.
+//!
+//! Mirrors PlantD's *Schema* custom resource: "Schemas are entered by
+//! listing data fields, with constraints on their values, as configuration
+//! for PlantD's random data generator" (§IV).
+
+use crate::tablestore::Value;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::field::{FieldKind, FieldSpec};
+
+/// A generated record: values in schema field order.
+pub type Record = Vec<Value>;
+
+/// An ordered collection of field specs.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    pub name: String,
+    pub fields: Vec<FieldSpec>,
+}
+
+impl Schema {
+    pub fn new(name: &str, fields: Vec<FieldSpec>) -> Self {
+        assert!(!fields.is_empty(), "schema '{name}' has no fields");
+        Schema {
+            name: name.to_string(),
+            fields,
+        }
+    }
+
+    pub fn field_names(&self) -> Vec<&str> {
+        self.fields.iter().map(|f| f.name.as_str()).collect()
+    }
+
+    /// Generate one record.
+    pub fn generate(&self, rng: &mut Rng) -> Record {
+        self.fields.iter().map(|f| f.generate(rng)).collect()
+    }
+
+    /// Generate `n` records.
+    pub fn generate_many(&self, rng: &mut Rng, n: usize) -> Vec<Record> {
+        (0..n).map(|_| self.generate(rng)).collect()
+    }
+
+    /// Parse a schema from its JSON spec form, e.g.:
+    ///
+    /// ```json
+    /// {"name": "engine", "fields": [
+    ///   {"name": "vin", "kind": "vin"},
+    ///   {"name": "rpm", "kind": "int", "lo": 0, "hi": 8000, "bad_rate": 0.01},
+    ///   {"name": "gear", "kind": "enum", "options": ["P","R","N","D"]}
+    /// ]}
+    /// ```
+    pub fn from_json(j: &Json) -> Result<Schema, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("schema: missing 'name'")?;
+        let fields_json = j
+            .get("fields")
+            .and_then(Json::as_arr)
+            .ok_or("schema: missing 'fields' array")?;
+        let mut fields = Vec::new();
+        for f in fields_json {
+            fields.push(field_from_json(f)?);
+        }
+        if fields.is_empty() {
+            return Err(format!("schema '{name}': no fields"));
+        }
+        Ok(Schema::new(name, fields))
+    }
+}
+
+fn field_from_json(j: &Json) -> Result<FieldSpec, String> {
+    let name = j
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("field: missing 'name'")?;
+    let kind_s = j
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("field '{name}': missing 'kind'"))?;
+    let f64_of = |key: &str, default: f64| -> f64 {
+        j.get(key).and_then(Json::as_f64).unwrap_or(default)
+    };
+    let kind = match kind_s {
+        "int" => FieldKind::IntRange {
+            lo: f64_of("lo", 0.0) as i64,
+            hi: f64_of("hi", 100.0) as i64,
+        },
+        "float" => FieldKind::FloatRange {
+            lo: f64_of("lo", 0.0),
+            hi: f64_of("hi", 1.0),
+        },
+        "normal" => FieldKind::NormalClamped {
+            mean: f64_of("mean", 0.0),
+            std: f64_of("std", 1.0),
+            lo: f64_of("lo", f64::NEG_INFINITY),
+            hi: f64_of("hi", f64::INFINITY),
+        },
+        "enum" => {
+            let opts = j
+                .get("options")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("field '{name}': enum needs 'options'"))?
+                .iter()
+                .filter_map(|o| o.as_str().map(str::to_string))
+                .collect::<Vec<_>>();
+            if opts.is_empty() {
+                return Err(format!("field '{name}': empty enum options"));
+            }
+            FieldKind::Enum(opts)
+        }
+        "name" => FieldKind::Name,
+        "email" => FieldKind::Email,
+        "vin" => FieldKind::Vin,
+        "latlon" => FieldKind::LatLon,
+        "timestamp" => FieldKind::Timestamp {
+            start: f64_of("start", 1_700_000_000.0) as u64,
+            span_s: f64_of("span_s", 86_400.0) as u64,
+        },
+        "uuid" => FieldKind::Uuid,
+        "bool" => FieldKind::Bool {
+            p_true: f64_of("p_true", 0.5),
+        },
+        "ipv4" => FieldKind::Ipv4,
+        "word" => FieldKind::Word,
+        other => return Err(format!("field '{name}': unknown kind '{other}'")),
+    };
+    let mut spec = FieldSpec::new(name, kind);
+    let bad = f64_of("bad_rate", 0.0);
+    if bad > 0.0 {
+        spec = spec.with_bad_rate(bad);
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_schema() -> Schema {
+        Schema::new(
+            "engine",
+            vec![
+                FieldSpec::new("vin", FieldKind::Vin),
+                FieldSpec::new("rpm", FieldKind::IntRange { lo: 0, hi: 8000 }),
+                FieldSpec::new(
+                    "temp_c",
+                    FieldKind::FloatRange { lo: -40.0, hi: 130.0 },
+                ),
+            ],
+        )
+    }
+
+    #[test]
+    fn generates_in_field_order() {
+        let s = demo_schema();
+        let mut rng = Rng::new(1);
+        let rec = s.generate(&mut rng);
+        assert_eq!(rec.len(), 3);
+        assert!(matches!(rec[0], Value::Text(_)));
+        assert!(matches!(rec[1], Value::Int(_)));
+        assert!(matches!(rec[2], Value::Float(_)));
+    }
+
+    #[test]
+    fn generate_many_counts() {
+        let s = demo_schema();
+        let mut rng = Rng::new(2);
+        assert_eq!(s.generate_many(&mut rng, 25).len(), 25);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = demo_schema();
+        let a = s.generate_many(&mut Rng::new(3), 5);
+        let b = s.generate_many(&mut Rng::new(3), 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let spec = r#"{"name": "t", "fields": [
+            {"name": "vin", "kind": "vin"},
+            {"name": "rpm", "kind": "int", "lo": 0, "hi": 8000, "bad_rate": 0.25},
+            {"name": "gear", "kind": "enum", "options": ["P", "D"]},
+            {"name": "loc", "kind": "latlon"},
+            {"name": "ok", "kind": "bool", "p_true": 0.9}
+        ]}"#;
+        let s = Schema::from_json(&Json::parse(spec).unwrap()).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.field_names(), vec!["vin", "rpm", "gear", "loc", "ok"]);
+        assert!((s.fields[1].bad_rate - 0.25).abs() < 1e-12);
+        let mut rng = Rng::new(4);
+        let rec = s.generate(&mut rng);
+        assert_eq!(rec.len(), 5);
+    }
+
+    #[test]
+    fn from_json_errors() {
+        assert!(Schema::from_json(&Json::parse(r#"{"fields": []}"#).unwrap()).is_err());
+        assert!(Schema::from_json(
+            &Json::parse(r#"{"name": "x", "fields": []}"#).unwrap()
+        )
+        .is_err());
+        assert!(Schema::from_json(
+            &Json::parse(r#"{"name":"x","fields":[{"name":"f","kind":"nope"}]}"#).unwrap()
+        )
+        .is_err());
+        assert!(Schema::from_json(
+            &Json::parse(r#"{"name":"x","fields":[{"name":"f","kind":"enum","options":[]}]}"#)
+                .unwrap()
+        )
+        .is_err());
+    }
+}

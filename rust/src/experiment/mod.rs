@@ -1,0 +1,364 @@
+//! Experiment control: PlantD's *Experiment* custom resource brought to
+//! life (§IV, §V.F).
+//!
+//! An [`ExperimentHarness`] owns the shared wind-tunnel infrastructure
+//! (simulated cloud, scaled clock, TSDB, span collector, price book). One
+//! [`Experiment`] run:
+//!
+//! 1. deploys the pipeline variant and checks it is **reachable**;
+//! 2. marks the pipeline **engaged** (concurrent experiments refused);
+//! 3. drives the load pattern open-loop from the pre-generated dataset;
+//! 4. waits for the pipeline to **drain** (all stages idle);
+//! 5. collects spans into the TSDB and snapshots the metric/cost summary
+//!    (a Table III row) into an [`ExperimentRecord`].
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::cloud::{Cloud, Resources};
+use crate::cost::PriceBook;
+use crate::datagen::DataSet;
+use crate::loadgen::{LoadGenerator, LoadPattern, LoadReport};
+use crate::pipeline::{PipelineDeployment, VariantConfig};
+use crate::telemetry::{Collector, SpanSink, Tsdb};
+use crate::util::clock::{ScaledClock, SharedClock};
+use crate::util::stats;
+
+/// A named experiment: what to send and how fast, plus (optionally) a
+/// query workload against the pipeline's output store and a scheduled
+/// start time.
+#[derive(Clone)]
+pub struct Experiment {
+    pub name: String,
+    pub pattern: LoadPattern,
+    pub dataset: DataSet,
+    /// Defer the start until this virtual time (None = immediately).
+    pub start_at_s: Option<f64>,
+    /// Query load to run against the warehouse after ingestion drains
+    /// (PlantD "can also send queries against the pipeline's output, to
+    /// test its query infrastructure", §I).
+    pub queries: Option<QueryLoad>,
+}
+
+impl Experiment {
+    pub fn new(name: &str, pattern: LoadPattern, dataset: DataSet) -> Self {
+        Experiment {
+            name: name.to_string(),
+            pattern,
+            dataset,
+            start_at_s: None,
+            queries: None,
+        }
+    }
+}
+
+/// A query workload: point/scan queries at a steady rate.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryLoad {
+    pub rate_qps: f64,
+    pub duration_s: f64,
+}
+
+/// Everything measured for one experiment run (a Table III row plus the
+/// underlying series, which stay queryable in the shared TSDB).
+#[derive(Debug, Clone)]
+pub struct ExperimentRecord {
+    pub experiment: String,
+    pub variant: &'static str,
+    /// Virtual time of the first send.
+    pub started_s: f64,
+    /// Virtual time when the last stage drained.
+    pub drained_s: f64,
+    /// Experiment length (the paper's "exp. length"): first send → drain.
+    pub duration_s: f64,
+    pub zips_sent: u64,
+    /// Sustained throughput in load units (zips/s) — Table III/I "rec/s".
+    pub mean_throughput_rps: f64,
+    /// No-queue per-record latency (sum of mean per-stage service times) —
+    /// the paper's Table I "avg latency" semantics.
+    pub latency_nq_mean_s: f64,
+    /// Median of per-file service-latency sums.
+    pub latency_nq_median_s: f64,
+    /// Queue-inclusive end-to-end latency stats (ingest → warehouse).
+    pub latency_e2e_mean_s: f64,
+    pub latency_e2e_median_s: f64,
+    pub latency_e2e_p95_s: f64,
+    /// Fixed cost rate from container sizing (USD/hr).
+    pub cost_per_hr_usd: f64,
+    /// Prorated cost of the run (USD).
+    pub total_cost_usd: f64,
+    pub rows_inserted: u64,
+    pub rows_scrubbed: u64,
+    pub stage_errors: u64,
+    /// Query-workload latency stats, if a QueryLoad ran (p50/p95/qps).
+    pub query_p50_s: Option<f64>,
+    pub query_p95_s: Option<f64>,
+    pub query_achieved_qps: Option<f64>,
+    pub load: LoadReport,
+    /// Per-stage (name, spans, records, busy_s).
+    pub per_stage: Vec<(String, u64, u64, f64)>,
+}
+
+impl ExperimentRecord {
+    /// Records-per-hour mean throughput (Table II units).
+    pub fn mean_throughput_rec_hr(&self) -> f64 {
+        self.mean_throughput_rps * 3600.0
+    }
+}
+
+/// Shared wind-tunnel infrastructure. `run` is `&self` and every run gets
+/// its own span sink, so experiments on *different* pipelines may run
+/// concurrently (multi-endpoint experiments, §IV); one pipeline still
+/// refuses concurrent engagement.
+pub struct ExperimentHarness {
+    pub cloud: Cloud,
+    pub clock: SharedClock,
+    pub tsdb: Tsdb,
+    pub prices: PriceBook,
+    node_id: String,
+}
+
+impl ExperimentHarness {
+    /// `scale` = virtual seconds per wall second. The paper's 120 s ramp
+    /// experiments replay in seconds at `scale ≈ 60–240`.
+    pub fn new(scale: f64) -> Self {
+        let cloud = Cloud::new();
+        cloud.add_node("wind-tunnel-node", Resources::new(16.0, 64.0), 0.40);
+        ExperimentHarness {
+            cloud,
+            clock: ScaledClock::new(scale),
+            tsdb: Tsdb::new(),
+            prices: PriceBook::default(),
+            node_id: "wind-tunnel-node".to_string(),
+        }
+    }
+
+    /// Run one experiment against one pipeline variant.
+    pub fn run(&self, variant: &VariantConfig, exp: &Experiment) -> Result<ExperimentRecord> {
+        // scheduled start (§IV: "start immediately or at some scheduled time")
+        if let Some(at) = exp.start_at_s {
+            let now = self.clock.now_s();
+            if at > now {
+                self.clock.sleep_s(at - now);
+            }
+        }
+        let run_spans = SpanSink::new();
+        let handle = PipelineDeployment::deploy(
+            variant,
+            &self.cloud,
+            &self.node_id,
+            self.clock.clone(),
+            run_spans.clone(),
+            &self.tsdb,
+        );
+        if !handle.is_reachable() {
+            bail!("pipeline '{}' is not reachable", variant.name);
+        }
+        if !handle.engage() {
+            bail!("pipeline '{}' is already engaged", variant.name);
+        }
+
+        // 3. drive the load. Payloads are pre-wrapped in Arcs so the
+        // pacing thread does no per-send copies (§Perf): k6-style open-
+        // loop accuracy requires the sink to be O(refcount).
+        let payload_arcs: Vec<Arc<Vec<u8>>> = exp
+            .dataset
+            .payloads
+            .iter()
+            .map(|p| Arc::new(p.zip_bytes.clone()))
+            .collect();
+        let gen = LoadGenerator::new(self.clock.clone()).with_tsdb(self.tsdb.clone());
+        let load = gen.run(&exp.pattern, &exp.dataset, |i, _| {
+            handle.ingest(payload_arcs[i % payload_arcs.len()].clone());
+        });
+
+        // 4. drain (query workload runs against the warehouse afterwards,
+        // when the data it queries has landed)
+        let table = handle.table.clone();
+        let run_stats = handle.finish();
+        let query_stats = exp
+            .queries
+            .map(|q| self.run_queries(&table, q))
+            .transpose()?;
+
+        // 5. collect spans → metrics. Latency summaries come from *this
+        // run's* spans (the sink holds exactly one run), not from TSDB
+        // queries — the shared TSDB accumulates across sequential
+        // experiments on the harness.
+        let spans = run_spans.drain();
+        let collector = Collector::new(self.tsdb.clone());
+        for s in &spans {
+            collector.record(s);
+        }
+
+        let started_s = load.start_s;
+        let drained_s = run_stats.drained_at_s;
+        let duration_s = (drained_s - started_s).max(1e-9);
+        let zips = run_stats.zips_ingested;
+
+        // no-queue latency: per-stage service-time distributions
+        let durations_of = |stage: &str| -> Vec<f64> {
+            spans
+                .iter()
+                .filter(|s| s.stage == stage)
+                .map(|s| s.duration_s)
+                .collect()
+        };
+        let stages = ["unzipper_phase", "v2x_phase", "etl_phase"];
+        let latency_nq_mean_s: f64 =
+            stages.iter().map(|s| stats::mean(&durations_of(s))).sum();
+        // per-file no-queue median: approximate with the sum of medians
+        let latency_nq_median_s: f64 =
+            stages.iter().map(|s| stats::median(&durations_of(s))).sum();
+
+        let e2e = self.tsdb.values_range(
+            "stage_cum_latency_s",
+            &[("stage", "etl_phase"), ("pipeline", variant.name)],
+            started_s,
+            drained_s + 1.0,
+        );
+        let cost_per_hr_usd = variant.cost_per_hr(&self.prices);
+        let total_cost_usd = cost_per_hr_usd * duration_s / 3600.0;
+
+        let mut stage_errors = 0;
+        let per_stage: Vec<(String, u64, u64, f64)> = run_stats
+            .per_stage
+            .iter()
+            .map(|(name, s)| {
+                stage_errors += s.errors;
+                (name.to_string(), s.spans, s.records, s.busy_s)
+            })
+            .collect();
+
+        let record = ExperimentRecord {
+            experiment: exp.name.clone(),
+            variant: variant.name,
+            started_s,
+            drained_s,
+            duration_s,
+            zips_sent: zips,
+            mean_throughput_rps: zips as f64 / duration_s,
+            latency_nq_mean_s,
+            latency_nq_median_s,
+            latency_e2e_mean_s: stats::mean(&e2e),
+            latency_e2e_median_s: stats::median(&e2e),
+            latency_e2e_p95_s: stats::quantile(&e2e, 0.95),
+            cost_per_hr_usd,
+            total_cost_usd,
+            rows_inserted: run_stats.rows_inserted,
+            rows_scrubbed: run_stats.rows_scrubbed,
+            stage_errors,
+            query_p50_s: query_stats.map(|(p50, _, _)| p50),
+            query_p95_s: query_stats.map(|(_, p95, _)| p95),
+            query_achieved_qps: query_stats.map(|(_, _, qps)| qps),
+            load,
+            per_stage,
+        };
+        Ok(record)
+    }
+
+    /// Drive a steady query load against the warehouse table, measuring
+    /// per-query latency (virtual seconds). Returns (p50, p95, achieved qps).
+    fn run_queries(&self, table: &crate::tablestore::Table, q: QueryLoad) -> Result<(f64, f64, f64)> {
+        anyhow::ensure!(q.rate_qps > 0.0 && q.duration_s > 0.0, "bad query load");
+        let n = (q.rate_qps * q.duration_s).floor() as usize;
+        let mut rng = crate::util::rng::Rng::new(0x51E7);
+        let subsystems = ["engine", "location", "speed", "battery", "adas"];
+        let mut latencies = Vec::with_capacity(n);
+        let t0 = self.clock.now_s();
+        let gap = 1.0 / q.rate_qps;
+        for i in 0..n {
+            let due = t0 + i as f64 * gap;
+            let now = self.clock.now_s();
+            if due > now {
+                self.clock.sleep_s(due - now);
+            }
+            let q0 = self.clock.now_s();
+            let subsys = *rng.choice(&subsystems);
+            let _count = table.query_count(|row| {
+                matches!(&row[2], crate::tablestore::Value::Text(s) if s == subsys)
+            });
+            latencies.push(self.clock.now_s() - q0);
+        }
+        let span = (self.clock.now_s() - t0).max(1e-9);
+        Ok((
+            stats::median(&latencies),
+            stats::quantile(&latencies, 0.95),
+            n as f64 / span,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::DataSetSpec;
+
+    fn small_experiment(n_payloads: usize, pattern: LoadPattern) -> Experiment {
+        Experiment::new(
+            "test-exp",
+            pattern,
+            DataSet::generate(DataSetSpec {
+                payloads: n_payloads,
+                records_per_subsystem: 4,
+                bad_rate: 0.02,
+                seed: 9,
+            }),
+        )
+    }
+
+    #[test]
+    fn runs_and_summarizes() {
+        let harness = ExperimentHarness::new(3000.0);
+        let exp = small_experiment(8, LoadPattern::steady(10.0, 3.0)); // 30 zips
+        let rec = harness
+            .run(&VariantConfig::no_blocking_write(), &exp)
+            .unwrap();
+        assert_eq!(rec.zips_sent, 30);
+        assert_eq!(rec.load.sent, 30);
+        assert!(rec.duration_s > 0.0);
+        assert!(rec.mean_throughput_rps > 0.0);
+        assert!(rec.latency_nq_mean_s > 0.0);
+        assert!(rec.latency_e2e_mean_s >= rec.latency_nq_mean_s * 0.5);
+        assert!(rec.total_cost_usd > 0.0);
+        assert!(rec.rows_inserted > 0);
+        assert_eq!(rec.per_stage.len(), 3);
+        // spans landed in the TSDB
+        assert!(harness.tsdb.sum_range("stage_records", &[], 0.0, f64::MAX) > 0.0);
+    }
+
+    #[test]
+    fn overload_caps_throughput_near_capacity() {
+        // Moderate clock scale: at high scales the stages' *real* CPU work
+        // (zip inflate, binary decode — microseconds of wall time) would
+        // rival the modeled service times and depress throughput. The
+        // paper-scale benches run at scale ≈ 60 in release mode, where the
+        // distortion is < 2 %; here we accept a loose band.
+        let harness = ExperimentHarness::new(300.0);
+        // hammer the blocking variant well above its ~1.95 zips/s capacity
+        let exp = small_experiment(8, LoadPattern::steady(6.0, 10.0)); // 60 zips
+        let rec = harness.run(&VariantConfig::blocking_write(), &exp).unwrap();
+        let cap = VariantConfig::blocking_write().analytic_capacity_zps();
+        let ratio = rec.mean_throughput_rps / cap;
+        assert!(
+            (0.5..1.4).contains(&ratio),
+            "measured {} vs analytic {cap}",
+            rec.mean_throughput_rps
+        );
+        // queue-inclusive latency must exceed service-only latency
+        assert!(rec.latency_e2e_mean_s > rec.latency_nq_mean_s);
+    }
+
+    #[test]
+    fn sequential_experiments_share_harness() {
+        let harness = ExperimentHarness::new(5000.0);
+        let exp = small_experiment(4, LoadPattern::steady(5.0, 2.0));
+        let r1 = harness.run(&VariantConfig::no_blocking_write(), &exp).unwrap();
+        let r2 = harness.run(&VariantConfig::cpu_limited(), &exp).unwrap();
+        assert_eq!(r1.zips_sent, 10);
+        assert_eq!(r2.zips_sent, 10);
+        // cpu-limited is slower
+        assert!(r2.duration_s > r1.duration_s);
+    }
+}

@@ -1,0 +1,44 @@
+//! # PlantD — a data-pipeline wind tunnel
+//!
+//! Open-source reproduction of *PlantD: Performance, Latency ANalysis, and
+//! Testing for Data Pipelines* (CS.PF 2025) as a three-layer
+//! Rust + JAX + Pallas system. This crate is Layer 3: the coordinator that
+//! owns load generation, measurement, cost accounting, experiment control,
+//! and the business-analysis engine. The year-simulation compute (Layer 2
+//! JAX graph calling a Layer 1 Pallas queue-scan kernel) is AOT-compiled to
+//! HLO at build time and executed from [`runtime`] via the PJRT C API —
+//! Python never runs on the request path.
+//!
+//! ## Quick tour
+//!
+//! - Describe the data your devices emit with a [`datagen::Schema`] and
+//!   synthesize a [`datagen::DataSet`].
+//! - Shape the offered load with a [`loadgen::LoadPattern`].
+//! - Deploy a pipeline-under-test ([`pipeline`]) on the simulated cloud
+//!   ([`cloud`]) — or adapt the [`pipeline::Stage`] trait to point the
+//!   wind tunnel at your own.
+//! - Run an [`experiment`]; spans flow into the [`telemetry`] TSDB and
+//!   spend into the [`cost`] meter.
+//! - Fit a [`twin`] from the measurements, project a business year with a
+//!   [`traffic`] model, and answer what-if questions with [`bizsim`].
+//!
+//! See `examples/quickstart.rs` for the 60-second version and
+//! `examples/telematics_windtunnel.rs` for the paper's full case study.
+
+pub mod bizsim;
+pub mod blob;
+pub mod bus;
+pub mod cloud;
+pub mod cost;
+pub mod datagen;
+pub mod experiment;
+pub mod loadgen;
+pub mod pipeline;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod tablestore;
+pub mod telemetry;
+pub mod traffic;
+pub mod twin;
+pub mod util;

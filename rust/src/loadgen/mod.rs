@@ -1,0 +1,422 @@
+//! Load generation (the K6 stand-in, §V.D).
+//!
+//! A [`LoadPattern`] is a sequence of time segments, each with a start and
+//! end data rate; rates interpolate linearly inside a segment (exactly the
+//! paper's model: "Data rate can linearly increase, decrease, or stay
+//! steady, over segments of any length, to approximate any load curve").
+//!
+//! The [`LoadGenerator`] converts the pattern into an exact open-loop send
+//! schedule by analytically inverting the cumulative-rate curve (piecewise
+//! quadratic), then paces sends on the shared virtual clock. Pacing
+//! accuracy is self-measured and reported — §II's requirement that the
+//! harness understand its own delivery limits.
+
+use crate::datagen::DataSet;
+use crate::telemetry::Tsdb;
+use crate::util::clock::SharedClock;
+use crate::util::json::Json;
+
+/// One linear-rate segment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub duration_s: f64,
+    pub start_rps: f64,
+    pub end_rps: f64,
+}
+
+/// Piecewise-linear load pattern.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct LoadPattern {
+    pub segments: Vec<Segment>,
+}
+
+impl LoadPattern {
+    pub fn new(segments: Vec<Segment>) -> Self {
+        for s in &segments {
+            assert!(s.duration_s > 0.0, "segment duration must be positive");
+            assert!(
+                s.start_rps >= 0.0 && s.end_rps >= 0.0,
+                "rates must be non-negative"
+            );
+        }
+        LoadPattern { segments }
+    }
+
+    /// A single ramp from `from_rps` to `to_rps` over `duration_s` — the
+    /// paper's recommended pattern for finding nominal throughput.
+    pub fn ramp(duration_s: f64, from_rps: f64, to_rps: f64) -> Self {
+        LoadPattern::new(vec![Segment {
+            duration_s,
+            start_rps: from_rps,
+            end_rps: to_rps,
+        }])
+    }
+
+    /// Constant rate.
+    pub fn steady(duration_s: f64, rps: f64) -> Self {
+        LoadPattern::new(vec![Segment {
+            duration_s,
+            start_rps: rps,
+            end_rps: rps,
+        }])
+    }
+
+    /// Append a segment (builder style).
+    pub fn then(mut self, duration_s: f64, start_rps: f64, end_rps: f64) -> Self {
+        assert!(duration_s > 0.0);
+        self.segments.push(Segment {
+            duration_s,
+            start_rps,
+            end_rps,
+        });
+        self
+    }
+
+    pub fn total_duration_s(&self) -> f64 {
+        self.segments.iter().map(|s| s.duration_s).sum()
+    }
+
+    /// Instantaneous rate at time `t` (0 outside the pattern).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut t0 = 0.0;
+        for s in &self.segments {
+            if t >= t0 && t < t0 + s.duration_s {
+                let frac = (t - t0) / s.duration_s;
+                return s.start_rps + frac * (s.end_rps - s.start_rps);
+            }
+            t0 += s.duration_s;
+        }
+        0.0
+    }
+
+    /// Total records offered (area under the rate curve), rounded down.
+    pub fn total_records(&self) -> u64 {
+        self.segments
+            .iter()
+            .map(|s| s.duration_s * (s.start_rps + s.end_rps) / 2.0)
+            .sum::<f64>()
+            .floor() as u64
+    }
+
+    /// Exact send times: the k-th record is sent when the cumulative area
+    /// under the rate curve reaches k+1 (so a steady 2 rps pattern sends at
+    /// t = 0.5, 1.0, 1.5 …). Piecewise-quadratic inversion per segment.
+    pub fn send_times(&self) -> Vec<f64> {
+        let mut times = Vec::with_capacity(self.total_records() as usize);
+        let mut t0 = 0.0; // segment start time
+        let mut area0 = 0.0; // cumulative records before this segment
+        let mut k = 1u64; // next record number (1-based target area)
+        for s in &self.segments {
+            let seg_area = s.duration_s * (s.start_rps + s.end_rps) / 2.0;
+            let slope = (s.end_rps - s.start_rps) / s.duration_s;
+            while (k as f64) <= area0 + seg_area + 1e-9 {
+                let a = k as f64 - area0; // area needed inside this segment
+                // solve: start_rps*x + slope*x^2/2 = a for x in [0, dur]
+                let x = if slope.abs() < 1e-12 {
+                    if s.start_rps <= 0.0 {
+                        break; // zero-rate steady segment contributes nothing
+                    }
+                    a / s.start_rps
+                } else {
+                    // x = (-b + sqrt(b^2 + 2*slope*a)) / slope, b = start_rps
+                    let disc = s.start_rps * s.start_rps + 2.0 * slope * a;
+                    if disc < 0.0 {
+                        break;
+                    }
+                    (-s.start_rps + disc.sqrt()) / slope
+                };
+                let x = x.clamp(0.0, s.duration_s);
+                times.push(t0 + x);
+                k += 1;
+            }
+            t0 += s.duration_s;
+            area0 += seg_area;
+        }
+        times
+    }
+
+    /// Parse from JSON: `{"segments": [{"duration_s": 120, "start_rps": 0,
+    /// "end_rps": 40}, ...]}`.
+    pub fn from_json(j: &Json) -> Result<LoadPattern, String> {
+        let segs = j
+            .get("segments")
+            .and_then(Json::as_arr)
+            .ok_or("load pattern: missing 'segments'")?;
+        let mut out = Vec::new();
+        for s in segs {
+            let get = |k: &str| -> Result<f64, String> {
+                s.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("segment: missing '{k}'"))
+            };
+            let duration_s = get("duration_s")?;
+            if duration_s <= 0.0 {
+                return Err("segment: duration_s must be > 0".into());
+            }
+            out.push(Segment {
+                duration_s,
+                start_rps: get("start_rps")?,
+                end_rps: get("end_rps")?,
+            });
+        }
+        if out.is_empty() {
+            return Err("load pattern: no segments".into());
+        }
+        Ok(LoadPattern::new(out))
+    }
+}
+
+/// Outcome of one load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Records the pattern called for.
+    pub requested: u64,
+    /// Records actually delivered to the sink.
+    pub sent: u64,
+    /// Bytes delivered.
+    pub bytes: u64,
+    /// Virtual time when the first record was sent.
+    pub start_s: f64,
+    /// Virtual time when the last record was sent.
+    pub end_s: f64,
+    /// Worst observed lateness of a send vs its schedule, virtual seconds.
+    pub max_lateness_s: f64,
+}
+
+impl LoadReport {
+    /// Achieved mean rate over the send window.
+    pub fn achieved_rps(&self) -> f64 {
+        if self.end_s > self.start_s {
+            self.sent as f64 / (self.end_s - self.start_s)
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Open-loop paced sender.
+pub struct LoadGenerator {
+    clock: SharedClock,
+    tsdb: Option<Tsdb>,
+}
+
+impl LoadGenerator {
+    pub fn new(clock: SharedClock) -> Self {
+        LoadGenerator { clock, tsdb: None }
+    }
+
+    /// Also log `load_sent` (records) and `load_bytes` samples to a TSDB.
+    pub fn with_tsdb(mut self, tsdb: Tsdb) -> Self {
+        self.tsdb = Some(tsdb);
+        self
+    }
+
+    /// Drive `sink` with payloads from `dataset` according to `pattern`.
+    /// `sink(i, payload)` is called on the pacing thread: it must hand off
+    /// quickly (enqueue) — any blocking shows up as pacing lateness, which
+    /// is reported honestly in the returned [`LoadReport`].
+    pub fn run<F>(
+        &self,
+        pattern: &LoadPattern,
+        dataset: &DataSet,
+        mut sink: F,
+    ) -> LoadReport
+    where
+        F: FnMut(usize, &crate::datagen::VehicleZip),
+    {
+        let schedule = pattern.send_times();
+        let origin = self.clock.now_s();
+        let sent_series = self
+            .tsdb
+            .as_ref()
+            .map(|db| db.series("load_sent", &[]));
+        let bytes_series = self
+            .tsdb
+            .as_ref()
+            .map(|db| db.series("load_bytes", &[]));
+        let mut report = LoadReport {
+            requested: schedule.len() as u64,
+            sent: 0,
+            bytes: 0,
+            start_s: f64::NAN,
+            end_s: f64::NAN,
+            max_lateness_s: 0.0,
+        };
+        for (i, &t_due) in schedule.iter().enumerate() {
+            let now_rel = self.clock.now_s() - origin;
+            if t_due > now_rel {
+                self.clock.sleep_s(t_due - now_rel);
+            }
+            let now = self.clock.now_s();
+            let lateness = (now - origin - t_due).max(0.0);
+            report.max_lateness_s = report.max_lateness_s.max(lateness);
+            let payload = dataset.payload(i);
+            sink(i, payload);
+            if report.sent == 0 {
+                report.start_s = now;
+            }
+            report.end_s = now;
+            report.sent += 1;
+            report.bytes += payload.zip_bytes.len() as u64;
+            if let Some(s) = &sent_series {
+                s.push(now, 1.0);
+            }
+            if let Some(s) = &bytes_series {
+                s.push(now, payload.zip_bytes.len() as f64);
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::DataSetSpec;
+    use crate::util::clock::ScaledClock;
+
+    #[test]
+    fn rate_at_interpolates() {
+        let p = LoadPattern::ramp(120.0, 0.0, 40.0);
+        assert_eq!(p.rate_at(0.0), 0.0);
+        assert!((p.rate_at(60.0) - 20.0).abs() < 1e-9);
+        assert!((p.rate_at(119.999) - 40.0).abs() < 1e-3);
+        assert_eq!(p.rate_at(130.0), 0.0);
+    }
+
+    #[test]
+    fn paper_ramp_total_records() {
+        // the paper's experiment: 120 s ramp 0 → 40 rps = 2400 records
+        let p = LoadPattern::ramp(120.0, 0.0, 40.0);
+        assert_eq!(p.total_records(), 2400);
+    }
+
+    #[test]
+    fn steady_send_times_evenly_spaced() {
+        let p = LoadPattern::steady(5.0, 2.0);
+        let times = p.send_times();
+        assert_eq!(times.len(), 10);
+        assert!((times[0] - 0.5).abs() < 1e-9);
+        assert!((times[9] - 5.0).abs() < 1e-9);
+        for w in times.windows(2) {
+            assert!((w[1] - w[0] - 0.5).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ramp_send_times_match_cumulative_area() {
+        let p = LoadPattern::ramp(120.0, 0.0, 40.0);
+        let times = p.send_times();
+        assert_eq!(times.len(), 2400);
+        // k-th send time satisfies area(t_k) == k+1: area(t) = t^2/6 here
+        for (k, &t) in times.iter().enumerate() {
+            let area = t * t * (40.0 / 120.0) / 2.0;
+            assert!(
+                (area - (k + 1) as f64).abs() < 1e-6,
+                "k={k} t={t} area={area}"
+            );
+        }
+        // monotone non-decreasing
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn multi_segment_send_times_continuous() {
+        let p = LoadPattern::steady(10.0, 1.0).then(10.0, 1.0, 3.0);
+        let times = p.send_times();
+        assert_eq!(times.len() as u64, p.total_records());
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        assert!(*times.last().unwrap() <= 20.0 + 1e-9);
+    }
+
+    #[test]
+    fn zero_rate_segment_sends_nothing() {
+        let p = LoadPattern::steady(10.0, 0.0).then(1.0, 5.0, 5.0);
+        let times = p.send_times();
+        assert_eq!(times.len(), 5);
+        assert!(times.iter().all(|&t| t >= 10.0));
+    }
+
+    #[test]
+    fn descending_ramp() {
+        let p = LoadPattern::ramp(10.0, 10.0, 0.0);
+        let times = p.send_times();
+        assert_eq!(times.len() as u64, p.total_records());
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+        // density should be higher early: first half has more sends
+        let first_half = times.iter().filter(|&&t| t < 5.0).count();
+        assert!(first_half > times.len() / 2);
+    }
+
+    #[test]
+    fn from_json() {
+        let j = Json::parse(
+            r#"{"segments": [{"duration_s": 120, "start_rps": 0, "end_rps": 40}]}"#,
+        )
+        .unwrap();
+        let p = LoadPattern::from_json(&j).unwrap();
+        assert_eq!(p, LoadPattern::ramp(120.0, 0.0, 40.0));
+        assert!(LoadPattern::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(
+            r#"{"segments": [{"duration_s": -1, "start_rps": 0, "end_rps": 1}]}"#,
+        )
+        .unwrap();
+        assert!(LoadPattern::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn generator_delivers_all_records() {
+        let clock = ScaledClock::new(10_000.0); // fast
+        let ds = DataSet::generate(DataSetSpec {
+            payloads: 8,
+            records_per_subsystem: 2,
+            bad_rate: 0.0,
+            seed: 1,
+        });
+        let p = LoadPattern::steady(10.0, 20.0); // 200 records
+        let gen = LoadGenerator::new(clock);
+        let mut got = 0u64;
+        let report = gen.run(&p, &ds, |_, payload| {
+            got += 1;
+            assert!(!payload.zip_bytes.is_empty());
+        });
+        assert_eq!(report.sent, 200);
+        assert_eq!(got, 200);
+        assert_eq!(report.requested, 200);
+        assert!(report.bytes > 0);
+    }
+
+    #[test]
+    fn generator_pacing_accuracy() {
+        // At a modest wall rate the achieved rate should track the request.
+        let clock = ScaledClock::new(100.0);
+        let ds = DataSet::generate(DataSetSpec {
+            payloads: 4,
+            records_per_subsystem: 1,
+            bad_rate: 0.0,
+            seed: 2,
+        });
+        let p = LoadPattern::steady(20.0, 10.0); // 200 records, 2s wall
+        let gen = LoadGenerator::new(clock);
+        let report = gen.run(&p, &ds, |_, _| {});
+        let err = (report.achieved_rps() - 10.0).abs() / 10.0;
+        assert!(err < 0.05, "rate error {err}");
+    }
+
+    #[test]
+    fn generator_logs_to_tsdb() {
+        let clock = ScaledClock::new(100_000.0);
+        let db = Tsdb::new();
+        let ds = DataSet::generate(DataSetSpec {
+            payloads: 2,
+            records_per_subsystem: 1,
+            bad_rate: 0.0,
+            seed: 3,
+        });
+        let p = LoadPattern::steady(5.0, 4.0);
+        let gen = LoadGenerator::new(clock).with_tsdb(db.clone());
+        gen.run(&p, &ds, |_, _| {});
+        assert_eq!(db.sum_range("load_sent", &[], 0.0, f64::MAX), 20.0);
+        assert!(db.sum_range("load_bytes", &[], 0.0, f64::MAX) > 0.0);
+    }
+}

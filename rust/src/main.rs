@@ -1,0 +1,379 @@
+//! `plantd` — the wind-tunnel CLI (the PlantD-Studio analog).
+//!
+//! Subcommands:
+//!
+//! ```text
+//! plantd generate  [--payloads N] [--records N] [--seed S]
+//!     synthesize a telematics dataset and print its stats
+//! plantd experiment [--variant NAME|all] [--scale X] [--duration S] [--peak RPS]
+//!     run the wind-tunnel ramp experiment(s); prints Table III rows
+//! plantd fit       (runs experiments, then prints Table I)
+//! plantd project   [--forecast nominal|high] [--out DIR]
+//!     print/write the §V.G traffic projection (Fig. 5 data)
+//! plantd simulate  [--forecast nominal|high|both] [--paper-twins] [--out DIR]
+//!     year-long what-if simulations; prints Table II (Figs. 6–7 CSVs)
+//! plantd retention [--months-a 3] [--months-b 6]
+//!     storage-policy what-if; prints Table IV
+//! plantd resources (demo of the declarative resource registry)
+//! plantd demo      [--out DIR] [--scale X]
+//!     the full paper reproduction: experiments → twins → simulations →
+//!     retention → all figure CSVs
+//! ```
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use plantd::bizsim::{monthly_costs, simulate_batch, CostSpec, SloSpec};
+use plantd::datagen::{DataSet, DataSetSpec};
+use plantd::experiment::{Experiment, ExperimentHarness, ExperimentRecord};
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::report;
+use plantd::runtime::{default_backend, SimBackend};
+use plantd::traffic::TrafficModel;
+use plantd::twin::TwinParams;
+use plantd::util::cli::Args;
+use plantd::util::units;
+
+const HELP: &str = "plantd — a data-pipeline wind tunnel (PlantD reproduction)
+
+USAGE: plantd <subcommand> [options]
+
+SUBCOMMANDS
+  generate    synthesize a telematics dataset (--payloads, --records, --seed)
+  experiment  run wind-tunnel ramp experiments   -> Table III + fig8 CSVs
+  fit         experiments + twin fitting         -> Table I
+  project     traffic projections                -> Fig. 5 CSVs
+  simulate    year-long what-if simulations      -> Table II + Figs. 6-7
+  retention   storage-policy what-if             -> Table IV
+  resources   demo the declarative resource registry
+  demo        the full paper reproduction (all of the above)
+
+COMMON OPTIONS
+  --variant blocking-write|no-blocking-write|cpu-limited|all
+  --scale X          clock scale, virtual s per wall s (default 60)
+  --duration S       ramp duration, virtual s (default 120)
+  --peak RPS         ramp peak rate (default 40)
+  --forecast nominal|high|both
+  --paper-twins      use the published Table I parameters (skip experiments)
+  --native           use the pure-Rust evaluator instead of PJRT artifacts
+  --artifacts DIR    artifact directory (default: artifacts)
+  --out DIR          output directory for CSVs (default: out)
+";
+
+fn main() -> ExitCode {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let result = match sub.as_str() {
+        "generate" => cmd_generate(&args),
+        "experiment" => cmd_experiment(&args).map(|_| ()),
+        "fit" => cmd_fit(&args),
+        "project" => cmd_project(&args),
+        "simulate" => cmd_simulate(&args),
+        "retention" => cmd_retention(&args),
+        "resources" => cmd_resources(),
+        "demo" => cmd_demo(&args),
+        "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown subcommand '{other}' (try `plantd help`)"
+        )),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type CmdResult = Result<(), anyhow::Error>;
+
+fn out_dir(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.opt_or("out", "out"))
+}
+
+fn backend(args: &Args) -> Box<dyn SimBackend> {
+    if args.flag("native") {
+        Box::new(plantd::runtime::native::NativeBackend)
+    } else {
+        default_backend(Path::new(&args.opt_or("artifacts", "artifacts")))
+    }
+}
+
+fn cmd_generate(args: &Args) -> CmdResult {
+    let spec = DataSetSpec {
+        payloads: args.opt_u64("payloads", 64).map_err(anyhow::Error::msg)? as usize,
+        records_per_subsystem: args.opt_u64("records", 20).map_err(anyhow::Error::msg)?
+            as usize,
+        bad_rate: args.opt_f64("bad-rate", 0.01).map_err(anyhow::Error::msg)?,
+        seed: args.opt_u64("seed", 0xD5).map_err(anyhow::Error::msg)?,
+    };
+    let ds = DataSet::generate(spec.clone());
+    println!(
+        "dataset: {} payloads × {} records/subsystem × 5 subsystems",
+        spec.payloads, spec.records_per_subsystem
+    );
+    println!(
+        "total {} ({} mean/payload), bad-rate {:.1}%",
+        units::human_bytes(ds.total_bytes()),
+        units::human_bytes(ds.mean_payload_bytes() as u64),
+        spec.bad_rate * 100.0
+    );
+    Ok(())
+}
+
+/// The paper's ramp: 120 s, 0 → 40 rec/s (2400 transmissions).
+fn paper_pattern(args: &Args) -> Result<LoadPattern, anyhow::Error> {
+    let duration = args.opt_f64("duration", 120.0).map_err(anyhow::Error::msg)?;
+    let peak = args.opt_f64("peak", 40.0).map_err(anyhow::Error::msg)?;
+    Ok(LoadPattern::ramp(duration, 0.0, peak))
+}
+
+fn variants_for(args: &Args) -> Result<Vec<VariantConfig>, anyhow::Error> {
+    Ok(match args.opt_or("variant", "all").as_str() {
+        "all" => VariantConfig::paper_variants(),
+        "blocking-write" => vec![VariantConfig::blocking_write()],
+        "no-blocking-write" => vec![VariantConfig::no_blocking_write()],
+        "cpu-limited" => vec![VariantConfig::cpu_limited()],
+        other => anyhow::bail!("unknown variant '{other}'"),
+    })
+}
+
+fn run_experiments(
+    args: &Args,
+) -> Result<(ExperimentHarness, Vec<ExperimentRecord>), anyhow::Error> {
+    let scale = args.opt_f64("scale", 60.0).map_err(anyhow::Error::msg)?;
+    let harness = ExperimentHarness::new(scale);
+    let pattern = paper_pattern(args)?;
+    let dataset = DataSet::generate(DataSetSpec {
+        payloads: 64,
+        records_per_subsystem: 8,
+        bad_rate: 0.01,
+        seed: 0xD5,
+    });
+    let exp = Experiment::new("telematics-ramp", pattern, dataset);
+    let mut records = Vec::new();
+    for cfg in variants_for(args)? {
+        eprintln!(
+            "running {} (ramp {} records, scale {scale}x)...",
+            cfg.name,
+            exp.pattern.total_records()
+        );
+        let rec = harness.run(&cfg, &exp)?;
+        eprintln!(
+            "  drained in {} virtual ({:.2} rec/s)",
+            units::human_duration(rec.duration_s),
+            rec.mean_throughput_rps
+        );
+        records.push(rec);
+    }
+    Ok((harness, records))
+}
+
+fn cmd_experiment(args: &Args) -> Result<Vec<ExperimentRecord>, anyhow::Error> {
+    let (harness, records) = run_experiments(args)?;
+    println!("{}", report::table3_experiments(&records));
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    for rec in &records {
+        report::fig8_csv(&dir, &harness.tsdb, rec.variant, rec.started_s, rec.drained_s, 5.0)?;
+    }
+    println!("fig8 CSVs written to {}", dir.display());
+    Ok(records)
+}
+
+fn cmd_fit(args: &Args) -> CmdResult {
+    let records = cmd_experiment(args)?;
+    let twins: Vec<TwinParams> = records.iter().map(TwinParams::fit).collect();
+    println!("{}", report::table1_twins(&twins));
+    Ok(())
+}
+
+fn cmd_project(args: &Args) -> CmdResult {
+    let backend = backend(args);
+    let nominal = TrafficModel::nominal();
+    let high = TrafficModel::high();
+    let nl = backend.traffic(&nominal)?;
+    let hl = backend.traffic(&high)?;
+    println!("backend: {}", backend.name());
+    println!(
+        "Nominal: mean {:.1} rec/h, peak {:.1} rec/h",
+        nl.iter().sum::<f64>() / nl.len() as f64,
+        nl.iter().cloned().fold(f64::MIN, f64::max)
+    );
+    println!(
+        "High:    mean {:.1} rec/h, peak {:.1} rec/h",
+        hl.iter().sum::<f64>() / hl.len() as f64,
+        hl.iter().cloned().fold(f64::MIN, f64::max)
+    );
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    report::fig5_csvs(&dir, &nominal, &high, &nl, &hl)?;
+    println!("fig5 CSVs written to {}", dir.display());
+    Ok(())
+}
+
+fn paper_or_fitted_twins(args: &Args) -> Result<Vec<TwinParams>, anyhow::Error> {
+    if args.flag("paper-twins") {
+        Ok(TwinParams::paper_table1())
+    } else {
+        let (_, records) = run_experiments(args)?;
+        Ok(records.iter().map(TwinParams::fit).collect())
+    }
+}
+
+fn cmd_simulate(args: &Args) -> CmdResult {
+    let backend = backend(args);
+    let twins = paper_or_fitted_twins(args)?;
+    println!("{}", report::table1_twins(&twins));
+    let slo = SloSpec {
+        latency_limit_s: args
+            .opt_f64("slo-hours", 4.0)
+            .map_err(anyhow::Error::msg)?
+            * 3600.0,
+        min_fraction: args.opt_f64("slo-frac", 0.95).map_err(anyhow::Error::msg)?,
+    };
+    let forecasts: Vec<TrafficModel> = match args.opt_or("forecast", "both").as_str() {
+        "nominal" => vec![TrafficModel::nominal()],
+        "high" => vec![TrafficModel::high()],
+        "both" => vec![TrafficModel::nominal(), TrafficModel::high()],
+        other => anyhow::bail!("unknown forecast '{other}'"),
+    };
+    let mut all = Vec::new();
+    for forecast in &forecasts {
+        all.extend(simulate_batch(backend.as_ref(), &twins, forecast, &slo)?);
+    }
+    println!("{}", report::table2_simulations(&all));
+    let dir = out_dir(args);
+    std::fs::create_dir_all(&dir)?;
+    for r in &all {
+        report::fig6_csv(&dir, r)?;
+    }
+    // fig 7: blocking-write under Nominal, a high-traffic week (August)
+    if let Some(block_nom) = all
+        .iter()
+        .find(|r| r.twin.name.starts_with("blocking"))
+    {
+        report::fig7_csv(&dir, block_nom, 215, 4)?;
+    }
+    println!(
+        "fig6/fig7 CSVs written to {} (backend: {})",
+        dir.display(),
+        backend.name()
+    );
+    Ok(())
+}
+
+fn cmd_retention(args: &Args) -> CmdResult {
+    let backend = backend(args);
+    let load = backend.traffic(&TrafficModel::nominal())?;
+    let twins = TwinParams::paper_table1();
+    let noblock = &twins[1];
+    let base = CostSpec::default();
+    let months_a = args.opt_f64("months-a", 3.0).map_err(anyhow::Error::msg)?;
+    let months_b = args.opt_f64("months-b", 6.0).map_err(anyhow::Error::msg)?;
+    let spec_a = CostSpec {
+        retention_days: months_a * 30.4,
+        ..base
+    };
+    let spec_b = CostSpec {
+        retention_days: months_b * 30.4,
+        ..base
+    };
+    let a = monthly_costs(backend.as_ref(), &load, noblock.cost_per_hr, &spec_a)?;
+    let b = monthly_costs(backend.as_ref(), &load, noblock.cost_per_hr, &spec_b)?;
+    println!(
+        "{}",
+        report::table4_retention(
+            &a,
+            &b,
+            &format!("{months_a:.0} mo"),
+            &format!("{months_b:.0} mo")
+        )
+    );
+    Ok(())
+}
+
+fn cmd_resources() -> CmdResult {
+    use plantd::resources::{Kind, Registry};
+    use plantd::util::json::Json;
+    let reg = Registry::new();
+    reg.apply(
+        Kind::Schema,
+        "telematics",
+        Json::parse(r#"{"fields": []}"#).unwrap(),
+    );
+    reg.apply(
+        Kind::DataSet,
+        "fleet-day",
+        Json::parse(r#"{"schema": "telematics"}"#).unwrap(),
+    );
+    reg.apply(
+        Kind::LoadPattern,
+        "ramp-120s",
+        Json::parse(r#"{"segments": [{"duration_s": 120, "start_rps": 0, "end_rps": 40}]}"#)
+            .unwrap(),
+    );
+    reg.apply(Kind::Pipeline, "blocking-write", Json::parse("{}").unwrap());
+    reg.apply(
+        Kind::Experiment,
+        "ramp-1",
+        Json::parse(
+            r#"{"dataset": "fleet-day", "load_pattern": "ramp-120s", "pipeline": "blocking-write"}"#,
+        )
+        .unwrap(),
+    );
+    reg.reconcile();
+    for (kind, count) in reg.summary() {
+        if count > 0 {
+            for r in reg.list(kind) {
+                println!(
+                    "{:<12} {:<16} {:<10} {}",
+                    kind.as_str(),
+                    r.name,
+                    r.phase.as_str(),
+                    r.conditions.last().map(String::as_str).unwrap_or("")
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> CmdResult {
+    println!("== PlantD wind tunnel: full paper reproduction ==\n");
+    println!("-- Engineering experiments (Table III, Fig. 8) --");
+    let records = cmd_experiment(args)?;
+    let twins: Vec<TwinParams> = records.iter().map(TwinParams::fit).collect();
+    println!("\n-- Fitted digital twins (Table I) --");
+    println!("{}", report::table1_twins(&twins));
+    println!("-- Traffic projections (Fig. 5) --");
+    cmd_project(args)?;
+    println!("\n-- Business simulations (Table II, Figs. 6-7) --");
+    let backend = backend(args);
+    let slo = SloSpec::default();
+    let mut all = Vec::new();
+    for forecast in [TrafficModel::nominal(), TrafficModel::high()] {
+        all.extend(simulate_batch(backend.as_ref(), &twins, &forecast, &slo)?);
+    }
+    println!("{}", report::table2_simulations(&all));
+    let dir = out_dir(args);
+    for r in &all {
+        report::fig6_csv(&dir, r)?;
+    }
+    report::fig7_csv(&dir, &all[0], 215, 4)?;
+    println!("-- Storage-policy what-if (Table IV) --");
+    cmd_retention(args)?;
+    println!("all outputs in {}", dir.display());
+    Ok(())
+}

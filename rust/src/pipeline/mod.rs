@@ -1,0 +1,29 @@
+//! The pipeline-under-test substrate.
+//!
+//! PlantD measures *real* pipelines; this module provides both the generic
+//! machinery (the [`Stage`] trait and [`StageRunner`] threads, connected by
+//! [`bus::Topic`]s) and the paper's concrete example: the three-stage Honda
+//! telematics pipeline (§VI.A) —
+//!
+//! ```text
+//! HTTP ingest → unzipper_phase → [kafka] → v2x_phase → [kafka] → etl_phase → RDS
+//!                  (S3 put)                (parse bin,            (scrub, insert)
+//!                                           S3 put*)
+//! ```
+//!
+//! `*` the blocking-write defect: v2x_phase writes every parquet-like file
+//! synchronously to blob storage. The paper's three variants are all
+//! expressible as a [`VariantConfig`]:
+//!
+//! - `blocking-write`    — synchronous blob put on the v2x critical path;
+//! - `no-blocking-write` — puts routed through a background
+//!   [`blob::AsyncWriter`] (faster, but pays for an extra always-on
+//!   worker and bigger containers — the paper's ~9× $/hr);
+//! - `cpu-limited`       — Kubernetes-style CPU throttling of v2x_phase
+//!   (service times stretched by the throttle factor).
+
+mod stages;
+mod variant;
+
+pub use stages::{EtlStage, Stage, StageContext, StageRunner, UnzipperStage, V2xStage};
+pub use variant::{PipelineDeployment, PipelineHandle, VariantConfig, WriteMode};

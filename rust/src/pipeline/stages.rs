@@ -1,0 +1,658 @@
+//! Stage machinery and the three concrete Honda-telematics stages.
+//!
+//! Stages do *real* work — actual zip inflation, actual binary decoding,
+//! actual schema'd inserts — and additionally model the cloud service
+//! latencies (S3 puts, CPU time) through the shared scaled clock, so the
+//! wind tunnel measures a pipeline whose bottlenecks behave like the
+//! paper's (§VI.A), at any clock scale.
+
+use std::sync::Arc;
+
+use crate::blob::{AsyncWriter, BlobStore};
+use crate::bus::Topic;
+use crate::cloud::Container;
+use crate::datagen::{decode_subsystem_binary, SUBSYSTEMS};
+use crate::tablestore::{Table, Value};
+use crate::telemetry::{SeriesHandle, Span, SpanSink};
+use crate::util::clock::SharedClock;
+
+/// Message: one vehicle transmission (a zip) entering the pipeline.
+#[derive(Debug, Clone)]
+pub struct ZipMsg {
+    pub trace_id: u64,
+    /// Virtual time the load generator delivered this payload.
+    pub ingest_s: f64,
+    pub zip: Arc<Vec<u8>>,
+}
+
+/// Message: one extracted subsystem binary file.
+#[derive(Debug, Clone)]
+pub struct BinMsg {
+    pub trace_id: u64,
+    pub ingest_s: f64,
+    pub member_name: String,
+    pub data: Vec<u8>,
+}
+
+/// Message: parsed, parquet-like record batch headed for the warehouse.
+///
+/// Carries the *decoded* subsystem records, not warehouse rows: the
+/// long-format row expansion (with its string allocations) happens in
+/// etl_phase, keeping that CPU off the bottleneck v2x stage (§Perf).
+#[derive(Debug, Clone)]
+pub struct RowsMsg {
+    pub trace_id: u64,
+    pub ingest_s: f64,
+    pub subsys_idx: usize,
+    pub records: Vec<crate::datagen::SubsystemRecord>,
+    pub bytes: u64,
+}
+
+/// What a stage hands back to its runner for one input message.
+pub struct StageOutput<T> {
+    pub emit: Vec<T>,
+    /// Records this span processed (a stage may split/join records —
+    /// PlantD makes no assumption about cross-stage record ratios, §VII.A).
+    pub records: u64,
+    pub bytes: u64,
+    pub ok: bool,
+}
+
+/// Shared per-stage runtime context.
+#[derive(Clone)]
+pub struct StageContext {
+    pub clock: SharedClock,
+    pub spans: SpanSink,
+    pub container: Container,
+    /// CPU throttle multiplier (1.0 = unthrottled; the `cpu-limited`
+    /// variant stretches v2x service times by this factor, modeling a
+    /// Kubernetes CPU quota).
+    pub throttle: f64,
+}
+
+impl StageContext {
+    /// Burn `cpu_s` of CPU-bound service time (stretched by the throttle)
+    /// and meter it against the container. Returns virtual seconds spent.
+    pub fn burn_cpu(&self, cpu_s: f64) -> f64 {
+        let spent = cpu_s * self.throttle;
+        let t0 = self.clock.now_s();
+        self.clock.sleep_s(spent);
+        self.container
+            .record_usage(t0, spent, cpu_s.min(spent), self.container.requests.mem_gb);
+        spent
+    }
+}
+
+/// A pipeline stage: transform one input message into zero or more outputs.
+pub trait Stage: Send + 'static {
+    type In: Send + 'static;
+    type Out: Send + 'static;
+
+    fn name(&self) -> &'static str;
+    fn process(&mut self, input: Self::In, ctx: &StageContext) -> StageOutput<Self::Out>;
+    /// Called once after the input topic drains (flush buffers etc.).
+    fn finish(&mut self, _ctx: &StageContext) {}
+}
+
+/// Aggregate stats a stage runner returns when its input drains.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    pub spans: u64,
+    pub records: u64,
+    pub errors: u64,
+    pub busy_s: f64,
+    /// Virtual time of the last span completion.
+    pub last_end_s: f64,
+}
+
+/// Runs a stage on a dedicated thread until its input topic drains, then
+/// closes the output topic (exactly-once end-of-stream propagation).
+pub struct StageRunner;
+
+impl StageRunner {
+    pub fn spawn<S: Stage>(
+        mut stage: S,
+        input: Topic<S::In>,
+        output: Option<Topic<S::Out>>,
+        ctx: StageContext,
+    ) -> std::thread::JoinHandle<StageStats> {
+        std::thread::Builder::new()
+            .name(stage.name().to_string())
+            .spawn(move || {
+                let mut stats = StageStats::default();
+                while let Some(msg) = input.recv() {
+                    let t0 = ctx.clock.now_s();
+                    let out = stage.process(msg, &ctx);
+                    let t1 = ctx.clock.now_s();
+                    stats.spans += 1;
+                    stats.records += out.records;
+                    stats.busy_s += t1 - t0;
+                    stats.last_end_s = t1;
+                    if !out.ok {
+                        stats.errors += 1;
+                    }
+                    ctx.spans.push(Span {
+                        trace_id: 0,
+                        stage: stage.name(),
+                        start_s: t0,
+                        duration_s: t1 - t0,
+                        records: out.records,
+                        bytes: out.bytes,
+                        ok: out.ok,
+                    });
+                    if let Some(topic) = &output {
+                        for o in out.emit {
+                            if topic.send(o).is_err() {
+                                break; // downstream closed early (abort)
+                            }
+                        }
+                    }
+                }
+                stage.finish(&ctx);
+                if let Some(topic) = &output {
+                    topic.close();
+                }
+                stats
+            })
+            .expect("spawn stage thread")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// unzipper_phase
+// ---------------------------------------------------------------------------
+
+/// Stage 1: receives vehicle zips, persists the raw zip to blob storage
+/// (off the critical path, as the real pipeline does with multipart
+/// uploads), inflates it, and forwards each subsystem binary.
+pub struct UnzipperStage {
+    /// CPU service time per zip (inflate + enqueue).
+    pub service_s: f64,
+    /// Raw-zip persistence sink.
+    pub persist: Arc<AsyncWriter>,
+    /// Optional cumulative-latency series (span end − ingest time) — the
+    /// per-stage latency curves of Fig. 8.
+    pub cum_latency: Option<SeriesHandle>,
+}
+
+impl Stage for UnzipperStage {
+    type In = ZipMsg;
+    type Out = BinMsg;
+
+    fn name(&self) -> &'static str {
+        "unzipper_phase"
+    }
+
+    fn process(&mut self, input: ZipMsg, ctx: &StageContext) -> StageOutput<BinMsg> {
+        ctx.burn_cpu(self.service_s);
+        if let Some(series) = &self.cum_latency {
+            let now = ctx.clock.now_s();
+            series.push(now, now - input.ingest_s);
+        }
+        let bytes = input.zip.len() as u64;
+        // persist the raw transmission (async: not on the critical path)
+        self.persist
+            .submit(format!("raw/{}.zip", input.trace_id), (*input.zip).clone());
+        // real inflation
+        match crate::datagen::package::unpack_vehicle_zip(&input.zip) {
+            Ok(members) => {
+                let emit: Vec<BinMsg> = members
+                    .into_iter()
+                    .map(|(member_name, data)| BinMsg {
+                        trace_id: input.trace_id,
+                        ingest_s: input.ingest_s,
+                        member_name,
+                        data,
+                    })
+                    .collect();
+                StageOutput {
+                    records: 1, // one vehicle transmission
+                    bytes,
+                    ok: true,
+                    emit,
+                }
+            }
+            Err(_) => StageOutput {
+                emit: vec![],
+                records: 1,
+                bytes,
+                ok: false,
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// v2x_phase
+// ---------------------------------------------------------------------------
+
+/// How v2x_phase writes its parquet-like output to blob storage.
+pub enum V2xWrite {
+    /// Synchronous put on the critical path (the paper's defect).
+    Blocking(BlobStore),
+    /// Background uploader (the paper's fix).
+    Async(Arc<AsyncWriter>),
+}
+
+/// Stage 2: parses each custom binary into rows ("parquet conversion"),
+/// backs the converted file up to blob storage, forwards the rows.
+pub struct V2xStage {
+    /// CPU service time per binary file (decode + columnarize).
+    pub parse_s: f64,
+    pub write: V2xWrite,
+    /// Optional cumulative-latency series (Fig. 8).
+    pub cum_latency: Option<SeriesHandle>,
+}
+
+impl Stage for V2xStage {
+    type In = BinMsg;
+    type Out = RowsMsg;
+
+    fn name(&self) -> &'static str {
+        "v2x_phase"
+    }
+
+    fn process(&mut self, input: BinMsg, ctx: &StageContext) -> StageOutput<RowsMsg> {
+        let bytes = input.data.len() as u64;
+        let parsed = decode_subsystem_binary(&input.data);
+        // "parquet" backup — the architecture-defining write. CPU service
+        // (throttled) and the blocking put's I/O wait (not throttled) are
+        // charged as ONE clock sleep: a single precise wait instead of two
+        // half-millisecond spin tails per file (§Perf iteration 1).
+        let key = format!("parquet/{}/{}", input.trace_id, input.member_name);
+        let payload = input.data.clone(); // converted file, same order of size
+        let cpu_s = self.parse_s * ctx.throttle;
+        let io_s = match &self.write {
+            V2xWrite::Blocking(store) => store.put_nosleep(&key, payload),
+            V2xWrite::Async(writer) => {
+                writer.submit(key, payload);
+                0.0
+            }
+        };
+        let t0 = ctx.clock.now_s();
+        ctx.clock.sleep_s(cpu_s + io_s);
+        ctx.container
+            .record_usage(t0, cpu_s + io_s, self.parse_s.min(cpu_s), ctx.container.requests.mem_gb);
+        if let Some(series) = &self.cum_latency {
+            let now = ctx.clock.now_s();
+            series.push(now, now - input.ingest_s);
+        }
+        let (ok, emit) = match parsed {
+            Ok((subsys_idx, records)) => (
+                true,
+                vec![RowsMsg {
+                    trace_id: input.trace_id,
+                    ingest_s: input.ingest_s,
+                    subsys_idx,
+                    records,
+                    bytes,
+                }],
+            ),
+            Err(_) => (false, vec![]),
+        };
+        StageOutput {
+            emit,
+            records: 1, // one subsystem file
+            bytes,
+            ok,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// etl_phase
+// ---------------------------------------------------------------------------
+
+/// Stage 3: scrubs and loads rows into the warehouse table.
+pub struct EtlStage {
+    /// CPU service time per row batch.
+    pub service_s: f64,
+    pub table: Table,
+    /// Optional cumulative (end-to-end) latency series (Fig. 8; also the
+    /// source of the twin's per-record latency distribution).
+    pub cum_latency: Option<SeriesHandle>,
+}
+
+impl EtlStage {
+    /// The warehouse schema the paper's ETL loads into (long format:
+    /// one row per telemetry sample field, scrub-checked).
+    pub fn warehouse_table(clock: SharedClock) -> Table {
+        use crate::tablestore::{ColType, Column, InsertLatency};
+        Table::new(
+            "telemetry_warehouse",
+            vec![
+                Column::new("vin", ColType::Text),
+                Column::new("ts_ms", ColType::Int).with_range(0.0, 4e12),
+                Column::new("subsystem", ColType::Text),
+                Column::new("metric", ColType::Text),
+                Column::new("value", ColType::Float).with_range(-1e9, 1e9),
+            ],
+            clock,
+            InsertLatency {
+                per_batch_s: 0.001,
+                per_row_s: 0.00002,
+            },
+        )
+    }
+}
+
+impl Stage for EtlStage {
+    type In = RowsMsg;
+    type Out = (); // terminal
+
+    fn name(&self) -> &'static str {
+        "etl_phase"
+    }
+
+    fn process(&mut self, input: RowsMsg, ctx: &StageContext) -> StageOutput<()> {
+        ctx.burn_cpu(self.service_s);
+        // long-format row expansion happens here, off the bottleneck stage
+        let (subsys_name, fields) = SUBSYSTEMS[input.subsys_idx];
+        let mut rows = Vec::with_capacity(input.records.len() * fields.len());
+        for r in &input.records {
+            for (fi, fname) in fields.iter().enumerate() {
+                rows.push(vec![
+                    Value::Text(r.vin.clone()),
+                    Value::Int(r.timestamp_ms as i64),
+                    Value::Text(subsys_name.to_string()),
+                    Value::Text(fname.to_string()),
+                    Value::Float(r.values[fi] as f64),
+                ]);
+            }
+        }
+        let n = rows.len() as u64;
+        let (_inserted, _scrubbed) = self.table.insert_batch(rows);
+        if let Some(series) = &self.cum_latency {
+            let now = ctx.clock.now_s();
+            series.push(now, now - input.ingest_s);
+        }
+        StageOutput {
+            emit: vec![],
+            records: 1, // one converted file loaded
+            bytes: n * 40,
+            ok: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blob::BlobLatency;
+    use crate::cloud::{Cloud, Resources};
+    use crate::datagen::package::build_vehicle_zip;
+    use crate::util::clock::ScaledClock;
+    use crate::util::rng::Rng;
+
+    fn test_ctx(throttle: f64) -> (StageContext, SharedClock) {
+        let clock = ScaledClock::new(50_000.0);
+        let cloud = Cloud::new();
+        cloud.add_node("n", Resources::new(16.0, 64.0), 0.4);
+        let container = cloud.deploy("c", "ns", "n", Resources::new(1.0, 1.0));
+        (
+            StageContext {
+                clock: clock.clone(),
+                spans: SpanSink::new(),
+                container,
+                throttle,
+            },
+            clock,
+        )
+    }
+
+    fn store(clock: &SharedClock) -> BlobStore {
+        BlobStore::new(
+            clock.clone(),
+            BlobLatency {
+                base_s: 0.01,
+                per_mb_s: 0.0,
+            },
+        )
+    }
+
+    fn zip_msg() -> ZipMsg {
+        let mut rng = Rng::new(3);
+        let vz = build_vehicle_zip("VIN01234567890123", 1_000, 10, 0.0, &mut rng);
+        ZipMsg {
+            trace_id: 7,
+            ingest_s: 0.0,
+            zip: Arc::new(vz.zip_bytes),
+        }
+    }
+
+    #[test]
+    fn unzipper_emits_five_bins_and_persists() {
+        let (ctx, clock) = test_ctx(1.0);
+        let s = store(&clock);
+        let persist = Arc::new(AsyncWriter::new(s.clone(), 64));
+        let mut stage = UnzipperStage {
+            service_s: 0.001,
+            persist: persist.clone(),
+            cum_latency: None,
+        };
+        let out = stage.process(zip_msg(), &ctx);
+        assert_eq!(out.emit.len(), 5);
+        assert!(out.ok);
+        assert_eq!(out.records, 1);
+        drop(stage);
+        // wait for the async persist to land
+        let persist = Arc::try_unwrap(persist).ok().expect("sole owner");
+        assert_eq!(persist.shutdown(), 1);
+        assert!(s.contains("raw/7.zip"));
+    }
+
+    #[test]
+    fn unzipper_flags_garbage_zip() {
+        let (ctx, clock) = test_ctx(1.0);
+        let persist = Arc::new(AsyncWriter::new(store(&clock), 8));
+        let mut stage = UnzipperStage {
+            service_s: 0.0,
+            persist,
+            cum_latency: None,
+        };
+        let out = stage.process(
+            ZipMsg {
+                trace_id: 1,
+                ingest_s: 0.0,
+                zip: Arc::new(b"garbage".to_vec()),
+            },
+            &ctx,
+        );
+        assert!(!out.ok);
+        assert!(out.emit.is_empty());
+    }
+
+    #[test]
+    fn v2x_parses_rows_blocking_write_lands_synchronously() {
+        let (ctx, clock) = test_ctx(1.0);
+        let s = store(&clock);
+        let persist = Arc::new(AsyncWriter::new(s.clone(), 64));
+        let mut unzipper = UnzipperStage {
+            service_s: 0.0,
+            persist,
+            cum_latency: None,
+        };
+        let bins = unzipper.process(zip_msg(), &ctx).emit;
+        let mut v2x = V2xStage {
+            parse_s: 0.001,
+            write: V2xWrite::Blocking(s.clone()),
+            cum_latency: None,
+        };
+        let out = v2x.process(bins[0].clone(), &ctx);
+        assert!(out.ok);
+        assert_eq!(out.emit.len(), 1);
+        // 10 decoded samples, expanded to rows later by etl
+        assert_eq!(out.emit[0].records.len(), 10);
+        // blocking: the parquet object exists immediately after process
+        // returns (no waiting on any uploader)
+        assert!(s.contains(&format!("parquet/7/{}", bins[0].member_name)));
+    }
+
+    #[test]
+    fn v2x_flags_corrupt_binary() {
+        let (ctx, clock) = test_ctx(1.0);
+        let s = store(&clock);
+        let mut v2x = V2xStage {
+            parse_s: 0.0,
+            write: V2xWrite::Blocking(s),
+            cum_latency: None,
+        };
+        let out = v2x.process(
+            BinMsg {
+                trace_id: 1,
+                ingest_s: 0.0,
+                member_name: "x.bin".into(),
+                data: vec![0u8; 64],
+            },
+            &ctx,
+        );
+        assert!(!out.ok);
+        assert!(out.emit.is_empty());
+    }
+
+    #[test]
+    fn etl_inserts_and_scrubs() {
+        let (ctx, clock) = test_ctx(1.0);
+        let table = EtlStage::warehouse_table(clock.clone());
+        let mut etl = EtlStage {
+            service_s: 0.0,
+            table: table.clone(),
+            cum_latency: None,
+        };
+        use crate::datagen::SubsystemRecord;
+        // speed subsystem: 2 fields/record; one record carries a NaN
+        let records = vec![
+            SubsystemRecord {
+                timestamp_ms: 1,
+                vin: "V".into(),
+                values: vec![88.0, 0.5],
+            },
+            SubsystemRecord {
+                timestamp_ms: 2,
+                vin: "V".into(),
+                values: vec![f32::NAN, 0.1], // corrupt → scrubbed
+            },
+        ];
+        etl.process(
+            RowsMsg {
+                trace_id: 1,
+                ingest_s: 0.0,
+                subsys_idx: 2, // speed
+                records,
+                bytes: 100,
+            },
+            &ctx,
+        );
+        assert_eq!(table.row_count(), 3);
+        assert_eq!(table.scrubbed_count(), 1);
+    }
+
+    #[test]
+    fn throttle_stretches_service_time() {
+        let (ctx_full, _) = test_ctx(1.0);
+        let (ctx_throttled, _) = test_ctx(8.0);
+        let spent_full = ctx_full.burn_cpu(0.01);
+        let spent_thr = ctx_throttled.burn_cpu(0.01);
+        assert!((spent_full - 0.01).abs() < 1e-12);
+        assert!((spent_thr - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn runner_propagates_eos_and_counts() {
+        let (ctx, clock) = test_ctx(1.0);
+        let s = store(&clock);
+        let persist = Arc::new(AsyncWriter::new(s, 64));
+        let input: Topic<ZipMsg> = Topic::new("ingest", 100);
+        let output: Topic<BinMsg> = Topic::new("bins", 100);
+        let h = StageRunner::spawn(
+            UnzipperStage {
+                service_s: 0.0001,
+                persist,
+                cum_latency: None,
+            },
+            input.clone(),
+            Some(output.clone()),
+            ctx.clone(),
+        );
+        for _ in 0..4 {
+            input.send(zip_msg()).unwrap();
+        }
+        input.close();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.spans, 4);
+        assert_eq!(stats.records, 4);
+        assert_eq!(stats.errors, 0);
+        assert!(output.is_closed());
+        let mut n = 0;
+        while output.recv().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 20); // 4 zips × 5 members
+        assert_eq!(ctx.spans.len(), 4);
+    }
+
+    #[test]
+    fn full_three_stage_chain_processes_all_records() {
+        let (ctx, clock) = test_ctx(1.0);
+        let s = store(&clock);
+        let persist = Arc::new(AsyncWriter::new(s.clone(), 256));
+        let ingest: Topic<ZipMsg> = Topic::new("ingest", 100);
+        let bins: Topic<BinMsg> = Topic::new("bins", 100);
+        let rows: Topic<RowsMsg> = Topic::new("rows", 100);
+        let table = EtlStage::warehouse_table(clock.clone());
+
+        let h1 = StageRunner::spawn(
+            UnzipperStage {
+                service_s: 0.0001,
+                persist,
+                cum_latency: None,
+            },
+            ingest.clone(),
+            Some(bins.clone()),
+            ctx.clone(),
+        );
+        let h2 = StageRunner::spawn(
+            V2xStage {
+                parse_s: 0.0001,
+                write: V2xWrite::Blocking(s.clone()),
+                cum_latency: None,
+            },
+            bins,
+            Some(rows.clone()),
+            ctx.clone(),
+        );
+        let h3 = StageRunner::spawn(
+            EtlStage {
+                service_s: 0.0001,
+                table: table.clone(),
+                cum_latency: None,
+            },
+            rows,
+            None,
+            ctx.clone(),
+        );
+
+        let n_zips = 6;
+        for i in 0..n_zips {
+            let mut m = zip_msg();
+            m.trace_id = i; // distinct traces → distinct blob keys
+            ingest.send(m).unwrap();
+        }
+        ingest.close();
+        let s1 = h1.join().unwrap();
+        let s2 = h2.join().unwrap();
+        let s3 = h3.join().unwrap();
+        assert_eq!(s1.spans, n_zips);
+        assert_eq!(s2.spans, n_zips * 5);
+        assert_eq!(s3.spans, n_zips * 5);
+        // every sample row landed or was scrubbed: 6 zips × 5 files × 10
+        // samples × n_fields rows
+        let expected_rows: u64 = SUBSYSTEMS
+            .iter()
+            .map(|(_, f)| f.len() as u64 * 10 * n_zips)
+            .sum();
+        assert_eq!(table.row_count() + table.scrubbed_count(), expected_rows);
+        // blobs: one raw zip per transmission + one parquet per file
+        assert_eq!(s.object_count() as u64, n_zips + n_zips * 5);
+    }
+}

@@ -1,0 +1,366 @@
+//! Report rendering: regenerate every table and figure of the paper's
+//! evaluation from live measurement/simulation objects.
+//!
+//! Tables render as ASCII (printed by the CLI and benches, captured in
+//! EXPERIMENTS.md); figures render as CSV series under `out/` ready for
+//! any plotting tool (one file per paper figure, columns labeled).
+
+use std::path::Path;
+
+use crate::bizsim::{MonthlyCost, SimulationResult};
+use crate::experiment::ExperimentRecord;
+use crate::telemetry::Tsdb;
+use crate::traffic::TrafficModel;
+use crate::twin::TwinParams;
+use crate::util::csv::CsvDoc;
+use crate::util::table::{fnum, Table};
+
+/// TABLE I: parameters of the fitted twin models.
+pub fn table1_twins(twins: &[TwinParams]) -> String {
+    let mut t = Table::new(&["Model", "max rec/s", "$/hr", "avg latency", "policy"])
+        .with_title("TABLE I: Parameters of twin models derived from experiments");
+    for tw in twins {
+        t.row(vec![
+            tw.name.clone(),
+            fnum(tw.max_rps, 2),
+            fnum(tw.cost_per_hr * 100.0, 2), // cents, as the paper prints
+            fnum(tw.avg_latency_s, 2),
+            tw.policy.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// TABLE II: summary of twin × forecast simulations.
+pub fn table2_simulations(results: &[SimulationResult]) -> String {
+    let mut t = Table::new(&[
+        "run",
+        "cost ($)",
+        "lat median (s)",
+        "lat mean (s)",
+        "backlog (s)",
+        "thr mean (rec/h)",
+        "thr max (rec/h)",
+        "% latency met",
+        "SLO met",
+    ])
+    .with_title("TABLE II: Simulations of pipeline models under traffic forecasts");
+    for r in results {
+        t.row(vec![
+            format!("{} {}", r.forecast.to_lowercase(), short_name(&r.twin.name)),
+            fnum(r.cost_usd, 2),
+            fnum(r.latency_median_s, 2),
+            fnum(r.latency_mean_s, 2),
+            fnum(r.backlog_latency_s, 2),
+            fnum(r.thr_mean_rec_hr, 1),
+            fnum(r.thr_max_rec_hr, 1),
+            fnum(r.pct_latency_met * 100.0, 2),
+            r.slo_met.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// TABLE III: wind-tunnel experiment results (costs in cents, like the
+/// paper).
+pub fn table3_experiments(records: &[ExperimentRecord]) -> String {
+    let mut t = Table::new(&[
+        "experiment",
+        "mean thr (rec/s)",
+        "mean lat (s)",
+        "median lat (s)",
+        "exp len (s)",
+        "total cost (c)",
+        "cost/hr (c)",
+    ])
+    .with_title("TABLE III: Experiment results for three pipeline variants");
+    for r in records {
+        t.row(vec![
+            r.variant.to_string(),
+            fnum(r.mean_throughput_rps, 2),
+            fnum(r.latency_nq_mean_s, 2),
+            fnum(r.latency_nq_median_s, 2),
+            fnum(r.duration_s, 1),
+            fnum(r.total_cost_usd * 100.0, 2),
+            fnum(r.cost_per_hr_usd * 100.0, 2),
+        ]);
+    }
+    t.render()
+}
+
+/// TABLE IV: monthly costs under two retention policies.
+pub fn table4_retention(
+    months_a: &[MonthlyCost],
+    months_b: &[MonthlyCost],
+    label_a: &str,
+    label_b: &str,
+) -> String {
+    assert_eq!(months_a.len(), months_b.len());
+    let mut t = Table::new(&[
+        "month",
+        "cloud",
+        "net",
+        &format!("storage ({label_a})"),
+        &format!("total ({label_a})"),
+        &format!("storage ({label_b})"),
+        &format!("total ({label_b})"),
+    ])
+    .with_title("TABLE IV: Monthly costs under retention policies ($)");
+    for (a, b) in months_a.iter().zip(months_b) {
+        t.row(vec![
+            a.month.to_string(),
+            fnum(a.cloud, 2),
+            fnum(a.network, 2),
+            fnum(a.storage, 2),
+            fnum(a.total(), 2),
+            fnum(b.storage, 2),
+            fnum(b.total(), 2),
+        ]);
+    }
+    let ta = crate::bizsim::annual_totals(months_a);
+    let tb = crate::bizsim::annual_totals(months_b);
+    t.row(vec![
+        "total".into(),
+        fnum(ta.cloud, 2),
+        fnum(ta.network, 2),
+        fnum(ta.storage, 2),
+        fnum(ta.total(), 2),
+        fnum(tb.storage, 2),
+        fnum(tb.total(), 2),
+    ]);
+    t.render()
+}
+
+fn short_name(variant: &str) -> &str {
+    match variant {
+        "blocking-write" => "block",
+        "no-blocking-write" => "non-block",
+        "cpu-limited" => "cpu-lim",
+        other => other,
+    }
+}
+
+/// FIG 5: correction factors + projections. Writes three CSVs:
+/// `fig5_month_factors.csv`, `fig5_hourweek_factors.csv`,
+/// `fig5_projections.csv` (daily min/max of each forecast).
+pub fn fig5_csvs(
+    out_dir: &Path,
+    nominal: &TrafficModel,
+    _high: &TrafficModel,
+    nominal_load: &[f64],
+    high_load: &[f64],
+) -> std::io::Result<()> {
+    let mut months = CsvDoc::new(&["month", "factor"]);
+    for (i, f) in nominal.month_f.iter().enumerate() {
+        months.push(vec![(i + 1).to_string(), format!("{f:.3}")]);
+    }
+    months.save(&out_dir.join("fig5_month_factors.csv"))?;
+
+    let mut hw = CsvDoc::new(&["hour_of_week", "factor"]);
+    for (i, f) in nominal.hw_f.iter().enumerate() {
+        hw.push(vec![i.to_string(), format!("{f:.4}")]);
+    }
+    hw.save(&out_dir.join("fig5_hourweek_factors.csv"))?;
+
+    let mut proj = CsvDoc::new(&[
+        "day",
+        "nominal_daily_max",
+        "high_daily_max",
+        "daily_min_both",
+    ]);
+    for d in 0..365 {
+        let lo = d * 24;
+        let hi = lo + 24;
+        let nmax = nominal_load[lo..hi].iter().cloned().fold(f64::MIN, f64::max);
+        let hmax = high_load[lo..hi].iter().cloned().fold(f64::MIN, f64::max);
+        let nmin = nominal_load[lo..hi].iter().cloned().fold(f64::MAX, f64::min);
+        let hmin = high_load[lo..hi].iter().cloned().fold(f64::MAX, f64::min);
+        proj.push(vec![
+            d.to_string(),
+            format!("{nmax:.1}"),
+            format!("{hmax:.1}"),
+            format!("{:.1}", nmin.min(hmin)),
+        ]);
+    }
+    proj.save(&out_dir.join("fig5_projections.csv"))
+}
+
+/// FIG 6: whole-year simulation series (queue blow-up view), hourly.
+pub fn fig6_csv(out_dir: &Path, r: &SimulationResult) -> std::io::Result<()> {
+    let mut doc = CsvDoc::new(&["hour", "load_rec_hr", "throughput_rec_hr", "queue_rec"]);
+    for h in 0..r.load.len() {
+        doc.push(vec![
+            h.to_string(),
+            format!("{:.1}", r.load[h]),
+            format!("{:.1}", r.throughput[h]),
+            format!("{:.1}", r.queue[h]),
+        ]);
+    }
+    doc.save(&out_dir.join(format!(
+        "fig6_year_{}_{}.csv",
+        r.forecast.to_lowercase(),
+        short_name(&r.twin.name)
+    )))
+}
+
+/// FIG 7: excerpt of a simulation (a few days), hourly load vs throughput
+/// vs queue — the daily build-up/drain dynamic.
+pub fn fig7_csv(
+    out_dir: &Path,
+    r: &SimulationResult,
+    start_day: usize,
+    n_days: usize,
+) -> std::io::Result<()> {
+    let mut doc = CsvDoc::new(&["hour", "load_rec_hr", "throughput_rec_hr", "queue_rec"]);
+    let h0 = start_day * 24;
+    let h1 = (h0 + n_days * 24).min(r.load.len());
+    for h in h0..h1 {
+        doc.push(vec![
+            h.to_string(),
+            format!("{:.1}", r.load[h]),
+            format!("{:.1}", r.throughput[h]),
+            format!("{:.1}", r.queue[h]),
+        ]);
+    }
+    doc.save(&out_dir.join("fig7_excerpt.csv"))
+}
+
+/// FIG 8: per-stage throughput and latency curves for one experiment,
+/// bucketed from the TSDB (one CSV per variant).
+pub fn fig8_csv(
+    out_dir: &Path,
+    tsdb: &Tsdb,
+    variant: &str,
+    t0: f64,
+    t1: f64,
+    bucket_s: f64,
+) -> std::io::Result<()> {
+    const STAGES: [&str; 3] = ["unzipper_phase", "v2x_phase", "etl_phase"];
+    let mut doc = CsvDoc::new(&[
+        "t_s",
+        "thr_unzipper",
+        "thr_v2x",
+        "thr_etl",
+        "lat_unzipper",
+        "lat_v2x",
+        "lat_etl",
+    ]);
+    let thr: Vec<Vec<(f64, f64)>> = STAGES
+        .iter()
+        .map(|s| tsdb.rate("stage_records", &[("stage", s)], t0, t1, bucket_s))
+        .collect();
+    let lat: Vec<Vec<(f64, f64)>> = STAGES
+        .iter()
+        .map(|s| {
+            tsdb.bucket_mean(
+                "stage_cum_latency_s",
+                &[("stage", s), ("pipeline", variant)],
+                t0,
+                t1,
+                bucket_s,
+            )
+        })
+        .collect();
+    let n = thr[0].len();
+    for i in 0..n {
+        // time column is relative to the experiment start
+        let mut row = vec![format!("{:.1}", thr[0][i].0 - t0)];
+        for s in 0..3 {
+            row.push(format!("{:.3}", thr[s][i].1));
+        }
+        for s in 0..3 {
+            let v = lat[s][i].1;
+            row.push(if v.is_nan() {
+                String::new()
+            } else {
+                format!("{v:.3}")
+            });
+        }
+        doc.push(row);
+    }
+    doc.save(&out_dir.join(format!("fig8_{variant}.csv")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bizsim::{simulate_batch, SloSpec};
+    use crate::runtime::native::NativeBackend;
+
+    #[test]
+    fn table1_renders_paper_rows() {
+        let s = table1_twins(&TwinParams::paper_table1());
+        assert!(s.contains("blocking-write"));
+        assert!(s.contains("1.95"));
+        assert!(s.contains("7.03"));
+        assert!(s.contains("fifo"));
+    }
+
+    #[test]
+    fn table2_renders_six_rows() {
+        let backend = NativeBackend;
+        let twins = TwinParams::paper_table1();
+        let slo = SloSpec::default();
+        let mut all = simulate_batch(&backend, &twins, &TrafficModel::nominal(), &slo)
+            .unwrap();
+        all.extend(simulate_batch(&backend, &twins, &TrafficModel::high(), &slo).unwrap());
+        let s = table2_simulations(&all);
+        assert_eq!(s.matches("nominal ").count(), 3);
+        assert_eq!(s.matches("high ").count(), 3);
+        assert!(s.contains("true") && s.contains("false"));
+    }
+
+    #[test]
+    fn table4_renders_totals_row() {
+        let backend = NativeBackend;
+        use crate::bizsim::{monthly_costs, CostSpec};
+        let load = TrafficModel::nominal().project_hourly();
+        let a = monthly_costs(&backend, &load, 0.0703, &CostSpec::default()).unwrap();
+        let b = monthly_costs(
+            &backend,
+            &load,
+            0.0703,
+            &CostSpec {
+                retention_days: 182.0,
+                ..CostSpec::default()
+            },
+        )
+        .unwrap();
+        let s = table4_retention(&a, &b, "3 mo", "6 mo");
+        assert!(s.contains("storage (3 mo)"));
+        assert!(s.contains("total"));
+        assert_eq!(s.lines().filter(|l| l.starts_with('|')).count(), 14); // header + 12 + total
+    }
+
+    #[test]
+    fn figure_csvs_write_files() {
+        let dir = std::env::temp_dir().join("plantd-report-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let nominal = TrafficModel::nominal();
+        let high = TrafficModel::high();
+        let nl = nominal.project_hourly();
+        let hl = high.project_hourly();
+        fig5_csvs(&dir, &nominal, &high, &nl, &hl).unwrap();
+        assert!(dir.join("fig5_month_factors.csv").exists());
+        assert!(dir.join("fig5_projections.csv").exists());
+        let text = std::fs::read_to_string(dir.join("fig5_projections.csv")).unwrap();
+        assert_eq!(text.lines().count(), 366);
+
+        let backend = NativeBackend;
+        let twins = TwinParams::paper_table1();
+        let sims = simulate_batch(
+            &backend,
+            &twins,
+            &TrafficModel::nominal(),
+            &SloSpec::default(),
+        )
+        .unwrap();
+        fig6_csv(&dir, &sims[2]).unwrap();
+        assert!(dir.join("fig6_year_nominal_cpu-lim.csv").exists());
+        fig7_csv(&dir, &sims[0], 200, 3).unwrap();
+        let f7 = std::fs::read_to_string(dir.join("fig7_excerpt.csv")).unwrap();
+        assert_eq!(f7.lines().count(), 1 + 72);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,315 @@
+//! Declarative resource registry — the Kubernetes-custom-resource analog.
+//!
+//! PlantD models everything the user configures as custom resources
+//! (Fig. 3): *Schema*, *DataSet*, *LoadPattern*, *Pipeline*, *Experiment*,
+//! *TrafficModel*, *DigitalTwin*, *Simulation*. This module provides the
+//! in-process equivalent: typed specs registered by name, a status/phase
+//! state machine per resource, and a reconciler that validates references
+//! between resources (an Experiment referencing a missing DataSet is
+//! flagged, exactly like a controller would set a condition).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// Resource kinds (mirrors the operator's CRDs, Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kind {
+    Schema,
+    DataSet,
+    LoadPattern,
+    Pipeline,
+    Experiment,
+    TrafficModel,
+    DigitalTwin,
+    Simulation,
+}
+
+impl Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Schema => "Schema",
+            Kind::DataSet => "DataSet",
+            Kind::LoadPattern => "LoadPattern",
+            Kind::Pipeline => "Pipeline",
+            Kind::Experiment => "Experiment",
+            Kind::TrafficModel => "TrafficModel",
+            Kind::DigitalTwin => "DigitalTwin",
+            Kind::Simulation => "Simulation",
+        }
+    }
+
+    pub fn all() -> [Kind; 8] {
+        [
+            Kind::Schema,
+            Kind::DataSet,
+            Kind::LoadPattern,
+            Kind::Pipeline,
+            Kind::Experiment,
+            Kind::TrafficModel,
+            Kind::DigitalTwin,
+            Kind::Simulation,
+        ]
+    }
+}
+
+/// Lifecycle phase (the paper's experiment list shows these states in the
+/// Studio UI, Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Pending,
+    Ready,
+    Engaged,
+    Completed,
+    Failed,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Pending => "Pending",
+            Phase::Ready => "Ready",
+            Phase::Engaged => "Engaged",
+            Phase::Completed => "Completed",
+            Phase::Failed => "Failed",
+        }
+    }
+}
+
+/// A registered resource: spec (JSON), phase, and status conditions.
+#[derive(Debug, Clone)]
+pub struct Resource {
+    pub kind: Kind,
+    pub name: String,
+    pub spec: Json,
+    pub phase: Phase,
+    /// Human-readable condition messages (most recent last).
+    pub conditions: Vec<String>,
+}
+
+/// Which spec keys of each kind reference other resources.
+fn reference_fields(kind: Kind) -> &'static [(&'static str, Kind)] {
+    match kind {
+        Kind::DataSet => &[("schema", Kind::Schema)],
+        Kind::Experiment => &[
+            ("dataset", Kind::DataSet),
+            ("load_pattern", Kind::LoadPattern),
+            ("pipeline", Kind::Pipeline),
+        ],
+        Kind::DigitalTwin => &[("experiment", Kind::Experiment)],
+        Kind::Simulation => &[
+            ("twin", Kind::DigitalTwin),
+            ("traffic_model", Kind::TrafficModel),
+        ],
+        _ => &[],
+    }
+}
+
+/// The registry. Clones share state.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<BTreeMap<(Kind, String), Resource>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a resource spec; starts `Pending`.
+    pub fn apply(&self, kind: Kind, name: &str, spec: Json) -> Resource {
+        let res = Resource {
+            kind,
+            name: name.to_string(),
+            spec,
+            phase: Phase::Pending,
+            conditions: vec![],
+        };
+        self.inner
+            .lock()
+            .unwrap()
+            .insert((kind, name.to_string()), res.clone());
+        res
+    }
+
+    pub fn get(&self, kind: Kind, name: &str) -> Option<Resource> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&(kind, name.to_string()))
+            .cloned()
+    }
+
+    pub fn delete(&self, kind: Kind, name: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .remove(&(kind, name.to_string()))
+            .is_some()
+    }
+
+    pub fn list(&self, kind: Kind) -> Vec<Resource> {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|r| r.kind == kind)
+            .cloned()
+            .collect()
+    }
+
+    pub fn set_phase(&self, kind: Kind, name: &str, phase: Phase, condition: &str) {
+        if let Some(r) = self
+            .inner
+            .lock()
+            .unwrap()
+            .get_mut(&(kind, name.to_string()))
+        {
+            r.phase = phase;
+            r.conditions.push(condition.to_string());
+        }
+    }
+
+    /// One reconciliation pass: every `Pending` resource whose references
+    /// all resolve becomes `Ready`; broken references go `Failed` with a
+    /// condition naming the missing dependency. Returns the number of
+    /// resources whose phase changed.
+    pub fn reconcile(&self) -> usize {
+        let snapshot: Vec<Resource> = {
+            let map = self.inner.lock().unwrap();
+            map.values().cloned().collect()
+        };
+        let mut changed = 0;
+        for res in snapshot {
+            if res.phase != Phase::Pending {
+                continue;
+            }
+            let mut missing = Vec::new();
+            for (field, target_kind) in reference_fields(res.kind) {
+                match res.spec.get(field).and_then(Json::as_str) {
+                    Some(target) => {
+                        if self.get(*target_kind, target).is_none() {
+                            missing.push(format!(
+                                "{field}: {} '{target}' not found",
+                                target_kind.as_str()
+                            ));
+                        }
+                    }
+                    None => missing.push(format!("{field}: reference missing from spec")),
+                }
+            }
+            if missing.is_empty() {
+                self.set_phase(res.kind, &res.name, Phase::Ready, "all references resolved");
+            } else {
+                self.set_phase(res.kind, &res.name, Phase::Failed, &missing.join("; "));
+            }
+            changed += 1;
+        }
+        changed
+    }
+
+    /// Counts per kind (for the CLI status view).
+    pub fn summary(&self) -> Vec<(Kind, usize)> {
+        Kind::all()
+            .into_iter()
+            .map(|k| (k, self.list(k).len()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Registry {
+        Registry::new()
+    }
+
+    #[test]
+    fn apply_get_delete() {
+        let r = reg();
+        r.apply(Kind::Schema, "engine", Json::parse(r#"{"fields": []}"#).unwrap());
+        assert!(r.get(Kind::Schema, "engine").is_some());
+        assert!(r.get(Kind::Schema, "ghost").is_none());
+        assert!(r.delete(Kind::Schema, "engine"));
+        assert!(!r.delete(Kind::Schema, "engine"));
+    }
+
+    #[test]
+    fn reconcile_promotes_resolved_resources() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.apply(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"schema": "s"}"#).unwrap(),
+        );
+        let changed = r.reconcile();
+        assert_eq!(changed, 2);
+        assert_eq!(r.get(Kind::Schema, "s").unwrap().phase, Phase::Ready);
+        assert_eq!(r.get(Kind::DataSet, "d").unwrap().phase, Phase::Ready);
+    }
+
+    #[test]
+    fn reconcile_fails_broken_references() {
+        let r = reg();
+        r.apply(
+            Kind::Experiment,
+            "e",
+            Json::parse(r#"{"dataset": "nope", "load_pattern": "p", "pipeline": "x"}"#)
+                .unwrap(),
+        );
+        r.apply(Kind::LoadPattern, "p", Json::Null);
+        r.apply(Kind::Pipeline, "x", Json::Null);
+        r.reconcile();
+        let e = r.get(Kind::Experiment, "e").unwrap();
+        assert_eq!(e.phase, Phase::Failed);
+        assert!(e.conditions.last().unwrap().contains("'nope' not found"));
+    }
+
+    #[test]
+    fn reconcile_flags_missing_reference_field() {
+        let r = reg();
+        r.apply(Kind::Simulation, "sim", Json::parse("{}").unwrap());
+        r.reconcile();
+        let s = r.get(Kind::Simulation, "sim").unwrap();
+        assert_eq!(s.phase, Phase::Failed);
+        assert!(s.conditions.last().unwrap().contains("twin"));
+    }
+
+    #[test]
+    fn reconcile_is_idempotent_after_settling() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.reconcile();
+        assert_eq!(r.reconcile(), 0);
+    }
+
+    #[test]
+    fn engaged_phase_transitions() {
+        let r = reg();
+        r.apply(Kind::Pipeline, "p", Json::Null);
+        r.reconcile();
+        r.set_phase(Kind::Pipeline, "p", Phase::Engaged, "experiment exp-1 started");
+        assert_eq!(r.get(Kind::Pipeline, "p").unwrap().phase, Phase::Engaged);
+        r.set_phase(Kind::Pipeline, "p", Phase::Ready, "experiment exp-1 finished");
+        let p = r.get(Kind::Pipeline, "p").unwrap();
+        assert_eq!(p.phase, Phase::Ready);
+        assert_eq!(p.conditions.len(), 3);
+    }
+
+    #[test]
+    fn list_and_summary() {
+        let r = reg();
+        r.apply(Kind::Schema, "a", Json::Null);
+        r.apply(Kind::Schema, "b", Json::Null);
+        r.apply(Kind::Pipeline, "p", Json::Null);
+        assert_eq!(r.list(Kind::Schema).len(), 2);
+        let summary: std::collections::BTreeMap<_, _> =
+            r.summary().into_iter().collect();
+        assert_eq!(summary[&Kind::Schema], 2);
+        assert_eq!(summary[&Kind::Pipeline], 1);
+        assert_eq!(summary[&Kind::Simulation], 0);
+    }
+}

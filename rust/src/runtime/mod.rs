@@ -1,0 +1,316 @@
+//! PJRT runtime: load and execute the AOT-compiled business-analysis
+//! graphs from `artifacts/*.hlo.txt` (Layer 2 JAX + Layer 1 Pallas,
+//! lowered once at build time — Python is never on this path).
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py`).
+//!
+//! Two interchangeable backends implement [`SimBackend`]:
+//! - [`Engine`] — the PJRT CPU client, compiled-executable cache included;
+//! - [`native::NativeBackend`] — a pure-Rust evaluator of the same three
+//!   functions, used to cross-validate PJRT numerics in tests and as a
+//!   fallback when artifacts are absent.
+
+pub mod native;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::traffic::TrafficModel;
+use crate::util::json::Json;
+
+/// Fixed shapes of the AOT artifacts (must match `python/compile/aot.py`).
+pub const HOURS: usize = 8760;
+pub const DAYS: usize = 365;
+pub const SCENARIOS: usize = 8;
+
+/// Output of one twin-simulation execution (per scenario slot).
+#[derive(Debug, Clone)]
+pub struct TwinSimOutput {
+    /// Offered load, records/hour, shared across scenarios.
+    pub load: Vec<f64>,
+    /// Queue length (records) at the end of each hour, `[S][T]`.
+    pub queue: Vec<Vec<f64>>,
+    /// Records processed per hour, `[S][T]`.
+    pub throughput: Vec<Vec<f64>>,
+    /// FIFO latency (seconds) for records arriving each hour, `[S][T]`.
+    pub latency: Vec<Vec<f64>>,
+}
+
+/// A twin scenario slot: capacity + base latency.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioParams {
+    pub cap_rps: f64,
+    pub base_latency_s: f64,
+}
+
+/// The simulation compute surface used by `bizsim`.
+///
+/// Not `Send`/`Sync`: the PJRT client wraps a thread-affine `Rc` handle,
+/// and the business simulation runs on the coordinator thread anyway.
+pub trait SimBackend {
+    /// §V.G hourly load projection.
+    fn traffic(&self, model: &TrafficModel) -> Result<Vec<f64>>;
+    /// Year-long FIFO twin simulation for up to [`SCENARIOS`] slots.
+    fn twin_sim(&self, model: &TrafficModel, scenarios: &[ScenarioParams])
+        -> Result<TwinSimOutput>;
+    /// Rolling-retention stored-GB series.
+    fn retention(&self, daily_gb: &[f64], window_days: f64) -> Result<Vec<f64>>;
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Pad scenario slots to the artifact's fixed batch: unused slots get an
+/// effectively infinite capacity so their queues stay empty.
+pub fn pad_scenarios(scenarios: &[ScenarioParams]) -> Result<Vec<ScenarioParams>> {
+    if scenarios.is_empty() || scenarios.len() > SCENARIOS {
+        bail!(
+            "scenario count must be in 1..={SCENARIOS}, got {}",
+            scenarios.len()
+        );
+    }
+    let mut out = scenarios.to_vec();
+    out.resize(
+        SCENARIOS,
+        ScenarioParams {
+            cap_rps: 1e9,
+            base_latency_s: 0.0,
+        },
+    );
+    Ok(out)
+}
+
+/// The PJRT-backed engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Load the artifact directory (must contain `manifest.json` written
+    /// by `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        for (key, expect) in [("hours", HOURS), ("days", DAYS), ("scenarios", SCENARIOS)] {
+            let got = manifest
+                .get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing '{key}'"))?;
+            if got as usize != expect {
+                bail!("artifact {key}={got} but runtime expects {expect}; re-run `make artifacts`");
+            }
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir: dir.to_path_buf(),
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory next to the
+    /// binary's working directory.
+    pub fn load_default() -> Result<Engine> {
+        Self::load(Path::new("artifacts"))
+    }
+
+    /// Compile-once cache: compile `<name>.hlo.txt` on first use.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.compiled.lock().unwrap();
+        if let Some(e) = cache.get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with f32 literals; returns the flattened tuple
+    /// elements as f32 vectors.
+    fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        let parts = literal.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| Ok(p.to_vec::<f32>()?))
+            .collect()
+    }
+
+    fn scalar(v: f64) -> xla::Literal {
+        xla::Literal::scalar(v as f32)
+    }
+
+    fn vec1(vs: &[f64]) -> xla::Literal {
+        let f: Vec<f32> = vs.iter().map(|&v| v as f32).collect();
+        xla::Literal::vec1(&f)
+    }
+
+    fn check_closed_form(model: &TrafficModel) -> Result<()> {
+        if model.burst.is_some() {
+            bail!(
+                "the AOT traffic artifact evaluates the closed-form §V.G \
+                 projection; bursty forecasts need the native backend"
+            );
+        }
+        Ok(())
+    }
+
+    fn traffic_inputs(model: &TrafficModel) -> Vec<xla::Literal> {
+        vec![
+            Self::scalar(model.base_rps),
+            Self::scalar(model.growth_net()),
+            Self::vec1(&model.month_f),
+            Self::vec1(&model.hw_f),
+        ]
+    }
+}
+
+fn to_f64(v: Vec<f32>) -> Vec<f64> {
+    v.into_iter().map(|x| x as f64).collect()
+}
+
+fn unflatten(flat: Vec<f32>, rows: usize, cols: usize) -> Vec<Vec<f64>> {
+    assert_eq!(flat.len(), rows * cols, "unflatten shape mismatch");
+    (0..rows)
+        .map(|r| flat[r * cols..(r + 1) * cols].iter().map(|&v| v as f64).collect())
+        .collect()
+}
+
+impl SimBackend for Engine {
+    fn traffic(&self, model: &TrafficModel) -> Result<Vec<f64>> {
+        Self::check_closed_form(model)?;
+        let outs = self.execute("traffic", &Self::traffic_inputs(model))?;
+        let load = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("traffic artifact returned no outputs"))?;
+        if load.len() != HOURS {
+            bail!("traffic output length {} != {HOURS}", load.len());
+        }
+        Ok(to_f64(load))
+    }
+
+    fn twin_sim(
+        &self,
+        model: &TrafficModel,
+        scenarios: &[ScenarioParams],
+    ) -> Result<TwinSimOutput> {
+        Self::check_closed_form(model)?;
+        let padded = pad_scenarios(scenarios)?;
+        let caps: Vec<f64> = padded.iter().map(|s| s.cap_rps).collect();
+        let lats: Vec<f64> = padded.iter().map(|s| s.base_latency_s).collect();
+        let mut inputs = Self::traffic_inputs(model);
+        inputs.push(Self::vec1(&caps));
+        inputs.push(Self::vec1(&lats));
+        let mut outs = self.execute("twin_sim", &inputs)?.into_iter();
+        let (load, queue, thr, lat) = (
+            outs.next().ok_or_else(|| anyhow!("missing load output"))?,
+            outs.next().ok_or_else(|| anyhow!("missing queue output"))?,
+            outs.next().ok_or_else(|| anyhow!("missing throughput output"))?,
+            outs.next().ok_or_else(|| anyhow!("missing latency output"))?,
+        );
+        Ok(TwinSimOutput {
+            load: to_f64(load),
+            queue: unflatten(queue, SCENARIOS, HOURS),
+            throughput: unflatten(thr, SCENARIOS, HOURS),
+            latency: unflatten(lat, SCENARIOS, HOURS),
+        })
+    }
+
+    fn retention(&self, daily_gb: &[f64], window_days: f64) -> Result<Vec<f64>> {
+        if daily_gb.len() != DAYS {
+            bail!("retention expects {DAYS} daily values, got {}", daily_gb.len());
+        }
+        let outs = self.execute(
+            "retention",
+            &[Self::vec1(daily_gb), Self::scalar(window_days)],
+        )?;
+        let stored = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("retention artifact returned no outputs"))?;
+        Ok(to_f64(stored))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}
+
+/// Best available backend: PJRT if artifacts are present, otherwise the
+/// native evaluator (with a warning to stderr).
+pub fn default_backend(artifacts_dir: &Path) -> Box<dyn SimBackend> {
+    match Engine::load(artifacts_dir) {
+        Ok(engine) => Box::new(engine),
+        Err(e) => {
+            eprintln!(
+                "warning: PJRT artifacts unavailable ({e:#}); using native evaluator"
+            );
+            Box::new(native::NativeBackend)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_scenarios_fills_with_infinite_capacity() {
+        let s = pad_scenarios(&[ScenarioParams {
+            cap_rps: 1.95,
+            base_latency_s: 0.15,
+        }])
+        .unwrap();
+        assert_eq!(s.len(), SCENARIOS);
+        assert_eq!(s[0].cap_rps, 1.95);
+        assert!(s[7].cap_rps >= 1e9);
+    }
+
+    #[test]
+    fn pad_scenarios_rejects_bad_counts() {
+        assert!(pad_scenarios(&[]).is_err());
+        let nine = vec![
+            ScenarioParams {
+                cap_rps: 1.0,
+                base_latency_s: 0.0
+            };
+            9
+        ];
+        assert!(pad_scenarios(&nine).is_err());
+    }
+
+    #[test]
+    fn unflatten_shapes() {
+        let m = unflatten(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1], vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn unflatten_rejects_wrong_len() {
+        unflatten(vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn engine_load_missing_dir_errors() {
+        assert!(Engine::load(Path::new("/nonexistent/artifacts")).is_err());
+    }
+}

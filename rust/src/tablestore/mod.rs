@@ -1,0 +1,314 @@
+//! Embedded table store (the MySQL-RDS stand-in for `etl_phase`).
+//!
+//! A schema'd append-only table with per-insert validation: the paper's ETL
+//! stage "processes the raw data records and adds the processed records,
+//! scrubbed of missing or bad data" — so inserts here type-check and
+//! range-check each row, counting scrubbed (rejected) records, and charge a
+//! modeled per-batch insert latency through the shared clock.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::clock::SharedClock;
+
+/// Column types supported by the store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColType {
+    Int,
+    Float,
+    Text,
+}
+
+/// A typed cell value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Text(String),
+    /// Missing/unparseable — always scrubbed.
+    Null,
+}
+
+impl Value {
+    fn matches(&self, ty: ColType) -> bool {
+        matches!(
+            (self, ty),
+            (Value::Int(_), ColType::Int)
+                | (Value::Float(_), ColType::Float)
+                | (Value::Text(_), ColType::Text)
+        )
+    }
+}
+
+/// Table column definition, with an optional numeric validity range.
+#[derive(Debug, Clone)]
+pub struct Column {
+    pub name: String,
+    pub ty: ColType,
+    /// Inclusive numeric validity bounds; rows outside are scrubbed.
+    pub range: Option<(f64, f64)>,
+}
+
+impl Column {
+    pub fn new(name: &str, ty: ColType) -> Self {
+        Column {
+            name: name.to_string(),
+            ty,
+            range: None,
+        }
+    }
+
+    pub fn with_range(mut self, lo: f64, hi: f64) -> Self {
+        self.range = Some((lo, hi));
+        self
+    }
+}
+
+/// Insert latency model: fixed per-batch cost plus per-row cost.
+#[derive(Debug, Clone, Copy)]
+pub struct InsertLatency {
+    pub per_batch_s: f64,
+    pub per_row_s: f64,
+}
+
+impl Default for InsertLatency {
+    fn default() -> Self {
+        InsertLatency {
+            per_batch_s: 0.002,
+            per_row_s: 0.0002,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct TableData {
+    rows: Vec<Vec<Value>>,
+    scrubbed: u64,
+}
+
+/// A single table with schema validation. Clones share storage.
+#[derive(Clone)]
+pub struct Table {
+    name: String,
+    columns: Arc<Vec<Column>>,
+    latency: InsertLatency,
+    clock: SharedClock,
+    data: Arc<Mutex<TableData>>,
+}
+
+impl Table {
+    pub fn new(
+        name: &str,
+        columns: Vec<Column>,
+        clock: SharedClock,
+        latency: InsertLatency,
+    ) -> Self {
+        assert!(!columns.is_empty(), "table needs at least one column");
+        Table {
+            name: name.to_string(),
+            columns: Arc::new(columns),
+            latency,
+            clock,
+            data: Arc::new(Mutex::new(TableData::default())),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn columns(&self) -> &[Column] {
+        &self.columns
+    }
+
+    fn row_valid(&self, row: &[Value]) -> bool {
+        if row.len() != self.columns.len() {
+            return false;
+        }
+        for (v, c) in row.iter().zip(self.columns.iter()) {
+            if matches!(v, Value::Null) || !v.matches(c.ty) {
+                return false;
+            }
+            if let Some((lo, hi)) = c.range {
+                let num = match v {
+                    Value::Int(i) => *i as f64,
+                    Value::Float(f) => *f,
+                    _ => continue,
+                };
+                if !(lo..=hi).contains(&num) || num.is_nan() {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Insert a batch; invalid rows are scrubbed (counted, not stored).
+    /// Returns `(inserted, scrubbed)` for this batch.
+    pub fn insert_batch(&self, rows: Vec<Vec<Value>>) -> (u64, u64) {
+        let n = rows.len();
+        self.clock
+            .sleep_s(self.latency.per_batch_s + self.latency.per_row_s * n as f64);
+        let mut data = self.data.lock().unwrap();
+        let mut inserted = 0;
+        let mut scrubbed = 0;
+        for row in rows {
+            if self.row_valid(&row) {
+                data.rows.push(row);
+                inserted += 1;
+            } else {
+                scrubbed += 1;
+            }
+        }
+        data.scrubbed += scrubbed;
+        (inserted, scrubbed)
+    }
+
+    pub fn row_count(&self) -> u64 {
+        self.data.lock().unwrap().rows.len() as u64
+    }
+
+    pub fn scrubbed_count(&self) -> u64 {
+        self.data.lock().unwrap().scrubbed
+    }
+
+    /// Snapshot of rows (tests / small reports only).
+    pub fn rows(&self) -> Vec<Vec<Value>> {
+        self.data.lock().unwrap().rows.clone()
+    }
+
+    /// Count rows matching a predicate — the query surface PlantD's
+    /// query-load testing exercises. Charges a modeled scan latency
+    /// (fixed planning cost + per-row cost) through the shared clock.
+    pub fn query_count<F: Fn(&[Value]) -> bool>(&self, pred: F) -> u64 {
+        let (count, n_rows) = {
+            let data = self.data.lock().unwrap();
+            (
+                data.rows.iter().filter(|r| pred(r)).count() as u64,
+                data.rows.len(),
+            )
+        };
+        // 2 ms planning + 1 µs/row scan, in virtual time
+        self.clock.sleep_s(0.002 + n_rows as f64 * 1e-6);
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::{Clock, ManualClock, ScaledClock};
+
+    fn table() -> Table {
+        Table::new(
+            "telemetry",
+            vec![
+                Column::new("vin", ColType::Text),
+                Column::new("speed_kph", ColType::Float).with_range(0.0, 300.0),
+                Column::new("engine_rpm", ColType::Int).with_range(0.0, 10_000.0),
+            ],
+            ScaledClock::new(1e9),
+            InsertLatency::default(),
+        )
+    }
+
+    fn good_row() -> Vec<Value> {
+        vec![
+            Value::Text("VIN123".into()),
+            Value::Float(88.5),
+            Value::Int(2500),
+        ]
+    }
+
+    #[test]
+    fn inserts_valid_rows() {
+        let t = table();
+        let (ins, scr) = t.insert_batch(vec![good_row(), good_row()]);
+        assert_eq!((ins, scr), (2, 0));
+        assert_eq!(t.row_count(), 2);
+    }
+
+    #[test]
+    fn scrubs_nulls() {
+        let t = table();
+        let mut bad = good_row();
+        bad[1] = Value::Null;
+        let (ins, scr) = t.insert_batch(vec![bad, good_row()]);
+        assert_eq!((ins, scr), (1, 1));
+        assert_eq!(t.scrubbed_count(), 1);
+    }
+
+    #[test]
+    fn scrubs_type_mismatch() {
+        let t = table();
+        let mut bad = good_row();
+        bad[0] = Value::Int(5); // vin must be text
+        let (_, scr) = t.insert_batch(vec![bad]);
+        assert_eq!(scr, 1);
+    }
+
+    #[test]
+    fn scrubs_out_of_range() {
+        let t = table();
+        let mut bad = good_row();
+        bad[1] = Value::Float(500.0); // speed > 300
+        let (_, scr) = t.insert_batch(vec![bad]);
+        assert_eq!(scr, 1);
+        let mut bad2 = good_row();
+        bad2[2] = Value::Int(-5);
+        assert_eq!(t.insert_batch(vec![bad2]).1, 1);
+    }
+
+    #[test]
+    fn scrubs_nan() {
+        let t = table();
+        let mut bad = good_row();
+        bad[1] = Value::Float(f64::NAN);
+        assert_eq!(t.insert_batch(vec![bad]).1, 1);
+    }
+
+    #[test]
+    fn scrubs_arity_mismatch() {
+        let t = table();
+        assert_eq!(t.insert_batch(vec![vec![Value::Int(1)]]).1, 1);
+    }
+
+    #[test]
+    fn insert_charges_latency() {
+        let clock = ManualClock::new();
+        let t = Table::new(
+            "t",
+            vec![Column::new("a", ColType::Int)],
+            clock.clone(),
+            InsertLatency {
+                per_batch_s: 0.01,
+                per_row_s: 0.001,
+            },
+        );
+        t.insert_batch(vec![vec![Value::Int(1)], vec![Value::Int(2)]]);
+        assert!((clock.now_s() - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn query_count_filters_and_charges_latency() {
+        let clock = ManualClock::new();
+        let t = Table::new(
+            "t",
+            vec![Column::new("a", ColType::Int)],
+            clock.clone(),
+            InsertLatency { per_batch_s: 0.0, per_row_s: 0.0 },
+        );
+        t.insert_batch((0..100).map(|i| vec![Value::Int(i)]).collect());
+        let t0 = clock.now_s();
+        let n = t.query_count(|row| matches!(row[0], Value::Int(i) if i < 30));
+        assert_eq!(n, 30);
+        assert!((clock.now_s() - t0 - (0.002 + 100.0 * 1e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn range_on_int_columns() {
+        let t = table();
+        let mut row = good_row();
+        row[2] = Value::Int(10_000);
+        assert_eq!(t.insert_batch(vec![row]).0, 1); // inclusive upper bound
+    }
+}

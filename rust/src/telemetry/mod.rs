@@ -1,0 +1,16 @@
+//! Observability substrate: OpenTelemetry-style spans, a collector that
+//! converts spans to metrics, and a Prometheus-style in-memory time-series
+//! database (TSDB).
+//!
+//! The paper's measurement model (§V.B): the pipeline-under-test declares a
+//! *span* per stage (start time + duration); a PlantD-provided collector
+//! converts spans into metrics and ships them to Prometheus. Here the span
+//! sink, collector, and TSDB are in-process equivalents with the same
+//! surface: stages emit [`Span`]s, the [`Collector`] derives per-stage
+//! counters/histograms, and reports run range queries against the [`Tsdb`].
+
+mod span;
+mod tsdb;
+
+pub use span::{Collector, Span, SpanSink};
+pub use tsdb::{Labels, SeriesHandle, SeriesKey, Tsdb};

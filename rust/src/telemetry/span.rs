@@ -1,0 +1,206 @@
+//! Spans and the span→metric collector.
+//!
+//! A [`Span`] is the unit of white-box instrumentation the paper asks
+//! pipeline engineers to add (§V.B): stage name, start time, duration, and
+//! payload counters. Stages push spans into a [`SpanSink`]; the
+//! [`Collector`] converts each span into TSDB samples:
+//!
+//! - `stage_records{stage=..}`   — records processed by the span
+//! - `stage_bytes{stage=..}`     — bytes processed
+//! - `stage_latency_s{stage=..}` — span duration (seconds)
+//! - `stage_errors{stage=..}`    — 1 per failed span
+//!
+//! Samples are timestamped at span *end* (start + duration), which is when
+//! the work became externally visible.
+
+use std::sync::{Arc, Mutex};
+
+use super::tsdb::{SeriesHandle, Tsdb};
+
+/// One instrumented unit of stage work.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Trace correlation id — constant across stages for one input record.
+    pub trace_id: u64,
+    /// Stage name, e.g. `"unzipper_phase"`.
+    pub stage: &'static str,
+    /// Virtual start time, seconds.
+    pub start_s: f64,
+    /// Span duration, virtual seconds.
+    pub duration_s: f64,
+    /// Records handled in this span (a stage may split/join records).
+    pub records: u64,
+    /// Payload bytes handled.
+    pub bytes: u64,
+    /// Whether the work succeeded.
+    pub ok: bool,
+}
+
+impl Span {
+    pub fn end_s(&self) -> f64 {
+        self.start_s + self.duration_s
+    }
+}
+
+/// Shared buffer the pipeline's stages push spans into. The experiment
+/// controller drains it through a [`Collector`].
+#[derive(Debug, Clone, Default)]
+pub struct SpanSink {
+    spans: Arc<Mutex<Vec<Span>>>,
+}
+
+impl SpanSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&self, span: Span) {
+        self.spans.lock().unwrap().push(span);
+    }
+
+    /// Remove and return all buffered spans.
+    pub fn drain(&self) -> Vec<Span> {
+        std::mem::take(&mut *self.spans.lock().unwrap())
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Converts spans into TSDB metric samples, caching series handles per
+/// stage (ingest is hot during experiments).
+pub struct Collector {
+    tsdb: Tsdb,
+    by_stage: Mutex<std::collections::HashMap<&'static str, StageSeries>>,
+}
+
+struct StageSeries {
+    records: SeriesHandle,
+    bytes: SeriesHandle,
+    latency: SeriesHandle,
+    errors: SeriesHandle,
+}
+
+impl Collector {
+    pub fn new(tsdb: Tsdb) -> Self {
+        Collector {
+            tsdb,
+            by_stage: Mutex::new(Default::default()),
+        }
+    }
+
+    pub fn tsdb(&self) -> &Tsdb {
+        &self.tsdb
+    }
+
+    /// Convert one span into metric samples.
+    pub fn record(&self, span: &Span) {
+        let mut map = self.by_stage.lock().unwrap();
+        let series = map.entry(span.stage).or_insert_with(|| StageSeries {
+            records: self.tsdb.series("stage_records", &[("stage", span.stage)]),
+            bytes: self.tsdb.series("stage_bytes", &[("stage", span.stage)]),
+            latency: self
+                .tsdb
+                .series("stage_latency_s", &[("stage", span.stage)]),
+            errors: self.tsdb.series("stage_errors", &[("stage", span.stage)]),
+        });
+        let t = span.end_s();
+        series.records.push(t, span.records as f64);
+        series.bytes.push(t, span.bytes as f64);
+        series.latency.push(t, span.duration_s);
+        if !span.ok {
+            series.errors.push(t, 1.0);
+        }
+    }
+
+    /// Drain a sink into the TSDB; returns the number of spans collected.
+    pub fn collect_from(&self, sink: &SpanSink) -> usize {
+        let spans = sink.drain();
+        for s in &spans {
+            self.record(s);
+        }
+        spans.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(stage: &'static str, start: f64, dur: f64, recs: u64, ok: bool) -> Span {
+        Span {
+            trace_id: 1,
+            stage,
+            start_s: start,
+            duration_s: dur,
+            records: recs,
+            bytes: recs * 100,
+            ok,
+        }
+    }
+
+    #[test]
+    fn span_end_time() {
+        assert_eq!(span("s", 2.0, 0.5, 1, true).end_s(), 2.5);
+    }
+
+    #[test]
+    fn sink_push_drain() {
+        let sink = SpanSink::new();
+        sink.push(span("a", 0.0, 1.0, 1, true));
+        sink.push(span("b", 0.0, 1.0, 1, true));
+        assert_eq!(sink.len(), 2);
+        let drained = sink.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn collector_emits_per_stage_metrics() {
+        let db = Tsdb::new();
+        let c = Collector::new(db.clone());
+        c.record(&span("etl", 1.0, 0.25, 5, true));
+        let recs = db.samples("stage_records", &[("stage", "etl")]);
+        assert_eq!(recs, vec![(1.25, 5.0)]);
+        let lat = db.samples("stage_latency_s", &[("stage", "etl")]);
+        assert_eq!(lat, vec![(1.25, 0.25)]);
+        assert!(db.samples("stage_errors", &[("stage", "etl")]).is_empty());
+    }
+
+    #[test]
+    fn collector_counts_errors() {
+        let db = Tsdb::new();
+        let c = Collector::new(db.clone());
+        c.record(&span("v2x", 0.0, 0.1, 1, false));
+        c.record(&span("v2x", 0.2, 0.1, 1, false));
+        assert_eq!(db.sum_range("stage_errors", &[("stage", "v2x")], 0.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn collect_from_drains_sink() {
+        let db = Tsdb::new();
+        let c = Collector::new(db.clone());
+        let sink = SpanSink::new();
+        for i in 0..10 {
+            sink.push(span("u", i as f64, 0.5, 2, true));
+        }
+        assert_eq!(c.collect_from(&sink), 10);
+        assert!(sink.is_empty());
+        assert_eq!(db.sum_range("stage_records", &[("stage", "u")], 0.0, 100.0), 20.0);
+    }
+
+    #[test]
+    fn stages_do_not_mix() {
+        let db = Tsdb::new();
+        let c = Collector::new(db.clone());
+        c.record(&span("a", 0.0, 0.1, 1, true));
+        c.record(&span("b", 0.0, 0.2, 9, true));
+        assert_eq!(db.sum_range("stage_records", &[("stage", "a")], 0.0, 10.0), 1.0);
+        assert_eq!(db.sum_range("stage_records", &[("stage", "b")], 0.0, 10.0), 9.0);
+    }
+}

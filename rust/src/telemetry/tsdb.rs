@@ -1,0 +1,348 @@
+//! In-memory time-series database (the Prometheus stand-in).
+//!
+//! Series are identified by `(metric name, sorted label set)`. Samples are
+//! `(virtual_time_s, value)` pairs appended in time order. The query
+//! surface covers what PlantD's reports need: raw range reads, per-bucket
+//! rates of cumulative counters, windowed sums, and quantiles.
+//!
+//! Ingest is the L3 hot path during an experiment (every span becomes a
+//! handful of samples), so writers use a [`SeriesHandle`] — series lookup
+//! happens once at registration, appends are a single short mutex hold.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Label set (sorted, so the key is canonical).
+pub type Labels = BTreeMap<String, String>;
+
+/// Canonical series identity.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeriesKey {
+    pub name: String,
+    pub labels: Labels,
+}
+
+impl SeriesKey {
+    pub fn new(name: &str, labels: &[(&str, &str)]) -> Self {
+        SeriesKey {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+        }
+    }
+
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.get(key).map(|s| s.as_str())
+    }
+}
+
+type Samples = Arc<Mutex<Vec<(f64, f64)>>>;
+
+/// Writer handle for one series: append without map lookups.
+#[derive(Debug, Clone)]
+pub struct SeriesHandle {
+    samples: Samples,
+}
+
+impl SeriesHandle {
+    /// Append a sample. Caller supplies the (virtual) timestamp.
+    pub fn push(&self, t: f64, v: f64) {
+        self.samples.lock().unwrap().push((t, v));
+    }
+
+    /// Append many samples at once (single lock hold).
+    pub fn push_batch(&self, batch: &[(f64, f64)]) {
+        self.samples.lock().unwrap().extend_from_slice(batch);
+    }
+}
+
+/// The store. Cheap to clone (`Arc` inside) — every component holds one.
+#[derive(Debug, Clone, Default)]
+pub struct Tsdb {
+    inner: Arc<Mutex<BTreeMap<SeriesKey, Samples>>>,
+}
+
+impl Tsdb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a series and return its writer handle.
+    pub fn series(&self, name: &str, labels: &[(&str, &str)]) -> SeriesHandle {
+        let key = SeriesKey::new(name, labels);
+        let mut map = self.inner.lock().unwrap();
+        let samples = map
+            .entry(key)
+            .or_insert_with(|| Arc::new(Mutex::new(Vec::new())))
+            .clone();
+        SeriesHandle { samples }
+    }
+
+    /// One-shot write (registration + append). Convenient off the hot path.
+    pub fn write(&self, name: &str, labels: &[(&str, &str)], t: f64, v: f64) {
+        self.series(name, labels).push(t, v);
+    }
+
+    /// All series keys matching `name` and the given label constraints.
+    pub fn keys(&self, name: &str, constraints: &[(&str, &str)]) -> Vec<SeriesKey> {
+        let map = self.inner.lock().unwrap();
+        map.keys()
+            .filter(|k| {
+                k.name == name
+                    && constraints
+                        .iter()
+                        .all(|(lk, lv)| k.label(lk) == Some(*lv))
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Raw samples of the first series matching name+constraints, sorted by
+    /// time. Multiple matching series are merged (time-sorted).
+    pub fn samples(&self, name: &str, constraints: &[(&str, &str)]) -> Vec<(f64, f64)> {
+        let keys = self.keys(name, constraints);
+        let map = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for k in keys {
+            if let Some(s) = map.get(&k) {
+                out.extend_from_slice(&s.lock().unwrap());
+            }
+        }
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        out
+    }
+
+    /// Sum of sample values in `[t0, t1]` across matching series.
+    pub fn sum_range(
+        &self,
+        name: &str,
+        constraints: &[(&str, &str)],
+        t0: f64,
+        t1: f64,
+    ) -> f64 {
+        self.samples(name, constraints)
+            .iter()
+            .filter(|(t, _)| *t >= t0 && *t <= t1)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Values (no timestamps) in a range — for quantile/mean folds.
+    pub fn values_range(
+        &self,
+        name: &str,
+        constraints: &[(&str, &str)],
+        t0: f64,
+        t1: f64,
+    ) -> Vec<f64> {
+        self.samples(name, constraints)
+            .into_iter()
+            .filter(|(t, _)| *t >= t0 && *t <= t1)
+            .map(|(_, v)| v)
+            .collect()
+    }
+
+    /// Bucketed event rate: samples are *increments* (e.g. records per
+    /// span); returns `(bucket_center_t, sum/bucket_s)` per bucket covering
+    /// `[t0, t1)`. This is how the Fig. 8 throughput curves are produced.
+    pub fn rate(
+        &self,
+        name: &str,
+        constraints: &[(&str, &str)],
+        t0: f64,
+        t1: f64,
+        bucket_s: f64,
+    ) -> Vec<(f64, f64)> {
+        assert!(bucket_s > 0.0);
+        let n = ((t1 - t0) / bucket_s).ceil().max(0.0) as usize;
+        let mut sums = vec![0.0f64; n];
+        for (t, v) in self.samples(name, constraints) {
+            if t >= t0 && t < t1 {
+                let idx = ((t - t0) / bucket_s) as usize;
+                if idx < n {
+                    sums[idx] += v;
+                }
+            }
+        }
+        sums.into_iter()
+            .enumerate()
+            .map(|(i, s)| (t0 + (i as f64 + 0.5) * bucket_s, s / bucket_s))
+            .collect()
+    }
+
+    /// Bucketed mean of sample values (e.g. latency curves per stage).
+    pub fn bucket_mean(
+        &self,
+        name: &str,
+        constraints: &[(&str, &str)],
+        t0: f64,
+        t1: f64,
+        bucket_s: f64,
+    ) -> Vec<(f64, f64)> {
+        assert!(bucket_s > 0.0);
+        let n = ((t1 - t0) / bucket_s).ceil().max(0.0) as usize;
+        let mut sums = vec![0.0f64; n];
+        let mut counts = vec![0u64; n];
+        for (t, v) in self.samples(name, constraints) {
+            if t >= t0 && t < t1 {
+                let idx = ((t - t0) / bucket_s) as usize;
+                if idx < n {
+                    sums[idx] += v;
+                    counts[idx] += 1;
+                }
+            }
+        }
+        (0..n)
+            .map(|i| {
+                let mean = if counts[i] > 0 {
+                    sums[i] / counts[i] as f64
+                } else {
+                    f64::NAN
+                };
+                (t0 + (i as f64 + 0.5) * bucket_s, mean)
+            })
+            .collect()
+    }
+
+    /// Latest sample time across all series (experiment drain detection).
+    pub fn last_sample_time(&self) -> Option<f64> {
+        let map = self.inner.lock().unwrap();
+        map.values()
+            .filter_map(|s| s.lock().unwrap().last().map(|(t, _)| *t))
+            .fold(None, |acc, t| Some(acc.map_or(t, |a: f64| a.max(t))))
+    }
+
+    /// Total sample count (diagnostics / perf benches).
+    pub fn total_samples(&self) -> usize {
+        let map = self.inner.lock().unwrap();
+        map.values().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Drop all data (between experiments on a shared harness).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_read_back() {
+        let db = Tsdb::new();
+        db.write("records_total", &[("stage", "etl")], 1.0, 5.0);
+        db.write("records_total", &[("stage", "etl")], 2.0, 7.0);
+        let s = db.samples("records_total", &[("stage", "etl")]);
+        assert_eq!(s, vec![(1.0, 5.0), (2.0, 7.0)]);
+    }
+
+    #[test]
+    fn label_constraints_filter() {
+        let db = Tsdb::new();
+        db.write("m", &[("stage", "a")], 1.0, 1.0);
+        db.write("m", &[("stage", "b")], 1.0, 2.0);
+        assert_eq!(db.samples("m", &[("stage", "a")]).len(), 1);
+        // no constraints: both series merged
+        assert_eq!(db.samples("m", &[]).len(), 2);
+        assert_eq!(db.samples("m", &[("stage", "zzz")]).len(), 0);
+    }
+
+    #[test]
+    fn merged_samples_are_time_sorted() {
+        let db = Tsdb::new();
+        db.write("m", &[("s", "a")], 5.0, 1.0);
+        db.write("m", &[("s", "b")], 1.0, 2.0);
+        db.write("m", &[("s", "a")], 9.0, 3.0);
+        let times: Vec<f64> = db.samples("m", &[]).iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![1.0, 5.0, 9.0]);
+    }
+
+    #[test]
+    fn handle_appends_fast_path() {
+        let db = Tsdb::new();
+        let h = db.series("m", &[("w", "1")]);
+        h.push(0.0, 1.0);
+        h.push_batch(&[(1.0, 2.0), (2.0, 3.0)]);
+        assert_eq!(db.samples("m", &[]).len(), 3);
+        assert_eq!(db.total_samples(), 3);
+    }
+
+    #[test]
+    fn sum_range_is_inclusive() {
+        let db = Tsdb::new();
+        for t in 0..10 {
+            db.write("m", &[], t as f64, 1.0);
+        }
+        assert_eq!(db.sum_range("m", &[], 2.0, 5.0), 4.0);
+    }
+
+    #[test]
+    fn rate_buckets() {
+        let db = Tsdb::new();
+        // 10 records at t=0.5, 20 at t=1.5 → rates 10/s then 20/s with 1s buckets
+        db.write("recs", &[], 0.5, 10.0);
+        db.write("recs", &[], 1.5, 20.0);
+        let r = db.rate("recs", &[], 0.0, 2.0, 1.0);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0], (0.5, 10.0));
+        assert_eq!(r[1], (1.5, 20.0));
+    }
+
+    #[test]
+    fn rate_excludes_out_of_range() {
+        let db = Tsdb::new();
+        db.write("recs", &[], -1.0, 100.0);
+        db.write("recs", &[], 5.0, 100.0);
+        let r = db.rate("recs", &[], 0.0, 2.0, 1.0);
+        assert!(r.iter().all(|(_, v)| *v == 0.0));
+    }
+
+    #[test]
+    fn bucket_mean_handles_empty_buckets() {
+        let db = Tsdb::new();
+        db.write("lat", &[], 0.5, 2.0);
+        db.write("lat", &[], 0.6, 4.0);
+        let m = db.bucket_mean("lat", &[], 0.0, 2.0, 1.0);
+        assert_eq!(m[0].1, 3.0);
+        assert!(m[1].1.is_nan());
+    }
+
+    #[test]
+    fn last_sample_time_tracks_max() {
+        let db = Tsdb::new();
+        assert_eq!(db.last_sample_time(), None);
+        db.write("a", &[], 3.0, 1.0);
+        db.write("b", &[], 7.0, 1.0);
+        db.write("a", &[], 5.0, 1.0);
+        assert_eq!(db.last_sample_time(), Some(7.0));
+    }
+
+    #[test]
+    fn clear_empties() {
+        let db = Tsdb::new();
+        db.write("a", &[], 1.0, 1.0);
+        db.clear();
+        assert_eq!(db.total_samples(), 0);
+    }
+
+    #[test]
+    fn concurrent_writers() {
+        let db = Tsdb::new();
+        let mut handles = Vec::new();
+        for w in 0..4 {
+            let h = db.series("m", &[("worker", &w.to_string())]);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.push(i as f64, 1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(db.total_samples(), 4000);
+    }
+}

@@ -1,0 +1,252 @@
+//! Digital twins: mathematical models of a measured pipeline (§V.G).
+//!
+//! A [`TwinParams`] is a Table I row — the explainable parameters PlantD
+//! fits from one experiment: sustained capacity, fixed $/hr, no-queue
+//! latency, FIFO policy. Two predefined twin types (the paper's):
+//!
+//! - [`TwinKind::Simple`]       — fixed throughput capacity, infinite FIFO
+//!   queue (evaluated by the AOT queue-scan kernel through `runtime`);
+//! - [`TwinKind::Quickscaling`] — optimal horizontal scaling: no queue
+//!   ever forms; cost scales with the replica count needed each hour.
+//!
+//! "No synthetic data is actually processed; only the load shape is used,
+//! so the simulation is quite fast" — the twin consumes only projections.
+
+use crate::experiment::ExperimentRecord;
+use crate::util::json::Json;
+
+/// Twin model family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TwinKind {
+    /// Fixed capacity + infinite FIFO queue.
+    Simple,
+    /// Optimal horizontal scaling, no queueing delays.
+    Quickscaling,
+    /// Reactive horizontal scaling with lag — the paper's §VI.C
+    /// future-work item ("autoscaling behavior could be predicted by
+    /// wrapping a fixed model based on measurements with autoscaling
+    /// rules"), and §VII.B's suggestion that autoscaling the cheap
+    /// pipeline might beat the fast one.
+    Autoscaling(AutoscalePolicy),
+}
+
+/// Reactive autoscaler: replica count adjusts once per simulated hour
+/// based on the previous hour's utilization (processed / capacity) and
+/// backlog, like a conservative HPA.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AutoscalePolicy {
+    pub min_replicas: u32,
+    pub max_replicas: u32,
+    /// Scale up when utilization exceeds this (or any backlog remains).
+    pub scale_up_util: f64,
+    /// Scale down when utilization falls below this and no backlog.
+    pub scale_down_util: f64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            min_replicas: 1,
+            max_replicas: 8,
+            scale_up_util: 0.85,
+            scale_down_util: 0.30,
+        }
+    }
+}
+
+impl TwinKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TwinKind::Simple => "simple",
+            TwinKind::Quickscaling => "quickscaling",
+            TwinKind::Autoscaling(_) => "autoscaling",
+        }
+    }
+}
+
+/// The fitted parameters of a digital twin (Table I).
+#[derive(Debug, Clone)]
+pub struct TwinParams {
+    /// Name of the pipeline variant this twin models.
+    pub name: String,
+    pub kind: TwinKind,
+    /// Sustained ingest capacity, records/second ("max rec/s").
+    pub max_rps: f64,
+    /// Fixed resource cost per hour, USD ("$/hr"; the paper prints cents).
+    pub cost_per_hr: f64,
+    /// Per-record processing latency with no queuing, seconds.
+    pub avg_latency_s: f64,
+    /// Queue discipline (always FIFO in the paper).
+    pub policy: &'static str,
+}
+
+impl TwinParams {
+    /// Fit a Simple twin from one experiment record — the paper's
+    /// proof-of-concept model: "uses the total time to fully process all
+    /// the records in the generated load, and calculates the apparent
+    /// sustained throughput".
+    pub fn fit(record: &ExperimentRecord) -> TwinParams {
+        TwinParams {
+            name: record.variant.to_string(),
+            kind: TwinKind::Simple,
+            max_rps: record.zips_sent as f64 / record.duration_s,
+            cost_per_hr: record.cost_per_hr_usd,
+            avg_latency_s: record.latency_nq_mean_s,
+            policy: "fifo",
+        }
+    }
+
+    /// The same parameters reinterpreted as a Quickscaling twin.
+    pub fn as_quickscaling(&self) -> TwinParams {
+        TwinParams {
+            kind: TwinKind::Quickscaling,
+            ..self.clone()
+        }
+    }
+
+    /// The same parameters wrapped in reactive autoscaling rules.
+    pub fn as_autoscaling(&self, policy: AutoscalePolicy) -> TwinParams {
+        TwinParams {
+            kind: TwinKind::Autoscaling(policy),
+            ..self.clone()
+        }
+    }
+
+    /// Cost per processed record at full utilization — the paper's §VI.C
+    /// "dividing those two parameters" comparison.
+    pub fn cost_per_record(&self) -> f64 {
+        self.cost_per_hr / (self.max_rps * 3600.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("kind", Json::str(self.kind.as_str())),
+            ("max_rps", Json::num(self.max_rps)),
+            ("cost_per_hr", Json::num(self.cost_per_hr)),
+            ("avg_latency_s", Json::num(self.avg_latency_s)),
+            ("policy", Json::str(self.policy)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TwinParams, String> {
+        let get = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("twin: missing '{k}'"))
+        };
+        let kind = match j.get("kind").and_then(Json::as_str).unwrap_or("simple") {
+            "simple" => TwinKind::Simple,
+            "quickscaling" => TwinKind::Quickscaling,
+            other => return Err(format!("twin: unknown kind '{other}'")),
+        };
+        Ok(TwinParams {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            kind,
+            max_rps: get("max_rps")?,
+            cost_per_hr: get("cost_per_hr")?,
+            avg_latency_s: get("avg_latency_s")?,
+            policy: "fifo",
+        })
+    }
+
+    /// The paper's three Table I twins, as published (for benches that
+    /// regenerate Table II without re-running the wind tunnel).
+    pub fn paper_table1() -> Vec<TwinParams> {
+        let mk = |name: &str, max_rps: f64, cents_hr: f64, lat: f64| TwinParams {
+            name: name.to_string(),
+            kind: TwinKind::Simple,
+            max_rps,
+            cost_per_hr: cents_hr / 100.0,
+            avg_latency_s: lat,
+            policy: "fifo",
+        };
+        vec![
+            mk("blocking-write", 1.95, 0.82, 0.15),
+            mk("no-blocking-write", 6.15, 7.03, 0.06),
+            mk("cpu-limited", 0.66, 0.27, 0.29),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{DataSet, DataSetSpec};
+    use crate::experiment::{Experiment, ExperimentHarness};
+    use crate::loadgen::LoadPattern;
+    use crate::pipeline::VariantConfig;
+
+    #[test]
+    fn paper_table1_values() {
+        let twins = TwinParams::paper_table1();
+        assert_eq!(twins.len(), 3);
+        assert_eq!(twins[0].max_rps, 1.95);
+        assert!((twins[1].cost_per_hr - 0.0703).abs() < 1e-12);
+        assert_eq!(twins[2].avg_latency_s, 0.29);
+    }
+
+    #[test]
+    fn cost_per_record_ordering_matches_paper() {
+        // §VI.C: no-blocking ≈ $0.00032/record, ~3× blocking ($0.00012),
+        // cpu-limited ≈ $0.00011. (Those dollar figures take the paper's
+        // ¢/hr column as $/hr; we reproduce the *ratios* with the honest
+        // units.)
+        let twins = TwinParams::paper_table1();
+        let per_rec: Vec<f64> = twins.iter().map(|t| t.cost_per_record()).collect();
+        let ratio = per_rec[1] / per_rec[0];
+        assert!((2.0..4.0).contains(&ratio), "ratio {ratio}");
+        assert!(per_rec[2] < per_rec[0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = &TwinParams::paper_table1()[0];
+        let j = t.to_json();
+        let back = TwinParams::from_json(&j).unwrap();
+        assert_eq!(back.name, t.name);
+        assert_eq!(back.kind, TwinKind::Simple);
+        assert!((back.max_rps - t.max_rps).abs() < 1e-12);
+        assert!(TwinParams::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn quickscaling_reinterpretation() {
+        let t = TwinParams::paper_table1()[0].as_quickscaling();
+        assert_eq!(t.kind, TwinKind::Quickscaling);
+        assert_eq!(t.max_rps, 1.95);
+    }
+
+    #[test]
+    fn fit_recovers_capacity_from_saturating_experiment() {
+        // Saturate the cpu-limited variant (cheapest to drain: few zips)
+        // moderate scale: see experiment::tests for the rationale
+        let harness = ExperimentHarness::new(300.0);
+        let exp = Experiment::new(
+            "fit-test",
+            LoadPattern::steady(6.0, 4.0), // 24 zips ≫ 0.66 z/s
+            DataSet::generate(DataSetSpec {
+                payloads: 8,
+                records_per_subsystem: 4,
+                bad_rate: 0.0,
+                seed: 4,
+            }),
+        );
+        let cfg = VariantConfig::cpu_limited();
+        let rec = harness.run(&cfg, &exp).unwrap();
+        let twin = TwinParams::fit(&rec);
+        let analytic = cfg.analytic_capacity_zps();
+        assert!(
+            (twin.max_rps / analytic - 1.0).abs() < 0.35,
+            "fit {} vs analytic {analytic}",
+            twin.max_rps
+        );
+        assert_eq!(twin.policy, "fifo");
+        assert!(twin.avg_latency_s > 0.0);
+        assert!((twin.cost_per_hr - cfg.cost_per_hr(&harness.prices)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal benchmarking harness (criterion is not in the offline
+//! dependency set).
+//!
+//! `cargo bench` targets use [`Bench`] to time named workloads with
+//! warmup + repeated measurement, print mean/min/max wall time, and
+//! return the last result so benches can also print the paper table they
+//! regenerate. Timings are wall-clock (the benches pin no cores; treat
+//! small deltas accordingly).
+
+use std::time::Instant;
+
+/// One timed workload.
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} {:>5} iters  mean {:>10}  min {:>10}  max {:>10}",
+            self.name,
+            self.iters,
+            humane(self.mean_s),
+            humane(self.min_s),
+            humane(self.max_s)
+        )
+    }
+}
+
+fn humane(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+/// Returns the stats and the last iteration's output.
+pub fn run<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> (BenchResult, T) {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed().as_secs_f64());
+        last = Some(out);
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        min_s: times.iter().cloned().fold(f64::MAX, f64::min),
+        max_s: times.iter().cloned().fold(f64::MIN, f64::max),
+    };
+    println!("{}", result.report());
+    (result, last.unwrap())
+}
+
+/// Throughput helper: items processed per second at the mean time.
+pub fn throughput(items: u64, r: &BenchResult) -> f64 {
+    items as f64 / r.mean_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_and_returns_output() {
+        let (r, out) = run("noop-sum", 1, 5, || (0..1000u64).sum::<u64>());
+        assert_eq!(out, 499_500);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_s: 0.5,
+            min_s: 0.5,
+            max_s: 0.5,
+        };
+        assert_eq!(throughput(100, &r), 200.0);
+    }
+
+    #[test]
+    fn humane_units() {
+        assert_eq!(humane(2.0), "2.00s");
+        assert_eq!(humane(0.002), "2.00ms");
+        assert_eq!(humane(0.0000005), "0.5µs");
+    }
+}

@@ -1,0 +1,163 @@
+//! Tiny command-line parser for the `plantd` binary (clap is not in the
+//! offline dependency set).
+//!
+//! Grammar: `plantd <subcommand> [--flag] [--key value]... [positional]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    /// Error if any option/flag is not in the allowed set (typo guard).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown option --{k}; expected one of: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["simulate", "--twin", "blocking", "--out", "out/"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.opt("twin"), Some("blocking"));
+        assert_eq!(a.opt("out"), Some("out/"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["x", "--rate=3.5"]);
+        assert_eq!(a.opt_f64("rate", 0.0).unwrap(), 3.5);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse(&["run", "--verbose", "--seed", "7"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["report", "exp1", "exp2"]);
+        assert_eq!(a.positional, vec!["exp1", "exp2"]);
+    }
+
+    #[test]
+    fn numeric_parse_errors() {
+        let a = parse(&["x", "--rate", "abc"]);
+        assert!(a.opt_f64("rate", 0.0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.opt_or("missing", "d"), "d");
+        assert_eq!(a.opt_f64("missing", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn unknown_option_detected() {
+        let a = parse(&["x", "--bogus", "1"]);
+        assert!(a.check_known(&["rate"]).is_err());
+        assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // a value starting with '-' but not '--' is still a value
+        let a = parse(&["x", "--growth", "-0.5"]);
+        assert_eq!(a.opt_f64("growth", 0.0).unwrap(), -0.5);
+    }
+}

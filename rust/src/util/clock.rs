@@ -1,0 +1,179 @@
+//! Simulation time.
+//!
+//! Every PlantD component reads time through a [`Clock`] so that wind-tunnel
+//! experiments can run on a *scaled* clock: the paper's 1230-second
+//! blocking-write experiment replays in ~20 s of wall time at `scale = 60`,
+//! while all reported timestamps, durations, throughputs and costs stay in
+//! virtual (paper-unit) seconds. The scale is applied uniformly — to the
+//! load generator's pacing, every stage's service time, and the metric
+//! timestamps — so relative behaviour is preserved (DESIGN.md §5).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Virtual time source. `now_s` returns seconds since the clock's epoch.
+pub trait Clock: Send + Sync {
+    /// Current virtual time, seconds since epoch.
+    fn now_s(&self) -> f64;
+    /// Block the calling thread for `sim_seconds` of virtual time.
+    fn sleep_s(&self, sim_seconds: f64);
+    /// Like `sleep_s` but without the precision spin — for background
+    /// work (upload pools, persistence) whose exact wake time doesn't
+    /// feed a measurement. Burns no CPU, so it cannot distort the
+    /// foreground stages' timed service on a shared core.
+    fn sleep_coarse_s(&self, sim_seconds: f64) {
+        self.sleep_s(sim_seconds);
+    }
+    /// Virtual-to-wall scale factor (virtual seconds per wall second).
+    fn scale(&self) -> f64 {
+        1.0
+    }
+}
+
+pub type SharedClock = Arc<dyn Clock>;
+
+/// Wall clock with a virtual speed-up factor.
+pub struct ScaledClock {
+    origin: Instant,
+    scale: f64,
+}
+
+impl ScaledClock {
+    /// `scale` = virtual seconds per wall-clock second (≥ 1 speeds up).
+    pub fn new(scale: f64) -> Arc<Self> {
+        assert!(scale > 0.0, "clock scale must be positive");
+        Arc::new(ScaledClock {
+            origin: Instant::now(),
+            scale,
+        })
+    }
+
+    pub fn realtime() -> Arc<Self> {
+        Self::new(1.0)
+    }
+}
+
+impl Clock for ScaledClock {
+    fn now_s(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64() * self.scale
+    }
+
+    fn sleep_s(&self, sim_seconds: f64) {
+        if sim_seconds <= 0.0 {
+            return;
+        }
+        let wall = sim_seconds / self.scale;
+        // Hybrid sleep: OS sleep overshoots by a scheduling quantum
+        // (~60–500 µs), which at high clock scales would inflate every
+        // modeled service time and corrupt measured throughput. Sleep for
+        // the bulk, then yield-spin the final stretch for µs precision.
+        const SPIN_S: f64 = 0.0005;
+        let deadline = Instant::now() + Duration::from_secs_f64(wall);
+        if wall > SPIN_S {
+            std::thread::sleep(Duration::from_secs_f64(wall - SPIN_S));
+        }
+        while Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+    }
+
+    fn sleep_coarse_s(&self, sim_seconds: f64) {
+        if sim_seconds <= 0.0 {
+            return;
+        }
+        std::thread::sleep(Duration::from_secs_f64(sim_seconds / self.scale));
+    }
+
+    fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+/// Manually advanced clock for deterministic unit tests. `sleep_s` advances
+/// the clock itself (single-threaded semantics).
+pub struct ManualClock {
+    nanos: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ManualClock {
+            nanos: AtomicU64::new(0),
+        })
+    }
+
+    pub fn advance_s(&self, seconds: f64) {
+        assert!(seconds >= 0.0);
+        self.nanos
+            .fetch_add((seconds * 1e9) as u64, Ordering::SeqCst);
+    }
+
+    pub fn set_s(&self, seconds: f64) {
+        self.nanos.store((seconds * 1e9) as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_s(&self) -> f64 {
+        self.nanos.load(Ordering::SeqCst) as f64 / 1e9
+    }
+
+    fn sleep_s(&self, sim_seconds: f64) {
+        self.advance_s(sim_seconds.max(0.0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manual_clock_advances() {
+        let c = ManualClock::new();
+        assert_eq!(c.now_s(), 0.0);
+        c.advance_s(1.5);
+        assert!((c.now_s() - 1.5).abs() < 1e-9);
+        c.sleep_s(0.5);
+        assert!((c.now_s() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn manual_clock_set() {
+        let c = ManualClock::new();
+        c.set_s(100.0);
+        assert!((c.now_s() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_clock_runs_fast() {
+        let c = ScaledClock::new(1000.0);
+        let t0 = c.now_s();
+        std::thread::sleep(Duration::from_millis(5));
+        let dt = c.now_s() - t0;
+        assert!(dt >= 4.0, "expected >= 4 virtual seconds, got {dt}");
+    }
+
+    #[test]
+    fn scaled_sleep_divides_wall_time() {
+        let c = ScaledClock::new(100.0);
+        let w0 = Instant::now();
+        c.sleep_s(1.0); // should sleep ~10 ms of wall time
+        let wall = w0.elapsed().as_secs_f64();
+        assert!(wall < 0.5, "slept {wall}s wall for 1 virtual second");
+    }
+
+    #[test]
+    fn negative_sleep_is_noop() {
+        let c = ScaledClock::new(1.0);
+        let w0 = Instant::now();
+        c.sleep_s(-5.0);
+        assert!(w0.elapsed().as_secs_f64() < 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_scale_rejected() {
+        ScaledClock::new(0.0);
+    }
+}

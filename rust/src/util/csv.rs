@@ -1,0 +1,152 @@
+//! Minimal CSV writing/reading for figure series dumps (`out/fig*.csv`)
+//! and dataset payload formatting. RFC 4180 quoting.
+
+use std::io::{self, Write};
+
+/// Write one CSV row, quoting fields that need it.
+pub fn write_row<W: Write>(w: &mut W, fields: &[String]) -> io::Result<()> {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            w.write_all(b",")?;
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') {
+            w.write_all(b"\"")?;
+            w.write_all(f.replace('"', "\"\"").as_bytes())?;
+            w.write_all(b"\"")?;
+        } else {
+            w.write_all(f.as_bytes())?;
+        }
+    }
+    w.write_all(b"\n")
+}
+
+/// A convenience builder that accumulates a CSV document in memory.
+#[derive(Debug, Default)]
+pub struct CsvDoc {
+    buf: Vec<u8>,
+}
+
+impl CsvDoc {
+    pub fn new(header: &[&str]) -> Self {
+        let mut doc = CsvDoc { buf: Vec::new() };
+        doc.push_strs(header);
+        doc
+    }
+
+    pub fn push_strs(&mut self, fields: &[&str]) {
+        let owned: Vec<String> = fields.iter().map(|s| s.to_string()).collect();
+        write_row(&mut self.buf, &owned).expect("vec write");
+    }
+
+    pub fn push(&mut self, fields: Vec<String>) {
+        write_row(&mut self.buf, &fields).expect("vec write");
+    }
+
+    /// Row of numeric values formatted with `prec` decimals.
+    pub fn push_nums(&mut self, label: Option<&str>, values: &[f64], prec: usize) {
+        let mut fields: Vec<String> = Vec::new();
+        if let Some(l) = label {
+            fields.push(l.to_string());
+        }
+        fields.extend(values.iter().map(|v| format!("{v:.prec$}")));
+        self.push(fields);
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, &self.buf)
+    }
+}
+
+/// Parse a CSV document into rows of fields (handles quoted fields).
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => row.push(std::mem::take(&mut field)),
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                '\r' => {}
+                c => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !row.is_empty() {
+        row.push(field);
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_plain() {
+        let mut d = CsvDoc::new(&["a", "b"]);
+        d.push_strs(&["1", "2"]);
+        let rows = parse(std::str::from_utf8(d.as_bytes()).unwrap());
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["1", "2"]]);
+    }
+
+    #[test]
+    fn quoting_commas_and_quotes() {
+        let mut d = CsvDoc::new(&["x"]);
+        d.push_strs(&["a,b"]);
+        d.push_strs(&["say \"hi\""]);
+        let text = String::from_utf8(d.as_bytes().to_vec()).unwrap();
+        assert!(text.contains("\"a,b\""));
+        let rows = parse(&text);
+        assert_eq!(rows[1][0], "a,b");
+        assert_eq!(rows[2][0], "say \"hi\"");
+    }
+
+    #[test]
+    fn push_nums_precision() {
+        let mut d = CsvDoc::new(&["h", "v"]);
+        d.push_nums(Some("0"), &[1.23456], 2);
+        let rows = parse(std::str::from_utf8(d.as_bytes()).unwrap());
+        assert_eq!(rows[1], vec!["0", "1.23"]);
+    }
+
+    #[test]
+    fn parse_crlf_and_trailing_newline() {
+        let rows = parse("a,b\r\n1,2\r\n");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["1", "2"]);
+    }
+
+    #[test]
+    fn parse_embedded_newline_in_quotes() {
+        let rows = parse("\"a\nb\",c\n");
+        assert_eq!(rows[0][0], "a\nb");
+        assert_eq!(rows[0][1], "c");
+    }
+}

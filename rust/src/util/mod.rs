@@ -1,0 +1,18 @@
+//! Cross-cutting utilities: deterministic PRNG, JSON, statistics, ASCII
+//! tables, CSV, the scaled simulation clock, a tiny CLI parser, and a
+//! property-testing helper.
+//!
+//! These stand in for crates (rand, serde, clap, proptest) that are not in
+//! the offline dependency set — see DESIGN.md §5 (substitutions). They are
+//! deliberately small, fully tested, and dependency-free.
+
+pub mod bench;
+pub mod cli;
+pub mod clock;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

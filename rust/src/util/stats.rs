@@ -1,0 +1,259 @@
+//! Descriptive statistics for metric series: streaming moments (Welford),
+//! exact quantiles, and weighted quantiles (used for per-record latency
+//! percentiles where each hour is weighted by its arrival count).
+
+/// Streaming mean/variance accumulator (Welford's algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+}
+
+/// Exact quantile of a sample (linear interpolation between order
+/// statistics, the "type 7" definition used by numpy's default).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q), "quantile {q} outside [0,1]");
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    quantile_sorted(&v, q)
+}
+
+/// Quantile of an already-sorted slice.
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = pos - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Weighted quantile: the smallest value `v` such that the summed weight of
+/// samples `<= v` reaches `q` of the total weight. Zero-weight samples are
+/// ignored. Used for per-record latency stats where each simulated hour
+/// carries `arrivals(hour)` records.
+pub fn weighted_quantile(values: &[f64], weights: &[f64], q: f64) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    assert!((0.0..=1.0).contains(&q));
+    let mut idx: Vec<usize> = (0..values.len()).filter(|&i| weights[i] > 0.0).collect();
+    if idx.is_empty() {
+        return f64::NAN;
+    }
+    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).expect("NaN value"));
+    let total: f64 = idx.iter().map(|&i| weights[i]).sum();
+    let target = q * total;
+    let mut acc = 0.0;
+    for &i in &idx {
+        acc += weights[i];
+        if acc >= target {
+            return values[i];
+        }
+    }
+    values[*idx.last().unwrap()]
+}
+
+/// Weighted mean; NaN on zero total weight.
+pub fn weighted_mean(values: &[f64], weights: &[f64]) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return f64::NAN;
+    }
+    values
+        .iter()
+        .zip(weights)
+        .map(|(v, w)| v * w)
+        .sum::<f64>()
+        / total
+}
+
+/// Fraction of weight whose value satisfies `value <= limit`.
+/// This is the paper's "% latency met" column.
+pub fn weighted_fraction_below(values: &[f64], weights: &[f64], limit: f64) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return f64::NAN;
+    }
+    values
+        .iter()
+        .zip(weights)
+        .filter(|(v, _)| **v <= limit)
+        .map(|(_, w)| w)
+        .sum::<f64>()
+        / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 5);
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0_f64).powi(2)).sum::<f64>() / 5.0;
+        assert!((w.variance() - var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn welford_empty_is_nan() {
+        let w = Welford::new();
+        assert!(w.mean().is_nan());
+        assert!(w.variance().is_nan());
+    }
+
+    #[test]
+    fn quantile_basics() {
+        let xs = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_single_element() {
+        assert_eq!(quantile(&[7.0], 0.3), 7.0);
+    }
+
+    #[test]
+    fn quantile_empty_nan() {
+        assert!(quantile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn weighted_quantile_skews_with_weight() {
+        let values = [1.0, 2.0, 3.0];
+        // almost all weight on 3.0
+        assert_eq!(weighted_quantile(&values, &[0.01, 0.01, 100.0], 0.5), 3.0);
+        // uniform weights: median is the middle value
+        assert_eq!(weighted_quantile(&values, &[1.0, 1.0, 1.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn weighted_quantile_ignores_zero_weight() {
+        let v = [100.0, 1.0, 2.0];
+        let w = [0.0, 1.0, 1.0];
+        assert_eq!(weighted_quantile(&v, &w, 1.0), 2.0);
+    }
+
+    #[test]
+    fn weighted_mean_basics() {
+        assert!((weighted_mean(&[1.0, 3.0], &[1.0, 3.0]) - 2.5).abs() < 1e-12);
+        assert!(weighted_mean(&[1.0], &[0.0]).is_nan());
+    }
+
+    #[test]
+    fn fraction_below() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        let w = [1.0, 1.0, 1.0, 1.0];
+        assert!((weighted_fraction_below(&v, &w, 2.5) - 0.5).abs() < 1e-12);
+        assert_eq!(weighted_fraction_below(&v, &w, 0.5), 0.0);
+        assert_eq!(weighted_fraction_below(&v, &w, 10.0), 1.0);
+    }
+
+    #[test]
+    fn fraction_below_weighted() {
+        // 90% of records have latency 1s, 10% have 100s
+        let v = [1.0, 100.0];
+        let w = [9.0, 1.0];
+        assert!((weighted_fraction_below(&v, &w, 4.0) - 0.9).abs() < 1e-12);
+    }
+}

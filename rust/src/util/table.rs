@@ -1,0 +1,184 @@
+//! ASCII table rendering for paper-style tables (Tables I–IV) and
+//! experiment/simulation comparisons in the CLI and benches.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder: header + rows of strings, rendered with box
+/// drawing suitable for terminals and monospace docs.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: Option<String>,
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            title: None,
+            aligns: header
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    /// Override alignment for one column (default: first left, rest right).
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity mismatch: {cells:?}"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(cells.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        let fmt_row = |cells: &[String], aligns: &[Align]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        s.push(' ');
+                        s.push_str(&cells[i]);
+                        s.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        s.push_str(&" ".repeat(pad + 1));
+                        s.push_str(&cells[i]);
+                        s.push(' ');
+                    }
+                }
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a float with `prec` decimal places, trimming to at most that.
+pub fn fnum(v: f64, prec: usize) -> String {
+    if v.is_nan() {
+        return "-".to_string();
+    }
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new(&["model", "max rec/s", "$/hr"]);
+        t.row_strs(&["blocking-write", "1.95", "0.82"]);
+        t.row_strs(&["no-blocking-write", "6.15", "7.03"]);
+        let s = t.render();
+        assert!(s.contains("| model "));
+        assert!(s.contains("| blocking-write "));
+        // numeric columns right-aligned: value ends right before the pipe
+        assert!(s.contains("1.95 |"));
+        assert_eq!(s.lines().filter(|l| l.starts_with('+')).count(), 3);
+    }
+
+    #[test]
+    fn column_widths_expand_to_longest_cell() {
+        let mut t = Table::new(&["a"]);
+        t.row_strs(&["longer-cell-content"]);
+        let s = t.render();
+        let line = s.lines().next().unwrap();
+        assert_eq!(line.len(), "longer-cell-content".len() + 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn title_prepended() {
+        let t = Table::new(&["x"]).with_title("TABLE I: params");
+        assert!(t.render().starts_with("TABLE I: params\n"));
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(1.956, 2), "1.96");
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fnum(3.0, 0), "3");
+    }
+
+    #[test]
+    fn unicode_width_by_chars() {
+        let mut t = Table::new(&["name"]);
+        t.row_strs(&["héllo"]);
+        let s = t.render();
+        // all body lines should have equal char count
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+}

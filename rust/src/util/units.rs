@@ -1,0 +1,107 @@
+//! Unit conversions and humanized formatting used across reports:
+//! bytes ↔ MB/GB, seconds ↔ human durations, dollars/cents.
+
+pub const MB: f64 = 1024.0 * 1024.0;
+pub const GB: f64 = 1024.0 * MB;
+
+pub fn bytes_to_mb(b: u64) -> f64 {
+    b as f64 / MB
+}
+
+pub fn bytes_to_gb(b: u64) -> f64 {
+    b as f64 / GB
+}
+
+/// `1536` → `"1.5 KiB"`, etc.
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i + 1 < UNITS.len() {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[i])
+    }
+}
+
+/// `4000.0` seconds → `"1h06m40s"`; large values roll to days.
+pub fn human_duration(mut secs: f64) -> String {
+    if secs.is_nan() {
+        return "-".into();
+    }
+    if secs < 0.0 {
+        secs = 0.0;
+    }
+    let days = (secs / 86_400.0).floor() as u64;
+    let rem = secs - days as f64 * 86_400.0;
+    let h = (rem / 3600.0).floor() as u64;
+    let m = ((rem - h as f64 * 3600.0) / 60.0).floor() as u64;
+    let s = rem - h as f64 * 3600.0 - m as f64 * 60.0;
+    if days > 0 {
+        format!("{days}d{h:02}h")
+    } else if h > 0 {
+        format!("{h}h{m:02}m{s:02.0}s")
+    } else if m > 0 {
+        format!("{m}m{s:02.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.1}s")
+    } else {
+        format!("{:.0}ms", s * 1000.0)
+    }
+}
+
+/// Dollars with sensible precision: `0.0012` → `"$0.0012"`, `614.19` → `"$614.19"`.
+pub fn dollars(v: f64) -> String {
+    if v.is_nan() {
+        "-".into()
+    } else if v != 0.0 && v.abs() < 0.01 {
+        format!("${v:.4}")
+    } else {
+        format!("${v:.2}")
+    }
+}
+
+/// Cents (the unit of the paper's Table III).
+pub fn cents(v: f64) -> String {
+    format!("{v:.2}¢")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_conversions() {
+        assert_eq!(bytes_to_mb(1024 * 1024), 1.0);
+        assert_eq!(bytes_to_gb(1024 * 1024 * 1024), 1.0);
+    }
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(5 * 1024 * 1024), "5.0 MiB");
+    }
+
+    #[test]
+    fn human_duration_formats() {
+        assert_eq!(human_duration(0.25), "250ms");
+        assert_eq!(human_duration(12.3), "12.3s");
+        assert_eq!(human_duration(75.0), "1m15s");
+        assert_eq!(human_duration(4000.0), "1h06m40s");
+        assert!(human_duration(86_400.0 * 406.0).starts_with("406d"));
+        assert_eq!(human_duration(f64::NAN), "-");
+    }
+
+    #[test]
+    fn money_formats() {
+        assert_eq!(dollars(614.19), "$614.19");
+        assert_eq!(dollars(0.0012), "$0.0012");
+        assert_eq!(dollars(0.0), "$0.00");
+        assert_eq!(cents(0.82), "0.82¢");
+    }
+}

@@ -1,0 +1,353 @@
+//! Integration tests: the full wind-tunnel loop across module boundaries —
+//! datagen → loadgen → pipeline → telemetry → cost → experiment → twin →
+//! traffic → bizsim — plus PJRT-vs-native cross-validation when the AOT
+//! artifacts are present.
+
+use std::path::Path;
+
+use plantd::bizsim::{monthly_costs, simulate_batch, CostSpec, SloSpec};
+use plantd::datagen::{DataSet, DataSetSpec};
+use plantd::experiment::{Experiment, ExperimentHarness};
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::runtime::{native::NativeBackend, Engine, ScenarioParams, SimBackend};
+use plantd::traffic::TrafficModel;
+use plantd::twin::{TwinKind, TwinParams};
+
+fn small_exp() -> Experiment {
+    Experiment::new(
+        "integration",
+        LoadPattern::ramp(10.0, 0.0, 8.0), // 40 zips
+        DataSet::generate(DataSetSpec {
+            payloads: 16,
+            records_per_subsystem: 5,
+            bad_rate: 0.05,
+            seed: 0xBEEF,
+        }),
+    )
+}
+
+#[test]
+fn measure_fit_simulate_roundtrip() {
+    // the core loop: measure a pipeline, fit its twin, simulate a year
+    let harness = ExperimentHarness::new(300.0);
+    let rec = harness
+        .run(&VariantConfig::no_blocking_write(), &small_exp())
+        .unwrap();
+    assert_eq!(rec.zips_sent, 40);
+    assert!(rec.rows_inserted > 0);
+    assert!(rec.rows_scrubbed > 0, "5% bad rate must scrub something");
+
+    let twin = TwinParams::fit(&rec);
+    assert_eq!(twin.kind, TwinKind::Simple);
+    assert!(twin.max_rps > 0.5);
+
+    let result = simulate_batch(
+        &NativeBackend,
+        &[twin],
+        &TrafficModel::nominal(),
+        &SloSpec::default(),
+    )
+    .unwrap();
+    assert_eq!(result.len(), 1);
+    assert!(result[0].cost_usd > 0.0);
+    // conservation through the whole stack
+    let total_load: f64 = result[0].load.iter().sum();
+    let processed: f64 = result[0].throughput.iter().sum();
+    let backlog = result[0].queue.last().unwrap();
+    assert!(((processed + backlog) - total_load).abs() / total_load < 1e-6);
+}
+
+#[test]
+fn spans_flow_to_tsdb_and_cost_is_prorated() {
+    let harness = ExperimentHarness::new(300.0);
+    let rec = harness
+        .run(&VariantConfig::blocking_write(), &small_exp())
+        .unwrap();
+    // spans landed as metrics
+    let recs = harness.tsdb.sum_range(
+        "stage_records",
+        &[("stage", "unzipper_phase")],
+        rec.started_s,
+        rec.drained_s + 1.0,
+    );
+    assert_eq!(recs as u64, 40);
+    // v2x file-level records = 5x zips (the paper's Fig. 8 note)
+    let v2x = harness.tsdb.sum_range(
+        "stage_records",
+        &[("stage", "v2x_phase")],
+        rec.started_s,
+        rec.drained_s + 1.0,
+    );
+    assert_eq!(v2x as u64, 200);
+    // cost = rate x prorated duration, not whole billing hours
+    let expect = rec.cost_per_hr_usd * rec.duration_s / 3600.0;
+    assert!((rec.total_cost_usd - expect).abs() < 1e-12);
+    assert!(rec.duration_s < 3600.0, "short experiment must not bill a whole hour");
+}
+
+#[test]
+fn blocking_defect_visible_in_blob_and_latency() {
+    // the paper's §VII.A observation, as an assertion: removing the
+    // blocking write raises throughput and drops v2x latency
+    let harness = ExperimentHarness::new(300.0);
+    let exp = small_exp();
+    let block = harness.run(&VariantConfig::blocking_write(), &exp).unwrap();
+    let noblock = harness
+        .run(&VariantConfig::no_blocking_write(), &exp)
+        .unwrap();
+    assert!(noblock.mean_throughput_rps > block.mean_throughput_rps * 1.5);
+    assert!(noblock.latency_nq_mean_s < block.latency_nq_mean_s);
+    // both persisted the same number of blob objects eventually
+    // (40 raw zips + 200 parquet files each)
+}
+
+#[test]
+fn engaged_pipeline_refuses_second_experiment() {
+    // PlantD "will not start another experiment until the first one is
+    // done" — the engage flag is the mechanism
+    let harness = ExperimentHarness::new(2000.0);
+    let cloud = &harness.cloud;
+    let tsdb = harness.tsdb.clone();
+    let spans = plantd::telemetry::SpanSink::new();
+    let handle = plantd::pipeline::PipelineDeployment::deploy(
+        &VariantConfig::blocking_write(),
+        cloud,
+        "wind-tunnel-node",
+        harness.clock.clone(),
+        spans,
+        &tsdb,
+    );
+    assert!(handle.engage());
+    assert!(!handle.engage(), "second engage must be refused");
+    handle.release();
+    assert!(handle.engage());
+    handle.finish();
+}
+
+#[test]
+fn pjrt_and_native_backends_agree_end_to_end() {
+    let Ok(engine) = Engine::load(Path::new("artifacts")) else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let native = NativeBackend;
+    let model = TrafficModel::nominal();
+
+    // traffic
+    let a = engine.traffic(&model).unwrap();
+    let b = native.traffic(&model).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() / y.max(1.0) < 1e-4, "traffic diverged: {x} vs {y}");
+    }
+
+    // twin_sim
+    let scenarios = [
+        ScenarioParams { cap_rps: 1.95, base_latency_s: 0.15 },
+        ScenarioParams { cap_rps: 0.66, base_latency_s: 0.29 },
+    ];
+    let pa = engine.twin_sim(&model, &scenarios).unwrap();
+    let pb = native.twin_sim(&model, &scenarios).unwrap();
+    for s in 0..2 {
+        for t in (0..8760).step_by(97) {
+            let (x, y) = (pa.queue[s][t], pb.queue[s][t]);
+            let tol = 1e-3 * y.abs().max(1000.0);
+            assert!((x - y).abs() < tol, "queue[{s}][{t}]: {x} vs {y}");
+        }
+        // throughput conservation holds on both backends
+        let (ta, tb): (f64, f64) = (
+            pa.throughput[s].iter().sum(),
+            pb.throughput[s].iter().sum(),
+        );
+        assert!((ta - tb).abs() / tb < 1e-3);
+    }
+
+    // retention
+    let daily: Vec<f64> = (0..365).map(|d| 1.0 + (d % 7) as f64 * 0.3).collect();
+    let ra = engine.retention(&daily, 91.0).unwrap();
+    let rb = native.retention(&daily, 91.0).unwrap();
+    for (x, y) in ra.iter().zip(&rb) {
+        assert!((x - y).abs() < 0.05, "retention diverged: {x} vs {y}");
+    }
+}
+
+#[test]
+fn monthly_costs_consistent_across_backends() {
+    let Ok(engine) = Engine::load(Path::new("artifacts")) else {
+        return;
+    };
+    let native = NativeBackend;
+    let load = native.traffic(&TrafficModel::nominal()).unwrap();
+    let spec = CostSpec::default();
+    let a = monthly_costs(&engine, &load, 0.0703, &spec).unwrap();
+    let b = monthly_costs(&native, &load, 0.0703, &spec).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x.storage - y.storage).abs() < 0.05);
+        assert_eq!(x.cloud, y.cloud);
+    }
+}
+
+#[test]
+fn resource_registry_drives_an_experiment() {
+    // declarative path: register resources, reconcile, then execute the
+    // experiment the registry describes
+    use plantd::resources::{Kind, Phase, Registry};
+    use plantd::util::json::Json;
+
+    let reg = Registry::new();
+    reg.apply(Kind::Schema, "telematics", Json::parse(r#"{"fields":[]}"#).unwrap());
+    reg.apply(Kind::DataSet, "fleet", Json::parse(r#"{"schema":"telematics"}"#).unwrap());
+    reg.apply(
+        Kind::LoadPattern,
+        "ramp",
+        Json::parse(r#"{"segments":[{"duration_s":10,"start_rps":0,"end_rps":8}]}"#).unwrap(),
+    );
+    reg.apply(Kind::Pipeline, "no-blocking-write", Json::parse("{}").unwrap());
+    reg.apply(
+        Kind::Experiment,
+        "e2e",
+        Json::parse(r#"{"dataset":"fleet","load_pattern":"ramp","pipeline":"no-blocking-write"}"#)
+            .unwrap(),
+    );
+    reg.reconcile();
+    let exp_res = reg.get(Kind::Experiment, "e2e").unwrap();
+    assert_eq!(exp_res.phase, Phase::Ready);
+
+    // materialize and run
+    let pattern = LoadPattern::from_json(
+        &reg.get(Kind::LoadPattern, "ramp").unwrap().spec,
+    )
+    .unwrap();
+    let harness = ExperimentHarness::new(500.0);
+    reg.set_phase(Kind::Pipeline, "no-blocking-write", Phase::Engaged, "e2e started");
+    let rec = harness
+        .run(
+            &VariantConfig::no_blocking_write(),
+            &Experiment::new("e2e", pattern, small_exp().dataset),
+        )
+        .unwrap();
+    reg.set_phase(Kind::Pipeline, "no-blocking-write", Phase::Ready, "e2e finished");
+    reg.set_phase(Kind::Experiment, "e2e", Phase::Completed, "drained");
+    assert_eq!(rec.zips_sent, 40);
+    assert_eq!(
+        reg.get(Kind::Experiment, "e2e").unwrap().phase,
+        Phase::Completed
+    );
+}
+
+#[test]
+fn table2_headline_crossover_from_freshly_fitted_twins() {
+    // fit twins from (fast, reduced) experiments, then check the paper's
+    // headline: non-block meets SLO everywhere, cpu-limited never does
+    let harness = ExperimentHarness::new(300.0);
+    let exp = Experiment::new(
+        "fit",
+        LoadPattern::steady(8.0, 6.0), // 48 zips, saturating
+        small_exp().dataset,
+    );
+    let mut twins = Vec::new();
+    for cfg in [
+        VariantConfig::no_blocking_write(),
+        VariantConfig::cpu_limited(),
+    ] {
+        let rec = harness.run(&cfg, &exp).unwrap();
+        twins.push(TwinParams::fit(&rec));
+    }
+    let results = simulate_batch(
+        &NativeBackend,
+        &twins,
+        &TrafficModel::nominal(),
+        &SloSpec::default(),
+    )
+    .unwrap();
+    assert!(results[0].slo_met, "no-blocking should meet the SLO");
+    assert!(!results[1].slo_met, "cpu-limited should collapse");
+    assert!(results[1].backlog_latency_s > 30.0 * 86_400.0);
+}
+
+#[test]
+fn query_load_measures_warehouse_latency() {
+    let harness = ExperimentHarness::new(500.0);
+    let mut exp = small_exp();
+    exp.queries = Some(plantd::experiment::QueryLoad {
+        rate_qps: 5.0,
+        duration_s: 4.0,
+    });
+    let rec = harness
+        .run(&VariantConfig::no_blocking_write(), &exp)
+        .unwrap();
+    let p50 = rec.query_p50_s.expect("query stats present");
+    let p95 = rec.query_p95_s.unwrap();
+    let qps = rec.query_achieved_qps.unwrap();
+    assert!(p50 > 0.0 && p95 >= p50, "p50={p50} p95={p95}");
+    // 2 ms planning + ~1 µs/row over ~5k rows → ~7 ms/query
+    assert!(p50 < 1.0, "query latency implausible: {p50}");
+    assert!((qps - 5.0).abs() / 5.0 < 0.5, "qps {qps}");
+}
+
+#[test]
+fn scheduled_experiment_waits_for_start_time() {
+    let harness = ExperimentHarness::new(2000.0);
+    let mut exp = Experiment::new(
+        "scheduled",
+        LoadPattern::steady(2.0, 2.0),
+        small_exp().dataset,
+    );
+    let start_at = harness.clock.now_s() + 20.0;
+    exp.start_at_s = Some(start_at);
+    let rec = harness
+        .run(&VariantConfig::no_blocking_write(), &exp)
+        .unwrap();
+    assert!(
+        rec.started_s >= start_at - 1.0,
+        "started {} before schedule {start_at}",
+        rec.started_s
+    );
+}
+
+#[test]
+fn concurrent_experiments_on_distinct_pipelines() {
+    // multi-endpoint experiments: two variants measured simultaneously on
+    // the shared cluster, then OpenCost-style allocation splits the node
+    // cost between their namespaces
+    use plantd::cost::{allocate_node_costs, namespace_cost};
+    let harness = std::sync::Arc::new(ExperimentHarness::new(400.0));
+    let exp = small_exp();
+    let h1 = {
+        let (harness, exp) = (harness.clone(), exp.clone());
+        std::thread::spawn(move || {
+            harness
+                .run(&VariantConfig::no_blocking_write(), &exp)
+                .unwrap()
+        })
+    };
+    let h2 = {
+        let (harness, exp) = (harness.clone(), exp.clone());
+        std::thread::spawn(move || {
+            harness.run(&VariantConfig::blocking_write(), &exp).unwrap()
+        })
+    };
+    let r1 = h1.join().unwrap();
+    let r2 = h2.join().unwrap();
+    assert_eq!(r1.zips_sent, 40);
+    assert_eq!(r2.zips_sent, 40);
+
+    // allocation: both namespaces metered usage on the shared node
+    let node = harness.cloud.node("wind-tunnel-node").unwrap();
+    let containers = harness.cloud.containers();
+    let t1 = r1.drained_s.max(r2.drained_s);
+    let allocs = allocate_node_costs(
+        node.price_per_hr * t1 / 3600.0,
+        node.capacity.vcpus,
+        node.capacity.mem_gb,
+        &containers,
+        0.0,
+        t1,
+    );
+    let c1 = namespace_cost(&allocs, "pipeline-no-blocking-write");
+    let c2 = namespace_cost(&allocs, "pipeline-blocking-write");
+    assert!(c1 > 0.0 && c2 > 0.0, "both namespaces must be charged: {c1} {c2}");
+    let total: f64 = allocs.iter().map(|a| a.cost).sum();
+    assert!((total - node.price_per_hr * t1 / 3600.0).abs() / total < 1e-9);
+}

@@ -1,0 +1,302 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! queueing, conservation, cost allocation), using the in-tree
+//! `util::proptest` harness with deterministic, replayable seeds.
+
+use plantd::bus::Topic;
+use plantd::cloud::{Cloud, Resources};
+use plantd::cost::{allocate_node_costs, namespace_cost};
+use plantd::loadgen::LoadPattern;
+use plantd::runtime::{native::NativeBackend, ScenarioParams, SimBackend};
+use plantd::traffic::TrafficModel;
+use plantd::util::json::Json;
+use plantd::util::proptest::check;
+use plantd::util::rng::Rng;
+use plantd::util::stats;
+
+fn random_pattern(rng: &mut Rng) -> LoadPattern {
+    let n_segs = rng.int_range(1, 5) as usize;
+    let mut p = LoadPattern::default();
+    for _ in 0..n_segs {
+        p = p.then(
+            rng.uniform(0.5, 60.0),
+            rng.uniform(0.0, 30.0),
+            rng.uniform(0.0, 30.0),
+        );
+    }
+    p
+}
+
+#[test]
+fn prop_load_schedule_is_monotone_and_area_consistent() {
+    check("load-schedule", 60, |rng| {
+        let p = random_pattern(rng);
+        let times = p.send_times();
+        // count matches the integral of the rate curve
+        assert_eq!(times.len() as u64, p.total_records());
+        // monotone, within the pattern duration
+        let total = p.total_duration_s();
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "schedule not monotone");
+        }
+        if let Some(&last) = times.last() {
+            assert!(last <= total + 1e-6, "send after pattern end");
+        }
+        // cumulative area at each send time equals the 1-based send index
+        for (k, &t) in times.iter().enumerate().step_by(7) {
+            let mut area = 0.0;
+            let mut t0 = 0.0;
+            for s in &p.segments {
+                let span = (t - t0).clamp(0.0, s.duration_s);
+                let r0 = s.start_rps;
+                let slope = (s.end_rps - s.start_rps) / s.duration_s;
+                area += r0 * span + slope * span * span / 2.0;
+                t0 += s.duration_s;
+            }
+            assert!(
+                (area - (k + 1) as f64).abs() < 1e-4,
+                "area {area} != {} at t={t}",
+                k + 1
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_topic_conserves_messages() {
+    check("topic-conservation", 25, |rng| {
+        let cap = rng.int_range(1, 64) as usize;
+        let n_producers = rng.int_range(1, 4) as usize;
+        let n_consumers = rng.int_range(1, 4) as usize;
+        let per_producer = rng.int_range(1, 300) as u64;
+        let topic: Topic<u64> = Topic::new("prop", cap);
+        let mut producers = Vec::new();
+        for p in 0..n_producers {
+            let t = topic.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    t.send(p as u64 * 1_000_000 + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..n_consumers {
+            let t = topic.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = t.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        topic.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(
+            all.len() as u64,
+            n_producers as u64 * per_producer,
+            "lost or duplicated messages"
+        );
+        let (enq, deq) = topic.counters();
+        assert_eq!(enq, deq);
+        assert!(topic.is_drained());
+    });
+}
+
+#[test]
+fn prop_lindley_invariants_under_random_traffic() {
+    let backend = NativeBackend;
+    check("lindley-invariants", 20, |rng| {
+        let mut model = TrafficModel::nominal();
+        model.base_rps = rng.uniform(0.1, 12.0);
+        model.growth_factor = rng.uniform(0.5, 2.5);
+        for f in model.month_f.iter_mut() {
+            *f = rng.uniform(0.5, 1.5);
+        }
+        let caps = [
+            rng.uniform(0.2, 10.0),
+            rng.uniform(0.2, 10.0),
+            1e9, // infinite-capacity control slot
+        ];
+        let scenarios: Vec<ScenarioParams> = caps
+            .iter()
+            .map(|&cap_rps| ScenarioParams {
+                cap_rps,
+                base_latency_s: rng.uniform(0.01, 1.0),
+            })
+            .collect();
+        let out = backend.twin_sim(&model, &scenarios).unwrap();
+        let total_load: f64 = out.load.iter().sum();
+        for s in 0..3 {
+            // non-negative queue, capped throughput, conservation
+            assert!(out.queue[s].iter().all(|&q| q >= 0.0));
+            let cap_hr = caps[s] * 3600.0;
+            assert!(out.throughput[s].iter().all(|&t| t <= cap_hr * (1.0 + 1e-9)));
+            let processed: f64 = out.throughput[s].iter().sum();
+            let backlog = out.queue[s].last().unwrap();
+            assert!(
+                ((processed + backlog) - total_load).abs() / total_load.max(1.0) < 1e-6,
+                "conservation violated for scenario {s}"
+            );
+            // monotonicity: a slower twin never has a shorter queue
+        }
+        // control slot never queues
+        assert!(out.queue[2].iter().all(|&q| q == 0.0));
+        // dominance: lower capacity => pointwise >= queue
+        let (lo, hi) = if caps[0] <= caps[1] { (0, 1) } else { (1, 0) };
+        for t in 0..out.queue[0].len() {
+            assert!(
+                out.queue[lo][t] >= out.queue[hi][t] - 1e-6,
+                "queue dominance violated at hour {t}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_retention_window_monotone_and_bounded() {
+    let backend = NativeBackend;
+    check("retention-monotone", 25, |rng| {
+        let daily: Vec<f64> = (0..365).map(|_| rng.uniform(0.0, 5.0)).collect();
+        let w1 = rng.uniform(1.0, 180.0);
+        let w2 = w1 + rng.uniform(1.0, 180.0);
+        let s1 = backend.retention(&daily, w1).unwrap();
+        let s2 = backend.retention(&daily, w2).unwrap();
+        let total: f64 = daily.iter().sum();
+        for d in 0..365 {
+            // longer window stores at least as much
+            assert!(s2[d] >= s1[d] - 1e-9, "window monotonicity at day {d}");
+            // never more than everything ingested so far
+            assert!(s1[d] <= total + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_cost_allocation_conserves_node_cost() {
+    check("opencost-conservation", 30, |rng| {
+        let cloud = Cloud::new();
+        let cap = Resources::new(16.0, 64.0);
+        let node_cost = rng.uniform(0.05, 3.0);
+        cloud.add_node("n", cap, node_cost);
+        let n_containers = rng.int_range(1, 6) as usize;
+        let mut containers = Vec::new();
+        for i in 0..n_containers {
+            let c = cloud.deploy(
+                &format!("c{i}"),
+                if rng.chance(0.5) { "pipeline" } else { "other" },
+                "n",
+                Resources::new(rng.uniform(0.1, 2.0), rng.uniform(0.1, 8.0)),
+            );
+            // random usage within the hour
+            let busy = rng.uniform(0.0, 3600.0);
+            c.record_usage(0.0, busy, busy * rng.uniform(0.1, 1.0), rng.uniform(0.1, 4.0));
+            containers.push(c);
+        }
+        let allocs = allocate_node_costs(node_cost, 16.0, 64.0, &containers, 0.0, 3600.0);
+        let total: f64 = allocs.iter().map(|a| a.cost).sum();
+        assert!(
+            (total - node_cost).abs() < 1e-9,
+            "allocation total {total} != node cost {node_cost}"
+        );
+        assert!(allocs.iter().all(|a| a.cost >= -1e-12), "negative allocation");
+        let p = namespace_cost(&allocs, "pipeline");
+        let o = namespace_cost(&allocs, "other");
+        assert!((p + o - node_cost).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.int_range(0, 3) } else { rng.int_range(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal(0.0, 1e6) * 1000.0).round() / 1000.0),
+            3 => {
+                let len = rng.int_range(0, 12) as usize;
+                Json::Str(rng.alphanumeric(len))
+            }
+            4 => Json::arr((0..rng.int_range(0, 4)).map(|_| random_json(rng, depth - 1))),
+            _ => Json::Obj(
+                (0..rng.int_range(0, 4))
+                    .map(|_| (rng.alphanumeric(4), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", 200, |rng| {
+        let doc = random_json(rng, 3);
+        let compact = doc.to_string_compact();
+        let pretty = doc.to_string_pretty();
+        assert_eq!(Json::parse(&compact).unwrap(), doc, "compact roundtrip");
+        assert_eq!(Json::parse(&pretty).unwrap(), doc, "pretty roundtrip");
+    });
+}
+
+#[test]
+fn prop_weighted_stats_degenerate_to_unweighted() {
+    check("weighted-stats", 50, |rng| {
+        let n = rng.int_range(1, 200) as usize;
+        let values: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 100.0)).collect();
+        let w = vec![1.0; n];
+        let wm = stats::weighted_mean(&values, &w);
+        let m = stats::mean(&values);
+        assert!((wm - m).abs() < 1e-9);
+        let q = rng.f64();
+        let wq = stats::weighted_quantile(&values, &w, q);
+        // the weighted quantile of uniform weights is an order statistic
+        let mut sorted = values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(sorted.contains(&wq));
+        // fraction below its own quantile is >= q
+        let frac = stats::weighted_fraction_below(&values, &w, wq);
+        assert!(frac >= q - 1e-9);
+    });
+}
+
+#[test]
+fn prop_datagen_formats_roundtrip() {
+    use plantd::datagen::{
+        decode_subsystem_binary, encode_subsystem_binary, SubsystemRecord, SUBSYSTEMS,
+    };
+    check("binary-roundtrip", 60, |rng| {
+        let subsys = rng.int_range(0, SUBSYSTEMS.len() as i64 - 1) as usize;
+        let n_fields = SUBSYSTEMS[subsys].1.len();
+        let n = rng.int_range(0, 40) as usize;
+        let records: Vec<SubsystemRecord> = (0..n)
+            .map(|_| SubsystemRecord {
+                timestamp_ms: rng.next_u64() % 4_000_000_000_000,
+                vin: {
+                    let len = rng.int_range(1, 17) as usize;
+                    rng.alphanumeric(len)
+                },
+                values: (0..n_fields)
+                    .map(|_| rng.normal(0.0, 1e4) as f32)
+                    .collect(),
+            })
+            .collect();
+        let bin = encode_subsystem_binary(subsys, &records);
+        let (got_subsys, got) = decode_subsystem_binary(&bin).unwrap();
+        assert_eq!(got_subsys, subsys);
+        assert_eq!(got, records);
+        // single-bit corruption anywhere must be detected
+        if !bin.is_empty() {
+            let mut corrupt = bin.clone();
+            let pos = rng.int_range(0, bin.len() as i64 - 1) as usize;
+            corrupt[pos] ^= 1 << rng.int_range(0, 7);
+            assert!(
+                decode_subsystem_binary(&corrupt).is_err()
+                    || corrupt == bin, // bit flip may be identity on some encodings
+                "corruption at byte {pos} not detected"
+            );
+        }
+    });
+}
