@@ -19,7 +19,9 @@ use crate::util::stats;
 /// ≤ `latency_limit_s` (the paper's example: 4 h, 95 %).
 #[derive(Debug, Clone, Copy)]
 pub struct SloSpec {
+    /// Per-record latency limit, seconds.
     pub latency_limit_s: f64,
+    /// Minimum fraction of records that must meet the limit.
     pub min_fraction: f64,
 }
 
@@ -39,9 +41,13 @@ impl Default for SloSpec {
 /// see EXPERIMENTS.md).
 #[derive(Debug, Clone, Copy)]
 pub struct CostSpec {
+    /// Network cost, $/MB ingested.
     pub network_per_mb: f64,
+    /// Storage cost, $/GB/day stored.
     pub storage_gb_day: f64,
+    /// Rolling raw-retention window, days.
     pub retention_days: f64,
+    /// Per-record payload size, MB.
     pub record_mb: f64,
 }
 
@@ -61,12 +67,16 @@ impl Default for CostSpec {
 pub struct MonthlyCost {
     /// 1-based month number.
     pub month: usize,
+    /// Cloud (compute) cost, USD.
     pub cloud: f64,
+    /// Network ingest cost, USD.
     pub network: f64,
+    /// Storage cost, USD.
     pub storage: f64,
 }
 
 impl MonthlyCost {
+    /// Sum of the three cost components.
     pub fn total(&self) -> f64 {
         self.cloud + self.network + self.storage
     }
@@ -76,27 +86,36 @@ impl MonthlyCost {
 /// hourly series behind Figs. 6 and 7).
 #[derive(Debug, Clone)]
 pub struct SimulationResult {
+    /// The twin that was simulated.
     pub twin: TwinParams,
+    /// Name of the traffic forecast used.
     pub forecast: String,
     /// Cloud cost incl. end-of-year backlog pricing (Table II "cost").
     pub cost_usd: f64,
+    /// Cost of draining the end-of-year backlog, USD.
     pub backlog_cost_usd: f64,
-    /// Record-weighted latency statistics, seconds.
+    /// Record-weighted median latency, seconds.
     pub latency_median_s: f64,
+    /// Record-weighted mean latency, seconds.
     pub latency_mean_s: f64,
     /// Time to drain the end-of-year backlog, seconds (Table II "backlog").
     pub backlog_latency_s: f64,
-    /// Mean/max hourly throughput, records/hour.
+    /// Mean hourly throughput, records/hour.
     pub thr_mean_rec_hr: f64,
+    /// Peak hourly throughput, records/hour.
     pub thr_max_rec_hr: f64,
     /// Fraction of records meeting the latency limit (Table II "% latency
     /// met", 0..1).
     pub pct_latency_met: f64,
+    /// Whether the SLO held over the simulated year.
     pub slo_met: bool,
-    // hourly series (for Figs. 6–7 and further analysis)
+    /// Hourly offered load, records/hour (Figs. 6–7 input).
     pub load: Vec<f64>,
+    /// Hourly end-of-hour queue length, records.
     pub queue: Vec<f64>,
+    /// Hourly processed records.
     pub throughput: Vec<f64>,
+    /// Hourly FIFO latency for arrivals, seconds.
     pub latency: Vec<f64>,
 }
 

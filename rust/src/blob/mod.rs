@@ -37,6 +37,7 @@ impl Default for BlobLatency {
 }
 
 impl BlobLatency {
+    /// Modeled latency of putting `bytes`, virtual seconds.
     pub fn put_latency_s(&self, bytes: usize) -> f64 {
         self.base_s + self.per_mb_s * bytes as f64 / (1024.0 * 1024.0)
     }
@@ -60,6 +61,7 @@ pub struct BlobStore {
 }
 
 impl BlobStore {
+    /// Empty store using the given clock and latency model.
     pub fn new(clock: SharedClock, latency: BlobLatency) -> Self {
         BlobStore {
             clock,
@@ -106,10 +108,12 @@ impl BlobStore {
         obj
     }
 
+    /// Whether an object exists under `key` (no latency charged).
     pub fn contains(&self, key: &str) -> bool {
         self.objects.lock().unwrap().contains_key(key)
     }
 
+    /// Number of stored objects.
     pub fn object_count(&self) -> usize {
         self.objects.lock().unwrap().len()
     }
@@ -124,6 +128,7 @@ impl BlobStore {
         )
     }
 
+    /// Sum of stored object sizes, bytes.
     pub fn total_stored_bytes(&self) -> u64 {
         self.objects
             .lock()
@@ -182,6 +187,7 @@ impl AsyncWriter {
         let _ = self.jobs.send((key, data));
     }
 
+    /// Uploads queued but not yet performed.
     pub fn pending(&self) -> usize {
         self.jobs.depth()
     }

@@ -34,11 +34,19 @@ impl<T> Clone for Topic<T> {
 }
 
 /// Error returned when sending to a closed topic.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("topic '{0}' is closed")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct Closed(pub &'static str);
 
+impl std::fmt::Display for Closed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "topic '{}' is closed", self.0)
+    }
+}
+
+impl std::error::Error for Closed {}
+
 impl<T> Topic<T> {
+    /// Empty topic with a positive capacity bound.
     pub fn new(name: &'static str, capacity: usize) -> Self {
         assert!(capacity > 0, "topic capacity must be positive");
         Topic {
@@ -57,6 +65,7 @@ impl<T> Topic<T> {
         }
     }
 
+    /// Topic name (diagnostics).
     pub fn name(&self) -> &'static str {
         self.name
     }
@@ -144,6 +153,7 @@ impl<T> Topic<T> {
         (st.enqueued, st.dequeued)
     }
 
+    /// Whether `close()` has been called.
     pub fn is_closed(&self) -> bool {
         self.inner.0.lock().unwrap().closed
     }

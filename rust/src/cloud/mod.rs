@@ -15,11 +15,14 @@ use std::sync::{Arc, Mutex};
 /// Resource request/usage pair: vCPU cores and memory GB.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Resources {
+    /// vCPU cores.
     pub vcpus: f64,
+    /// Memory, GB.
     pub mem_gb: f64,
 }
 
 impl Resources {
+    /// Resource pair from cores + GB.
     pub fn new(vcpus: f64, mem_gb: f64) -> Self {
         Resources { vcpus, mem_gb }
     }
@@ -28,8 +31,11 @@ impl Resources {
 /// A virtual machine with an hourly price.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Node identity.
     pub id: String,
+    /// Total schedulable resources.
     pub capacity: Resources,
+    /// On-demand price, $/hour.
     pub price_per_hr: f64,
 }
 
@@ -43,10 +49,12 @@ pub struct HourlyUsage {
 }
 
 impl HourlyUsage {
+    /// Total CPU core-seconds across all hours.
     pub fn total_cpu_core_s(&self) -> f64 {
         self.cpu_core_s.values().sum()
     }
 
+    /// Total GB·seconds of memory residency across all hours.
     pub fn total_mem_gb_s(&self) -> f64 {
         self.mem_gb_s.values().sum()
     }
@@ -60,9 +68,13 @@ struct ContainerState {
 /// A deployed container with a usage meter.
 #[derive(Debug, Clone)]
 pub struct Container {
+    /// Container identity.
     pub id: String,
+    /// Namespace (the cost-isolation unit).
     pub namespace: String,
+    /// Node this container is placed on.
     pub node_id: String,
+    /// Requested (reserved) resources.
     pub requests: Resources,
     state: Arc<Mutex<ContainerState>>,
 }
@@ -90,6 +102,7 @@ impl Container {
         }
     }
 
+    /// Snapshot of the metered usage so far.
     pub fn usage(&self) -> HourlyUsage {
         self.state.lock().unwrap().usage.clone()
     }
@@ -108,10 +121,12 @@ struct CloudState {
 }
 
 impl Cloud {
+    /// Empty cloud (no nodes).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Register a node with the given capacity and hourly price.
     pub fn add_node(&self, id: &str, capacity: Resources, price_per_hr: f64) -> Node {
         let node = Node {
             id: id.to_string(),
@@ -172,10 +187,12 @@ impl Cloud {
         self.inner.lock().unwrap().containers.remove(container_id);
     }
 
+    /// All registered nodes.
     pub fn nodes(&self) -> Vec<Node> {
         self.inner.lock().unwrap().nodes.values().cloned().collect()
     }
 
+    /// All deployed containers.
     pub fn containers(&self) -> Vec<Container> {
         self.inner
             .lock()
@@ -186,6 +203,7 @@ impl Cloud {
             .collect()
     }
 
+    /// Containers in one namespace.
     pub fn containers_in(&self, namespace: &str) -> Vec<Container> {
         self.containers()
             .into_iter()
@@ -193,6 +211,7 @@ impl Cloud {
             .collect()
     }
 
+    /// Look up one node by id.
     pub fn node(&self, id: &str) -> Option<Node> {
         self.inner.lock().unwrap().nodes.get(id).cloned()
     }

@@ -55,6 +55,7 @@ pub struct BillingRecord {
     pub node_id: String,
     /// Namespace tag, if the node is dedicated; shared nodes bill untagged.
     pub tag: Option<String>,
+    /// Billed amount for the hour, USD.
     pub amount: f64,
 }
 
@@ -84,6 +85,7 @@ impl BillingSimulator {
         BillingSimulator { records }
     }
 
+    /// All emitted billing lines.
     pub fn records(&self) -> &[BillingRecord] {
         &self.records
     }
@@ -123,8 +125,11 @@ impl BillingSimulator {
 /// Per-container cost allocation for one shared node over a window.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Allocation {
+    /// The container this share was allocated to.
     pub container_id: String,
+    /// The container's namespace (cost rollup unit).
     pub namespace: String,
+    /// Allocated cost, USD.
     pub cost: f64,
 }
 

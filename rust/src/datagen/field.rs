@@ -45,12 +45,16 @@ pub enum FieldKind {
 /// pipeline's scrubbing path).
 #[derive(Debug, Clone)]
 pub struct FieldSpec {
+    /// Field name (column header in formatted output).
     pub name: String,
+    /// Value generator.
     pub kind: FieldKind,
+    /// Probability a generated value is Null (bad-data injection).
     pub bad_rate: f64,
 }
 
 impl FieldSpec {
+    /// Field with no bad-data injection.
     pub fn new(name: &str, kind: FieldKind) -> Self {
         FieldSpec {
             name: name.to_string(),
@@ -66,6 +70,7 @@ impl FieldSpec {
         self
     }
 
+    /// Generate one value (Null with probability `bad_rate`).
     pub fn generate(&self, rng: &mut Rng) -> Value {
         if self.bad_rate > 0.0 && rng.chance(self.bad_rate) {
             return Value::Null;
@@ -104,6 +109,7 @@ const LAND_BOXES: &[(f64, f64, f64, f64, f64)] = &[
 const VIN_CHARS: &[u8] = b"ABCDEFGHJKLMNPRSTUVWXYZ0123456789";
 
 impl FieldKind {
+    /// Synthesize one value of this kind.
     pub fn generate(&self, rng: &mut Rng) -> Value {
         match self {
             FieldKind::IntRange { lo, hi } => Value::Int(rng.int_range(*lo, *hi)),

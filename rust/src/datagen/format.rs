@@ -39,27 +39,52 @@ const VIN_LEN: usize = 17;
 /// One decoded telematics record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SubsystemRecord {
+    /// Sample timestamp, milliseconds.
     pub timestamp_ms: u64,
+    /// Vehicle identification number (up to 17 chars).
     pub vin: String,
+    /// One float per subsystem field, in [`SUBSYSTEMS`] order.
     pub values: Vec<f32>,
 }
 
 /// Errors from the binary decoder.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DecodeError {
-    #[error("bad magic")]
+    /// The 4-byte magic prefix is wrong.
     BadMagic,
-    #[error("unsupported version {0}")]
+    /// Unsupported format version.
     BadVersion(u8),
-    #[error("unknown subsystem id {0}")]
+    /// Subsystem index outside [`SUBSYSTEMS`].
     BadSubsystem(u8),
-    #[error("truncated payload (need {need}, have {have})")]
-    Truncated { need: usize, have: usize },
-    #[error("crc mismatch")]
+    /// Payload shorter than its header claims.
+    Truncated {
+        /// Bytes the header implies.
+        need: usize,
+        /// Bytes actually present.
+        have: usize,
+    },
+    /// CRC-32 over the payload does not match the trailer.
     BadCrc,
-    #[error("vin is not utf-8")]
+    /// The VIN field is not valid UTF-8.
     BadVin,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::BadMagic => write!(f, "bad magic"),
+            DecodeError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            DecodeError::BadSubsystem(s) => write!(f, "unknown subsystem id {s}"),
+            DecodeError::Truncated { need, have } => {
+                write!(f, "truncated payload (need {need}, have {have})")
+            }
+            DecodeError::BadCrc => write!(f, "crc mismatch"),
+            DecodeError::BadVin => write!(f, "vin is not utf-8"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Encode records for one subsystem into the custom binary format.
 pub fn encode_subsystem_binary(subsys_idx: usize, records: &[SubsystemRecord]) -> Vec<u8> {

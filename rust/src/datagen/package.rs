@@ -46,7 +46,9 @@ impl Default for DataSetSpec {
 /// experiment uses for verification.
 #[derive(Debug, Clone)]
 pub struct VehicleZip {
+    /// The transmitting vehicle's VIN.
     pub vin: String,
+    /// The zip archive as sent over the wire.
     pub zip_bytes: Vec<u8>,
     /// Total telemetry records across the five subsystem files.
     pub total_records: usize,
@@ -110,7 +112,9 @@ pub fn unpack_vehicle_zip(zip_bytes: &[u8]) -> std::io::Result<Vec<(String, Vec<
 /// A pre-generated pool of payloads.
 #[derive(Debug, Clone)]
 pub struct DataSet {
+    /// The parameters this dataset was synthesized from.
     pub spec: DataSetSpec,
+    /// The payload pool (senders cycle through it).
     pub payloads: Vec<VehicleZip>,
 }
 
@@ -140,10 +144,12 @@ impl DataSet {
         &self.payloads[i % self.payloads.len()]
     }
 
+    /// Sum of all payload sizes, bytes.
     pub fn total_bytes(&self) -> u64 {
         self.payloads.iter().map(|p| p.zip_bytes.len() as u64).sum()
     }
 
+    /// Mean payload size, bytes (0 for an empty pool).
     pub fn mean_payload_bytes(&self) -> f64 {
         if self.payloads.is_empty() {
             0.0

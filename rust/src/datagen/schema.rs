@@ -16,11 +16,14 @@ pub type Record = Vec<Value>;
 /// An ordered collection of field specs.
 #[derive(Debug, Clone)]
 pub struct Schema {
+    /// Schema name (resource identity).
     pub name: String,
+    /// Ordered field generators.
     pub fields: Vec<FieldSpec>,
 }
 
 impl Schema {
+    /// Schema from fields; panics on an empty field list.
     pub fn new(name: &str, fields: Vec<FieldSpec>) -> Self {
         assert!(!fields.is_empty(), "schema '{name}' has no fields");
         Schema {
@@ -29,6 +32,7 @@ impl Schema {
         }
     }
 
+    /// The field names, in schema order.
     pub fn field_names(&self) -> Vec<&str> {
         self.fields.iter().map(|f| f.name.as_str()).collect()
     }

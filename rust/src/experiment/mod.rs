@@ -30,8 +30,11 @@ use crate::util::stats;
 /// start time.
 #[derive(Clone)]
 pub struct Experiment {
+    /// Experiment name (resource identity; appears in records).
     pub name: String,
+    /// The offered-load shape.
     pub pattern: LoadPattern,
+    /// Pre-generated payload pool to send.
     pub dataset: DataSet,
     /// Defer the start until this virtual time (None = immediately).
     pub start_at_s: Option<f64>,
@@ -42,6 +45,7 @@ pub struct Experiment {
 }
 
 impl Experiment {
+    /// Experiment starting immediately, with no query workload.
     pub fn new(name: &str, pattern: LoadPattern, dataset: DataSet) -> Self {
         Experiment {
             name: name.to_string(),
@@ -56,7 +60,9 @@ impl Experiment {
 /// A query workload: point/scan queries at a steady rate.
 #[derive(Debug, Clone, Copy)]
 pub struct QueryLoad {
+    /// Queries per (virtual) second.
     pub rate_qps: f64,
+    /// How long to sustain the query load, virtual seconds.
     pub duration_s: f64,
 }
 
@@ -64,7 +70,9 @@ pub struct QueryLoad {
 /// underlying series, which stay queryable in the shared TSDB).
 #[derive(Debug, Clone)]
 pub struct ExperimentRecord {
+    /// Name of the experiment that ran.
     pub experiment: String,
+    /// Name of the pipeline variant measured.
     pub variant: &'static str,
     /// Virtual time of the first send.
     pub started_s: f64,
@@ -72,6 +80,7 @@ pub struct ExperimentRecord {
     pub drained_s: f64,
     /// Experiment length (the paper's "exp. length"): first send → drain.
     pub duration_s: f64,
+    /// Vehicle transmissions sent.
     pub zips_sent: u64,
     /// Sustained throughput in load units (zips/s) — Table III/I "rec/s".
     pub mean_throughput_rps: f64,
@@ -80,21 +89,29 @@ pub struct ExperimentRecord {
     pub latency_nq_mean_s: f64,
     /// Median of per-file service-latency sums.
     pub latency_nq_median_s: f64,
-    /// Queue-inclusive end-to-end latency stats (ingest → warehouse).
+    /// Queue-inclusive end-to-end mean latency (ingest → warehouse).
     pub latency_e2e_mean_s: f64,
+    /// Queue-inclusive end-to-end median latency.
     pub latency_e2e_median_s: f64,
+    /// Queue-inclusive end-to-end 95th-percentile latency.
     pub latency_e2e_p95_s: f64,
     /// Fixed cost rate from container sizing (USD/hr).
     pub cost_per_hr_usd: f64,
     /// Prorated cost of the run (USD).
     pub total_cost_usd: f64,
+    /// Warehouse rows stored.
     pub rows_inserted: u64,
+    /// Rows rejected by ETL scrubbing.
     pub rows_scrubbed: u64,
+    /// Failed spans across all stages.
     pub stage_errors: u64,
-    /// Query-workload latency stats, if a QueryLoad ran (p50/p95/qps).
+    /// Query-workload median latency, if a QueryLoad ran.
     pub query_p50_s: Option<f64>,
+    /// Query-workload 95th-percentile latency, if a QueryLoad ran.
     pub query_p95_s: Option<f64>,
+    /// Achieved query rate, if a QueryLoad ran.
     pub query_achieved_qps: Option<f64>,
+    /// The load generator's own delivery report.
     pub load: LoadReport,
     /// Per-stage (name, spans, records, busy_s).
     pub per_stage: Vec<(String, u64, u64, f64)>,
@@ -112,9 +129,13 @@ impl ExperimentRecord {
 /// concurrently (multi-endpoint experiments, §IV); one pipeline still
 /// refuses concurrent engagement.
 pub struct ExperimentHarness {
+    /// The simulated cloud experiments deploy onto.
     pub cloud: Cloud,
+    /// The shared scaled clock.
     pub clock: SharedClock,
+    /// The shared metric store (accumulates across runs).
     pub tsdb: Tsdb,
+    /// Price book for cost summaries.
     pub prices: PriceBook,
     node_id: String,
 }

@@ -22,12 +22,24 @@
 //! - Fit a [`twin`] from the measurements, project a business year with a
 //!   [`traffic`] model, and answer what-if questions with [`bizsim`].
 //!
-//! See `examples/quickstart.rs` for the 60-second version and
-//! `examples/telematics_windtunnel.rs` for the paper's full case study.
+//! See `examples/quickstart.rs` for the 60-second version,
+//! `examples/telematics_windtunnel.rs` for the paper's full case study,
+//! and `examples/campaign_sweep.rs` for a parallel multi-variant campaign.
+//!
+//! ## Campaigns
+//!
+//! One experiment measures one pipeline under one load. A [`campaign`]
+//! sweeps the whole grid — {pipeline variants × load patterns × dataset
+//! schemas} — executing every cell in parallel with per-cell deterministic
+//! seeds and isolated telemetry/cost sinks, and ranks the results in
+//! business terms. See `docs/CAMPAIGNS.md`.
+
+#![warn(missing_docs)]
 
 pub mod bizsim;
 pub mod blob;
 pub mod bus;
+pub mod campaign;
 pub mod cloud;
 pub mod cost;
 pub mod datagen;

@@ -19,18 +19,24 @@ use crate::util::json::Json;
 /// One linear-rate segment.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Segment {
+    /// Segment length, virtual seconds.
     pub duration_s: f64,
+    /// Rate at the segment start, records/second.
     pub start_rps: f64,
+    /// Rate at the segment end, records/second.
     pub end_rps: f64,
 }
 
 /// Piecewise-linear load pattern.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct LoadPattern {
+    /// Ordered rate segments.
     pub segments: Vec<Segment>,
 }
 
 impl LoadPattern {
+    /// Pattern from segments; panics on non-positive durations or
+    /// negative rates.
     pub fn new(segments: Vec<Segment>) -> Self {
         for s in &segments {
             assert!(s.duration_s > 0.0, "segment duration must be positive");
@@ -72,6 +78,7 @@ impl LoadPattern {
         self
     }
 
+    /// Total pattern length, virtual seconds.
     pub fn total_duration_s(&self) -> f64 {
         self.segments.iter().map(|s| s.duration_s).sum()
     }
@@ -201,6 +208,7 @@ pub struct LoadGenerator {
 }
 
 impl LoadGenerator {
+    /// Generator pacing on the given (scaled) clock.
     pub fn new(clock: SharedClock) -> Self {
         LoadGenerator { clock, tsdb: None }
     }

@@ -14,6 +14,9 @@
 //!     year-long what-if simulations; prints Table II (Figs. 6–7 CSVs)
 //! plantd retention [--months-a 3] [--months-b 6]
 //!     storage-policy what-if; prints Table IV
+//! plantd campaign  [--threads N] [--seed S] [--out DIR]
+//!     parallel {variant × load × dataset} sweep; prints a ranked
+//!     CampaignReport (same seed ⇒ byte-identical numbers)
 //! plantd resources (demo of the declarative resource registry)
 //! plantd demo      [--out DIR] [--scale X]
 //!     the full paper reproduction: experiments → twins → simulations →
@@ -24,6 +27,7 @@ use std::path::Path;
 use std::process::ExitCode;
 
 use plantd::bizsim::{monthly_costs, simulate_batch, CostSpec, SloSpec};
+use plantd::campaign::{Campaign, CampaignRunner};
 use plantd::datagen::{DataSet, DataSetSpec};
 use plantd::experiment::{Experiment, ExperimentHarness, ExperimentRecord};
 use plantd::loadgen::LoadPattern;
@@ -46,8 +50,15 @@ SUBCOMMANDS
   project     traffic projections                -> Fig. 5 CSVs
   simulate    year-long what-if simulations      -> Table II + Figs. 6-7
   retention   storage-policy what-if             -> Table IV
+  campaign    parallel {variant x load x dataset} sweep -> ranked report
   resources   demo the declarative resource registry
   demo        the full paper reproduction (all of the above)
+
+CAMPAIGN OPTIONS
+  --threads N        worker threads for the cell grid (default 4)
+  --seed S           campaign master seed, decimal or 0x-hex (default
+                     0xD5); same seed reproduces byte-identical numbers
+  --out DIR          also write the report JSON to DIR/campaign.json
 
 COMMON OPTIONS
   --variant blocking-write|no-blocking-write|cpu-limited|all
@@ -77,6 +88,7 @@ fn main() -> ExitCode {
         "project" => cmd_project(&args),
         "simulate" => cmd_simulate(&args),
         "retention" => cmd_retention(&args),
+        "campaign" => cmd_campaign(&args),
         "resources" => cmd_resources(),
         "demo" => cmd_demo(&args),
         "help" | "--help" => {
@@ -301,6 +313,41 @@ fn cmd_retention(args: &Args) -> CmdResult {
             &format!("{months_b:.0} mo")
         )
     );
+    Ok(())
+}
+
+/// Parse a seed option as decimal or `0x`-prefixed hex, so the seed a
+/// report prints can be passed straight back for a byte-identical replay.
+fn opt_seed(args: &Args, name: &str, default: u64) -> Result<u64, anyhow::Error> {
+    match args.opt(name) {
+        None => Ok(default),
+        Some(v) => plantd::util::cli::parse_seed(v).ok_or_else(|| {
+            anyhow::anyhow!("--{name}: expected an integer (decimal or 0x hex), got '{v}'")
+        }),
+    }
+}
+
+fn cmd_campaign(args: &Args) -> CmdResult {
+    let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
+    let seed = opt_seed(args, "seed", 0xD5)?;
+    let campaign = Campaign::paper_automotive(seed);
+    eprintln!(
+        "campaign '{}': {} variants × {} loads × {} datasets = {} cells on {} threads",
+        campaign.name,
+        campaign.variants.len(),
+        campaign.loads.len(),
+        campaign.datasets.len(),
+        campaign.n_cells(),
+        threads
+    );
+    let report = CampaignRunner::new(threads).run(&campaign);
+    println!("{}", report.render());
+    if let Some(dir) = args.opt("out") {
+        let path = std::path::Path::new(dir).join("campaign.json");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(&path, report.to_json().to_string_pretty())?;
+        println!("report JSON written to {}", path.display());
+    }
     Ok(())
 }
 

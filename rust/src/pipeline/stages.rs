@@ -12,25 +12,31 @@ use crate::blob::{AsyncWriter, BlobStore};
 use crate::bus::Topic;
 use crate::cloud::Container;
 use crate::datagen::{decode_subsystem_binary, SUBSYSTEMS};
-use crate::tablestore::{Table, Value};
+use crate::tablestore::{InsertLatency, Table, Value};
 use crate::telemetry::{SeriesHandle, Span, SpanSink};
 use crate::util::clock::SharedClock;
 
 /// Message: one vehicle transmission (a zip) entering the pipeline.
 #[derive(Debug, Clone)]
 pub struct ZipMsg {
+    /// Trace correlation id, constant across stages.
     pub trace_id: u64,
     /// Virtual time the load generator delivered this payload.
     pub ingest_s: f64,
+    /// The transmission bytes (shared, not copied per stage).
     pub zip: Arc<Vec<u8>>,
 }
 
 /// Message: one extracted subsystem binary file.
 #[derive(Debug, Clone)]
 pub struct BinMsg {
+    /// Trace correlation id, constant across stages.
     pub trace_id: u64,
+    /// Virtual time the originating zip was ingested.
     pub ingest_s: f64,
+    /// Member name inside the zip, e.g. `engine.bin`.
     pub member_name: String,
+    /// The decoded member bytes.
     pub data: Vec<u8>,
 }
 
@@ -41,28 +47,39 @@ pub struct BinMsg {
 /// etl_phase, keeping that CPU off the bottleneck v2x stage (§Perf).
 #[derive(Debug, Clone)]
 pub struct RowsMsg {
+    /// Trace correlation id, constant across stages.
     pub trace_id: u64,
+    /// Virtual time the originating zip was ingested.
     pub ingest_s: f64,
+    /// Index into [`SUBSYSTEMS`].
     pub subsys_idx: usize,
+    /// Decoded telemetry records awaiting row expansion.
     pub records: Vec<crate::datagen::SubsystemRecord>,
+    /// Size of the originating binary file, bytes.
     pub bytes: u64,
 }
 
 /// What a stage hands back to its runner for one input message.
 pub struct StageOutput<T> {
+    /// Downstream messages to forward.
     pub emit: Vec<T>,
     /// Records this span processed (a stage may split/join records —
     /// PlantD makes no assumption about cross-stage record ratios, §VII.A).
     pub records: u64,
+    /// Payload bytes this span processed.
     pub bytes: u64,
+    /// Whether the work succeeded (failures count as stage errors).
     pub ok: bool,
 }
 
 /// Shared per-stage runtime context.
 #[derive(Clone)]
 pub struct StageContext {
+    /// The wind tunnel's (scaled) clock.
     pub clock: SharedClock,
+    /// Where this stage's spans go.
     pub spans: SpanSink,
+    /// The container whose meter this stage's CPU burn is charged to.
     pub container: Container,
     /// CPU throttle multiplier (1.0 = unthrottled; the `cpu-limited`
     /// variant stretches v2x service times by this factor, modeling a
@@ -85,10 +102,14 @@ impl StageContext {
 
 /// A pipeline stage: transform one input message into zero or more outputs.
 pub trait Stage: Send + 'static {
+    /// Input message type.
     type In: Send + 'static;
+    /// Output message type (`()` for terminal stages).
     type Out: Send + 'static;
 
+    /// Stage name, used for spans and metrics labels.
     fn name(&self) -> &'static str;
+    /// Transform one input message into zero or more outputs.
     fn process(&mut self, input: Self::In, ctx: &StageContext) -> StageOutput<Self::Out>;
     /// Called once after the input topic drains (flush buffers etc.).
     fn finish(&mut self, _ctx: &StageContext) {}
@@ -97,9 +118,13 @@ pub trait Stage: Send + 'static {
 /// Aggregate stats a stage runner returns when its input drains.
 #[derive(Debug, Clone, Default)]
 pub struct StageStats {
+    /// Messages processed (= spans emitted).
     pub spans: u64,
+    /// Records processed across all spans.
     pub records: u64,
+    /// Failed spans.
     pub errors: u64,
+    /// Total virtual seconds spent in `process`.
     pub busy_s: f64,
     /// Virtual time of the last span completion.
     pub last_end_s: f64,
@@ -110,6 +135,8 @@ pub struct StageStats {
 pub struct StageRunner;
 
 impl StageRunner {
+    /// Start a dedicated thread running `stage` until `input` drains;
+    /// returns a handle yielding the stage's final [`StageStats`].
     pub fn spawn<S: Stage>(
         mut stage: S,
         input: Topic<S::In>,
@@ -239,6 +266,7 @@ pub enum V2xWrite {
 pub struct V2xStage {
     /// CPU service time per binary file (decode + columnarize).
     pub parse_s: f64,
+    /// Blocking or background blob-write path.
     pub write: V2xWrite,
     /// Optional cumulative-latency series (Fig. 8).
     pub cum_latency: Option<SeriesHandle>,
@@ -307,6 +335,7 @@ impl Stage for V2xStage {
 pub struct EtlStage {
     /// CPU service time per row batch.
     pub service_s: f64,
+    /// The warehouse table rows are loaded into.
     pub table: Table,
     /// Optional cumulative (end-to-end) latency series (Fig. 8; also the
     /// source of the twin's per-record latency distribution).
@@ -314,10 +343,18 @@ pub struct EtlStage {
 }
 
 impl EtlStage {
+    /// The warehouse insert-latency model. Exposed so other execution
+    /// engines (the campaign DES) charge exactly the same insert costs
+    /// as the threaded pipeline.
+    pub const INSERT_LATENCY: InsertLatency = InsertLatency {
+        per_batch_s: 0.001,
+        per_row_s: 0.00002,
+    };
+
     /// The warehouse schema the paper's ETL loads into (long format:
     /// one row per telemetry sample field, scrub-checked).
     pub fn warehouse_table(clock: SharedClock) -> Table {
-        use crate::tablestore::{ColType, Column, InsertLatency};
+        use crate::tablestore::{ColType, Column};
         Table::new(
             "telemetry_warehouse",
             vec![
@@ -328,10 +365,7 @@ impl EtlStage {
                 Column::new("value", ColType::Float).with_range(-1e9, 1e9),
             ],
             clock,
-            InsertLatency {
-                per_batch_s: 0.001,
-                per_row_s: 0.00002,
-            },
+            Self::INSERT_LATENCY,
         )
     }
 }

@@ -36,7 +36,9 @@ pub enum WriteMode {
 /// pipeline.
 #[derive(Debug, Clone)]
 pub struct VariantConfig {
+    /// Variant name (Table I/III row label).
     pub name: &'static str,
+    /// How v2x writes its converted files to blob storage.
     pub write_mode: WriteMode,
     /// CPU quota stretch factor for v2x (1.0 = unthrottled).
     pub v2x_throttle: f64,
@@ -163,10 +165,15 @@ pub struct PipelineDeployment;
 /// Final statistics after a pipeline run is drained.
 #[derive(Debug, Clone, Default)]
 pub struct PipelineRunStats {
+    /// Final per-stage statistics, in pipeline order.
     pub per_stage: Vec<(&'static str, StageStats)>,
+    /// Vehicle transmissions accepted at the ingress.
     pub zips_ingested: u64,
+    /// Warehouse rows stored.
     pub rows_inserted: u64,
+    /// Rows rejected by ETL scrubbing.
     pub rows_scrubbed: u64,
+    /// Objects left in blob storage (raw zips + converted files).
     pub blob_objects: u64,
     /// Virtual time of the last stage completion.
     pub drained_at_s: f64,
@@ -174,13 +181,17 @@ pub struct PipelineRunStats {
 
 /// A live pipeline: ingest endpoint + lifecycle control.
 pub struct PipelineHandle {
+    /// The deployed variant's name.
     pub name: &'static str,
+    /// Namespace the containers were deployed into.
     pub namespace: String,
     ingress: Topic<ZipMsg>,
     stage_joins: Vec<(&'static str, std::thread::JoinHandle<StageStats>)>,
     raw_writer: Arc<AsyncWriter>,
     parquet_writer: Option<Arc<AsyncWriter>>,
+    /// The pipeline's blob store (raw zips + converted files).
     pub blob: BlobStore,
+    /// The warehouse table ETL loads into.
     pub table: Table,
     clock: SharedClock,
     next_trace: AtomicU64,
@@ -317,10 +328,12 @@ impl PipelineHandle {
         !self.engaged.swap(true, Ordering::SeqCst)
     }
 
+    /// Release the engage flag (experiment finished or aborted).
     pub fn release(&self) {
         self.engaged.store(false, Ordering::SeqCst);
     }
 
+    /// Whether an experiment currently holds the pipeline.
     pub fn is_engaged(&self) -> bool {
         self.engaged.load(Ordering::SeqCst)
     }
@@ -339,6 +352,7 @@ impl PipelineHandle {
         let _ = self.ingress.send(msg);
     }
 
+    /// Transmissions accepted at the ingress so far.
     pub fn zips_ingested(&self) -> u64 {
         self.ingested.load(Ordering::Relaxed)
     }

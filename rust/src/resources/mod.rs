@@ -16,17 +16,26 @@ use crate::util::json::Json;
 /// Resource kinds (mirrors the operator's CRDs, Fig. 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Kind {
+    /// Field list for the data generator.
     Schema,
+    /// Pre-generated payload pool.
     DataSet,
+    /// Offered-load shape.
     LoadPattern,
+    /// Pipeline-under-test deployment.
     Pipeline,
+    /// One wind-tunnel run.
     Experiment,
+    /// Business-year traffic forecast.
     TrafficModel,
+    /// Fitted pipeline model.
     DigitalTwin,
+    /// Twin × forecast year simulation.
     Simulation,
 }
 
 impl Kind {
+    /// CRD-style kind name.
     pub fn as_str(&self) -> &'static str {
         match self {
             Kind::Schema => "Schema",
@@ -40,6 +49,7 @@ impl Kind {
         }
     }
 
+    /// Every kind, in a stable order.
     pub fn all() -> [Kind; 8] {
         [
             Kind::Schema,
@@ -58,14 +68,20 @@ impl Kind {
 /// Studio UI, Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// Registered, references not yet validated.
     Pending,
+    /// References resolved; usable.
     Ready,
+    /// In use by a running experiment.
     Engaged,
+    /// Finished successfully.
     Completed,
+    /// Validation or execution failed (see conditions).
     Failed,
 }
 
 impl Phase {
+    /// Display name.
     pub fn as_str(&self) -> &'static str {
         match self {
             Phase::Pending => "Pending",
@@ -80,9 +96,13 @@ impl Phase {
 /// A registered resource: spec (JSON), phase, and status conditions.
 #[derive(Debug, Clone)]
 pub struct Resource {
+    /// Resource kind.
     pub kind: Kind,
+    /// Resource name (unique per kind).
     pub name: String,
+    /// The declarative spec, as JSON.
     pub spec: Json,
+    /// Current lifecycle phase.
     pub phase: Phase,
     /// Human-readable condition messages (most recent last).
     pub conditions: Vec<String>,
@@ -113,6 +133,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -133,6 +154,7 @@ impl Registry {
         res
     }
 
+    /// Look up one resource.
     pub fn get(&self, kind: Kind, name: &str) -> Option<Resource> {
         self.inner
             .lock()
@@ -141,6 +163,7 @@ impl Registry {
             .cloned()
     }
 
+    /// Remove a resource; returns whether it existed.
     pub fn delete(&self, kind: Kind, name: &str) -> bool {
         self.inner
             .lock()
@@ -149,6 +172,7 @@ impl Registry {
             .is_some()
     }
 
+    /// All resources of one kind.
     pub fn list(&self, kind: Kind) -> Vec<Resource> {
         self.inner
             .lock()
@@ -159,6 +183,7 @@ impl Registry {
             .collect()
     }
 
+    /// Transition a resource's phase, appending a condition message.
     pub fn set_phase(&self, kind: Kind, name: &str, phase: Phase, condition: &str) {
         if let Some(r) = self
             .inner

@@ -7,25 +7,30 @@
 //! parser reassigns ids (see `python/compile/aot.py`).
 //!
 //! Two interchangeable backends implement [`SimBackend`]:
-//! - [`Engine`] — the PJRT CPU client, compiled-executable cache included;
+//! - [`Engine`] — the PJRT CPU client, compiled-executable cache included.
+//!   Real PJRT execution needs the `xla` bindings crate plus a native XLA
+//!   library, neither of which exists in the hermetic offline build, so
+//!   the engine is compiled only with the **`pjrt` cargo feature**;
+//!   without it, [`Engine::load`] reports the feature is absent and
+//!   [`default_backend`] falls back to the native evaluator.
 //! - [`native::NativeBackend`] — a pure-Rust evaluator of the same three
-//!   functions, used to cross-validate PJRT numerics in tests and as a
-//!   fallback when artifacts are absent.
+//!   functions, used to cross-validate PJRT numerics in tests and as the
+//!   fallback when artifacts (or the feature) are absent.
 
 pub mod native;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::traffic::TrafficModel;
-use crate::util::json::Json;
 
-/// Fixed shapes of the AOT artifacts (must match `python/compile/aot.py`).
+/// Hours in the simulated year (fixed shape of the AOT artifacts; must
+/// match `python/compile/aot.py`).
 pub const HOURS: usize = 8760;
+/// Days in the simulated year.
 pub const DAYS: usize = 365;
+/// Twin-scenario batch width of the `twin_sim` artifact.
 pub const SCENARIOS: usize = 8;
 
 /// Output of one twin-simulation execution (per scenario slot).
@@ -44,7 +49,9 @@ pub struct TwinSimOutput {
 /// A twin scenario slot: capacity + base latency.
 #[derive(Debug, Clone, Copy)]
 pub struct ScenarioParams {
+    /// Sustained processing capacity, records/second.
     pub cap_rps: f64,
+    /// Per-record latency with no queueing, seconds.
     pub base_latency_s: f64,
 }
 
@@ -84,107 +91,239 @@ pub fn pad_scenarios(scenarios: &[ScenarioParams]) -> Result<Vec<ScenarioParams>
     Ok(out)
 }
 
-/// The PJRT-backed engine.
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
-}
+#[cfg(feature = "pjrt")]
+pub use self::engine::Engine;
 
-impl Engine {
-    /// Load the artifact directory (must contain `manifest.json` written
-    /// by `make artifacts`).
-    pub fn load(dir: &Path) -> Result<Engine> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
-        for (key, expect) in [("hours", HOURS), ("days", DAYS), ("scenarios", SCENARIOS)] {
-            let got = manifest
-                .get(key)
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("manifest missing '{key}'"))?;
-            if got as usize != expect {
-                bail!("artifact {key}={got} but runtime expects {expect}; re-run `make artifacts`");
-            }
-        }
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Engine {
-            client,
-            dir: dir.to_path_buf(),
-            compiled: Mutex::new(HashMap::new()),
-        })
+#[cfg(feature = "pjrt")]
+mod engine {
+    //! The PJRT-backed engine (compiled only with the `pjrt` feature).
+
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use crate::traffic::TrafficModel;
+    use crate::util::json::Json;
+
+    use super::{
+        pad_scenarios, ScenarioParams, SimBackend, TwinSimOutput, DAYS, HOURS, SCENARIOS,
+    };
+
+    /// The PJRT-backed engine.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     }
 
-    /// Load from the conventional `artifacts/` directory next to the
-    /// binary's working directory.
+    impl Engine {
+        /// Load the artifact directory (must contain `manifest.json`
+        /// written by `make artifacts`).
+        pub fn load(dir: &Path) -> Result<Engine> {
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+            let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+            for (key, expect) in [("hours", HOURS), ("days", DAYS), ("scenarios", SCENARIOS)] {
+                let got = manifest
+                    .get(key)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("manifest missing '{key}'"))?;
+                if got as usize != expect {
+                    bail!("artifact {key}={got} but runtime expects {expect}; re-run `make artifacts`");
+                }
+            }
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Engine {
+                client,
+                dir: dir.to_path_buf(),
+                compiled: Mutex::new(HashMap::new()),
+            })
+        }
+
+        /// Load from the conventional `artifacts/` directory next to the
+        /// binary's working directory.
+        pub fn load_default() -> Result<Engine> {
+            Self::load(Path::new("artifacts"))
+        }
+
+        /// Compile-once cache: compile `<name>.hlo.txt` on first use.
+        fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+            let mut cache = self.compiled.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+            cache.insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Execute an artifact with f32 literals; returns the flattened
+        /// tuple elements as f32 vectors.
+        fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+            let exe = self.executable(name)?;
+            let result = exe.execute::<xla::Literal>(inputs)?;
+            let literal = result[0][0].to_literal_sync()?;
+            let parts = literal.to_tuple()?;
+            parts
+                .into_iter()
+                .map(|p| Ok(p.to_vec::<f32>()?))
+                .collect()
+        }
+
+        fn scalar(v: f64) -> xla::Literal {
+            xla::Literal::scalar(v as f32)
+        }
+
+        fn vec1(vs: &[f64]) -> xla::Literal {
+            let f: Vec<f32> = vs.iter().map(|&v| v as f32).collect();
+            xla::Literal::vec1(&f)
+        }
+
+        fn check_closed_form(model: &TrafficModel) -> Result<()> {
+            if model.burst.is_some() {
+                bail!(
+                    "the AOT traffic artifact evaluates the closed-form §V.G \
+                     projection; bursty forecasts need the native backend"
+                );
+            }
+            Ok(())
+        }
+
+        fn traffic_inputs(model: &TrafficModel) -> Vec<xla::Literal> {
+            vec![
+                Self::scalar(model.base_rps),
+                Self::scalar(model.growth_net()),
+                Self::vec1(&model.month_f),
+                Self::vec1(&model.hw_f),
+            ]
+        }
+    }
+
+    impl SimBackend for Engine {
+        fn traffic(&self, model: &TrafficModel) -> Result<Vec<f64>> {
+            Self::check_closed_form(model)?;
+            let outs = self.execute("traffic", &Self::traffic_inputs(model))?;
+            let load = outs
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("traffic artifact returned no outputs"))?;
+            if load.len() != HOURS {
+                bail!("traffic output length {} != {HOURS}", load.len());
+            }
+            Ok(super::to_f64(load))
+        }
+
+        fn twin_sim(
+            &self,
+            model: &TrafficModel,
+            scenarios: &[ScenarioParams],
+        ) -> Result<TwinSimOutput> {
+            Self::check_closed_form(model)?;
+            let padded = pad_scenarios(scenarios)?;
+            let caps: Vec<f64> = padded.iter().map(|s| s.cap_rps).collect();
+            let lats: Vec<f64> = padded.iter().map(|s| s.base_latency_s).collect();
+            let mut inputs = Self::traffic_inputs(model);
+            inputs.push(Self::vec1(&caps));
+            inputs.push(Self::vec1(&lats));
+            let mut outs = self.execute("twin_sim", &inputs)?.into_iter();
+            let (load, queue, thr, lat) = (
+                outs.next().ok_or_else(|| anyhow!("missing load output"))?,
+                outs.next().ok_or_else(|| anyhow!("missing queue output"))?,
+                outs.next().ok_or_else(|| anyhow!("missing throughput output"))?,
+                outs.next().ok_or_else(|| anyhow!("missing latency output"))?,
+            );
+            Ok(TwinSimOutput {
+                load: super::to_f64(load),
+                queue: super::unflatten(queue, SCENARIOS, HOURS),
+                throughput: super::unflatten(thr, SCENARIOS, HOURS),
+                latency: super::unflatten(lat, SCENARIOS, HOURS),
+            })
+        }
+
+        fn retention(&self, daily_gb: &[f64], window_days: f64) -> Result<Vec<f64>> {
+            if daily_gb.len() != DAYS {
+                bail!("retention expects {DAYS} daily values, got {}", daily_gb.len());
+            }
+            let outs = self.execute(
+                "retention",
+                &[Self::vec1(daily_gb), Self::scalar(window_days)],
+            )?;
+            let stored = outs
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("retention artifact returned no outputs"))?;
+            Ok(super::to_f64(stored))
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-cpu"
+        }
+    }
+}
+
+/// Stub engine compiled when the `pjrt` feature is off: [`Engine::load`]
+/// always fails (gracefully routing callers to the native backend), and
+/// the type cannot be constructed.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    _unconstructable: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Always fails: PJRT support was not compiled in.
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        bail!(
+            "plantd was built without the `pjrt` cargo feature; add the \
+             `xla` bindings dependency and enable the feature to use PJRT \
+             (see vendor/README.md), or use the native backend (default)"
+        )
+    }
+
+    /// Always fails: PJRT support was not compiled in.
     pub fn load_default() -> Result<Engine> {
         Self::load(Path::new("artifacts"))
     }
+}
 
-    /// Compile-once cache: compile `<name>.hlo.txt` on first use.
-    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        let mut cache = self.compiled.lock().unwrap();
-        if let Some(e) = cache.get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        cache.insert(name.to_string(), exe.clone());
-        Ok(exe)
+#[cfg(not(feature = "pjrt"))]
+impl SimBackend for Engine {
+    fn traffic(&self, _model: &TrafficModel) -> Result<Vec<f64>> {
+        unreachable!("Engine cannot be constructed without the pjrt feature")
     }
 
-    /// Execute an artifact with f32 literals; returns the flattened tuple
-    /// elements as f32 vectors.
-    fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
-        let exe = self.executable(name)?;
-        let result = exe.execute::<xla::Literal>(inputs)?;
-        let literal = result[0][0].to_literal_sync()?;
-        let parts = literal.to_tuple()?;
-        parts
-            .into_iter()
-            .map(|p| Ok(p.to_vec::<f32>()?))
-            .collect()
+    fn twin_sim(
+        &self,
+        _model: &TrafficModel,
+        _scenarios: &[ScenarioParams],
+    ) -> Result<TwinSimOutput> {
+        unreachable!("Engine cannot be constructed without the pjrt feature")
     }
 
-    fn scalar(v: f64) -> xla::Literal {
-        xla::Literal::scalar(v as f32)
+    fn retention(&self, _daily_gb: &[f64], _window_days: f64) -> Result<Vec<f64>> {
+        unreachable!("Engine cannot be constructed without the pjrt feature")
     }
 
-    fn vec1(vs: &[f64]) -> xla::Literal {
-        let f: Vec<f32> = vs.iter().map(|&v| v as f32).collect();
-        xla::Literal::vec1(&f)
-    }
-
-    fn check_closed_form(model: &TrafficModel) -> Result<()> {
-        if model.burst.is_some() {
-            bail!(
-                "the AOT traffic artifact evaluates the closed-form §V.G \
-                 projection; bursty forecasts need the native backend"
-            );
-        }
-        Ok(())
-    }
-
-    fn traffic_inputs(model: &TrafficModel) -> Vec<xla::Literal> {
-        vec![
-            Self::scalar(model.base_rps),
-            Self::scalar(model.growth_net()),
-            Self::vec1(&model.month_f),
-            Self::vec1(&model.hw_f),
-        ]
+    fn name(&self) -> &'static str {
+        unreachable!("Engine cannot be constructed without the pjrt feature")
     }
 }
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn to_f64(v: Vec<f32>) -> Vec<f64> {
     v.into_iter().map(|x| x as f64).collect()
 }
 
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn unflatten(flat: Vec<f32>, rows: usize, cols: usize) -> Vec<Vec<f64>> {
     assert_eq!(flat.len(), rows * cols, "unflatten shape mismatch");
     (0..rows)
@@ -192,69 +331,9 @@ fn unflatten(flat: Vec<f32>, rows: usize, cols: usize) -> Vec<Vec<f64>> {
         .collect()
 }
 
-impl SimBackend for Engine {
-    fn traffic(&self, model: &TrafficModel) -> Result<Vec<f64>> {
-        Self::check_closed_form(model)?;
-        let outs = self.execute("traffic", &Self::traffic_inputs(model))?;
-        let load = outs
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("traffic artifact returned no outputs"))?;
-        if load.len() != HOURS {
-            bail!("traffic output length {} != {HOURS}", load.len());
-        }
-        Ok(to_f64(load))
-    }
-
-    fn twin_sim(
-        &self,
-        model: &TrafficModel,
-        scenarios: &[ScenarioParams],
-    ) -> Result<TwinSimOutput> {
-        Self::check_closed_form(model)?;
-        let padded = pad_scenarios(scenarios)?;
-        let caps: Vec<f64> = padded.iter().map(|s| s.cap_rps).collect();
-        let lats: Vec<f64> = padded.iter().map(|s| s.base_latency_s).collect();
-        let mut inputs = Self::traffic_inputs(model);
-        inputs.push(Self::vec1(&caps));
-        inputs.push(Self::vec1(&lats));
-        let mut outs = self.execute("twin_sim", &inputs)?.into_iter();
-        let (load, queue, thr, lat) = (
-            outs.next().ok_or_else(|| anyhow!("missing load output"))?,
-            outs.next().ok_or_else(|| anyhow!("missing queue output"))?,
-            outs.next().ok_or_else(|| anyhow!("missing throughput output"))?,
-            outs.next().ok_or_else(|| anyhow!("missing latency output"))?,
-        );
-        Ok(TwinSimOutput {
-            load: to_f64(load),
-            queue: unflatten(queue, SCENARIOS, HOURS),
-            throughput: unflatten(thr, SCENARIOS, HOURS),
-            latency: unflatten(lat, SCENARIOS, HOURS),
-        })
-    }
-
-    fn retention(&self, daily_gb: &[f64], window_days: f64) -> Result<Vec<f64>> {
-        if daily_gb.len() != DAYS {
-            bail!("retention expects {DAYS} daily values, got {}", daily_gb.len());
-        }
-        let outs = self.execute(
-            "retention",
-            &[Self::vec1(daily_gb), Self::scalar(window_days)],
-        )?;
-        let stored = outs
-            .into_iter()
-            .next()
-            .ok_or_else(|| anyhow!("retention artifact returned no outputs"))?;
-        Ok(to_f64(stored))
-    }
-
-    fn name(&self) -> &'static str {
-        "pjrt-cpu"
-    }
-}
-
-/// Best available backend: PJRT if artifacts are present, otherwise the
-/// native evaluator (with a warning to stderr).
+/// Best available backend: PJRT if the feature is compiled in and the
+/// artifacts are present, otherwise the native evaluator (with a warning
+/// to stderr).
 pub fn default_backend(artifacts_dir: &Path) -> Box<dyn SimBackend> {
     match Engine::load(artifacts_dir) {
         Ok(engine) => Box::new(engine),
@@ -312,5 +391,11 @@ mod tests {
     #[test]
     fn engine_load_missing_dir_errors() {
         assert!(Engine::load(Path::new("/nonexistent/artifacts")).is_err());
+    }
+
+    #[test]
+    fn default_backend_falls_back_to_native() {
+        let backend = default_backend(Path::new("/nonexistent/artifacts"));
+        assert_eq!(backend.name(), "native");
     }
 }

@@ -13,16 +13,22 @@ use crate::util::clock::SharedClock;
 /// Column types supported by the store.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ColType {
+    /// 64-bit signed integer.
     Int,
+    /// 64-bit float.
     Float,
+    /// UTF-8 text.
     Text,
 }
 
 /// A typed cell value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Integer cell.
     Int(i64),
+    /// Float cell.
     Float(f64),
+    /// Text cell.
     Text(String),
     /// Missing/unparseable — always scrubbed.
     Null,
@@ -42,13 +48,16 @@ impl Value {
 /// Table column definition, with an optional numeric validity range.
 #[derive(Debug, Clone)]
 pub struct Column {
+    /// Column name.
     pub name: String,
+    /// Required cell type.
     pub ty: ColType,
     /// Inclusive numeric validity bounds; rows outside are scrubbed.
     pub range: Option<(f64, f64)>,
 }
 
 impl Column {
+    /// Unconstrained column of the given type.
     pub fn new(name: &str, ty: ColType) -> Self {
         Column {
             name: name.to_string(),
@@ -57,6 +66,7 @@ impl Column {
         }
     }
 
+    /// Add inclusive numeric validity bounds (builder style).
     pub fn with_range(mut self, lo: f64, hi: f64) -> Self {
         self.range = Some((lo, hi));
         self
@@ -66,7 +76,9 @@ impl Column {
 /// Insert latency model: fixed per-batch cost plus per-row cost.
 #[derive(Debug, Clone, Copy)]
 pub struct InsertLatency {
+    /// Fixed cost per insert batch, virtual seconds.
     pub per_batch_s: f64,
+    /// Additional cost per row, virtual seconds.
     pub per_row_s: f64,
 }
 
@@ -96,6 +108,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with the given schema and insert-latency model.
     pub fn new(
         name: &str,
         columns: Vec<Column>,
@@ -112,10 +125,12 @@ impl Table {
         }
     }
 
+    /// Table name.
     pub fn name(&self) -> &str {
         &self.name
     }
 
+    /// The table's column schema.
     pub fn columns(&self) -> &[Column] {
         &self.columns
     }
@@ -163,10 +178,12 @@ impl Table {
         (inserted, scrubbed)
     }
 
+    /// Rows stored so far.
     pub fn row_count(&self) -> u64 {
         self.data.lock().unwrap().rows.len() as u64
     }
 
+    /// Rows rejected by validation so far.
     pub fn scrubbed_count(&self) -> u64 {
         self.data.lock().unwrap().scrubbed
     }

@@ -37,6 +37,7 @@ pub struct Span {
 }
 
 impl Span {
+    /// Virtual time the span's work became externally visible.
     pub fn end_s(&self) -> f64 {
         self.start_s + self.duration_s
     }
@@ -50,10 +51,12 @@ pub struct SpanSink {
 }
 
 impl SpanSink {
+    /// Empty sink.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Buffer one span (called from stage threads).
     pub fn push(&self, span: Span) {
         self.spans.lock().unwrap().push(span);
     }
@@ -63,10 +66,12 @@ impl SpanSink {
         std::mem::take(&mut *self.spans.lock().unwrap())
     }
 
+    /// Number of buffered spans.
     pub fn len(&self) -> usize {
         self.spans.lock().unwrap().len()
     }
 
+    /// Whether the buffer is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -87,6 +92,7 @@ struct StageSeries {
 }
 
 impl Collector {
+    /// Collector writing into `tsdb`.
     pub fn new(tsdb: Tsdb) -> Self {
         Collector {
             tsdb,
@@ -94,6 +100,7 @@ impl Collector {
         }
     }
 
+    /// The TSDB this collector writes into.
     pub fn tsdb(&self) -> &Tsdb {
         &self.tsdb
     }

@@ -18,11 +18,14 @@ pub type Labels = BTreeMap<String, String>;
 /// Canonical series identity.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SeriesKey {
+    /// Metric name, e.g. `stage_records`.
     pub name: String,
+    /// Sorted label set.
     pub labels: Labels,
 }
 
 impl SeriesKey {
+    /// Key from a name and label pairs.
     pub fn new(name: &str, labels: &[(&str, &str)]) -> Self {
         SeriesKey {
             name: name.to_string(),
@@ -33,6 +36,7 @@ impl SeriesKey {
         }
     }
 
+    /// Value of one label, if set.
     pub fn label(&self, key: &str) -> Option<&str> {
         self.labels.get(key).map(|s| s.as_str())
     }
@@ -65,6 +69,7 @@ pub struct Tsdb {
 }
 
 impl Tsdb {
+    /// Empty store.
     pub fn new() -> Self {
         Self::default()
     }

@@ -15,7 +15,9 @@
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
+/// Hours in the projected (non-leap) year.
 pub const HOURS_PER_YEAR: usize = 8760;
+/// Days in the projected (non-leap) year.
 pub const DAYS_PER_YEAR: usize = 365;
 
 /// Cumulative days at the start of each month (non-leap).
@@ -44,6 +46,7 @@ pub fn hour_of_week(hour: usize) -> usize {
 /// The analyst-supplied traffic forecast.
 #[derive(Debug, Clone)]
 pub struct TrafficModel {
+    /// Forecast name (e.g. "Nominal", "High").
     pub name: String,
     /// Records per second at the start of the year.
     pub base_rps: f64,
@@ -63,8 +66,11 @@ pub struct TrafficModel {
 /// load is multiplied by `magnitude` (deterministic in `seed`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BurstSpec {
+    /// Probability an hour bursts.
     pub prob: f64,
+    /// Multiplier applied to a bursting hour's load.
     pub magnitude: f64,
+    /// PRNG seed (bursts replay deterministically).
     pub seed: u64,
 }
 

@@ -35,7 +35,9 @@ pub enum TwinKind {
 /// backlog, like a conservative HPA.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AutoscalePolicy {
+    /// Floor on replica count.
     pub min_replicas: u32,
+    /// Ceiling on replica count.
     pub max_replicas: u32,
     /// Scale up when utilization exceeds this (or any backlog remains).
     pub scale_up_util: f64,
@@ -55,6 +57,7 @@ impl Default for AutoscalePolicy {
 }
 
 impl TwinKind {
+    /// Stable lowercase name (used in JSON and reports).
     pub fn as_str(&self) -> &'static str {
         match self {
             TwinKind::Simple => "simple",
@@ -69,6 +72,7 @@ impl TwinKind {
 pub struct TwinParams {
     /// Name of the pipeline variant this twin models.
     pub name: String,
+    /// Model family (fixed / quickscaling / autoscaling).
     pub kind: TwinKind,
     /// Sustained ingest capacity, records/second ("max rec/s").
     pub max_rps: f64,
@@ -118,6 +122,7 @@ impl TwinParams {
         self.cost_per_hr / (self.max_rps * 3600.0)
     }
 
+    /// Serialize to the DigitalTwin resource's JSON spec form.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -129,6 +134,7 @@ impl TwinParams {
         ])
     }
 
+    /// Parse from the JSON spec form produced by [`TwinParams::to_json`].
     pub fn from_json(j: &Json) -> Result<TwinParams, String> {
         let get = |k: &str| -> Result<f64, String> {
             j.get(k)

@@ -11,14 +11,20 @@ use std::time::Instant;
 
 /// One timed workload.
 pub struct BenchResult {
+    /// Workload label.
     pub name: String,
+    /// Measured iterations (excluding warmup).
     pub iters: u32,
+    /// Mean wall time per iteration, seconds.
     pub mean_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
+    /// Slowest iteration, seconds.
     pub max_s: f64,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "bench {:<40} {:>5} iters  mean {:>10}  min {:>10}  max {:>10}",

@@ -8,9 +8,11 @@ use std::collections::BTreeMap;
 /// Parsed command line: subcommand, options, flags, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare word, e.g. `plantd simulate` → `Some("simulate")`.
     pub subcommand: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Bare words after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -45,22 +47,27 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (skipping argv\[0\]).
     pub fn from_env() -> Result<Args, String> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether a value-less `--name` flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name value` (or `--name=value`), if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn opt_or(&self, name: &str, default: &str) -> String {
         self.opt(name).unwrap_or(default).to_string()
     }
 
+    /// Option parsed as a float, with a default when absent.
     pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.opt(name) {
             None => Ok(default),
@@ -70,6 +77,7 @@ impl Args {
         }
     }
 
+    /// Option parsed as an unsigned integer, with a default when absent.
     pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.opt(name) {
             None => Ok(default),
@@ -90,6 +98,16 @@ impl Args {
             }
         }
         Ok(())
+    }
+}
+
+/// Parse an unsigned integer in decimal or `0x`-prefixed hex — the format
+/// campaign reports print their replay seeds in, so a printed seed can be
+/// passed straight back on the command line.
+pub fn parse_seed(s: &str) -> Option<u64> {
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
     }
 }
 
@@ -152,6 +170,16 @@ mod tests {
         let a = parse(&["x", "--bogus", "1"]);
         assert!(a.check_known(&["rate"]).is_err());
         assert!(a.check_known(&["bogus"]).is_ok());
+    }
+
+    #[test]
+    fn seed_parses_decimal_and_hex() {
+        assert_eq!(parse_seed("213"), Some(213));
+        assert_eq!(parse_seed("0xD5"), Some(0xD5));
+        assert_eq!(parse_seed("0Xd5"), Some(0xD5));
+        assert_eq!(parse_seed("0x"), None);
+        assert_eq!(parse_seed("nope"), None);
+        assert_eq!(parse_seed(""), None);
     }
 
     #[test]

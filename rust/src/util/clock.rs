@@ -31,6 +31,7 @@ pub trait Clock: Send + Sync {
     }
 }
 
+/// Shared handle to a [`Clock`] (every component holds one).
 pub type SharedClock = Arc<dyn Clock>;
 
 /// Wall clock with a virtual speed-up factor.
@@ -49,6 +50,7 @@ impl ScaledClock {
         })
     }
 
+    /// Unscaled wall clock (scale 1).
     pub fn realtime() -> Arc<Self> {
         Self::new(1.0)
     }
@@ -97,18 +99,21 @@ pub struct ManualClock {
 }
 
 impl ManualClock {
+    /// Clock starting at virtual time 0.
     pub fn new() -> Arc<Self> {
         Arc::new(ManualClock {
             nanos: AtomicU64::new(0),
         })
     }
 
+    /// Advance the clock by `seconds`.
     pub fn advance_s(&self, seconds: f64) {
         assert!(seconds >= 0.0);
         self.nanos
             .fetch_add((seconds * 1e9) as u64, Ordering::SeqCst);
     }
 
+    /// Jump the clock to an absolute virtual time.
     pub fn set_s(&self, seconds: f64) {
         self.nanos.store((seconds * 1e9) as u64, Ordering::SeqCst);
     }

@@ -27,17 +27,20 @@ pub struct CsvDoc {
 }
 
 impl CsvDoc {
+    /// Document starting with a header row.
     pub fn new(header: &[&str]) -> Self {
         let mut doc = CsvDoc { buf: Vec::new() };
         doc.push_strs(header);
         doc
     }
 
+    /// Append a row of string slices.
     pub fn push_strs(&mut self, fields: &[&str]) {
         let owned: Vec<String> = fields.iter().map(|s| s.to_string()).collect();
         write_row(&mut self.buf, &owned).expect("vec write");
     }
 
+    /// Append a row of owned fields.
     pub fn push(&mut self, fields: Vec<String>) {
         write_row(&mut self.buf, &fields).expect("vec write");
     }
@@ -52,10 +55,12 @@ impl CsvDoc {
         self.push(fields);
     }
 
+    /// The document bytes accumulated so far.
     pub fn as_bytes(&self) -> &[u8] {
         &self.buf
     }
 
+    /// Write to disk, creating parent directories as needed.
     pub fn save(&self, path: &std::path::Path) -> io::Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;

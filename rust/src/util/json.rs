@@ -12,25 +12,41 @@ use std::fmt;
 /// (sorted keys), which keeps report/golden-file diffs stable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An ordered array.
     Arr(Vec<Json>),
+    /// An object with canonically-sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset and message.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// Human-readable description of the failure.
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Json {
     // ---- constructors -----------------------------------------------------
 
+    /// Object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(
             pairs
@@ -40,20 +56,24 @@ impl Json {
         )
     }
 
+    /// Array from any iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Number from anything convertible to f64.
     pub fn num<N: Into<f64>>(n: N) -> Json {
         Json::Num(n.into())
     }
 
+    /// String value.
     pub fn str<S: Into<String>>(s: S) -> Json {
         Json::Str(s.into())
     }
 
     // ---- accessors --------------------------------------------------------
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -61,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integral numeric value, if exactly representable.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
@@ -71,6 +92,7 @@ impl Json {
         })
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -78,6 +100,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -85,6 +108,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -92,6 +116,7 @@ impl Json {
         }
     }
 
+    /// Key→value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -156,6 +181,7 @@ impl Json {
 
     // ---- parsing ----------------------------------------------------------
 
+    /// Parse an RFC 8259 JSON document.
     pub fn parse(text: &str) -> Result<Json, ParseError> {
         let mut p = Parser {
             bytes: text.as_bytes(),

@@ -13,6 +13,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fresh accumulator (count 0; moments are NaN until pushed).
     pub fn new() -> Self {
         Welford {
             n: 0,
@@ -23,6 +24,7 @@ impl Welford {
         }
     }
 
+    /// Fold one sample into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -32,10 +34,12 @@ impl Welford {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples pushed.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sample mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -53,10 +57,12 @@ impl Welford {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest sample seen (NaN when empty).
     pub fn min(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -65,6 +71,7 @@ impl Welford {
         }
     }
 
+    /// Largest sample seen (NaN when empty).
     pub fn max(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -102,10 +109,12 @@ pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median (the 0.5 quantile) of a sample.
 pub fn median(xs: &[f64]) -> f64 {
     quantile(xs, 0.5)
 }
 
+/// Arithmetic mean; NaN on an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;

@@ -4,7 +4,9 @@
 /// Column alignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Align {
+    /// Pad on the right (labels).
     Left,
+    /// Pad on the left (numbers).
     Right,
 }
 
@@ -19,6 +21,8 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers (first column left-aligned,
+    /// the rest right-aligned by default).
     pub fn new(header: &[&str]) -> Self {
         Table {
             title: None,
@@ -32,6 +36,7 @@ impl Table {
         }
     }
 
+    /// Set a title line printed above the table.
     pub fn with_title(mut self, title: &str) -> Self {
         self.title = Some(title.to_string());
         self
@@ -43,6 +48,7 @@ impl Table {
         self
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -53,14 +59,17 @@ impl Table {
         self
     }
 
+    /// Append a row of string slices.
     pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
         self.row(cells.iter().map(|s| s.to_string()).collect())
     }
 
+    /// Number of body rows appended so far.
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render with box-drawing separators.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();

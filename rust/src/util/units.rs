@@ -1,13 +1,17 @@
 //! Unit conversions and humanized formatting used across reports:
 //! bytes ↔ MB/GB, seconds ↔ human durations, dollars/cents.
 
+/// Bytes per mebibyte.
 pub const MB: f64 = 1024.0 * 1024.0;
+/// Bytes per gibibyte.
 pub const GB: f64 = 1024.0 * MB;
 
+/// Bytes → MiB.
 pub fn bytes_to_mb(b: u64) -> f64 {
     b as f64 / MB
 }
 
+/// Bytes → GiB.
 pub fn bytes_to_gb(b: u64) -> f64 {
     b as f64 / GB
 }

@@ -1,0 +1,113 @@
+//! Minimal offline stand-in for the `crc32fast` crate: the standard
+//! CRC-32/ISO-HDLC (IEEE 802.3) checksum used by zip, gzip and PNG —
+//! reflected polynomial `0xEDB88320`, initial value `0xFFFFFFFF`, final
+//! XOR `0xFFFFFFFF`.
+//!
+//! A 256-entry lookup table is built once at first use; throughput is
+//! ~0.5 GB/s, far from the SIMD upstream but comfortably off PlantD's
+//! hot paths (checksums guard the synthetic wire format, not a kernel).
+
+use std::sync::OnceLock;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, entry) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 {
+                    0xEDB8_8320 ^ (c >> 1)
+                } else {
+                    c >> 1
+                };
+            }
+            *entry = c;
+        }
+        t
+    })
+}
+
+/// Streaming CRC-32 hasher (subset of the upstream `Hasher` API).
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    /// Start a fresh checksum.
+    pub fn new() -> Hasher {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    /// Feed bytes into the checksum.
+    pub fn update(&mut self, data: &[u8]) {
+        let t = table();
+        let mut c = self.state;
+        for &b in data {
+            c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// Finish and return the checksum.
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice (the function PlantD calls).
+pub fn hash(data: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(data);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical check value for "123456789"
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+        // IEEE 802.3 residue check: appending the (little-endian) CRC
+        // makes the running state hit the magic residue
+        let mut data = b"The quick brown fox jumps over the lazy dog".to_vec();
+        assert_eq!(hash(&data), 0x414F_A339);
+        let crc = hash(&data);
+        data.extend_from_slice(&crc.to_le_bytes());
+        assert_eq!(hash(&data), 0x2144_DF1C);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data: Vec<u8> = (0..=255).cycle().take(10_000).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(97) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), hash(&data));
+    }
+
+    #[test]
+    fn single_bit_flips_change_checksum() {
+        let data = vec![0xA5u8; 512];
+        let base = hash(&data);
+        for byte in [0usize, 100, 511] {
+            for bit in 0..8 {
+                let mut d = data.clone();
+                d[byte] ^= 1 << bit;
+                assert_ne!(hash(&d), base, "flip at {byte}.{bit} undetected");
+            }
+        }
+    }
+}

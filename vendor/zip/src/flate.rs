@@ -1,0 +1,666 @@
+//! DEFLATE (RFC 1951) from scratch: a greedy hash-chain LZ77 compressor
+//! emitting one fixed-Huffman block, and a full inflater supporting
+//! stored, fixed, and dynamic blocks (the canonical-Huffman decode loop is
+//! the classic `puff.c` algorithm).
+//!
+//! The compressor favours simplicity over ratio — fixed codes only, greedy
+//! matching, bounded chain search — which is plenty for PlantD's synthetic
+//! telematics binaries (repeated VINs and timestamp prefixes deflate to
+//! roughly half their raw size). The inflater is standard-conformant so
+//! the container can also open foreign zips.
+
+// ---------------------------------------------------------------------------
+// shared tables
+// ---------------------------------------------------------------------------
+
+/// Base match length for length codes 257..=285.
+const LENGTH_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59,
+    67, 83, 99, 115, 131, 163, 195, 227, 258,
+];
+/// Extra bits for length codes 257..=285.
+const LENGTH_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4,
+    5, 5, 5, 5, 0,
+];
+/// Base distance for distance codes 0..=29.
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513,
+    769, 1025, 1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+/// Extra bits for distance codes 0..=29.
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10,
+    11, 11, 12, 12, 13, 13,
+];
+
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const WINDOW: usize = 32 * 1024;
+
+/// Decompression error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InflateError(pub &'static str);
+
+impl std::fmt::Display for InflateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "inflate: {}", self.0)
+    }
+}
+
+impl std::error::Error for InflateError {}
+
+// ---------------------------------------------------------------------------
+// bit I/O
+// ---------------------------------------------------------------------------
+
+/// LSB-first bit writer (DEFLATE's bit order).
+struct BitWriter {
+    out: Vec<u8>,
+    bitbuf: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        BitWriter {
+            out: Vec::new(),
+            bitbuf: 0,
+            nbits: 0,
+        }
+    }
+
+    /// Append `n` bits of `value`, least significant bit first.
+    fn write_bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 16 && (n == 32 || value < (1 << n)));
+        self.bitbuf |= value << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push((self.bitbuf & 0xFF) as u8);
+            self.bitbuf >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Append a Huffman code: `n` bits, most significant code bit first.
+    fn write_code(&mut self, code: u32, n: u32) {
+        // reverse the low n bits, then emit LSB-first
+        let mut rev = 0u32;
+        for i in 0..n {
+            rev |= ((code >> i) & 1) << (n - 1 - i);
+        }
+        self.write_bits(rev, n);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.bitbuf & 0xFF) as u8);
+        }
+        self.out
+    }
+}
+
+/// LSB-first bit reader.
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,  // next byte index
+    bitbuf: u32, // buffered bits, LSB = next bit
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        BitReader {
+            data,
+            pos: 0,
+            bitbuf: 0,
+            nbits: 0,
+        }
+    }
+
+    fn read_bits(&mut self, n: u32) -> Result<u32, InflateError> {
+        while self.nbits < n {
+            let byte = *self
+                .data
+                .get(self.pos)
+                .ok_or(InflateError("unexpected end of stream"))?;
+            self.pos += 1;
+            self.bitbuf |= (byte as u32) << self.nbits;
+            self.nbits += 8;
+        }
+        let mask = if n == 0 { 0 } else { (1u32 << n) - 1 };
+        let v = self.bitbuf & mask;
+        self.bitbuf >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    /// Discard buffered bits to realign on a byte boundary (stored blocks).
+    fn align_byte(&mut self) {
+        self.bitbuf = 0;
+        self.nbits = 0;
+    }
+
+    fn read_u16_le(&mut self) -> Result<u16, InflateError> {
+        if self.pos + 2 > self.data.len() {
+            return Err(InflateError("truncated stored block header"));
+        }
+        let v = u16::from_le_bytes([self.data[self.pos], self.data[self.pos + 1]]);
+        self.pos += 2;
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// canonical Huffman decoding (the puff.c algorithm)
+// ---------------------------------------------------------------------------
+
+const MAX_BITS: usize = 15;
+
+struct Huffman {
+    /// `counts[l]` = number of symbols with code length `l`.
+    counts: [u16; MAX_BITS + 1],
+    /// Symbols sorted by (code length, symbol value).
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    fn new(lengths: &[u8]) -> Result<Huffman, InflateError> {
+        let mut counts = [0u16; MAX_BITS + 1];
+        for &l in lengths {
+            if l as usize > MAX_BITS {
+                return Err(InflateError("code length > 15"));
+            }
+            counts[l as usize] += 1;
+        }
+        if counts[0] as usize == lengths.len() {
+            return Err(InflateError("no codes in alphabet"));
+        }
+        // check the code space is not over-subscribed
+        let mut left = 1i32;
+        for l in 1..=MAX_BITS {
+            left <<= 1;
+            left -= counts[l] as i32;
+            if left < 0 {
+                return Err(InflateError("over-subscribed code"));
+            }
+        }
+        // offsets of first symbol of each length in the sorted table
+        let mut offs = [0u16; MAX_BITS + 2];
+        for l in 1..=MAX_BITS {
+            offs[l + 1] = offs[l] + counts[l];
+        }
+        let mut symbols = vec![0u16; lengths.len()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbols[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { counts, symbols })
+    }
+
+    fn decode(&self, br: &mut BitReader) -> Result<u16, InflateError> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..=MAX_BITS {
+            code |= br.read_bits(1)? as i32;
+            let count = self.counts[len] as i32;
+            if code - first < count {
+                return Ok(self.symbols[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err(InflateError("invalid Huffman code"))
+    }
+}
+
+fn fixed_litlen_lengths() -> Vec<u8> {
+    let mut l = vec![0u8; 288];
+    l[0..144].fill(8);
+    l[144..256].fill(9);
+    l[256..280].fill(7);
+    l[280..288].fill(8);
+    l
+}
+
+fn fixed_dist_lengths() -> Vec<u8> {
+    vec![5u8; 30]
+}
+
+// ---------------------------------------------------------------------------
+// inflate
+// ---------------------------------------------------------------------------
+
+/// Decompress a raw DEFLATE stream.
+pub fn inflate(data: &[u8]) -> Result<Vec<u8>, InflateError> {
+    let mut br = BitReader::new(data);
+    let mut out = Vec::with_capacity(data.len() * 2);
+    loop {
+        let bfinal = br.read_bits(1)?;
+        let btype = br.read_bits(2)?;
+        match btype {
+            0 => {
+                // stored
+                br.align_byte();
+                let len = br.read_u16_le()?;
+                let nlen = br.read_u16_le()?;
+                if len != !nlen {
+                    return Err(InflateError("stored block LEN/NLEN mismatch"));
+                }
+                let end = br.pos + len as usize;
+                if end > br.data.len() {
+                    return Err(InflateError("stored block truncated"));
+                }
+                out.extend_from_slice(&br.data[br.pos..end]);
+                br.pos = end;
+            }
+            1 => {
+                let lit = Huffman::new(&fixed_litlen_lengths())?;
+                let dist = Huffman::new(&fixed_dist_lengths())?;
+                inflate_block(&mut br, &lit, Some(&dist), &mut out)?;
+            }
+            2 => {
+                let (lit, dist) = read_dynamic_tables(&mut br)?;
+                inflate_block(&mut br, &lit, dist.as_ref(), &mut out)?;
+            }
+            _ => return Err(InflateError("reserved block type")),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+/// `dist` is `None` for a literal-only dynamic block (RFC 1951 §3.2.7:
+/// one distance code of zero bits means no distance codes are used).
+fn inflate_block(
+    br: &mut BitReader,
+    lit: &Huffman,
+    dist: Option<&Huffman>,
+    out: &mut Vec<u8>,
+) -> Result<(), InflateError> {
+    loop {
+        let sym = lit.decode(br)?;
+        match sym {
+            0..=255 => out.push(sym as u8),
+            256 => return Ok(()),
+            257..=285 => {
+                let idx = (sym - 257) as usize;
+                let len = LENGTH_BASE[idx] as usize
+                    + br.read_bits(LENGTH_EXTRA[idx] as u32)? as usize;
+                let dist =
+                    dist.ok_or(InflateError("length code in literal-only block"))?;
+                let dsym = dist.decode(br)? as usize;
+                if dsym >= 30 {
+                    return Err(InflateError("invalid distance code"));
+                }
+                let d = DIST_BASE[dsym] as usize
+                    + br.read_bits(DIST_EXTRA[dsym] as u32)? as usize;
+                if d == 0 || d > out.len() {
+                    return Err(InflateError("distance too far back"));
+                }
+                let start = out.len() - d;
+                // overlapping copy must proceed byte-by-byte
+                for k in 0..len {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+            _ => return Err(InflateError("invalid literal/length symbol")),
+        }
+    }
+}
+
+/// Order in which code-length-code lengths are transmitted.
+const CLC_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+fn read_dynamic_tables(
+    br: &mut BitReader,
+) -> Result<(Huffman, Option<Huffman>), InflateError> {
+    let hlit = br.read_bits(5)? as usize + 257;
+    let hdist = br.read_bits(5)? as usize + 1;
+    let hclen = br.read_bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err(InflateError("bad dynamic header counts"));
+    }
+    let mut clc_lengths = [0u8; 19];
+    for &ord in CLC_ORDER.iter().take(hclen) {
+        clc_lengths[ord] = br.read_bits(3)? as u8;
+    }
+    let clc = Huffman::new(&clc_lengths)?;
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0;
+    while i < lengths.len() {
+        let sym = clc.decode(br)?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err(InflateError("repeat with no previous length"));
+                }
+                let prev = lengths[i - 1];
+                let n = 3 + br.read_bits(2)? as usize;
+                if i + n > lengths.len() {
+                    return Err(InflateError("repeat overflows alphabet"));
+                }
+                lengths[i..i + n].fill(prev);
+                i += n;
+            }
+            17 => {
+                let n = 3 + br.read_bits(3)? as usize;
+                if i + n > lengths.len() {
+                    return Err(InflateError("zero-run overflows alphabet"));
+                }
+                i += n;
+            }
+            18 => {
+                let n = 11 + br.read_bits(7)? as usize;
+                if i + n > lengths.len() {
+                    return Err(InflateError("zero-run overflows alphabet"));
+                }
+                i += n;
+            }
+            _ => return Err(InflateError("bad code-length symbol")),
+        }
+    }
+    let lit = Huffman::new(&lengths[..hlit])?;
+    // RFC 1951 §3.2.7: a single zero-length distance code means the block
+    // is all literals — valid, and must not be rejected
+    let dist = if lengths[hlit..].iter().all(|&l| l == 0) {
+        None
+    } else {
+        Some(Huffman::new(&lengths[hlit..])?)
+    };
+    Ok((lit, dist))
+}
+
+// ---------------------------------------------------------------------------
+// deflate
+// ---------------------------------------------------------------------------
+
+/// Write the fixed-Huffman code for one literal/length symbol.
+fn write_litlen(bw: &mut BitWriter, sym: u16) {
+    let s = sym as u32;
+    match s {
+        0..=143 => bw.write_code(0x30 + s, 8),
+        144..=255 => bw.write_code(0x190 + (s - 144), 9),
+        256..=279 => bw.write_code(s - 256, 7),
+        _ => bw.write_code(0xC0 + (s - 280), 8),
+    }
+}
+
+/// Largest index `i` such that `table[i] <= v`.
+fn bucket_of(table: &[u16], v: usize) -> usize {
+    match table.binary_search(&(v as u16)) {
+        Ok(i) => i,
+        Err(ins) => ins - 1,
+    }
+}
+
+fn emit_match(bw: &mut BitWriter, len: usize, dist: usize) {
+    let li = bucket_of(&LENGTH_BASE, len);
+    write_litlen(bw, 257 + li as u16);
+    bw.write_bits((len - LENGTH_BASE[li] as usize) as u32, LENGTH_EXTRA[li] as u32);
+    let di = bucket_of(&DIST_BASE, dist);
+    bw.write_code(di as u32, 5);
+    bw.write_bits((dist - DIST_BASE[di] as usize) as u32, DIST_EXTRA[di] as u32);
+}
+
+const HASH_BITS: usize = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+/// How many hash-chain candidates to examine per position.
+const MAX_CHAIN: usize = 32;
+
+fn hash3(data: &[u8], i: usize) -> usize {
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `data` into a single fixed-Huffman DEFLATE block.
+pub fn deflate(data: &[u8]) -> Vec<u8> {
+    let mut bw = BitWriter::new();
+    bw.write_bits(1, 1); // BFINAL
+    bw.write_bits(1, 2); // BTYPE = 01 (fixed Huffman)
+
+    let n = data.len();
+    // hash chains: head[h] = most recent position with hash h;
+    // prev[i & (WINDOW-1)] = previous position with the same hash as i
+    let mut head = vec![usize::MAX; HASH_SIZE];
+    let mut prev = vec![usize::MAX; WINDOW];
+
+    let insert = |head: &mut [usize], prev: &mut [usize], data: &[u8], i: usize| {
+        if i + MIN_MATCH <= data.len() {
+            let h = hash3(data, i);
+            prev[i & (WINDOW - 1)] = head[h];
+            head[h] = i;
+        }
+    };
+
+    let mut i = 0;
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let max_len = MAX_MATCH.min(n - i);
+            let mut cand = head[hash3(data, i)];
+            let mut chain = 0;
+            while cand != usize::MAX && chain < MAX_CHAIN {
+                let dist = i - cand;
+                if dist > WINDOW {
+                    break;
+                }
+                // candidate positions can alias after WINDOW wraps; verify
+                // the first bytes actually match before extending
+                let mut l = 0usize;
+                while l < max_len && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = dist;
+                    if l >= max_len {
+                        break;
+                    }
+                }
+                let next = prev[cand & (WINDOW - 1)];
+                // chains only go backwards; a stale slot would loop forever
+                if next >= cand {
+                    break;
+                }
+                cand = next;
+                chain += 1;
+            }
+        }
+        if best_len >= MIN_MATCH {
+            emit_match(&mut bw, best_len, best_dist);
+            // index every position covered by the match
+            for k in 0..best_len {
+                insert(&mut head, &mut prev, data, i + k);
+            }
+            i += best_len;
+        } else {
+            write_litlen(&mut bw, data[i] as u16);
+            insert(&mut head, &mut prev, data, i);
+            i += 1;
+        }
+    }
+    write_litlen(&mut bw, 256); // end of block
+    bw.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let packed = deflate(data);
+        let back = inflate(&packed).expect("inflate");
+        assert_eq!(back, data, "roundtrip failed for {} bytes", data.len());
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"ab");
+        roundtrip(b"abc");
+    }
+
+    #[test]
+    fn roundtrip_all_byte_values() {
+        let data: Vec<u8> = (0u8..=255).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_long_repeat_compresses() {
+        let data = vec![0x42u8; 10_000];
+        let packed = deflate(&data);
+        assert!(packed.len() < 200, "10k run packed to {} bytes", packed.len());
+        assert_eq!(inflate(&packed).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_repeating_structure_compresses() {
+        // telemetry-shaped: a 37-byte record with a constant 17-byte VIN
+        let mut data = Vec::new();
+        for rec in 0u64..500 {
+            data.extend_from_slice(&(rec * 100).to_le_bytes());
+            data.extend_from_slice(b"1HGCM82633A004352");
+            data.extend_from_slice(&(rec as f32).to_le_bytes());
+            data.extend_from_slice(&(rec as f32 * 0.5).to_le_bytes());
+            data.extend_from_slice(&(rec as f32 * 2.0).to_le_bytes());
+        }
+        let packed = deflate(&data);
+        assert!(
+            packed.len() < data.len() * 3 / 4,
+            "only {} -> {}",
+            data.len(),
+            packed.len()
+        );
+        assert_eq!(inflate(&packed).unwrap(), data);
+    }
+
+    #[test]
+    fn roundtrip_pseudorandom_data() {
+        // xorshift noise: essentially incompressible, exercises the
+        // literal path and 9-bit codes
+        let mut x = 0x12345678u32;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                (x & 0xFF) as u8
+            })
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_overlapping_matches() {
+        // "aaa..." forces dist=1 overlapping copies
+        roundtrip(&vec![b'a'; 1000]);
+        // period-3 pattern
+        let data: Vec<u8> = std::iter::repeat(*b"xyz")
+            .take(700)
+            .flatten()
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn roundtrip_max_match_lengths() {
+        // exactly 258 + a boundary, then 259
+        for n in [258usize, 259, 260, 516, 517] {
+            let mut data = b"HEADER".to_vec();
+            data.extend(std::iter::repeat(b'z').take(n));
+            data.extend_from_slice(b"TRAILER");
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn roundtrip_larger_than_window() {
+        // > 32 KiB with long-range repetition: matches must respect the
+        // 32 KiB distance limit
+        let unit: Vec<u8> = (0..=255u8).collect();
+        let mut data = Vec::new();
+        for i in 0..300 {
+            data.extend_from_slice(&unit);
+            data.push((i % 251) as u8);
+        }
+        assert!(data.len() > 64 * 1024);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn inflate_stored_block() {
+        // hand-built stored block: BFINAL=1, BTYPE=00
+        let payload = b"hello stored";
+        let mut raw = vec![0b0000_0001u8]; // final, stored, then align
+        raw.extend_from_slice(&(payload.len() as u16).to_le_bytes());
+        raw.extend_from_slice(&(!(payload.len() as u16)).to_le_bytes());
+        raw.extend_from_slice(payload);
+        assert_eq!(inflate(&raw).unwrap(), payload);
+    }
+
+    #[test]
+    fn inflate_rejects_garbage() {
+        assert!(inflate(&[]).is_err());
+        assert!(inflate(&[0x07, 0xFF, 0xFF]).is_err()); // reserved BTYPE=11
+        // truncated fixed block (no EOB)
+        let mut bw = BitWriter::new();
+        bw.write_bits(1, 1);
+        bw.write_bits(1, 2);
+        let bytes = bw.finish();
+        assert!(inflate(&bytes).is_err());
+    }
+
+    #[test]
+    fn inflate_rejects_too_far_distance() {
+        // fixed block: literal 'a', then a match with dist 4 (> output)
+        let mut bw = BitWriter::new();
+        bw.write_bits(1, 1);
+        bw.write_bits(1, 2);
+        write_litlen(&mut bw, b'a' as u16);
+        emit_match(&mut bw, 3, 4);
+        write_litlen(&mut bw, 256);
+        assert_eq!(
+            inflate(&bw.finish()).unwrap_err(),
+            InflateError("distance too far back")
+        );
+    }
+
+    #[test]
+    fn bitwriter_bitreader_agree() {
+        let mut bw = BitWriter::new();
+        bw.write_bits(0b101, 3);
+        bw.write_bits(0xBEEF & 0x3FFF, 14);
+        bw.write_bits(0, 0);
+        bw.write_bits(1, 1);
+        let bytes = bw.finish();
+        let mut br = BitReader::new(&bytes);
+        assert_eq!(br.read_bits(3).unwrap(), 0b101);
+        assert_eq!(br.read_bits(14).unwrap(), 0xBEEF & 0x3FFF);
+        assert_eq!(br.read_bits(0).unwrap(), 0);
+        assert_eq!(br.read_bits(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn huffman_rejects_oversubscribed() {
+        // three 1-bit codes cannot exist
+        assert!(Huffman::new(&[1, 1, 1]).is_err());
+        assert!(Huffman::new(&[0, 0, 0]).is_err());
+        assert!(Huffman::new(&[1, 1]).is_ok());
+    }
+}

@@ -1,0 +1,510 @@
+//! Minimal offline stand-in for the `zip` crate.
+//!
+//! PlantD's wire format is "one zip per vehicle transmission" and its
+//! unzipper stage performs real inflation, so this crate implements the
+//! subset of the zip container format the codebase needs — local file
+//! headers, a central directory, CRC-32 validation — on top of an
+//! in-house DEFLATE ([`flate`]). API names mirror the upstream `zip`
+//! crate (`ZipWriter`, `ZipArchive`, `write::FileOptions`,
+//! `CompressionMethod`) so call sites read identically.
+
+pub mod flate;
+
+use std::fmt;
+use std::io::{Read, Write};
+
+const LOCAL_SIG: u32 = 0x0403_4B50;
+const CENTRAL_SIG: u32 = 0x0201_4B50;
+const EOCD_SIG: u32 = 0x0605_4B50;
+
+/// Errors from reading or writing archives.
+#[derive(Debug)]
+pub enum ZipError {
+    /// Container structure is malformed (bad signature, truncated, …).
+    InvalidArchive(&'static str),
+    /// An entry's compressed payload failed to inflate or checksum.
+    InvalidData(&'static str),
+    /// Entry index out of range.
+    FileNotFound,
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ZipError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ZipError::InvalidArchive(m) => write!(f, "invalid zip archive: {m}"),
+            ZipError::InvalidData(m) => write!(f, "invalid zip entry data: {m}"),
+            ZipError::FileNotFound => write!(f, "zip entry index out of range"),
+            ZipError::Io(e) => write!(f, "zip io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ZipError {}
+
+impl From<std::io::Error> for ZipError {
+    fn from(e: std::io::Error) -> Self {
+        ZipError::Io(e)
+    }
+}
+
+/// Supported compression methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionMethod {
+    /// No compression (method 0).
+    Stored,
+    /// DEFLATE (method 8).
+    Deflated,
+}
+
+impl CompressionMethod {
+    fn code(self) -> u16 {
+        match self {
+            CompressionMethod::Stored => 0,
+            CompressionMethod::Deflated => 8,
+        }
+    }
+}
+
+/// Entry options, mirroring `zip::write::FileOptions`.
+pub mod write {
+    use super::CompressionMethod;
+
+    /// Per-entry settings for [`super::ZipWriter::start_file`].
+    #[derive(Debug, Clone, Copy)]
+    pub struct FileOptions {
+        pub(crate) method: CompressionMethod,
+    }
+
+    impl Default for FileOptions {
+        fn default() -> Self {
+            FileOptions {
+                method: CompressionMethod::Deflated,
+            }
+        }
+    }
+
+    impl FileOptions {
+        /// Choose the compression method.
+        pub fn compression_method(mut self, method: CompressionMethod) -> Self {
+            self.method = method;
+            self
+        }
+
+        /// Accepted for API compatibility; the vendored DEFLATE has a
+        /// single (fast) level.
+        pub fn compression_level(self, _level: Option<i32>) -> Self {
+            self
+        }
+    }
+}
+
+struct CentralRecord {
+    name: String,
+    method: u16,
+    crc32: u32,
+    compressed_size: u32,
+    uncompressed_size: u32,
+    local_offset: u32,
+}
+
+struct PendingEntry {
+    name: String,
+    method: CompressionMethod,
+    data: Vec<u8>,
+}
+
+/// Streaming archive writer: `start_file`, `Write` the contents, repeat,
+/// then `finish`.
+pub struct ZipWriter<W: Write> {
+    inner: W,
+    offset: u64,
+    records: Vec<CentralRecord>,
+    current: Option<PendingEntry>,
+}
+
+fn push_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+impl<W: Write> ZipWriter<W> {
+    /// Wrap a byte sink.
+    pub fn new(inner: W) -> Self {
+        ZipWriter {
+            inner,
+            offset: 0,
+            records: Vec::new(),
+            current: None,
+        }
+    }
+
+    /// Begin a new entry; subsequent `write` calls append to it.
+    pub fn start_file<S: Into<String>>(
+        &mut self,
+        name: S,
+        options: write::FileOptions,
+    ) -> Result<(), ZipError> {
+        self.flush_entry()?;
+        self.current = Some(PendingEntry {
+            name: name.into(),
+            method: options.method,
+            data: Vec::new(),
+        });
+        Ok(())
+    }
+
+    fn flush_entry(&mut self) -> Result<(), ZipError> {
+        let Some(entry) = self.current.take() else {
+            return Ok(());
+        };
+        let crc = crc32fast::hash(&entry.data);
+        let compressed = match entry.method {
+            CompressionMethod::Stored => entry.data.clone(),
+            CompressionMethod::Deflated => flate::deflate(&entry.data),
+        };
+        let name_bytes = entry.name.as_bytes();
+        let mut header = Vec::with_capacity(30 + name_bytes.len());
+        push_u32(&mut header, LOCAL_SIG);
+        push_u16(&mut header, 20); // version needed
+        push_u16(&mut header, 0); // flags
+        push_u16(&mut header, entry.method.code());
+        push_u16(&mut header, 0); // mod time
+        push_u16(&mut header, 0x21); // mod date (1980-01-01)
+        push_u32(&mut header, crc);
+        push_u32(&mut header, compressed.len() as u32);
+        push_u32(&mut header, entry.data.len() as u32);
+        push_u16(&mut header, name_bytes.len() as u16);
+        push_u16(&mut header, 0); // extra len
+        header.extend_from_slice(name_bytes);
+        self.inner.write_all(&header)?;
+        self.inner.write_all(&compressed)?;
+        self.records.push(CentralRecord {
+            name: entry.name,
+            method: entry.method.code(),
+            crc32: crc,
+            compressed_size: compressed.len() as u32,
+            uncompressed_size: entry.data.len() as u32,
+            local_offset: self.offset as u32,
+        });
+        self.offset += (header.len() + compressed.len()) as u64;
+        Ok(())
+    }
+
+    /// Flush the last entry, append the central directory, and return the
+    /// underlying sink.
+    pub fn finish(mut self) -> Result<W, ZipError> {
+        self.flush_entry()?;
+        let cd_offset = self.offset;
+        let mut cd = Vec::new();
+        for r in &self.records {
+            let name_bytes = r.name.as_bytes();
+            push_u32(&mut cd, CENTRAL_SIG);
+            push_u16(&mut cd, 20); // version made by
+            push_u16(&mut cd, 20); // version needed
+            push_u16(&mut cd, 0); // flags
+            push_u16(&mut cd, r.method);
+            push_u16(&mut cd, 0); // mod time
+            push_u16(&mut cd, 0x21); // mod date
+            push_u32(&mut cd, r.crc32);
+            push_u32(&mut cd, r.compressed_size);
+            push_u32(&mut cd, r.uncompressed_size);
+            push_u16(&mut cd, name_bytes.len() as u16);
+            push_u16(&mut cd, 0); // extra len
+            push_u16(&mut cd, 0); // comment len
+            push_u16(&mut cd, 0); // disk number
+            push_u16(&mut cd, 0); // internal attrs
+            push_u32(&mut cd, 0); // external attrs
+            push_u32(&mut cd, r.local_offset);
+            cd.extend_from_slice(name_bytes);
+        }
+        let mut eocd = Vec::with_capacity(22);
+        push_u32(&mut eocd, EOCD_SIG);
+        push_u16(&mut eocd, 0); // disk
+        push_u16(&mut eocd, 0); // cd start disk
+        push_u16(&mut eocd, self.records.len() as u16);
+        push_u16(&mut eocd, self.records.len() as u16);
+        push_u32(&mut eocd, cd.len() as u32);
+        push_u32(&mut eocd, cd_offset as u32);
+        push_u16(&mut eocd, 0); // comment len
+        self.inner.write_all(&cd)?;
+        self.inner.write_all(&eocd)?;
+        Ok(self.inner)
+    }
+}
+
+impl<W: Write> Write for ZipWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match &mut self.current {
+            Some(entry) => {
+                entry.data.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "no entry started (call start_file first)",
+            )),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+struct EntryMeta {
+    name: String,
+    method: u16,
+    crc32: u32,
+    compressed_size: u32,
+    uncompressed_size: u32,
+    local_offset: u32,
+}
+
+/// Archive reader: parses the central directory eagerly, decompresses
+/// entries on access.
+pub struct ZipArchive {
+    bytes: Vec<u8>,
+    entries: Vec<EntryMeta>,
+}
+
+fn get_u16(b: &[u8], at: usize) -> Result<u16, ZipError> {
+    b.get(at..at + 2)
+        .map(|s| u16::from_le_bytes([s[0], s[1]]))
+        .ok_or(ZipError::InvalidArchive("truncated"))
+}
+
+fn get_u32(b: &[u8], at: usize) -> Result<u32, ZipError> {
+    b.get(at..at + 4)
+        .map(|s| u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+        .ok_or(ZipError::InvalidArchive("truncated"))
+}
+
+impl ZipArchive {
+    /// Read the full stream and parse its central directory.
+    pub fn new<R: Read>(mut reader: R) -> Result<ZipArchive, ZipError> {
+        let mut bytes = Vec::new();
+        reader.read_to_end(&mut bytes)?;
+        // locate the end-of-central-directory record: scan back for the
+        // signature (the record is 22 bytes plus an optional comment)
+        if bytes.len() < 22 {
+            return Err(ZipError::InvalidArchive("too short for EOCD"));
+        }
+        let mut eocd_at = None;
+        let lo = bytes.len().saturating_sub(22 + u16::MAX as usize);
+        for at in (lo..=bytes.len() - 22).rev() {
+            if get_u32(&bytes, at)? == EOCD_SIG {
+                eocd_at = Some(at);
+                break;
+            }
+        }
+        let eocd = eocd_at.ok_or(ZipError::InvalidArchive("no EOCD signature"))?;
+        let n_entries = get_u16(&bytes, eocd + 10)? as usize;
+        let cd_offset = get_u32(&bytes, eocd + 16)? as usize;
+        let mut entries = Vec::with_capacity(n_entries);
+        let mut at = cd_offset;
+        for _ in 0..n_entries {
+            if get_u32(&bytes, at)? != CENTRAL_SIG {
+                return Err(ZipError::InvalidArchive("bad central directory entry"));
+            }
+            let method = get_u16(&bytes, at + 10)?;
+            let crc32 = get_u32(&bytes, at + 16)?;
+            let compressed_size = get_u32(&bytes, at + 20)?;
+            let uncompressed_size = get_u32(&bytes, at + 24)?;
+            let name_len = get_u16(&bytes, at + 28)? as usize;
+            let extra_len = get_u16(&bytes, at + 30)? as usize;
+            let comment_len = get_u16(&bytes, at + 32)? as usize;
+            let local_offset = get_u32(&bytes, at + 42)?;
+            let name_bytes = bytes
+                .get(at + 46..at + 46 + name_len)
+                .ok_or(ZipError::InvalidArchive("truncated entry name"))?;
+            let name = String::from_utf8_lossy(name_bytes).into_owned();
+            entries.push(EntryMeta {
+                name,
+                method,
+                crc32,
+                compressed_size,
+                uncompressed_size,
+                local_offset,
+            });
+            at += 46 + name_len + extra_len + comment_len;
+        }
+        Ok(ZipArchive { bytes, entries })
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the archive has no entries.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Decompress and checksum entry `i`.
+    pub fn by_index(&mut self, i: usize) -> Result<ZipFile, ZipError> {
+        let meta = self.entries.get(i).ok_or(ZipError::FileNotFound)?;
+        let at = meta.local_offset as usize;
+        if get_u32(&self.bytes, at)? != LOCAL_SIG {
+            return Err(ZipError::InvalidArchive("bad local header signature"));
+        }
+        // the local header's own name/extra lengths govern the data offset
+        let name_len = get_u16(&self.bytes, at + 26)? as usize;
+        let extra_len = get_u16(&self.bytes, at + 28)? as usize;
+        let data_at = at + 30 + name_len + extra_len;
+        let compressed = self
+            .bytes
+            .get(data_at..data_at + meta.compressed_size as usize)
+            .ok_or(ZipError::InvalidArchive("truncated entry data"))?;
+        let data = match meta.method {
+            0 => compressed.to_vec(),
+            8 => flate::inflate(compressed)
+                .map_err(|e| ZipError::InvalidData(e.0))?,
+            _ => return Err(ZipError::InvalidData("unsupported compression method")),
+        };
+        if data.len() as u32 != meta.uncompressed_size {
+            return Err(ZipError::InvalidData("uncompressed size mismatch"));
+        }
+        if crc32fast::hash(&data) != meta.crc32 {
+            return Err(ZipError::InvalidData("crc32 mismatch"));
+        }
+        Ok(ZipFile {
+            name: meta.name.clone(),
+            data,
+            read_pos: 0,
+        })
+    }
+}
+
+/// One decompressed entry; implements [`Read`] over its contents.
+pub struct ZipFile {
+    name: String,
+    data: Vec<u8>,
+    read_pos: usize,
+}
+
+impl ZipFile {
+    /// Entry name (path inside the archive).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Uncompressed size in bytes.
+    pub fn size(&self) -> u64 {
+        self.data.len() as u64
+    }
+}
+
+impl Read for ZipFile {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(self.data.len() - self.read_pos);
+        buf[..n].copy_from_slice(&self.data[self.read_pos..self.read_pos + n]);
+        self.read_pos += n;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn build(entries: &[(&str, &[u8])], method: CompressionMethod) -> Vec<u8> {
+        let mut cursor = Cursor::new(Vec::new());
+        {
+            let mut zw = ZipWriter::new(&mut cursor);
+            let opts = write::FileOptions::default()
+                .compression_method(method)
+                .compression_level(Some(1));
+            for (name, data) in entries {
+                zw.start_file(*name, opts).unwrap();
+                zw.write_all(data).unwrap();
+            }
+            zw.finish().unwrap();
+        }
+        cursor.into_inner()
+    }
+
+    fn read_all(bytes: &[u8]) -> Vec<(String, Vec<u8>)> {
+        let mut archive = ZipArchive::new(Cursor::new(bytes)).unwrap();
+        (0..archive.len())
+            .map(|i| {
+                let mut f = archive.by_index(i).unwrap();
+                let mut buf = Vec::with_capacity(f.size() as usize);
+                f.read_to_end(&mut buf).unwrap();
+                (f.name().to_string(), buf)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_deflated_members() {
+        let a = vec![7u8; 4000];
+        let b: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let zip = build(&[("a.bin", &a), ("dir/b.bin", &b)], CompressionMethod::Deflated);
+        let got = read_all(&zip);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], ("a.bin".to_string(), a.clone()));
+        assert_eq!(got[1], ("dir/b.bin".to_string(), b));
+        // the repetitive member must actually compress
+        assert!(zip.len() < 4000, "archive {} bytes", zip.len());
+    }
+
+    #[test]
+    fn roundtrip_stored_members() {
+        let data = b"store me plainly".to_vec();
+        let zip = build(&[("s.txt", &data)], CompressionMethod::Stored);
+        assert_eq!(read_all(&zip), vec![("s.txt".to_string(), data)]);
+    }
+
+    #[test]
+    fn roundtrip_empty_entry_and_empty_archive() {
+        let zip = build(&[("empty", b"")], CompressionMethod::Deflated);
+        assert_eq!(read_all(&zip), vec![("empty".to_string(), Vec::new())]);
+        let none = build(&[], CompressionMethod::Deflated);
+        let archive = ZipArchive::new(Cursor::new(&none[..])).unwrap();
+        assert!(archive.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ZipArchive::new(Cursor::new(b"not a zip" as &[u8])).is_err());
+        assert!(ZipArchive::new(Cursor::new(b"" as &[u8])).is_err());
+    }
+
+    #[test]
+    fn detects_payload_corruption() {
+        let data = vec![0x5Au8; 2048];
+        let mut zip = build(&[("x", &data)], CompressionMethod::Deflated);
+        // flip a byte inside the compressed payload (after the 30+1 byte
+        // local header, before the central directory)
+        zip[40] ^= 0xFF;
+        let mut archive = ZipArchive::new(Cursor::new(&zip[..])).unwrap();
+        assert!(archive.by_index(0).is_err());
+    }
+
+    #[test]
+    fn by_index_out_of_range() {
+        let zip = build(&[("x", b"1")], CompressionMethod::Deflated);
+        let mut archive = ZipArchive::new(Cursor::new(&zip[..])).unwrap();
+        assert!(matches!(archive.by_index(5), Err(ZipError::FileNotFound)));
+    }
+
+    #[test]
+    fn many_members_order_preserved() {
+        let members: Vec<(String, Vec<u8>)> = (0..20)
+            .map(|i| (format!("m{i}.bin"), vec![i as u8; 100 + i]))
+            .collect();
+        let refs: Vec<(&str, &[u8])> = members
+            .iter()
+            .map(|(n, d)| (n.as_str(), d.as_slice()))
+            .collect();
+        let zip = build(&refs, CompressionMethod::Deflated);
+        assert_eq!(read_all(&zip), members);
+    }
+}
