@@ -1,0 +1,86 @@
+//! Sim-kernel campaign throughput: cells/second for a fixed 3×3×2 grid.
+//!
+//! This is the perf-trajectory anchor for the shared DES kernel: every
+//! cell is a full discrete-event simulation (three stations, fan-out,
+//! pre-sampled jitter, isolated telemetry + cost meters), and the grid
+//! mixes the paper's ramp/steady loads with a burst case across two
+//! dataset sizes. The result lands in `BENCH_sim.json` so CI can record
+//! cells/sec over time.
+//!
+//! Run: `cargo bench --bench sim_campaign`
+
+use plantd::campaign::{Campaign, CampaignRunner};
+use plantd::datagen::DataSetSpec;
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::util::bench;
+use plantd::util::json::Json;
+
+fn fixed_grid(seed: u64) -> Campaign {
+    Campaign::new("bench-3x3x2", seed)
+        .variant(VariantConfig::blocking_write())
+        .variant(VariantConfig::no_blocking_write())
+        .variant(VariantConfig::cpu_limited())
+        .load("ramp-0-20", LoadPattern::ramp(60.0, 0.0, 20.0))
+        .load("steady-2rps", LoadPattern::steady(60.0, 2.0))
+        .load("burst-4x", LoadPattern::bursty(60.0, 1.0, 15.0, 4.0, 4.0))
+        .dataset(
+            "fleet-small",
+            DataSetSpec {
+                payloads: 16,
+                records_per_subsystem: 4,
+                bad_rate: 0.01,
+                seed: 0,
+            },
+        )
+        .dataset(
+            "fleet-large",
+            DataSetSpec {
+                payloads: 32,
+                records_per_subsystem: 12,
+                bad_rate: 0.01,
+                seed: 0,
+            },
+        )
+}
+
+fn main() {
+    let campaign = fixed_grid(0xBE7C);
+    let n_cells = campaign.n_cells() as u64;
+    assert_eq!(n_cells, 18, "the bench grid is fixed at 3x3x2");
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+    let runner = CampaignRunner::new(threads);
+
+    let (result, report) = bench::run("sim/campaign-3x3x2-cells", 1, 5, || {
+        runner.run(&campaign)
+    });
+    assert_eq!(report.cells.len(), 18);
+    let cells_per_s = bench::throughput(n_cells, &result);
+    println!(
+        "sim kernel: {n_cells} cells in {:.3}s mean -> {:.1} cells/s on {threads} threads",
+        result.mean_s, cells_per_s
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("sim_campaign")),
+        ("grid", Json::str("3x3x2")),
+        ("cells", Json::num(n_cells as f64)),
+        ("threads", Json::num(threads as f64)),
+        ("iters", Json::num(result.iters as f64)),
+        ("mean_s", Json::num(result.mean_s)),
+        ("min_s", Json::num(result.min_s)),
+        ("max_s", Json::num(result.max_s)),
+        ("cells_per_s", Json::num(cells_per_s)),
+    ]);
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // emit at the workspace root where CI (and humans) look for it
+    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|ws| ws.join("BENCH_sim.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_sim.json"));
+    std::fs::write(&out_path, json.to_string_pretty()).expect("write BENCH_sim.json");
+    println!("wrote {}", out_path.display());
+}

@@ -1,0 +1,296 @@
+//! Single-cell execution on the shared [`crate::sim`] kernel.
+//!
+//! A campaign cell is a deterministic discrete-event simulation of the
+//! three-stage tandem queue (same service-time model, write-mode
+//! semantics, and warehouse insert-latency model as the threaded wind
+//! tunnel in [`crate::pipeline`]). The event loop itself lives in
+//! [`crate::sim::Tandem`]; this module supplies the *model*: pre-sampled
+//! service times, span emission, and the cost/telemetry bookkeeping.
+//!
+//! ## Bit-replayability
+//!
+//! Service-time jitter is sampled from the cell's derived seed in a fixed
+//! order — per send: unzipper, then per member: v2x, etl — *before* the
+//! event loop runs. Sampling order therefore never depends on event
+//! interleaving, and a cell's report is a pure function of
+//! `(seed, variant, load, dataset)`: the refactor onto the shared kernel
+//! reproduced the embedded simulator's reports byte-for-byte.
+
+use crate::cloud::{Cloud, Resources};
+use crate::cost::PriceBook;
+use crate::datagen::package::unpack_vehicle_zip;
+use crate::datagen::{decode_subsystem_binary, DataSet, SUBSYSTEMS};
+use crate::pipeline::{EtlStage, WriteMode};
+use crate::sim::{Served, StationConfig, Tandem};
+use crate::telemetry::{Collector, Span, SpanSink, Tsdb};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::report::CellResult;
+use super::CellSpec;
+
+/// Small multiplicative service-time jitter (deterministic per cell).
+fn jitter(rng: &mut Rng) -> f64 {
+    (1.0 + 0.03 * rng.normal(0.0, 1.0)).clamp(0.7, 1.3)
+}
+
+/// Per-member decoded facts, inflated once per dataset.
+pub(crate) struct MemberInfo {
+    pub(crate) bytes: usize,
+    pub(crate) rows: usize,
+}
+
+/// Inflate every payload of a dataset once: member sizes + row counts.
+///
+/// Campaign datasets are self-generated, so a decode failure is a
+/// datagen/zip regression — panic loudly rather than let a zero-file
+/// cell "win" the ranking with an absurd throughput.
+pub(crate) fn decode_members(dataset: &DataSet) -> Vec<Vec<MemberInfo>> {
+    dataset
+        .payloads
+        .iter()
+        .map(|p| {
+            let members = unpack_vehicle_zip(&p.zip_bytes).unwrap_or_else(|e| {
+                panic!("campaign payload for VIN {} failed to unzip: {e}", p.vin)
+            });
+            members
+                .into_iter()
+                .map(|(name, bin)| {
+                    let (idx, recs) =
+                        decode_subsystem_binary(&bin).unwrap_or_else(|e| {
+                            panic!("campaign member '{name}' failed to decode: {e}")
+                        });
+                    MemberInfo {
+                        bytes: bin.len(),
+                        rows: recs.len() * SUBSYSTEMS[idx].1.len(),
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Pre-sampled service times for one send's traversal of the tandem.
+struct SendPlan {
+    t_send: f64,
+    zip_bytes: u64,
+    svc_unzipper: f64,
+    /// Per member: (v2x service incl. any blocking put, etl service incl.
+    /// insert latency, member bytes, expanded row count).
+    members: Vec<(f64, f64, u64, u64)>,
+}
+
+/// The job type flowing through the cell's tandem: a zip at station 0,
+/// one subsystem member at stations 1–2.
+#[derive(Clone, Copy)]
+enum CellMsg {
+    Zip { send: usize },
+    Member { send: usize, member: usize },
+}
+
+/// Execute one cell: the three-station tandem on the shared DES kernel,
+/// with isolated telemetry and cost meters.
+pub(crate) fn run_cell(
+    spec: &CellSpec,
+    dataset: &DataSet,
+    members: &[Vec<MemberInfo>],
+    prices: &PriceBook,
+) -> CellResult {
+    let cfg = &spec.variant;
+    let mut rng = Rng::new(spec.seed);
+    let sends = spec.load.pattern.send_times();
+
+    // isolated telemetry for this cell
+    let spans = SpanSink::new();
+    let tsdb = Tsdb::new();
+
+    // Pre-sample the modeled service times in the fixed (send, member)
+    // order — the exact RNG consumption order the embedded simulator
+    // used, so same-seed cells replay byte-identically.
+    let plans: Vec<SendPlan> = sends
+        .iter()
+        .enumerate()
+        .map(|(i, &t_send)| {
+            let payload = dataset.payload(i);
+            let pm = &members[i % members.len()];
+            let svc_unzipper = cfg.unzipper_service_s * jitter(&mut rng);
+            let members = pm
+                .iter()
+                .map(|m| {
+                    // the blocking variant pays the blob put on the v2x
+                    // critical path (the paper's defect)
+                    let io_s = match cfg.write_mode {
+                        WriteMode::Blocking => cfg.blob_latency.put_latency_s(m.bytes),
+                        WriteMode::NonBlocking => 0.0,
+                    };
+                    let svc_v2x =
+                        cfg.v2x_parse_s * cfg.v2x_throttle * jitter(&mut rng) + io_s;
+                    // etl: scrub + schema'd insert (same latency model as
+                    // the threaded pipeline's warehouse table)
+                    let svc_etl = cfg.etl_service_s * jitter(&mut rng)
+                        + EtlStage::INSERT_LATENCY.per_batch_s
+                        + EtlStage::INSERT_LATENCY.per_row_s * m.rows as f64;
+                    (svc_v2x, svc_etl, m.bytes as u64, m.rows as u64)
+                })
+                .collect();
+            SendPlan {
+                t_send,
+                zip_bytes: payload.zip_bytes.len() as u64,
+                svc_unzipper,
+                members,
+            }
+        })
+        .collect();
+
+    // one single-server FIFO station per stage, like the threaded
+    // pipeline (one StageRunner thread per stage)
+    let tandem: Tandem<CellMsg> = Tandem::new(vec![
+        StationConfig::single("unzipper_phase"),
+        StationConfig::single("v2x_phase"),
+        StationConfig::single("etl_phase"),
+    ]);
+
+    let mut puts = 0u64;
+    let outcome = tandem.run(
+        plans
+            .iter()
+            .enumerate()
+            .map(|(send, p)| (p.t_send, CellMsg::Zip { send })),
+        |station, start, batch| {
+            let msg = batch[0];
+            match (station, msg) {
+                // unzipper_phase: inflate + forward; raw zip persisted async
+                (0, CellMsg::Zip { send }) => {
+                    let p = &plans[send];
+                    puts += 1;
+                    spans.push(Span {
+                        trace_id: send as u64,
+                        stage: "unzipper_phase",
+                        start_s: start,
+                        duration_s: p.svc_unzipper,
+                        records: 1,
+                        bytes: p.zip_bytes,
+                        ok: true,
+                    });
+                    Served {
+                        service_s: p.svc_unzipper,
+                        next: (0..p.members.len())
+                            .map(|member| CellMsg::Member { send, member })
+                            .collect(),
+                    }
+                }
+                // v2x_phase: decode + columnarize (+ blocking put)
+                (1, CellMsg::Member { send, member }) => {
+                    let (svc_v2x, _, bytes, _) = plans[send].members[member];
+                    puts += 1;
+                    spans.push(Span {
+                        trace_id: send as u64,
+                        stage: "v2x_phase",
+                        start_s: start,
+                        duration_s: svc_v2x,
+                        records: 1,
+                        bytes,
+                        ok: true,
+                    });
+                    Served {
+                        service_s: svc_v2x,
+                        next: vec![msg],
+                    }
+                }
+                // etl_phase: scrub + schema'd insert
+                (2, CellMsg::Member { send, member }) => {
+                    let (_, svc_etl, _, rows) = plans[send].members[member];
+                    spans.push(Span {
+                        trace_id: send as u64,
+                        stage: "etl_phase",
+                        start_s: start,
+                        duration_s: svc_etl,
+                        records: rows,
+                        bytes: rows * 40,
+                        ok: true,
+                    });
+                    Served {
+                        service_s: svc_etl,
+                        next: vec![],
+                    }
+                }
+                _ => unreachable!("zip jobs exist only at station 0"),
+            }
+        },
+    );
+
+    // per-member end-to-end latencies, in completion (= FIFO) order
+    let mut latencies: Vec<f64> = Vec::with_capacity(outcome.completions.len());
+    let mut rows_total = 0u64;
+    let mut files_total = 0u64;
+    let mut last_done = 0.0f64;
+    for (done, msg) in &outcome.completions {
+        if let CellMsg::Member { send, member } = *msg {
+            let (_, _, _, rows) = plans[send].members[member];
+            rows_total += rows;
+            files_total += 1;
+            latencies.push(done - plans[send].t_send);
+            last_done = last_done.max(*done);
+        }
+    }
+    let busy: Vec<f64> = outcome.stations.iter().map(|s| s.busy_s).collect();
+
+    // collect spans into the cell's isolated TSDB
+    let collector = Collector::new(tsdb.clone());
+    let spans_collected = collector.collect_from(&spans) as u64;
+
+    // isolated cost meter: deploy this cell's containers on its own
+    // simulated cloud and meter the stages' busy time against them
+    let cloud = Cloud::new();
+    cloud.add_node("campaign-node", Resources::new(16.0, 64.0), 0.40);
+    let window = last_done.max(1e-9);
+    let mut metered_cpu_s = 0.0;
+    let stage_containers = ["unzipper", "v2x", "etl"];
+    for (cname, res) in &cfg.containers {
+        let c = cloud.deploy(
+            &format!("campaign/{}/{}", cfg.name, cname),
+            &format!("campaign-{}", cfg.name),
+            "campaign-node",
+            *res,
+        );
+        if let Some(si) = stage_containers.iter().position(|s| s == cname) {
+            c.record_usage(0.0, window, busy[si], res.mem_gb);
+            metered_cpu_s += c.usage().total_cpu_core_s();
+        }
+    }
+
+    let first_send = sends.first().copied().unwrap_or(0.0);
+    let duration_s = (last_done - first_send).max(1e-9);
+    let zips = sends.len() as u64;
+    let throughput_rps = zips as f64 / duration_s;
+    let cost_per_hr_usd = cfg.cost_per_hr(prices);
+    let run_cost_usd =
+        cost_per_hr_usd * window / 3600.0 + puts as f64 * prices.blob_put_per_1k / 1000.0;
+    let cost_per_record_usd = if zips > 0 {
+        run_cost_usd / zips as f64
+    } else {
+        f64::NAN
+    };
+
+    CellResult {
+        variant: cfg.name.to_string(),
+        load: spec.load.name.clone(),
+        dataset: spec.dataset_name.clone(),
+        seed: spec.seed,
+        zips,
+        files: files_total,
+        rows: rows_total,
+        duration_s,
+        throughput_rps,
+        latency_mean_s: stats::mean(&latencies),
+        latency_p50_s: stats::quantile(&latencies, 0.5),
+        latency_p95_s: stats::quantile(&latencies, 0.95),
+        latency_p99_s: stats::quantile(&latencies, 0.99),
+        cost_per_hr_usd,
+        run_cost_usd,
+        annual_cost_usd: cost_per_hr_usd * 8760.0,
+        cost_per_record_usd,
+        spans_collected,
+        metered_cpu_s,
+    }
+}

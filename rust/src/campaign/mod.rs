@@ -8,6 +8,14 @@
 //! executes every cell of that grid on a thread pool and aggregates a
 //! ranked [`CampaignReport`].
 //!
+//! The module splits along its three concerns:
+//!
+//! - `mod.rs` (this file) — the grid: [`Campaign`], [`CellSpec`], and the
+//!   thread-pooled [`CampaignRunner`];
+//! - `cell` (private) — single-cell execution on the shared
+//!   [`crate::sim`] discrete-event kernel;
+//! - `report` — [`CellResult`] / [`CampaignReport`] data and rendering.
+//!
 //! ## Determinism
 //!
 //! Campaign cells run through a *deterministic discrete-event simulation*
@@ -29,22 +37,22 @@
 //!   own simulated-cloud cost meter, so a 4-thread run equals a serial
 //!   run cell-for-cell.
 //!
-//! See `docs/CAMPAIGNS.md` for the full model and how to read a report.
+//! See `docs/CAMPAIGNS.md` for the full model and how to read a report,
+//! and `docs/SIMULATION.md` for the underlying kernel.
+
+mod cell;
+mod report;
+
+pub use report::{CampaignReport, CellResult};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::cloud::{Cloud, Resources};
 use crate::cost::PriceBook;
-use crate::datagen::package::unpack_vehicle_zip;
-use crate::datagen::{decode_subsystem_binary, DataSet, DataSetSpec, SUBSYSTEMS};
+use crate::datagen::{DataSet, DataSetSpec};
 use crate::loadgen::LoadPattern;
-use crate::pipeline::{EtlStage, VariantConfig, WriteMode};
-use crate::telemetry::{Collector, Span, SpanSink, Tsdb};
-use crate::util::json::Json;
-use crate::util::rng::Rng;
-use crate::util::stats;
-use crate::util::table::{fnum, Table};
+use crate::pipeline::VariantConfig;
+use crate::sim::derive_seed;
 
 /// A named load pattern inside a campaign grid.
 #[derive(Debug, Clone)]
@@ -125,19 +133,6 @@ pub struct CellSpec {
     pub seed: u64,
 }
 
-/// SplitMix64-style seed derivation (same constants as `util::rng`).
-fn derive_seed(base: u64, tags: [u64; 3]) -> u64 {
-    let mut x = base ^ 0x5EED_CA3D_CAFE_F00D;
-    for t in tags {
-        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15).wrapping_add(t);
-        let mut z = x;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        x = z ^ (z >> 31);
-    }
-    x
-}
-
 impl Campaign {
     /// Start an empty campaign with a master seed.
     pub fn new(name: &str, seed: u64) -> Self {
@@ -202,6 +197,17 @@ impl Campaign {
             )
     }
 
+    /// [`Campaign::paper_automotive`] plus the burst-style load cases the
+    /// shared kernel unlocked: a periodic rectangular burst (quiet
+    /// 1.5 rps punctuated by 6-second 4.5 rps spikes) and a descending
+    /// recovery ramp. Scenario diversity in the ESPBench sense — same
+    /// variants, same dataset, harder arrival processes.
+    pub fn paper_automotive_extended(seed: u64) -> Self {
+        Campaign::paper_automotive(seed)
+            .load("burst-3x", LoadPattern::bursty(120.0, 1.5, 30.0, 6.0, 4.5))
+            .load("drain-40-0", LoadPattern::ramp(120.0, 40.0, 0.0))
+    }
+
     /// Number of grid cells (product of the three axes).
     pub fn n_cells(&self) -> usize {
         self.variants.len() * self.loads.len() * self.datasets.len()
@@ -245,184 +251,6 @@ impl Campaign {
     }
 }
 
-/// Everything measured for one executed campaign cell.
-#[derive(Debug, Clone)]
-pub struct CellResult {
-    /// Variant name.
-    pub variant: String,
-    /// Load case name.
-    pub load: String,
-    /// Dataset case name.
-    pub dataset: String,
-    /// The cell's derived seed (replay handle).
-    pub seed: u64,
-    /// Vehicle transmissions offered and processed.
-    pub zips: u64,
-    /// Subsystem files processed (≈ 5 × zips).
-    pub files: u64,
-    /// Warehouse rows loaded.
-    pub rows: u64,
-    /// Virtual seconds from first send to final drain.
-    pub duration_s: f64,
-    /// Sustained throughput, transmissions/second.
-    pub throughput_rps: f64,
-    /// Mean end-to-end (ingest → warehouse) latency, seconds.
-    pub latency_mean_s: f64,
-    /// Median end-to-end latency, seconds.
-    pub latency_p50_s: f64,
-    /// 95th-percentile end-to-end latency, seconds.
-    pub latency_p95_s: f64,
-    /// 99th-percentile end-to-end latency, seconds.
-    pub latency_p99_s: f64,
-    /// Fixed cost rate from container sizing, USD/hour.
-    pub cost_per_hr_usd: f64,
-    /// Prorated cost of this cell's run (containers + blob puts), USD.
-    pub run_cost_usd: f64,
-    /// Projected cost of operating the variant for a year, USD.
-    pub annual_cost_usd: f64,
-    /// Cost per processed transmission at sustained throughput, USD.
-    pub cost_per_record_usd: f64,
-    /// Spans collected into this cell's isolated TSDB.
-    pub spans_collected: u64,
-    /// CPU core-seconds metered against this cell's isolated cloud.
-    pub metered_cpu_s: f64,
-}
-
-impl CellResult {
-    /// Ranking score: transmissions processed per dollar of fixed cost
-    /// (records/hour ÷ $/hour). Higher is better.
-    pub fn records_per_dollar(&self) -> f64 {
-        if self.cost_per_hr_usd <= 0.0 {
-            f64::INFINITY
-        } else {
-            self.throughput_rps * 3600.0 / self.cost_per_hr_usd
-        }
-    }
-
-    fn label(&self) -> String {
-        format!("{} × {} × {}", self.variant, self.load, self.dataset)
-    }
-
-    fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("variant", Json::str(self.variant.clone())),
-            ("load", Json::str(self.load.clone())),
-            ("dataset", Json::str(self.dataset.clone())),
-            ("seed", Json::str(format!("{:#018x}", self.seed))),
-            ("zips", Json::num(self.zips as f64)),
-            ("files", Json::num(self.files as f64)),
-            ("rows", Json::num(self.rows as f64)),
-            ("duration_s", Json::num(self.duration_s)),
-            ("throughput_rps", Json::num(self.throughput_rps)),
-            ("latency_mean_s", Json::num(self.latency_mean_s)),
-            ("latency_p50_s", Json::num(self.latency_p50_s)),
-            ("latency_p95_s", Json::num(self.latency_p95_s)),
-            ("latency_p99_s", Json::num(self.latency_p99_s)),
-            ("cost_per_hr_usd", Json::num(self.cost_per_hr_usd)),
-            ("run_cost_usd", Json::num(self.run_cost_usd)),
-            ("annual_cost_usd", Json::num(self.annual_cost_usd)),
-            ("cost_per_record_usd", Json::num(self.cost_per_record_usd)),
-            ("spans_collected", Json::num(self.spans_collected as f64)),
-            ("metered_cpu_s", Json::num(self.metered_cpu_s)),
-        ])
-    }
-}
-
-/// Aggregated results of one campaign execution.
-#[derive(Debug, Clone)]
-pub struct CampaignReport {
-    /// Campaign name.
-    pub campaign: String,
-    /// Master seed the campaign ran with.
-    pub seed: u64,
-    /// One result per grid cell, in grid (row-major) order.
-    pub cells: Vec<CellResult>,
-}
-
-impl CampaignReport {
-    /// Cells sorted best-first by [`CellResult::records_per_dollar`],
-    /// ties broken by throughput then by label (fully deterministic).
-    pub fn ranking(&self) -> Vec<&CellResult> {
-        let mut refs: Vec<&CellResult> = self.cells.iter().collect();
-        refs.sort_by(|a, b| {
-            b.records_per_dollar()
-                .partial_cmp(&a.records_per_dollar())
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then_with(|| {
-                    b.throughput_rps
-                        .partial_cmp(&a.throughput_rps)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                })
-                .then_with(|| a.label().cmp(&b.label()))
-        });
-        refs
-    }
-
-    /// Render the per-cell table plus the cross-cell ranking as ASCII.
-    pub fn render(&self) -> String {
-        let mut t = Table::new(&[
-            "variant",
-            "load",
-            "dataset",
-            "zips",
-            "thr (z/s)",
-            "p50 (s)",
-            "p95 (s)",
-            "p99 (s)",
-            "$/hr",
-            "annual $",
-            "rec/$",
-        ])
-        .with_title(&format!(
-            "CAMPAIGN '{}' (seed {:#x}): {} cells",
-            self.campaign,
-            self.seed,
-            self.cells.len()
-        ));
-        for c in &self.cells {
-            t.row(vec![
-                c.variant.clone(),
-                c.load.clone(),
-                c.dataset.clone(),
-                c.zips.to_string(),
-                fnum(c.throughput_rps, 2),
-                fnum(c.latency_p50_s, 3),
-                fnum(c.latency_p95_s, 3),
-                fnum(c.latency_p99_s, 3),
-                fnum(c.cost_per_hr_usd, 4),
-                fnum(c.annual_cost_usd, 2),
-                fnum(c.records_per_dollar(), 0),
-            ]);
-        }
-        let mut out = t.render();
-        out.push_str("\nranking (transmissions per fixed-cost dollar):\n");
-        for (i, c) in self.ranking().iter().enumerate() {
-            out.push_str(&format!(
-                "  #{} {:<55} {:>10} rec/$  ({:.2} z/s at ${:.4}/hr)\n",
-                i + 1,
-                c.label(),
-                fnum(c.records_per_dollar(), 0),
-                c.throughput_rps,
-                c.cost_per_hr_usd,
-            ));
-        }
-        out
-    }
-
-    /// Canonical JSON form (sorted keys, cells in grid order). Two
-    /// same-seed campaign executions serialize byte-identically.
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("campaign", Json::str(self.campaign.clone())),
-            ("seed", Json::str(format!("{:#018x}", self.seed))),
-            (
-                "cells",
-                Json::arr(self.cells.iter().map(CellResult::to_json)),
-            ),
-        ])
-    }
-}
-
 /// Thread-pooled executor for [`Campaign`]s.
 pub struct CampaignRunner {
     /// Worker threads (cells in flight at once). Clamped to ≥ 1.
@@ -456,8 +284,8 @@ impl CampaignRunner {
         let datasets = campaign.build_datasets();
         // real inflation once per dataset (it is shared read-only across
         // every cell in that column), not once per cell
-        let members: Vec<Vec<Vec<MemberInfo>>> =
-            datasets.iter().map(decode_members).collect();
+        let members: Vec<Vec<Vec<cell::MemberInfo>>> =
+            datasets.iter().map(cell::decode_members).collect();
         let n = specs.len();
         let next = AtomicUsize::new(0);
         let results: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; n]);
@@ -470,7 +298,7 @@ impl CampaignRunner {
                         break;
                     }
                     let spec = &specs[i];
-                    let result = run_cell(
+                    let result = cell::run_cell(
                         spec,
                         &datasets[spec.dataset_index],
                         &members[spec.dataset_index],
@@ -491,203 +319,6 @@ impl CampaignRunner {
             seed: campaign.seed,
             cells,
         }
-    }
-}
-
-/// Small multiplicative service-time jitter (deterministic per cell).
-fn jitter(rng: &mut Rng) -> f64 {
-    (1.0 + 0.03 * rng.normal(0.0, 1.0)).clamp(0.7, 1.3)
-}
-
-
-struct MemberInfo {
-    bytes: usize,
-    rows: usize,
-}
-
-/// Inflate every payload of a dataset once: member sizes + row counts.
-///
-/// Campaign datasets are self-generated, so a decode failure is a
-/// datagen/zip regression — panic loudly rather than let a zero-file
-/// cell "win" the ranking with an absurd throughput.
-fn decode_members(dataset: &DataSet) -> Vec<Vec<MemberInfo>> {
-    dataset
-        .payloads
-        .iter()
-        .map(|p| {
-            let members = unpack_vehicle_zip(&p.zip_bytes).unwrap_or_else(|e| {
-                panic!("campaign payload for VIN {} failed to unzip: {e}", p.vin)
-            });
-            members
-                .into_iter()
-                .map(|(name, bin)| {
-                    let (idx, recs) =
-                        decode_subsystem_binary(&bin).unwrap_or_else(|e| {
-                            panic!("campaign member '{name}' failed to decode: {e}")
-                        });
-                    MemberInfo {
-                        bytes: bin.len(),
-                        rows: recs.len() * SUBSYSTEMS[idx].1.len(),
-                    }
-                })
-                .collect()
-        })
-        .collect()
-}
-
-/// Execute one cell: a deterministic discrete-event simulation of the
-/// three-stage tandem queue, with isolated telemetry and cost meters.
-fn run_cell(
-    spec: &CellSpec,
-    dataset: &DataSet,
-    members: &[Vec<MemberInfo>],
-    prices: &PriceBook,
-) -> CellResult {
-    let cfg = &spec.variant;
-    let mut rng = Rng::new(spec.seed);
-    let sends = spec.load.pattern.send_times();
-
-    // isolated telemetry for this cell
-    let spans = SpanSink::new();
-    let tsdb = Tsdb::new();
-
-    // tandem-queue DES: one server per stage, FIFO, like the threaded
-    // pipeline (one StageRunner thread per stage)
-    let mut unz_free = 0.0f64;
-    let mut v2x_free = 0.0f64;
-    let mut etl_free = 0.0f64;
-    let mut busy = [0.0f64; 3]; // unzipper, v2x, etl
-    let mut latencies: Vec<f64> = Vec::new();
-    let mut rows_total = 0u64;
-    let mut files_total = 0u64;
-    let mut puts = 0u64;
-    let mut last_done = 0.0f64;
-
-    for (i, &t_send) in sends.iter().enumerate() {
-        let payload = dataset.payload(i);
-        let pm = &members[i % members.len()];
-
-        // unzipper_phase: inflate + forward; raw zip persisted async
-        let svc = cfg.unzipper_service_s * jitter(&mut rng);
-        let start = t_send.max(unz_free);
-        let unz_done = start + svc;
-        unz_free = unz_done;
-        busy[0] += svc;
-        puts += 1;
-        spans.push(Span {
-            trace_id: i as u64,
-            stage: "unzipper_phase",
-            start_s: start,
-            duration_s: svc,
-            records: 1,
-            bytes: payload.zip_bytes.len() as u64,
-            ok: true,
-        });
-
-        for m in pm {
-            // v2x_phase: decode + columnarize; the blocking variant pays
-            // the blob put on the critical path (the paper's defect)
-            let io_s = match cfg.write_mode {
-                WriteMode::Blocking => cfg.blob_latency.put_latency_s(m.bytes),
-                WriteMode::NonBlocking => 0.0,
-            };
-            let svc = cfg.v2x_parse_s * cfg.v2x_throttle * jitter(&mut rng) + io_s;
-            let v_start = unz_done.max(v2x_free);
-            v2x_free = v_start + svc;
-            busy[1] += svc;
-            puts += 1;
-            spans.push(Span {
-                trace_id: i as u64,
-                stage: "v2x_phase",
-                start_s: v_start,
-                duration_s: svc,
-                records: 1,
-                bytes: m.bytes as u64,
-                ok: true,
-            });
-
-            // etl_phase: scrub + schema'd insert (same latency model as
-            // the threaded pipeline's warehouse table)
-            let esvc = cfg.etl_service_s * jitter(&mut rng)
-                + EtlStage::INSERT_LATENCY.per_batch_s
-                + EtlStage::INSERT_LATENCY.per_row_s * m.rows as f64;
-            let e_start = v2x_free.max(etl_free);
-            etl_free = e_start + esvc;
-            busy[2] += esvc;
-            spans.push(Span {
-                trace_id: i as u64,
-                stage: "etl_phase",
-                start_s: e_start,
-                duration_s: esvc,
-                records: m.rows as u64,
-                bytes: (m.rows * 40) as u64,
-                ok: true,
-            });
-
-            rows_total += m.rows as u64;
-            files_total += 1;
-            latencies.push(etl_free - t_send);
-            last_done = last_done.max(etl_free);
-        }
-    }
-
-    // collect spans into the cell's isolated TSDB
-    let collector = Collector::new(tsdb.clone());
-    let spans_collected = collector.collect_from(&spans) as u64;
-
-    // isolated cost meter: deploy this cell's containers on its own
-    // simulated cloud and meter the stages' busy time against them
-    let cloud = Cloud::new();
-    cloud.add_node("campaign-node", Resources::new(16.0, 64.0), 0.40);
-    let window = last_done.max(1e-9);
-    let mut metered_cpu_s = 0.0;
-    let stage_containers = ["unzipper", "v2x", "etl"];
-    for (cname, res) in &cfg.containers {
-        let c = cloud.deploy(
-            &format!("campaign/{}/{}", cfg.name, cname),
-            &format!("campaign-{}", cfg.name),
-            "campaign-node",
-            *res,
-        );
-        if let Some(si) = stage_containers.iter().position(|s| s == cname) {
-            c.record_usage(0.0, window, busy[si], res.mem_gb);
-            metered_cpu_s += c.usage().total_cpu_core_s();
-        }
-    }
-
-    let first_send = sends.first().copied().unwrap_or(0.0);
-    let duration_s = (last_done - first_send).max(1e-9);
-    let zips = sends.len() as u64;
-    let throughput_rps = zips as f64 / duration_s;
-    let cost_per_hr_usd = cfg.cost_per_hr(prices);
-    let run_cost_usd =
-        cost_per_hr_usd * window / 3600.0 + puts as f64 * prices.blob_put_per_1k / 1000.0;
-    let cost_per_record_usd = if zips > 0 {
-        run_cost_usd / zips as f64
-    } else {
-        f64::NAN
-    };
-
-    CellResult {
-        variant: cfg.name.to_string(),
-        load: spec.load.name.clone(),
-        dataset: spec.dataset_name.clone(),
-        seed: spec.seed,
-        zips,
-        files: files_total,
-        rows: rows_total,
-        duration_s,
-        throughput_rps,
-        latency_mean_s: stats::mean(&latencies),
-        latency_p50_s: stats::quantile(&latencies, 0.5),
-        latency_p95_s: stats::quantile(&latencies, 0.95),
-        latency_p99_s: stats::quantile(&latencies, 0.99),
-        cost_per_hr_usd,
-        run_cost_usd,
-        annual_cost_usd: cost_per_hr_usd * 8760.0,
-        cost_per_record_usd,
-        spans_collected,
-        metered_cpu_s,
     }
 }
 
@@ -840,16 +471,6 @@ mod tests {
     }
 
     #[test]
-    fn derive_seed_separates_axes() {
-        let a = derive_seed(1, [0, 0, 0]);
-        let b = derive_seed(1, [0, 0, 1]);
-        let c = derive_seed(1, [0, 1, 0]);
-        let d = derive_seed(2, [0, 0, 0]);
-        let set: std::collections::BTreeSet<u64> = [a, b, c, d].into_iter().collect();
-        assert_eq!(set.len(), 4);
-    }
-
-    #[test]
     fn empty_pattern_cell_is_safe() {
         let c = Campaign::new("empty", 1)
             .variant(VariantConfig::blocking_write())
@@ -860,5 +481,46 @@ mod tests {
         assert!(report.cells[0].latency_p50_s.is_nan());
         // render must not panic on NaN metrics
         assert!(report.render().contains("silent"));
+    }
+
+    #[test]
+    fn burst_load_case_runs_end_to_end() {
+        // a burst-style LoadCase through a full campaign: the periodic
+        // spikes must queue work (p99 > p50) and every offered zip must
+        // drain through all three stations
+        let c = Campaign::new("burst-e2e", 17)
+            .variant(VariantConfig::blocking_write())
+            .variant(VariantConfig::no_blocking_write())
+            .load("burst-4x", LoadPattern::bursty(40.0, 1.0, 10.0, 2.5, 4.0))
+            .dataset("tiny", tiny_dataset());
+        let report = CampaignRunner::new(2).run(&c);
+        assert_eq!(report.cells.len(), 2);
+        for cell in &report.cells {
+            let expected = cell.load.clone();
+            assert_eq!(expected, "burst-4x");
+            assert!(cell.zips > 0, "burst pattern offered nothing");
+            assert_eq!(cell.files, cell.zips * 5);
+            assert!(cell.latency_p99_s >= cell.latency_p50_s);
+            assert!(cell.throughput_rps > 0.0);
+        }
+        // same seed replays the burst campaign byte-identically
+        let again = CampaignRunner::new(1).run(&c);
+        assert_eq!(
+            report.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn extended_grid_includes_burst_and_drain_cases() {
+        let c = Campaign::paper_automotive_extended(0xD5);
+        assert_eq!(c.n_cells(), 3 * 4 * 1);
+        let loads: Vec<&str> = c.loads.iter().map(|l| l.name.as_str()).collect();
+        assert!(loads.contains(&"burst-3x"));
+        assert!(loads.contains(&"drain-40-0"));
+        // the base grid is a strict prefix, so paper_automotive cells keep
+        // their derived seeds (variant/load indices are unchanged)
+        let base = Campaign::paper_automotive(0xD5);
+        assert_eq!(c.cells()[0].seed, base.cells()[0].seed);
     }
 }

@@ -1,0 +1,185 @@
+//! Campaign results: per-cell measurements and the aggregated, ranked
+//! report. Pure data + rendering — execution lives in the private
+//! `cell` module (on the [`crate::sim`] kernel) and grid fan-out in
+//! [`super::CampaignRunner`].
+
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Everything measured for one executed campaign cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Variant name.
+    pub variant: String,
+    /// Load case name.
+    pub load: String,
+    /// Dataset case name.
+    pub dataset: String,
+    /// The cell's derived seed (replay handle).
+    pub seed: u64,
+    /// Vehicle transmissions offered and processed.
+    pub zips: u64,
+    /// Subsystem files processed (≈ 5 × zips).
+    pub files: u64,
+    /// Warehouse rows loaded.
+    pub rows: u64,
+    /// Virtual seconds from first send to final drain.
+    pub duration_s: f64,
+    /// Sustained throughput, transmissions/second.
+    pub throughput_rps: f64,
+    /// Mean end-to-end (ingest → warehouse) latency, seconds.
+    pub latency_mean_s: f64,
+    /// Median end-to-end latency, seconds.
+    pub latency_p50_s: f64,
+    /// 95th-percentile end-to-end latency, seconds.
+    pub latency_p95_s: f64,
+    /// 99th-percentile end-to-end latency, seconds.
+    pub latency_p99_s: f64,
+    /// Fixed cost rate from container sizing, USD/hour.
+    pub cost_per_hr_usd: f64,
+    /// Prorated cost of this cell's run (containers + blob puts), USD.
+    pub run_cost_usd: f64,
+    /// Projected cost of operating the variant for a year, USD.
+    pub annual_cost_usd: f64,
+    /// Cost per processed transmission at sustained throughput, USD.
+    pub cost_per_record_usd: f64,
+    /// Spans collected into this cell's isolated TSDB.
+    pub spans_collected: u64,
+    /// CPU core-seconds metered against this cell's isolated cloud.
+    pub metered_cpu_s: f64,
+}
+
+impl CellResult {
+    /// Ranking score: transmissions processed per dollar of fixed cost
+    /// (records/hour ÷ $/hour). Higher is better.
+    pub fn records_per_dollar(&self) -> f64 {
+        if self.cost_per_hr_usd <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.throughput_rps * 3600.0 / self.cost_per_hr_usd
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("{} × {} × {}", self.variant, self.load, self.dataset)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant.clone())),
+            ("load", Json::str(self.load.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("seed", Json::str(format!("{:#018x}", self.seed))),
+            ("zips", Json::num(self.zips as f64)),
+            ("files", Json::num(self.files as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("latency_mean_s", Json::num(self.latency_mean_s)),
+            ("latency_p50_s", Json::num(self.latency_p50_s)),
+            ("latency_p95_s", Json::num(self.latency_p95_s)),
+            ("latency_p99_s", Json::num(self.latency_p99_s)),
+            ("cost_per_hr_usd", Json::num(self.cost_per_hr_usd)),
+            ("run_cost_usd", Json::num(self.run_cost_usd)),
+            ("annual_cost_usd", Json::num(self.annual_cost_usd)),
+            ("cost_per_record_usd", Json::num(self.cost_per_record_usd)),
+            ("spans_collected", Json::num(self.spans_collected as f64)),
+            ("metered_cpu_s", Json::num(self.metered_cpu_s)),
+        ])
+    }
+}
+
+/// Aggregated results of one campaign execution.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// Campaign name.
+    pub campaign: String,
+    /// Master seed the campaign ran with.
+    pub seed: u64,
+    /// One result per grid cell, in grid (row-major) order.
+    pub cells: Vec<CellResult>,
+}
+
+impl CampaignReport {
+    /// Cells sorted best-first by [`CellResult::records_per_dollar`],
+    /// ties broken by throughput then by label (fully deterministic).
+    pub fn ranking(&self) -> Vec<&CellResult> {
+        let mut refs: Vec<&CellResult> = self.cells.iter().collect();
+        refs.sort_by(|a, b| {
+            b.records_per_dollar()
+                .partial_cmp(&a.records_per_dollar())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| {
+                    b.throughput_rps
+                        .partial_cmp(&a.throughput_rps)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .then_with(|| a.label().cmp(&b.label()))
+        });
+        refs
+    }
+
+    /// Render the per-cell table plus the cross-cell ranking as ASCII.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "variant",
+            "load",
+            "dataset",
+            "zips",
+            "thr (z/s)",
+            "p50 (s)",
+            "p95 (s)",
+            "p99 (s)",
+            "$/hr",
+            "annual $",
+            "rec/$",
+        ])
+        .with_title(&format!(
+            "CAMPAIGN '{}' (seed {:#x}): {} cells",
+            self.campaign,
+            self.seed,
+            self.cells.len()
+        ));
+        for c in &self.cells {
+            t.row(vec![
+                c.variant.clone(),
+                c.load.clone(),
+                c.dataset.clone(),
+                c.zips.to_string(),
+                fnum(c.throughput_rps, 2),
+                fnum(c.latency_p50_s, 3),
+                fnum(c.latency_p95_s, 3),
+                fnum(c.latency_p99_s, 3),
+                fnum(c.cost_per_hr_usd, 4),
+                fnum(c.annual_cost_usd, 2),
+                fnum(c.records_per_dollar(), 0),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str("\nranking (transmissions per fixed-cost dollar):\n");
+        for (i, c) in self.ranking().iter().enumerate() {
+            out.push_str(&format!(
+                "  #{} {:<55} {:>10} rec/$  ({:.2} z/s at ${:.4}/hr)\n",
+                i + 1,
+                c.label(),
+                fnum(c.records_per_dollar(), 0),
+                c.throughput_rps,
+                c.cost_per_hr_usd,
+            ));
+        }
+        out
+    }
+
+    /// Canonical JSON form (sorted keys, cells in grid order). Two
+    /// same-seed campaign executions serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("campaign", Json::str(self.campaign.clone())),
+            ("seed", Json::str(format!("{:#018x}", self.seed))),
+            (
+                "cells",
+                Json::arr(self.cells.iter().map(CellResult::to_json)),
+            ),
+        ])
+    }
+}

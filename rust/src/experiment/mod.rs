@@ -11,6 +11,14 @@
 //! 4. waits for the pipeline to **drain** (all stages idle);
 //! 5. collects spans into the TSDB and snapshots the metric/cost summary
 //!    (a Table III row) into an [`ExperimentRecord`].
+//!
+//! Every experiment can also run **simulated**: the same stages, the same
+//! arrival schedule, executed in virtual time on the [`crate::sim`]
+//! kernel ([`ExperimentHarness::simulate`]), with
+//! [`ExperimentHarness::run_with_sim`] reporting the measured-vs-simulated
+//! delta as a [`ModeDelta`].
+
+mod sim;
 
 use std::sync::Arc;
 
@@ -122,6 +130,86 @@ impl ExperimentRecord {
     pub fn mean_throughput_rec_hr(&self) -> f64 {
         self.mean_throughput_rps * 3600.0
     }
+}
+
+/// One variant executed both ways — measured on threads and simulated on
+/// the [`crate::sim`] kernel — from the same [`Experiment`] definition.
+#[derive(Debug, Clone)]
+pub struct ModeDelta {
+    /// The wall-clock (measured) record.
+    pub real: ExperimentRecord,
+    /// The virtual-time (simulated) record.
+    pub sim: ExperimentRecord,
+}
+
+fn rel_err(sim: f64, real: f64) -> f64 {
+    (sim - real).abs() / real.abs().max(1e-12)
+}
+
+impl ModeDelta {
+    /// Relative throughput disagreement, |sim − real| / real.
+    pub fn throughput_rel_err(&self) -> f64 {
+        rel_err(self.sim.mean_throughput_rps, self.real.mean_throughput_rps)
+    }
+
+    /// Relative end-to-end mean-latency disagreement, |sim − real| / real.
+    pub fn e2e_latency_rel_err(&self) -> f64 {
+        rel_err(self.sim.latency_e2e_mean_s, self.real.latency_e2e_mean_s)
+    }
+
+    /// Three-line human summary of the measured-vs-simulated comparison.
+    pub fn render(&self) -> String {
+        format!(
+            "{}: real {:.3} z/s vs sim {:.3} z/s ({:.1}% off)\n  \
+             e2e latency: real {:.3}s vs sim {:.3}s\n  \
+             duration: real {:.1}s vs sim {:.1}s (virtual)\n",
+            self.real.variant,
+            self.real.mean_throughput_rps,
+            self.sim.mean_throughput_rps,
+            self.throughput_rel_err() * 100.0,
+            self.real.latency_e2e_mean_s,
+            self.sim.latency_e2e_mean_s,
+            self.real.duration_s,
+            self.sim.duration_s,
+        )
+    }
+}
+
+/// Drive a steady query load against a warehouse table on the given
+/// clock, measuring per-query latency (virtual seconds). Returns
+/// `(p50, p95, achieved qps)`. Shared by the measured and simulated
+/// execution modes — the clock decides which world the latency is in.
+pub(crate) fn run_query_load(
+    clock: &SharedClock,
+    table: &crate::tablestore::Table,
+    q: QueryLoad,
+) -> Result<(f64, f64, f64)> {
+    anyhow::ensure!(q.rate_qps > 0.0 && q.duration_s > 0.0, "bad query load");
+    let n = (q.rate_qps * q.duration_s).floor() as usize;
+    let mut rng = crate::util::rng::Rng::new(0x51E7);
+    let subsystems = ["engine", "location", "speed", "battery", "adas"];
+    let mut latencies = Vec::with_capacity(n);
+    let t0 = clock.now_s();
+    let gap = 1.0 / q.rate_qps;
+    for i in 0..n {
+        let due = t0 + i as f64 * gap;
+        let now = clock.now_s();
+        if due > now {
+            clock.sleep_s(due - now);
+        }
+        let q0 = clock.now_s();
+        let subsys = *rng.choice(&subsystems);
+        let _count = table.query_count(|row| {
+            matches!(&row[2], crate::tablestore::Value::Text(s) if s == subsys)
+        });
+        latencies.push(clock.now_s() - q0);
+    }
+    let span = (clock.now_s() - t0).max(1e-9);
+    Ok((
+        stats::median(&latencies),
+        stats::quantile(&latencies, 0.95),
+        n as f64 / span,
+    ))
 }
 
 /// Shared wind-tunnel infrastructure. `run` is `&self` and every run gets
@@ -282,32 +370,24 @@ impl ExperimentHarness {
     /// Drive a steady query load against the warehouse table, measuring
     /// per-query latency (virtual seconds). Returns (p50, p95, achieved qps).
     fn run_queries(&self, table: &crate::tablestore::Table, q: QueryLoad) -> Result<(f64, f64, f64)> {
-        anyhow::ensure!(q.rate_qps > 0.0 && q.duration_s > 0.0, "bad query load");
-        let n = (q.rate_qps * q.duration_s).floor() as usize;
-        let mut rng = crate::util::rng::Rng::new(0x51E7);
-        let subsystems = ["engine", "location", "speed", "battery", "adas"];
-        let mut latencies = Vec::with_capacity(n);
-        let t0 = self.clock.now_s();
-        let gap = 1.0 / q.rate_qps;
-        for i in 0..n {
-            let due = t0 + i as f64 * gap;
-            let now = self.clock.now_s();
-            if due > now {
-                self.clock.sleep_s(due - now);
-            }
-            let q0 = self.clock.now_s();
-            let subsys = *rng.choice(&subsystems);
-            let _count = table.query_count(|row| {
-                matches!(&row[2], crate::tablestore::Value::Text(s) if s == subsys)
-            });
-            latencies.push(self.clock.now_s() - q0);
-        }
-        let span = (self.clock.now_s() - t0).max(1e-9);
-        Ok((
-            stats::median(&latencies),
-            stats::quantile(&latencies, 0.95),
-            n as f64 / span,
-        ))
+        run_query_load(&self.clock, table, q)
+    }
+
+    /// Run one experiment against one pipeline variant **in virtual
+    /// time** on the [`crate::sim`] kernel: the same stage code as
+    /// [`ExperimentHarness::run`], no threads, no wall-clock sleeps. The
+    /// run is hermetic (own cloud, blob store, table, span sink) and
+    /// fully deterministic.
+    pub fn simulate(&self, variant: &VariantConfig, exp: &Experiment) -> Result<ExperimentRecord> {
+        sim::simulate(variant, exp, &self.prices)
+    }
+
+    /// Run one experiment both measured and simulated and return the
+    /// pair — the wind tunnel cross-checking its own simulator.
+    pub fn run_with_sim(&self, variant: &VariantConfig, exp: &Experiment) -> Result<ModeDelta> {
+        let real = self.run(variant, exp)?;
+        let sim = self.simulate(variant, exp)?;
+        Ok(ModeDelta { real, sim })
     }
 }
 

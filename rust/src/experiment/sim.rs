@@ -1,0 +1,390 @@
+//! Virtual-time execution of a pipeline variant — the *same* stage code
+//! the wall-clock wind tunnel runs, driven by the [`crate::sim`] kernel
+//! instead of threads.
+//!
+//! In measured mode ([`super::ExperimentHarness::run`]) the three stages
+//! run on dedicated threads against a `ScaledClock`, and every modeled
+//! service time costs real wall time. Here the identical
+//! [`Stage::process`] implementations execute single-threaded inside a
+//! [`Tandem`]: the kernel positions a [`crate::sim::SimClock`] at each
+//! service start,
+//! the stage's modeled sleeps *advance* that clock instead of blocking,
+//! and a year of virtual time costs only as much wall time as the real
+//! work (zip inflation, binary decoding, schema'd inserts) in it.
+//!
+//! The point is comparability: [`super::ExperimentHarness::run_with_sim`]
+//! runs one variant both ways from one [`Experiment`] definition and
+//! reports the delta ([`super::ModeDelta`]) — the wind tunnel
+//! cross-checking its own simulator, per §II's "the harness must
+//! understand its own delivery limits".
+//!
+//! Scheduled starts (`Experiment::start_at_s`) are a wall-clock concern
+//! and are ignored here: virtual runs always begin at time 0.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::blob::{AsyncWriter, BlobStore};
+use crate::cloud::{Cloud, Resources};
+use crate::cost::PriceBook;
+use crate::loadgen::LoadReport;
+use crate::pipeline::{
+    BinMsg, EtlStage, RowsMsg, Stage, StageContext, UnzipperStage, V2xStage, V2xWrite,
+    VariantConfig, WriteMode, ZipMsg,
+};
+use crate::sim::{Served, StationConfig, Tandem};
+use crate::telemetry::{Span, SpanSink};
+use crate::util::clock::{Clock, SharedClock};
+use crate::util::stats;
+
+use super::{run_query_load, Experiment, ExperimentRecord};
+
+/// The one job type flowing through the virtual tandem: each station
+/// unwraps the message kind it consumes.
+#[derive(Clone)]
+enum SimMsg {
+    Zip(ZipMsg),
+    Bin(BinMsg),
+    Rows(RowsMsg),
+}
+
+/// Execute `exp` against `variant` entirely in virtual time. Hermetic:
+/// the run gets its own simulated cloud, blob store, warehouse table and
+/// span sink, so it neither perturbs nor reads the harness's shared
+/// state.
+pub(super) fn simulate(
+    variant: &VariantConfig,
+    exp: &Experiment,
+    prices: &PriceBook,
+) -> Result<ExperimentRecord> {
+    let cfg = variant;
+    let tandem: Tandem<SimMsg> = Tandem::new(vec![
+        StationConfig::single("unzipper_phase"),
+        StationConfig::single("v2x_phase"),
+        StationConfig::single("etl_phase"),
+    ]);
+    let clock: SharedClock = tandem.clock();
+
+    // the same substrate the threaded deployment wires up, on the
+    // kernel's clock (modeled sleeps advance virtual time; background
+    // uploader waits are free — see `sim::SimClock`)
+    let cloud = Cloud::new();
+    cloud.add_node("sim-node", Resources::new(16.0, 64.0), 0.40);
+    let blob = BlobStore::new(clock.clone(), cfg.blob_latency);
+    let table = EtlStage::warehouse_table(clock.clone());
+    let mut containers = std::collections::HashMap::new();
+    for (cname, res) in &cfg.containers {
+        let id = format!("sim-{}/{}", cfg.name, cname);
+        containers.insert(*cname, cloud.deploy(&id, &format!("sim-{}", cfg.name), "sim-node", *res));
+    }
+    let container_for = |name: &str| {
+        containers
+            .get(name)
+            .or_else(|| containers.get("v2x"))
+            .expect("variant must size at least the v2x container")
+            .clone()
+    };
+
+    let raw_writer = Arc::new(AsyncWriter::with_workers(blob.clone(), 4096, 1));
+    let (v2x_write, parquet_writer) = match cfg.write_mode {
+        WriteMode::Blocking => (V2xWrite::Blocking(blob.clone()), None),
+        WriteMode::NonBlocking => {
+            let w = Arc::new(AsyncWriter::with_workers(
+                blob.clone(),
+                4096,
+                cfg.uploader_workers,
+            ));
+            (V2xWrite::Async(w.clone()), Some(w))
+        }
+    };
+
+    let spans = SpanSink::new();
+    let ctx = |cname: &str, throttle: f64| StageContext {
+        clock: clock.clone(),
+        spans: spans.clone(),
+        container: container_for(cname),
+        throttle,
+    };
+    let ctx_unzipper = ctx("unzipper", 1.0);
+    let ctx_v2x = ctx("v2x", cfg.v2x_throttle);
+    let ctx_etl = ctx("etl", 1.0);
+
+    let mut unzipper = UnzipperStage {
+        service_s: cfg.unzipper_service_s,
+        persist: raw_writer.clone(),
+        cum_latency: None,
+    };
+    let mut v2x = V2xStage {
+        parse_s: cfg.v2x_parse_s,
+        write: v2x_write,
+        cum_latency: None,
+    };
+    let mut etl = EtlStage {
+        service_s: cfg.etl_service_s,
+        table: table.clone(),
+        cum_latency: None,
+    };
+
+    // identical arrival schedule to what the wall-clock generator paces
+    let payload_arcs: Vec<Arc<Vec<u8>>> = exp
+        .dataset
+        .payloads
+        .iter()
+        .map(|p| Arc::new(p.zip_bytes.clone()))
+        .collect();
+    let sends: Vec<f64> = exp.pattern.arrivals().collect();
+    let mut bytes_sent = 0u64;
+    let arrivals: Vec<(f64, SimMsg)> = sends
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let zip = payload_arcs[i % payload_arcs.len()].clone();
+            bytes_sent += zip.len() as u64;
+            (
+                t,
+                SimMsg::Zip(ZipMsg {
+                    trace_id: i as u64 + 1,
+                    ingest_s: t,
+                    zip,
+                }),
+            )
+        })
+        .collect();
+
+    let sim_clock = tandem.clock();
+    let outcome = tandem.run(arrivals, |station, start, batch| {
+        // mirror StageRunner: time the real process() call (its modeled
+        // sleeps advance the kernel clock) and emit the span it would
+        // have emitted on a thread
+        let msg = batch[0].clone();
+        let (name, out_records, out_bytes, ok, next) = match (station, msg) {
+            (0, SimMsg::Zip(m)) => {
+                let out = unzipper.process(m, &ctx_unzipper);
+                (
+                    unzipper.name(),
+                    out.records,
+                    out.bytes,
+                    out.ok,
+                    out.emit.into_iter().map(SimMsg::Bin).collect::<Vec<_>>(),
+                )
+            }
+            (1, SimMsg::Bin(m)) => {
+                let out = v2x.process(m, &ctx_v2x);
+                (
+                    v2x.name(),
+                    out.records,
+                    out.bytes,
+                    out.ok,
+                    out.emit.into_iter().map(SimMsg::Rows).collect::<Vec<_>>(),
+                )
+            }
+            (2, SimMsg::Rows(m)) => {
+                let out = etl.process(m, &ctx_etl);
+                (etl.name(), out.records, out.bytes, out.ok, Vec::new())
+            }
+            _ => unreachable!("message kind routed to the wrong station"),
+        };
+        let end = sim_clock.now_s();
+        spans.push(Span {
+            trace_id: 0,
+            stage: name,
+            start_s: start,
+            duration_s: end - start,
+            records: out_records,
+            bytes: out_bytes,
+            ok,
+        });
+        Served {
+            service_s: end - start,
+            next,
+        }
+    });
+
+    // drain the background uploaders (their virtual cost is zero; this
+    // just makes blob object counts final). The stages hold writer
+    // clones, so they must go first for try_unwrap to see a sole owner.
+    drop(unzipper);
+    drop(v2x);
+    drop(etl);
+    if let Ok(w) = Arc::try_unwrap(raw_writer) {
+        w.shutdown();
+    }
+    if let Some(w) = parquet_writer {
+        if let Ok(w) = Arc::try_unwrap(w) {
+            w.shutdown();
+        }
+    }
+
+    // per-file end-to-end latencies from the completed rows-messages
+    let mut e2e: Vec<f64> = Vec::with_capacity(outcome.completions.len());
+    for (done, msg) in &outcome.completions {
+        if let SimMsg::Rows(m) = msg {
+            e2e.push(done - m.ingest_s);
+        }
+    }
+
+    let drained_s = outcome.drained_s();
+    let started_s = sends.first().copied().unwrap_or(0.0);
+    let duration_s = (drained_s - started_s).max(1e-9);
+    let zips = sends.len() as u64;
+
+    let all_spans = spans.drain();
+    let durations_of = |stage: &str| -> Vec<f64> {
+        all_spans
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| s.duration_s)
+            .collect()
+    };
+    let stage_names = ["unzipper_phase", "v2x_phase", "etl_phase"];
+    let latency_nq_mean_s: f64 = stage_names
+        .iter()
+        .map(|s| stats::mean(&durations_of(s)))
+        .sum();
+    let latency_nq_median_s: f64 = stage_names
+        .iter()
+        .map(|s| stats::median(&durations_of(s)))
+        .sum();
+    let stage_errors = all_spans.iter().filter(|s| !s.ok).count() as u64;
+    let per_stage: Vec<(String, u64, u64, f64)> = stage_names
+        .iter()
+        .zip(&outcome.stations)
+        .map(|(name, st)| {
+            let records: u64 = all_spans
+                .iter()
+                .filter(|s| s.stage == *name)
+                .map(|s| s.records)
+                .sum();
+            (name.to_string(), st.batches, records, st.busy_s)
+        })
+        .collect();
+
+    let query_stats = exp
+        .queries
+        .map(|q| run_query_load(&clock, &table, q))
+        .transpose()?;
+
+    let cost_per_hr_usd = cfg.cost_per_hr(prices);
+    Ok(ExperimentRecord {
+        experiment: format!("{} (sim)", exp.name),
+        variant: cfg.name,
+        started_s,
+        drained_s,
+        duration_s,
+        zips_sent: zips,
+        mean_throughput_rps: zips as f64 / duration_s,
+        latency_nq_mean_s,
+        latency_nq_median_s,
+        latency_e2e_mean_s: stats::mean(&e2e),
+        latency_e2e_median_s: stats::median(&e2e),
+        latency_e2e_p95_s: stats::quantile(&e2e, 0.95),
+        cost_per_hr_usd,
+        total_cost_usd: cost_per_hr_usd * duration_s / 3600.0,
+        rows_inserted: table.row_count(),
+        rows_scrubbed: table.scrubbed_count(),
+        stage_errors,
+        query_p50_s: query_stats.map(|(p50, _, _)| p50),
+        query_p95_s: query_stats.map(|(_, p95, _)| p95),
+        query_achieved_qps: query_stats.map(|(_, _, qps)| qps),
+        load: LoadReport {
+            requested: exp.pattern.total_records(),
+            sent: zips,
+            bytes: bytes_sent,
+            start_s: sends.first().copied().unwrap_or(f64::NAN),
+            end_s: sends.last().copied().unwrap_or(f64::NAN),
+            max_lateness_s: 0.0, // virtual pacing is exact by construction
+        },
+        per_stage,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Experiment, ExperimentHarness};
+    use crate::datagen::{DataSet, DataSetSpec};
+    use crate::loadgen::LoadPattern;
+    use crate::pipeline::VariantConfig;
+
+    fn small_experiment(pattern: LoadPattern) -> Experiment {
+        Experiment::new(
+            "sim-test",
+            pattern,
+            DataSet::generate(DataSetSpec {
+                payloads: 6,
+                records_per_subsystem: 3,
+                bad_rate: 0.0,
+                seed: 21,
+            }),
+        )
+    }
+
+    #[test]
+    fn simulate_runs_the_real_stages_virtually() {
+        let harness = ExperimentHarness::new(1000.0);
+        let exp = small_experiment(LoadPattern::steady(10.0, 2.0)); // 20 zips
+        let rec = harness
+            .simulate(&VariantConfig::blocking_write(), &exp)
+            .unwrap();
+        assert_eq!(rec.zips_sent, 20);
+        assert_eq!(rec.stage_errors, 0);
+        assert!(rec.rows_inserted > 0, "real inserts happened");
+        assert!(rec.latency_e2e_mean_s >= rec.latency_nq_mean_s * 0.5);
+        assert_eq!(rec.per_stage.len(), 3);
+        assert_eq!(rec.per_stage[0].1, 20); // 20 unzipper spans
+        assert_eq!(rec.per_stage[1].1, 100); // 5 files per zip
+        assert_eq!(rec.load.max_lateness_s, 0.0);
+        assert!(rec.experiment.ends_with("(sim)"));
+    }
+
+    #[test]
+    fn simulate_is_deterministic() {
+        let harness = ExperimentHarness::new(1000.0);
+        let exp = small_experiment(LoadPattern::ramp(20.0, 0.0, 4.0));
+        let cfg = VariantConfig::no_blocking_write();
+        let a = harness.simulate(&cfg, &exp).unwrap();
+        let b = harness.simulate(&cfg, &exp).unwrap();
+        assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        assert_eq!(
+            a.latency_e2e_p95_s.to_bits(),
+            b.latency_e2e_p95_s.to_bits()
+        );
+        assert_eq!(a.rows_inserted, b.rows_inserted);
+    }
+
+    #[test]
+    fn simulated_throughput_tracks_the_analytic_bottleneck() {
+        // under saturating load the sim must converge on the variant's
+        // analytic v2x-bottleneck capacity (same model, no OS noise)
+        let harness = ExperimentHarness::new(1000.0);
+        let exp = small_experiment(LoadPattern::steady(8.0, 10.0)); // 80 zips ≫ capacity
+        for cfg in [
+            VariantConfig::blocking_write(),
+            VariantConfig::cpu_limited(),
+        ] {
+            let rec = harness.simulate(&cfg, &exp).unwrap();
+            let cap = cfg.analytic_capacity_zps();
+            let ratio = rec.mean_throughput_rps / cap;
+            assert!(
+                (0.85..1.25).contains(&ratio),
+                "{}: sim {} vs analytic {cap}",
+                cfg.name,
+                rec.mean_throughput_rps
+            );
+        }
+    }
+
+    #[test]
+    fn run_with_sim_reports_the_delta() {
+        let harness = ExperimentHarness::new(2000.0);
+        let exp = small_experiment(LoadPattern::steady(6.0, 3.0)); // 18 zips
+        let delta = harness
+            .run_with_sim(&VariantConfig::no_blocking_write(), &exp)
+            .unwrap();
+        assert_eq!(delta.real.zips_sent, delta.sim.zips_sent);
+        assert!(delta.throughput_rel_err().is_finite());
+        let text = delta.render();
+        assert!(text.contains("no-blocking-write"));
+        assert!(text.contains("sim"));
+    }
+}

@@ -18,7 +18,10 @@
 //!   ([`cloud`]) — or adapt the [`pipeline::Stage`] trait to point the
 //!   wind tunnel at your own.
 //! - Run an [`experiment`]; spans flow into the [`telemetry`] TSDB and
-//!   spend into the [`cost`] meter.
+//!   spend into the [`cost`] meter. The same experiment also runs in
+//!   *virtual time* on the shared [`sim`] kernel
+//!   (`ExperimentHarness::simulate`), and the harness reports the
+//!   measured-vs-simulated delta.
 //! - Fit a [`twin`] from the measurements, project a business year with a
 //!   [`traffic`] model, and answer what-if questions with [`bizsim`].
 //!
@@ -49,6 +52,7 @@ pub mod pipeline;
 pub mod report;
 pub mod resources;
 pub mod runtime;
+pub mod sim;
 pub mod tablestore;
 pub mod telemetry;
 pub mod traffic;

@@ -4,12 +4,21 @@
 //! end data rate; rates interpolate linearly inside a segment (exactly the
 //! paper's model: "Data rate can linearly increase, decrease, or stay
 //! steady, over segments of any length, to approximate any load curve").
+//! Beyond the paper's ramp/steady shapes, [`LoadPattern::bursty`] and
+//! [`LoadPattern::diurnal`] compose the same segments into spiky and
+//! day-cycle arrival processes, and
+//! [`crate::traffic::TrafficModel::to_load_pattern`] turns a business
+//! traffic forecast into a pattern — so campaign cells, wind-tunnel
+//! experiments, and twin scenarios all draw from one load vocabulary.
 //!
-//! The [`LoadGenerator`] converts the pattern into an exact open-loop send
-//! schedule by analytically inverting the cumulative-rate curve (piecewise
-//! quadratic), then paces sends on the shared virtual clock. Pacing
-//! accuracy is self-measured and reported — §II's requirement that the
-//! harness understand its own delivery limits.
+//! The canonical consumption form is [`LoadPattern::arrivals`]: an
+//! [`ArrivalStream`] iterator that yields exact send times by
+//! analytically inverting the cumulative-rate curve (piecewise
+//! quadratic). The same stream drives the wall-clock [`LoadGenerator`],
+//! the [`crate::sim`] discrete-event kernel, and the campaign engine, so
+//! measured and simulated runs see identical arrival schedules down to
+//! the last bit. Pacing accuracy is self-measured and reported — §II's
+//! requirement that the harness understand its own delivery limits.
 
 use crate::datagen::DataSet;
 use crate::telemetry::Tsdb;
@@ -67,6 +76,77 @@ impl LoadPattern {
         }])
     }
 
+    /// A quiet base rate punctuated by periodic rectangular bursts: every
+    /// `period_s`, the rate jumps from `base_rps` to `burst_rps` for
+    /// `burst_len_s`. The composition the paper's §IX names as future
+    /// work ("very short-term peaks") — and the load shape that separates
+    /// queue-tolerant variants from queue-collapsing ones.
+    pub fn bursty(
+        duration_s: f64,
+        base_rps: f64,
+        period_s: f64,
+        burst_len_s: f64,
+        burst_rps: f64,
+    ) -> Self {
+        assert!(duration_s > 0.0, "pattern duration must be positive");
+        assert!(
+            burst_len_s > 0.0 && period_s > burst_len_s,
+            "need 0 < burst_len_s < period_s"
+        );
+        assert!(
+            base_rps >= 0.0 && burst_rps >= 0.0,
+            "rates must be non-negative"
+        );
+        let mut segments = Vec::new();
+        let mut t = 0.0;
+        while t < duration_s - 1e-9 {
+            let quiet = (period_s - burst_len_s).min(duration_s - t);
+            segments.push(Segment {
+                duration_s: quiet,
+                start_rps: base_rps,
+                end_rps: base_rps,
+            });
+            t += quiet;
+            if t >= duration_s - 1e-9 {
+                break;
+            }
+            let burst = burst_len_s.min(duration_s - t);
+            segments.push(Segment {
+                duration_s: burst,
+                start_rps: burst_rps,
+                end_rps: burst_rps,
+            });
+            t += burst;
+        }
+        LoadPattern::new(segments)
+    }
+
+    /// A day-cycle pattern: `days` days of hourly piecewise-linear
+    /// segments tracking `mean_rps · (1 + amplitude · sin(...))`, with
+    /// the trough around 03:00 and the peak around 15:00. `amplitude`
+    /// is in `[0, 1]` (1 ⇒ the trough touches zero).
+    pub fn diurnal(days: usize, mean_rps: f64, amplitude: f64) -> Self {
+        assert!(days >= 1, "need at least one day");
+        assert!(mean_rps >= 0.0, "rate must be non-negative");
+        assert!(
+            (0.0..=1.0).contains(&amplitude),
+            "amplitude must be in [0, 1]"
+        );
+        let rate_at_hour = |h: usize| {
+            // sin peaks at h=15, troughs at h=3: shift the phase by 9 h
+            let phase = 2.0 * std::f64::consts::PI * ((h % 24) as f64 - 9.0) / 24.0;
+            (mean_rps * (1.0 + amplitude * phase.sin())).max(0.0)
+        };
+        let segments = (0..days * 24)
+            .map(|h| Segment {
+                duration_s: 3600.0,
+                start_rps: rate_at_hour(h),
+                end_rps: rate_at_hour(h + 1),
+            })
+            .collect();
+        LoadPattern::new(segments)
+    }
+
     /// Append a segment (builder style).
     pub fn then(mut self, duration_s: f64, start_rps: f64, end_rps: f64) -> Self {
         assert!(duration_s > 0.0);
@@ -96,49 +176,42 @@ impl LoadPattern {
         0.0
     }
 
-    /// Total records offered (area under the rate curve), rounded down.
+    /// Total records offered (area under the rate curve). The small
+    /// epsilon before flooring keeps the count consistent with
+    /// [`LoadPattern::arrivals`], which emits the k-th send when the
+    /// cumulative area reaches `k` within the same tolerance.
     pub fn total_records(&self) -> u64 {
-        self.segments
+        let area: f64 = self
+            .segments
             .iter()
             .map(|s| s.duration_s * (s.start_rps + s.end_rps) / 2.0)
-            .sum::<f64>()
-            .floor() as u64
+            .sum();
+        (area + 1e-9).floor() as u64
     }
 
-    /// Exact send times: the k-th record is sent when the cumulative area
-    /// under the rate curve reaches k+1 (so a steady 2 rps pattern sends at
-    /// t = 0.5, 1.0, 1.5 …). Piecewise-quadratic inversion per segment.
+    /// The arrival schedule as a lazy iterator: the k-th record is sent
+    /// when the cumulative area under the rate curve reaches k+1 (so a
+    /// steady 2 rps pattern sends at t = 0.5, 1.0, 1.5 …), by
+    /// piecewise-quadratic inversion per segment.
+    ///
+    /// This is the single arrival source every execution mode consumes:
+    /// the wall-clock [`LoadGenerator`] paces it, the campaign engine and
+    /// [`crate::sim::Tandem`] schedule it, and twin scenarios derive it
+    /// from a [`crate::traffic::TrafficModel`]. One schedule, every mode.
+    pub fn arrivals(&self) -> ArrivalStream<'_> {
+        ArrivalStream {
+            segments: &self.segments,
+            seg: 0,
+            t0: 0.0,
+            area0: 0.0,
+            k: 1,
+        }
+    }
+
+    /// Exact send times as a vector (collects [`LoadPattern::arrivals`]).
     pub fn send_times(&self) -> Vec<f64> {
         let mut times = Vec::with_capacity(self.total_records() as usize);
-        let mut t0 = 0.0; // segment start time
-        let mut area0 = 0.0; // cumulative records before this segment
-        let mut k = 1u64; // next record number (1-based target area)
-        for s in &self.segments {
-            let seg_area = s.duration_s * (s.start_rps + s.end_rps) / 2.0;
-            let slope = (s.end_rps - s.start_rps) / s.duration_s;
-            while (k as f64) <= area0 + seg_area + 1e-9 {
-                let a = k as f64 - area0; // area needed inside this segment
-                // solve: start_rps*x + slope*x^2/2 = a for x in [0, dur]
-                let x = if slope.abs() < 1e-12 {
-                    if s.start_rps <= 0.0 {
-                        break; // zero-rate steady segment contributes nothing
-                    }
-                    a / s.start_rps
-                } else {
-                    // x = (-b + sqrt(b^2 + 2*slope*a)) / slope, b = start_rps
-                    let disc = s.start_rps * s.start_rps + 2.0 * slope * a;
-                    if disc < 0.0 {
-                        break;
-                    }
-                    (-s.start_rps + disc.sqrt()) / slope
-                };
-                let x = x.clamp(0.0, s.duration_s);
-                times.push(t0 + x);
-                k += 1;
-            }
-            t0 += s.duration_s;
-            area0 += seg_area;
-        }
+        times.extend(self.arrivals());
         times
     }
 
@@ -170,6 +243,68 @@ impl LoadPattern {
             return Err("load pattern: no segments".into());
         }
         Ok(LoadPattern::new(out))
+    }
+}
+
+/// Lazy exact-arrival-time iterator over a [`LoadPattern`] (see
+/// [`LoadPattern::arrivals`]). Yields non-decreasing virtual send times;
+/// the arithmetic is identical to the historical eager schedule, so the
+/// stream and `send_times()` agree bit-for-bit.
+pub struct ArrivalStream<'a> {
+    segments: &'a [Segment],
+    /// Current segment index.
+    seg: usize,
+    /// Virtual time at the current segment's start.
+    t0: f64,
+    /// Cumulative records before the current segment.
+    area0: f64,
+    /// Next record number (1-based target area).
+    k: u64,
+}
+
+impl ArrivalStream<'_> {
+    fn advance_segment(&mut self) {
+        let s = &self.segments[self.seg];
+        self.t0 += s.duration_s;
+        self.area0 += s.duration_s * (s.start_rps + s.end_rps) / 2.0;
+        self.seg += 1;
+    }
+}
+
+impl Iterator for ArrivalStream<'_> {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        while self.seg < self.segments.len() {
+            let s = &self.segments[self.seg];
+            let seg_area = s.duration_s * (s.start_rps + s.end_rps) / 2.0;
+            if (self.k as f64) <= self.area0 + seg_area + 1e-9 {
+                let slope = (s.end_rps - s.start_rps) / s.duration_s;
+                let a = self.k as f64 - self.area0; // area needed inside this segment
+                // solve: start_rps*x + slope*x^2/2 = a for x in [0, dur]
+                let x = if slope.abs() < 1e-12 {
+                    if s.start_rps <= 0.0 {
+                        // zero-rate steady segment contributes nothing
+                        self.advance_segment();
+                        continue;
+                    }
+                    a / s.start_rps
+                } else {
+                    // x = (-b + sqrt(b^2 + 2*slope*a)) / slope, b = start_rps
+                    let disc = s.start_rps * s.start_rps + 2.0 * slope * a;
+                    if disc < 0.0 {
+                        self.advance_segment();
+                        continue;
+                    }
+                    (-s.start_rps + disc.sqrt()) / slope
+                };
+                let x = x.clamp(0.0, s.duration_s);
+                self.k += 1;
+                return Some(self.t0 + x);
+            }
+            self.advance_segment();
+        }
+        None
     }
 }
 
@@ -219,7 +354,8 @@ impl LoadGenerator {
         self
     }
 
-    /// Drive `sink` with payloads from `dataset` according to `pattern`.
+    /// Drive `sink` with payloads from `dataset` according to `pattern`,
+    /// pacing the same [`ArrivalStream`] the simulation modes consume.
     /// `sink(i, payload)` is called on the pacing thread: it must hand off
     /// quickly (enqueue) — any blocking shows up as pacing lateness, which
     /// is reported honestly in the returned [`LoadReport`].
@@ -232,7 +368,6 @@ impl LoadGenerator {
     where
         F: FnMut(usize, &crate::datagen::VehicleZip),
     {
-        let schedule = pattern.send_times();
         let origin = self.clock.now_s();
         let sent_series = self
             .tsdb
@@ -243,14 +378,14 @@ impl LoadGenerator {
             .as_ref()
             .map(|db| db.series("load_bytes", &[]));
         let mut report = LoadReport {
-            requested: schedule.len() as u64,
+            requested: pattern.total_records(),
             sent: 0,
             bytes: 0,
             start_s: f64::NAN,
             end_s: f64::NAN,
             max_lateness_s: 0.0,
         };
-        for (i, &t_due) in schedule.iter().enumerate() {
+        for (i, t_due) in pattern.arrivals().enumerate() {
             let now_rel = self.clock.now_s() - origin;
             if t_due > now_rel {
                 self.clock.sleep_s(t_due - now_rel);
@@ -312,6 +447,24 @@ mod tests {
     }
 
     #[test]
+    fn arrivals_stream_matches_send_times_bit_for_bit() {
+        for p in [
+            LoadPattern::ramp(120.0, 0.0, 40.0),
+            LoadPattern::steady(5.0, 2.0),
+            LoadPattern::steady(10.0, 1.0).then(10.0, 1.0, 3.0),
+            LoadPattern::bursty(60.0, 1.0, 15.0, 5.0, 6.0),
+            LoadPattern::ramp(10.0, 10.0, 0.0),
+        ] {
+            let eager = p.send_times();
+            let lazy: Vec<f64> = p.arrivals().collect();
+            assert_eq!(eager.len(), lazy.len());
+            for (a, b) in eager.iter().zip(&lazy) {
+                assert_eq!(a.to_bits(), b.to_bits(), "stream diverged from schedule");
+            }
+        }
+    }
+
+    #[test]
     fn ramp_send_times_match_cumulative_area() {
         let p = LoadPattern::ramp(120.0, 0.0, 40.0);
         let times = p.send_times();
@@ -354,6 +507,49 @@ mod tests {
         // density should be higher early: first half has more sends
         let first_half = times.iter().filter(|&&t| t < 5.0).count();
         assert!(first_half > times.len() / 2);
+    }
+
+    #[test]
+    fn bursty_pattern_alternates_and_integrates() {
+        // 45 s: 3 × (10 s quiet @ 1 + 5 s burst @ 7) = 3 × (10 + 35) = 135
+        let p = LoadPattern::bursty(45.0, 1.0, 15.0, 5.0, 7.0);
+        assert_eq!(p.total_records(), 135);
+        assert!((p.total_duration_s() - 45.0).abs() < 1e-9);
+        assert_eq!(p.rate_at(5.0), 1.0);
+        assert_eq!(p.rate_at(12.0), 7.0);
+        // sends cluster inside the bursts
+        let times = p.send_times();
+        assert_eq!(times.len(), 135);
+        let in_first_burst = times.iter().filter(|&&t| (10.0..15.0).contains(&t)).count();
+        assert!(in_first_burst > 30, "burst window underpopulated");
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn bursty_truncates_at_duration() {
+        // duration cuts mid-burst: pattern must still end at exactly 22 s
+        let p = LoadPattern::bursty(22.0, 1.0, 10.0, 4.0, 3.0);
+        assert!((p.total_duration_s() - 22.0).abs() < 1e-9);
+        assert!(p.send_times().iter().all(|&t| t <= 22.0 + 1e-9));
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_afternoon() {
+        let p = LoadPattern::diurnal(1, 10.0, 0.8);
+        assert_eq!(p.segments.len(), 24);
+        assert!((p.total_duration_s() - 86_400.0).abs() < 1e-6);
+        // peak around 15:00, trough around 03:00
+        let peak = p.rate_at(15.0 * 3600.0);
+        let trough = p.rate_at(3.0 * 3600.0);
+        assert!(peak > 17.0, "peak {peak}");
+        assert!(trough < 3.0, "trough {trough}");
+        // daily mean stays near the nominal mean
+        let mean = p.total_records() as f64 / p.total_duration_s();
+        assert!((mean - 10.0).abs() < 0.5, "mean {mean}");
+        // two days repeat the cycle
+        let p2 = LoadPattern::diurnal(2, 10.0, 0.8);
+        assert_eq!(p2.segments.len(), 48);
+        assert_eq!(p2.segments[0], p2.segments[24]);
     }
 
     #[test]

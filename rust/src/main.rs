@@ -58,7 +58,16 @@ CAMPAIGN OPTIONS
   --threads N        worker threads for the cell grid (default 4)
   --seed S           campaign master seed, decimal or 0x-hex (default
                      0xD5); same seed reproduces byte-identical numbers
+  --grid NAME        paper (default) or extended (adds burst + drain
+                     load cases)
+  --dry-run          enumerate the grid cells (with derived seeds) and
+                     exit without executing anything
   --out DIR          also write the report JSON to DIR/campaign.json
+
+EXPERIMENT OPTIONS
+  --mode M           real (default): threaded wall-clock wind tunnel;
+                     sim: the same stages in virtual time on the sim
+                     kernel; both: run both and print the delta
 
 COMMON OPTIONS
   --variant blocking-write|no-blocking-write|cpu-limited|all
@@ -161,9 +170,8 @@ fn variants_for(args: &Args) -> Result<Vec<VariantConfig>, anyhow::Error> {
     })
 }
 
-fn run_experiments(
-    args: &Args,
-) -> Result<(ExperimentHarness, Vec<ExperimentRecord>), anyhow::Error> {
+/// The shared harness + the paper's ramp experiment, from CLI options.
+fn paper_experiment(args: &Args) -> Result<(ExperimentHarness, Experiment), anyhow::Error> {
     let scale = args.opt_f64("scale", 60.0).map_err(anyhow::Error::msg)?;
     let harness = ExperimentHarness::new(scale);
     let pattern = paper_pattern(args)?;
@@ -173,7 +181,14 @@ fn run_experiments(
         bad_rate: 0.01,
         seed: 0xD5,
     });
-    let exp = Experiment::new("telematics-ramp", pattern, dataset);
+    Ok((harness, Experiment::new("telematics-ramp", pattern, dataset)))
+}
+
+fn run_experiments(
+    args: &Args,
+) -> Result<(ExperimentHarness, Vec<ExperimentRecord>), anyhow::Error> {
+    let scale = args.opt_f64("scale", 60.0).map_err(anyhow::Error::msg)?;
+    let (harness, exp) = paper_experiment(args)?;
     let mut records = Vec::new();
     for cfg in variants_for(args)? {
         eprintln!(
@@ -193,15 +208,47 @@ fn run_experiments(
 }
 
 fn cmd_experiment(args: &Args) -> Result<Vec<ExperimentRecord>, anyhow::Error> {
-    let (harness, records) = run_experiments(args)?;
-    println!("{}", report::table3_experiments(&records));
-    let dir = out_dir(args);
-    std::fs::create_dir_all(&dir)?;
-    for rec in &records {
-        report::fig8_csv(&dir, &harness.tsdb, rec.variant, rec.started_s, rec.drained_s, 5.0)?;
+    match args.opt_or("mode", "real").as_str() {
+        "real" => {
+            let (harness, records) = run_experiments(args)?;
+            println!("{}", report::table3_experiments(&records));
+            let dir = out_dir(args);
+            std::fs::create_dir_all(&dir)?;
+            for rec in &records {
+                report::fig8_csv(&dir, &harness.tsdb, rec.variant, rec.started_s, rec.drained_s, 5.0)?;
+            }
+            println!("fig8 CSVs written to {}", dir.display());
+            Ok(records)
+        }
+        "sim" => {
+            let (harness, exp) = paper_experiment(args)?;
+            let mut records = Vec::new();
+            for cfg in variants_for(args)? {
+                eprintln!(
+                    "simulating {} in virtual time ({} records)...",
+                    cfg.name,
+                    exp.pattern.total_records()
+                );
+                records.push(harness.simulate(&cfg, &exp)?);
+            }
+            println!("{}", report::table3_experiments(&records));
+            Ok(records)
+        }
+        "both" => {
+            let (harness, exp) = paper_experiment(args)?;
+            let mut records = Vec::new();
+            println!("-- measured vs simulated (same variant, same schedule) --");
+            for cfg in variants_for(args)? {
+                eprintln!("running {} measured + simulated...", cfg.name);
+                let delta = harness.run_with_sim(&cfg, &exp)?;
+                print!("{}", delta.render());
+                records.push(delta.real);
+            }
+            println!("\n{}", report::table3_experiments(&records));
+            Ok(records)
+        }
+        other => Err(anyhow::anyhow!("unknown --mode '{other}' (real|sim|both)")),
     }
-    println!("fig8 CSVs written to {}", dir.display());
-    Ok(records)
 }
 
 fn cmd_fit(args: &Args) -> CmdResult {
@@ -330,7 +377,11 @@ fn opt_seed(args: &Args, name: &str, default: u64) -> Result<u64, anyhow::Error>
 fn cmd_campaign(args: &Args) -> CmdResult {
     let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
     let seed = opt_seed(args, "seed", 0xD5)?;
-    let campaign = Campaign::paper_automotive(seed);
+    let campaign = match args.opt_or("grid", "paper").as_str() {
+        "paper" => Campaign::paper_automotive(seed),
+        "extended" => Campaign::paper_automotive_extended(seed),
+        other => anyhow::bail!("unknown --grid '{other}' (paper|extended)"),
+    };
     eprintln!(
         "campaign '{}': {} variants × {} loads × {} datasets = {} cells on {} threads",
         campaign.name,
@@ -340,6 +391,26 @@ fn cmd_campaign(args: &Args) -> CmdResult {
         campaign.n_cells(),
         threads
     );
+    if args.flag("dry-run") {
+        println!(
+            "DRY RUN: campaign '{}' (seed {:#x}), {} cells:",
+            campaign.name,
+            campaign.seed,
+            campaign.n_cells()
+        );
+        for spec in campaign.cells() {
+            println!(
+                "  #{:>3}  {:<18} × {:<12} × {:<12}  cell-seed {:#018x}  ({} sends)",
+                spec.index,
+                spec.variant.name,
+                spec.load.name,
+                spec.dataset_name,
+                spec.seed,
+                spec.load.pattern.total_records(),
+            );
+        }
+        return Ok(());
+    }
     let report = CampaignRunner::new(threads).run(&campaign);
     println!("{}", report.render());
     if let Some(dir) = args.opt("out") {

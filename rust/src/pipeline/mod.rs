@@ -25,5 +25,8 @@
 mod stages;
 mod variant;
 
-pub use stages::{EtlStage, Stage, StageContext, StageRunner, UnzipperStage, V2xStage};
+pub use stages::{
+    BinMsg, EtlStage, RowsMsg, Stage, StageContext, StageOutput, StageRunner, StageStats,
+    UnzipperStage, V2xStage, V2xWrite, ZipMsg,
+};
 pub use variant::{PipelineDeployment, PipelineHandle, VariantConfig, WriteMode};

@@ -332,14 +332,18 @@ fn unflatten(flat: Vec<f32>, rows: usize, cols: usize) -> Vec<Vec<f64>> {
 }
 
 /// Best available backend: PJRT if the feature is compiled in and the
-/// artifacts are present, otherwise the native evaluator (with a warning
-/// to stderr).
+/// artifacts are present, otherwise the native evaluator. The fallback
+/// warning is emitted **once per process** (callers probe the backend
+/// repeatedly — benches, the demo subcommand — and a warning per call is
+/// noise, not signal).
 pub fn default_backend(artifacts_dir: &Path) -> Box<dyn SimBackend> {
+    static FALLBACK_WARNED: std::sync::Once = std::sync::Once::new();
     match Engine::load(artifacts_dir) {
         Ok(engine) => Box::new(engine),
         Err(e) => {
-            eprintln!(
-                "warning: PJRT artifacts unavailable ({e:#}); using native evaluator"
+            crate::util::log::warn_once(
+                &FALLBACK_WARNED,
+                &format!("PJRT artifacts unavailable ({e:#}); using native evaluator"),
             );
             Box::new(native::NativeBackend)
         }
@@ -397,5 +401,9 @@ mod tests {
     fn default_backend_falls_back_to_native() {
         let backend = default_backend(Path::new("/nonexistent/artifacts"));
         assert_eq!(backend.name(), "native");
+        // repeated probes keep working (and the fallback warning is
+        // emitted at most once per process — see util::log::warn_once)
+        let again = default_backend(Path::new("/also/nonexistent"));
+        assert_eq!(again.name(), "native");
     }
 }

@@ -1,0 +1,45 @@
+//! The shared discrete-event simulation kernel.
+//!
+//! PlantD is a wind tunnel: the same pipeline definition must be
+//! *measurable* under real load and *simulable* under projected load, and
+//! the numbers must be comparable. Before this module existed the repo
+//! had three disjoint execution paths — the wall-clock thread pipeline
+//! (`pipeline` + `experiment`), a private discrete-event simulator inside
+//! `campaign`, and the year-scale FIFO twin (`runtime` + `bizsim`). They
+//! now share one kernel:
+//!
+//! - [`Kernel`] / [`EventQueue`] — a binary-heap event queue with stable
+//!   `(time, sequence)` tie-breaking, so same-seed runs replay
+//!   bit-identically at any thread count;
+//! - [`SimClock`] — virtual time behind the same
+//!   [`crate::util::clock::Clock`] trait as the wall-clock
+//!   `ScaledClock`, so stages, blob stores and warehouse tables run
+//!   unmodified in either mode;
+//! - [`derive_seed`] / [`Kernel::entity_rng`] — per-entity RNG streams
+//!   derived from one master seed;
+//! - [`Station`] — a queueing primitive with configurable service
+//!   discipline, server count, batch size, queue capacity and
+//!   backpressure policy;
+//! - [`Tandem`] — a series of stations driven by one event loop, the
+//!   execution shape of every PlantD pipeline.
+//!
+//! Consumers:
+//!
+//! - `campaign::cell` runs every campaign grid cell through a [`Tandem`]
+//!   with pre-sampled service jitter (bit-replayable reports);
+//! - `experiment::sim` executes the *real* pipeline stages in virtual
+//!   time, so a variant can be measured and simulated from the same code
+//!   and the delta reported;
+//! - `loadgen::ArrivalStream` feeds both modes (and the
+//!   `TrafficModel`-derived patterns) identical arrival schedules.
+//!
+//! See `docs/SIMULATION.md` for event ordering, seeding, and Station
+//! semantics in detail.
+
+mod kernel;
+mod station;
+mod tandem;
+
+pub use kernel::{derive_seed, EventQueue, Kernel, SimClock};
+pub use station::{Discipline, Offered, QueuePolicy, Station, StationConfig, StationStats};
+pub use tandem::{Served, Tandem, TandemOutcome};

@@ -1,0 +1,381 @@
+//! [`Station`]: the reusable queueing primitive of the sim kernel.
+//!
+//! A station is a pool of identical servers in front of a queue. Its
+//! behaviour is fully described by a [`StationConfig`]:
+//!
+//! - **servers** — how many jobs may be in service at once;
+//! - **discipline** — the order waiting jobs are served in
+//!   ([`Discipline::Fifo`] or [`Discipline::Lifo`]);
+//! - **batch_max** — how many queued jobs one server takes per service
+//!   (an ETL stage that amortizes a per-batch insert cost sets this > 1);
+//! - **policy** — what happens when the queue is full
+//!   ([`QueuePolicy::Unbounded`] never is; [`QueuePolicy::DropNewest`]
+//!   sheds the arriving job; [`QueuePolicy::Block`] parks arrivals in a
+//!   backpressure buffer that drains into the queue as space frees —
+//!   modeling an upstream buffer absorbing the stall).
+//!
+//! A `Station` is pure state: the event loop (see [`crate::sim::Tandem`])
+//! owns time. `offer` admits an arrival, `start_batch` hands an idle
+//! server a batch to serve, `complete` returns the server. Per-station
+//! counters accumulate in [`StationStats`].
+
+use std::collections::VecDeque;
+
+/// Order in which waiting jobs are taken from the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// First in, first out (the default; what a Kafka partition does).
+    Fifo,
+    /// Last in, first out (a stack — useful for freshest-first caches).
+    Lifo,
+}
+
+/// What a full queue does with new arrivals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// No bound; every arrival is admitted.
+    Unbounded,
+    /// Bounded queue; arrivals beyond `capacity` waiting jobs are
+    /// dropped (load shedding). Drops are counted in
+    /// [`StationStats::dropped`].
+    DropNewest {
+        /// Maximum number of *waiting* jobs (jobs in service don't count).
+        capacity: usize,
+    },
+    /// Bounded queue; arrivals beyond `capacity` park in an unbounded
+    /// backpressure buffer and are admitted FIFO as the queue drains.
+    /// Parked arrivals are counted in [`StationStats::backpressured`].
+    Block {
+        /// Maximum number of *waiting* jobs (jobs in service don't count).
+        capacity: usize,
+    },
+}
+
+impl QueuePolicy {
+    /// The queue bound, if any.
+    pub fn capacity(&self) -> Option<usize> {
+        match self {
+            QueuePolicy::Unbounded => None,
+            QueuePolicy::DropNewest { capacity } | QueuePolicy::Block { capacity } => {
+                Some(*capacity)
+            }
+        }
+    }
+}
+
+/// Everything that defines a station's queueing behaviour.
+#[derive(Debug, Clone)]
+pub struct StationConfig {
+    /// Display name (appears in stats and reports).
+    pub name: String,
+    /// Parallel servers (≥ 1).
+    pub servers: usize,
+    /// Max queued jobs taken per service (≥ 1).
+    pub batch_max: usize,
+    /// Service order for waiting jobs.
+    pub discipline: Discipline,
+    /// Full-queue behaviour.
+    pub policy: QueuePolicy,
+}
+
+impl StationConfig {
+    /// A single-server FIFO station with an unbounded queue and batch
+    /// size 1 — the tandem-queue default.
+    pub fn single(name: &str) -> Self {
+        StationConfig {
+            name: name.to_string(),
+            servers: 1,
+            batch_max: 1,
+            discipline: Discipline::Fifo,
+            policy: QueuePolicy::Unbounded,
+        }
+    }
+
+    /// Set the server count (builder style).
+    pub fn with_servers(mut self, servers: usize) -> Self {
+        assert!(servers >= 1, "a station needs at least one server");
+        self.servers = servers;
+        self
+    }
+
+    /// Set the per-service batch size (builder style).
+    pub fn with_batch(mut self, batch_max: usize) -> Self {
+        assert!(batch_max >= 1, "batch size must be at least 1");
+        self.batch_max = batch_max;
+        self
+    }
+
+    /// Set the service discipline (builder style).
+    pub fn with_discipline(mut self, discipline: Discipline) -> Self {
+        self.discipline = discipline;
+        self
+    }
+
+    /// Set the full-queue policy (builder style).
+    pub fn with_policy(mut self, policy: QueuePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+}
+
+/// Per-station counters, accumulated over one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct StationStats {
+    /// Station name (copied from the config).
+    pub name: String,
+    /// Jobs that arrived (admitted + dropped + backpressured).
+    pub offered: u64,
+    /// Jobs whose service completed.
+    pub served: u64,
+    /// Jobs shed by [`QueuePolicy::DropNewest`].
+    pub dropped: u64,
+    /// Jobs that had to wait in the backpressure buffer
+    /// ([`QueuePolicy::Block`]).
+    pub backpressured: u64,
+    /// Service batches started (= spans, for batch_max 1).
+    pub batches: u64,
+    /// Total service time across all servers, virtual seconds.
+    pub busy_s: f64,
+    /// High-water mark of the waiting queue.
+    pub max_queue: usize,
+}
+
+/// Outcome of offering one arrival to a station.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Offered {
+    /// Admitted to the waiting queue.
+    Queued,
+    /// Shed (bounded queue with [`QueuePolicy::DropNewest`]).
+    Dropped,
+    /// Parked in the backpressure buffer ([`QueuePolicy::Block`]).
+    Blocked,
+}
+
+/// Runtime state of one station (see the module docs for semantics).
+pub struct Station<T> {
+    cfg: StationConfig,
+    /// Idle server ids (a stack: reuse the most recently freed server,
+    /// which is deterministic and cache-friendly).
+    idle: Vec<usize>,
+    queue: VecDeque<T>,
+    blocked: VecDeque<T>,
+    stats: StationStats,
+}
+
+impl<T> Station<T> {
+    /// A station in its initial (all-idle, empty-queue) state.
+    pub fn new(cfg: StationConfig) -> Self {
+        assert!(cfg.servers >= 1, "a station needs at least one server");
+        assert!(cfg.batch_max >= 1, "batch size must be at least 1");
+        let stats = StationStats {
+            name: cfg.name.clone(),
+            ..StationStats::default()
+        };
+        Station {
+            idle: (0..cfg.servers).collect(),
+            cfg,
+            queue: VecDeque::new(),
+            blocked: VecDeque::new(),
+            stats,
+        }
+    }
+
+    /// The station's configuration.
+    pub fn config(&self) -> &StationConfig {
+        &self.cfg
+    }
+
+    /// Admit one arriving job, applying the queue policy.
+    pub fn offer(&mut self, job: T) -> Offered {
+        self.stats.offered += 1;
+        if let Some(cap) = self.cfg.policy.capacity() {
+            if self.queue.len() >= cap {
+                return match self.cfg.policy {
+                    QueuePolicy::DropNewest { .. } => {
+                        self.stats.dropped += 1;
+                        Offered::Dropped
+                    }
+                    QueuePolicy::Block { .. } => {
+                        self.stats.backpressured += 1;
+                        self.blocked.push_back(job);
+                        Offered::Blocked
+                    }
+                    QueuePolicy::Unbounded => unreachable!("unbounded has no capacity"),
+                };
+            }
+        }
+        self.enqueue(job);
+        Offered::Queued
+    }
+
+    fn enqueue(&mut self, job: T) {
+        match self.cfg.discipline {
+            Discipline::Fifo => self.queue.push_back(job),
+            Discipline::Lifo => self.queue.push_front(job),
+        }
+        self.stats.max_queue = self.stats.max_queue.max(self.queue.len());
+    }
+
+    /// If a server is idle and jobs are waiting, dequeue up to
+    /// `batch_max` jobs and return `(server id, batch)`; the caller
+    /// schedules the batch's completion. Freed queue space is refilled
+    /// from the backpressure buffer.
+    pub fn start_batch(&mut self) -> Option<(usize, Vec<T>)> {
+        if self.queue.is_empty() || self.idle.is_empty() {
+            return None;
+        }
+        let server = self.idle.pop().expect("checked non-empty");
+        let n = self.cfg.batch_max.min(self.queue.len());
+        let jobs: Vec<T> = (0..n)
+            .map(|_| self.queue.pop_front().expect("checked length"))
+            .collect();
+        // admit parked arrivals into the freed queue space, oldest first
+        if let Some(cap) = self.cfg.policy.capacity() {
+            while self.queue.len() < cap {
+                match self.blocked.pop_front() {
+                    Some(j) => self.enqueue(j),
+                    None => break,
+                }
+            }
+        }
+        self.stats.batches += 1;
+        Some((server, jobs))
+    }
+
+    /// Record the service time of a batch that just started (kept
+    /// separate from [`Station::start_batch`] so the caller can compute
+    /// the duration by actually executing the work).
+    pub fn note_busy(&mut self, service_s: f64) {
+        self.stats.busy_s += service_s;
+    }
+
+    /// Return a server to the idle pool after its batch of `n_jobs`
+    /// completed.
+    pub fn complete(&mut self, server: usize, n_jobs: usize) {
+        debug_assert!(server < self.cfg.servers);
+        self.idle.push(server);
+        self.stats.served += n_jobs as u64;
+    }
+
+    /// Whether the station holds no work (all servers idle, queues empty).
+    pub fn is_quiescent(&self) -> bool {
+        self.queue.is_empty() && self.blocked.is_empty() && self.idle.len() == self.cfg.servers
+    }
+
+    /// The accumulated counters.
+    pub fn stats(&self) -> &StationStats {
+        &self.stats
+    }
+
+    /// Consume the station, returning its counters.
+    pub fn into_stats(self) -> StationStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_serves_in_arrival_order() {
+        let mut s: Station<u32> = Station::new(StationConfig::single("s"));
+        s.offer(1);
+        s.offer(2);
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(s.start_batch().is_none(), "single server is busy");
+        s.complete(srv, batch.len());
+        let (_, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![2]);
+    }
+
+    #[test]
+    fn lifo_serves_newest_first() {
+        let mut s: Station<u32> =
+            Station::new(StationConfig::single("s").with_discipline(Discipline::Lifo));
+        s.offer(1);
+        s.offer(2);
+        s.offer(3);
+        let (_, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![3]);
+    }
+
+    #[test]
+    fn drop_newest_sheds_beyond_capacity() {
+        let mut s: Station<u32> =
+            Station::new(StationConfig::single("s").with_policy(QueuePolicy::DropNewest {
+                capacity: 2,
+            }));
+        assert_eq!(s.offer(1), Offered::Queued);
+        assert_eq!(s.offer(2), Offered::Queued);
+        assert_eq!(s.offer(3), Offered::Dropped);
+        assert_eq!(s.stats().dropped, 1);
+        assert_eq!(s.stats().offered, 3);
+    }
+
+    #[test]
+    fn block_parks_and_readmits_in_order() {
+        let mut s: Station<u32> =
+            Station::new(StationConfig::single("s").with_policy(QueuePolicy::Block {
+                capacity: 1,
+            }));
+        assert_eq!(s.offer(1), Offered::Queued);
+        assert_eq!(s.offer(2), Offered::Blocked);
+        assert_eq!(s.offer(3), Offered::Blocked);
+        assert_eq!(s.stats().backpressured, 2);
+        // starting service on 1 frees a slot → 2 is admitted, 3 waits
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        s.complete(srv, 1);
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![2]);
+        s.complete(srv, 1);
+        let (_, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![3]);
+    }
+
+    #[test]
+    fn batching_takes_up_to_batch_max() {
+        let mut s: Station<u32> = Station::new(StationConfig::single("s").with_batch(3));
+        for i in 0..5 {
+            s.offer(i);
+        }
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+        s.complete(srv, batch.len());
+        let (_, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![3, 4]);
+        assert_eq!(s.stats().batches, 2);
+    }
+
+    #[test]
+    fn multi_server_runs_in_parallel() {
+        let mut s: Station<u32> = Station::new(StationConfig::single("s").with_servers(2));
+        s.offer(1);
+        s.offer(2);
+        s.offer(3);
+        let a = s.start_batch().unwrap();
+        let b = s.start_batch().unwrap();
+        assert_ne!(a.0, b.0, "two distinct servers");
+        assert!(s.start_batch().is_none(), "both servers busy");
+        s.complete(a.0, 1);
+        assert!(s.start_batch().is_some());
+    }
+
+    #[test]
+    fn quiescence_and_counters() {
+        let mut s: Station<u32> = Station::new(StationConfig::single("s"));
+        assert!(s.is_quiescent());
+        s.offer(1);
+        assert!(!s.is_quiescent());
+        let (srv, batch) = s.start_batch().unwrap();
+        s.note_busy(0.5);
+        s.complete(srv, batch.len());
+        assert!(s.is_quiescent());
+        let st = s.into_stats();
+        assert_eq!((st.offered, st.served), (1, 1));
+        assert_eq!(st.busy_s, 0.5);
+        assert_eq!(st.max_queue, 1);
+    }
+}

@@ -1,0 +1,314 @@
+//! [`Tandem`]: a series of [`Station`]s driven by one event loop.
+//!
+//! This is the execution shape every PlantD path reduces to: jobs arrive
+//! at station 0, each service may *fan out* into jobs for the next
+//! station (one vehicle zip becomes five subsystem files), and jobs
+//! completing the last station are collected with their completion
+//! timestamps.
+//!
+//! The caller supplies a **servicer** closure invoked once per service
+//! batch, at the batch's (virtual) start time, with the kernel clock
+//! already positioned there. The servicer decides what the service *is*:
+//!
+//! - the campaign engine returns pre-sampled modeled service times
+//!   (`campaign::cell`), making cells bit-for-bit replayable;
+//! - the virtual-mode experiment executor calls the *real*
+//!   [`crate::pipeline::Stage::process`] implementations, which advance
+//!   the [`super::SimClock`] by exactly their modeled sleeps — the same
+//!   stage code that runs on threads in wall-clock mode
+//!   (`experiment::sim`).
+//!
+//! Determinism: arrivals, fan-out and completions all flow through the
+//! kernel's `(time, seq)`-ordered [`super::EventQueue`], so equal-time
+//! events fire in scheduling order and a run is a pure function of its
+//! inputs.
+
+use std::sync::Arc;
+
+use super::kernel::{Kernel, SimClock};
+use super::station::{Station, StationConfig, StationStats};
+
+/// What a servicer returns for one service batch.
+pub struct Served<T> {
+    /// Duration of the service, virtual seconds (≥ 0, finite).
+    pub service_s: f64,
+    /// Jobs to forward to the next station when the service completes.
+    /// Ignored at the last station (the batch itself is the output).
+    pub next: Vec<T>,
+}
+
+/// Result of running a [`Tandem`] to completion.
+pub struct TandemOutcome<T> {
+    /// `(completion time, job)` for every job that finished the last
+    /// station, in completion order (non-decreasing times).
+    pub completions: Vec<(f64, T)>,
+    /// Final per-station counters, in pipeline order.
+    pub stations: Vec<StationStats>,
+    /// Total events processed by the kernel.
+    pub events: u64,
+}
+
+impl<T> TandemOutcome<T> {
+    /// Virtual time the last job drained (0 if nothing completed).
+    pub fn drained_s(&self) -> f64 {
+        self.completions
+            .iter()
+            .fold(0.0f64, |acc, (t, _)| acc.max(*t))
+    }
+
+    /// Jobs shed across all stations.
+    pub fn dropped(&self) -> u64 {
+        self.stations.iter().map(|s| s.dropped).sum()
+    }
+}
+
+/// Internal event type of the tandem loop.
+enum Ev<T> {
+    /// A job arrives at a station's queue.
+    Arrive { station: usize, job: T },
+    /// A service batch finishes at a station.
+    Complete {
+        station: usize,
+        server: usize,
+        jobs: Vec<T>,
+        next: Vec<T>,
+    },
+}
+
+/// A pipeline of stations executed by one deterministic event loop
+/// (a [`Kernel`] owns the event queue and the virtual clock).
+pub struct Tandem<T> {
+    stations: Vec<Station<T>>,
+    kernel: Kernel<Ev<T>>,
+}
+
+/// Start every batch the station can serve at time `now`, scheduling the
+/// completions. Separate function (not a method) so the borrow of one
+/// station stays disjoint from the kernel.
+fn start_ready<T, F>(
+    station_idx: usize,
+    station: &mut Station<T>,
+    kernel: &mut Kernel<Ev<T>>,
+    now: f64,
+    servicer: &mut F,
+) where
+    F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
+{
+    let clock = kernel.clock();
+    while let Some((server, mut jobs)) = station.start_batch() {
+        // Re-snap the clock to the batch's start: a clock-advancing
+        // servicer (the virtual-mode stages sleep the SimClock forward)
+        // may have moved it while serving a previous batch at this same
+        // instant — every batch starting at `now` must see `now`.
+        clock.set_s(now);
+        let served = servicer(station_idx, now, &mut jobs);
+        assert!(
+            served.service_s >= 0.0 && served.service_s.is_finite(),
+            "service time must be finite and non-negative, got {}",
+            served.service_s
+        );
+        station.note_busy(served.service_s);
+        kernel.schedule_at(
+            now + served.service_s,
+            Ev::Complete {
+                station: station_idx,
+                server,
+                jobs,
+                next: served.next,
+            },
+        );
+    }
+}
+
+impl<T> Tandem<T> {
+    /// A tandem from per-station configs (≥ 1 station), at virtual time 0.
+    pub fn new(configs: Vec<StationConfig>) -> Self {
+        assert!(!configs.is_empty(), "a tandem needs at least one station");
+        Tandem {
+            stations: configs.into_iter().map(Station::new).collect(),
+            kernel: Kernel::new(0),
+        }
+    }
+
+    /// The tandem's virtual clock. Hand it (as a `SharedClock`) to any
+    /// component the servicer drives, so their modeled sleeps advance
+    /// this simulation's time.
+    pub fn clock(&self) -> Arc<SimClock> {
+        self.kernel.clock()
+    }
+
+    /// Run the simulation to quiescence.
+    ///
+    /// `arrivals` yields `(time, job)` pairs for station 0 (any order;
+    /// the kernel sorts). `servicer(station, start_s, batch)` is called
+    /// once per service batch with the clock positioned at `start_s`; it
+    /// returns the service duration and the jobs to forward downstream.
+    pub fn run<I, F>(mut self, arrivals: I, mut servicer: F) -> TandemOutcome<T>
+    where
+        I: IntoIterator<Item = (f64, T)>,
+        F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
+    {
+        for (t, job) in arrivals {
+            self.kernel.schedule_at(t, Ev::Arrive { station: 0, job });
+        }
+        let n_stations = self.stations.len();
+        let mut completions: Vec<(f64, T)> = Vec::new();
+        while let Some((t, ev)) = self.kernel.next_event() {
+            match ev {
+                Ev::Arrive { station, job } => {
+                    self.stations[station].offer(job);
+                    start_ready(station, &mut self.stations[station], &mut self.kernel, t, &mut servicer);
+                }
+                Ev::Complete {
+                    station,
+                    server,
+                    jobs,
+                    next,
+                } => {
+                    self.stations[station].complete(server, jobs.len());
+                    if station + 1 < n_stations {
+                        for job in next {
+                            self.kernel.schedule_at(
+                                t,
+                                Ev::Arrive {
+                                    station: station + 1,
+                                    job,
+                                },
+                            );
+                        }
+                    } else {
+                        completions.extend(jobs.into_iter().map(|j| (t, j)));
+                    }
+                    start_ready(station, &mut self.stations[station], &mut self.kernel, t, &mut servicer);
+                }
+            }
+        }
+        debug_assert!(self.stations.iter().all(Station::is_quiescent));
+        TandemOutcome {
+            completions,
+            events: self.kernel.processed(),
+            stations: self.stations.into_iter().map(Station::into_stats).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::station::QueuePolicy;
+    use crate::util::clock::Clock;
+
+    fn fixed(service_s: f64) -> impl FnMut(usize, f64, &mut Vec<u32>) -> Served<u32> {
+        move |_, _, jobs| Served {
+            service_s,
+            next: jobs.clone(),
+        }
+    }
+
+    #[test]
+    fn single_station_lindley_recurrence() {
+        // arrivals 0, 0.5, 1.0 with unit service: starts 0, 1, 2
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let out = t.run(vec![(0.0, 1u32), (0.5, 2), (1.0, 3)], fixed(1.0));
+        let times: Vec<f64> = out.completions.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+        assert_eq!(out.stations[0].served, 3);
+        assert_eq!(out.stations[0].busy_s, 3.0);
+        assert_eq!(out.drained_s(), 3.0);
+    }
+
+    #[test]
+    fn tandem_propagates_in_order_with_fanout() {
+        // station 0 fans each job into two; station 1 serves them FIFO
+        let t = Tandem::new(vec![StationConfig::single("a"), StationConfig::single("b")]);
+        let out = t.run(vec![(0.0, 10u32), (0.0, 20)], |station, _, jobs| {
+            if station == 0 {
+                Served {
+                    service_s: 1.0,
+                    next: vec![jobs[0], jobs[0] + 1],
+                }
+            } else {
+                Served {
+                    service_s: 0.5,
+                    next: jobs.clone(),
+                }
+            }
+        });
+        let finished: Vec<u32> = out.completions.iter().map(|(_, j)| *j).collect();
+        assert_eq!(finished, vec![10, 11, 20, 21]);
+        // b starts at 1.0 (first fanout) and serves 4 × 0.5 back-to-back
+        let times: Vec<f64> = out.completions.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![1.5, 2.0, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn drop_policy_sheds_under_overload() {
+        let t = Tandem::new(vec![StationConfig::single("s")
+            .with_policy(QueuePolicy::DropNewest { capacity: 1 })]);
+        // all arrive at once: one served, one queued, three dropped
+        let arrivals: Vec<(f64, u32)> = (0..5).map(|i| (0.0, i)).collect();
+        let out = t.run(arrivals, fixed(1.0));
+        assert_eq!(out.completions.len(), 2);
+        assert_eq!(out.dropped(), 3);
+        assert_eq!(out.stations[0].offered, 5);
+    }
+
+    #[test]
+    fn block_policy_conserves_jobs() {
+        let t = Tandem::new(vec![StationConfig::single("s")
+            .with_policy(QueuePolicy::Block { capacity: 1 })]);
+        let arrivals: Vec<(f64, u32)> = (0..5).map(|i| (0.0, i)).collect();
+        let out = t.run(arrivals, fixed(1.0));
+        assert_eq!(out.completions.len(), 5, "blocking must not lose jobs");
+        assert_eq!(out.stations[0].backpressured, 3);
+        assert_eq!(out.drained_s(), 5.0);
+    }
+
+    #[test]
+    fn servicer_sees_positioned_clock() {
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let clock = t.clock();
+        let out = t.run(vec![(0.25, 1u32), (2.0, 2)], move |_, start, jobs| {
+            assert_eq!(clock.now_s(), start, "clock snapped to service start");
+            Served {
+                service_s: 0.5,
+                next: jobs.clone(),
+            }
+        });
+        let times: Vec<f64> = out.completions.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![0.75, 2.5]);
+    }
+
+    #[test]
+    fn multi_server_halves_the_drain_time() {
+        let serial = Tandem::new(vec![StationConfig::single("s")]);
+        let arrivals: Vec<(f64, u32)> = (0..8).map(|i| (0.0, i)).collect();
+        let d1 = serial.run(arrivals.clone(), fixed(1.0)).drained_s();
+        let parallel = Tandem::new(vec![StationConfig::single("s").with_servers(2)]);
+        let d2 = parallel.run(arrivals, fixed(1.0)).drained_s();
+        assert_eq!(d1, 8.0);
+        assert_eq!(d2, 4.0);
+    }
+
+    #[test]
+    fn batch_service_amortizes() {
+        // batching is greedy: the idle server takes the first arrival as
+        // a batch of 1 (it never waits for a batch to fill), then the
+        // queued backlog drains in full batches: [0], [1..5], [5..8]
+        let t = Tandem::new(vec![StationConfig::single("s").with_batch(4)]);
+        let arrivals: Vec<(f64, u32)> = (0..8).map(|i| (0.0, i)).collect();
+        let out = t.run(arrivals, fixed(1.0));
+        assert_eq!(out.stations[0].batches, 3);
+        assert_eq!(out.drained_s(), 3.0);
+        assert_eq!(out.completions.len(), 8);
+    }
+
+    #[test]
+    fn empty_arrivals_is_a_quiescent_noop() {
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let out = t.run(Vec::<(f64, u32)>::new(), fixed(1.0));
+        assert!(out.completions.is_empty());
+        assert_eq!(out.events, 0);
+        assert_eq!(out.drained_s(), 0.0);
+    }
+}

@@ -117,6 +117,44 @@ impl TrafficModel {
         self.project_hourly().iter().sum::<f64>() / HOURS_PER_YEAR as f64
     }
 
+    /// Carve a window of the hourly projection into a
+    /// [`crate::loadgen::LoadPattern`]: one piecewise-linear segment per
+    /// hour, interpolating between consecutive hourly loads (the last
+    /// hour holds its rate). This is how a business forecast becomes a
+    /// *load case*: the resulting pattern is consumed identically by the
+    /// wall-clock load generator, the campaign engine, and the
+    /// [`crate::sim`] kernel — twin scenarios and wind-tunnel runs then
+    /// share one arrival schedule.
+    pub fn to_load_pattern(
+        &self,
+        start_hour: usize,
+        hours: usize,
+    ) -> crate::loadgen::LoadPattern {
+        assert!(hours >= 1, "need at least one hour");
+        assert!(
+            start_hour + hours <= HOURS_PER_YEAR,
+            "window [{start_hour}, {}) exceeds the projected year",
+            start_hour + hours
+        );
+        let load = self.project_hourly();
+        let segments = (start_hour..start_hour + hours)
+            .map(|h| {
+                let start_rps = load[h] / 3600.0;
+                let end_rps = if h + 1 < HOURS_PER_YEAR {
+                    load[h + 1] / 3600.0
+                } else {
+                    start_rps
+                };
+                crate::loadgen::Segment {
+                    duration_s: 3600.0,
+                    start_rps,
+                    end_rps,
+                }
+            })
+            .collect();
+        crate::loadgen::LoadPattern::new(segments)
+    }
+
     /// The paper's *Nominal* projection: 250 k instrumented cars, 50 %
     /// telematics opt-in, ~4 % on the road at any time, one transmission
     /// per driving hour → ≈ 5000 records/hour average; no net growth.
@@ -265,6 +303,36 @@ mod tests {
         let min = h.iter().cloned().fold(f64::MAX, f64::min);
         assert_eq!(max, fri8pm);
         assert_eq!(min, wed6am);
+    }
+
+    #[test]
+    fn to_load_pattern_tracks_the_projection() {
+        let m = TrafficModel::nominal();
+        let load = m.project_hourly();
+        // a Friday-evening window (first Friday, 18:00–22:00)
+        let start = 4 * 24 + 18;
+        let p = m.to_load_pattern(start, 4);
+        assert_eq!(p.segments.len(), 4);
+        assert!((p.total_duration_s() - 4.0 * 3600.0).abs() < 1e-6);
+        // rates are the hourly projection divided into rec/s
+        assert!((p.segments[0].start_rps - load[start] / 3600.0).abs() < 1e-12);
+        assert!((p.segments[0].end_rps - load[start + 1] / 3600.0).abs() < 1e-12);
+        // total offered records ≈ trapezoidal integral of the window
+        let area: f64 = (start..start + 4)
+            .map(|h| (load[h] + load[h + 1]) / 2.0)
+            .sum();
+        let offered = p.total_records() as f64;
+        assert!((offered - area).abs() <= 1.0, "offered {offered} vs {area}");
+        // the arrival stream is consumable like any other pattern
+        let times: Vec<f64> = p.arrivals().collect();
+        assert_eq!(times.len() as u64, p.total_records());
+        assert!(times.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the projected year")]
+    fn to_load_pattern_rejects_out_of_year_window() {
+        TrafficModel::nominal().to_load_pattern(HOURS_PER_YEAR - 2, 3);
     }
 
     #[test]

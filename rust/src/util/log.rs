@@ -1,0 +1,41 @@
+//! Minimal diagnostics logging (a `log`-crate stand-in).
+//!
+//! PlantD's library code must not chat on stderr from hot paths, and
+//! repeated fallback warnings (one per call) drown real signal. This
+//! module gives the two primitives the codebase needs: a uniformly
+//! formatted [`warn`], and [`warn_once`] for per-process one-shot
+//! warnings gated by a caller-owned [`Once`].
+
+use std::sync::Once;
+
+/// Emit a warning to stderr, uniformly prefixed.
+pub fn warn(msg: &str) {
+    eprintln!("warning: {msg}");
+}
+
+/// Emit a warning at most once per `gate` (typically a
+/// `static Once`). Returns whether this call actually emitted, so
+/// callers (and tests) can observe the dedup.
+pub fn warn_once(gate: &Once, msg: &str) -> bool {
+    let mut emitted = false;
+    gate.call_once(|| {
+        warn(msg);
+        emitted = true;
+    });
+    emitted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warn_once_emits_exactly_once_per_gate() {
+        let gate = Once::new();
+        assert!(warn_once(&gate, "first"));
+        assert!(!warn_once(&gate, "second (suppressed)"));
+        assert!(!warn_once(&gate, "third (suppressed)"));
+        let other = Once::new();
+        assert!(warn_once(&other, "different gate emits"));
+    }
+}

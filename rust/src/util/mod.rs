@@ -11,6 +11,7 @@ pub mod cli;
 pub mod clock;
 pub mod csv;
 pub mod json;
+pub mod log;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

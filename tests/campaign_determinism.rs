@@ -61,6 +61,64 @@ fn four_cells_on_four_threads_match_serial() {
 }
 
 #[test]
+fn one_vs_eight_threads_byte_identical() {
+    // the sim-kernel regression gate: the same seed must produce
+    // byte-identical reports whether cells run serially or on 8 workers
+    // (more workers than cells — oversubscription must also be safe)
+    let campaign = four_cell_campaign(0x51A7E);
+    let serial = CampaignRunner::new(1).run(&campaign);
+    let wide = CampaignRunner::new(8).run(&campaign);
+    assert_eq!(
+        serial.to_json().to_string_pretty().as_bytes(),
+        wide.to_json().to_string_pretty().as_bytes(),
+        "1-thread and 8-thread reports must be byte-identical"
+    );
+    assert_eq!(serial.render(), wide.render());
+}
+
+#[test]
+fn paper_automotive_same_seed_replays_byte_identical() {
+    // the acceptance grid itself: Campaign::paper_automotive is the
+    // published comparison, so its replay guarantee gets its own gate
+    let a = CampaignRunner::new(4).run(&Campaign::paper_automotive(0xD5));
+    let b = CampaignRunner::new(2).run(&Campaign::paper_automotive(0xD5));
+    assert_eq!(
+        a.to_json().to_string_pretty().as_bytes(),
+        b.to_json().to_string_pretty().as_bytes(),
+    );
+}
+
+#[test]
+fn burst_load_campaign_is_deterministic_too() {
+    // the new burst-style LoadCase through the shared kernel, end to end
+    let extended = Campaign::paper_automotive_extended(0xBADCAB);
+    assert!(extended.loads.iter().any(|l| l.name == "burst-3x"));
+    let small = Campaign::new("burst-det", 0xBADCAB)
+        .variant(plantd::pipeline::VariantConfig::blocking_write())
+        .load(
+            "burst",
+            LoadPattern::bursty(30.0, 1.0, 10.0, 2.0, 5.0),
+        )
+        .dataset(
+            "tiny",
+            DataSetSpec {
+                payloads: 3,
+                records_per_subsystem: 2,
+                bad_rate: 0.0,
+                seed: 0,
+            },
+        );
+    let a = CampaignRunner::new(4).run(&small);
+    let b = CampaignRunner::new(1).run(&small);
+    assert_eq!(
+        a.to_json().to_string_pretty().as_bytes(),
+        b.to_json().to_string_pretty().as_bytes(),
+    );
+    assert!(a.cells[0].zips > 0);
+    assert_eq!(a.cells[0].files, a.cells[0].zips * 5);
+}
+
+#[test]
 fn ranking_is_deterministic_and_complete() {
     let report = CampaignRunner::new(3).run(&four_cell_campaign(0xAB));
     let r1: Vec<String> = report.ranking().iter().map(|c| c.variant.clone()).collect();

@@ -62,6 +62,51 @@ fn prop_load_schedule_is_monotone_and_area_consistent() {
 }
 
 #[test]
+fn prop_arrival_count_matches_total_records_and_is_monotone() {
+    // the ISSUE-2 satellite property: for steady, ramp, and composed
+    // patterns, send_times().len() == total_records(), inter-arrival
+    // times are non-negative (monotone schedule), and the lazy
+    // ArrivalStream agrees with the eager schedule bit-for-bit
+    check("arrival-count-monotone", 80, |rng| {
+        let p = match rng.int_range(0, 3) {
+            0 => LoadPattern::steady(rng.uniform(0.5, 120.0), rng.uniform(0.05, 25.0)),
+            1 => LoadPattern::ramp(
+                rng.uniform(0.5, 120.0),
+                rng.uniform(0.05, 25.0),
+                rng.uniform(0.05, 25.0),
+            ),
+            2 => LoadPattern::bursty(
+                rng.uniform(20.0, 90.0),
+                rng.uniform(0.05, 2.0),
+                rng.uniform(5.0, 20.0),
+                rng.uniform(1.0, 4.0),
+                rng.uniform(2.0, 12.0),
+            ),
+            _ => random_pattern(rng), // composed multi-segment
+        };
+        let times = p.send_times();
+        assert_eq!(
+            times.len() as u64,
+            p.total_records(),
+            "count != area for {:?}",
+            p.segments
+        );
+        assert!(times.iter().all(|&t| t >= 0.0), "negative send time");
+        for w in times.windows(2) {
+            assert!(w[1] - w[0] >= 0.0, "negative inter-arrival time");
+        }
+        if let Some(&last) = times.last() {
+            assert!(last <= p.total_duration_s() + 1e-6, "send after pattern end");
+        }
+        // the lazy stream is the same schedule, bit for bit
+        for (eager, lazy) in times.iter().zip(p.arrivals()) {
+            assert_eq!(eager.to_bits(), lazy.to_bits(), "stream != schedule");
+        }
+        assert_eq!(p.arrivals().count(), times.len());
+    });
+}
+
+#[test]
 fn prop_topic_conserves_messages() {
     check("topic-conservation", 25, |rng| {
         let cap = rng.int_range(1, 64) as usize;
