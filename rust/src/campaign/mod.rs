@@ -208,6 +208,17 @@ impl Campaign {
             .load("drain-40-0", LoadPattern::ramp(120.0, 40.0, 0.0))
     }
 
+    /// Resolve a named grid preset — the single construction path the
+    /// resource API and the `plantd campaign` shim both go through.
+    /// Known grids: `paper`, `extended`.
+    pub fn from_grid_name(grid: &str, seed: u64) -> Result<Campaign, String> {
+        match grid {
+            "paper" => Ok(Campaign::paper_automotive(seed)),
+            "extended" => Ok(Campaign::paper_automotive_extended(seed)),
+            other => Err(format!("unknown campaign grid '{other}' (paper|extended)")),
+        }
+    }
+
     /// Number of grid cells (product of the three axes).
     pub fn n_cells(&self) -> usize {
         self.variants.len() * self.loads.len() * self.datasets.len()

@@ -2,6 +2,7 @@
 //! is built from (GoFakeIt's role in the paper's data generator).
 
 use crate::tablestore::Value;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// What a field generates.
@@ -76,6 +77,129 @@ impl FieldSpec {
             return Value::Null;
         }
         self.kind.generate(rng)
+    }
+
+    /// Parse a field from its JSON spec form, e.g.
+    /// `{"name": "rpm", "kind": "int", "lo": 0, "hi": 8000, "bad_rate": 0.01}`.
+    pub fn from_json(j: &Json) -> Result<FieldSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or("field: missing 'name'")?;
+        let kind_s = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("field '{name}': missing 'kind'"))?;
+        let f64_of = |key: &str, default: f64| -> f64 {
+            j.get(key).and_then(Json::as_f64).unwrap_or(default)
+        };
+        let kind = match kind_s {
+            "int" => FieldKind::IntRange {
+                lo: f64_of("lo", 0.0) as i64,
+                hi: f64_of("hi", 100.0) as i64,
+            },
+            "float" => FieldKind::FloatRange {
+                lo: f64_of("lo", 0.0),
+                hi: f64_of("hi", 1.0),
+            },
+            "normal" => FieldKind::NormalClamped {
+                mean: f64_of("mean", 0.0),
+                std: f64_of("std", 1.0),
+                lo: f64_of("lo", f64::NEG_INFINITY),
+                hi: f64_of("hi", f64::INFINITY),
+            },
+            "enum" => {
+                let opts = j
+                    .get("options")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("field '{name}': enum needs 'options'"))?
+                    .iter()
+                    .filter_map(|o| o.as_str().map(str::to_string))
+                    .collect::<Vec<_>>();
+                if opts.is_empty() {
+                    return Err(format!("field '{name}': empty enum options"));
+                }
+                FieldKind::Enum(opts)
+            }
+            "name" => FieldKind::Name,
+            "email" => FieldKind::Email,
+            "vin" => FieldKind::Vin,
+            "latlon" => FieldKind::LatLon,
+            "timestamp" => FieldKind::Timestamp {
+                start: f64_of("start", 1_700_000_000.0) as u64,
+                span_s: f64_of("span_s", 86_400.0) as u64,
+            },
+            "uuid" => FieldKind::Uuid,
+            "bool" => FieldKind::Bool {
+                p_true: f64_of("p_true", 0.5),
+            },
+            "ipv4" => FieldKind::Ipv4,
+            "word" => FieldKind::Word,
+            other => return Err(format!("field '{name}': unknown kind '{other}'")),
+        };
+        let mut spec = FieldSpec::new(name, kind);
+        let bad = f64_of("bad_rate", 0.0);
+        if bad > 0.0 {
+            spec = spec.with_bad_rate(bad);
+        }
+        Ok(spec)
+    }
+
+    /// Serialize to the JSON spec form [`FieldSpec::from_json`] parses.
+    /// Every parameter is emitted explicitly (no defaulting), so
+    /// serialize → parse → serialize is a fixed point.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![("name", Json::str(self.name.clone()))];
+        match &self.kind {
+            FieldKind::IntRange { lo, hi } => {
+                pairs.push(("kind", Json::str("int")));
+                pairs.push(("lo", Json::Num(*lo as f64)));
+                pairs.push(("hi", Json::Num(*hi as f64)));
+            }
+            FieldKind::FloatRange { lo, hi } => {
+                pairs.push(("kind", Json::str("float")));
+                pairs.push(("lo", Json::Num(*lo)));
+                pairs.push(("hi", Json::Num(*hi)));
+            }
+            FieldKind::NormalClamped { mean, std, lo, hi } => {
+                pairs.push(("kind", Json::str("normal")));
+                pairs.push(("mean", Json::Num(*mean)));
+                pairs.push(("std", Json::Num(*std)));
+                if lo.is_finite() {
+                    pairs.push(("lo", Json::Num(*lo)));
+                }
+                if hi.is_finite() {
+                    pairs.push(("hi", Json::Num(*hi)));
+                }
+            }
+            FieldKind::Enum(options) => {
+                pairs.push(("kind", Json::str("enum")));
+                pairs.push((
+                    "options",
+                    Json::arr(options.iter().map(|o| Json::str(o.clone()))),
+                ));
+            }
+            FieldKind::Name => pairs.push(("kind", Json::str("name"))),
+            FieldKind::Email => pairs.push(("kind", Json::str("email"))),
+            FieldKind::Vin => pairs.push(("kind", Json::str("vin"))),
+            FieldKind::LatLon => pairs.push(("kind", Json::str("latlon"))),
+            FieldKind::Timestamp { start, span_s } => {
+                pairs.push(("kind", Json::str("timestamp")));
+                pairs.push(("start", Json::Num(*start as f64)));
+                pairs.push(("span_s", Json::Num(*span_s as f64)));
+            }
+            FieldKind::Uuid => pairs.push(("kind", Json::str("uuid"))),
+            FieldKind::Bool { p_true } => {
+                pairs.push(("kind", Json::str("bool")));
+                pairs.push(("p_true", Json::Num(*p_true)));
+            }
+            FieldKind::Ipv4 => pairs.push(("kind", Json::str("ipv4"))),
+            FieldKind::Word => pairs.push(("kind", Json::str("word"))),
+        }
+        if self.bad_rate > 0.0 {
+            pairs.push(("bad_rate", Json::Num(self.bad_rate)));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -333,6 +457,57 @@ mod tests {
             .filter(|_| matches!(k.generate(&mut r), Value::Int(1)))
             .count();
         assert!((1450..1950).contains(&trues), "trues={trues}");
+    }
+
+    #[test]
+    fn json_roundtrip_is_a_fixed_point() {
+        let fields = vec![
+            FieldSpec::new("a", FieldKind::IntRange { lo: -3, hi: 9000 }),
+            FieldSpec::new("b", FieldKind::FloatRange { lo: 0.5, hi: 2.5 }),
+            FieldSpec::new(
+                "c",
+                FieldKind::NormalClamped {
+                    mean: 1.0,
+                    std: 0.5,
+                    lo: f64::NEG_INFINITY,
+                    hi: 7.0,
+                },
+            ),
+            FieldSpec::new("d", FieldKind::Enum(vec!["P".into(), "D".into()])),
+            FieldSpec::new("e", FieldKind::Vin).with_bad_rate(0.25),
+            FieldSpec::new(
+                "f",
+                FieldKind::Timestamp {
+                    start: 1_700_000_000,
+                    span_s: 3600,
+                },
+            ),
+            FieldSpec::new("g", FieldKind::Bool { p_true: 0.9 }),
+            FieldSpec::new("h", FieldKind::LatLon),
+        ];
+        for f in fields {
+            let j1 = f.to_json();
+            let back = FieldSpec::from_json(&j1).unwrap();
+            let j2 = back.to_json();
+            assert_eq!(
+                j1.to_string_pretty(),
+                j2.to_string_pretty(),
+                "field '{}' round-trip not a fixed point",
+                f.name
+            );
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_fields() {
+        for bad in [
+            r#"{"kind": "int"}"#,
+            r#"{"name": "x"}"#,
+            r#"{"name": "x", "kind": "nope"}"#,
+            r#"{"name": "x", "kind": "enum", "options": []}"#,
+        ] {
+            assert!(FieldSpec::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

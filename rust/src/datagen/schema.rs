@@ -8,7 +8,7 @@ use crate::tablestore::Value;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::field::{FieldKind, FieldSpec};
+use super::field::FieldSpec;
 
 /// A generated record: values in schema field order.
 pub type Record = Vec<Value>;
@@ -67,81 +67,26 @@ impl Schema {
             .ok_or("schema: missing 'fields' array")?;
         let mut fields = Vec::new();
         for f in fields_json {
-            fields.push(field_from_json(f)?);
+            fields.push(FieldSpec::from_json(f)?);
         }
         if fields.is_empty() {
             return Err(format!("schema '{name}': no fields"));
         }
         Ok(Schema::new(name, fields))
     }
-}
 
-fn field_from_json(j: &Json) -> Result<FieldSpec, String> {
-    let name = j
-        .get("name")
-        .and_then(Json::as_str)
-        .ok_or("field: missing 'name'")?;
-    let kind_s = j
-        .get("kind")
-        .and_then(Json::as_str)
-        .ok_or_else(|| format!("field '{name}': missing 'kind'"))?;
-    let f64_of = |key: &str, default: f64| -> f64 {
-        j.get(key).and_then(Json::as_f64).unwrap_or(default)
-    };
-    let kind = match kind_s {
-        "int" => FieldKind::IntRange {
-            lo: f64_of("lo", 0.0) as i64,
-            hi: f64_of("hi", 100.0) as i64,
-        },
-        "float" => FieldKind::FloatRange {
-            lo: f64_of("lo", 0.0),
-            hi: f64_of("hi", 1.0),
-        },
-        "normal" => FieldKind::NormalClamped {
-            mean: f64_of("mean", 0.0),
-            std: f64_of("std", 1.0),
-            lo: f64_of("lo", f64::NEG_INFINITY),
-            hi: f64_of("hi", f64::INFINITY),
-        },
-        "enum" => {
-            let opts = j
-                .get("options")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| format!("field '{name}': enum needs 'options'"))?
-                .iter()
-                .filter_map(|o| o.as_str().map(str::to_string))
-                .collect::<Vec<_>>();
-            if opts.is_empty() {
-                return Err(format!("field '{name}': empty enum options"));
-            }
-            FieldKind::Enum(opts)
-        }
-        "name" => FieldKind::Name,
-        "email" => FieldKind::Email,
-        "vin" => FieldKind::Vin,
-        "latlon" => FieldKind::LatLon,
-        "timestamp" => FieldKind::Timestamp {
-            start: f64_of("start", 1_700_000_000.0) as u64,
-            span_s: f64_of("span_s", 86_400.0) as u64,
-        },
-        "uuid" => FieldKind::Uuid,
-        "bool" => FieldKind::Bool {
-            p_true: f64_of("p_true", 0.5),
-        },
-        "ipv4" => FieldKind::Ipv4,
-        "word" => FieldKind::Word,
-        other => return Err(format!("field '{name}': unknown kind '{other}'")),
-    };
-    let mut spec = FieldSpec::new(name, kind);
-    let bad = f64_of("bad_rate", 0.0);
-    if bad > 0.0 {
-        spec = spec.with_bad_rate(bad);
+    /// Serialize to the JSON spec form [`Schema::from_json`] parses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("fields", Json::arr(self.fields.iter().map(FieldSpec::to_json))),
+        ])
     }
-    Ok(spec)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::field::FieldKind;
     use super::*;
 
     fn demo_schema() -> Schema {
@@ -200,6 +145,16 @@ mod tests {
         let mut rng = Rng::new(4);
         let rec = s.generate(&mut rng);
         assert_eq!(rec.len(), 5);
+    }
+
+    #[test]
+    fn to_json_roundtrip_is_a_fixed_point() {
+        let s = demo_schema();
+        let j1 = s.to_json();
+        let back = Schema::from_json(&j1).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.field_names(), s.field_names());
+        assert_eq!(j1.to_string_pretty(), back.to_json().to_string_pretty());
     }
 
     #[test]

@@ -130,6 +130,27 @@ impl ExperimentRecord {
     pub fn mean_throughput_rec_hr(&self) -> f64 {
         self.mean_throughput_rps * 3600.0
     }
+
+    /// Compact JSON summary of the run (the Table III row plus counters)
+    /// — what the resource controller stores in an Experiment's status.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("experiment", Json::str(self.experiment.clone())),
+            ("variant", Json::str(self.variant)),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("zips_sent", Json::Num(self.zips_sent as f64)),
+            ("mean_throughput_rps", Json::Num(self.mean_throughput_rps)),
+            ("latency_nq_mean_s", Json::Num(self.latency_nq_mean_s)),
+            ("latency_e2e_mean_s", Json::Num(self.latency_e2e_mean_s)),
+            ("latency_e2e_p95_s", Json::Num(self.latency_e2e_p95_s)),
+            ("cost_per_hr_usd", Json::Num(self.cost_per_hr_usd)),
+            ("total_cost_usd", Json::Num(self.total_cost_usd)),
+            ("rows_inserted", Json::Num(self.rows_inserted as f64)),
+            ("rows_scrubbed", Json::Num(self.rows_scrubbed as f64)),
+            ("stage_errors", Json::Num(self.stage_errors as f64)),
+        ])
+    }
 }
 
 /// One variant executed both ways — measured on threads and simulated on

@@ -36,6 +36,18 @@
 //! schemas} — executing every cell in parallel with per-cell deterministic
 //! seeds and isolated telemetry/cost sinks, and ranks the results in
 //! business terms. See `docs/CAMPAIGNS.md`.
+//!
+//! ## The declarative resource API
+//!
+//! Everything above is also drivable declaratively, mirroring the paper's
+//! custom-resource design (Fig. 3): describe Schemas, DataSets,
+//! LoadPatterns, Pipelines, Experiments, TrafficModels, DigitalTwins, and
+//! Simulations as one JSON manifest, apply it to the
+//! [`resources::Registry`], and let the
+//! [`resources::controller::Controller`] reconcile references and execute
+//! the DAG (`plantd apply -f manifest.json && plantd run <kind>/<name>`).
+//! The flag-style subcommands are thin shims that synthesize manifests
+//! and call the same controller. See `docs/RESOURCES.md`.
 
 #![warn(missing_docs)]
 

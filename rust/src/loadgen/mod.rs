@@ -233,16 +233,34 @@ impl LoadPattern {
             if duration_s <= 0.0 {
                 return Err("segment: duration_s must be > 0".into());
             }
+            let (start_rps, end_rps) = (get("start_rps")?, get("end_rps")?);
+            if start_rps < 0.0 || end_rps < 0.0 {
+                return Err("segment: rates must be non-negative".into());
+            }
             out.push(Segment {
                 duration_s,
-                start_rps: get("start_rps")?,
-                end_rps: get("end_rps")?,
+                start_rps,
+                end_rps,
             });
         }
         if out.is_empty() {
             return Err("load pattern: no segments".into());
         }
         Ok(LoadPattern::new(out))
+    }
+
+    /// Serialize to the JSON spec form [`LoadPattern::from_json`] parses.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "segments",
+            Json::arr(self.segments.iter().map(|s| {
+                Json::obj(vec![
+                    ("duration_s", Json::Num(s.duration_s)),
+                    ("start_rps", Json::Num(s.start_rps)),
+                    ("end_rps", Json::Num(s.end_rps)),
+                ])
+            })),
+        )])
     }
 }
 
@@ -566,6 +584,26 @@ mod tests {
         )
         .unwrap();
         assert!(LoadPattern::from_json(&bad).is_err());
+        // negative rates must be a parse error, not a panic
+        let neg = Json::parse(
+            r#"{"segments": [{"duration_s": 5, "start_rps": -2, "end_rps": 1}]}"#,
+        )
+        .unwrap();
+        assert!(LoadPattern::from_json(&neg).is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrip_is_a_fixed_point() {
+        for p in [
+            LoadPattern::ramp(120.0, 0.0, 40.0),
+            LoadPattern::bursty(45.0, 1.0, 15.0, 5.0, 7.0),
+            LoadPattern::steady(10.0, 1.5).then(10.0, 1.5, 3.0),
+        ] {
+            let j1 = p.to_json();
+            let back = LoadPattern::from_json(&j1).unwrap();
+            assert_eq!(back, p);
+            assert_eq!(j1.to_string_pretty(), back.to_json().to_string_pretty());
+        }
     }
 
     #[test]

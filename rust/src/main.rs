@@ -1,6 +1,22 @@
 //! `plantd` — the wind-tunnel CLI (the PlantD-Studio analog).
 //!
-//! Subcommands:
+//! The declarative resource registry is the front door: a manifest of
+//! typed resources (Schema, DataSet, LoadPattern, Pipeline, Experiment,
+//! TrafficModel, DigitalTwin, Simulation) is applied, reconciled, and
+//! executed by the controller. See `docs/RESOURCES.md`.
+//!
+//! ```text
+//! plantd apply -f <manifest.json>      register + reconcile resources
+//! plantd get [kind] [name] [--check]   list resources and phases
+//! plantd describe <kind>/<name>        full spec/status/conditions JSON
+//! plantd run <kind>/<name> | --all     execute Ready resources
+//! plantd delete <kind>/<name>          remove (dependents demote)
+//! ```
+//!
+//! Legacy flag-style subcommands (`experiment`, `campaign`, `simulate`,
+//! …) are thin shims: they synthesize the equivalent manifest (written
+//! under `--out` for reuse) and run it through the same controller, so
+//! there is exactly one construction path.
 //!
 //! ```text
 //! plantd generate  [--payloads N] [--records N] [--seed S]
@@ -23,27 +39,43 @@
 //!     retention → all figure CSVs
 //! ```
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::sync::Once;
 
 use plantd::bizsim::{monthly_costs, simulate_batch, CostSpec, SloSpec};
-use plantd::campaign::{Campaign, CampaignRunner};
+use plantd::campaign::Campaign;
 use plantd::datagen::{DataSet, DataSetSpec};
-use plantd::experiment::{Experiment, ExperimentHarness, ExperimentRecord};
+use plantd::experiment::ExperimentRecord;
 use plantd::loadgen::LoadPattern;
 use plantd::pipeline::VariantConfig;
 use plantd::report;
+use plantd::resources::controller::Controller;
+use plantd::resources::spec::{
+    DataSetSpecRes, DigitalTwinSpec, ExperimentSpec, PipelineSpec, ResourceSpec,
+    SchemaSpec, SimulationSpec, TrafficModelSpec,
+};
+use plantd::resources::{Kind, Phase, Registry};
 use plantd::runtime::{default_backend, SimBackend};
 use plantd::traffic::TrafficModel;
 use plantd::twin::TwinParams;
 use plantd::util::cli::Args;
+use plantd::util::json::Json;
 use plantd::util::units;
 
 const HELP: &str = "plantd — a data-pipeline wind tunnel (PlantD reproduction)
 
 USAGE: plantd <subcommand> [options]
 
-SUBCOMMANDS
+RESOURCE VERBS (the declarative front door, see docs/RESOURCES.md)
+  apply -f FILE      register every resource in a manifest + reconcile
+  get [KIND] [NAME]  list resources (kind, name, phase, condition)
+  describe KIND/NAME full spec, status, and conditions as JSON
+  run KIND/NAME      execute a Ready resource (dependencies run first)
+  run --all          execute everything, dependencies first
+  delete KIND/NAME   remove a resource (Ready dependents demote)
+
+LEGACY SUBCOMMANDS (shims over the same controller)
   generate    synthesize a telematics dataset (--payloads, --records, --seed)
   experiment  run wind-tunnel ramp experiments   -> Table III + fig8 CSVs
   fit         experiments + twin fitting         -> Table I
@@ -53,6 +85,12 @@ SUBCOMMANDS
   campaign    parallel {variant x load x dataset} sweep -> ranked report
   resources   demo the declarative resource registry
   demo        the full paper reproduction (all of the above)
+
+RESOURCE-VERB OPTIONS
+  -f FILE            manifest to apply (apply)
+  --state FILE       registry state file (default .plantd/registry.json)
+  --check            get: exit non-zero if any resource is Failed
+  --all              run: execute every resource in topological order
 
 CAMPAIGN OPTIONS
   --threads N        worker threads for the cell grid (default 4)
@@ -91,6 +129,11 @@ fn main() -> ExitCode {
     };
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     let result = match sub.as_str() {
+        "apply" => cmd_apply(&args),
+        "get" => cmd_get(&args),
+        "describe" => cmd_describe(&args),
+        "run" => cmd_run(&args),
+        "delete" => cmd_delete(&args),
         "generate" => cmd_generate(&args),
         "experiment" => cmd_experiment(&args).map(|_| ()),
         "fit" => cmd_fit(&args),
@@ -131,6 +174,204 @@ fn backend(args: &Args) -> Box<dyn SimBackend> {
     }
 }
 
+// ------------------------------------------------------- resource verbs
+
+fn state_path(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("state", ".plantd/registry.json"))
+}
+
+fn load_controller(args: &Args) -> Result<Controller, anyhow::Error> {
+    let registry = Registry::load(&state_path(args)).map_err(anyhow::Error::msg)?;
+    Ok(Controller::new(registry)
+        .with_out_dir(out_dir(args))
+        .with_backend(backend(args)))
+}
+
+/// Parse `<kind>/<name>` (one positional) or `<kind> <name>` (two).
+fn parse_target(args: &Args) -> Result<(Kind, String), anyhow::Error> {
+    let (kind_s, name) = match args.positional.as_slice() {
+        [one] => one
+            .split_once('/')
+            .ok_or_else(|| anyhow::anyhow!("expected <kind>/<name>, got '{one}'"))?,
+        [k, n, ..] => (k.as_str(), n.as_str()),
+        [] => anyhow::bail!("expected a <kind>/<name> target"),
+    };
+    let kind = Kind::parse(kind_s)
+        .ok_or_else(|| anyhow::anyhow!("unknown kind '{kind_s}'"))?;
+    Ok((kind, name.to_string()))
+}
+
+fn print_resource_table(registry: &Registry, kind: Option<Kind>, name: Option<&str>) {
+    println!(
+        "{:<13} {:<20} {:<10} {}",
+        "KIND", "NAME", "PHASE", "CONDITION"
+    );
+    for r in registry.list_all() {
+        if kind.map(|k| r.kind != k).unwrap_or(false) {
+            continue;
+        }
+        if name.map(|n| r.name != n).unwrap_or(false) {
+            continue;
+        }
+        println!(
+            "{:<13} {:<20} {:<10} {}",
+            r.kind.as_str(),
+            r.name,
+            r.phase.as_str(),
+            r.conditions.last().map(String::as_str).unwrap_or("")
+        );
+    }
+}
+
+fn cmd_apply(args: &Args) -> CmdResult {
+    let path = args
+        .opt("f")
+        .or_else(|| args.opt("file"))
+        .ok_or_else(|| anyhow::anyhow!("apply: need -f <manifest.json>"))?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let controller = load_controller(args)?;
+    let applied = controller
+        .apply_manifest(&manifest)
+        .map_err(anyhow::Error::msg)?;
+    controller.reconcile();
+    controller
+        .registry()
+        .save(&state_path(args))
+        .map_err(anyhow::Error::msg)?;
+    println!("applied {} resource(s) from {path}", applied.len());
+    print_resource_table(controller.registry(), None, None);
+    let failed: Vec<String> = controller
+        .registry()
+        .list_all()
+        .iter()
+        .filter(|r| r.phase == Phase::Failed)
+        .map(|r| format!("{}/{}", r.kind.as_str(), r.name))
+        .collect();
+    if !failed.is_empty() {
+        anyhow::bail!(
+            "{} resource(s) Failed after reconcile: {}",
+            failed.len(),
+            failed.join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_get(args: &Args) -> CmdResult {
+    let registry = Registry::load(&state_path(args)).map_err(anyhow::Error::msg)?;
+    let kind = match args.positional.first() {
+        Some(k) => Some(
+            Kind::parse(k).ok_or_else(|| anyhow::anyhow!("unknown kind '{k}'"))?,
+        ),
+        None => None,
+    };
+    let name = args.positional.get(1).map(String::as_str);
+    print_resource_table(&registry, kind, name);
+    if args.flag("check") {
+        let failed = registry
+            .list_all()
+            .iter()
+            .filter(|r| r.phase == Phase::Failed)
+            .count();
+        if failed > 0 {
+            anyhow::bail!("{failed} resource(s) in Failed phase");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_describe(args: &Args) -> CmdResult {
+    let registry = Registry::load(&state_path(args)).map_err(anyhow::Error::msg)?;
+    let (kind, name) = parse_target(args)?;
+    let res = registry
+        .get(kind, &name)
+        .ok_or_else(|| anyhow::anyhow!("{}/{name} not found", kind.as_str()))?;
+    println!("{}", res.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> CmdResult {
+    let controller = load_controller(args)?;
+    if args.flag("all") {
+        let outcomes = controller.run_all();
+        controller
+            .registry()
+            .save(&state_path(args))
+            .map_err(anyhow::Error::msg)?;
+        let mut errors = Vec::new();
+        for o in outcomes {
+            match o {
+                Ok(o) => {
+                    eprintln!("{}/{}: {}", o.kind.as_str(), o.name, o.summary);
+                    print!("{}", o.output);
+                }
+                Err(e) => errors.push(e),
+            }
+        }
+        if !errors.is_empty() {
+            anyhow::bail!("{} run(s) failed: {}", errors.len(), errors.join("; "));
+        }
+        return Ok(());
+    }
+    let (kind, name) = parse_target(args)?;
+    let result = controller.run(kind, &name);
+    controller
+        .registry()
+        .save(&state_path(args))
+        .map_err(anyhow::Error::msg)?;
+    let outcome = result.map_err(anyhow::Error::msg)?;
+    print!("{}", outcome.output);
+    Ok(())
+}
+
+fn cmd_delete(args: &Args) -> CmdResult {
+    let registry = Registry::load(&state_path(args)).map_err(anyhow::Error::msg)?;
+    let (kind, name) = parse_target(args)?;
+    if !registry.delete(kind, &name) {
+        anyhow::bail!("{}/{name} not found", kind.as_str());
+    }
+    registry.save(&state_path(args)).map_err(anyhow::Error::msg)?;
+    println!("deleted {}/{name}", kind.as_str());
+    Ok(())
+}
+
+// --------------------------------------------------------- legacy shims
+
+static EXPERIMENT_SHIM_GATE: Once = Once::new();
+static CAMPAIGN_SHIM_GATE: Once = Once::new();
+static SIMULATE_SHIM_GATE: Once = Once::new();
+
+fn resource_json(kind: &str, name: &str, spec: Json) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str(kind)),
+        ("name", Json::str(name)),
+        ("spec", spec),
+    ])
+}
+
+/// Write the synthesized manifest under `--out` and point the user at it
+/// (once per process): the legacy flag-style subcommand has a manifest
+/// equivalent now.
+fn shim_notice(sub: &str, args: &Args, manifest: &Json, gate: &'static Once) {
+    let dir = out_dir(args);
+    let path = dir.join(format!("manifest-{sub}.json"));
+    if std::fs::create_dir_all(&dir).is_ok()
+        && std::fs::write(&path, manifest.to_string_pretty()).is_ok()
+    {
+        plantd::util::log::warn_once(
+            gate,
+            &format!(
+                "'plantd {sub}' is a legacy flag-style subcommand; its manifest \
+                 equivalent was written to {p} — reuse it with `plantd apply -f {p}` \
+                 and `plantd run <kind>/<name>`",
+                p = path.display()
+            ),
+        );
+    }
+}
+
 fn cmd_generate(args: &Args) -> CmdResult {
     let spec = DataSetSpec {
         payloads: args.opt_u64("payloads", 64).map_err(anyhow::Error::msg)? as usize,
@@ -153,102 +394,86 @@ fn cmd_generate(args: &Args) -> CmdResult {
     Ok(())
 }
 
-/// The paper's ramp: 120 s, 0 → 40 rec/s (2400 transmissions).
-fn paper_pattern(args: &Args) -> Result<LoadPattern, anyhow::Error> {
+fn variants_for(args: &Args) -> Result<Vec<VariantConfig>, anyhow::Error> {
+    let sel = args.opt_or("variant", "all");
+    if sel == "all" {
+        return Ok(VariantConfig::paper_variants());
+    }
+    VariantConfig::by_name(&sel)
+        .map(|v| vec![v])
+        .ok_or_else(|| anyhow::anyhow!("unknown variant '{sel}'"))
+}
+
+/// The manifest equivalent of `plantd experiment` with the given flags:
+/// the paper's telematics dataset, the 0 → peak ramp, one Pipeline per
+/// selected variant, and one Experiment tying them together. Every spec
+/// is built as its typed form and serialized with `ResourceSpec::to_json`
+/// — the same canonical shape the controller parses back.
+fn experiment_manifest(args: &Args) -> Result<Json, anyhow::Error> {
     let duration = args.opt_f64("duration", 120.0).map_err(anyhow::Error::msg)?;
     let peak = args.opt_f64("peak", 40.0).map_err(anyhow::Error::msg)?;
-    Ok(LoadPattern::ramp(duration, 0.0, peak))
-}
-
-fn variants_for(args: &Args) -> Result<Vec<VariantConfig>, anyhow::Error> {
-    Ok(match args.opt_or("variant", "all").as_str() {
-        "all" => VariantConfig::paper_variants(),
-        "blocking-write" => vec![VariantConfig::blocking_write()],
-        "no-blocking-write" => vec![VariantConfig::no_blocking_write()],
-        "cpu-limited" => vec![VariantConfig::cpu_limited()],
-        other => anyhow::bail!("unknown variant '{other}'"),
-    })
-}
-
-/// The shared harness + the paper's ramp experiment, from CLI options.
-fn paper_experiment(args: &Args) -> Result<(ExperimentHarness, Experiment), anyhow::Error> {
     let scale = args.opt_f64("scale", 60.0).map_err(anyhow::Error::msg)?;
-    let harness = ExperimentHarness::new(scale);
-    let pattern = paper_pattern(args)?;
-    let dataset = DataSet::generate(DataSetSpec {
-        payloads: 64,
-        records_per_subsystem: 8,
-        bad_rate: 0.01,
-        seed: 0xD5,
-    });
-    Ok((harness, Experiment::new("telematics-ramp", pattern, dataset)))
-}
-
-fn run_experiments(
-    args: &Args,
-) -> Result<(ExperimentHarness, Vec<ExperimentRecord>), anyhow::Error> {
-    let scale = args.opt_f64("scale", 60.0).map_err(anyhow::Error::msg)?;
-    let (harness, exp) = paper_experiment(args)?;
-    let mut records = Vec::new();
-    for cfg in variants_for(args)? {
-        eprintln!(
-            "running {} (ramp {} records, scale {scale}x)...",
-            cfg.name,
-            exp.pattern.total_records()
-        );
-        let rec = harness.run(&cfg, &exp)?;
-        eprintln!(
-            "  drained in {} virtual ({:.2} rec/s)",
-            units::human_duration(rec.duration_s),
-            rec.mean_throughput_rps
-        );
-        records.push(rec);
+    let mode = args.opt_or("mode", "real");
+    let variants = variants_for(args)?;
+    let mut resources = vec![
+        resource_json("Schema", "telematics", SchemaSpec { fields: vec![] }.to_json()),
+        resource_json(
+            "DataSet",
+            "fleet-day",
+            DataSetSpecRes {
+                schema: "telematics".into(),
+                payloads: 64,
+                records_per_subsystem: 8,
+                bad_rate: 0.01,
+                seed: 0xD5,
+            }
+            .to_json(),
+        ),
+        resource_json(
+            "LoadPattern",
+            "ramp",
+            LoadPattern::ramp(duration, 0.0, peak).to_json(),
+        ),
+    ];
+    for v in &variants {
+        resources.push(resource_json(
+            "Pipeline",
+            v.name,
+            PipelineSpec {
+                variant: v.name.to_string(),
+            }
+            .to_json(),
+        ));
     }
-    Ok((harness, records))
+    resources.push(resource_json(
+        "Experiment",
+        "telematics-ramp",
+        ExperimentSpec::WindTunnel {
+            dataset: "fleet-day".into(),
+            load_pattern: "ramp".into(),
+            pipelines: variants.iter().map(|v| v.name.to_string()).collect(),
+            mode,
+            scale,
+        }
+        .to_json(),
+    ));
+    Ok(Json::obj(vec![("resources", Json::arr(resources))]))
 }
 
 fn cmd_experiment(args: &Args) -> Result<Vec<ExperimentRecord>, anyhow::Error> {
-    match args.opt_or("mode", "real").as_str() {
-        "real" => {
-            let (harness, records) = run_experiments(args)?;
-            println!("{}", report::table3_experiments(&records));
-            let dir = out_dir(args);
-            std::fs::create_dir_all(&dir)?;
-            for rec in &records {
-                report::fig8_csv(&dir, &harness.tsdb, rec.variant, rec.started_s, rec.drained_s, 5.0)?;
-            }
-            println!("fig8 CSVs written to {}", dir.display());
-            Ok(records)
-        }
-        "sim" => {
-            let (harness, exp) = paper_experiment(args)?;
-            let mut records = Vec::new();
-            for cfg in variants_for(args)? {
-                eprintln!(
-                    "simulating {} in virtual time ({} records)...",
-                    cfg.name,
-                    exp.pattern.total_records()
-                );
-                records.push(harness.simulate(&cfg, &exp)?);
-            }
-            println!("{}", report::table3_experiments(&records));
-            Ok(records)
-        }
-        "both" => {
-            let (harness, exp) = paper_experiment(args)?;
-            let mut records = Vec::new();
-            println!("-- measured vs simulated (same variant, same schedule) --");
-            for cfg in variants_for(args)? {
-                eprintln!("running {} measured + simulated...", cfg.name);
-                let delta = harness.run_with_sim(&cfg, &exp)?;
-                print!("{}", delta.render());
-                records.push(delta.real);
-            }
-            println!("\n{}", report::table3_experiments(&records));
-            Ok(records)
-        }
-        other => Err(anyhow::anyhow!("unknown --mode '{other}' (real|sim|both)")),
-    }
+    let manifest = experiment_manifest(args)?;
+    shim_notice("experiment", args, &manifest, &EXPERIMENT_SHIM_GATE);
+    let controller = Controller::new(Registry::new()).with_out_dir(out_dir(args));
+    controller
+        .apply_manifest(&manifest)
+        .map_err(anyhow::Error::msg)?;
+    let outcome = controller
+        .run(Kind::Experiment, "telematics-ramp")
+        .map_err(anyhow::Error::msg)?;
+    print!("{}", outcome.output);
+    Ok(controller
+        .experiment_records("telematics-ramp")
+        .unwrap_or_default())
 }
 
 fn cmd_fit(args: &Args) -> CmdResult {
@@ -282,54 +507,86 @@ fn cmd_project(args: &Args) -> CmdResult {
     Ok(())
 }
 
-fn paper_or_fitted_twins(args: &Args) -> Result<Vec<TwinParams>, anyhow::Error> {
-    if args.flag("paper-twins") {
-        Ok(TwinParams::paper_table1())
-    } else {
-        let (_, records) = run_experiments(args)?;
-        Ok(records.iter().map(TwinParams::fit).collect())
+/// The manifest equivalent of `plantd simulate` with the given flags.
+fn simulate_manifest(args: &Args) -> Result<Json, anyhow::Error> {
+    let slo_hours = args.opt_f64("slo-hours", 4.0).map_err(anyhow::Error::msg)?;
+    let slo_frac = args.opt_f64("slo-frac", 0.95).map_err(anyhow::Error::msg)?;
+    let forecasts: Vec<&'static str> = match args.opt_or("forecast", "both").as_str() {
+        "nominal" => vec!["nominal"],
+        "high" => vec!["high"],
+        "both" => vec!["nominal", "high"],
+        other => anyhow::bail!("unknown forecast '{other}'"),
+    };
+    let mut resources = Vec::new();
+    for f in &forecasts {
+        let model = match *f {
+            "high" => TrafficModel::high(),
+            _ => TrafficModel::nominal(),
+        };
+        resources.push(resource_json(
+            "TrafficModel",
+            f,
+            TrafficModelSpec {
+                preset: Some((*f).to_string()),
+                model,
+            }
+            .to_json(),
+        ));
     }
+    let twin_name = if args.flag("paper-twins") {
+        resources.push(resource_json(
+            "DigitalTwin",
+            "paper-table1",
+            DigitalTwinSpec::Paper.to_json(),
+        ));
+        "paper-table1"
+    } else {
+        // full wind-tunnel chain: the twin fits from the experiment
+        let exp = experiment_manifest(args)?;
+        resources.extend(
+            exp.get("resources")
+                .and_then(Json::as_arr)
+                .expect("experiment manifest shape")
+                .iter()
+                .cloned(),
+        );
+        resources.push(resource_json(
+            "DigitalTwin",
+            "fitted",
+            DigitalTwinSpec::FromExperiment {
+                experiment: "telematics-ramp".into(),
+            }
+            .to_json(),
+        ));
+        "fitted"
+    };
+    resources.push(resource_json(
+        "Simulation",
+        "what-if",
+        SimulationSpec {
+            twins: vec![twin_name.to_string()],
+            traffic_models: forecasts.iter().map(|f| f.to_string()).collect(),
+            slo_hours,
+            slo_frac,
+        }
+        .to_json(),
+    ));
+    Ok(Json::obj(vec![("resources", Json::arr(resources))]))
 }
 
 fn cmd_simulate(args: &Args) -> CmdResult {
-    let backend = backend(args);
-    let twins = paper_or_fitted_twins(args)?;
-    println!("{}", report::table1_twins(&twins));
-    let slo = SloSpec {
-        latency_limit_s: args
-            .opt_f64("slo-hours", 4.0)
-            .map_err(anyhow::Error::msg)?
-            * 3600.0,
-        min_fraction: args.opt_f64("slo-frac", 0.95).map_err(anyhow::Error::msg)?,
-    };
-    let forecasts: Vec<TrafficModel> = match args.opt_or("forecast", "both").as_str() {
-        "nominal" => vec![TrafficModel::nominal()],
-        "high" => vec![TrafficModel::high()],
-        "both" => vec![TrafficModel::nominal(), TrafficModel::high()],
-        other => anyhow::bail!("unknown forecast '{other}'"),
-    };
-    let mut all = Vec::new();
-    for forecast in &forecasts {
-        all.extend(simulate_batch(backend.as_ref(), &twins, forecast, &slo)?);
-    }
-    println!("{}", report::table2_simulations(&all));
-    let dir = out_dir(args);
-    std::fs::create_dir_all(&dir)?;
-    for r in &all {
-        report::fig6_csv(&dir, r)?;
-    }
-    // fig 7: blocking-write under Nominal, a high-traffic week (August)
-    if let Some(block_nom) = all
-        .iter()
-        .find(|r| r.twin.name.starts_with("blocking"))
-    {
-        report::fig7_csv(&dir, block_nom, 215, 4)?;
-    }
-    println!(
-        "fig6/fig7 CSVs written to {} (backend: {})",
-        dir.display(),
-        backend.name()
-    );
+    let manifest = simulate_manifest(args)?;
+    shim_notice("simulate", args, &manifest, &SIMULATE_SHIM_GATE);
+    let controller = Controller::new(Registry::new())
+        .with_out_dir(out_dir(args))
+        .with_backend(backend(args));
+    controller
+        .apply_manifest(&manifest)
+        .map_err(anyhow::Error::msg)?;
+    let outcome = controller
+        .run(Kind::Simulation, "what-if")
+        .map_err(anyhow::Error::msg)?;
+    print!("{}", outcome.output);
     Ok(())
 }
 
@@ -377,21 +634,18 @@ fn opt_seed(args: &Args, name: &str, default: u64) -> Result<u64, anyhow::Error>
 fn cmd_campaign(args: &Args) -> CmdResult {
     let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
     let seed = opt_seed(args, "seed", 0xD5)?;
-    let campaign = match args.opt_or("grid", "paper").as_str() {
-        "paper" => Campaign::paper_automotive(seed),
-        "extended" => Campaign::paper_automotive_extended(seed),
-        other => anyhow::bail!("unknown --grid '{other}' (paper|extended)"),
-    };
-    eprintln!(
-        "campaign '{}': {} variants × {} loads × {} datasets = {} cells on {} threads",
-        campaign.name,
-        campaign.variants.len(),
-        campaign.loads.len(),
-        campaign.datasets.len(),
-        campaign.n_cells(),
-        threads
-    );
+    let grid = args.opt_or("grid", "paper");
+    let campaign = Campaign::from_grid_name(&grid, seed).map_err(anyhow::Error::msg)?;
     if args.flag("dry-run") {
+        eprintln!(
+            "campaign '{}': {} variants × {} loads × {} datasets = {} cells on {} threads",
+            campaign.name,
+            campaign.variants.len(),
+            campaign.loads.len(),
+            campaign.datasets.len(),
+            campaign.n_cells(),
+            threads
+        );
         println!(
             "DRY RUN: campaign '{}' (seed {:#x}), {} cells:",
             campaign.name,
@@ -411,60 +665,60 @@ fn cmd_campaign(args: &Args) -> CmdResult {
         }
         return Ok(());
     }
-    let report = CampaignRunner::new(threads).run(&campaign);
-    println!("{}", report.render());
-    if let Some(dir) = args.opt("out") {
-        let path = std::path::Path::new(dir).join("campaign.json");
-        std::fs::create_dir_all(dir)?;
-        std::fs::write(&path, report.to_json().to_string_pretty())?;
-        println!("report JSON written to {}", path.display());
-    }
+    let name = format!("campaign-{grid}");
+    let spec = ExperimentSpec::Campaign {
+        grid: grid.clone(),
+        seed,
+        threads,
+        out: args.opt("out").map(str::to_string),
+    };
+    let manifest = Json::obj(vec![(
+        "resources",
+        Json::arr([resource_json("Experiment", &name, spec.to_json())]),
+    )]);
+    shim_notice("campaign", args, &manifest, &CAMPAIGN_SHIM_GATE);
+    let controller = Controller::new(Registry::new());
+    controller
+        .apply_manifest(&manifest)
+        .map_err(anyhow::Error::msg)?;
+    let outcome = controller
+        .run(Kind::Experiment, &name)
+        .map_err(anyhow::Error::msg)?;
+    print!("{}", outcome.output);
     Ok(())
 }
 
 fn cmd_resources() -> CmdResult {
-    use plantd::resources::{Kind, Registry};
-    use plantd::util::json::Json;
-    let reg = Registry::new();
-    reg.apply(
-        Kind::Schema,
-        "telematics",
-        Json::parse(r#"{"fields": []}"#).unwrap(),
+    let controller = Controller::new(Registry::new());
+    let manifest = Json::parse(
+        r#"{"resources": [
+            {"kind": "Schema", "name": "telematics", "spec": {"fields": []}},
+            {"kind": "DataSet", "name": "fleet-day",
+             "spec": {"schema": "telematics", "payloads": 8,
+                      "records_per_subsystem": 4, "bad_rate": 0.01, "seed": 213}},
+            {"kind": "LoadPattern", "name": "ramp-120s",
+             "spec": {"segments": [{"duration_s": 120, "start_rps": 0,
+                                    "end_rps": 40}]}},
+            {"kind": "Pipeline", "name": "blocking-write",
+             "spec": {"variant": "blocking-write"}},
+            {"kind": "Experiment", "name": "ramp-1",
+             "spec": {"dataset": "fleet-day", "load_pattern": "ramp-120s",
+                      "pipeline": "blocking-write", "mode": "sim"}},
+            {"kind": "Experiment", "name": "broken",
+             "spec": {"dataset": "ghost", "load_pattern": "ramp-120s",
+                      "pipeline": "blocking-write"}}
+        ]}"#,
+    )
+    .expect("demo manifest parses");
+    controller
+        .apply_manifest(&manifest)
+        .map_err(anyhow::Error::msg)?;
+    controller.reconcile();
+    print_resource_table(controller.registry(), None, None);
+    println!(
+        "\n(the 'broken' Experiment shows a failed reference; apply a DataSet \
+         named 'ghost' and re-reconcile to heal it — see docs/RESOURCES.md)"
     );
-    reg.apply(
-        Kind::DataSet,
-        "fleet-day",
-        Json::parse(r#"{"schema": "telematics"}"#).unwrap(),
-    );
-    reg.apply(
-        Kind::LoadPattern,
-        "ramp-120s",
-        Json::parse(r#"{"segments": [{"duration_s": 120, "start_rps": 0, "end_rps": 40}]}"#)
-            .unwrap(),
-    );
-    reg.apply(Kind::Pipeline, "blocking-write", Json::parse("{}").unwrap());
-    reg.apply(
-        Kind::Experiment,
-        "ramp-1",
-        Json::parse(
-            r#"{"dataset": "fleet-day", "load_pattern": "ramp-120s", "pipeline": "blocking-write"}"#,
-        )
-        .unwrap(),
-    );
-    reg.reconcile();
-    for (kind, count) in reg.summary() {
-        if count > 0 {
-            for r in reg.list(kind) {
-                println!(
-                    "{:<12} {:<16} {:<10} {}",
-                    kind.as_str(),
-                    r.name,
-                    r.phase.as_str(),
-                    r.conditions.last().map(String::as_str).unwrap_or("")
-                );
-            }
-        }
-    }
     Ok(())
 }
 

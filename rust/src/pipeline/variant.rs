@@ -136,6 +136,17 @@ impl VariantConfig {
         ]
     }
 
+    /// Look up a predefined variant by its stable name — the single
+    /// construction path the resource API and CLI both resolve through.
+    pub fn by_name(name: &str) -> Option<VariantConfig> {
+        Self::paper_variants().into_iter().find(|v| v.name == name)
+    }
+
+    /// The stable names [`VariantConfig::by_name`] accepts.
+    pub fn known_names() -> Vec<&'static str> {
+        Self::paper_variants().iter().map(|v| v.name).collect()
+    }
+
     /// Fixed cost per hour implied by container sizing (USD), per the
     /// price book.
     pub fn cost_per_hr(&self, prices: &crate::cost::PriceBook) -> f64 {

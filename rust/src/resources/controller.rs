@@ -1,0 +1,1017 @@
+//! The controller: a reconciler-driven execution engine over the
+//! [`super::Registry`].
+//!
+//! Where [`super::Registry::reconcile`] only *validates* (spec parse +
+//! reference resolution, Pending/Failed → Ready), the [`Controller`]
+//! *executes*: it topologically orders the reference DAG and drives Ready
+//! resources through the existing execution paths —
+//! [`crate::experiment::ExperimentHarness`] for wind-tunnel Experiments,
+//! [`crate::campaign::CampaignRunner`] for campaign-grid Experiments,
+//! twin fitting for DigitalTwins, and [`crate::bizsim`] over a
+//! [`crate::runtime::SimBackend`] for Simulations. Runs move a resource
+//! Ready → Engaged → Completed (or Failed), with the result summary
+//! stored in the resource's status JSON — a DigitalTwin fitted from an
+//! Experiment reads the twins straight out of that Experiment's status,
+//! even across CLI invocations (the registry persists).
+//!
+//! Dependencies execute on demand: `run(Simulation, s)` first runs the
+//! referenced DigitalTwins (silently), which in turn run their referenced
+//! Experiment if its status carries no fitted twins yet. Only the
+//! requested resource's human-readable output is surfaced.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::bizsim::{simulate_batch, SloSpec};
+use crate::campaign::{Campaign, CampaignRunner};
+use crate::cost::PriceBook;
+use crate::datagen::{DataSet, Schema};
+use crate::experiment::{Experiment, ExperimentHarness, ExperimentRecord};
+use crate::pipeline::VariantConfig;
+use crate::report;
+use crate::runtime::{native::NativeBackend, SimBackend};
+use crate::traffic::TrafficModel;
+use crate::twin::TwinParams;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::units;
+
+use super::spec::{
+    DigitalTwinSpec, ExperimentSpec, LoadPatternSpec, PipelineSpec, ResourceSpec,
+    SchemaSpec, SimulationSpec, TrafficModelSpec, TypedSpec,
+};
+use super::{Kind, Phase, Registry, Resource};
+
+/// What one executed resource produced.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    /// Kind of the resource that ran.
+    pub kind: Kind,
+    /// Name of the resource that ran.
+    pub name: String,
+    /// Phase after the run (Completed on success).
+    pub phase: Phase,
+    /// One-line result summary (also appended as a condition).
+    pub summary: String,
+    /// Full human-readable output (tables, CSV notices); newline-
+    /// terminated, print with `print!`.
+    pub output: String,
+}
+
+/// Reconciler-driven execution engine over a [`Registry`].
+pub struct Controller {
+    registry: Registry,
+    out_dir: PathBuf,
+    backend: Box<dyn SimBackend>,
+    /// In-process cache of full experiment records (statuses persist only
+    /// the compact summaries + fitted twins).
+    records: Mutex<BTreeMap<String, Vec<ExperimentRecord>>>,
+    /// In-process cache of generated datasets, keyed by canonical spec
+    /// JSON — running a DataSet and then an Experiment that references it
+    /// synthesizes the payload pool once, not twice.
+    datasets: Mutex<BTreeMap<String, DataSet>>,
+}
+
+impl Controller {
+    /// Controller over a registry, writing figure CSVs under `out/` and
+    /// simulating on the pure-Rust native backend.
+    pub fn new(registry: Registry) -> Self {
+        Controller {
+            registry,
+            out_dir: PathBuf::from("out"),
+            backend: Box::new(NativeBackend),
+            records: Mutex::new(BTreeMap::new()),
+            datasets: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Generate (or fetch the cached) dataset for a spec. The cache key
+    /// is the canonical spec JSON, so a re-applied spec with different
+    /// parameters regenerates.
+    fn dataset_for(&self, spec: &super::spec::DataSetSpecRes) -> DataSet {
+        let key = spec.to_json().to_string_compact();
+        if let Some(ds) = self.datasets.lock().unwrap().get(&key) {
+            return ds.clone();
+        }
+        let ds = DataSet::generate(spec.to_dataset_spec());
+        self.datasets
+            .lock()
+            .unwrap()
+            .insert(key, ds.clone());
+        ds
+    }
+
+    /// Override the output directory for figure CSVs (builder style).
+    pub fn with_out_dir(mut self, dir: PathBuf) -> Self {
+        self.out_dir = dir;
+        self
+    }
+
+    /// Override the simulation backend (builder style).
+    pub fn with_backend(mut self, backend: Box<dyn SimBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// The underlying registry (shared state; clones alias).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Full experiment records from a run in *this* process (the
+    /// persisted status only keeps compact summaries).
+    pub fn experiment_records(&self, name: &str) -> Option<Vec<ExperimentRecord>> {
+        self.records.lock().unwrap().get(name).cloned()
+    }
+
+    /// Apply every resource in a manifest. Accepts three shapes: an
+    /// object with a `resources` array, a bare array, or a single
+    /// `{"kind", "name", "spec"}` object. Returns the applied
+    /// (kind, name) pairs in manifest order; nothing is reconciled yet.
+    pub fn apply_manifest(&self, manifest: &Json) -> Result<Vec<(Kind, String)>, String> {
+        let entries: Vec<&Json> = if let Some(arr) =
+            manifest.get("resources").and_then(Json::as_arr)
+        {
+            arr.iter().collect()
+        } else if let Some(arr) = manifest.as_arr() {
+            arr.iter().collect()
+        } else if manifest.get("kind").is_some() {
+            vec![manifest]
+        } else {
+            return Err(
+                "manifest: expected {\"resources\": [...]}, a resource array, \
+                 or a single resource object"
+                    .into(),
+            );
+        };
+        let mut applied = Vec::with_capacity(entries.len());
+        for (i, e) in entries.iter().enumerate() {
+            let kind_s = e
+                .get_str("kind")
+                .ok_or(format!("manifest resource #{i}: missing 'kind'"))?;
+            let kind = Kind::parse(kind_s)
+                .ok_or(format!("manifest resource #{i}: unknown kind '{kind_s}'"))?;
+            let name = e
+                .get_str("name")
+                .ok_or(format!("manifest resource #{i}: missing 'name'"))?;
+            let spec = e
+                .get("spec")
+                .cloned()
+                .unwrap_or(Json::Obj(Default::default()));
+            self.registry.apply(kind, name, spec);
+            applied.push((kind, name.to_string()));
+        }
+        Ok(applied)
+    }
+
+    /// Reconcile until the registry settles (no phase changes); returns
+    /// the total number of phase changes.
+    pub fn reconcile(&self) -> usize {
+        let mut total = 0;
+        for _ in 0..16 {
+            let changed = self.registry.reconcile();
+            total += changed;
+            if changed == 0 {
+                break;
+            }
+        }
+        total
+    }
+
+    /// Topological order of every registered resource along the typed
+    /// reference DAG (dependencies first). Resources with unparseable
+    /// specs have no outgoing edges and sort in their natural (kind,
+    /// name) position. Deterministic for a given registry.
+    pub fn topo_order(&self) -> Vec<(Kind, String)> {
+        let all = self.registry.list_all();
+        let keys: Vec<(Kind, String)> =
+            all.iter().map(|r| (r.kind, r.name.clone())).collect();
+        let index: BTreeMap<(Kind, String), usize> = keys
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, k)| (k, i))
+            .collect();
+        // edges: dependency -> dependent
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); keys.len()];
+        let mut in_degree = vec![0usize; keys.len()];
+        for (i, r) in all.iter().enumerate() {
+            if let Ok(spec) = TypedSpec::parse(r.kind, &r.spec) {
+                for dep in spec.dependencies() {
+                    if let Some(&d) = index.get(&dep) {
+                        dependents[d].push(i);
+                        in_degree[i] += 1;
+                    }
+                }
+            }
+        }
+        let mut ready: std::collections::BTreeSet<usize> = in_degree
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::with_capacity(keys.len());
+        while let Some(i) = ready.pop_first() {
+            order.push(keys[i].clone());
+            for &dep in &dependents[i] {
+                in_degree[dep] -= 1;
+                if in_degree[dep] == 0 {
+                    ready.insert(dep);
+                }
+            }
+        }
+        // references are typed kind-to-kind and acyclic by construction,
+        // but a malformed registry must not drop resources
+        if order.len() < keys.len() {
+            for (i, k) in keys.iter().enumerate() {
+                if in_degree[i] > 0 {
+                    order.push(k.clone());
+                }
+            }
+        }
+        order
+    }
+
+    /// Execute one resource (reconciling first and running any
+    /// not-yet-completed dependencies silently). On success the resource
+    /// is Completed with its summary as the final condition and its
+    /// status carrying the result; on failure it is Failed.
+    pub fn run(&self, kind: Kind, name: &str) -> Result<RunOutcome, String> {
+        self.reconcile();
+        self.run_inner(kind, name)
+    }
+
+    /// Execute every resource in topological order (dependencies first),
+    /// skipping resources that already Completed as a side effect of an
+    /// earlier run. Returns one outcome (or error) per resource run.
+    pub fn run_all(&self) -> Vec<Result<RunOutcome, String>> {
+        self.reconcile();
+        let mut out = Vec::new();
+        for (kind, name) in self.topo_order() {
+            let phase = match self.registry.get(kind, &name) {
+                Some(r) => r.phase,
+                None => continue,
+            };
+            if phase == Phase::Completed {
+                continue;
+            }
+            out.push(self.run_inner(kind, &name));
+        }
+        out
+    }
+
+    fn run_inner(&self, kind: Kind, name: &str) -> Result<RunOutcome, String> {
+        let res = self
+            .registry
+            .get(kind, name)
+            .ok_or_else(|| format!("{}/{name} not found", kind.as_str()))?;
+        match res.phase {
+            // an execution failure (status carries "error") is retryable;
+            // a validation failure is not — fix the spec/references first
+            Phase::Failed if res.status.get("error").is_none() => {
+                return Err(format!(
+                    "{}/{name} is Failed: {}",
+                    kind.as_str(),
+                    res.conditions.last().map(String::as_str).unwrap_or("")
+                ))
+            }
+            Phase::Failed => {}
+            Phase::Engaged => {
+                return Err(format!("{}/{name} is already Engaged", kind.as_str()))
+            }
+            Phase::Pending => {
+                return Err(format!(
+                    "{}/{name} is still Pending (apply + reconcile first)",
+                    kind.as_str()
+                ))
+            }
+            Phase::Ready | Phase::Completed => {}
+        }
+        let spec = TypedSpec::parse(kind, &res.spec)?;
+        self.registry
+            .set_phase(kind, name, Phase::Engaged, "execution started");
+        match self.execute(&spec, &res) {
+            Ok((summary, output, status)) => {
+                self.registry.set_status(kind, name, status);
+                self.registry
+                    .set_phase(kind, name, Phase::Completed, &summary);
+                Ok(RunOutcome {
+                    kind,
+                    name: name.to_string(),
+                    phase: Phase::Completed,
+                    summary,
+                    output,
+                })
+            }
+            Err(e) => {
+                let msg = format!("execution failed: {e}");
+                // the "error" status key marks this as an *execution*
+                // failure: reconcile will not flip it back to Ready (the
+                // failure stays visible to `get --check`), but `run` may
+                // retry it — see run_inner's Failed arm
+                self.registry.set_status(
+                    kind,
+                    name,
+                    Json::obj(vec![("error", Json::str(msg.clone()))]),
+                );
+                self.registry.set_phase(kind, name, Phase::Failed, &msg);
+                Err(format!("{}/{name}: {msg}", kind.as_str()))
+            }
+        }
+    }
+
+    /// Dispatch one Ready resource to its execution path. Returns
+    /// `(summary, human output, status JSON)`.
+    fn execute(
+        &self,
+        spec: &TypedSpec,
+        res: &Resource,
+    ) -> Result<(String, String, Json), String> {
+        match spec {
+            TypedSpec::Schema(s) => self.exec_schema(s, res),
+            TypedSpec::DataSet(s) => {
+                // Payload synthesis uses the fixed telematics wire format
+                // (vehicle zips, five subsystem binaries); a referenced
+                // Schema's custom fields are validated and drive record
+                // generation (`Schema::generate`) but do not reshape the
+                // zip bytes — say so instead of silently ignoring them.
+                let custom_fields = self
+                    .registry
+                    .get(Kind::Schema, &s.schema)
+                    .and_then(|r| r.spec.get("fields").and_then(Json::as_arr).map(|a| !a.is_empty()))
+                    .unwrap_or(false);
+                if custom_fields {
+                    self.registry.push_condition(
+                        res.kind,
+                        &res.name,
+                        &format!(
+                            "note: Schema '{}' declares custom fields; payload \
+                             synthesis uses the built-in telematics wire format \
+                             (custom fields affect record generation only)",
+                            s.schema
+                        ),
+                    );
+                }
+                let ds = self.dataset_for(s);
+                let total = ds.total_bytes();
+                let summary = format!(
+                    "{} payloads, {}",
+                    s.payloads,
+                    units::human_bytes(total)
+                );
+                let output = format!(
+                    "dataset '{}': {} payloads × {} records/subsystem × 5 subsystems\n\
+                     total {} ({} mean/payload), bad-rate {:.1}%\n",
+                    res.name,
+                    s.payloads,
+                    s.records_per_subsystem,
+                    units::human_bytes(total),
+                    units::human_bytes(ds.mean_payload_bytes() as u64),
+                    s.bad_rate * 100.0
+                );
+                let status = Json::obj(vec![
+                    ("payloads", Json::Num(s.payloads as f64)),
+                    ("total_bytes", Json::Num(total as f64)),
+                    (
+                        "mean_payload_bytes",
+                        Json::Num(ds.mean_payload_bytes()),
+                    ),
+                ]);
+                Ok((summary, output, status))
+            }
+            TypedSpec::LoadPattern(LoadPatternSpec(p)) => {
+                let summary = format!(
+                    "{} records over {}",
+                    p.total_records(),
+                    units::human_duration(p.total_duration_s())
+                );
+                let output = format!("LoadPattern/{}: {summary}\n", res.name);
+                let status = Json::obj(vec![
+                    ("records", Json::Num(p.total_records() as f64)),
+                    ("duration_s", Json::Num(p.total_duration_s())),
+                    ("segments", Json::Num(p.segments.len() as f64)),
+                ]);
+                Ok((summary, output, status))
+            }
+            TypedSpec::Pipeline(s) => {
+                let cfg = s.to_variant()?;
+                let cost = cfg.cost_per_hr(&PriceBook::default());
+                let cap = cfg.analytic_capacity_zps();
+                let summary = format!(
+                    "variant '{}': {:.2} c/hr, ~{:.2} zips/s analytic capacity",
+                    cfg.name,
+                    cost * 100.0,
+                    cap
+                );
+                let output = format!("Pipeline/{}: {summary}\n", res.name);
+                let status = Json::obj(vec![
+                    ("variant", Json::str(cfg.name)),
+                    ("cost_per_hr_usd", Json::Num(cost)),
+                    ("analytic_capacity_zps", Json::Num(cap)),
+                ]);
+                Ok((summary, output, status))
+            }
+            TypedSpec::Experiment(s) => self.exec_experiment(s, res),
+            TypedSpec::TrafficModel(s) => self.exec_traffic(s, res),
+            TypedSpec::DigitalTwin(s) => {
+                let twins = self.resolve_twin_spec(s)?;
+                let summary = format!("{} twin(s) available", twins.len());
+                let output = format!("{}\n", report::table1_twins(&twins));
+                let status = Json::obj(vec![(
+                    "twins",
+                    Json::arr(twins.iter().map(TwinParams::to_json)),
+                )]);
+                Ok((summary, output, status))
+            }
+            TypedSpec::Simulation(s) => self.exec_simulation(s),
+        }
+    }
+
+    fn exec_schema(
+        &self,
+        s: &SchemaSpec,
+        res: &Resource,
+    ) -> Result<(String, String, Json), String> {
+        let summary = if s.fields.is_empty() {
+            "built-in telematics wire schema (5 subsystems)".to_string()
+        } else {
+            // prove the custom schema generates: one sample record
+            let schema = Schema::new(&res.name, s.fields.clone());
+            let rec = schema.generate(&mut Rng::new(0));
+            format!("{} custom fields (sample record OK, {} values)", s.fields.len(), rec.len())
+        };
+        let output = format!("Schema/{}: {summary}\n", res.name);
+        let status = Json::obj(vec![("fields", Json::Num(s.fields.len() as f64))]);
+        Ok((summary, output, status))
+    }
+
+    fn exec_traffic(
+        &self,
+        s: &TrafficModelSpec,
+        res: &Resource,
+    ) -> Result<(String, String, Json), String> {
+        let load = s.model.project_hourly();
+        let mean = load.iter().sum::<f64>() / load.len() as f64;
+        let peak = load.iter().cloned().fold(f64::MIN, f64::max);
+        let summary = format!("mean {mean:.1} rec/h, peak {peak:.1} rec/h");
+        let output = format!("TrafficModel/{} ('{}'): {summary}\n", res.name, s.model.name);
+        let status = Json::obj(vec![
+            ("mean_rec_hr", Json::Num(mean)),
+            ("peak_rec_hr", Json::Num(peak)),
+        ]);
+        Ok((summary, output, status))
+    }
+
+    /// Parse a referenced resource's spec as one typed form.
+    fn parse_ref<S: ResourceSpec>(&self, name: &str) -> Result<S, String> {
+        let res = self
+            .registry
+            .get(S::KIND, name)
+            .ok_or_else(|| format!("{} '{name}' not found", S::KIND.as_str()))?;
+        S::from_json(&res.spec)
+            .map_err(|e| format!("{}/{name}: {e}", S::KIND.as_str()))
+    }
+
+    fn exec_experiment(
+        &self,
+        spec: &ExperimentSpec,
+        res: &Resource,
+    ) -> Result<(String, String, Json), String> {
+        match spec {
+            ExperimentSpec::Campaign {
+                grid,
+                seed,
+                threads,
+                out,
+            } => {
+                let campaign = Campaign::from_grid_name(grid, *seed)?;
+                eprintln!(
+                    "campaign '{}': {} variants × {} loads × {} datasets = {} cells on {} threads",
+                    campaign.name,
+                    campaign.variants.len(),
+                    campaign.loads.len(),
+                    campaign.datasets.len(),
+                    campaign.n_cells(),
+                    threads
+                );
+                let report = CampaignRunner::new(*threads).run(&campaign);
+                let mut output = format!("{}\n", report.render());
+                if let Some(dir) = out {
+                    let path = std::path::Path::new(dir).join("campaign.json");
+                    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                    std::fs::write(&path, report.to_json().to_string_pretty())
+                        .map_err(|e| e.to_string())?;
+                    output += &format!("report JSON written to {}\n", path.display());
+                }
+                let best = report
+                    .ranking()
+                    .first()
+                    .map(|c| c.variant.clone())
+                    .unwrap_or_default();
+                let summary = format!(
+                    "campaign '{}': {} cells, seed {:#x}, best '{best}'",
+                    campaign.name,
+                    campaign.n_cells(),
+                    campaign.seed
+                );
+                let status = Json::obj(vec![
+                    ("grid", Json::str(grid.clone())),
+                    ("cells", Json::Num(campaign.n_cells() as f64)),
+                    ("seed", super::spec::seed_json(*seed)),
+                    ("best_variant", Json::str(best)),
+                ]);
+                Ok((summary, output, status))
+            }
+            ExperimentSpec::WindTunnel {
+                dataset,
+                load_pattern,
+                pipelines,
+                mode,
+                scale,
+            } => {
+                let ds_spec: super::spec::DataSetSpecRes = self.parse_ref(dataset)?;
+                let pattern = self
+                    .parse_ref::<LoadPatternSpec>(load_pattern)?
+                    .0;
+                let variants: Vec<VariantConfig> = pipelines
+                    .iter()
+                    .map(|p| self.parse_ref::<PipelineSpec>(p)?.to_variant())
+                    .collect::<Result<_, _>>()?;
+                let data = self.dataset_for(&ds_spec);
+                let harness = ExperimentHarness::new(*scale);
+                let exp = Experiment::new(&res.name, pattern, data);
+
+                // mark referenced Pipeline resources Engaged for the run,
+                // remembering their prior phase (a Pipeline that already
+                // Completed its own run must not be demoted to Ready)
+                let prior: Vec<(String, Phase)> = pipelines
+                    .iter()
+                    .map(|p| {
+                        let phase = self
+                            .registry
+                            .get(Kind::Pipeline, p)
+                            .map(|r| r.phase)
+                            .unwrap_or(Phase::Ready);
+                        (p.clone(), phase)
+                    })
+                    .collect();
+                for p in pipelines {
+                    self.registry.set_phase(
+                        Kind::Pipeline,
+                        p,
+                        Phase::Engaged,
+                        &format!("experiment '{}' started", res.name),
+                    );
+                }
+                let result =
+                    self.drive_windtunnel(&harness, &exp, &variants, mode, *scale);
+                for (p, phase) in &prior {
+                    self.registry.set_phase(
+                        Kind::Pipeline,
+                        p,
+                        *phase,
+                        &format!("experiment '{}' finished", res.name),
+                    );
+                }
+                let (records, output) = result?;
+
+                let twins: Vec<TwinParams> =
+                    records.iter().map(TwinParams::fit).collect();
+                let zips: u64 = records.iter().map(|r| r.zips_sent).sum();
+                let summary = format!(
+                    "{} run(s) in mode '{mode}', {zips} transmissions",
+                    records.len()
+                );
+                let status = Json::obj(vec![
+                    ("mode", Json::str(mode.clone())),
+                    (
+                        "records",
+                        Json::arr(records.iter().map(ExperimentRecord::to_json)),
+                    ),
+                    ("twins", Json::arr(twins.iter().map(TwinParams::to_json))),
+                ]);
+                self.records
+                    .lock()
+                    .unwrap()
+                    .insert(res.name.clone(), records);
+                Ok((summary, output, status))
+            }
+        }
+    }
+
+    /// Run the wind tunnel in the requested mode; returns the records and
+    /// the exact human output the legacy `plantd experiment` printed.
+    fn drive_windtunnel(
+        &self,
+        harness: &ExperimentHarness,
+        exp: &Experiment,
+        variants: &[VariantConfig],
+        mode: &str,
+        scale: f64,
+    ) -> Result<(Vec<ExperimentRecord>, String), String> {
+        let mut records = Vec::new();
+        let mut output = String::new();
+        match mode {
+            "real" => {
+                for cfg in variants {
+                    eprintln!(
+                        "running {} (ramp {} records, scale {scale}x)...",
+                        cfg.name,
+                        exp.pattern.total_records()
+                    );
+                    let rec = harness.run(cfg, exp).map_err(|e| e.to_string())?;
+                    eprintln!(
+                        "  drained in {} virtual ({:.2} rec/s)",
+                        units::human_duration(rec.duration_s),
+                        rec.mean_throughput_rps
+                    );
+                    records.push(rec);
+                }
+                output += &format!("{}\n", report::table3_experiments(&records));
+                std::fs::create_dir_all(&self.out_dir).map_err(|e| e.to_string())?;
+                for rec in &records {
+                    report::fig8_csv(
+                        &self.out_dir,
+                        &harness.tsdb,
+                        rec.variant,
+                        rec.started_s,
+                        rec.drained_s,
+                        5.0,
+                    )
+                    .map_err(|e| e.to_string())?;
+                }
+                output += &format!("fig8 CSVs written to {}\n", self.out_dir.display());
+            }
+            "sim" => {
+                for cfg in variants {
+                    eprintln!(
+                        "simulating {} in virtual time ({} records)...",
+                        cfg.name,
+                        exp.pattern.total_records()
+                    );
+                    records.push(harness.simulate(cfg, exp).map_err(|e| e.to_string())?);
+                }
+                output += &format!("{}\n", report::table3_experiments(&records));
+            }
+            "both" => {
+                output += "-- measured vs simulated (same variant, same schedule) --\n";
+                for cfg in variants {
+                    eprintln!("running {} measured + simulated...", cfg.name);
+                    let delta = harness.run_with_sim(cfg, exp).map_err(|e| e.to_string())?;
+                    output += &delta.render();
+                    records.push(delta.real);
+                }
+                output += &format!("\n{}\n", report::table3_experiments(&records));
+            }
+            other => return Err(format!("unknown --mode '{other}' (real|sim|both)")),
+        }
+        Ok((records, output))
+    }
+
+    /// Twins a DigitalTwin spec yields, running its referenced Experiment
+    /// first if that Experiment has no fitted twins in its status yet.
+    fn resolve_twin_spec(&self, spec: &DigitalTwinSpec) -> Result<Vec<TwinParams>, String> {
+        match spec {
+            DigitalTwinSpec::Paper => Ok(TwinParams::paper_table1()),
+            DigitalTwinSpec::Params(t) => Ok(vec![t.clone()]),
+            DigitalTwinSpec::FromExperiment { experiment } => {
+                let has_twins = |r: &Resource| {
+                    r.status
+                        .get("twins")
+                        .and_then(Json::as_arr)
+                        .map(|a| !a.is_empty())
+                        .unwrap_or(false)
+                };
+                let mut exp_res = self
+                    .registry
+                    .get(Kind::Experiment, experiment)
+                    .ok_or_else(|| format!("Experiment '{experiment}' not found"))?;
+                // reject the campaign form BEFORE running anything: a grid
+                // sweep never yields fitted twins, so silently executing
+                // the whole grid here would be wasted work ending in an
+                // error anyway
+                if matches!(
+                    ExperimentSpec::from_json(&exp_res.spec),
+                    Ok(ExperimentSpec::Campaign { .. })
+                ) {
+                    return Err(format!(
+                        "Experiment '{experiment}' is a campaign grid; twins fit \
+                         only from wind-tunnel experiments (dataset/load_pattern/\
+                         pipeline form)"
+                    ));
+                }
+                if !has_twins(&exp_res) {
+                    // run the experiment (silently) to fit twins
+                    self.run_inner(Kind::Experiment, experiment)?;
+                    exp_res = self
+                        .registry
+                        .get(Kind::Experiment, experiment)
+                        .ok_or_else(|| format!("Experiment '{experiment}' vanished"))?;
+                }
+                let arr = exp_res
+                    .status
+                    .get("twins")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        format!("Experiment '{experiment}' completed without fitted twins")
+                    })?;
+                arr.iter()
+                    .map(TwinParams::from_json)
+                    .collect::<Result<Vec<_>, _>>()
+            }
+        }
+    }
+
+    /// Twins a referenced DigitalTwin *resource* yields, executing it
+    /// (silently) so its phase/status reflect the run.
+    fn twins_of_resource(&self, name: &str) -> Result<Vec<TwinParams>, String> {
+        let res = self
+            .registry
+            .get(Kind::DigitalTwin, name)
+            .ok_or_else(|| format!("DigitalTwin '{name}' not found"))?;
+        if res.phase != Phase::Completed
+            || res.status.get("twins").and_then(Json::as_arr).is_none()
+        {
+            self.run_inner(Kind::DigitalTwin, name)?;
+        }
+        let res = self
+            .registry
+            .get(Kind::DigitalTwin, name)
+            .ok_or_else(|| format!("DigitalTwin '{name}' vanished"))?;
+        res.status
+            .get("twins")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("DigitalTwin '{name}' has no twins in status"))?
+            .iter()
+            .map(TwinParams::from_json)
+            .collect()
+    }
+
+    fn exec_simulation(
+        &self,
+        spec: &SimulationSpec,
+    ) -> Result<(String, String, Json), String> {
+        let mut twins: Vec<TwinParams> = Vec::new();
+        for t in &spec.twins {
+            twins.extend(self.twins_of_resource(t)?);
+        }
+        let forecasts: Vec<TrafficModel> = spec
+            .traffic_models
+            .iter()
+            .map(|m| Ok(self.parse_ref::<TrafficModelSpec>(m)?.model))
+            .collect::<Result<_, String>>()?;
+        let slo = SloSpec {
+            latency_limit_s: spec.slo_hours * 3600.0,
+            min_fraction: spec.slo_frac,
+        };
+        let mut output = format!("{}\n", report::table1_twins(&twins));
+        let mut all = Vec::new();
+        for forecast in &forecasts {
+            all.extend(
+                simulate_batch(self.backend.as_ref(), &twins, forecast, &slo)
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+        output += &format!("{}\n", report::table2_simulations(&all));
+        std::fs::create_dir_all(&self.out_dir).map_err(|e| e.to_string())?;
+        for r in &all {
+            report::fig6_csv(&self.out_dir, r).map_err(|e| e.to_string())?;
+        }
+        if let Some(block_nom) = all.iter().find(|r| r.twin.name.starts_with("blocking")) {
+            report::fig7_csv(&self.out_dir, block_nom, 215, 4).map_err(|e| e.to_string())?;
+        }
+        output += &format!(
+            "fig6/fig7 CSVs written to {} (backend: {})\n",
+            self.out_dir.display(),
+            self.backend.name()
+        );
+        let met = all.iter().filter(|r| r.slo_met).count();
+        let summary = format!("{} year-simulations, {met} met the SLO", all.len());
+        let status = Json::obj(vec![
+            ("runs", Json::Num(all.len() as f64)),
+            ("slo_met", Json::Num(met as f64)),
+            (
+                "cost_usd",
+                Json::arr(all.iter().map(|r| Json::Num(r.cost_usd))),
+            ),
+            (
+                "pct_latency_met",
+                Json::arr(all.iter().map(|r| Json::Num(r.pct_latency_met))),
+            ),
+        ]);
+        Ok((summary, output, status))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_windtunnel_manifest(mode: &str) -> Json {
+        Json::parse(&format!(
+            r#"{{"resources": [
+                {{"kind": "Schema", "name": "telematics", "spec": {{}}}},
+                {{"kind": "DataSet", "name": "fleet", "spec":
+                    {{"schema": "telematics", "payloads": 4,
+                      "records_per_subsystem": 2, "bad_rate": 0.0, "seed": 9}}}},
+                {{"kind": "LoadPattern", "name": "pulse", "spec":
+                    {{"segments": [{{"duration_s": 5, "start_rps": 2, "end_rps": 2}}]}}}},
+                {{"kind": "Pipeline", "name": "noblock", "spec":
+                    {{"variant": "no-blocking-write"}}}},
+                {{"kind": "Experiment", "name": "e1", "spec":
+                    {{"dataset": "fleet", "load_pattern": "pulse",
+                      "pipeline": "noblock", "mode": "{mode}", "scale": 3000}}}}
+            ]}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn apply_reconcile_run_windtunnel_sim() {
+        let c = Controller::new(Registry::new())
+            .with_out_dir(std::env::temp_dir().join("plantd-ctrl-test-sim"));
+        let applied = c.apply_manifest(&tiny_windtunnel_manifest("sim")).unwrap();
+        assert_eq!(applied.len(), 5);
+        c.reconcile();
+        for (kind, name) in &applied {
+            assert_eq!(
+                c.registry().get(*kind, name).unwrap().phase,
+                Phase::Ready,
+                "{}/{name}",
+                kind.as_str()
+            );
+        }
+        let outcome = c.run(Kind::Experiment, "e1").unwrap();
+        assert_eq!(outcome.phase, Phase::Completed);
+        assert!(outcome.output.contains("TABLE III"));
+        let e = c.registry().get(Kind::Experiment, "e1").unwrap();
+        assert_eq!(e.phase, Phase::Completed);
+        assert_eq!(
+            e.status.get("twins").and_then(Json::as_arr).unwrap().len(),
+            1
+        );
+        // full records cached in-process
+        let recs = c.experiment_records("e1").unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].zips_sent, 10);
+        // pipeline resource released back to Ready
+        assert_eq!(
+            c.registry().get(Kind::Pipeline, "noblock").unwrap().phase,
+            Phase::Ready
+        );
+    }
+
+    #[test]
+    fn sim_mode_run_is_deterministic_and_matches_direct_harness() {
+        let run_once = || {
+            let c = Controller::new(Registry::new())
+                .with_out_dir(std::env::temp_dir().join("plantd-ctrl-test-det"));
+            c.apply_manifest(&tiny_windtunnel_manifest("sim")).unwrap();
+            c.run(Kind::Experiment, "e1").unwrap().output
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a, b, "same manifest must reproduce byte-identical output");
+        // and it matches the domain types driven directly
+        let harness = ExperimentHarness::new(3000.0);
+        let exp = Experiment::new(
+            "e1",
+            crate::loadgen::LoadPattern::steady(5.0, 2.0),
+            DataSet::generate(crate::datagen::DataSetSpec {
+                payloads: 4,
+                records_per_subsystem: 2,
+                bad_rate: 0.0,
+                seed: 9,
+            }),
+        );
+        let rec = harness
+            .simulate(&VariantConfig::no_blocking_write(), &exp)
+            .unwrap();
+        let expect = format!("{}\n", report::table3_experiments(&[rec]));
+        assert_eq!(a, expect, "controller path diverged from direct harness");
+    }
+
+    #[test]
+    fn topo_order_puts_dependencies_first() {
+        let c = Controller::new(Registry::new());
+        c.apply_manifest(&tiny_windtunnel_manifest("sim")).unwrap();
+        let order = c.topo_order();
+        let pos = |k: Kind, n: &str| {
+            order
+                .iter()
+                .position(|(ok, on)| *ok == k && on == n)
+                .unwrap()
+        };
+        assert!(pos(Kind::Schema, "telematics") < pos(Kind::DataSet, "fleet"));
+        assert!(pos(Kind::DataSet, "fleet") < pos(Kind::Experiment, "e1"));
+        assert!(pos(Kind::LoadPattern, "pulse") < pos(Kind::Experiment, "e1"));
+        assert!(pos(Kind::Pipeline, "noblock") < pos(Kind::Experiment, "e1"));
+    }
+
+    #[test]
+    fn run_failed_resource_is_an_error() {
+        let c = Controller::new(Registry::new());
+        c.apply_manifest(
+            &Json::parse(
+                r#"{"resources": [{"kind": "DataSet", "name": "d",
+                    "spec": {"schema": "ghost"}}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let err = c.run(Kind::DataSet, "d").unwrap_err();
+        assert!(err.contains("Failed"), "{err}");
+        assert!(err.contains("ghost"), "{err}");
+    }
+
+    #[test]
+    fn simulation_runs_paper_twins_end_to_end() {
+        let c = Controller::new(Registry::new())
+            .with_out_dir(std::env::temp_dir().join("plantd-ctrl-test-simres"));
+        c.apply_manifest(
+            &Json::parse(
+                r#"{"resources": [
+                    {"kind": "DigitalTwin", "name": "paper", "spec": {"paper": true}},
+                    {"kind": "TrafficModel", "name": "nominal",
+                     "spec": {"preset": "nominal"}},
+                    {"kind": "Simulation", "name": "year",
+                     "spec": {"twin": "paper", "traffic_model": "nominal"}}
+                ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let outcome = c.run(Kind::Simulation, "year").unwrap();
+        assert!(outcome.output.contains("TABLE I"));
+        assert!(outcome.output.contains("TABLE II"));
+        let sim = c.registry().get(Kind::Simulation, "year").unwrap();
+        assert_eq!(sim.phase, Phase::Completed);
+        assert_eq!(sim.status.get_u64("runs"), Some(3));
+        // the twin dependency ran silently and completed too
+        assert_eq!(
+            c.registry().get(Kind::DigitalTwin, "paper").unwrap().phase,
+            Phase::Completed
+        );
+    }
+
+    #[test]
+    fn twin_from_campaign_experiment_fails_fast_and_is_retryable() {
+        let c = Controller::new(Registry::new());
+        c.apply_manifest(
+            &Json::parse(
+                r#"{"resources": [
+                    {"kind": "Experiment", "name": "sweep",
+                     "spec": {"campaign": {"grid": "paper", "seed": 7,
+                                           "threads": 2}}},
+                    {"kind": "DigitalTwin", "name": "t",
+                     "spec": {"experiment": "sweep"}}
+                ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        // fails WITHOUT executing the campaign grid
+        let err = c.run(Kind::DigitalTwin, "t").unwrap_err();
+        assert!(err.contains("campaign grid"), "{err}");
+        let t = c.registry().get(Kind::DigitalTwin, "t").unwrap();
+        assert_eq!(t.phase, Phase::Failed);
+        assert!(t.status.get("error").is_some(), "execution failure marked");
+        // the campaign experiment itself never ran
+        assert_eq!(
+            c.registry().get(Kind::Experiment, "sweep").unwrap().phase,
+            Phase::Ready
+        );
+        // reconcile must not mask the runtime failure...
+        c.reconcile();
+        assert_eq!(
+            c.registry().get(Kind::DigitalTwin, "t").unwrap().phase,
+            Phase::Failed
+        );
+        // ...but run may retry it (and it fails the same way again)
+        let err = c.run(Kind::DigitalTwin, "t").unwrap_err();
+        assert!(err.contains("campaign grid"), "{err}");
+    }
+
+    #[test]
+    fn campaign_experiment_runs_through_campaign_runner() {
+        let c = Controller::new(Registry::new());
+        c.apply_manifest(
+            &Json::parse(
+                r#"{"resources": [{"kind": "Experiment", "name": "sweep",
+                    "spec": {"campaign": {"grid": "paper", "seed": 7,
+                                          "threads": 2}}}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let a = c.run(Kind::Experiment, "sweep").unwrap();
+        assert!(a.output.contains("CAMPAIGN 'automotive-telemetry'"));
+        let status = c.registry().get(Kind::Experiment, "sweep").unwrap().status;
+        assert_eq!(status.get_u64("cells"), Some(6));
+        // re-running reproduces byte-identical output (same seed)
+        let b = c.run(Kind::Experiment, "sweep").unwrap();
+        assert_eq!(a.output, b.output);
+    }
+}

@@ -1,17 +1,31 @@
-//! Declarative resource registry — the Kubernetes-custom-resource analog.
+//! Declarative resource registry — the Kubernetes-custom-resource analog,
+//! and the system's front door.
 //!
 //! PlantD models everything the user configures as custom resources
 //! (Fig. 3): *Schema*, *DataSet*, *LoadPattern*, *Pipeline*, *Experiment*,
 //! *TrafficModel*, *DigitalTwin*, *Simulation*. This module provides the
-//! in-process equivalent: typed specs registered by name, a status/phase
-//! state machine per resource, and a reconciler that validates references
-//! between resources (an Experiment referencing a missing DataSet is
-//! flagged, exactly like a controller would set a condition).
+//! in-process equivalent: typed specs ([`spec::ResourceSpec`]) registered
+//! by name, a status/phase state machine per resource, a reconciler that
+//! validates specs and resolves references between resources (an
+//! Experiment referencing a missing DataSet is flagged, exactly like a
+//! controller would set a condition — and *heals* once the dependency is
+//! applied), and a [`controller::Controller`] that topologically orders
+//! the reference DAG and executes Ready resources through the existing
+//! experiment/campaign/twin/bizsim paths.
+//!
+//! Manifests (`plantd apply -f manifest.json`) are the serialized form;
+//! [`Registry::to_json`] / [`Registry::from_json`] persist the whole
+//! registry (specs, phases, conditions, statuses) across CLI invocations.
+
+pub mod controller;
+pub mod spec;
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
+
+use spec::TypedSpec;
 
 /// Resource kinds (mirrors the operator's CRDs, Fig. 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -24,7 +38,7 @@ pub enum Kind {
     LoadPattern,
     /// Pipeline-under-test deployment.
     Pipeline,
-    /// One wind-tunnel run.
+    /// One wind-tunnel run (or a whole campaign grid).
     Experiment,
     /// Business-year traffic forecast.
     TrafficModel,
@@ -62,6 +76,19 @@ impl Kind {
             Kind::Simulation,
         ]
     }
+
+    /// Parse a kind name, case-insensitively and ignoring `_`/`-`
+    /// separators (`dataset`, `DataSet`, and `data-set` all resolve).
+    pub fn parse(s: &str) -> Option<Kind> {
+        let norm: String = s
+            .chars()
+            .filter(|c| *c != '_' && *c != '-')
+            .collect::<String>()
+            .to_ascii_lowercase();
+        Kind::all()
+            .into_iter()
+            .find(|k| k.as_str().to_ascii_lowercase() == norm)
+    }
 }
 
 /// Lifecycle phase (the paper's experiment list shows these states in the
@@ -91,9 +118,22 @@ impl Phase {
             Phase::Failed => "Failed",
         }
     }
+
+    /// Parse a phase display name.
+    pub fn parse(s: &str) -> Option<Phase> {
+        [
+            Phase::Pending,
+            Phase::Ready,
+            Phase::Engaged,
+            Phase::Completed,
+            Phase::Failed,
+        ]
+        .into_iter()
+        .find(|p| p.as_str() == s)
+    }
 }
 
-/// A registered resource: spec (JSON), phase, and status conditions.
+/// A registered resource: spec (JSON), phase, status, and conditions.
 #[derive(Debug, Clone)]
 pub struct Resource {
     /// Resource kind.
@@ -104,25 +144,69 @@ pub struct Resource {
     pub spec: Json,
     /// Current lifecycle phase.
     pub phase: Phase,
-    /// Human-readable condition messages (most recent last).
+    /// Execution result summary, as JSON (`Null` until the controller
+    /// completes a run — e.g. an Experiment's fitted twins land here).
+    pub status: Json,
+    /// Human-readable condition messages (most recent last; bounded to
+    /// the most recent [`MAX_CONDITIONS`], so repeated runs cannot grow
+    /// the persisted registry without limit).
     pub conditions: Vec<String>,
 }
 
-/// Which spec keys of each kind reference other resources.
-fn reference_fields(kind: Kind) -> &'static [(&'static str, Kind)] {
-    match kind {
-        Kind::DataSet => &[("schema", Kind::Schema)],
-        Kind::Experiment => &[
-            ("dataset", Kind::DataSet),
-            ("load_pattern", Kind::LoadPattern),
-            ("pipeline", Kind::Pipeline),
-        ],
-        Kind::DigitalTwin => &[("experiment", Kind::Experiment)],
-        Kind::Simulation => &[
-            ("twin", Kind::DigitalTwin),
-            ("traffic_model", Kind::TrafficModel),
-        ],
-        _ => &[],
+/// How many condition messages a resource retains (most recent kept).
+pub const MAX_CONDITIONS: usize = 32;
+
+/// Drop the oldest conditions beyond [`MAX_CONDITIONS`].
+fn trim_conditions(conditions: &mut Vec<String>) {
+    if conditions.len() > MAX_CONDITIONS {
+        let excess = conditions.len() - MAX_CONDITIONS;
+        conditions.drain(..excess);
+    }
+}
+
+impl Resource {
+    /// Serialize for registry persistence.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.as_str())),
+            ("name", Json::str(self.name.clone())),
+            ("spec", self.spec.clone()),
+            ("phase", Json::str(self.phase.as_str())),
+            ("status", self.status.clone()),
+            (
+                "conditions",
+                Json::arr(self.conditions.iter().map(|c| Json::str(c.clone()))),
+            ),
+        ])
+    }
+
+    /// Parse a persisted resource.
+    pub fn from_json(j: &Json) -> Result<Resource, String> {
+        let kind_s = j.get_str("kind").ok_or("resource: missing 'kind'")?;
+        let kind =
+            Kind::parse(kind_s).ok_or_else(|| format!("resource: unknown kind '{kind_s}'"))?;
+        let phase_s = j.get_str("phase").unwrap_or("Pending");
+        let phase = Phase::parse(phase_s)
+            .ok_or_else(|| format!("resource: unknown phase '{phase_s}'"))?;
+        Ok(Resource {
+            kind,
+            name: j
+                .get_str("name")
+                .ok_or("resource: missing 'name'")?
+                .to_string(),
+            spec: j.get("spec").cloned().unwrap_or(Json::Null),
+            phase,
+            status: j.get("status").cloned().unwrap_or(Json::Null),
+            conditions: j
+                .get("conditions")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|c| c.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
     }
 }
 
@@ -138,19 +222,27 @@ impl Registry {
         Self::default()
     }
 
-    /// Register (or replace) a resource spec; starts `Pending`.
+    /// Register (or replace) a resource spec. A *changed* spec resets the
+    /// resource to `Pending` with a cleared status; re-applying a
+    /// byte-identical spec is a no-op that preserves the current phase,
+    /// status, and conditions (so `apply && run && apply` does not throw
+    /// away completed results — kubectl-style idempotence).
     pub fn apply(&self, kind: Kind, name: &str, spec: Json) -> Resource {
+        let mut map = self.inner.lock().unwrap();
+        if let Some(existing) = map.get(&(kind, name.to_string())) {
+            if existing.spec == spec {
+                return existing.clone();
+            }
+        }
         let res = Resource {
             kind,
             name: name.to_string(),
             spec,
             phase: Phase::Pending,
+            status: Json::Null,
             conditions: vec![],
         };
-        self.inner
-            .lock()
-            .unwrap()
-            .insert((kind, name.to_string()), res.clone());
+        map.insert((kind, name.to_string()), res.clone());
         res
     }
 
@@ -163,13 +255,49 @@ impl Registry {
             .cloned()
     }
 
-    /// Remove a resource; returns whether it existed.
+    /// Remove a resource; returns whether it existed. `Ready` and
+    /// `Completed` dependents of the deleted resource are demoted back to
+    /// `Pending` with a dangling-reference condition (they will fail
+    /// reconciliation until the dependency is re-applied — and heal when
+    /// it is), so no dependent is left silently stale.
     pub fn delete(&self, kind: Kind, name: &str) -> bool {
-        self.inner
+        let existed = self
+            .inner
             .lock()
             .unwrap()
             .remove(&(kind, name.to_string()))
-            .is_some()
+            .is_some();
+        if !existed {
+            return false;
+        }
+        let snapshot: Vec<Resource> = {
+            let map = self.inner.lock().unwrap();
+            map.values().cloned().collect()
+        };
+        for r in snapshot {
+            if !matches!(r.phase, Phase::Ready | Phase::Completed) {
+                continue;
+            }
+            let depends = TypedSpec::parse(r.kind, &r.spec)
+                .map(|s| {
+                    s.dependencies()
+                        .iter()
+                        .any(|(k, n)| *k == kind && n == name)
+                })
+                .unwrap_or(false);
+            if depends {
+                self.set_phase(
+                    r.kind,
+                    &r.name,
+                    Phase::Pending,
+                    &format!(
+                        "dangling reference: {} '{name}' was deleted",
+                        kind.as_str()
+                    ),
+                );
+            }
+        }
+        true
     }
 
     /// All resources of one kind.
@@ -183,7 +311,13 @@ impl Registry {
             .collect()
     }
 
-    /// Transition a resource's phase, appending a condition message.
+    /// Every resource, in stable (kind, name) order.
+    pub fn list_all(&self) -> Vec<Resource> {
+        self.inner.lock().unwrap().values().cloned().collect()
+    }
+
+    /// Transition a resource's phase, appending a condition message
+    /// (conditions are bounded; see [`MAX_CONDITIONS`]).
     pub fn set_phase(&self, kind: Kind, name: &str, phase: Phase, condition: &str) {
         if let Some(r) = self
             .inner
@@ -193,13 +327,52 @@ impl Registry {
         {
             r.phase = phase;
             r.conditions.push(condition.to_string());
+            trim_conditions(&mut r.conditions);
         }
     }
 
-    /// One reconciliation pass: every `Pending` resource whose references
-    /// all resolve becomes `Ready`; broken references go `Failed` with a
-    /// condition naming the missing dependency. Returns the number of
-    /// resources whose phase changed.
+    /// Record an execution result summary on a resource.
+    pub fn set_status(&self, kind: Kind, name: &str, status: Json) {
+        if let Some(r) = self
+            .inner
+            .lock()
+            .unwrap()
+            .get_mut(&(kind, name.to_string()))
+        {
+            r.status = status;
+        }
+    }
+
+    /// Append a condition without changing the phase (used when a Failed
+    /// resource's failure *reason* changes between reconcile passes, and
+    /// for informational notes from the controller).
+    fn push_condition(&self, kind: Kind, name: &str, condition: &str) {
+        if let Some(r) = self
+            .inner
+            .lock()
+            .unwrap()
+            .get_mut(&(kind, name.to_string()))
+        {
+            r.conditions.push(condition.to_string());
+            trim_conditions(&mut r.conditions);
+        }
+    }
+
+    /// One reconciliation pass over every `Pending` **and** `Failed`
+    /// resource: the spec is parsed as its typed form and validated, and
+    /// its references are resolved. Resources whose spec parses, passes
+    /// validation, and whose references all resolve become `Ready`;
+    /// anything else goes (or stays) `Failed` with a condition naming the
+    /// problem. Re-evaluating `Failed` resources is what gives the
+    /// registry eventual consistency: applying a missing dependency later
+    /// heals the dependent on the next pass, like a real controller.
+    /// *Execution* failures (the controller stores an `"error"` status)
+    /// are exempt — the spec was valid, so validation cannot heal them;
+    /// they persist until a re-run succeeds or the spec changes.
+    ///
+    /// Returns the number of resources whose **phase actually changed**
+    /// (a Failed resource staying Failed does not count, so
+    /// `while reconcile() > 0 {}` terminates).
     pub fn reconcile(&self) -> usize {
         let snapshot: Vec<Resource> = {
             let map = self.inner.lock().unwrap();
@@ -207,29 +380,49 @@ impl Registry {
         };
         let mut changed = 0;
         for res in snapshot {
-            if res.phase != Phase::Pending {
+            if !matches!(res.phase, Phase::Pending | Phase::Failed) {
                 continue;
             }
-            let mut missing = Vec::new();
-            for (field, target_kind) in reference_fields(res.kind) {
-                match res.spec.get(field).and_then(Json::as_str) {
-                    Some(target) => {
-                        if self.get(*target_kind, target).is_none() {
-                            missing.push(format!(
-                                "{field}: {} '{target}' not found",
-                                target_kind.as_str()
-                            ));
+            // an *execution* failure (controller-set "error" status) is
+            // not healed by validation: the spec was always fine, so
+            // flipping back to Ready here would mask the runtime failure
+            // from `get --check`. It clears on re-run or on a spec change
+            // (apply resets the status).
+            if res.phase == Phase::Failed && res.status.get("error").is_some() {
+                continue;
+            }
+            let verdict = TypedSpec::parse(res.kind, &res.spec).and_then(|spec| {
+                spec.validate()?;
+                let missing: Vec<String> = spec
+                    .dependencies()
+                    .iter()
+                    .filter(|(k, n)| self.get(*k, n).is_none())
+                    .map(|(k, n)| format!("{} '{n}' not found", k.as_str()))
+                    .collect();
+                if missing.is_empty() {
+                    Ok(())
+                } else {
+                    Err(missing.join("; "))
+                }
+            });
+            match verdict {
+                Ok(()) => {
+                    self.set_phase(res.kind, &res.name, Phase::Ready, "all references resolved");
+                    changed += 1;
+                }
+                Err(msg) => {
+                    if res.phase == Phase::Failed {
+                        // still failed: phase unchanged; only record the
+                        // condition if the reason moved
+                        if res.conditions.last().map(String::as_str) != Some(msg.as_str()) {
+                            self.push_condition(res.kind, &res.name, &msg);
                         }
+                    } else {
+                        self.set_phase(res.kind, &res.name, Phase::Failed, &msg);
+                        changed += 1;
                     }
-                    None => missing.push(format!("{field}: reference missing from spec")),
                 }
             }
-            if missing.is_empty() {
-                self.set_phase(res.kind, &res.name, Phase::Ready, "all references resolved");
-            } else {
-                self.set_phase(res.kind, &res.name, Phase::Failed, &missing.join("; "));
-            }
-            changed += 1;
         }
         changed
     }
@@ -240,6 +433,55 @@ impl Registry {
             .into_iter()
             .map(|k| (k, self.list(k).len()))
             .collect()
+    }
+
+    /// Serialize the whole registry (specs, phases, statuses, conditions).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "resources",
+            Json::arr(self.list_all().iter().map(Resource::to_json)),
+        )])
+    }
+
+    /// Rebuild a registry from [`Registry::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<Registry, String> {
+        let reg = Registry::new();
+        let arr = j
+            .get("resources")
+            .and_then(Json::as_arr)
+            .ok_or("registry: missing 'resources'")?;
+        let mut map = reg.inner.lock().unwrap();
+        for rj in arr {
+            let r = Resource::from_json(rj)?;
+            map.insert((r.kind, r.name.clone()), r);
+        }
+        drop(map);
+        Ok(reg)
+    }
+
+    /// Load a persisted registry; a missing file yields an empty registry.
+    pub fn load(path: &std::path::Path) -> Result<Registry, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                let j = Json::parse(&text)
+                    .map_err(|e| format!("{}: {e}", path.display()))?;
+                Registry::from_json(&j)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Registry::new()),
+            Err(e) => Err(format!("{}: {e}", path.display())),
+        }
+    }
+
+    /// Persist the registry as pretty JSON (parent directories created).
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| format!("{}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .map_err(|e| format!("{}: {e}", path.display()))
     }
 }
 
@@ -259,6 +501,36 @@ mod tests {
         assert!(r.get(Kind::Schema, "ghost").is_none());
         assert!(r.delete(Kind::Schema, "engine"));
         assert!(!r.delete(Kind::Schema, "engine"));
+    }
+
+    #[test]
+    fn reapplying_an_unchanged_spec_preserves_phase_and_status() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.reconcile();
+        r.set_phase(Kind::Schema, "s", Phase::Completed, "ran");
+        r.set_status(Kind::Schema, "s", Json::parse(r#"{"fields": 0}"#).unwrap());
+        // same spec: no-op
+        r.apply(Kind::Schema, "s", Json::Null);
+        let s = r.get(Kind::Schema, "s").unwrap();
+        assert_eq!(s.phase, Phase::Completed, "unchanged apply must not reset");
+        assert_ne!(s.status, Json::Null);
+        // changed spec: back to Pending with a cleared status
+        r.apply(Kind::Schema, "s", Json::parse(r#"{"fields": []}"#).unwrap());
+        let s = r.get(Kind::Schema, "s").unwrap();
+        assert_eq!(s.phase, Phase::Pending);
+        assert_eq!(s.status, Json::Null);
+    }
+
+    #[test]
+    fn kind_and_phase_parse() {
+        assert_eq!(Kind::parse("DataSet"), Some(Kind::DataSet));
+        assert_eq!(Kind::parse("dataset"), Some(Kind::DataSet));
+        assert_eq!(Kind::parse("load_pattern"), Some(Kind::LoadPattern));
+        assert_eq!(Kind::parse("digital-twin"), Some(Kind::DigitalTwin));
+        assert_eq!(Kind::parse("nope"), None);
+        assert_eq!(Phase::parse("Ready"), Some(Phase::Ready));
+        assert_eq!(Phase::parse("ready"), None);
     }
 
     #[test]
@@ -285,8 +557,17 @@ mod tests {
             Json::parse(r#"{"dataset": "nope", "load_pattern": "p", "pipeline": "x"}"#)
                 .unwrap(),
         );
-        r.apply(Kind::LoadPattern, "p", Json::Null);
-        r.apply(Kind::Pipeline, "x", Json::Null);
+        r.apply(
+            Kind::LoadPattern,
+            "p",
+            Json::parse(r#"{"segments": [{"duration_s": 5, "start_rps": 1, "end_rps": 1}]}"#)
+                .unwrap(),
+        );
+        r.apply(
+            Kind::Pipeline,
+            "x",
+            Json::parse(r#"{"variant": "blocking-write"}"#).unwrap(),
+        );
         r.reconcile();
         let e = r.get(Kind::Experiment, "e").unwrap();
         assert_eq!(e.phase, Phase::Failed);
@@ -312,9 +593,125 @@ mod tests {
     }
 
     #[test]
+    fn reconcile_heals_failed_resources_when_dependency_appears() {
+        // the eventual-consistency satellite: a dependent applied before
+        // its dependency fails, then heals on a later pass
+        let r = reg();
+        r.apply(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"schema": "late"}"#).unwrap(),
+        );
+        assert_eq!(r.reconcile(), 1); // Pending -> Failed
+        assert_eq!(r.get(Kind::DataSet, "d").unwrap().phase, Phase::Failed);
+        // a settled-but-failed registry reports no churn
+        assert_eq!(r.reconcile(), 0);
+        // now the dependency shows up
+        r.apply(Kind::Schema, "late", Json::Null);
+        let changed = r.reconcile();
+        assert_eq!(changed, 2, "schema promoted + dataset healed");
+        assert_eq!(r.get(Kind::DataSet, "d").unwrap().phase, Phase::Ready);
+    }
+
+    #[test]
+    fn reconcile_does_not_spam_repeat_failure_conditions() {
+        let r = reg();
+        r.apply(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"schema": "late"}"#).unwrap(),
+        );
+        r.reconcile();
+        let before = r.get(Kind::DataSet, "d").unwrap().conditions.len();
+        r.reconcile();
+        r.reconcile();
+        let after = r.get(Kind::DataSet, "d").unwrap().conditions.len();
+        assert_eq!(before, after, "same failure must not re-append conditions");
+    }
+
+    #[test]
+    fn reconcile_fails_invalid_specs() {
+        let r = reg();
+        r.apply(
+            Kind::Pipeline,
+            "p",
+            Json::parse(r#"{"variant": "warp-drive"}"#).unwrap(),
+        );
+        r.reconcile();
+        let p = r.get(Kind::Pipeline, "p").unwrap();
+        assert_eq!(p.phase, Phase::Failed);
+        assert!(p.conditions.last().unwrap().contains("warp-drive"));
+    }
+
+    #[test]
+    fn delete_demotes_ready_dependents() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.apply(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"schema": "s"}"#).unwrap(),
+        );
+        r.reconcile();
+        assert_eq!(r.get(Kind::DataSet, "d").unwrap().phase, Phase::Ready);
+        assert!(r.delete(Kind::Schema, "s"));
+        let d = r.get(Kind::DataSet, "d").unwrap();
+        assert_eq!(d.phase, Phase::Pending, "dependent must demote, not stay stale");
+        assert!(d.conditions.last().unwrap().contains("dangling reference"));
+        // next reconcile marks it Failed (reference really is gone)...
+        r.reconcile();
+        assert_eq!(r.get(Kind::DataSet, "d").unwrap().phase, Phase::Failed);
+        // ...and re-applying the schema heals it
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.reconcile();
+        assert_eq!(r.get(Kind::DataSet, "d").unwrap().phase, Phase::Ready);
+    }
+
+    #[test]
+    fn delete_demotes_completed_dependents_too() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.apply(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"schema": "s"}"#).unwrap(),
+        );
+        r.reconcile();
+        r.set_phase(Kind::DataSet, "d", Phase::Completed, "ran");
+        assert!(r.delete(Kind::Schema, "s"));
+        let d = r.get(Kind::DataSet, "d").unwrap();
+        assert_eq!(d.phase, Phase::Pending, "Completed dependent must demote");
+        assert!(d.conditions.last().unwrap().contains("dangling reference"));
+    }
+
+    #[test]
+    fn execution_failures_are_not_healed_by_reconcile() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.reconcile();
+        // simulate the controller recording an execution failure
+        r.set_status(
+            Kind::Schema,
+            "s",
+            Json::parse(r#"{"error": "execution failed: disk full"}"#).unwrap(),
+        );
+        r.set_phase(Kind::Schema, "s", Phase::Failed, "execution failed: disk full");
+        assert_eq!(r.reconcile(), 0, "validation must not mask a runtime failure");
+        assert_eq!(r.get(Kind::Schema, "s").unwrap().phase, Phase::Failed);
+        // a spec change clears the marker and reconciles normally
+        r.apply(Kind::Schema, "s", Json::parse(r#"{"fields": []}"#).unwrap());
+        r.reconcile();
+        assert_eq!(r.get(Kind::Schema, "s").unwrap().phase, Phase::Ready);
+    }
+
+    #[test]
     fn engaged_phase_transitions() {
         let r = reg();
-        r.apply(Kind::Pipeline, "p", Json::Null);
+        r.apply(
+            Kind::Pipeline,
+            "p",
+            Json::parse(r#"{"variant": "blocking-write"}"#).unwrap(),
+        );
         r.reconcile();
         r.set_phase(Kind::Pipeline, "p", Phase::Engaged, "experiment exp-1 started");
         assert_eq!(r.get(Kind::Pipeline, "p").unwrap().phase, Phase::Engaged);
@@ -322,6 +719,22 @@ mod tests {
         let p = r.get(Kind::Pipeline, "p").unwrap();
         assert_eq!(p.phase, Phase::Ready);
         assert_eq!(p.conditions.len(), 3);
+    }
+
+    #[test]
+    fn conditions_are_bounded() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        for i in 0..(MAX_CONDITIONS * 3) {
+            r.set_phase(Kind::Schema, "s", Phase::Ready, &format!("pass {i}"));
+        }
+        let s = r.get(Kind::Schema, "s").unwrap();
+        assert_eq!(s.conditions.len(), MAX_CONDITIONS);
+        // most recent kept
+        assert_eq!(
+            s.conditions.last().unwrap(),
+            &format!("pass {}", MAX_CONDITIONS * 3 - 1)
+        );
     }
 
     #[test]
@@ -336,5 +749,42 @@ mod tests {
         assert_eq!(summary[&Kind::Schema], 2);
         assert_eq!(summary[&Kind::Pipeline], 1);
         assert_eq!(summary[&Kind::Simulation], 0);
+    }
+
+    #[test]
+    fn registry_json_roundtrip_preserves_everything() {
+        let r = reg();
+        r.apply(Kind::Schema, "s", Json::Null);
+        r.apply(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"schema": "s", "payloads": 4}"#).unwrap(),
+        );
+        r.reconcile();
+        r.set_status(
+            Kind::DataSet,
+            "d",
+            Json::parse(r#"{"payloads": 4}"#).unwrap(),
+        );
+        let j = r.to_json();
+        let back = Registry::from_json(&j).unwrap();
+        assert_eq!(
+            back.to_json().to_string_pretty(),
+            j.to_string_pretty(),
+            "persistence round-trip must be lossless"
+        );
+        let d = back.get(Kind::DataSet, "d").unwrap();
+        assert_eq!(d.phase, Phase::Ready);
+        assert_eq!(d.status.get_u64("payloads"), Some(4));
+        assert_eq!(d.conditions.len(), 1);
+    }
+
+    #[test]
+    fn registry_load_missing_file_is_empty() {
+        let r = Registry::load(std::path::Path::new(
+            "/nonexistent/plantd-test/registry.json",
+        ))
+        .unwrap();
+        assert!(r.list_all().is_empty());
     }
 }

@@ -1,0 +1,980 @@
+//! Typed resource specs: the schema layer between raw manifest JSON and
+//! the domain types the execution paths consume.
+//!
+//! Every [`super::Kind`] has a spec struct implementing [`ResourceSpec`]:
+//! `from_json` / `to_json` (via [`crate::util::json::Json`]), `validate`
+//! (shape checks beyond parsing), and `dependencies` (the typed reference
+//! edges the reconciler resolves — an Experiment names its DataSet,
+//! LoadPattern, and Pipeline(s); a Simulation names its DigitalTwin(s)
+//! and TrafficModel(s)). Serialization is a fixed point: for any spec,
+//! `parse(to_json(s)) == s` and the pretty output is byte-identical on
+//! the second round — the property `tests/property_invariants.rs` checks.
+//!
+//! [`TypedSpec`] is the closed-world dispatcher the [`super::Registry`]
+//! reconciler and the [`super::controller::Controller`] use to treat all
+//! eight kinds uniformly.
+
+use crate::campaign::Campaign;
+use crate::datagen::{DataSetSpec, FieldSpec};
+use crate::loadgen::LoadPattern;
+use crate::pipeline::VariantConfig;
+use crate::traffic::TrafficModel;
+use crate::twin::TwinParams;
+use crate::util::cli::seed_from_json;
+use crate::util::json::Json;
+
+use super::Kind;
+
+/// Read a seed field: a `"0x…"`/decimal string (full u64 range) or a
+/// plain number (f64-limited). Specs serialize seeds as hex strings so
+/// a persisted registry never rounds a seed.
+fn seed_field(j: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => seed_from_json(v)
+            .ok_or_else(|| format!("{key}: expected an integer or seed string")),
+    }
+}
+
+/// Canonical serialized form of a seed (see [`seed_field`]): a hex
+/// string, so the full u64 range survives JSON.
+pub(crate) fn seed_json(seed: u64) -> Json {
+    Json::str(format!("{seed:#x}"))
+}
+
+/// Read an optional unsigned-integer field: absent → default, present
+/// with the wrong type → error (a quoted number must not silently
+/// become the default).
+fn u64_field(j: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| format!("{key}: expected a non-negative integer")),
+    }
+}
+
+/// Read an optional numeric field: absent → default, present with the
+/// wrong type → error.
+fn f64_field(j: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("{key}: expected a number")),
+    }
+}
+
+/// Read an optional string field: absent → default, present with the
+/// wrong type → error.
+fn str_field(j: &Json, key: &str, default: &str) -> Result<String, String> {
+    match j.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| format!("{key}: expected a string")),
+    }
+}
+
+/// The contract every typed resource spec implements.
+pub trait ResourceSpec: Sized {
+    /// The [`Kind`] this spec describes.
+    const KIND: Kind;
+
+    /// Parse from the manifest's `spec` JSON.
+    fn from_json(j: &Json) -> Result<Self, String>;
+
+    /// Serialize back to canonical spec JSON (a fixed point under
+    /// `from_json` ∘ `to_json`).
+    fn to_json(&self) -> Json;
+
+    /// Shape checks beyond parsing (ranges, known names).
+    fn validate(&self) -> Result<(), String> {
+        Ok(())
+    }
+
+    /// Typed reference edges to other resources, `(kind, name)`.
+    fn dependencies(&self) -> Vec<(Kind, String)> {
+        Vec::new()
+    }
+}
+
+// ---------------------------------------------------------------- Schema
+
+/// *Schema* spec: the field list for the data generator. An empty field
+/// list means the built-in telematics wire schema (five fixed subsystem
+/// record layouts, §VI.A) — the paper's automotive case study needs no
+/// custom fields.
+#[derive(Debug, Clone)]
+pub struct SchemaSpec {
+    /// Ordered field generators; empty = built-in telematics wire schema.
+    pub fields: Vec<FieldSpec>,
+}
+
+impl ResourceSpec for SchemaSpec {
+    const KIND: Kind = Kind::Schema;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let mut fields = Vec::new();
+        if let Some(v) = j.get("fields") {
+            let arr = v.as_arr().ok_or("fields: expected an array")?;
+            for f in arr {
+                fields.push(FieldSpec::from_json(f)?);
+            }
+        }
+        Ok(SchemaSpec { fields })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "fields",
+            Json::arr(self.fields.iter().map(FieldSpec::to_json)),
+        )])
+    }
+}
+
+// --------------------------------------------------------------- DataSet
+
+/// *DataSet* spec: synthesis parameters plus the Schema reference.
+/// Converts to [`crate::datagen::DataSetSpec`].
+#[derive(Debug, Clone)]
+pub struct DataSetSpecRes {
+    /// Referenced Schema resource name.
+    pub schema: String,
+    /// Number of distinct payloads to pre-generate.
+    pub payloads: usize,
+    /// Telemetry samples per subsystem file.
+    pub records_per_subsystem: usize,
+    /// Probability a generated value is corrupt.
+    pub bad_rate: f64,
+    /// RNG seed (datasets replay bit-identically).
+    pub seed: u64,
+}
+
+impl DataSetSpecRes {
+    /// Convert to the domain synthesis parameters.
+    pub fn to_dataset_spec(&self) -> DataSetSpec {
+        DataSetSpec {
+            payloads: self.payloads,
+            records_per_subsystem: self.records_per_subsystem,
+            bad_rate: self.bad_rate,
+            seed: self.seed,
+        }
+    }
+}
+
+impl ResourceSpec for DataSetSpecRes {
+    const KIND: Kind = Kind::DataSet;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let schema = j
+            .get_str("schema")
+            .ok_or("schema: reference missing from spec")?
+            .to_string();
+        let d = DataSetSpec::default();
+        Ok(DataSetSpecRes {
+            schema,
+            payloads: u64_field(j, "payloads", d.payloads as u64)? as usize,
+            records_per_subsystem: u64_field(
+                j,
+                "records_per_subsystem",
+                d.records_per_subsystem as u64,
+            )? as usize,
+            bad_rate: f64_field(j, "bad_rate", d.bad_rate)?,
+            seed: seed_field(j, "seed", d.seed)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(self.schema.clone())),
+            ("payloads", Json::Num(self.payloads as f64)),
+            (
+                "records_per_subsystem",
+                Json::Num(self.records_per_subsystem as f64),
+            ),
+            ("bad_rate", Json::Num(self.bad_rate)),
+            ("seed", seed_json(self.seed)),
+        ])
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.payloads == 0 {
+            return Err("dataset: payloads must be > 0".into());
+        }
+        if self.records_per_subsystem == 0 {
+            return Err("dataset: records_per_subsystem must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.bad_rate) {
+            return Err("dataset: bad_rate must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+
+    fn dependencies(&self) -> Vec<(Kind, String)> {
+        vec![(Kind::Schema, self.schema.clone())]
+    }
+}
+
+// ----------------------------------------------------------- LoadPattern
+
+/// *LoadPattern* spec: a newtype over the domain [`LoadPattern`].
+#[derive(Debug, Clone)]
+pub struct LoadPatternSpec(
+    /// The piecewise-linear pattern itself.
+    pub LoadPattern,
+);
+
+impl ResourceSpec for LoadPatternSpec {
+    const KIND: Kind = Kind::LoadPattern;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        LoadPattern::from_json(j).map(LoadPatternSpec)
+    }
+
+    fn to_json(&self) -> Json {
+        self.0.to_json()
+    }
+}
+
+// -------------------------------------------------------------- Pipeline
+
+/// *Pipeline* spec: which predefined pipeline-under-test variant to
+/// deploy. Resolves through [`VariantConfig::by_name`].
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    /// Variant name (`blocking-write`, `no-blocking-write`, `cpu-limited`).
+    pub variant: String,
+}
+
+impl PipelineSpec {
+    /// Resolve to the deployable variant configuration.
+    pub fn to_variant(&self) -> Result<VariantConfig, String> {
+        VariantConfig::by_name(&self.variant).ok_or_else(|| {
+            format!(
+                "pipeline: unknown variant '{}' (known: {})",
+                self.variant,
+                VariantConfig::known_names().join(", ")
+            )
+        })
+    }
+}
+
+impl ResourceSpec for PipelineSpec {
+    const KIND: Kind = Kind::Pipeline;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        Ok(PipelineSpec {
+            variant: j
+                .get_str("variant")
+                .ok_or("pipeline: missing 'variant'")?
+                .to_string(),
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("variant", Json::str(self.variant.clone()))])
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        self.to_variant().map(|_| ())
+    }
+}
+
+// ------------------------------------------------------------ Experiment
+
+/// *Experiment* spec: either one wind-tunnel run (dataset × load pattern
+/// × pipeline variants, executed on the [`crate::experiment`] harness) or
+/// a whole campaign grid (executed by [`crate::campaign::CampaignRunner`]).
+#[derive(Debug, Clone)]
+pub enum ExperimentSpec {
+    /// One wind-tunnel run over the referenced resources.
+    WindTunnel {
+        /// Referenced DataSet resource name.
+        dataset: String,
+        /// Referenced LoadPattern resource name.
+        load_pattern: String,
+        /// Referenced Pipeline resource names, run in order on a shared
+        /// harness (the paper's three-variant comparison is one
+        /// experiment with three pipelines).
+        pipelines: Vec<String>,
+        /// Execution mode: `real` (threaded wall clock), `sim` (virtual
+        /// time on the sim kernel), or `both` (run both, report delta).
+        mode: String,
+        /// Clock scale, virtual seconds per wall second (`real` mode).
+        scale: f64,
+    },
+    /// A {variant × load × dataset} sweep by named grid preset.
+    Campaign {
+        /// Grid preset name (`paper` or `extended`).
+        grid: String,
+        /// Campaign master seed (same seed ⇒ byte-identical report).
+        seed: u64,
+        /// Worker threads for the cell grid.
+        threads: usize,
+        /// Optional directory to write `campaign.json` into.
+        out: Option<String>,
+    },
+}
+
+impl ResourceSpec for ExperimentSpec {
+    const KIND: Kind = Kind::Experiment;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        if let Some(c) = j.get("campaign") {
+            let out = match c.get("out") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or("out: expected a string")?,
+                ),
+            };
+            return Ok(ExperimentSpec::Campaign {
+                grid: str_field(c, "grid", "paper")?,
+                seed: seed_field(c, "seed", 0xD5)?,
+                threads: u64_field(c, "threads", 4)? as usize,
+                out,
+            });
+        }
+        let dataset = j
+            .get_str("dataset")
+            .ok_or("dataset: reference missing from spec")?
+            .to_string();
+        let load_pattern = j
+            .get_str("load_pattern")
+            .ok_or("load_pattern: reference missing from spec")?
+            .to_string();
+        let pipelines: Vec<String> = if let Some(arr) =
+            j.get("pipelines").and_then(Json::as_arr)
+        {
+            arr.iter()
+                .map(|p| {
+                    p.as_str()
+                        .map(str::to_string)
+                        .ok_or("pipelines: entries must be strings".to_string())
+                })
+                .collect::<Result<_, _>>()?
+        } else if let Some(p) = j.get_str("pipeline") {
+            vec![p.to_string()]
+        } else {
+            return Err("pipeline: reference missing from spec".into());
+        };
+        Ok(ExperimentSpec::WindTunnel {
+            dataset,
+            load_pattern,
+            pipelines,
+            mode: str_field(j, "mode", "real")?,
+            scale: f64_field(j, "scale", 60.0)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ExperimentSpec::WindTunnel {
+                dataset,
+                load_pattern,
+                pipelines,
+                mode,
+                scale,
+            } => Json::obj(vec![
+                ("dataset", Json::str(dataset.clone())),
+                ("load_pattern", Json::str(load_pattern.clone())),
+                (
+                    "pipelines",
+                    Json::arr(pipelines.iter().map(|p| Json::str(p.clone()))),
+                ),
+                ("mode", Json::str(mode.clone())),
+                ("scale", Json::Num(*scale)),
+            ]),
+            ExperimentSpec::Campaign {
+                grid,
+                seed,
+                threads,
+                out,
+            } => {
+                let mut inner = vec![
+                    ("grid", Json::str(grid.clone())),
+                    ("seed", seed_json(*seed)),
+                    ("threads", Json::Num(*threads as f64)),
+                ];
+                if let Some(dir) = out {
+                    inner.push(("out", Json::str(dir.clone())));
+                }
+                Json::obj(vec![("campaign", Json::obj(inner))])
+            }
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        match self {
+            ExperimentSpec::WindTunnel {
+                pipelines,
+                mode,
+                scale,
+                ..
+            } => {
+                if pipelines.is_empty() {
+                    return Err("experiment: needs at least one pipeline".into());
+                }
+                if !matches!(mode.as_str(), "real" | "sim" | "both") {
+                    return Err(format!(
+                        "experiment: unknown mode '{mode}' (real|sim|both)"
+                    ));
+                }
+                if *scale <= 0.0 {
+                    return Err("experiment: scale must be > 0".into());
+                }
+                Ok(())
+            }
+            ExperimentSpec::Campaign { grid, threads, .. } => {
+                Campaign::from_grid_name(grid, 0)?;
+                if *threads == 0 {
+                    return Err("campaign: threads must be > 0".into());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn dependencies(&self) -> Vec<(Kind, String)> {
+        match self {
+            ExperimentSpec::WindTunnel {
+                dataset,
+                load_pattern,
+                pipelines,
+                ..
+            } => {
+                let mut deps = vec![
+                    (Kind::DataSet, dataset.clone()),
+                    (Kind::LoadPattern, load_pattern.clone()),
+                ];
+                deps.extend(pipelines.iter().map(|p| (Kind::Pipeline, p.clone())));
+                deps
+            }
+            ExperimentSpec::Campaign { .. } => Vec::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------- TrafficModel
+
+/// *TrafficModel* spec: a named preset (`nominal` / `high`) or a full
+/// inline forecast parsed by [`TrafficModel::from_json`].
+#[derive(Debug, Clone)]
+pub struct TrafficModelSpec {
+    /// Preset name, if the spec was `{"preset": ...}`.
+    pub preset: Option<String>,
+    /// The resolved forecast.
+    pub model: TrafficModel,
+}
+
+impl ResourceSpec for TrafficModelSpec {
+    const KIND: Kind = Kind::TrafficModel;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        if let Some(p) = j.get_str("preset") {
+            let model = match p {
+                "nominal" => TrafficModel::nominal(),
+                "high" => TrafficModel::high(),
+                other => {
+                    return Err(format!(
+                        "traffic model: unknown preset '{other}' (nominal|high)"
+                    ))
+                }
+            };
+            return Ok(TrafficModelSpec {
+                preset: Some(p.to_string()),
+                model,
+            });
+        }
+        Ok(TrafficModelSpec {
+            preset: None,
+            model: TrafficModel::from_json(j)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        match &self.preset {
+            Some(p) => Json::obj(vec![("preset", Json::str(p.clone()))]),
+            None => self.model.to_json(),
+        }
+    }
+}
+
+// ----------------------------------------------------------- DigitalTwin
+
+/// *DigitalTwin* spec: where the twin parameters come from.
+#[derive(Debug, Clone)]
+pub enum DigitalTwinSpec {
+    /// Fit from a completed Experiment's records (one twin per pipeline
+    /// variant the experiment ran).
+    FromExperiment {
+        /// Referenced Experiment resource name.
+        experiment: String,
+    },
+    /// The paper's published Table I parameters (all three variants).
+    Paper,
+    /// Explicit parameters ([`TwinParams::from_json`] form).
+    Params(TwinParams),
+}
+
+impl ResourceSpec for DigitalTwinSpec {
+    const KIND: Kind = Kind::DigitalTwin;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        if let Some(e) = j.get_str("experiment") {
+            return Ok(DigitalTwinSpec::FromExperiment {
+                experiment: e.to_string(),
+            });
+        }
+        if j.get("paper").and_then(Json::as_bool).unwrap_or(false) {
+            return Ok(DigitalTwinSpec::Paper);
+        }
+        if let Some(p) = j.get("params") {
+            return TwinParams::from_json(p).map(DigitalTwinSpec::Params);
+        }
+        Err("experiment: reference missing from spec (need 'experiment', \
+             'paper', or 'params')"
+            .into())
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            DigitalTwinSpec::FromExperiment { experiment } => {
+                Json::obj(vec![("experiment", Json::str(experiment.clone()))])
+            }
+            DigitalTwinSpec::Paper => Json::obj(vec![("paper", Json::Bool(true))]),
+            DigitalTwinSpec::Params(t) => Json::obj(vec![("params", t.to_json())]),
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if let DigitalTwinSpec::Params(t) = self {
+            if t.max_rps <= 0.0 {
+                return Err("twin: max_rps must be > 0".into());
+            }
+            if t.avg_latency_s < 0.0 {
+                return Err("twin: avg_latency_s must be >= 0".into());
+            }
+        }
+        Ok(())
+    }
+
+    fn dependencies(&self) -> Vec<(Kind, String)> {
+        match self {
+            DigitalTwinSpec::FromExperiment { experiment } => {
+                vec![(Kind::Experiment, experiment.clone())]
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+// ------------------------------------------------------------ Simulation
+
+/// *Simulation* spec: twin(s) × forecast(s) plus the SLO to evaluate.
+#[derive(Debug, Clone)]
+pub struct SimulationSpec {
+    /// Referenced DigitalTwin resource names (each may contribute
+    /// several twins, e.g. the paper's three-variant set).
+    pub twins: Vec<String>,
+    /// Referenced TrafficModel resource names, simulated in order.
+    pub traffic_models: Vec<String>,
+    /// SLO latency limit, hours.
+    pub slo_hours: f64,
+    /// SLO minimum fraction of hours meeting the limit.
+    pub slo_frac: f64,
+}
+
+impl ResourceSpec for SimulationSpec {
+    const KIND: Kind = Kind::Simulation;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let str_list = |plural: &str, singular: &str| -> Result<Vec<String>, String> {
+            if let Some(arr) = j.get(plural).and_then(Json::as_arr) {
+                arr.iter()
+                    .map(|v| {
+                        v.as_str()
+                            .map(str::to_string)
+                            .ok_or(format!("{plural}: entries must be strings"))
+                    })
+                    .collect()
+            } else if let Some(s) = j.get_str(singular) {
+                Ok(vec![s.to_string()])
+            } else {
+                Err(format!("{singular}: reference missing from spec"))
+            }
+        };
+        Ok(SimulationSpec {
+            twins: str_list("twins", "twin")?,
+            traffic_models: str_list("traffic_models", "traffic_model")?,
+            slo_hours: f64_field(j, "slo_hours", 4.0)?,
+            slo_frac: f64_field(j, "slo_frac", 0.95)?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slo_frac", Json::Num(self.slo_frac)),
+            ("slo_hours", Json::Num(self.slo_hours)),
+            (
+                "traffic_models",
+                Json::arr(self.traffic_models.iter().map(|t| Json::str(t.clone()))),
+            ),
+            (
+                "twins",
+                Json::arr(self.twins.iter().map(|t| Json::str(t.clone()))),
+            ),
+        ])
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.twins.is_empty() {
+            return Err("simulation: needs at least one twin".into());
+        }
+        if self.traffic_models.is_empty() {
+            return Err("simulation: needs at least one traffic model".into());
+        }
+        if self.slo_hours <= 0.0 {
+            return Err("simulation: slo_hours must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.slo_frac) {
+            return Err("simulation: slo_frac must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+
+    fn dependencies(&self) -> Vec<(Kind, String)> {
+        let mut deps: Vec<(Kind, String)> = self
+            .twins
+            .iter()
+            .map(|t| (Kind::DigitalTwin, t.clone()))
+            .collect();
+        deps.extend(
+            self.traffic_models
+                .iter()
+                .map(|t| (Kind::TrafficModel, t.clone())),
+        );
+        deps
+    }
+}
+
+// ------------------------------------------------------------ dispatcher
+
+/// A parsed spec of any kind — the closed-world dispatcher the registry
+/// reconciler and the controller share.
+#[derive(Debug, Clone)]
+pub enum TypedSpec {
+    /// Parsed *Schema* spec.
+    Schema(SchemaSpec),
+    /// Parsed *DataSet* spec.
+    DataSet(DataSetSpecRes),
+    /// Parsed *LoadPattern* spec.
+    LoadPattern(LoadPatternSpec),
+    /// Parsed *Pipeline* spec.
+    Pipeline(PipelineSpec),
+    /// Parsed *Experiment* spec.
+    Experiment(ExperimentSpec),
+    /// Parsed *TrafficModel* spec (boxed: the hour-of-week factor table
+    /// dwarfs every other variant).
+    TrafficModel(Box<TrafficModelSpec>),
+    /// Parsed *DigitalTwin* spec.
+    DigitalTwin(DigitalTwinSpec),
+    /// Parsed *Simulation* spec.
+    Simulation(SimulationSpec),
+}
+
+impl TypedSpec {
+    /// Parse a raw spec as the given kind.
+    pub fn parse(kind: Kind, j: &Json) -> Result<TypedSpec, String> {
+        Ok(match kind {
+            Kind::Schema => TypedSpec::Schema(SchemaSpec::from_json(j)?),
+            Kind::DataSet => TypedSpec::DataSet(DataSetSpecRes::from_json(j)?),
+            Kind::LoadPattern => TypedSpec::LoadPattern(LoadPatternSpec::from_json(j)?),
+            Kind::Pipeline => TypedSpec::Pipeline(PipelineSpec::from_json(j)?),
+            Kind::Experiment => TypedSpec::Experiment(ExperimentSpec::from_json(j)?),
+            Kind::TrafficModel => {
+                TypedSpec::TrafficModel(Box::new(TrafficModelSpec::from_json(j)?))
+            }
+            Kind::DigitalTwin => TypedSpec::DigitalTwin(DigitalTwinSpec::from_json(j)?),
+            Kind::Simulation => TypedSpec::Simulation(SimulationSpec::from_json(j)?),
+        })
+    }
+
+    /// The kind this spec describes.
+    pub fn kind(&self) -> Kind {
+        match self {
+            TypedSpec::Schema(_) => Kind::Schema,
+            TypedSpec::DataSet(_) => Kind::DataSet,
+            TypedSpec::LoadPattern(_) => Kind::LoadPattern,
+            TypedSpec::Pipeline(_) => Kind::Pipeline,
+            TypedSpec::Experiment(_) => Kind::Experiment,
+            TypedSpec::TrafficModel(_) => Kind::TrafficModel,
+            TypedSpec::DigitalTwin(_) => Kind::DigitalTwin,
+            TypedSpec::Simulation(_) => Kind::Simulation,
+        }
+    }
+
+    /// Canonical spec JSON (see [`ResourceSpec::to_json`]).
+    pub fn to_json(&self) -> Json {
+        match self {
+            TypedSpec::Schema(s) => s.to_json(),
+            TypedSpec::DataSet(s) => s.to_json(),
+            TypedSpec::LoadPattern(s) => s.to_json(),
+            TypedSpec::Pipeline(s) => s.to_json(),
+            TypedSpec::Experiment(s) => s.to_json(),
+            TypedSpec::TrafficModel(s) => s.to_json(),
+            TypedSpec::DigitalTwin(s) => s.to_json(),
+            TypedSpec::Simulation(s) => s.to_json(),
+        }
+    }
+
+    /// Shape checks beyond parsing (see [`ResourceSpec::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            TypedSpec::Schema(s) => s.validate(),
+            TypedSpec::DataSet(s) => s.validate(),
+            TypedSpec::LoadPattern(s) => s.validate(),
+            TypedSpec::Pipeline(s) => s.validate(),
+            TypedSpec::Experiment(s) => s.validate(),
+            TypedSpec::TrafficModel(s) => s.validate(),
+            TypedSpec::DigitalTwin(s) => s.validate(),
+            TypedSpec::Simulation(s) => s.validate(),
+        }
+    }
+
+    /// Typed reference edges (see [`ResourceSpec::dependencies`]).
+    pub fn dependencies(&self) -> Vec<(Kind, String)> {
+        match self {
+            TypedSpec::Schema(s) => s.dependencies(),
+            TypedSpec::DataSet(s) => s.dependencies(),
+            TypedSpec::LoadPattern(s) => s.dependencies(),
+            TypedSpec::Pipeline(s) => s.dependencies(),
+            TypedSpec::Experiment(s) => s.dependencies(),
+            TypedSpec::TrafficModel(s) => s.dependencies(),
+            TypedSpec::DigitalTwin(s) => s.dependencies(),
+            TypedSpec::Simulation(s) => s.dependencies(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixed_point(kind: Kind, raw: &str) {
+        let j = Json::parse(raw).unwrap();
+        let spec = TypedSpec::parse(kind, &j).unwrap();
+        let j1 = spec.to_json();
+        let spec2 = TypedSpec::parse(kind, &j1).unwrap();
+        assert_eq!(
+            j1.to_string_pretty(),
+            spec2.to_json().to_string_pretty(),
+            "{} spec round-trip not a fixed point",
+            kind.as_str()
+        );
+    }
+
+    #[test]
+    fn all_kinds_roundtrip_to_a_fixed_point() {
+        fixed_point(Kind::Schema, r#"{}"#);
+        fixed_point(
+            Kind::Schema,
+            r#"{"fields": [{"name": "vin", "kind": "vin"},
+                {"name": "rpm", "kind": "int", "lo": 0, "hi": 8000}]}"#,
+        );
+        fixed_point(Kind::DataSet, r#"{"schema": "s"}"#);
+        fixed_point(
+            Kind::DataSet,
+            r#"{"schema": "s", "payloads": 8, "records_per_subsystem": 3,
+                "bad_rate": 0.05, "seed": 7}"#,
+        );
+        // seeds above 2^53 only survive as strings — and they must
+        fixed_point(
+            Kind::DataSet,
+            r#"{"schema": "s", "seed": "0xdeadbeefdeadbeef"}"#,
+        );
+        fixed_point(
+            Kind::LoadPattern,
+            r#"{"segments": [{"duration_s": 120, "start_rps": 0, "end_rps": 40}]}"#,
+        );
+        fixed_point(Kind::Pipeline, r#"{"variant": "blocking-write"}"#);
+        fixed_point(
+            Kind::Experiment,
+            r#"{"dataset": "d", "load_pattern": "p", "pipeline": "x",
+                "mode": "sim", "scale": 60}"#,
+        );
+        fixed_point(
+            Kind::Experiment,
+            r#"{"campaign": {"grid": "paper", "seed": 213, "threads": 4}}"#,
+        );
+        fixed_point(Kind::TrafficModel, r#"{"preset": "nominal"}"#);
+        fixed_point(
+            Kind::TrafficModel,
+            r#"{"name": "custom", "base_rps": 2.5, "growth_factor": 1.1}"#,
+        );
+        fixed_point(Kind::DigitalTwin, r#"{"experiment": "e"}"#);
+        fixed_point(Kind::DigitalTwin, r#"{"paper": true}"#);
+        fixed_point(
+            Kind::DigitalTwin,
+            r#"{"params": {"name": "t", "kind": "simple", "max_rps": 2,
+                "cost_per_hr": 0.01, "avg_latency_s": 0.2}}"#,
+        );
+        fixed_point(
+            Kind::Simulation,
+            r#"{"twin": "t", "traffic_model": "m"}"#,
+        );
+        fixed_point(
+            Kind::Simulation,
+            r#"{"twins": ["a", "b"], "traffic_models": ["m", "n"],
+                "slo_hours": 2, "slo_frac": 0.99}"#,
+        );
+    }
+
+    #[test]
+    fn seed_strings_preserve_the_full_u64_range() {
+        let j = Json::parse(r#"{"schema": "s", "seed": "0xDEADBEEFDEADBEEF"}"#).unwrap();
+        match TypedSpec::parse(Kind::DataSet, &j).unwrap() {
+            TypedSpec::DataSet(d) => assert_eq!(d.seed, 0xDEAD_BEEF_DEAD_BEEF),
+            other => panic!("wrong parse: {other:?}"),
+        }
+        let j = Json::parse(
+            r#"{"campaign": {"grid": "paper", "seed": "0xDEADBEEFDEADBEEF"}}"#,
+        )
+        .unwrap();
+        match TypedSpec::parse(Kind::Experiment, &j).unwrap() {
+            TypedSpec::Experiment(ExperimentSpec::Campaign { seed, .. }) => {
+                assert_eq!(seed, 0xDEAD_BEEF_DEAD_BEEF)
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        // a malformed seed is a parse error, not a silent default
+        let j = Json::parse(r#"{"schema": "s", "seed": "junk"}"#).unwrap();
+        assert!(TypedSpec::parse(Kind::DataSet, &j).is_err());
+    }
+
+    #[test]
+    fn singular_and_plural_refs_normalize() {
+        let j = Json::parse(r#"{"dataset": "d", "load_pattern": "p", "pipeline": "x"}"#)
+            .unwrap();
+        match TypedSpec::parse(Kind::Experiment, &j).unwrap() {
+            TypedSpec::Experiment(ExperimentSpec::WindTunnel { pipelines, .. }) => {
+                assert_eq!(pipelines, vec!["x"]);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        let j = Json::parse(r#"{"twin": "t", "traffic_model": "m"}"#).unwrap();
+        match TypedSpec::parse(Kind::Simulation, &j).unwrap() {
+            TypedSpec::Simulation(s) => {
+                assert_eq!(s.twins, vec!["t"]);
+                assert_eq!(s.traffic_models, vec!["m"]);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dependencies_follow_the_reference_graph() {
+        let j = Json::parse(
+            r#"{"dataset": "d", "load_pattern": "p", "pipelines": ["a", "b"]}"#,
+        )
+        .unwrap();
+        let deps = TypedSpec::parse(Kind::Experiment, &j).unwrap().dependencies();
+        assert_eq!(
+            deps,
+            vec![
+                (Kind::DataSet, "d".to_string()),
+                (Kind::LoadPattern, "p".to_string()),
+                (Kind::Pipeline, "a".to_string()),
+                (Kind::Pipeline, "b".to_string()),
+            ]
+        );
+        let j = Json::parse(r#"{"schema": "s"}"#).unwrap();
+        assert_eq!(
+            TypedSpec::parse(Kind::DataSet, &j).unwrap().dependencies(),
+            vec![(Kind::Schema, "s".to_string())]
+        );
+        let j = Json::parse(r#"{"paper": true}"#).unwrap();
+        assert!(TypedSpec::parse(Kind::DigitalTwin, &j)
+            .unwrap()
+            .dependencies()
+            .is_empty());
+    }
+
+    #[test]
+    fn validation_catches_shape_errors() {
+        let cases = [
+            (Kind::DataSet, r#"{"schema": "s", "payloads": 0}"#),
+            (Kind::Pipeline, r#"{"variant": "nope"}"#),
+            (
+                Kind::Experiment,
+                r#"{"dataset": "d", "load_pattern": "p", "pipeline": "x",
+                    "mode": "warp"}"#,
+            ),
+            (
+                Kind::Experiment,
+                r#"{"dataset": "d", "load_pattern": "p", "pipelines": []}"#,
+            ),
+            (
+                Kind::Simulation,
+                r#"{"twin": "t", "traffic_model": "m", "slo_frac": 1.5}"#,
+            ),
+        ];
+        for (kind, raw) in cases {
+            let j = Json::parse(raw).unwrap();
+            let r = TypedSpec::parse(kind, &j).and_then(|s| s.validate());
+            assert!(r.is_err(), "{} {raw} should fail validation", kind.as_str());
+        }
+    }
+
+    #[test]
+    fn wrong_typed_present_fields_error_instead_of_defaulting() {
+        // a quoted number must not silently become the default
+        let cases = [
+            (Kind::DataSet, r#"{"schema": "s", "payloads": "128"}"#),
+            (Kind::DataSet, r#"{"schema": "s", "bad_rate": "0.5"}"#),
+            (
+                Kind::Experiment,
+                r#"{"dataset": "d", "load_pattern": "p", "pipeline": "x",
+                    "scale": "2000"}"#,
+            ),
+            (
+                Kind::Experiment,
+                r#"{"dataset": "d", "load_pattern": "p", "pipeline": "x",
+                    "mode": 1}"#,
+            ),
+            (Kind::Experiment, r#"{"campaign": {"threads": "8"}}"#),
+            (
+                Kind::Simulation,
+                r#"{"twin": "t", "traffic_model": "m", "slo_hours": "4"}"#,
+            ),
+            (Kind::Schema, r#"{"fields": "none"}"#),
+        ];
+        for (kind, raw) in cases {
+            let j = Json::parse(raw).unwrap();
+            assert!(
+                TypedSpec::parse(kind, &j).is_err(),
+                "{} {raw} must be a parse error",
+                kind.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn parse_errors_name_the_missing_reference() {
+        let e = TypedSpec::parse(Kind::Simulation, &Json::parse("{}").unwrap())
+            .unwrap_err();
+        assert!(e.contains("twin"), "{e}");
+        let e = TypedSpec::parse(Kind::Experiment, &Json::parse("{}").unwrap())
+            .unwrap_err();
+        assert!(e.contains("dataset"), "{e}");
+        let e = TypedSpec::parse(Kind::DataSet, &Json::parse("{}").unwrap())
+            .unwrap_err();
+        assert!(e.contains("schema"), "{e}");
+        let e = TypedSpec::parse(Kind::DigitalTwin, &Json::parse("{}").unwrap())
+            .unwrap_err();
+        assert!(e.contains("experiment"), "{e}");
+    }
+}

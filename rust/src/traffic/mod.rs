@@ -213,7 +213,55 @@ impl TrafficModel {
                 m.hw_f[i] = v.as_f64().ok_or("hw_f: non-number")?;
             }
         }
+        if let Some(b) = j.get("burst") {
+            let get = |k: &str| -> Result<f64, String> {
+                b.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("burst: missing '{k}'"))
+            };
+            let prob = get("prob")?;
+            let magnitude = get("magnitude")?;
+            if !(0.0..=1.0).contains(&prob) || magnitude < 0.0 {
+                return Err("burst: need 0 <= prob <= 1 and magnitude >= 0".into());
+            }
+            // string form ("0x…"/decimal) carries the full u64 range;
+            // a malformed seed is an error, not a silent 0
+            let seed = match b.get("seed") {
+                None => 0,
+                Some(v) => crate::util::cli::seed_from_json(v)
+                    .ok_or("burst: seed must be an integer or seed string")?,
+            };
+            m.burst = Some(BurstSpec {
+                prob,
+                magnitude,
+                seed,
+            });
+        }
         Ok(m)
+    }
+
+    /// Serialize to the JSON spec form [`TrafficModel::from_json`] parses.
+    /// The factor arrays are always emitted explicitly, so
+    /// serialize → parse → serialize is a fixed point.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("base_rps", Json::Num(self.base_rps)),
+            ("growth_factor", Json::Num(self.growth_factor)),
+            ("month_f", Json::arr(self.month_f.iter().map(|&v| Json::Num(v)))),
+            ("hw_f", Json::arr(self.hw_f.iter().map(|&v| Json::Num(v)))),
+        ];
+        if let Some(b) = &self.burst {
+            pairs.push((
+                "burst",
+                Json::obj(vec![
+                    ("prob", Json::Num(b.prob)),
+                    ("magnitude", Json::Num(b.magnitude)),
+                    ("seed", Json::str(format!("{:#x}", b.seed))),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
     }
 }
 
@@ -403,6 +451,43 @@ mod tests {
         assert_eq!(m.month_f, honda_month_factors());
         let bad = Json::parse(r#"{"month_f": [1, 2]}"#).unwrap();
         assert!(TrafficModel::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrip_is_a_fixed_point() {
+        for m in [
+            TrafficModel::nominal(),
+            TrafficModel::high(),
+            TrafficModel::nominal().with_bursts(0.1, 3.0, 77),
+        ] {
+            let j1 = m.to_json();
+            let back = TrafficModel::from_json(&j1).unwrap();
+            assert_eq!(back.name, m.name);
+            assert_eq!(back.burst, m.burst);
+            assert_eq!(back.project_hourly(), m.project_hourly());
+            assert_eq!(j1.to_string_pretty(), back.to_json().to_string_pretty());
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_burst() {
+        let bad = Json::parse(r#"{"burst": {"prob": 1.5, "magnitude": 2}}"#).unwrap();
+        assert!(TrafficModel::from_json(&bad).is_err());
+        let missing = Json::parse(r#"{"burst": {"prob": 0.5}}"#).unwrap();
+        assert!(TrafficModel::from_json(&missing).is_err());
+        // a malformed seed errors instead of silently becoming 0
+        let typo = Json::parse(
+            r#"{"burst": {"prob": 0.5, "magnitude": 2, "seed": "sead-typo"}}"#,
+        )
+        .unwrap();
+        assert!(TrafficModel::from_json(&typo).is_err());
+        // and the full-u64 string form round-trips
+        let big = Json::parse(
+            r#"{"burst": {"prob": 0.5, "magnitude": 2, "seed": "0xDEADBEEFDEADBEEF"}}"#,
+        )
+        .unwrap();
+        let m = TrafficModel::from_json(&big).unwrap();
+        assert_eq!(m.burst.unwrap().seed, 0xDEAD_BEEF_DEAD_BEEF);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! Tiny command-line parser for the `plantd` binary (clap is not in the
 //! offline dependency set).
 //!
-//! Grammar: `plantd <subcommand> [--flag] [--key value]... [positional]...`
+//! Grammar: `plantd <subcommand> [--flag] [--key value]... [-k value]...
+//! [positional]...` — a single-dash token whose first character is a
+//! letter (`-f`) is a short option and stores under the dash-less name,
+//! so `apply -f manifest.json` reads back as `opt("f")`. A single-dash
+//! token that is not letter-led (`-0.5`) stays a value/positional.
 
 use std::collections::BTreeMap;
 
@@ -16,9 +20,33 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
+/// The `plantd` CLI's value-less flags. A generic `--name value` grammar
+/// cannot tell a flag from an option, so names listed here never consume
+/// the following token — `plantd get --check experiment` keeps `--check`
+/// a flag and `experiment` a positional.
+pub const BOOL_FLAGS: &[&str] = &[
+    "all",
+    "check",
+    "dry-run",
+    "native",
+    "paper-twins",
+];
+
 impl Args {
     /// Parse from an iterator of argument strings (not including argv[0]).
+    /// Every `--name`/`-n` with a following non-option token is treated
+    /// as an option with a value; see [`Args::parse_with_bool_flags`] for
+    /// the variant that knows which names are value-less.
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        Self::parse_with_bool_flags(args, &[])
+    }
+
+    /// [`Args::parse`], but names in `bool_flags` are always flags and
+    /// never swallow the next token as a value.
+    pub fn parse_with_bool_flags<I: IntoIterator<Item = String>>(
+        args: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = args.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -28,15 +56,33 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.opts.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if !bool_flags.contains(&name)
+                    && it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
                     out.opts.insert(name.to_string(), v);
                 } else {
                     out.flags.push(name.to_string());
+                }
+            } else if a.len() > 1
+                && a.starts_with('-')
+                && a.as_bytes()[1].is_ascii_alphabetic()
+            {
+                // short option: `-f value` (or a bare `-v` flag)
+                let name = a[1..].to_string();
+                if !bool_flags.contains(&name.as_str())
+                    && it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(name, v);
+                } else {
+                    out.flags.push(name);
                 }
             } else if out.subcommand.is_none() && out.positional.is_empty() {
                 out.subcommand = Some(a);
@@ -47,9 +93,10 @@ impl Args {
         Ok(out)
     }
 
-    /// Parse the process arguments (skipping argv\[0\]).
+    /// Parse the process arguments (skipping argv\[0\]), with
+    /// [`BOOL_FLAGS`] treated as value-less.
     pub fn from_env() -> Result<Args, String> {
-        Args::parse(std::env::args().skip(1))
+        Args::parse_with_bool_flags(std::env::args().skip(1), BOOL_FLAGS)
     }
 
     /// Whether a value-less `--name` flag was given.
@@ -108,6 +155,17 @@ pub fn parse_seed(s: &str) -> Option<u64> {
     match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
         Some(hex) => u64::from_str_radix(hex, 16).ok(),
         None => s.parse().ok(),
+    }
+}
+
+/// Read a seed from a JSON value: either a string in [`parse_seed`] form
+/// (`"0xD5"`, `"213"`) or a plain number. Strings carry the full u64
+/// range; JSON numbers are f64 and lose precision above 2^53, so
+/// manifests (and the specs that serialize to them) use the string form.
+pub fn seed_from_json(v: &crate::util::json::Json) -> Option<u64> {
+    match v.as_str() {
+        Some(s) => parse_seed(s),
+        None => v.as_u64(),
     }
 }
 
@@ -183,9 +241,61 @@ mod tests {
     }
 
     #[test]
+    fn seed_from_json_handles_numbers_and_full_u64_strings() {
+        use crate::util::json::Json;
+        assert_eq!(seed_from_json(&Json::num(213)), Some(213));
+        assert_eq!(seed_from_json(&Json::str("213")), Some(213));
+        assert_eq!(seed_from_json(&Json::str("0xD5")), Some(0xD5));
+        // the whole point: u64 seeds above 2^53 survive the string form
+        assert_eq!(
+            seed_from_json(&Json::str("0xDEADBEEFDEADBEEF")),
+            Some(0xDEAD_BEEF_DEAD_BEEF)
+        );
+        assert_eq!(seed_from_json(&Json::str("junk")), None);
+        assert_eq!(seed_from_json(&Json::Null), None);
+    }
+
+    #[test]
     fn negative_number_as_value() {
         // a value starting with '-' but not '--' is still a value
         let a = parse(&["x", "--growth", "-0.5"]);
         assert_eq!(a.opt_f64("growth", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn short_option_with_value() {
+        let a = parse(&["apply", "-f", "examples/manifests/windtunnel.json"]);
+        assert_eq!(a.subcommand.as_deref(), Some("apply"));
+        assert_eq!(a.opt("f"), Some("examples/manifests/windtunnel.json"));
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn short_flag_without_value() {
+        let a = parse(&["x", "-v"]);
+        assert!(a.flag("v"));
+    }
+
+    #[test]
+    fn bare_negative_number_stays_positional() {
+        let a = parse(&["x", "-0.5"]);
+        assert_eq!(a.positional, vec!["-0.5"]);
+        assert!(!a.flag("0.5"));
+    }
+
+    #[test]
+    fn bool_flags_never_swallow_positionals() {
+        let args = ["get", "--check", "experiment"].map(String::from);
+        let a = Args::parse_with_bool_flags(args, BOOL_FLAGS).unwrap();
+        assert!(a.flag("check"), "--check must stay a flag");
+        assert_eq!(a.positional, vec!["experiment"]);
+        let args = ["run", "--all", "out"].map(String::from);
+        let a = Args::parse_with_bool_flags(args, BOOL_FLAGS).unwrap();
+        assert!(a.flag("all"));
+        assert_eq!(a.positional, vec!["out"]);
+        // names NOT in the list still take values
+        let args = ["run", "--out", "dir"].map(String::from);
+        let a = Args::parse_with_bool_flags(args, BOOL_FLAGS).unwrap();
+        assert_eq!(a.opt("out"), Some("dir"));
     }
 }

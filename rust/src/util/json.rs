@@ -138,6 +138,21 @@ impl Json {
         Some(cur)
     }
 
+    /// String field lookup: `get(key)` + [`Json::as_str`].
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+
+    /// Numeric field lookup: `get(key)` + [`Json::as_f64`].
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
+    /// Unsigned-integer field lookup: `get(key)` + [`Json::as_u64`].
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(Json::as_u64)
+    }
+
     // ---- serialization ----------------------------------------------------
 
     /// Compact serialization.

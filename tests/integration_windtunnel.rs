@@ -203,7 +203,11 @@ fn resource_registry_drives_an_experiment() {
         "ramp",
         Json::parse(r#"{"segments":[{"duration_s":10,"start_rps":0,"end_rps":8}]}"#).unwrap(),
     );
-    reg.apply(Kind::Pipeline, "no-blocking-write", Json::parse("{}").unwrap());
+    reg.apply(
+        Kind::Pipeline,
+        "no-blocking-write",
+        Json::parse(r#"{"variant":"no-blocking-write"}"#).unwrap(),
+    );
     reg.apply(
         Kind::Experiment,
         "e2e",

@@ -6,6 +6,8 @@ use plantd::bus::Topic;
 use plantd::cloud::{Cloud, Resources};
 use plantd::cost::{allocate_node_costs, namespace_cost};
 use plantd::loadgen::LoadPattern;
+use plantd::resources::spec::TypedSpec;
+use plantd::resources::Kind;
 use plantd::runtime::{native::NativeBackend, ScenarioParams, SimBackend};
 use plantd::traffic::TrafficModel;
 use plantd::util::json::Json;
@@ -284,6 +286,203 @@ fn prop_json_roundtrip_random_documents() {
         assert_eq!(Json::parse(&compact).unwrap(), doc, "compact roundtrip");
         assert_eq!(Json::parse(&pretty).unwrap(), doc, "pretty roundtrip");
     });
+}
+
+/// Parse a raw spec as `kind`, serialize, re-parse, re-serialize: the
+/// two serialized forms must be byte-identical pretty JSON (the typed
+/// specs are fixed points under `from_json ∘ to_json`).
+fn assert_spec_fixed_point(kind: Kind, raw: &Json) {
+    let s1 = TypedSpec::parse(kind, raw)
+        .unwrap_or_else(|e| panic!("{} spec rejected: {e}\n{raw:?}", kind.as_str()));
+    let j1 = s1.to_json();
+    let s2 = TypedSpec::parse(kind, &j1)
+        .unwrap_or_else(|e| panic!("{} re-parse rejected: {e}", kind.as_str()));
+    assert_eq!(
+        j1.to_string_pretty(),
+        s2.to_json().to_string_pretty(),
+        "{} spec round-trip not byte-identical",
+        kind.as_str()
+    );
+}
+
+#[test]
+fn prop_resource_specs_roundtrip_byte_identical() {
+    check("spec-roundtrip", 60, |rng| {
+        // LoadPattern: random multi-segment pattern
+        assert_spec_fixed_point(Kind::LoadPattern, &random_pattern(rng).to_json());
+        // DataSet: random synthesis parameters
+        assert_spec_fixed_point(
+            Kind::DataSet,
+            &Json::obj(vec![
+                ("schema", Json::str(rng.alphanumeric(6))),
+                ("payloads", Json::Num(rng.int_range(1, 256) as f64)),
+                (
+                    "records_per_subsystem",
+                    Json::Num(rng.int_range(1, 64) as f64),
+                ),
+                ("bad_rate", Json::Num((rng.f64() * 1000.0).round() / 1000.0)),
+                ("seed", Json::Num(rng.int_range(0, 1 << 50) as f64)),
+            ]),
+        );
+        // Pipeline: every known variant
+        let variants = ["blocking-write", "no-blocking-write", "cpu-limited"];
+        assert_spec_fixed_point(
+            Kind::Pipeline,
+            &Json::obj(vec![("variant", Json::str(*rng.choice(&variants)))]),
+        );
+        // Experiment: random refs, mode, scale — and the campaign form
+        let modes = ["real", "sim", "both"];
+        assert_spec_fixed_point(
+            Kind::Experiment,
+            &Json::obj(vec![
+                ("dataset", Json::str(rng.alphanumeric(5))),
+                ("load_pattern", Json::str(rng.alphanumeric(5))),
+                (
+                    "pipelines",
+                    Json::arr(
+                        (0..rng.int_range(1, 3)).map(|_| Json::str(rng.alphanumeric(4))),
+                    ),
+                ),
+                ("mode", Json::str(*rng.choice(&modes))),
+                ("scale", Json::Num(rng.int_range(1, 5000) as f64)),
+            ]),
+        );
+        assert_spec_fixed_point(
+            Kind::Experiment,
+            &Json::obj(vec![(
+                "campaign",
+                Json::obj(vec![
+                    ("grid", Json::str(if rng.chance(0.5) { "paper" } else { "extended" })),
+                    ("seed", Json::Num(rng.int_range(0, 1 << 40) as f64)),
+                    ("threads", Json::Num(rng.int_range(1, 16) as f64)),
+                ]),
+            )]),
+        );
+        // TrafficModel: preset and inline forms
+        assert_spec_fixed_point(
+            Kind::TrafficModel,
+            &Json::obj(vec![(
+                "preset",
+                Json::str(if rng.chance(0.5) { "nominal" } else { "high" }),
+            )]),
+        );
+        assert_spec_fixed_point(
+            Kind::TrafficModel,
+            &Json::obj(vec![
+                ("name", Json::str(rng.alphanumeric(5))),
+                ("base_rps", Json::Num((rng.uniform(0.1, 20.0) * 100.0).round() / 100.0)),
+                (
+                    "growth_factor",
+                    Json::Num((rng.uniform(0.5, 2.0) * 100.0).round() / 100.0),
+                ),
+            ]),
+        );
+        // DigitalTwin: all three source forms
+        assert_spec_fixed_point(
+            Kind::DigitalTwin,
+            &Json::obj(vec![("experiment", Json::str(rng.alphanumeric(5)))]),
+        );
+        assert_spec_fixed_point(Kind::DigitalTwin, &Json::obj(vec![("paper", Json::Bool(true))]));
+        assert_spec_fixed_point(
+            Kind::DigitalTwin,
+            &Json::obj(vec![(
+                "params",
+                Json::obj(vec![
+                    ("name", Json::str(rng.alphanumeric(5))),
+                    (
+                        "kind",
+                        Json::str(if rng.chance(0.5) { "simple" } else { "quickscaling" }),
+                    ),
+                    ("max_rps", Json::Num((rng.uniform(0.1, 10.0) * 100.0).round() / 100.0)),
+                    (
+                        "cost_per_hr",
+                        Json::Num((rng.uniform(0.001, 0.1) * 1e4).round() / 1e4),
+                    ),
+                    (
+                        "avg_latency_s",
+                        Json::Num((rng.uniform(0.01, 1.0) * 100.0).round() / 100.0),
+                    ),
+                ]),
+            )]),
+        );
+        // Simulation: random twin/forecast lists + SLO
+        assert_spec_fixed_point(
+            Kind::Simulation,
+            &Json::obj(vec![
+                (
+                    "twins",
+                    Json::arr((0..rng.int_range(1, 3)).map(|_| Json::str(rng.alphanumeric(4)))),
+                ),
+                (
+                    "traffic_models",
+                    Json::arr((0..rng.int_range(1, 3)).map(|_| Json::str(rng.alphanumeric(4)))),
+                ),
+                ("slo_hours", Json::Num(rng.int_range(1, 24) as f64)),
+                ("slo_frac", Json::Num((rng.f64() * 100.0).round() / 100.0)),
+            ]),
+        );
+        // Schema: a random field list (types drawn from the full set)
+        let kinds = ["vin", "uuid", "word", "name", "email", "latlon", "ipv4"];
+        assert_spec_fixed_point(
+            Kind::Schema,
+            &Json::obj(vec![(
+                "fields",
+                Json::arr((0..rng.int_range(0, 4)).map(|i| {
+                    Json::obj(vec![
+                        ("name", Json::str(format!("f{i}"))),
+                        ("kind", Json::str(*rng.choice(&kinds))),
+                    ])
+                })),
+            )]),
+        );
+    });
+}
+
+#[test]
+fn json_string_escaping_edge_cases() {
+    for s in [
+        "quote \" backslash \\ slash /",
+        "tab\there nl\nthere cr\rback",
+        "low controls \u{1}\u{8}\u{c}\u{1f}",
+        "del \u{7f} nbsp \u{a0}",
+        "unicode héllo 世界 😀 \u{10FFFF}",
+        "",
+    ] {
+        let j = Json::Str(s.to_string());
+        let compact = j.to_string_compact();
+        assert_eq!(Json::parse(&compact).unwrap(), j, "compact: {compact}");
+        let pretty = j.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), j, "pretty: {pretty}");
+    }
+    // \u escape forms (incl. a surrogate pair) decode on the way in
+    assert_eq!(
+        Json::parse(r#""\u0041\u00e9\ud83d\ude00""#).unwrap().as_str(),
+        Some("Aé😀")
+    );
+    // lone surrogates are rejected, not smuggled through
+    assert!(Json::parse(r#""\ud800""#).is_err());
+}
+
+#[test]
+fn json_large_integer_edge_cases() {
+    // 2^53 is exactly representable and round-trips as an integer
+    let j = Json::parse("9007199254740992").unwrap();
+    assert_eq!(j.as_u64(), Some(9_007_199_254_740_992));
+    assert_eq!(j.to_string_compact(), "9007199254740992");
+    // 2^53 + 1 is NOT representable: documents the f64 rounding
+    let j = Json::parse("9007199254740993").unwrap();
+    assert_eq!(j.as_u64(), Some(9_007_199_254_740_992));
+    // >= 1e15 serializes via the float path but still re-parses equal
+    let j = Json::Num(1e15);
+    assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+    let j = Json::Num(1e21);
+    assert_eq!(Json::parse(&j.to_string_compact()).unwrap(), j);
+    // u64::MAX parses (rounded to 2^64) and as_u64 saturates
+    let j = Json::parse("18446744073709551615").unwrap();
+    assert_eq!(j.as_u64(), Some(u64::MAX));
+    // negatives and fractions are still rejected by as_u64
+    assert_eq!(Json::parse("-5").unwrap().as_u64(), None);
+    assert_eq!(Json::parse("2.5").unwrap().as_u64(), None);
 }
 
 #[test]

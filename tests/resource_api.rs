@@ -1,0 +1,195 @@
+//! Integration tests for the declarative resource API: manifest apply →
+//! reconcile → run through the controller, state persistence across
+//! controller instances (the CLI's `apply` / `run` processes), eventual
+//! consistency (heal-on-apply, delete demotion), and byte-for-byte parity
+//! between the resource path and the direct domain-type path.
+
+use std::path::PathBuf;
+
+use plantd::campaign::{Campaign, CampaignRunner};
+use plantd::resources::controller::Controller;
+use plantd::resources::{Kind, Phase, Registry};
+use plantd::util::json::Json;
+
+fn example_manifest() -> Json {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/manifests/windtunnel.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    Json::parse(&text).unwrap()
+}
+
+/// A small, fast manifest with the same shape as the shipped example.
+fn small_manifest() -> Json {
+    Json::parse(
+        r#"{"resources": [
+            {"kind": "Schema", "name": "telematics", "spec": {}},
+            {"kind": "DataSet", "name": "fleet",
+             "spec": {"schema": "telematics", "payloads": 4,
+                      "records_per_subsystem": 2, "bad_rate": 0.0, "seed": 9}},
+            {"kind": "LoadPattern", "name": "pulse",
+             "spec": {"segments": [{"duration_s": 5, "start_rps": 2,
+                                    "end_rps": 2}]}},
+            {"kind": "Pipeline", "name": "noblock",
+             "spec": {"variant": "no-blocking-write"}},
+            {"kind": "Experiment", "name": "e1",
+             "spec": {"dataset": "fleet", "load_pattern": "pulse",
+                      "pipeline": "noblock", "mode": "sim", "scale": 3000}},
+            {"kind": "DigitalTwin", "name": "twin",
+             "spec": {"experiment": "e1"}},
+            {"kind": "TrafficModel", "name": "nominal",
+             "spec": {"preset": "nominal"}},
+            {"kind": "Simulation", "name": "year",
+             "spec": {"twin": "twin", "traffic_model": "nominal"}}
+        ]}"#,
+    )
+    .unwrap()
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("plantd-resource-api-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn example_manifest_covers_all_kinds_and_reconciles_ready() {
+    let c = Controller::new(Registry::new());
+    let applied = c.apply_manifest(&example_manifest()).unwrap();
+    assert_eq!(applied.len(), 11);
+    c.reconcile();
+    for r in c.registry().list_all() {
+        assert_eq!(
+            r.phase,
+            Phase::Ready,
+            "{}/{}: {:?}",
+            r.kind.as_str(),
+            r.name,
+            r.conditions
+        );
+    }
+    for kind in Kind::all() {
+        assert!(
+            !c.registry().list(kind).is_empty(),
+            "example manifest must exercise kind {}",
+            kind.as_str()
+        );
+    }
+    // the reference DAG orders dependencies first
+    let order = c.topo_order();
+    let pos = |k: Kind, n: &str| {
+        order
+            .iter()
+            .position(|(ok, on)| *ok == k && on == n)
+            .unwrap_or_else(|| panic!("{}/{n} missing from topo order", k.as_str()))
+    };
+    assert!(pos(Kind::Schema, "telematics") < pos(Kind::DataSet, "fleet-day"));
+    assert!(pos(Kind::DataSet, "fleet-day") < pos(Kind::Experiment, "telematics-ramp"));
+    assert!(pos(Kind::Experiment, "telematics-ramp") < pos(Kind::DigitalTwin, "fitted"));
+    assert!(pos(Kind::DigitalTwin, "fitted") < pos(Kind::Simulation, "what-if"));
+    assert!(pos(Kind::TrafficModel, "nominal") < pos(Kind::Simulation, "what-if"));
+}
+
+#[test]
+fn full_chain_runs_and_statuses_carry_results() {
+    let dir = temp_dir("chain");
+    let c = Controller::new(Registry::new()).with_out_dir(dir.clone());
+    c.apply_manifest(&small_manifest()).unwrap();
+    // running the Simulation pulls the whole dependency chain:
+    // twin -> experiment -> (dataset, load pattern, pipeline)
+    let outcome = c.run(Kind::Simulation, "year").unwrap();
+    assert!(outcome.output.contains("TABLE I"));
+    assert!(outcome.output.contains("TABLE II"));
+    for (kind, name) in [
+        (Kind::Experiment, "e1"),
+        (Kind::DigitalTwin, "twin"),
+        (Kind::Simulation, "year"),
+    ] {
+        let r = c.registry().get(kind, name).unwrap();
+        assert_eq!(r.phase, Phase::Completed, "{}/{name}", kind.as_str());
+        assert!(r.status != Json::Null, "{}/{name} status empty", kind.as_str());
+    }
+    // the experiment's status carries the fitted twin the chain used
+    let e = c.registry().get(Kind::Experiment, "e1").unwrap();
+    let twins = e.status.get("twins").and_then(Json::as_arr).unwrap();
+    assert_eq!(twins.len(), 1);
+    assert_eq!(twins[0].get_str("name"), Some("no-blocking-write"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn state_persists_across_controller_instances() {
+    let dir = temp_dir("state");
+    let state = dir.join("registry.json");
+    // "process" 1: apply + run the experiment, save
+    let c1 = Controller::new(Registry::new()).with_out_dir(dir.clone());
+    c1.apply_manifest(&small_manifest()).unwrap();
+    c1.run(Kind::Experiment, "e1").unwrap();
+    c1.registry().save(&state).unwrap();
+    // "process" 2: load the state; the DigitalTwin fits from the
+    // persisted experiment status without re-running the experiment
+    let reg = Registry::load(&state).unwrap();
+    assert_eq!(
+        reg.get(Kind::Experiment, "e1").unwrap().phase,
+        Phase::Completed
+    );
+    let c2 = Controller::new(reg).with_out_dir(dir.clone());
+    let out = c2.run(Kind::DigitalTwin, "twin").unwrap();
+    assert!(out.output.contains("TABLE I"));
+    assert!(
+        c2.experiment_records("e1").is_none(),
+        "twin must come from persisted status, not an experiment re-run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn apply_heals_failed_dependents_and_delete_demotes() {
+    let c = Controller::new(Registry::new());
+    c.apply_manifest(
+        &Json::parse(r#"{"kind": "DataSet", "name": "d", "spec": {"schema": "s"}}"#)
+            .unwrap(),
+    )
+    .unwrap();
+    c.reconcile();
+    assert_eq!(c.registry().get(Kind::DataSet, "d").unwrap().phase, Phase::Failed);
+    // applying the missing dependency heals the dependent
+    c.apply_manifest(&Json::parse(r#"{"kind": "Schema", "name": "s", "spec": {}}"#).unwrap())
+        .unwrap();
+    c.reconcile();
+    assert_eq!(c.registry().get(Kind::DataSet, "d").unwrap().phase, Phase::Ready);
+    // deleting it demotes the Ready dependent with a dangling condition
+    assert!(c.registry().delete(Kind::Schema, "s"));
+    let d = c.registry().get(Kind::DataSet, "d").unwrap();
+    assert_eq!(d.phase, Phase::Pending);
+    assert!(d.conditions.last().unwrap().contains("dangling reference"));
+}
+
+#[test]
+fn campaign_resource_matches_direct_runner_byte_for_byte() {
+    let c = Controller::new(Registry::new());
+    c.apply_manifest(
+        &Json::parse(
+            r#"{"kind": "Experiment", "name": "sweep",
+                "spec": {"campaign": {"grid": "paper", "seed": 7, "threads": 3}}}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let out = c.run(Kind::Experiment, "sweep").unwrap().output;
+    let direct = CampaignRunner::new(3).run(&Campaign::paper_automotive(7));
+    assert_eq!(
+        out,
+        format!("{}\n", direct.render()),
+        "resource path must reproduce the direct campaign report byte-for-byte"
+    );
+}
+
+#[test]
+fn manifest_errors_are_reported_at_apply_time() {
+    let c = Controller::new(Registry::new());
+    let bad_kind = Json::parse(r#"{"kind": "Widget", "name": "w", "spec": {}}"#).unwrap();
+    assert!(c.apply_manifest(&bad_kind).unwrap_err().contains("Widget"));
+    let no_name = Json::parse(r#"{"kind": "Schema", "spec": {}}"#).unwrap();
+    assert!(c.apply_manifest(&no_name).unwrap_err().contains("name"));
+    let not_a_manifest = Json::parse(r#"{"hello": 1}"#).unwrap();
+    assert!(c.apply_manifest(&not_a_manifest).is_err());
+}
