@@ -48,6 +48,15 @@
 //! the DAG (`plantd apply -f manifest.json && plantd run <kind>/<name>`).
 //! The flag-style subcommands are thin shims that synthesize manifests
 //! and call the same controller. See `docs/RESOURCES.md`.
+//!
+//! ## Validation
+//!
+//! The [`validate`] subsystem proves the [`sim`] kernel against
+//! closed-form queueing theory (M/M/1, M/M/c, M/M/c/K, tandems) at a 2%
+//! tolerance, and locks canonical reports with a golden-snapshot
+//! regression harness (`plantd validate`, the `Validation` resource
+//! kind, `tests/golden/`). Every future speed/scale PR is judged against
+//! it. See `docs/VALIDATION.md`.
 
 #![warn(missing_docs)]
 
@@ -70,3 +79,4 @@ pub mod telemetry;
 pub mod traffic;
 pub mod twin;
 pub mod util;
+pub mod validate;

@@ -62,6 +62,7 @@ use plantd::twin::TwinParams;
 use plantd::util::cli::Args;
 use plantd::util::json::Json;
 use plantd::util::units;
+use plantd::validate::{snapshot, SnapshotMode};
 
 const HELP: &str = "plantd — a data-pipeline wind tunnel (PlantD reproduction)
 
@@ -74,6 +75,17 @@ RESOURCE VERBS (the declarative front door, see docs/RESOURCES.md)
   run KIND/NAME      execute a Ready resource (dependencies run first)
   run --all          execute everything, dependencies first
   delete KIND/NAME   remove a resource (Ready dependents demote)
+
+VALIDATION (prove the sim kernel against ground truth, docs/VALIDATION.md)
+  validate           run conformance suites; non-zero exit on any FAIL
+    --suite S        queueing (DES vs closed-form M/M/c oracle, 2% rel
+                     tol), snapshots (golden-file byte comparison under
+                     tests/golden/), or all (default)
+    --update         snapshots: regenerate golden files instead of
+                     comparing (commit the diff; see --update etiquette)
+    --threads N      worker threads for the queueing cases (default 4)
+    --golden DIR     golden directory (default tests/golden)
+    --out DIR        also write validation.json to DIR
 
 LEGACY SUBCOMMANDS (shims over the same controller)
   generate    synthesize a telematics dataset (--payloads, --records, --seed)
@@ -141,6 +153,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args),
         "retention" => cmd_retention(&args),
         "campaign" => cmd_campaign(&args),
+        "validate" => cmd_validate(&args),
         "resources" => cmd_resources(),
         "demo" => cmd_demo(&args),
         "help" | "--help" => {
@@ -685,6 +698,48 @@ fn cmd_campaign(args: &Args) -> CmdResult {
         .run(Kind::Experiment, &name)
         .map_err(anyhow::Error::msg)?;
     print!("{}", outcome.output);
+    Ok(())
+}
+
+/// `plantd validate [--suite queueing|snapshots|all] [--update]` — the
+/// first-class validation verb. The same suites are declarable as a
+/// `Validation` resource and runnable through the controller (see
+/// `examples/manifests/validation.json`); the CLI verb additionally
+/// owns `--update`, which mutates the golden tree and therefore never
+/// runs through a resource.
+fn cmd_validate(args: &Args) -> CmdResult {
+    let suite = args.opt_or("suite", "all");
+    let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
+    let golden = args
+        .opt("golden")
+        .map(PathBuf::from)
+        .unwrap_or_else(snapshot::default_golden_dir);
+    let mode = if args.flag("update") {
+        SnapshotMode::Update
+    } else {
+        SnapshotMode::Verify
+    };
+    let run = plantd::validate::run_suites(&suite, threads, &golden, mode)
+        .map_err(anyhow::Error::msg)?;
+    print!("{}", run.output());
+    if let Some(dir) = args.opt("out") {
+        // the combined report covers whichever suites ran (queueing
+        // verdicts and/or snapshot outcomes), so --out is never a
+        // silent no-op for --suite snapshots
+        let path = Path::new(dir).join("validation.json");
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(&path, run.status_json(&suite).to_string_pretty())?;
+        println!("report JSON written to {}", path.display());
+    }
+    let failed = run.failed();
+    if !failed.is_empty() {
+        anyhow::bail!(
+            "{} of {} validation target(s) failed:\n  {}",
+            failed.len(),
+            run.targets(),
+            run.failure_details().join("\n  ")
+        );
+    }
     Ok(())
 }
 

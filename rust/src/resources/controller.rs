@@ -37,9 +37,11 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::units;
 
+use crate::validate::SnapshotMode;
+
 use super::spec::{
     DigitalTwinSpec, ExperimentSpec, LoadPatternSpec, PipelineSpec, ResourceSpec,
-    SchemaSpec, SimulationSpec, TrafficModelSpec, TypedSpec,
+    SchemaSpec, SimulationSpec, TrafficModelSpec, TypedSpec, ValidationSpec,
 };
 use super::{Kind, Phase, Registry, Resource};
 
@@ -426,6 +428,41 @@ impl Controller {
                 Ok((summary, output, status))
             }
             TypedSpec::Simulation(s) => self.exec_simulation(s),
+            TypedSpec::Validation(s) => self.exec_validation(s),
+        }
+    }
+
+    /// Run the conformance suite(s) a Validation resource names, through
+    /// the same [`crate::validate::run_suites`] path as the CLI verb.
+    /// Any non-pass verdict is an *execution* failure (Failed phase,
+    /// error status, retryable via `run`) — `plantd get --check` then
+    /// fails, which is exactly what CI keys on. The failing metrics
+    /// travel in the error message (and therefore in the resource's
+    /// conditions and `"error"` status), so a red run is diagnosable
+    /// from `describe` without a local re-run. The controller path never
+    /// updates golden files; `--update` is a CLI-only action.
+    fn exec_validation(
+        &self,
+        s: &ValidationSpec,
+    ) -> Result<(String, String, Json), String> {
+        let dir = s
+            .golden_dir
+            .clone()
+            .map(PathBuf::from)
+            .unwrap_or_else(crate::validate::snapshot::default_golden_dir);
+        let run =
+            crate::validate::run_suites(&s.suite, s.threads, &dir, SnapshotMode::Verify)?;
+        let failed = run.failed();
+        let total = run.targets();
+        if failed.is_empty() {
+            let summary = format!("{total}/{total} validation target(s) passed");
+            Ok((summary, run.output(), run.status_json(&s.suite)))
+        } else {
+            Err(format!(
+                "{} of {total} validation target(s) failed: {}",
+                failed.len(),
+                run.failure_details().join(" | ")
+            ))
         }
     }
 

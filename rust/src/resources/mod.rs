@@ -3,7 +3,9 @@
 //!
 //! PlantD models everything the user configures as custom resources
 //! (Fig. 3): *Schema*, *DataSet*, *LoadPattern*, *Pipeline*, *Experiment*,
-//! *TrafficModel*, *DigitalTwin*, *Simulation*. This module provides the
+//! *TrafficModel*, *DigitalTwin*, *Simulation* — plus the repo's own
+//! *Validation* kind (sim-kernel conformance suites, declarable in
+//! manifests like everything else). This module provides the
 //! in-process equivalent: typed specs ([`spec::ResourceSpec`]) registered
 //! by name, a status/phase state machine per resource, a reconciler that
 //! validates specs and resolves references between resources (an
@@ -46,6 +48,9 @@ pub enum Kind {
     DigitalTwin,
     /// Twin × forecast year simulation.
     Simulation,
+    /// Sim-kernel conformance suite (analytic oracle + golden
+    /// snapshots) — see `docs/VALIDATION.md`.
+    Validation,
 }
 
 impl Kind {
@@ -60,11 +65,12 @@ impl Kind {
             Kind::TrafficModel => "TrafficModel",
             Kind::DigitalTwin => "DigitalTwin",
             Kind::Simulation => "Simulation",
+            Kind::Validation => "Validation",
         }
     }
 
     /// Every kind, in a stable order.
-    pub fn all() -> [Kind; 8] {
+    pub fn all() -> [Kind; 9] {
         [
             Kind::Schema,
             Kind::DataSet,
@@ -74,6 +80,7 @@ impl Kind {
             Kind::TrafficModel,
             Kind::DigitalTwin,
             Kind::Simulation,
+            Kind::Validation,
         ]
     }
 
@@ -528,7 +535,9 @@ mod tests {
         assert_eq!(Kind::parse("dataset"), Some(Kind::DataSet));
         assert_eq!(Kind::parse("load_pattern"), Some(Kind::LoadPattern));
         assert_eq!(Kind::parse("digital-twin"), Some(Kind::DigitalTwin));
+        assert_eq!(Kind::parse("validation"), Some(Kind::Validation));
         assert_eq!(Kind::parse("nope"), None);
+        assert_eq!(Kind::all().len(), 9, "Validation is the ninth kind");
         assert_eq!(Phase::parse("Ready"), Some(Phase::Ready));
         assert_eq!(Phase::parse("ready"), None);
     }

@@ -12,7 +12,7 @@
 //!
 //! [`TypedSpec`] is the closed-world dispatcher the [`super::Registry`]
 //! reconciler and the [`super::controller::Controller`] use to treat all
-//! eight kinds uniformly.
+//! nine kinds uniformly.
 
 use crate::campaign::Campaign;
 use crate::datagen::{DataSetSpec, FieldSpec};
@@ -661,6 +661,73 @@ impl ResourceSpec for SimulationSpec {
     }
 }
 
+// ------------------------------------------------------------ Validation
+
+/// *Validation* spec: which conformance suite(s) to run and how.
+/// Executed by the controller through [`crate::validate::run_suites`] —
+/// the same code path as `plantd validate` (which never updates
+/// snapshots when driven through a resource; `--update` is a CLI-only,
+/// tree-mutating action).
+#[derive(Debug, Clone)]
+pub struct ValidationSpec {
+    /// `queueing` (analytic oracle), `snapshots` (golden files), or
+    /// `all`. Deliberately defaults to `queueing` — narrower than the
+    /// CLI verb's `all` — because the snapshot leg resolves
+    /// `tests/golden` relative to the process working directory, which
+    /// a manifest author does not control; name the suite explicitly
+    /// (and set `golden_dir`) to run snapshots through a resource.
+    pub suite: String,
+    /// Worker threads for the case grid.
+    pub threads: usize,
+    /// Override the golden directory (default: `tests/golden`, or
+    /// `$PLANTD_GOLDEN_DIR`).
+    pub golden_dir: Option<String>,
+}
+
+impl ResourceSpec for ValidationSpec {
+    const KIND: Kind = Kind::Validation;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let golden_dir = match j.get("golden_dir") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or("golden_dir: expected a string")?,
+            ),
+        };
+        Ok(ValidationSpec {
+            suite: str_field(j, "suite", "queueing")?,
+            threads: u64_field(j, "threads", 4)? as usize,
+            golden_dir,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("suite", Json::str(self.suite.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+        ];
+        if let Some(dir) = &self.golden_dir {
+            fields.push(("golden_dir", Json::str(dir.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if !matches!(self.suite.as_str(), "queueing" | "snapshots" | "all") {
+            return Err(format!(
+                "validation: unknown suite '{}' (queueing|snapshots|all)",
+                self.suite
+            ));
+        }
+        if self.threads == 0 {
+            return Err("validation: threads must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 // ------------------------------------------------------------ dispatcher
 
 /// A parsed spec of any kind — the closed-world dispatcher the registry
@@ -684,6 +751,8 @@ pub enum TypedSpec {
     DigitalTwin(DigitalTwinSpec),
     /// Parsed *Simulation* spec.
     Simulation(SimulationSpec),
+    /// Parsed *Validation* spec.
+    Validation(ValidationSpec),
 }
 
 impl TypedSpec {
@@ -700,6 +769,7 @@ impl TypedSpec {
             }
             Kind::DigitalTwin => TypedSpec::DigitalTwin(DigitalTwinSpec::from_json(j)?),
             Kind::Simulation => TypedSpec::Simulation(SimulationSpec::from_json(j)?),
+            Kind::Validation => TypedSpec::Validation(ValidationSpec::from_json(j)?),
         })
     }
 
@@ -714,6 +784,7 @@ impl TypedSpec {
             TypedSpec::TrafficModel(_) => Kind::TrafficModel,
             TypedSpec::DigitalTwin(_) => Kind::DigitalTwin,
             TypedSpec::Simulation(_) => Kind::Simulation,
+            TypedSpec::Validation(_) => Kind::Validation,
         }
     }
 
@@ -728,6 +799,7 @@ impl TypedSpec {
             TypedSpec::TrafficModel(s) => s.to_json(),
             TypedSpec::DigitalTwin(s) => s.to_json(),
             TypedSpec::Simulation(s) => s.to_json(),
+            TypedSpec::Validation(s) => s.to_json(),
         }
     }
 
@@ -742,6 +814,7 @@ impl TypedSpec {
             TypedSpec::TrafficModel(s) => s.validate(),
             TypedSpec::DigitalTwin(s) => s.validate(),
             TypedSpec::Simulation(s) => s.validate(),
+            TypedSpec::Validation(s) => s.validate(),
         }
     }
 
@@ -756,6 +829,7 @@ impl TypedSpec {
             TypedSpec::TrafficModel(s) => s.dependencies(),
             TypedSpec::DigitalTwin(s) => s.dependencies(),
             TypedSpec::Simulation(s) => s.dependencies(),
+            TypedSpec::Validation(s) => s.dependencies(),
         }
     }
 }
@@ -830,6 +904,11 @@ mod tests {
             Kind::Simulation,
             r#"{"twins": ["a", "b"], "traffic_models": ["m", "n"],
                 "slo_hours": 2, "slo_frac": 0.99}"#,
+        );
+        fixed_point(Kind::Validation, r#"{}"#);
+        fixed_point(
+            Kind::Validation,
+            r#"{"suite": "all", "threads": 8, "golden_dir": "tests/golden"}"#,
         );
     }
 
@@ -921,6 +1000,8 @@ mod tests {
                 Kind::Simulation,
                 r#"{"twin": "t", "traffic_model": "m", "slo_frac": 1.5}"#,
             ),
+            (Kind::Validation, r#"{"suite": "vibes"}"#),
+            (Kind::Validation, r#"{"threads": 0}"#),
         ];
         for (kind, raw) in cases {
             let j = Json::parse(raw).unwrap();
@@ -951,6 +1032,9 @@ mod tests {
                 r#"{"twin": "t", "traffic_model": "m", "slo_hours": "4"}"#,
             ),
             (Kind::Schema, r#"{"fields": "none"}"#),
+            (Kind::Validation, r#"{"suite": 4}"#),
+            (Kind::Validation, r#"{"threads": "8"}"#),
+            (Kind::Validation, r#"{"golden_dir": 7}"#),
         ];
         for (kind, raw) in cases {
             let j = Json::parse(raw).unwrap();

@@ -138,6 +138,11 @@ pub struct StationStats {
     pub busy_s: f64,
     /// High-water mark of the waiting queue.
     pub max_queue: usize,
+    /// Time integral of the waiting-queue length, job·seconds (the event
+    /// loop accrues `queue length × dt` between events; dividing by the
+    /// run's makespan gives the time-average queue length L_q that the
+    /// analytic oracle checks against Erlang-C).
+    pub queue_area_s: f64,
 }
 
 /// Outcome of offering one arrival to a station.
@@ -255,6 +260,22 @@ impl<T> Station<T> {
         debug_assert!(server < self.cfg.servers);
         self.idle.push(server);
         self.stats.served += n_jobs as u64;
+    }
+
+    /// Number of jobs currently waiting in the queue (excludes jobs in
+    /// service and jobs parked in the backpressure buffer).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Accrue `dt` seconds of the current queue length into
+    /// [`StationStats::queue_area_s`]. The event loop calls this with the
+    /// time elapsed since the previous event, *before* applying the
+    /// event, so the integral covers the half-open interval the length
+    /// was constant on.
+    pub fn accrue_queue_area(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "time cannot flow backwards");
+        self.stats.queue_area_s += self.queue.len() as f64 * dt;
     }
 
     /// Whether the station holds no work (all servers idle, queues empty).

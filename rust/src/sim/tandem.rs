@@ -153,7 +153,21 @@ impl<T> Tandem<T> {
         }
         let n_stations = self.stations.len();
         let mut completions: Vec<(f64, T)> = Vec::new();
+        let mut prev_t = 0.0f64;
         while let Some((t, ev)) = self.kernel.next_event() {
+            // integrate queue lengths over the interval the queues were
+            // constant on (events may share a timestamp: dt is then 0).
+            // Deliberately O(n_stations) per event rather than O(1) per
+            // queue mutation inside Station: every in-tree tandem has
+            // <= 3 stations, and keeping Station free of time (the loop
+            // owns it) is worth two float ops per station here.
+            let dt = (t - prev_t).max(0.0);
+            if dt > 0.0 {
+                for s in &mut self.stations {
+                    s.accrue_queue_area(dt);
+                }
+            }
+            prev_t = t;
             match ev {
                 Ev::Arrive { station, job } => {
                     self.stations[station].offer(job);
@@ -301,6 +315,21 @@ mod tests {
         assert_eq!(out.stations[0].batches, 3);
         assert_eq!(out.drained_s(), 3.0);
         assert_eq!(out.completions.len(), 8);
+    }
+
+    #[test]
+    fn queue_area_integrates_waiting_jobs() {
+        // three simultaneous arrivals, unit service, one server:
+        // queue holds 2 jobs on [0,1), 1 on [1,2), 0 on [2,3) → area 3.0
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let arrivals: Vec<(f64, u32)> = (0..3).map(|i| (0.0, i)).collect();
+        let out = t.run(arrivals, fixed(1.0));
+        assert_eq!(out.stations[0].queue_area_s, 3.0);
+        assert_eq!(out.stations[0].max_queue, 2);
+        // an uncontended station accrues no queue area
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let out = t.run(vec![(0.0, 1u32), (5.0, 2)], fixed(1.0));
+        assert_eq!(out.stations[0].queue_area_s, 0.0);
     }
 
     #[test]

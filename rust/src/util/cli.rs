@@ -30,6 +30,7 @@ pub const BOOL_FLAGS: &[&str] = &[
     "dry-run",
     "native",
     "paper-twins",
+    "update",
 ];
 
 impl Args {

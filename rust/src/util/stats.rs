@@ -1,6 +1,10 @@
 //! Descriptive statistics for metric series: streaming moments (Welford),
 //! exact quantiles, and weighted quantiles (used for per-record latency
-//! percentiles where each hour is weighted by its arrival count).
+//! percentiles where each hour is weighted by its arrival count) — plus
+//! the queueing-theory building blocks ([`erlang_b`], [`erlang_c`]) and
+//! goodness-of-fit statistics ([`ks_statistic`],
+//! [`chi_squared_statistic`]) the [`crate::validate`] oracle uses to
+//! prove the sim kernel against closed-form ground truth.
 
 /// Streaming mean/variance accumulator (Welford's algorithm).
 #[derive(Debug, Clone, Default)]
@@ -49,15 +53,33 @@ impl Welford {
     }
 
     /// Population variance.
+    ///
+    /// Welford's single pass accumulates `m2 = Σ(x − mean)²`, which is
+    /// exactly 0 after one sample; by the same convention `variance`
+    /// (and [`Welford::std`]) return **0.0 for n < 2** — a series with
+    /// zero or one samples has no observed spread. Returning NaN here
+    /// (the old behaviour) poisoned every downstream aggregate that
+    /// folded an empty accumulator in.
+    ///
+    /// ```
+    /// use plantd::util::stats::Welford;
+    /// let mut w = Welford::new();
+    /// assert_eq!(w.variance(), 0.0); // empty: no spread, not NaN
+    /// w.push(3.0);
+    /// assert_eq!((w.variance(), w.std()), (0.0, 0.0)); // single sample
+    /// w.push(5.0);
+    /// assert!((w.variance() - 1.0).abs() < 1e-12); // {3, 5}: σ² = 1
+    /// ```
     pub fn variance(&self) -> f64 {
-        if self.n == 0 {
-            f64::NAN
+        if self.n < 2 {
+            0.0
         } else {
             self.m2 / self.n as f64
         }
     }
 
-    /// Population standard deviation.
+    /// Population standard deviation (0.0 for n < 2, like
+    /// [`Welford::variance`]).
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -123,9 +145,12 @@ pub fn mean(xs: &[f64]) -> f64 {
 }
 
 /// Weighted quantile: the smallest value `v` such that the summed weight of
-/// samples `<= v` reaches `q` of the total weight. Zero-weight samples are
-/// ignored. Used for per-record latency stats where each simulated hour
-/// carries `arrivals(hour)` records.
+/// samples `<= v` reaches `q` of the total weight. Samples with weight
+/// `<= 0` (including all-zero and NaN weights) are filtered out *before*
+/// the total is formed, so the division by the total only ever happens
+/// against a strictly positive sum — an all-zero (or empty) weight vector
+/// returns NaN instead of dividing by zero. Used for per-record latency
+/// stats where each simulated hour carries `arrivals(hour)` records.
 pub fn weighted_quantile(values: &[f64], weights: &[f64], q: f64) -> f64 {
     assert_eq!(values.len(), weights.len());
     assert!((0.0..=1.0).contains(&q));
@@ -178,6 +203,84 @@ pub fn weighted_fraction_below(values: &[f64], weights: &[f64], limit: f64) -> f
         / total
 }
 
+// ------------------------------------------------- queueing-theory blocks
+
+/// Erlang-B blocking probability: the fraction of arrivals lost by an
+/// M/M/c/c system (c servers, **no** waiting room) at offered load
+/// `a = λ/μ` Erlangs. Computed with the standard numerically-stable
+/// recurrence `B(0) = 1, B(k) = a·B(k−1) / (k + a·B(k−1))` — pure
+/// rational arithmetic, so the result is bit-identical on every
+/// IEEE-754 platform (the golden-snapshot harness relies on this).
+pub fn erlang_b(servers: usize, a: f64) -> f64 {
+    assert!(
+        a >= 0.0 && a.is_finite(),
+        "offered load must be finite and >= 0, got {a}"
+    );
+    let mut b = 1.0;
+    for k in 1..=servers {
+        b = a * b / (k as f64 + a * b);
+    }
+    b
+}
+
+/// Erlang-C probability that an arrival to an M/M/c queue (c servers,
+/// unbounded waiting room) has to wait, at offered load `a = λ/μ`
+/// Erlangs. Derived from [`erlang_b`] via
+/// `C = c·B / (c − a·(1 − B))`. The formula requires `a < c` for a
+/// stable queue; at or beyond saturation every arrival waits, so this
+/// returns 1.0 for `a >= c`.
+pub fn erlang_c(servers: usize, a: f64) -> f64 {
+    assert!(servers >= 1, "erlang_c needs at least one server");
+    if a <= 0.0 {
+        return 0.0;
+    }
+    let c = servers as f64;
+    if a >= c {
+        return 1.0;
+    }
+    let b = erlang_b(servers, a);
+    c * b / (c - a * (1.0 - b))
+}
+
+// --------------------------------------------------- goodness-of-fit stats
+
+/// Two-sided Kolmogorov–Smirnov statistic of a sample against a
+/// continuous CDF: `D = sup_x |F_n(x) − F(x)|`, evaluated exactly at
+/// the order statistics (the supremum of the empirical-vs-continuous
+/// gap is attained at a sample point, approaching from either side).
+/// NaN on an empty sample.
+pub fn ks_statistic<F: Fn(f64) -> f64>(xs: &[f64], cdf: F) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in ks_statistic input"));
+    let n = v.len() as f64;
+    let mut d = 0.0f64;
+    for (i, x) in v.iter().enumerate() {
+        let f = cdf(*x);
+        d = d.max(((i + 1) as f64 / n - f).abs());
+        d = d.max((f - i as f64 / n).abs());
+    }
+    d
+}
+
+/// Pearson chi-squared statistic `Σ (observed − expected)² / expected`
+/// over parallel bin counts. Panics if any expected count is `<= 0`
+/// (merge sparse bins before calling).
+pub fn chi_squared_statistic(observed: &[f64], expected: &[f64]) -> f64 {
+    assert_eq!(observed.len(), expected.len(), "bin count mismatch");
+    observed
+        .iter()
+        .zip(expected)
+        .map(|(o, e)| {
+            assert!(*e > 0.0, "expected bin count must be > 0, got {e}");
+            let d = o - e;
+            d * d / e
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,10 +301,24 @@ mod tests {
     }
 
     #[test]
-    fn welford_empty_is_nan() {
+    fn welford_empty_mean_is_nan_but_spread_is_zero() {
+        // moments that need at least one sample stay NaN; spread measures
+        // are 0.0 below two samples (see the variance() docs)
         let w = Welford::new();
         assert!(w.mean().is_nan());
-        assert!(w.variance().is_nan());
+        assert!(w.min().is_nan());
+        assert!(w.max().is_nan());
+        assert_eq!(w.variance(), 0.0);
+        assert_eq!(w.std(), 0.0);
+    }
+
+    #[test]
+    fn welford_single_sample_has_zero_spread() {
+        let mut w = Welford::new();
+        w.push(42.0);
+        assert_eq!(w.mean(), 42.0);
+        assert_eq!(w.variance(), 0.0, "one sample: no observed spread");
+        assert_eq!(w.std(), 0.0);
     }
 
     #[test]
@@ -241,6 +358,71 @@ mod tests {
         let v = [100.0, 1.0, 2.0];
         let w = [0.0, 1.0, 1.0];
         assert_eq!(weighted_quantile(&v, &w, 1.0), 2.0);
+    }
+
+    #[test]
+    fn weighted_quantile_zero_total_weight_is_nan_not_div_by_zero() {
+        // every weight filtered out: NaN, never a 0/0 division
+        assert!(weighted_quantile(&[1.0, 2.0], &[0.0, 0.0], 0.5).is_nan());
+        assert!(weighted_quantile(&[1.0, 2.0], &[-1.0, 0.0], 0.5).is_nan());
+        assert!(weighted_quantile(&[], &[], 0.5).is_nan());
+        // NaN weights are filtered like non-positive ones
+        assert_eq!(
+            weighted_quantile(&[7.0, 9.0], &[f64::NAN, 1.0], 0.5),
+            9.0
+        );
+    }
+
+    #[test]
+    fn erlang_b_known_values() {
+        // B(1, a) = a / (1 + a)
+        assert!((erlang_b(1, 0.5) - 0.5 / 1.5).abs() < 1e-15);
+        // classic table value: B(2, 1) = 0.2
+        assert!((erlang_b(2, 1.0) - 0.2).abs() < 1e-15);
+        // no servers: every arrival blocked; no load: never blocked
+        assert_eq!(erlang_b(0, 1.0), 1.0);
+        assert_eq!(erlang_b(4, 0.0), 0.0);
+        // monotone decreasing in servers
+        assert!(erlang_b(8, 4.0) < erlang_b(4, 4.0));
+    }
+
+    #[test]
+    fn erlang_c_known_values() {
+        // M/M/1: C = rho
+        assert!((erlang_c(1, 0.8) - 0.8).abs() < 1e-12);
+        // M/M/2 at a = 1.5: C = 0.6428571428571...
+        assert!((erlang_c(2, 1.5) - 9.0 / 14.0).abs() < 1e-12);
+        // saturation clamps to 1
+        assert_eq!(erlang_c(2, 2.0), 1.0);
+        assert_eq!(erlang_c(2, 5.0), 1.0);
+        assert_eq!(erlang_c(3, 0.0), 0.0);
+    }
+
+    #[test]
+    fn ks_statistic_detects_fit_and_misfit() {
+        // exact uniform grid points against the U(0,1) CDF: D = 1/(2n)
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64 + 0.5) / 100.0).collect();
+        let d = ks_statistic(&xs, |x| x.clamp(0.0, 1.0));
+        assert!((d - 0.005).abs() < 1e-12, "D = {d}");
+        // the same sample against a wrong CDF is far off
+        let d_bad = ks_statistic(&xs, |x| (x / 2.0).clamp(0.0, 1.0));
+        assert!(d_bad > 0.4, "D = {d_bad}");
+        assert!(ks_statistic(&[], |_| 0.5).is_nan());
+    }
+
+    #[test]
+    fn chi_squared_statistic_basics() {
+        // perfect fit: 0
+        assert_eq!(chi_squared_statistic(&[10.0, 20.0], &[10.0, 20.0]), 0.0);
+        // one bin off by 5 against expectation 10: 25/10
+        let x2 = chi_squared_statistic(&[15.0, 20.0], &[10.0, 20.0]);
+        assert!((x2 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected bin count")]
+    fn chi_squared_rejects_empty_expected_bins() {
+        chi_squared_statistic(&[1.0], &[0.0]);
     }
 
     #[test]

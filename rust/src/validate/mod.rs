@@ -1,0 +1,172 @@
+//! Statistical validation: proving the sim kernel against ground truth.
+//!
+//! PlantD's value rests on the claim that its wind-tunnel simulations
+//! predict real pipeline behaviour well enough to forecast cost (paper
+//! §V–VI). Before this module, the only guard was the real-vs-sim parity
+//! test with its deliberately loose 0.45 tolerance (wall-clock runs
+//! carry OS noise). This subsystem holds the simulator itself to a far
+//! tighter bar, in three layers:
+//!
+//! - [`oracle`] — **closed-form ground truth**: exact M/M/1, M/M/c, and
+//!   M/M/c/K steady-state metrics (Erlang-B/C from
+//!   [`crate::util::stats`]), FIFO sojourn distributions, and the
+//!   hypoexponential end-to-end law of M/M/1 tandems;
+//! - [`suite`] — a **conformance runner**: named [`ValidationCase`]s
+//!   configure [`crate::sim::Station`]/[`crate::sim::Tandem`] to textbook
+//!   assumptions and assert every DES metric lands within
+//!   [`suite::DES_VS_ANALYTIC_REL_TOL`] (2%) of the oracle, with
+//!   pass/fail verdicts rendered as a `util::table` and JSON;
+//! - [`snapshot`] — a **golden-snapshot harness**: canonical
+//!   oracle/suite/campaign/experiment reports serialized under
+//!   `tests/golden/`, normalized and byte-compared on every run, with
+//!   `--update` regeneration.
+//!
+//! Drivable three ways: `plantd validate [--suite queueing|snapshots|
+//! all] [--update]`, the `Validation` resource kind (declarable in
+//! manifests, executed by the controller), and the
+//! `tests/validation_oracle.rs` / `tests/golden_snapshots.rs`
+//! integration tests. See `docs/VALIDATION.md` for the formulas,
+//! tolerance derivations, and snapshot workflow.
+
+pub mod oracle;
+pub mod snapshot;
+pub mod suite;
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub use oracle::QueueMetrics;
+pub use snapshot::{SnapshotMode, SnapshotOutcome, SnapshotStatus};
+pub use suite::{
+    CaseResult, MetricCheck, QueueModel, SuiteReport, ValidationCase, ValidationSuite,
+};
+
+/// Everything one `validate` invocation produced: which suites ran and
+/// their results. Shared by the CLI verb and the controller's
+/// `Validation` resource arm, so the two entry points cannot drift.
+pub struct ValidationRun {
+    /// The queueing conformance report, if that suite was selected.
+    pub queueing: Option<SuiteReport>,
+    /// The snapshot outcomes, if that suite was selected.
+    pub snapshots: Option<Vec<SnapshotOutcome>>,
+}
+
+impl ValidationRun {
+    /// Rendered human output for every suite that ran (tables + verdict
+    /// lines; newline-terminated, print with `print!`).
+    pub fn output(&self) -> String {
+        let mut out = String::new();
+        if let Some(report) = &self.queueing {
+            out += &report.render();
+        }
+        if let Some(outcomes) = &self.snapshots {
+            out += &snapshot::render(outcomes);
+        }
+        out
+    }
+
+    /// Total targets checked (queueing cases + snapshot subjects).
+    pub fn targets(&self) -> usize {
+        self.queueing.as_ref().map_or(0, |r| r.results.len())
+            + self.snapshots.as_ref().map_or(0, Vec::len)
+    }
+
+    /// Names of failing targets, prefixed by suite
+    /// (`queueing/mm1-fifo`, `snapshots/campaign-paper`).
+    pub fn failed(&self) -> Vec<String> {
+        let mut failed = Vec::new();
+        if let Some(report) = &self.queueing {
+            failed.extend(
+                report
+                    .results
+                    .iter()
+                    .filter(|r| !r.pass())
+                    .map(|r| format!("queueing/{}", r.name)),
+            );
+        }
+        if let Some(outcomes) = &self.snapshots {
+            failed.extend(
+                outcomes
+                    .iter()
+                    .filter(|o| !o.status.pass())
+                    .map(|o| format!("snapshots/{}", o.name)),
+            );
+        }
+        failed
+    }
+
+    /// One line per failing target *with its evidence* — the failing
+    /// metrics (analytic vs measured, err vs tol) or the snapshot
+    /// status. This travels in error messages, so a CI log or a
+    /// resource condition is diagnosable without a local re-run.
+    pub fn failure_details(&self) -> Vec<String> {
+        let mut details = Vec::new();
+        if let Some(report) = &self.queueing {
+            for r in report.results.iter().filter(|r| !r.pass()) {
+                let metrics: Vec<String> = r
+                    .checks
+                    .iter()
+                    .filter(|c| !c.pass)
+                    .map(|c| {
+                        format!(
+                            "{} analytic {:.6} measured {:.6} ({} err {:.4} >= {:.4})",
+                            c.metric, c.analytic, c.measured, c.mode, c.err, c.tol
+                        )
+                    })
+                    .collect();
+                details.push(format!("queueing/{}: {}", r.name, metrics.join("; ")));
+            }
+        }
+        if let Some(outcomes) = &self.snapshots {
+            for o in outcomes.iter().filter(|o| !o.status.pass()) {
+                details.push(format!("snapshots/{}: {}", o.name, o.status.label()));
+            }
+        }
+        details
+    }
+
+    /// Machine-readable per-suite results (what the `Validation`
+    /// resource stores in its status).
+    pub fn status_json(&self, selection: &str) -> Json {
+        let failed = self.failed();
+        let mut fields = vec![("suite", Json::str(selection))];
+        if let Some(report) = &self.queueing {
+            fields.push(("queueing", report.to_json()));
+        }
+        if let Some(outcomes) = &self.snapshots {
+            fields.push(("snapshots", snapshot::to_json(outcomes)));
+        }
+        fields.push(("targets", Json::Num(self.targets() as f64)));
+        fields.push((
+            "failed",
+            Json::arr(failed.iter().map(|f| Json::str(f.clone()))),
+        ));
+        Json::obj(fields)
+    }
+}
+
+/// Run the selected suites (`queueing`, `snapshots`, or `all`).
+/// `mode` governs the snapshot leg only (the controller always passes
+/// [`SnapshotMode::Verify`]; `--update` is CLI-only because it mutates
+/// the golden tree). Unknown selections are an error.
+pub fn run_suites(
+    selection: &str,
+    threads: usize,
+    golden_dir: &Path,
+    mode: SnapshotMode,
+) -> Result<ValidationRun, String> {
+    if !matches!(selection, "queueing" | "snapshots" | "all") {
+        return Err(format!(
+            "unknown suite '{selection}' (queueing|snapshots|all)"
+        ));
+    }
+    let queueing = matches!(selection, "queueing" | "all")
+        .then(|| ValidationSuite::queueing().run(threads));
+    let snapshots =
+        matches!(selection, "snapshots" | "all").then(|| snapshot::check(golden_dir, mode));
+    Ok(ValidationRun {
+        queueing,
+        snapshots,
+    })
+}

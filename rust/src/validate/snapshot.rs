@@ -1,0 +1,470 @@
+//! Golden-snapshot regression harness: canonical reports, serialized
+//! under `tests/golden/`, byte-compared on every run.
+//!
+//! Every subject is a fixed-seed, fully deterministic artifact:
+//!
+//! - `oracle_closed_form.json` — the analytic oracle's rational-only
+//!   metrics for the canonical suite. Pure `+ − × ÷` arithmetic, so the
+//!   bytes are identical on *every* IEEE-754 platform; this file is
+//!   committed and never bootstrapped.
+//! - `queueing_suite_small.json` — measured DES metrics of the suite at
+//!   1/20 horizons. Locks the kernel's event ordering, RNG streams, and
+//!   Station semantics.
+//! - `campaign_paper.json` — the paper campaign grid at seed 0xD5
+//!   (the report `tests/campaign_determinism.rs` already proves
+//!   thread-count-invariant).
+//! - `experiment_sim.json` — a tiny sim-mode wind-tunnel run of all
+//!   three paper variants, with the twins fitted from it.
+//!
+//! ## Normalization
+//!
+//! Floating-point snapshot bytes must be stable across *toolchains* but
+//! sensitive to *behaviour*. Raw shortest-roundtrip formatting fails the
+//! first requirement: several subjects sample through `ln`/`exp`, whose
+//! last-ulp results are libm-specific. [`normalize`] therefore rewrites
+//! every JSON number as a 9-significant-digit scientific string
+//! (`{:.8e}`) before comparison — wide enough that a last-ulp libm
+//! wiggle never flips a digit, tight enough that any real modelling or
+//! ordering change does.
+//!
+//! Caveat: normalization absorbs *continuous* wobble only. A last-ulp
+//! shift in a sampled event time could in principle flip a discrete
+//! decision (the ordering of two near-tied events), which would move a
+//! DES snapshot by more than a 9th digit. With continuous arrival and
+//! service times the committed seeds contain no such near-ties, but the
+//! guarantee is empirical, not structural — so regenerate DES snapshots
+//! in the CI environment when in doubt. Only `oracle_closed_form.json`
+//! (pure rational arithmetic, no libm at all) is platform-independent
+//! by construction.
+//!
+//! ## `--update` etiquette
+//!
+//! `plantd validate --suite snapshots --update` regenerates every file.
+//! Run it only when a PR *intends* to change results, commit the diff,
+//! and say why in the PR description. CI re-runs `--update` and fails
+//! if the tree changes (drift) or if generated snapshots were never
+//! committed. A missing file under `Verify` is a failure, not a free
+//! pass — `tests/golden_snapshots.rs` bootstraps missing files locally
+//! and double-generates to prove determinism, but the bytes only become
+//! a regression bar once committed.
+
+use std::path::{Path, PathBuf};
+
+use crate::campaign::{Campaign, CampaignRunner};
+use crate::datagen::{DataSet, DataSetSpec};
+use crate::experiment::{Experiment, ExperimentHarness};
+use crate::loadgen::LoadPattern;
+use crate::pipeline::VariantConfig;
+use crate::twin::TwinParams;
+use crate::util::json::Json;
+
+use super::suite::ValidationSuite;
+
+/// How the harness treats the golden directory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotMode {
+    /// Compare against committed files; missing files fail.
+    Verify,
+    /// Regenerate every file (reporting whether it changed).
+    Update,
+    /// Compare existing files strictly, but write (and double-generate)
+    /// missing ones — the in-tree test's first-run behaviour.
+    BootstrapMissing,
+}
+
+/// Result of checking one subject.
+#[derive(Debug, Clone)]
+pub struct SnapshotOutcome {
+    /// Subject name.
+    pub name: &'static str,
+    /// File the subject serializes to.
+    pub path: PathBuf,
+    /// What happened.
+    pub status: SnapshotStatus,
+}
+
+/// Per-subject verdict.
+#[derive(Debug, Clone)]
+pub enum SnapshotStatus {
+    /// Golden file present and byte-identical.
+    Match,
+    /// File (re)written by `Update`; bytes unchanged from the tree.
+    Unchanged,
+    /// File (re)written by `Update`; bytes differ from what was there
+    /// (or the file was new).
+    Updated,
+    /// File was missing and `BootstrapMissing` wrote it (regeneration
+    /// proved byte-identical).
+    Bootstrapped,
+    /// File missing under `Verify`.
+    Missing,
+    /// Bytes differ; holds a one-line description of the first
+    /// difference.
+    Drift(String),
+    /// The golden file could not be read/written.
+    Error(String),
+}
+
+impl SnapshotStatus {
+    /// Whether this outcome counts as a pass.
+    pub fn pass(&self) -> bool {
+        matches!(
+            self,
+            SnapshotStatus::Match
+                | SnapshotStatus::Unchanged
+                | SnapshotStatus::Updated
+                | SnapshotStatus::Bootstrapped
+        )
+    }
+
+    /// Short display label.
+    pub fn label(&self) -> String {
+        match self {
+            SnapshotStatus::Match => "match".into(),
+            SnapshotStatus::Unchanged => "unchanged".into(),
+            SnapshotStatus::Updated => "updated".into(),
+            SnapshotStatus::Bootstrapped => "bootstrapped (commit me)".into(),
+            SnapshotStatus::Missing => "MISSING (run --update)".into(),
+            SnapshotStatus::Drift(d) => format!("DRIFT: {d}"),
+            SnapshotStatus::Error(e) => format!("ERROR: {e}"),
+        }
+    }
+}
+
+/// One snapshot subject: a name, a target file, a generator.
+pub struct Subject {
+    /// Subject name (shown in tables).
+    pub name: &'static str,
+    /// File name under the golden directory.
+    pub file: &'static str,
+    /// Produce the (un-normalized) report JSON.
+    pub generate: fn() -> Json,
+}
+
+/// The canonical subject list (see the module docs).
+pub fn subjects() -> Vec<Subject> {
+    vec![
+        Subject {
+            name: "oracle-closed-form",
+            file: "oracle_closed_form.json",
+            generate: || ValidationSuite::queueing().closed_form_json(),
+        },
+        Subject {
+            name: "queueing-suite-small",
+            file: "queueing_suite_small.json",
+            generate: || ValidationSuite::queueing_sized(0.05).run(1).measured_json(),
+        },
+        Subject {
+            name: "campaign-paper",
+            file: "campaign_paper.json",
+            generate: || {
+                let campaign = Campaign::from_grid_name("paper", 0xD5)
+                    .expect("the paper grid preset exists");
+                CampaignRunner::new(1).run(&campaign).to_json()
+            },
+        },
+        Subject {
+            name: "experiment-sim",
+            file: "experiment_sim.json",
+            generate: experiment_sim_json,
+        },
+    ]
+}
+
+/// Tiny sim-mode wind-tunnel run (all three paper variants) plus the
+/// twins fitted from it — the experiment/twin leg of the snapshot set.
+fn experiment_sim_json() -> Json {
+    let harness = ExperimentHarness::new(3000.0);
+    let exp = Experiment::new(
+        "golden-pulse",
+        LoadPattern::steady(5.0, 2.0), // 10 zips: enough to exercise every stage
+        DataSet::generate(DataSetSpec {
+            payloads: 4,
+            records_per_subsystem: 2,
+            bad_rate: 0.0,
+            seed: 9,
+        }),
+    );
+    let mut records = Vec::new();
+    let mut twins = Vec::new();
+    for cfg in VariantConfig::paper_variants() {
+        let rec = harness
+            .simulate(&cfg, &exp)
+            .expect("sim mode is deterministic and infallible on this input");
+        twins.push(TwinParams::fit(&rec).to_json());
+        records.push(rec.to_json());
+    }
+    Json::obj(vec![
+        ("experiment", Json::str("golden-pulse")),
+        ("records", Json::arr(records)),
+        ("twins", Json::arr(twins)),
+    ])
+}
+
+/// Default golden directory: `$PLANTD_GOLDEN_DIR`, else `tests/golden`
+/// (tests resolve it from the manifest dir instead — see
+/// `tests/golden_snapshots.rs` — because `cargo` runs them with the
+/// crate root, not the repo root, as the working directory).
+pub fn default_golden_dir() -> PathBuf {
+    std::env::var("PLANTD_GOLDEN_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("tests/golden"))
+}
+
+/// Rewrite every JSON number as a 9-significant-digit scientific string
+/// (see the module docs for why). Applied to both sides of every
+/// comparison, and to files before writing.
+pub fn normalize(j: &Json) -> Json {
+    match j {
+        Json::Num(v) => Json::Str(sig9(*v)),
+        Json::Arr(items) => Json::Arr(items.iter().map(normalize).collect()),
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .map(|(k, v)| (k.clone(), normalize(v)))
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+fn sig9(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.8e}")
+    } else {
+        format!("{v}")
+    }
+}
+
+/// The exact bytes a subject's golden file holds: normalized, pretty,
+/// newline-terminated.
+pub fn render_subject(s: &Subject) -> String {
+    let mut text = normalize(&(s.generate)()).to_string_pretty();
+    text.push('\n');
+    text
+}
+
+/// One-line description of the first byte-level difference.
+fn first_diff(golden: &str, generated: &str) -> String {
+    for (i, (lg, ln)) in golden.lines().zip(generated.lines()).enumerate() {
+        if lg != ln {
+            return format!("line {}: golden `{lg}` vs generated `{ln}`", i + 1);
+        }
+    }
+    format!(
+        "line count: golden {} vs generated {}",
+        golden.lines().count(),
+        generated.lines().count()
+    )
+}
+
+/// Check (or update) every canonical subject against the golden
+/// directory.
+pub fn check(dir: &Path, mode: SnapshotMode) -> Vec<SnapshotOutcome> {
+    check_subjects(dir, mode, &subjects())
+}
+
+/// [`check`] over an explicit subject list (tests use a cheap subset).
+pub fn check_subjects(dir: &Path, mode: SnapshotMode, subjects: &[Subject]) -> Vec<SnapshotOutcome> {
+    subjects
+        .iter()
+        .map(|s| {
+            let path = dir.join(s.file);
+            let generated = render_subject(s);
+            let existing = std::fs::read_to_string(&path).ok();
+            let status = match (existing, mode) {
+                (Some(golden), SnapshotMode::Verify | SnapshotMode::BootstrapMissing) => {
+                    if golden == generated {
+                        SnapshotStatus::Match
+                    } else {
+                        SnapshotStatus::Drift(first_diff(&golden, &generated))
+                    }
+                }
+                (None, SnapshotMode::Verify) => SnapshotStatus::Missing,
+                (existing, SnapshotMode::Update) => {
+                    let unchanged = existing.as_deref() == Some(generated.as_str());
+                    match write_snapshot(&path, &generated) {
+                        Ok(()) if unchanged => SnapshotStatus::Unchanged,
+                        Ok(()) => SnapshotStatus::Updated,
+                        Err(e) => SnapshotStatus::Error(e),
+                    }
+                }
+                (None, SnapshotMode::BootstrapMissing) => {
+                    // prove determinism before trusting the bytes: a
+                    // second generation must reproduce them exactly
+                    let second = render_subject(s);
+                    if second != generated {
+                        SnapshotStatus::Error(format!(
+                            "non-deterministic generation: {}",
+                            first_diff(&generated, &second)
+                        ))
+                    } else {
+                        match write_snapshot(&path, &generated) {
+                            Ok(()) => SnapshotStatus::Bootstrapped,
+                            Err(e) => SnapshotStatus::Error(e),
+                        }
+                    }
+                }
+            };
+            SnapshotOutcome {
+                name: s.name,
+                path,
+                status,
+            }
+        })
+        .collect()
+}
+
+fn write_snapshot(path: &Path, text: &str) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    }
+    std::fs::write(path, text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Render outcomes as a `util::table` plus a verdict line.
+pub fn render(outcomes: &[SnapshotOutcome]) -> String {
+    let mut table = crate::util::table::Table::new(&["snapshot", "file", "status"])
+        .align(1, crate::util::table::Align::Left)
+        .align(2, crate::util::table::Align::Left)
+        .with_title("GOLDEN SNAPSHOTS");
+    for o in outcomes {
+        table.row(vec![
+            o.name.to_string(),
+            o.path.display().to_string(),
+            o.status.label(),
+        ]);
+    }
+    let failed = outcomes.iter().filter(|o| !o.status.pass()).count();
+    let verdict = if failed == 0 {
+        format!("{} snapshots: all PASS\n", outcomes.len())
+    } else {
+        format!("{failed} of {} snapshots FAILED\n", outcomes.len())
+    };
+    format!("{}{verdict}", table.render())
+}
+
+/// Machine-readable outcomes (for the Validation resource's status).
+pub fn to_json(outcomes: &[SnapshotOutcome]) -> Json {
+    Json::arr(outcomes.iter().map(|o| {
+        Json::obj(vec![
+            ("name", Json::str(o.name)),
+            ("file", Json::str(o.path.display().to_string())),
+            ("status", Json::str(o.status.label())),
+            ("pass", Json::Bool(o.status.pass())),
+        ])
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_rewrites_numbers_recursively() {
+        let j = Json::parse(r#"{"a": 0.8, "b": [1, 2.5], "c": {"d": 1000}, "s": "x"}"#).unwrap();
+        let n = normalize(&j);
+        assert_eq!(n.path(&["a"]).unwrap().as_str(), Some("8.00000000e-1"));
+        assert_eq!(
+            n.get("b").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("1.00000000e0")
+        );
+        assert_eq!(n.path(&["c", "d"]).unwrap().as_str(), Some("1.00000000e3"));
+        assert_eq!(n.get("s").unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn sig9_is_nine_significant_digits() {
+        assert_eq!(sig9(0.8), "8.00000000e-1");
+        assert_eq!(sig9(5.0), "5.00000000e0");
+        assert_eq!(sig9(-3.2), "-3.20000000e0");
+        assert_eq!(sig9(0.0), "0.00000000e0");
+        // a last-ulp wiggle does not move the string
+        assert_eq!(sig9(0.1 + 0.2), sig9(0.3 + 1e-17));
+    }
+
+    #[test]
+    fn first_diff_points_at_the_first_divergence() {
+        let d = first_diff("a\nb\nc", "a\nB\nc");
+        assert!(d.contains("line 2"), "{d}");
+        assert!(d.contains('B'), "{d}");
+        let d = first_diff("a\nb", "a\nb\nc");
+        assert!(d.contains("line count"), "{d}");
+    }
+
+    /// The cheap subject subset the lifecycle test cycles through (the
+    /// full set re-runs a campaign per check; the mechanics are
+    /// identical).
+    fn cheap_subjects() -> Vec<Subject> {
+        vec![Subject {
+            name: "oracle-closed-form",
+            file: "oracle_closed_form.json",
+            generate: || ValidationSuite::queueing().closed_form_json(),
+        }]
+    }
+
+    #[test]
+    fn verify_missing_update_drift_lifecycle() {
+        let dir = std::env::temp_dir().join("plantd-snapshot-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let subjects = cheap_subjects();
+        // Verify on an empty dir: everything Missing
+        let outcomes = check_subjects(&dir, SnapshotMode::Verify, &subjects);
+        assert!(outcomes
+            .iter()
+            .all(|o| matches!(o.status, SnapshotStatus::Missing)));
+        assert!(outcomes.iter().all(|o| !o.status.pass()));
+        // Update writes them all
+        let outcomes = check_subjects(&dir, SnapshotMode::Update, &subjects);
+        assert!(outcomes
+            .iter()
+            .all(|o| matches!(o.status, SnapshotStatus::Updated)));
+        // Verify now matches byte-for-byte
+        let outcomes = check_subjects(&dir, SnapshotMode::Verify, &subjects);
+        assert!(
+            outcomes
+                .iter()
+                .all(|o| matches!(o.status, SnapshotStatus::Match)),
+            "{:?}",
+            outcomes.iter().map(|o| o.status.label()).collect::<Vec<_>>()
+        );
+        // a second Update on the unchanged tree is byte-identical
+        let outcomes = check_subjects(&dir, SnapshotMode::Update, &subjects);
+        assert!(outcomes
+            .iter()
+            .all(|o| matches!(o.status, SnapshotStatus::Unchanged)));
+        // corrupt one file: Verify reports drift with a located diff
+        let victim = dir.join("oracle_closed_form.json");
+        let mut text = std::fs::read_to_string(&victim).unwrap();
+        text = text.replacen("8.00000000e-1", "8.00000001e-1", 1);
+        std::fs::write(&victim, text).unwrap();
+        let outcomes = check_subjects(&dir, SnapshotMode::Verify, &subjects);
+        match &outcomes[0].status {
+            SnapshotStatus::Drift(d) => assert!(d.contains("line"), "{d}"),
+            other => panic!("expected drift, got {}", other.label()),
+        }
+        // BootstrapMissing compares strictly when the file exists...
+        let outcomes = check_subjects(&dir, SnapshotMode::BootstrapMissing, &subjects);
+        assert!(matches!(outcomes[0].status, SnapshotStatus::Drift(_)));
+        // ...and writes (with a double-generation proof) when it doesn't
+        std::fs::remove_file(&victim).unwrap();
+        let outcomes = check_subjects(&dir, SnapshotMode::BootstrapMissing, &subjects);
+        assert!(matches!(outcomes[0].status, SnapshotStatus::Bootstrapped));
+        let outcomes = check_subjects(&dir, SnapshotMode::Verify, &subjects);
+        assert!(matches!(outcomes[0].status, SnapshotStatus::Match));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn render_and_json_outputs() {
+        let outcomes = vec![SnapshotOutcome {
+            name: "x",
+            path: PathBuf::from("tests/golden/x.json"),
+            status: SnapshotStatus::Match,
+        }];
+        let text = render(&outcomes);
+        assert!(text.contains("GOLDEN SNAPSHOTS"));
+        assert!(text.contains("all PASS"));
+        let j = to_json(&outcomes);
+        assert_eq!(j.as_arr().unwrap().len(), 1);
+    }
+}

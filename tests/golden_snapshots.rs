@@ -1,0 +1,86 @@
+//! Golden-snapshot regression: canonical reports under `tests/golden/`
+//! must match byte-for-byte. `oracle_closed_form.json` is committed and
+//! always strictly compared (it is pure rational arithmetic — identical
+//! bytes on every IEEE-754 platform). The DES-derived subjects bootstrap
+//! on first run (written with a double-generation determinism proof and
+//! an eprintln asking for a commit) and are strictly compared once the
+//! files exist — committing them is what turns the harness into a
+//! regression bar, see docs/VALIDATION.md.
+
+use std::path::PathBuf;
+
+use plantd::validate::{snapshot, SnapshotMode, SnapshotStatus};
+
+fn golden_dir() -> PathBuf {
+    // tests run with the crate root (rust/) as cwd; golden files live at
+    // the repo root next to the tests themselves
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../tests/golden")
+}
+
+/// The committed analytic snapshot never bootstraps: a missing or
+/// drifting file is a hard failure. If this fires, either the oracle's
+/// closed forms changed (update the snapshot deliberately, with a PR
+/// note) or a refactor moved its arithmetic (fix the refactor).
+#[test]
+fn committed_oracle_snapshot_matches_exactly() {
+    let subjects = snapshot::subjects();
+    let oracle = subjects
+        .iter()
+        .find(|s| s.name == "oracle-closed-form")
+        .expect("oracle subject registered");
+    let path = golden_dir().join(oracle.file);
+    let golden = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "{} must be committed (it is platform-independent): {e}",
+            path.display()
+        )
+    });
+    let generated = snapshot::render_subject(oracle);
+    assert_eq!(
+        golden, generated,
+        "the analytic oracle's closed forms moved; regenerate with \
+         `plantd validate --suite snapshots --update` only if the change \
+         is intended, and say why in the PR"
+    );
+}
+
+/// Every subject, through the real harness in bootstrap mode: existing
+/// files are strictly compared (drift fails), missing ones are written
+/// after a double-generation determinism proof.
+#[test]
+fn all_snapshots_match_or_bootstrap() {
+    let outcomes = snapshot::check(&golden_dir(), SnapshotMode::BootstrapMissing);
+    let mut bootstrapped = Vec::new();
+    for o in &outcomes {
+        match &o.status {
+            SnapshotStatus::Match => {}
+            SnapshotStatus::Bootstrapped => bootstrapped.push(o.path.display().to_string()),
+            other => panic!("{}: {}", o.name, other.label()),
+        }
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "bootstrapped {} golden snapshot(s) — commit them to arm the \
+             regression bar:\n  {}",
+            bootstrapped.len(),
+            bootstrapped.join("\n  ")
+        );
+    }
+}
+
+/// The DES-derived subjects regenerate byte-identically within a
+/// process — the determinism the `--update` workflow relies on.
+#[test]
+fn snapshot_generation_is_deterministic() {
+    for s in snapshot::subjects() {
+        if s.name == "campaign-paper" || s.name == "experiment-sim" {
+            // covered (more cheaply) by tests/campaign_determinism.rs and
+            // the controller determinism test; regenerating them twice
+            // here would double the most expensive subjects
+            continue;
+        }
+        let a = snapshot::render_subject(&s);
+        let b = snapshot::render_subject(&s);
+        assert_eq!(a, b, "subject '{}' is not deterministic", s.name);
+    }
+}

@@ -435,6 +435,23 @@ fn prop_resource_specs_roundtrip_byte_identical() {
                 })),
             )]),
         );
+        // Validation: every suite selector, random thread counts
+        let suites = ["queueing", "snapshots", "all"];
+        assert_spec_fixed_point(
+            Kind::Validation,
+            &Json::obj(vec![
+                ("suite", Json::str(*rng.choice(&suites))),
+                ("threads", Json::Num(rng.int_range(1, 16) as f64)),
+            ]),
+        );
+        assert_spec_fixed_point(
+            Kind::Validation,
+            &Json::obj(vec![
+                ("suite", Json::str("snapshots")),
+                ("threads", Json::Num(2.0)),
+                ("golden_dir", Json::str(rng.alphanumeric(8))),
+            ]),
+        );
     });
 }
 
@@ -541,6 +558,100 @@ fn prop_datagen_formats_roundtrip() {
                     || corrupt == bin, // bit flip may be identity on some encodings
                 "corruption at byte {pos} not detected"
             );
+        }
+    });
+}
+
+#[test]
+fn prop_event_queue_pops_ties_in_stable_time_seq_order() {
+    use plantd::sim::EventQueue;
+    check("event-queue-stable-ties", 60, |rng| {
+        // random interleaved pushes with deliberately colliding times
+        // (coarse-grid rounding forces many exact ties); the payload is
+        // the push index, so stability is directly observable
+        let n = rng.int_range(1, 400) as usize;
+        let mut q = EventQueue::new();
+        let mut pushed: Vec<f64> = Vec::with_capacity(n);
+        for i in 0..n {
+            let t = (rng.uniform(0.0, 10.0) * 4.0).round() / 4.0; // 0.25 grid
+            q.push(t, i);
+            pushed.push(t);
+        }
+        assert_eq!(q.len(), n);
+        let mut popped: Vec<(f64, usize)> = Vec::with_capacity(n);
+        while let Some(e) = q.pop() {
+            popped.push(e);
+        }
+        assert_eq!(popped.len(), n, "no event lost or duplicated");
+        for w in popped.windows(2) {
+            let ((t0, i0), (t1, i1)) = (w[0], w[1]);
+            assert!(t1 >= t0, "times must be non-decreasing");
+            if t0.to_bits() == t1.to_bits() {
+                assert!(
+                    i1 > i0,
+                    "tie at t={t0}: push #{i1} popped before push #{i0}"
+                );
+            }
+        }
+        // every event came back at the time it was pushed with
+        for (t, i) in &popped {
+            assert_eq!(t.to_bits(), pushed[*i].to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_quantile_matches_sort_based_reference() {
+    // an independent "type 7" reference: sort, then interpolate between
+    // the two bracketing order statistics
+    fn reference(xs: &[f64], q: f64) -> f64 {
+        if xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let h = q * (v.len() as f64 - 1.0);
+        let lo = h.floor() as usize;
+        let frac = h - lo as f64;
+        if lo + 1 < v.len() {
+            v[lo] + frac * (v[lo + 1] - v[lo])
+        } else {
+            v[lo]
+        }
+    }
+    check("quantile-vs-reference", 80, |rng| {
+        let n = rng.int_range(0, 300) as usize;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 50.0)).collect();
+        // inject duplicate runs so interpolation hits equal neighbours
+        if n >= 4 {
+            let dup = xs[0];
+            xs[1] = dup;
+            xs[2] = dup;
+        }
+        for _ in 0..8 {
+            let q = rng.f64();
+            let got = stats::quantile(&xs, q);
+            let want = reference(&xs, q);
+            if n == 0 {
+                assert!(got.is_nan() && want.is_nan());
+            } else {
+                assert!(
+                    (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                    "q={q}, n={n}: {got} vs {want}"
+                );
+            }
+        }
+        // edges: empty, single, duplicates-only
+        assert!(stats::quantile(&[], 0.5).is_nan());
+        assert_eq!(stats::quantile(&[7.5], 0.0), 7.5);
+        assert_eq!(stats::quantile(&[7.5], 1.0), 7.5);
+        let dup = [3.0, 3.0, 3.0, 3.0];
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(stats::quantile(&dup, q), 3.0);
+        }
+        if n >= 1 {
+            assert_eq!(stats::quantile(&xs, 0.0), reference(&xs, 0.0));
+            assert_eq!(stats::quantile(&xs, 1.0), reference(&xs, 1.0));
         }
     });
 }
