@@ -4,6 +4,8 @@
 //! (their overhead bounds the load the harness can honestly deliver,
 //! §II), plus the L2/L1 simulation execution:
 //!
+//!  - DES kernel: EventQueue push/pop (index-heap arena) and a
+//!    stage-profiled M/M/1 run (per-stage p50/p95/p99, events/s)
 //!  - TSDB sample ingest (target ≥ 5 M samples/s)
 //!  - span collection (span → 3-4 TSDB samples)
 //!  - dataset synthesis (zip building, MB/s)
@@ -12,32 +14,73 @@
 //!  - Lindley queue scan, native Rust (records/s)
 //!  - full year-sim execute: PJRT artifact vs native evaluator
 //!  - JSON parse/serialize (manifest-sized document)
+//!
+//! Kernel numbers append to the schema-versioned trajectory
+//! `BENCH_hotpaths.json` at the workspace root (validated before
+//! writing; `PLANTD_BENCH_DIR` redirects). `PLANTD_BENCH_QUICK=1`
+//! shrinks every section to a smoke run; `PLANTD_BENCH_LABEL` /
+//! `PLANTD_BENCH_HOST` tag the entry. See `docs/PERF.md`.
 
 use std::path::Path;
+use std::time::SystemTime;
 
 use plantd::bizsim::{simulate_batch, SloSpec};
 use plantd::datagen::{decode_subsystem_binary, DataSet, DataSetSpec};
 use plantd::loadgen::LoadPattern;
 use plantd::runtime::{native::NativeBackend, Engine};
+use plantd::sim::{profile_kernel, EventQueue};
 use plantd::telemetry::{Collector, Span, Tsdb};
 use plantd::traffic::TrafficModel;
 use plantd::twin::TwinParams;
 use plantd::util::bench::{self, throughput};
 use plantd::util::json::Json;
+use plantd::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    println!("== §Perf hot paths ==");
+    let quick = std::env::var("PLANTD_BENCH_QUICK").is_ok_and(|v| v == "1");
+    println!("== §Perf hot paths{} ==", if quick { " (quick)" } else { "" });
+    // section iteration counts; quick mode shrinks work, not coverage
+    let iters = |full: u32| if quick { 1 } else { full };
+    let warmup = |full: u32| if quick { 0 } else { full };
+
+    // --- DES kernel: event-queue ops ---------------------------------------
+    // interleaved pushes at pseudo-random times + full drain, the access
+    // pattern Tandem::run produces; pre-generated times so only the heap
+    // is on the clock
+    let qn: usize = if quick { 20_000 } else { 200_000 };
+    let mut trng = Rng::new(0xE0E0_0001);
+    let times: Vec<f64> = (0..qn).map(|_| trng.f64() * 1e4).collect();
+    let (r, drained) = bench::run("sim/event-queue-push-pop", warmup(2), iters(20), || {
+        let mut q: EventQueue<u32> = EventQueue::with_capacity(qn);
+        for (i, t) in times.iter().enumerate() {
+            q.push(*t, i as u32);
+        }
+        let mut n = 0u64;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+    assert_eq!(drained, qn as u64);
+    let queue_ops_per_s = throughput(2 * qn as u64, &r);
+    println!("    {:.2} M queue ops/s", queue_ops_per_s / 1e6);
+
+    // --- DES kernel: stage-profiled M/M/1 ----------------------------------
+    let pn: usize = if quick { 50_000 } else { 500_000 };
+    let report = profile_kernel(pn, 64);
+    print!("{}", report.render());
 
     // --- TSDB ingest -----------------------------------------------------
     let db = Tsdb::new();
     let h = db.series("bench_metric", &[("stage", "v2x")]);
-    const N: u64 = 1_000_000;
-    let (r, _) = bench::run("tsdb/ingest-1M-samples", 1, 5, || {
-        for i in 0..N {
+    let n_samples: u64 = if quick { 100_000 } else { 1_000_000 };
+    let (r, _) = bench::run("tsdb/ingest-1M-samples", warmup(1), iters(5), || {
+        for i in 0..n_samples {
             h.push(i as f64, 1.0);
         }
     });
-    println!("    {:.2} M samples/s", throughput(N, &r) / 1e6);
+    let tsdb_samples_per_s = throughput(n_samples, &r);
+    println!("    {:.2} M samples/s", tsdb_samples_per_s / 1e6);
     db.clear();
 
     // --- span collection ---------------------------------------------------
@@ -51,22 +94,23 @@ fn main() -> anyhow::Result<()> {
         bytes: 900,
         ok: true,
     };
-    let (r, _) = bench::run("telemetry/collect-100k-spans", 1, 5, || {
-        for _ in 0..100_000 {
+    let n_spans: u64 = if quick { 10_000 } else { 100_000 };
+    let (r, _) = bench::run("telemetry/collect-100k-spans", warmup(1), iters(5), || {
+        for _ in 0..n_spans {
             collector.record(&span);
         }
     });
-    println!("    {:.2} M spans/s", throughput(100_000, &r) / 1e6);
+    println!("    {:.2} M spans/s", throughput(n_spans, &r) / 1e6);
     db.clear();
 
     // --- dataset synthesis -------------------------------------------------
     let spec = DataSetSpec {
-        payloads: 64,
+        payloads: if quick { 8 } else { 64 },
         records_per_subsystem: 20,
         bad_rate: 0.01,
         seed: 7,
     };
-    let (r, ds) = bench::run("datagen/64-vehicle-zips", 1, 5, || {
+    let (r, ds) = bench::run("datagen/64-vehicle-zips", warmup(1), iters(5), || {
         DataSet::generate(spec.clone())
     });
     println!(
@@ -77,7 +121,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- unzip + decode (the pipeline's real work) --------------------------
     let zip0 = ds.payload(0).zip_bytes.clone();
-    let (r, _) = bench::run("pipeline/unzip+decode-1-transmission", 2, 200, || {
+    let (r, _) = bench::run("pipeline/unzip+decode-1-transmission", warmup(2), iters(200), || {
         let members = plantd::datagen::package::unpack_vehicle_zip(&zip0).unwrap();
         members
             .iter()
@@ -91,7 +135,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- load schedule -------------------------------------------------------
     let pattern = LoadPattern::ramp(120.0, 0.0, 40.0);
-    let (r, times) = bench::run("loadgen/schedule-2400-sends", 2, 50, || pattern.send_times());
+    let (r, times) = bench::run("loadgen/schedule-2400-sends", warmup(2), iters(50), || {
+        pattern.send_times()
+    });
     println!(
         "    {:.1} M send-times/s",
         throughput(times.len() as u64, &r) / 1e6
@@ -102,7 +148,7 @@ fn main() -> anyhow::Result<()> {
     let twins = TwinParams::paper_table1();
     let nominal = TrafficModel::nominal();
     let slo = SloSpec::default();
-    let (r, _) = bench::run("year_sim/native-8-scenarios", 1, 10, || {
+    let (r, _) = bench::run("year_sim/native-8-scenarios", warmup(1), iters(10), || {
         simulate_batch(&native, &twins, &nominal, &slo).unwrap()
     });
     println!(
@@ -113,7 +159,7 @@ fn main() -> anyhow::Result<()> {
     // --- PJRT year sim ---------------------------------------------------------
     match Engine::load(Path::new("artifacts")) {
         Ok(engine) => {
-            let (r, _) = bench::run("year_sim/pjrt-8-scenarios", 1, 10, || {
+            let (r, _) = bench::run("year_sim/pjrt-8-scenarios", warmup(1), iters(10), || {
                 simulate_batch(&engine, &twins, &nominal, &slo).unwrap()
             });
             println!(
@@ -127,15 +173,48 @@ fn main() -> anyhow::Result<()> {
     // --- JSON ---------------------------------------------------------------
     let manifest = std::fs::read_to_string("artifacts/manifest.json")
         .unwrap_or_else(|_| r#"{"hours":8760,"days":365,"scenarios":8}"#.into());
-    let (r, parsed) = bench::run("json/parse-manifest", 5, 1000, || {
+    let (r, parsed) = bench::run("json/parse-manifest", warmup(5), iters(1000), || {
         Json::parse(&manifest).unwrap()
     });
     println!(
         "    {:.0} MB/s parse",
         manifest.len() as f64 / (1024.0 * 1024.0) / r.mean_s
     );
-    let (_r, _) = bench::run("json/serialize-manifest", 5, 1000, || {
+    let (_r, _) = bench::run("json/serialize-manifest", warmup(5), iters(1000), || {
         parsed.to_string_pretty()
     });
+
+    // --- trajectory entry ---------------------------------------------------
+    let label = std::env::var("PLANTD_BENCH_LABEL").unwrap_or_else(|_| "local".into());
+    let host = std::env::var("PLANTD_BENCH_HOST").unwrap_or_else(|_| "local".into());
+    let unix_s = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(1);
+    // per-stage percentiles named "<stage>_p50_ns" etc., in PerfReport
+    // stage order (enqueue, pop, service_draw, stats_accrue) —
+    // tests/bench_schema.rs checks this name set on the committed file
+    let stage_metrics: Vec<(String, f64)> = report
+        .stages
+        .iter()
+        .flat_map(|s| {
+            [
+                (format!("{}_p50_ns", s.stage), s.p50_ns),
+                (format!("{}_p95_ns", s.stage), s.p95_ns),
+                (format!("{}_p99_ns", s.stage), s.p99_ns),
+            ]
+        })
+        .collect();
+    let mut metrics: Vec<(&str, f64)> = vec![
+        ("queue_ops_per_s", queue_ops_per_s),
+        ("events_per_s", report.events_per_s),
+        ("tsdb_samples_per_s", tsdb_samples_per_s),
+    ];
+    metrics.extend(stage_metrics.iter().map(|(n, v)| (n.as_str(), *v)));
+
+    let entry = bench::entry(&label, unix_s, &host, metrics);
+    let path = bench::trajectory_path("BENCH_hotpaths.json");
+    bench::append_entry(&path, "perf_hotpaths", entry).expect("append BENCH_hotpaths.json entry");
+    println!("appended entry '{label}' to {}", path.display());
     Ok(())
 }

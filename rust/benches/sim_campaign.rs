@@ -1,20 +1,32 @@
-//! Sim-kernel campaign throughput: cells/second for a fixed 3×3×2 grid.
+//! Sim-kernel campaign throughput: cells/second for a fixed 3×3×2 grid,
+//! plus raw kernel events/second on a canonical M/M/1 workload.
 //!
 //! This is the perf-trajectory anchor for the shared DES kernel: every
 //! cell is a full discrete-event simulation (three stations, fan-out,
 //! pre-sampled jitter, isolated telemetry + cost meters), and the grid
 //! mixes the paper's ramp/steady loads with a burst case across two
-//! dataset sizes. The result lands in `BENCH_sim.json` so CI can record
-//! cells/sec over time.
+//! dataset sizes. The raw-kernel leg strips the campaign plumbing so
+//! the committed trajectory separates "the kernel got faster" from
+//! "the report assembly got faster".
+//!
+//! Results append to the schema-versioned trajectory `BENCH_sim.json`
+//! at the workspace root (`util::bench::append_entry` validates before
+//! writing; `PLANTD_BENCH_DIR` redirects, e.g. in CI smokes). Set
+//! `PLANTD_BENCH_QUICK=1` for a seconds-scale smoke run,
+//! `PLANTD_BENCH_LABEL` / `PLANTD_BENCH_HOST` to tag the entry.
+//! See `docs/PERF.md`.
 //!
 //! Run: `cargo bench --bench sim_campaign`
+
+use std::time::SystemTime;
 
 use plantd::campaign::{Campaign, CampaignRunner};
 use plantd::datagen::DataSetSpec;
 use plantd::loadgen::LoadPattern;
 use plantd::pipeline::VariantConfig;
+use plantd::sim::{Served, StationConfig, Tandem};
 use plantd::util::bench;
-use plantd::util::json::Json;
+use plantd::util::rng::Rng;
 
 fn fixed_grid(seed: u64) -> Campaign {
     Campaign::new("bench-3x3x2", seed)
@@ -44,7 +56,37 @@ fn fixed_grid(seed: u64) -> Campaign {
         )
 }
 
+/// Time a bare `Tandem::run` over a pre-sampled M/M/1 at ρ = 0.9 —
+/// the same canonical workload `validate --suite perf` profiles —
+/// and return events/second (2 kernel events per arrival).
+fn raw_kernel_events_per_s(n: usize, warmup: u32, iters: u32) -> f64 {
+    let mut arr_rng = Rng::new(0x9E4F_0001);
+    let mut t = 0.0f64;
+    let arrivals: Vec<(f64, usize)> = (0..n)
+        .map(|i| {
+            t += arr_rng.exponential(0.9);
+            (t, i)
+        })
+        .collect();
+    let mut svc_rng = Rng::new(0x9E4F_0002);
+    let service: Vec<f64> = (0..n).map(|_| svc_rng.exponential(1.0)).collect();
+
+    let (result, events) = bench::run("sim/raw-kernel-mm1", warmup, iters, || {
+        let tandem: Tandem<usize> = Tandem::new(vec![StationConfig::single("bench-mm1")]);
+        let out = tandem.run(arrivals.iter().copied(), |_, _, jobs| Served {
+            service_s: service[jobs[0]],
+            next: Vec::new(),
+        });
+        assert_eq!(out.completions.len(), n);
+        out.events
+    });
+    bench::throughput(events, &result)
+}
+
 fn main() {
+    let quick = std::env::var("PLANTD_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let (warmup, iters, kernel_n) = if quick { (0, 1, 50_000) } else { (1, 5, 500_000) };
+
     let campaign = fixed_grid(0xBE7C);
     let n_cells = campaign.n_cells() as u64;
     assert_eq!(n_cells, 18, "the bench grid is fixed at 3x3x2");
@@ -54,7 +96,7 @@ fn main() {
         .min(8);
     let runner = CampaignRunner::new(threads);
 
-    let (result, report) = bench::run("sim/campaign-3x3x2-cells", 1, 5, || {
+    let (result, report) = bench::run("sim/campaign-3x3x2-cells", warmup, iters, || {
         runner.run(&campaign)
     });
     assert_eq!(report.cells.len(), 18);
@@ -64,23 +106,30 @@ fn main() {
         result.mean_s, cells_per_s
     );
 
-    let json = Json::obj(vec![
-        ("bench", Json::str("sim_campaign")),
-        ("grid", Json::str("3x3x2")),
-        ("cells", Json::num(n_cells as f64)),
-        ("threads", Json::num(threads as f64)),
-        ("iters", Json::num(result.iters as f64)),
-        ("mean_s", Json::num(result.mean_s)),
-        ("min_s", Json::num(result.min_s)),
-        ("max_s", Json::num(result.max_s)),
-        ("cells_per_s", Json::num(cells_per_s)),
-    ]);
-    // cargo runs bench binaries with cwd = the package root (rust/);
-    // emit at the workspace root where CI (and humans) look for it
-    let out_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .map(|ws| ws.join("BENCH_sim.json"))
-        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_sim.json"));
-    std::fs::write(&out_path, json.to_string_pretty()).expect("write BENCH_sim.json");
-    println!("wrote {}", out_path.display());
+    let events_per_s = raw_kernel_events_per_s(kernel_n, warmup, iters);
+    println!("raw kernel: {events_per_s:.0} events/s (M/M/1 rho=0.9, n={kernel_n})");
+
+    let label = std::env::var("PLANTD_BENCH_LABEL").unwrap_or_else(|_| "local".into());
+    let host = std::env::var("PLANTD_BENCH_HOST").unwrap_or_else(|_| "local".into());
+    let unix_s = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(1);
+    let entry = bench::entry(
+        &label,
+        unix_s,
+        &host,
+        vec![
+            ("cells", n_cells as f64),
+            ("threads", threads as f64),
+            ("iters", iters as f64),
+            ("grid_mean_s", result.mean_s),
+            ("grid_min_s", result.min_s),
+            ("cells_per_s", cells_per_s),
+            ("events_per_s", events_per_s),
+        ],
+    );
+    let path = bench::trajectory_path("BENCH_sim.json");
+    bench::append_entry(&path, "sim_campaign", entry).expect("append BENCH_sim.json entry");
+    println!("appended entry '{label}' to {}", path.display());
 }

@@ -80,7 +80,9 @@ VALIDATION (prove the sim kernel against ground truth, docs/VALIDATION.md)
   validate           run conformance suites; non-zero exit on any FAIL
     --suite S        queueing (DES vs closed-form M/M/c oracle, 2% rel
                      tol), snapshots (golden-file byte comparison under
-                     tests/golden/), or all (default)
+                     tests/golden/), all (default), or perf (stage-level
+                     kernel profile: p50/p95/p99 + events/s, docs/PERF.md;
+                     opt-in only — never part of all)
     --update         snapshots: regenerate golden files instead of
                      comparing (commit the diff; see --update etiquette)
     --threads N      worker threads for the queueing cases (default 4)
@@ -701,7 +703,8 @@ fn cmd_campaign(args: &Args) -> CmdResult {
     Ok(())
 }
 
-/// `plantd validate [--suite queueing|snapshots|all] [--update]` — the
+/// `plantd validate [--suite queueing|snapshots|all|perf] [--update]` —
+/// the
 /// first-class validation verb. The same suites are declarable as a
 /// `Validation` resource and runnable through the controller (see
 /// `examples/manifests/validation.json`); the CLI verb additionally

@@ -676,6 +676,9 @@ pub struct ValidationSpec {
     /// `tests/golden` relative to the process working directory, which
     /// a manifest author does not control; name the suite explicitly
     /// (and set `golden_dir`) to run snapshots through a resource.
+    /// The CLI-only `perf` suite is rejected here on purpose: its
+    /// timings are machine-relative, and a resource's Completed/Failed
+    /// phase must stay deterministic (docs/PERF.md).
     pub suite: String,
     /// Worker threads for the case grid.
     pub threads: usize,

@@ -8,17 +8,20 @@
 //!   warehouse tables) runs unmodified in virtual time. Time is stored as
 //!   raw `f64` bits, so event timestamps survive the clock round-trip
 //!   bit-exactly.
-//! - [`EventQueue`] — a binary-heap priority queue ordered by
-//!   `(time, sequence)`. The monotone sequence number gives *stable
-//!   tie-breaking*: two events scheduled for the same instant fire in
-//!   scheduling order, on every run, at any optimization level.
+//! - [`EventQueue`] — a priority queue ordered by `(time, sequence)`.
+//!   The monotone sequence number gives *stable tie-breaking*: two events
+//!   scheduled for the same instant fire in scheduling order, on every
+//!   run, at any optimization level. Internally an index-based 4-ary
+//!   heap over a pre-allocatable slot arena (see the type docs) — the
+//!   `(time, seq)` key is a strict total order, so the pop sequence is
+//!   the sorted order of the pushed entries regardless of heap shape,
+//!   and the arena rewrite is behaviorally invisible
+//!   (`tests/sim_equivalence.rs` pins it against a `BinaryHeap` model).
 //! - [`Kernel`] — the scheduler facade: schedule events, pop them in
 //!   causal order (the clock snaps to each event's timestamp), and derive
 //!   per-entity RNG streams from the kernel's master seed so adding a new
 //!   random consumer never perturbs existing streams.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::Arc;
 
@@ -89,6 +92,18 @@ impl SimClock {
             })
             .expect("fetch_update closure never fails");
     }
+
+    /// Jump to `t` only if the clock is not already there. Equivalent to
+    /// [`SimClock::set_s`] for every reader (the stored value sequence is
+    /// identical), but the event loop's common case — runs of events at
+    /// one timestamp with a non-advancing servicer — costs a read instead
+    /// of a store.
+    #[inline]
+    pub fn snap_s(&self, t: f64) {
+        if self.bits.load(AtomicOrdering::SeqCst) != t.to_bits() {
+            self.bits.store(t.to_bits(), AtomicOrdering::SeqCst);
+        }
+    }
 }
 
 impl Clock for SimClock {
@@ -106,51 +121,76 @@ impl Clock for SimClock {
     fn sleep_coarse_s(&self, _sim_seconds: f64) {}
 }
 
-/// One scheduled entry: `(time, seq)` ordering key plus the payload.
-struct Entry<E> {
-    time: f64,
-    seq: u64,
-    event: E,
-}
+/// Heap arity. Four children per node halves the tree depth of a binary
+/// heap: sift-downs touch fewer cache lines, and the four-way child scan
+/// is branch-predictable. Changing this cannot change pop order (the key
+/// is a strict total order), only speed.
+const ARITY: usize = 4;
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq && self.time.to_bits() == other.time.to_bits()
-    }
-}
-
-impl<E> Eq for Entry<E> {}
-
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Entry<E> {
-    // Reversed: `BinaryHeap` is a max-heap, and we want the *earliest*
-    // time (then the *lowest* sequence number) popped first.
-    fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// Deterministic binary-heap event queue with stable `(time, seq)`
-/// tie-breaking.
+/// Deterministic event queue with stable `(time, seq)` tie-breaking.
+///
+/// Internally an index-based `ARITY`-ary min-heap over a slot arena:
+/// payloads live in `events` and never move after insertion; the heap
+/// orders `u32` slot ids by the slots' `(time, seq)` key. Compared with
+/// the previous `BinaryHeap<Entry<E>>`, sift operations move 4-byte ids
+/// instead of whole entries (a tandem event carries two `Vec`s, ~80
+/// bytes), growth reallocations copy ids instead of entries, and popped
+/// slots are recycled through a free list, so a long run with a bounded
+/// event horizon allocates a bounded arena once. Because every key is
+/// unique (`seq` is monotone), the pop sequence is exactly the sorted
+/// order of the pushed entries — identical to any other correct heap.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    /// Slot ids ordered as an `ARITY`-ary min-heap by `(time, seq)`.
+    heap: Vec<u32>,
+    /// Per-slot timestamp (stale for free slots).
+    times: Vec<f64>,
+    /// Per-slot sequence number (stale for free slots).
+    seqs: Vec<u64>,
+    /// Per-slot payload (`None` marks a free slot).
+    events: Vec<Option<E>>,
+    /// Recycled slot ids, reused LIFO (cache-warm).
+    free: Vec<u32>,
     next_seq: u64,
 }
 
 impl<E> EventQueue<E> {
     /// An empty queue.
     pub fn new() -> Self {
+        Self::with_capacity(0)
+    }
+
+    /// An empty queue with room for `capacity` pending events before any
+    /// reallocation.
+    pub fn with_capacity(capacity: usize) -> Self {
         EventQueue {
-            heap: BinaryHeap::new(),
+            heap: Vec::with_capacity(capacity),
+            times: Vec::with_capacity(capacity),
+            seqs: Vec::with_capacity(capacity),
+            events: Vec::with_capacity(capacity),
+            free: Vec::new(),
             next_seq: 0,
+        }
+    }
+
+    /// Reserve room for `additional` more pending events.
+    pub fn reserve(&mut self, additional: usize) {
+        let needed = additional.saturating_sub(self.free.len());
+        self.heap.reserve(additional);
+        self.times.reserve(needed);
+        self.seqs.reserve(needed);
+        self.events.reserve(needed);
+    }
+
+    /// `true` if the slot at `a` orders before the slot at `b` — the
+    /// exact `(time.total_cmp, seq)` key the `BinaryHeap` version used.
+    /// Keys are never equal (`seq` is unique).
+    #[inline(always)]
+    fn before(&self, a: u32, b: u32) -> bool {
+        let (a, b) = (a as usize, b as usize);
+        match self.times[a].total_cmp(&self.times[b]) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => self.seqs[a] < self.seqs[b],
         }
     }
 
@@ -160,17 +200,82 @@ impl<E> EventQueue<E> {
         assert!(time.is_finite(), "event time must be finite, got {time}");
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Entry { time, seq, event });
+        let slot = match self.free.pop() {
+            Some(slot) => {
+                let i = slot as usize;
+                self.times[i] = time;
+                self.seqs[i] = seq;
+                self.events[i] = Some(event);
+                slot
+            }
+            None => {
+                assert!(
+                    self.times.len() < u32::MAX as usize,
+                    "event arena exhausted (u32 slot ids)"
+                );
+                self.times.push(time);
+                self.seqs.push(seq);
+                self.events.push(Some(event));
+                (self.times.len() - 1) as u32
+            }
+        };
+        self.heap.push(slot);
+        self.sift_up(self.heap.len() - 1);
     }
 
     /// Pop the earliest event, if any.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|e| (e.time, e.event))
+        let top = *self.heap.first()?;
+        let last = self.heap.pop().expect("non-empty");
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.sift_down(0);
+        }
+        self.free.push(top);
+        let event = self.events[top as usize].take().expect("occupied slot");
+        Some((self.times[top as usize], event))
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / ARITY;
+            if self.before(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        let len = self.heap.len();
+        loop {
+            let first_child = i * ARITY + 1;
+            if first_child >= len {
+                break;
+            }
+            let mut best = first_child;
+            let end = (first_child + ARITY).min(len);
+            for c in first_child + 1..end {
+                if self.before(self.heap[c], self.heap[best]) {
+                    best = c;
+                }
+            }
+            if self.before(self.heap[best], self.heap[i]) {
+                self.heap.swap(i, best);
+                i = best;
+            } else {
+                break;
+            }
+        }
     }
 
     /// Timestamp of the next event without popping it.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.time)
+        self.heap.first().map(|&s| self.times[s as usize])
     }
 
     /// Number of pending events.
@@ -181,6 +286,12 @@ impl<E> EventQueue<E> {
     /// Whether no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+
+    /// Arena slots allocated (pending + recycled) — the queue's
+    /// high-water mark of concurrently pending events.
+    pub fn arena_len(&self) -> usize {
+        self.times.len()
     }
 }
 
@@ -224,6 +335,12 @@ impl<E> Kernel<E> {
         }
     }
 
+    /// Reserve queue room for `additional` more pending events (a model
+    /// that knows its arrival count pre-sizes the arena once).
+    pub fn reserve(&mut self, additional: usize) {
+        self.queue.reserve(additional);
+    }
+
     /// Shared handle to the kernel's virtual clock (hand it to any
     /// component that takes a `SharedClock`).
     pub fn clock(&self) -> Arc<SimClock> {
@@ -250,7 +367,8 @@ impl<E> Kernel<E> {
     /// timestamp. Returns `None` when the simulation has run dry.
     pub fn next_event(&mut self) -> Option<(f64, E)> {
         let (t, e) = self.queue.pop()?;
-        self.clock.set_s(t);
+        // snap, not set: a run of equal-time events costs one store
+        self.clock.snap_s(t);
         self.processed += 1;
         Some((t, e))
     }
@@ -331,6 +449,49 @@ mod tests {
     fn non_finite_event_time_rejected() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn arena_recycles_slots() {
+        // steady-state push/pop must not grow the arena past the
+        // high-water mark of concurrently pending events
+        let mut q = EventQueue::with_capacity(4);
+        for round in 0..100u32 {
+            q.push(round as f64, round);
+            q.push(round as f64 + 0.5, round);
+            q.pop();
+            q.pop();
+        }
+        assert!(q.is_empty());
+        assert!(
+            q.arena_len() <= 2,
+            "arena grew to {} slots for 2 concurrent events",
+            q.arena_len()
+        );
+    }
+
+    #[test]
+    fn negative_and_mixed_times_order_correctly() {
+        // total_cmp ordering must hold across sign and magnitude
+        let mut q = EventQueue::new();
+        q.push(0.0, "zero");
+        q.push(-1.5, "neg");
+        q.push(1e-300, "tiny");
+        q.push(-0.0, "negzero"); // -0.0 orders before +0.0 under total_cmp
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["neg", "negzero", "zero", "tiny"]);
+    }
+
+    #[test]
+    fn snap_s_matches_set_s_for_readers() {
+        let c = SimClock::new();
+        c.snap_s(3.5);
+        assert_eq!(c.now_s(), 3.5);
+        c.snap_s(3.5); // elided store, same observed value
+        assert_eq!(c.now_s(), 3.5);
+        c.advance_s(1.0);
+        c.snap_s(3.5); // clock moved away: snap must restore
+        assert_eq!(c.now_s(), 3.5);
     }
 
     #[test]

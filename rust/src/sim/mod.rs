@@ -8,9 +8,9 @@
 //! `campaign`, and the year-scale FIFO twin (`runtime` + `bizsim`). They
 //! now share one kernel:
 //!
-//! - [`Kernel`] / [`EventQueue`] — a binary-heap event queue with stable
-//!   `(time, sequence)` tie-breaking, so same-seed runs replay
-//!   bit-identically at any thread count;
+//! - [`Kernel`] / [`EventQueue`] — a pre-allocated index-based 4-ary
+//!   heap arena with stable `(time, sequence)` tie-breaking, so
+//!   same-seed runs replay bit-identically at any thread count;
 //! - [`SimClock`] — virtual time behind the same
 //!   [`crate::util::clock::Clock`] trait as the wall-clock
 //!   `ScaledClock`, so stages, blob stores and warehouse tables run
@@ -21,7 +21,10 @@
 //!   discipline, server count, batch size, queue capacity and
 //!   backpressure policy;
 //! - [`Tandem`] — a series of stations driven by one event loop, the
-//!   execution shape of every PlantD pipeline.
+//!   execution shape of every PlantD pipeline;
+//! - [`PerfRecorder`] — an opt-in stage-level profiler over that loop
+//!   (enqueue / pop / service-draw / stats-accrue), compiled out of the
+//!   default path; see `docs/PERF.md`.
 //!
 //! Consumers:
 //!
@@ -37,9 +40,11 @@
 //! semantics in detail.
 
 mod kernel;
+mod perf;
 mod station;
 mod tandem;
 
 pub use kernel::{derive_seed, EventQueue, Kernel, SimClock};
+pub use perf::{profile_kernel, PerfRecorder, PerfReport, PerfStage, StagePerf, STAGE_NAMES};
 pub use station::{Discipline, Offered, QueuePolicy, Station, StationConfig, StationStats};
 pub use tandem::{Served, Tandem, TandemOutcome};

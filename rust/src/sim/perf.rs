@@ -1,0 +1,347 @@
+//! Stage-level performance recorder for the event loop.
+//!
+//! The paper's premise is that the wind tunnel's own overhead must never
+//! be the bottleneck of what it measures (§II). This module turns that
+//! from a hope into a number: a [`PerfRecorder`] samples the wall-clock
+//! cost of the four stages every kernel event passes through —
+//!
+//! - **enqueue** — scheduling an event into the [`super::EventQueue`];
+//! - **pop** — extracting the next event in `(time, seq)` order;
+//! - **service_draw** — the servicer closure (service-time lookup or the
+//!   real `Stage::process` call);
+//! - **stats_accrue** — the queue-length time integral between events —
+//!
+//! and reports per-stage p50/p95/p99 plus overall events/second.
+//!
+//! ## Zero cost unless asked for
+//!
+//! Instrumentation is monomorphized out of the default path:
+//! [`super::Tandem::run`] compiles with `PERF = false`, so every
+//! `timed(...)` site folds to a plain call — no branch, no clock read.
+//! Only [`super::Tandem::run_recorded`] instantiates the instrumented
+//! loop, and even there the recorder times one call in
+//! [`PerfRecorder::stride`] (counting the rest), so the probe cost is
+//! amortized to well under a nanosecond per event. A recorded run is
+//! **behaviorally identical** to a plain run — same completions, same
+//! stats, same event count (`tests/sim_equivalence.rs` pins the bytes).
+//!
+//! Drive it with `plantd validate --suite perf` (a fixed M/M/1 workload,
+//! rendered as a table) or from `cargo bench --bench perf_hotpaths`,
+//! which feeds the percentiles into the committed `BENCH_hotpaths.json`
+//! trajectory. See `docs/PERF.md`.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::util::table::Table;
+
+/// The four instrumented stages of the event loop, in pipeline order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PerfStage {
+    /// `EventQueue::push` (arrival scheduling, completions, fan-out).
+    Enqueue = 0,
+    /// `Kernel::next_event` (heap pop + clock snap).
+    Pop = 1,
+    /// The servicer closure — the model's service-time draw or the real
+    /// stage execution.
+    ServiceDraw = 2,
+    /// The per-event queue-length time integral.
+    StatsAccrue = 3,
+}
+
+/// Stage display names, indexed by `PerfStage as usize`.
+pub const STAGE_NAMES: [&str; 4] = ["enqueue", "pop", "service_draw", "stats_accrue"];
+
+/// Samples the wall cost of event-loop stages with stride sampling.
+///
+/// Create one, pass it to [`super::Tandem::run_recorded`], then call
+/// [`PerfRecorder::report`]. A recorder may span several runs; counters
+/// and samples accumulate.
+pub struct PerfRecorder {
+    /// Time one call in `stride` (the rest only count). 1 = time all.
+    stride: u64,
+    counts: [u64; 4],
+    samples: [Vec<f64>; 4],
+    /// Events processed across all recorded runs.
+    events: u64,
+    /// Wall seconds across all recorded runs.
+    wall_s: f64,
+}
+
+impl PerfRecorder {
+    /// A recorder with the default sampling stride (64: cheap enough to
+    /// leave on for a whole bench run, dense enough for stable p99s).
+    pub fn new() -> Self {
+        Self::with_stride(64)
+    }
+
+    /// A recorder timing one call in `stride` per stage (`stride >= 1`).
+    pub fn with_stride(stride: u64) -> Self {
+        assert!(stride >= 1, "stride must be at least 1");
+        PerfRecorder {
+            stride,
+            counts: [0; 4],
+            samples: [Vec::new(), Vec::new(), Vec::new(), Vec::new()],
+            events: 0,
+            wall_s: 0.0,
+        }
+    }
+
+    /// The sampling stride.
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Run `f`, attributing its cost to `stage`. Times one call in
+    /// [`PerfRecorder::stride`]; every call is counted.
+    #[inline]
+    pub fn time<R>(&mut self, stage: PerfStage, f: impl FnOnce() -> R) -> R {
+        let i = stage as usize;
+        self.counts[i] += 1;
+        if self.counts[i] % self.stride != 0 {
+            return f();
+        }
+        let t0 = Instant::now();
+        let out = f();
+        self.samples[i].push(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Record one completed run's totals (called by
+    /// [`super::Tandem::run_recorded`]).
+    pub fn note_run(&mut self, events: u64, wall_s: f64) {
+        self.events += events;
+        self.wall_s += wall_s;
+    }
+
+    /// Snapshot the accumulated measurements as a [`PerfReport`].
+    pub fn report(&self) -> PerfReport {
+        let stages = (0..4)
+            .map(|i| {
+                let s = &self.samples[i];
+                StagePerf {
+                    stage: STAGE_NAMES[i].to_string(),
+                    count: self.counts[i],
+                    sampled: s.len() as u64,
+                    p50_ns: quantile_ns(s, 0.50),
+                    p95_ns: quantile_ns(s, 0.95),
+                    p99_ns: quantile_ns(s, 0.99),
+                }
+            })
+            .collect();
+        PerfReport {
+            stages,
+            events: self.events,
+            wall_s: self.wall_s,
+            events_per_s: if self.wall_s > 0.0 {
+                self.events as f64 / self.wall_s
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl Default for PerfRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Quantile of a sample set, in nanoseconds; 0.0 when nothing sampled.
+fn quantile_ns(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        stats::quantile(samples, q) * 1e9
+    }
+}
+
+/// Percentile summary for one event-loop stage.
+#[derive(Debug, Clone)]
+pub struct StagePerf {
+    /// Stage name (one of [`STAGE_NAMES`]).
+    pub stage: String,
+    /// Total invocations (timed and untimed).
+    pub count: u64,
+    /// Invocations actually timed (`count / stride`).
+    pub sampled: u64,
+    /// Median cost of a sampled call, nanoseconds.
+    pub p50_ns: f64,
+    /// 95th-percentile cost, nanoseconds.
+    pub p95_ns: f64,
+    /// 99th-percentile cost, nanoseconds.
+    pub p99_ns: f64,
+}
+
+/// Everything a recorded run (or run series) measured.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    /// Per-stage percentile summaries, in pipeline order.
+    pub stages: Vec<StagePerf>,
+    /// Kernel events processed across recorded runs.
+    pub events: u64,
+    /// Wall-clock seconds across recorded runs.
+    pub wall_s: f64,
+    /// Events per wall second (the kernel's headline rate).
+    pub events_per_s: f64,
+}
+
+impl PerfReport {
+    /// Sanity verdict: something ran and every stage fired. Timings are
+    /// machine-relative and never gate; this only catches a recorder
+    /// that was wired to nothing.
+    pub fn sane(&self) -> bool {
+        self.events > 0
+            && self.events_per_s > 0.0
+            && self.stages.iter().all(|s| s.count > 0)
+    }
+
+    /// Render as a `util::table` plus a one-line rate summary
+    /// (newline-terminated; print with `print!`).
+    pub fn render(&self) -> String {
+        let mut table = Table::new(&["stage", "count", "sampled", "p50", "p95", "p99"])
+            .with_title("PERF: event-loop stage costs (wall ns per call)");
+        for s in &self.stages {
+            table.row(vec![
+                s.stage.clone(),
+                s.count.to_string(),
+                s.sampled.to_string(),
+                format!("{:.0}ns", s.p50_ns),
+                format!("{:.0}ns", s.p95_ns),
+                format!("{:.0}ns", s.p99_ns),
+            ]);
+        }
+        format!(
+            "{}{} events in {:.3}s wall -> {:.0} events/s\n",
+            table.render(),
+            self.events,
+            self.wall_s,
+            self.events_per_s
+        )
+    }
+
+    /// Machine-readable form (the shape `BENCH_hotpaths.json` embeds).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("events", Json::num(self.events as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("events_per_s", Json::num(self.events_per_s)),
+            (
+                "stages",
+                Json::arr(self.stages.iter().map(|s| {
+                    Json::obj(vec![
+                        ("stage", Json::str(s.stage.clone())),
+                        ("count", Json::num(s.count as f64)),
+                        ("sampled", Json::num(s.sampled as f64)),
+                        ("p50_ns", Json::num(s.p50_ns)),
+                        ("p95_ns", Json::num(s.p95_ns)),
+                        ("p99_ns", Json::num(s.p99_ns)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Profile the kernel on a canonical workload: an M/M/1 queue at ρ = 0.9
+/// (queue-heavy, so every stage fires constantly), `n` pre-sampled
+/// arrivals, fixed seeds. Returns the stage report; the workload itself
+/// is deterministic, only the timings vary by machine.
+pub fn profile_kernel(n: usize, stride: u64) -> PerfReport {
+    use crate::util::rng::Rng;
+
+    use super::station::StationConfig;
+    use super::tandem::{Served, Tandem};
+
+    assert!(n > 0, "profile needs at least one arrival");
+    let (lambda, mu) = (0.9, 1.0);
+    let mut arr_rng = Rng::new(0x9E4F_0001);
+    let mut t = 0.0f64;
+    let arrivals: Vec<(f64, usize)> = (0..n)
+        .map(|i| {
+            t += arr_rng.exponential(lambda);
+            (t, i)
+        })
+        .collect();
+    let mut svc_rng = Rng::new(0x9E4F_0002);
+    let service: Vec<f64> = (0..n).map(|_| svc_rng.exponential(mu)).collect();
+
+    let tandem: Tandem<usize> = Tandem::new(vec![StationConfig::single("perf-mm1")]);
+    let mut recorder = PerfRecorder::with_stride(stride);
+    let out = tandem.run_recorded(
+        arrivals,
+        |_, _, jobs| Served {
+            service_s: service[jobs[0]],
+            next: Vec::new(),
+        },
+        &mut recorder,
+    );
+    debug_assert_eq!(out.completions.len(), n);
+    recorder.report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stride_counts_everything_and_samples_sparsely() {
+        let mut r = PerfRecorder::with_stride(10);
+        let mut acc = 0u64;
+        for i in 0..100u64 {
+            acc = r.time(PerfStage::Enqueue, || acc + i);
+        }
+        let report = r.report();
+        assert_eq!(report.stages[0].count, 100);
+        assert_eq!(report.stages[0].sampled, 10);
+        assert_eq!(report.stages[1].count, 0, "other stages untouched");
+    }
+
+    #[test]
+    fn stride_one_times_every_call() {
+        let mut r = PerfRecorder::with_stride(1);
+        for _ in 0..5 {
+            r.time(PerfStage::Pop, || std::hint::black_box(2 + 2));
+        }
+        let report = r.report();
+        assert_eq!(report.stages[1].count, 5);
+        assert_eq!(report.stages[1].sampled, 5);
+        assert!(report.stages[1].p50_ns >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stride")]
+    fn zero_stride_rejected() {
+        PerfRecorder::with_stride(0);
+    }
+
+    #[test]
+    fn profile_kernel_fires_every_stage() {
+        let report = profile_kernel(2000, 8);
+        assert!(report.sane(), "{report:?}");
+        // single station, no fan-out: one arrive + one complete per job
+        assert_eq!(report.events, 4000);
+        for s in &report.stages {
+            assert!(s.count > 0, "stage {} never fired", s.stage);
+        }
+        let text = report.render();
+        assert!(text.contains("events/s"));
+        assert!(text.contains("service_draw"));
+        let j = report.to_json();
+        assert!(j.get_f64("events_per_s").unwrap() > 0.0);
+        assert_eq!(j.get("stages").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn recorded_profile_is_behaviorally_deterministic() {
+        // two profiles: timings differ, the workload's shape cannot
+        let a = profile_kernel(1000, 16);
+        let b = profile_kernel(1000, 16);
+        assert_eq!(a.events, b.events);
+        for (sa, sb) in a.stages.iter().zip(&b.stages) {
+            assert_eq!(sa.count, sb.count, "stage {} count drifted", sa.stage);
+        }
+    }
+}

@@ -231,9 +231,10 @@ impl<T> Station<T> {
         }
         let server = self.idle.pop().expect("checked non-empty");
         let n = self.cfg.batch_max.min(self.queue.len());
-        let jobs: Vec<T> = (0..n)
-            .map(|_| self.queue.pop_front().expect("checked length"))
-            .collect();
+        // drain the front of the deque in one pass — identical order to
+        // repeated pop_front (both disciplines enqueue so that the next
+        // job to serve is at the front), one exact-size allocation
+        let jobs: Vec<T> = self.queue.drain(..n).collect();
         // admit parked arrivals into the freed queue space, oldest first
         if let Some(cap) = self.cfg.policy.capacity() {
             while self.queue.len() < cap {
@@ -382,6 +383,124 @@ mod tests {
         assert!(s.start_batch().is_none(), "both servers busy");
         s.complete(a.0, 1);
         assert!(s.start_batch().is_some());
+    }
+
+    #[test]
+    fn drop_accounting_stays_exact_under_repeated_overflow() {
+        // every admit/drop cycle must keep offered = queued + dropped,
+        // and drops must never disturb the order of queued jobs
+        let mut s: Station<u32> =
+            Station::new(StationConfig::single("s").with_policy(QueuePolicy::DropNewest {
+                capacity: 2,
+            }));
+        let mut admitted = 0u64;
+        let mut dropped = 0u64;
+        for i in 0..10 {
+            match s.offer(i) {
+                Offered::Queued => admitted += 1,
+                Offered::Dropped => dropped += 1,
+                Offered::Blocked => unreachable!("DropNewest never blocks"),
+            }
+            // drain one job every third arrival so admissions interleave
+            if i % 3 == 2 {
+                if let Some((srv, batch)) = s.start_batch() {
+                    s.complete(srv, batch.len());
+                }
+            }
+        }
+        assert_eq!(s.stats().offered, 10);
+        assert_eq!(s.stats().dropped, dropped);
+        assert_eq!(s.stats().offered, admitted + dropped);
+        // survivors drain in FIFO arrival order
+        let mut survivors = Vec::new();
+        while let Some((srv, batch)) = s.start_batch() {
+            survivors.extend(batch.iter().copied());
+            s.complete(srv, batch.len());
+        }
+        let mut sorted = survivors.clone();
+        sorted.sort_unstable();
+        assert_eq!(survivors, sorted, "drops reordered the queue");
+    }
+
+    #[test]
+    fn backpressure_with_zero_idle_servers_parks_without_admitting() {
+        // all servers busy AND queue full: arrivals must park, and the
+        // backpressure buffer must not drain until a batch *starts*
+        // (freeing queue space), not when a server merely completes
+        let mut s: Station<u32> =
+            Station::new(StationConfig::single("s").with_policy(QueuePolicy::Block {
+                capacity: 1,
+            }));
+        s.offer(0);
+        let (srv, batch) = s.start_batch().unwrap(); // server busy with 0
+        assert_eq!(batch, vec![0]);
+        assert_eq!(s.offer(1), Offered::Queued); // queue has room
+        assert_eq!(s.offer(2), Offered::Blocked); // queue full, server busy
+        assert_eq!(s.offer(3), Offered::Blocked);
+        assert_eq!(s.stats().backpressured, 2);
+        assert_eq!(s.queue_len(), 1, "parked jobs are not in the queue");
+        // completion alone returns the server but admits nothing
+        s.complete(srv, batch.len());
+        assert_eq!(s.queue_len(), 1);
+        // starting 1 frees the slot: 2 admitted, 3 still parked
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert_eq!(s.queue_len(), 1);
+        s.complete(srv, batch.len());
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![2]);
+        s.complete(srv, batch.len());
+        let (srv, batch) = s.start_batch().unwrap();
+        assert_eq!(batch, vec![3]);
+        s.complete(srv, batch.len());
+        assert!(s.is_quiescent());
+        assert_eq!(s.stats().served, 4);
+    }
+
+    #[test]
+    fn partial_batch_preserves_queue_order_in_both_disciplines() {
+        // batch_max larger than the queue: the partial batch must carry
+        // the jobs in exact service order for FIFO and LIFO alike
+        let mut fifo: Station<u32> = Station::new(StationConfig::single("s").with_batch(8));
+        for i in 0..3 {
+            fifo.offer(i);
+        }
+        let (_, batch) = fifo.start_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2], "FIFO partial batch order");
+        assert_eq!(fifo.queue_len(), 0);
+
+        let mut lifo: Station<u32> = Station::new(
+            StationConfig::single("s")
+                .with_batch(2)
+                .with_discipline(Discipline::Lifo),
+        );
+        for i in 0..3 {
+            lifo.offer(i);
+        }
+        // LIFO: newest first, then the next-newest completes the batch
+        let (_, batch) = lifo.start_batch().unwrap();
+        assert_eq!(batch, vec![2, 1], "LIFO batch takes newest first");
+        assert_eq!(lifo.queue_len(), 1);
+    }
+
+    #[test]
+    fn queue_area_accrual_is_zero_across_identical_timestamps() {
+        // the event loop accrues len × dt; a burst of same-instant
+        // arrivals has dt = 0 between them and must add nothing, while
+        // the interval after the burst integrates the full burst length
+        let mut s: Station<u32> = Station::new(StationConfig::single("s"));
+        for i in 0..4 {
+            s.offer(i);
+            s.accrue_queue_area(0.0); // same-timestamp arrivals
+        }
+        assert_eq!(s.stats().queue_area_s, 0.0);
+        s.accrue_queue_area(2.0); // 4 waiting jobs for 2 s
+        assert_eq!(s.stats().queue_area_s, 8.0);
+        let (srv, batch) = s.start_batch().unwrap();
+        s.accrue_queue_area(1.0); // 3 waiting jobs for 1 s
+        s.complete(srv, batch.len());
+        assert_eq!(s.stats().queue_area_s, 11.0);
+        assert_eq!(s.stats().max_queue, 4);
     }
 
     #[test]

@@ -22,10 +22,22 @@
 //! kernel's `(time, seq)`-ordered [`super::EventQueue`], so equal-time
 //! events fire in scheduling order and a run is a pure function of its
 //! inputs.
+//!
+//! ## Instrumentation
+//!
+//! The loop body is generic over `const PERF: bool`. [`Tandem::run`]
+//! instantiates `PERF = false`, where every probe site folds to a plain
+//! call — the default path carries no recorder branch at all.
+//! [`Tandem::run_recorded`] instantiates `PERF = true` and feeds a
+//! [`PerfRecorder`]; the two paths execute the same statements in the
+//! same order, so a recorded run returns the identical outcome
+//! (pinned by `tests/sim_equivalence.rs`).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::kernel::{Kernel, SimClock};
+use super::perf::{PerfRecorder, PerfStage};
 use super::station::{Station, StationConfig, StationStats};
 
 /// What a servicer returns for one service batch.
@@ -82,41 +94,65 @@ pub struct Tandem<T> {
     kernel: Kernel<Ev<T>>,
 }
 
+/// Run `f` under the recorder when `PERF` is on; otherwise just run it.
+/// With `PERF = false` the whole function folds to `f()` at compile
+/// time — no branch, no `Option` check in the default hot path.
+#[inline(always)]
+fn timed<const PERF: bool, R>(
+    rec: &mut Option<&mut PerfRecorder>,
+    stage: PerfStage,
+    f: impl FnOnce() -> R,
+) -> R {
+    if PERF {
+        rec.as_deref_mut()
+            .expect("instrumented run must carry a recorder")
+            .time(stage, f)
+    } else {
+        f()
+    }
+}
+
 /// Start every batch the station can serve at time `now`, scheduling the
 /// completions. Separate function (not a method) so the borrow of one
-/// station stays disjoint from the kernel.
-fn start_ready<T, F>(
+/// station stays disjoint from the kernel. `clock` is the kernel's clock,
+/// hoisted by the caller so the loop does not clone an `Arc` per batch.
+fn start_ready<const PERF: bool, T, F>(
     station_idx: usize,
     station: &mut Station<T>,
     kernel: &mut Kernel<Ev<T>>,
+    clock: &SimClock,
     now: f64,
     servicer: &mut F,
+    rec: &mut Option<&mut PerfRecorder>,
 ) where
     F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
 {
-    let clock = kernel.clock();
     while let Some((server, mut jobs)) = station.start_batch() {
         // Re-snap the clock to the batch's start: a clock-advancing
         // servicer (the virtual-mode stages sleep the SimClock forward)
         // may have moved it while serving a previous batch at this same
         // instant — every batch starting at `now` must see `now`.
-        clock.set_s(now);
-        let served = servicer(station_idx, now, &mut jobs);
+        clock.snap_s(now);
+        let served = timed::<PERF, _>(rec, PerfStage::ServiceDraw, || {
+            servicer(station_idx, now, &mut jobs)
+        });
         assert!(
             served.service_s >= 0.0 && served.service_s.is_finite(),
             "service time must be finite and non-negative, got {}",
             served.service_s
         );
         station.note_busy(served.service_s);
-        kernel.schedule_at(
-            now + served.service_s,
-            Ev::Complete {
-                station: station_idx,
-                server,
-                jobs,
-                next: served.next,
-            },
-        );
+        timed::<PERF, _>(rec, PerfStage::Enqueue, || {
+            kernel.schedule_at(
+                now + served.service_s,
+                Ev::Complete {
+                    station: station_idx,
+                    server,
+                    jobs,
+                    next: served.next,
+                },
+            )
+        });
     }
 }
 
@@ -143,18 +179,65 @@ impl<T> Tandem<T> {
     /// the kernel sorts). `servicer(station, start_s, batch)` is called
     /// once per service batch with the clock positioned at `start_s`; it
     /// returns the service duration and the jobs to forward downstream.
-    pub fn run<I, F>(mut self, arrivals: I, mut servicer: F) -> TandemOutcome<T>
+    pub fn run<I, F>(self, arrivals: I, servicer: F) -> TandemOutcome<T>
     where
         I: IntoIterator<Item = (f64, T)>,
         F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
     {
+        self.run_impl::<false, _, _>(arrivals, servicer, &mut None)
+    }
+
+    /// [`Tandem::run`] with stage-level instrumentation: every probe
+    /// site reports into `rec`, and the run's event count and wall time
+    /// accrue via [`PerfRecorder::note_run`]. Behaviorally identical to
+    /// `run` — same completions, same stats, same event count.
+    pub fn run_recorded<I, F>(
+        self,
+        arrivals: I,
+        servicer: F,
+        rec: &mut PerfRecorder,
+    ) -> TandemOutcome<T>
+    where
+        I: IntoIterator<Item = (f64, T)>,
+        F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
+    {
+        let t0 = Instant::now();
+        let out = self.run_impl::<true, _, _>(arrivals, servicer, &mut Some(&mut *rec));
+        rec.note_run(out.events, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    fn run_impl<const PERF: bool, I, F>(
+        mut self,
+        arrivals: I,
+        mut servicer: F,
+        rec: &mut Option<&mut PerfRecorder>,
+    ) -> TandemOutcome<T>
+    where
+        I: IntoIterator<Item = (f64, T)>,
+        F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
+    {
+        let arrivals = arrivals.into_iter();
+        // Pre-size for the common shape (known arrival count, ~1 output
+        // per input): the event arena holds every pre-scheduled arrival
+        // at once, and completions usually ends at the arrival count.
+        let (lo, hi) = arrivals.size_hint();
+        let hint = hi.unwrap_or(lo);
+        self.kernel.reserve(hint);
         for (t, job) in arrivals {
-            self.kernel.schedule_at(t, Ev::Arrive { station: 0, job });
+            timed::<PERF, _>(rec, PerfStage::Enqueue, || {
+                self.kernel.schedule_at(t, Ev::Arrive { station: 0, job })
+            });
         }
+        let clock = self.kernel.clock();
         let n_stations = self.stations.len();
-        let mut completions: Vec<(f64, T)> = Vec::new();
+        let mut completions: Vec<(f64, T)> = Vec::with_capacity(hint);
         let mut prev_t = 0.0f64;
-        while let Some((t, ev)) = self.kernel.next_event() {
+        loop {
+            let Some((t, ev)) = timed::<PERF, _>(rec, PerfStage::Pop, || self.kernel.next_event())
+            else {
+                break;
+            };
             // integrate queue lengths over the interval the queues were
             // constant on (events may share a timestamp: dt is then 0).
             // Deliberately O(n_stations) per event rather than O(1) per
@@ -163,15 +246,25 @@ impl<T> Tandem<T> {
             // owns it) is worth two float ops per station here.
             let dt = (t - prev_t).max(0.0);
             if dt > 0.0 {
-                for s in &mut self.stations {
-                    s.accrue_queue_area(dt);
-                }
+                timed::<PERF, _>(rec, PerfStage::StatsAccrue, || {
+                    for s in &mut self.stations {
+                        s.accrue_queue_area(dt);
+                    }
+                });
             }
             prev_t = t;
             match ev {
                 Ev::Arrive { station, job } => {
                     self.stations[station].offer(job);
-                    start_ready(station, &mut self.stations[station], &mut self.kernel, t, &mut servicer);
+                    start_ready::<PERF, _, _>(
+                        station,
+                        &mut self.stations[station],
+                        &mut self.kernel,
+                        &clock,
+                        t,
+                        &mut servicer,
+                        rec,
+                    );
                 }
                 Ev::Complete {
                     station,
@@ -181,19 +274,30 @@ impl<T> Tandem<T> {
                 } => {
                     self.stations[station].complete(server, jobs.len());
                     if station + 1 < n_stations {
+                        self.kernel.reserve(next.len());
                         for job in next {
-                            self.kernel.schedule_at(
-                                t,
-                                Ev::Arrive {
-                                    station: station + 1,
-                                    job,
-                                },
-                            );
+                            timed::<PERF, _>(rec, PerfStage::Enqueue, || {
+                                self.kernel.schedule_at(
+                                    t,
+                                    Ev::Arrive {
+                                        station: station + 1,
+                                        job,
+                                    },
+                                )
+                            });
                         }
                     } else {
                         completions.extend(jobs.into_iter().map(|j| (t, j)));
                     }
-                    start_ready(station, &mut self.stations[station], &mut self.kernel, t, &mut servicer);
+                    start_ready::<PERF, _, _>(
+                        station,
+                        &mut self.stations[station],
+                        &mut self.kernel,
+                        &clock,
+                        t,
+                        &mut servicer,
+                        rec,
+                    );
                 }
             }
         }
@@ -339,5 +443,38 @@ mod tests {
         assert!(out.completions.is_empty());
         assert_eq!(out.events, 0);
         assert_eq!(out.drained_s(), 0.0);
+    }
+
+    #[test]
+    fn recorded_run_matches_plain_run_exactly() {
+        let arrivals: Vec<(f64, u32)> = (0..40).map(|i| (0.1 * i as f64, i)).collect();
+        let make = || {
+            Tandem::new(vec![
+                StationConfig::single("a").with_batch(3),
+                StationConfig::single("b")
+                    .with_policy(QueuePolicy::DropNewest { capacity: 4 }),
+            ])
+        };
+        let fanout = |station: usize, _: f64, jobs: &mut Vec<u32>| Served {
+            service_s: if station == 0 { 0.4 } else { 0.25 },
+            next: jobs.iter().map(|j| j * 2).collect(),
+        };
+        let plain = make().run(arrivals.clone(), fanout);
+        let mut rec = PerfRecorder::with_stride(3);
+        let recorded = make().run_recorded(arrivals, fanout, &mut rec);
+        assert_eq!(plain.completions, recorded.completions);
+        assert_eq!(plain.events, recorded.events);
+        assert_eq!(
+            plain.stations.len(),
+            recorded.stations.len()
+        );
+        for (a, b) in plain.stations.iter().zip(&recorded.stations) {
+            assert_eq!(a.served, b.served);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.queue_area_s, b.queue_area_s);
+        }
+        let report = rec.report();
+        assert!(report.sane(), "{report:?}");
+        assert_eq!(report.events, recorded.events);
     }
 }

@@ -1,13 +1,43 @@
 //! Minimal benchmarking harness (criterion is not in the offline
 //! dependency set).
 //!
-//! `cargo bench` targets use [`Bench`] to time named workloads with
+//! `cargo bench` targets use [`run`] to time named workloads with
 //! warmup + repeated measurement, print mean/min/max wall time, and
 //! return the last result so benches can also print the paper table they
 //! regenerate. Timings are wall-clock (the benches pin no cores; treat
 //! small deltas accordingly).
+//!
+//! ## The committed bench trajectory
+//!
+//! Every bench target also appends a schema-versioned entry to a
+//! trajectory file at the workspace root (`BENCH_sim.json`,
+//! `BENCH_hotpaths.json`) — the repo's perf record PR-over-PR. The
+//! schema lives here so every bench shares one shape and one validator:
+//!
+//! ```json
+//! {
+//!   "schema": "plantd-bench-trajectory",
+//!   "version": 1,
+//!   "bench": "sim_campaign",
+//!   "entries": [
+//!     { "label": "pr6-indexheap", "unix_s": 1786147200,
+//!       "host": "reference",
+//!       "metrics": { "events_per_s": 1.6e7, "cells_per_s": 11.0 } }
+//!   ]
+//! }
+//! ```
+//!
+//! [`append_entry`] validates the entry *and* the resulting document
+//! before writing — a malformed entry is an error, never a silent
+//! append — and resolves the destination via [`workspace_root`], not
+//! the invocation cwd. `tests/bench_schema.rs` holds the committed
+//! files to the same validator. See `docs/PERF.md` for reading and
+//! update etiquette.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use super::json::Json;
 
 /// One timed workload.
 pub struct BenchResult {
@@ -78,6 +108,161 @@ pub fn throughput(items: u64, r: &BenchResult) -> f64 {
     items as f64 / r.mean_s
 }
 
+// ---- the shared bench-trajectory schema ------------------------------------
+
+/// Schema identifier every trajectory file must carry.
+pub const TRAJECTORY_SCHEMA: &str = "plantd-bench-trajectory";
+
+/// Current schema version. Readers reject newer versions (they cannot
+/// know the shape); older files are upgraded by hand when the schema
+/// moves, so there is no silent migration path.
+pub const TRAJECTORY_VERSION: u64 = 1;
+
+/// The canonical directory for `BENCH_*.json`: the workspace root
+/// (parent of `rust/`), resolved from the crate's own manifest path so
+/// it does not depend on the invocation cwd. `PLANTD_BENCH_DIR`
+/// overrides for tests and sandboxed CI runs.
+pub fn workspace_root() -> PathBuf {
+    if let Ok(dir) = std::env::var("PLANTD_BENCH_DIR") {
+        return PathBuf::from(dir);
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level below the workspace root")
+        .to_path_buf()
+}
+
+/// `workspace_root()/file` — where a trajectory named `file` lives.
+pub fn trajectory_path(file: &str) -> PathBuf {
+    workspace_root().join(file)
+}
+
+/// A fresh, empty trajectory document for `bench`.
+pub fn new_trajectory(bench: &str) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(TRAJECTORY_SCHEMA)),
+        ("version", Json::num(TRAJECTORY_VERSION as f64)),
+        ("bench", Json::str(bench)),
+        ("entries", Json::arr(Vec::new())),
+    ])
+}
+
+/// Build one trajectory entry. `metrics` must be non-empty; rates use
+/// names ending `_per_s` (the validator requires those to be positive).
+pub fn entry(label: &str, unix_s: u64, host: &str, metrics: Vec<(&str, f64)>) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(label)),
+        ("unix_s", Json::num(unix_s as f64)),
+        ("host", Json::str(host)),
+        ("metrics", Json::obj(metrics.into_iter().map(|(k, v)| (k, Json::num(v))).collect())),
+    ])
+}
+
+/// Validate one trajectory entry. Rules: non-empty `label` and `host`,
+/// positive integral `unix_s`, and a non-empty `metrics` object whose
+/// values are finite and non-negative — with every `*_per_s` rate
+/// strictly positive (a zero rate means the bench measured nothing).
+pub fn validate_entry(e: &Json) -> Result<(), String> {
+    let label = e
+        .get_str("label")
+        .filter(|l| !l.is_empty())
+        .ok_or("entry missing non-empty 'label'")?;
+    let ctx = |msg: &str| format!("entry '{label}': {msg}");
+    match e.get_u64("unix_s") {
+        Some(t) if t > 0 => {}
+        _ => return Err(ctx("'unix_s' must be a positive integer")),
+    }
+    if e.get_str("host").filter(|h| !h.is_empty()).is_none() {
+        return Err(ctx("missing non-empty 'host'"));
+    }
+    let metrics = e
+        .get("metrics")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| ctx("missing 'metrics' object"))?;
+    if metrics.is_empty() {
+        return Err(ctx("'metrics' must not be empty"));
+    }
+    for (name, value) in metrics {
+        if name.is_empty() {
+            return Err(ctx("metric names must be non-empty"));
+        }
+        let v = value
+            .as_f64()
+            .ok_or_else(|| ctx(&format!("metric '{name}' is not a number")))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(ctx(&format!("metric '{name}' = {v} (must be finite, >= 0)")));
+        }
+        if name.ends_with("_per_s") && v <= 0.0 {
+            return Err(ctx(&format!("rate '{name}' = {v} (rates must be > 0)")));
+        }
+    }
+    Ok(())
+}
+
+/// Validate a whole trajectory document: schema id, supported version,
+/// non-empty `bench` name, and every entry via [`validate_entry`].
+pub fn validate_trajectory(doc: &Json) -> Result<(), String> {
+    if doc.get_str("schema") != Some(TRAJECTORY_SCHEMA) {
+        return Err(format!("'schema' must be \"{TRAJECTORY_SCHEMA}\""));
+    }
+    match doc.get_u64("version") {
+        Some(v) if v == TRAJECTORY_VERSION => {}
+        Some(v) => {
+            return Err(format!(
+                "unsupported trajectory version {v} (this build reads {TRAJECTORY_VERSION})"
+            ))
+        }
+        None => return Err("'version' must be an integer".to_string()),
+    }
+    if doc.get_str("bench").filter(|b| !b.is_empty()).is_none() {
+        return Err("missing non-empty 'bench'".to_string());
+    }
+    let entries = doc
+        .get("entries")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'entries' array")?;
+    for (i, e) in entries.iter().enumerate() {
+        validate_entry(e).map_err(|msg| format!("entries[{i}]: {msg}"))?;
+    }
+    Ok(())
+}
+
+/// Append a validated entry to the trajectory at `path`, creating the
+/// file (as a fresh `bench` document) if absent. The entry, the
+/// existing document, and the final document are all validated —
+/// malformed input is an error and the file is left untouched.
+pub fn append_entry(path: &Path, bench: &str, new: Json) -> Result<(), String> {
+    validate_entry(&new).map_err(|e| format!("refusing to append: {e}"))?;
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let doc = Json::parse(&text)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            validate_trajectory(&doc)
+                .map_err(|e| format!("{}: existing trajectory invalid: {e}", path.display()))?;
+            if doc.get_str("bench") != Some(bench) {
+                return Err(format!(
+                    "{}: trajectory belongs to bench '{}', not '{bench}'",
+                    path.display(),
+                    doc.get_str("bench").unwrap_or("?")
+                ));
+            }
+            doc
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => new_trajectory(bench),
+        Err(e) => return Err(format!("{}: {e}", path.display())),
+    };
+    if let Json::Obj(map) = &mut doc {
+        match map.get_mut("entries") {
+            Some(Json::Arr(entries)) => entries.push(new),
+            _ => return Err("trajectory 'entries' is not an array".to_string()),
+        }
+    }
+    validate_trajectory(&doc)?;
+    std::fs::write(path, doc.to_string_pretty())
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,5 +293,115 @@ mod tests {
         assert_eq!(humane(2.0), "2.00s");
         assert_eq!(humane(0.002), "2.00ms");
         assert_eq!(humane(0.0000005), "0.5µs");
+    }
+
+    fn good_entry() -> Json {
+        entry(
+            "pr6-test",
+            1_754_611_200,
+            "reference",
+            vec![("events_per_s", 1.5e7), ("p99_ns", 120.0)],
+        )
+    }
+
+    #[test]
+    fn fresh_trajectory_with_entry_validates() {
+        let mut doc = new_trajectory("sim_campaign");
+        validate_trajectory(&doc).unwrap();
+        if let Json::Obj(map) = &mut doc {
+            if let Some(Json::Arr(entries)) = map.get_mut("entries") {
+                entries.push(good_entry());
+            }
+        }
+        validate_trajectory(&doc).unwrap();
+        // round-trips through the serializer
+        let reparsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        validate_trajectory(&reparsed).unwrap();
+    }
+
+    #[test]
+    fn malformed_entries_are_rejected_with_reasons() {
+        // zero rate
+        let e = entry("x", 1, "h", vec![("events_per_s", 0.0)]);
+        assert!(validate_entry(&e).unwrap_err().contains("rates must be > 0"));
+        // non-finite metric
+        let e = entry("x", 1, "h", vec![("p50_ns", f64::NAN)]);
+        assert!(validate_entry(&e).unwrap_err().contains("finite"));
+        // negative metric
+        let e = entry("x", 1, "h", vec![("p50_ns", -1.0)]);
+        assert!(validate_entry(&e).is_err());
+        // empty metrics
+        let e = entry("x", 1, "h", vec![]);
+        assert!(validate_entry(&e).unwrap_err().contains("must not be empty"));
+        // missing label / host / time
+        assert!(validate_entry(&entry("", 1, "h", vec![("a", 1.0)])).is_err());
+        assert!(validate_entry(&entry("x", 0, "h", vec![("a", 1.0)])).is_err());
+        assert!(validate_entry(&entry("x", 1, "", vec![("a", 1.0)])).is_err());
+    }
+
+    #[test]
+    fn trajectory_rejects_wrong_schema_and_future_version() {
+        let doc = Json::obj(vec![
+            ("schema", Json::str("something-else")),
+            ("version", Json::num(1.0)),
+            ("bench", Json::str("b")),
+            ("entries", Json::arr(vec![])),
+        ]);
+        assert!(validate_trajectory(&doc).unwrap_err().contains("schema"));
+        let doc = Json::obj(vec![
+            ("schema", Json::str(TRAJECTORY_SCHEMA)),
+            ("version", Json::num(99.0)),
+            ("bench", Json::str("b")),
+            ("entries", Json::arr(vec![])),
+        ]);
+        assert!(validate_trajectory(&doc).unwrap_err().contains("version 99"));
+        // a bad entry inside is located by index
+        let mut doc = new_trajectory("b");
+        if let Json::Obj(map) = &mut doc {
+            if let Some(Json::Arr(entries)) = map.get_mut("entries") {
+                entries.push(Json::obj(vec![("label", Json::str("broken"))]));
+            }
+        }
+        assert!(validate_trajectory(&doc).unwrap_err().contains("entries[0]"));
+    }
+
+    #[test]
+    fn append_entry_creates_validates_and_refuses_malformed() {
+        let dir = std::env::temp_dir().join(format!("plantd-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let _ = std::fs::remove_file(&path);
+
+        append_entry(&path, "testbench", good_entry()).unwrap();
+        append_entry(&path, "testbench", good_entry()).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        validate_trajectory(&doc).unwrap();
+        assert_eq!(doc.get("entries").unwrap().as_arr().unwrap().len(), 2);
+
+        // malformed entry: refused, file untouched
+        let before = std::fs::read_to_string(&path).unwrap();
+        let bad = entry("bad", 1, "h", vec![("events_per_s", 0.0)]);
+        assert!(append_entry(&path, "testbench", bad).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+
+        // wrong bench name: refused
+        assert!(append_entry(&path, "otherbench", good_entry()).is_err());
+
+        // corrupt existing file: refused, not clobbered
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(append_entry(&path, "testbench", good_entry()).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{not json");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn workspace_root_is_the_repo_root_or_the_override() {
+        // without the override, the root is the parent of rust/ — the
+        // directory that holds Cargo.toml's workspace and tests/golden
+        if std::env::var("PLANTD_BENCH_DIR").is_err() {
+            let root = workspace_root();
+            assert!(root.join("rust").is_dir(), "{}", root.display());
+        }
+        assert!(trajectory_path("BENCH_sim.json").ends_with("BENCH_sim.json"));
     }
 }

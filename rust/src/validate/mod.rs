@@ -21,8 +21,14 @@
 //!   `tests/golden/`, normalized and byte-compared on every run, with
 //!   `--update` regeneration.
 //!
+//! A fourth, opt-in leg measures *speed* rather than accuracy:
+//! `--suite perf` profiles the event loop stage-by-stage with
+//! [`crate::sim::PerfRecorder`] on a canonical M/M/1 workload. It is
+//! deliberately excluded from `all` — timings are machine-relative and
+//! must never gate correctness runs (see `docs/PERF.md`).
+//!
 //! Drivable three ways: `plantd validate [--suite queueing|snapshots|
-//! all] [--update]`, the `Validation` resource kind (declarable in
+//! all|perf] [--update]`, the `Validation` resource kind (declarable in
 //! manifests, executed by the controller), and the
 //! `tests/validation_oracle.rs` / `tests/golden_snapshots.rs`
 //! integration tests. See `docs/VALIDATION.md` for the formulas,
@@ -34,6 +40,7 @@ pub mod suite;
 
 use std::path::Path;
 
+use crate::sim::PerfReport;
 use crate::util::json::Json;
 
 pub use oracle::QueueMetrics;
@@ -50,6 +57,9 @@ pub struct ValidationRun {
     pub queueing: Option<SuiteReport>,
     /// The snapshot outcomes, if that suite was selected.
     pub snapshots: Option<Vec<SnapshotOutcome>>,
+    /// The kernel stage profile, if `--suite perf` was selected.
+    /// Timings are machine-relative; only wiring sanity can fail.
+    pub perf: Option<PerfReport>,
 }
 
 impl ValidationRun {
@@ -63,13 +73,18 @@ impl ValidationRun {
         if let Some(outcomes) = &self.snapshots {
             out += &snapshot::render(outcomes);
         }
+        if let Some(report) = &self.perf {
+            out += &report.render();
+        }
         out
     }
 
-    /// Total targets checked (queueing cases + snapshot subjects).
+    /// Total targets checked (queueing cases + snapshot subjects + the
+    /// perf profile when selected).
     pub fn targets(&self) -> usize {
         self.queueing.as_ref().map_or(0, |r| r.results.len())
             + self.snapshots.as_ref().map_or(0, Vec::len)
+            + usize::from(self.perf.is_some())
     }
 
     /// Names of failing targets, prefixed by suite
@@ -92,6 +107,11 @@ impl ValidationRun {
                     .filter(|o| !o.status.pass())
                     .map(|o| format!("snapshots/{}", o.name)),
             );
+        }
+        if let Some(report) = &self.perf {
+            if !report.sane() {
+                failed.push("perf/kernel".to_string());
+            }
         }
         failed
     }
@@ -123,6 +143,14 @@ impl ValidationRun {
                 details.push(format!("snapshots/{}: {}", o.name, o.status.label()));
             }
         }
+        if let Some(report) = &self.perf {
+            if !report.sane() {
+                details.push(format!(
+                    "perf/kernel: recorder measured nothing (events {}, rate {:.0}/s)",
+                    report.events, report.events_per_s
+                ));
+            }
+        }
         details
     }
 
@@ -137,6 +165,9 @@ impl ValidationRun {
         if let Some(outcomes) = &self.snapshots {
             fields.push(("snapshots", snapshot::to_json(outcomes)));
         }
+        if let Some(report) = &self.perf {
+            fields.push(("perf", report.to_json()));
+        }
         fields.push(("targets", Json::Num(self.targets() as f64)));
         fields.push((
             "failed",
@@ -146,27 +177,37 @@ impl ValidationRun {
     }
 }
 
-/// Run the selected suites (`queueing`, `snapshots`, or `all`).
+/// Arrivals profiled by the `perf` suite's canonical M/M/1 workload:
+/// large enough for stable percentiles, small enough for a CI smoke.
+pub const PERF_SUITE_ARRIVALS: usize = 200_000;
+
+/// Run the selected suites (`queueing`, `snapshots`, `all`, or `perf`).
 /// `mode` governs the snapshot leg only (the controller always passes
 /// [`SnapshotMode::Verify`]; `--update` is CLI-only because it mutates
-/// the golden tree). Unknown selections are an error.
+/// the golden tree). `perf` is opt-in only — never part of `all` — so
+/// machine-relative timings cannot leak into correctness gates or the
+/// `Validation` resource's default status. Unknown selections are an
+/// error.
 pub fn run_suites(
     selection: &str,
     threads: usize,
     golden_dir: &Path,
     mode: SnapshotMode,
 ) -> Result<ValidationRun, String> {
-    if !matches!(selection, "queueing" | "snapshots" | "all") {
+    if !matches!(selection, "queueing" | "snapshots" | "all" | "perf") {
         return Err(format!(
-            "unknown suite '{selection}' (queueing|snapshots|all)"
+            "unknown suite '{selection}' (queueing|snapshots|all|perf)"
         ));
     }
     let queueing = matches!(selection, "queueing" | "all")
         .then(|| ValidationSuite::queueing().run(threads));
     let snapshots =
         matches!(selection, "snapshots" | "all").then(|| snapshot::check(golden_dir, mode));
+    let perf = (selection == "perf")
+        .then(|| crate::sim::profile_kernel(PERF_SUITE_ARRIVALS, 64));
     Ok(ValidationRun {
         queueing,
         snapshots,
+        perf,
     })
 }

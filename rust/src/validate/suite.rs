@@ -194,6 +194,47 @@ fn abs_check(metric: &str, measured: f64, tol: f64) -> MetricCheck {
     }
 }
 
+/// Pre-sampled per-station service times in one flat arena
+/// (station-major: entry `station * n + job`), built once per case.
+///
+/// Derivation and draw order are byte-for-byte the historical
+/// per-station scheme — one RNG per station seeded
+/// `derive_seed(seed, [SERVICE_STREAM, station, 0])`, `n` exponential
+/// draws each, stations in pipeline order — so every measurement stays
+/// bit-identical. What changed is the cost shape: the servicer's
+/// per-batch lookup is one index into one allocation (no nested-`Vec`
+/// pointer chase), and nothing re-derives an RNG stream per job.
+struct ServiceSampler {
+    /// Arrival-horizon stride (draws per station).
+    n: usize,
+    /// `rates.len() * n` samples, station-major.
+    flat: Vec<f64>,
+}
+
+impl ServiceSampler {
+    /// Draw `n` service times for every station in `rates`.
+    fn sample(seed: u64, rates: &[f64], n: usize) -> Self {
+        let mut flat = Vec::with_capacity(rates.len() * n);
+        for (s, mu) in rates.iter().enumerate() {
+            let mut rng = Rng::new(derive_seed(seed, [SERVICE_STREAM, s as u64, 0]));
+            flat.extend((0..n).map(|_| rng.exponential(*mu)));
+        }
+        ServiceSampler { n, flat }
+    }
+
+    /// The pre-sampled service time of `job` at `station`.
+    #[inline]
+    fn service_s(&self, station: usize, job: usize) -> f64 {
+        self.flat[station * self.n + job]
+    }
+
+    /// Total service `job` receives across all stations (summed in
+    /// pipeline order, matching the historical per-station iteration).
+    fn total_service_s(&self, job: usize) -> f64 {
+        self.flat.iter().skip(job).step_by(self.n).sum()
+    }
+}
+
 /// Everything one executed case produced.
 #[derive(Debug, Clone)]
 pub struct CaseResult {
@@ -236,22 +277,22 @@ pub fn run_case(case: &ValidationCase) -> CaseResult {
         arrival_times.push(t);
     }
     let rates = case.model.service_rates();
-    let service: Vec<Vec<f64>> = rates
-        .iter()
-        .enumerate()
-        .map(|(s, mu)| {
-            let mut rng = Rng::new(derive_seed(case.seed, [SERVICE_STREAM, s as u64, 0]));
-            (0..n).map(|_| rng.exponential(*mu)).collect()
-        })
-        .collect();
+    let sampler = ServiceSampler::sample(case.seed, &rates, n);
+    let n_stations = rates.len();
 
     let tandem = Tandem::new(case.model.station_configs());
     let arrivals: Vec<(f64, usize)> = arrival_times.iter().copied().zip(0..n).collect();
     let out = tandem.run(arrivals, |station, _start, jobs| {
         let job = jobs[0];
         Served {
-            service_s: service[station][job],
-            next: jobs.clone(),
+            service_s: sampler.service_s(station, job),
+            // the last station's batch IS the output; the kernel drops
+            // `next` there, so skip the clone
+            next: if station + 1 < n_stations {
+                jobs.clone()
+            } else {
+                Vec::new()
+            },
         }
     });
 
@@ -263,7 +304,7 @@ pub fn run_case(case: &ValidationCase) -> CaseResult {
             continue;
         }
         let sojourn = tc - arrival_times[*idx];
-        let svc: f64 = service.iter().map(|s| s[*idx]).sum();
+        let svc = sampler.total_service_s(*idx);
         sojourns.push(sojourn);
         waits.push(sojourn - svc);
     }
@@ -724,6 +765,37 @@ mod tests {
             warmup: 400,
             seed: 0xF00D,
             tol_rel: 0.25, // short horizon: only sanity, not the 2% bar
+        }
+    }
+
+    #[test]
+    fn service_sampler_matches_the_historical_nested_scheme_bitwise() {
+        // the flat arena must reproduce the exact bits of the original
+        // per-station Vec<Vec<f64>> pre-sampling — this is what keeps
+        // every suite measurement (and golden snapshot) byte-identical
+        let (seed, n) = (0x11AD_0005u64, 257usize);
+        let rates = [1.0f64, 1.25, 0.8];
+        let reference: Vec<Vec<f64>> = rates
+            .iter()
+            .enumerate()
+            .map(|(s, mu)| {
+                let mut rng = Rng::new(derive_seed(seed, [SERVICE_STREAM, s as u64, 0]));
+                (0..n).map(|_| rng.exponential(*mu)).collect()
+            })
+            .collect();
+        let sampler = ServiceSampler::sample(seed, &rates, n);
+        for (s, station) in reference.iter().enumerate() {
+            for (j, want) in station.iter().enumerate() {
+                assert_eq!(
+                    sampler.service_s(s, j).to_bits(),
+                    want.to_bits(),
+                    "station {s} job {j}"
+                );
+            }
+        }
+        for j in [0usize, 1, 100, n - 1] {
+            let want: f64 = reference.iter().map(|st| st[j]).sum();
+            assert_eq!(sampler.total_service_s(j).to_bits(), want.to_bits());
         }
     }
 

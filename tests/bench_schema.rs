@@ -1,0 +1,173 @@
+//! Schema regression tests for the committed bench trajectories.
+//!
+//! `BENCH_sim.json` and `BENCH_hotpaths.json` at the workspace root are
+//! the repo's PR-over-PR perf record (docs/PERF.md). These tests hold
+//! them to the `util::bench` trajectory schema — version, metric names,
+//! positive rates — and prove the append harness refuses malformed
+//! entries instead of silently corrupting the record. They also pin the
+//! PR 6 acceptance claim: the index-heap entry must show at least 2×
+//! the events/sec of the BinaryHeap baseline recorded in the same file
+//! (both measured on the same reference host; later `local` / CI
+//! entries are machine-relative and deliberately not compared).
+
+use std::path::{Path, PathBuf};
+
+use plantd::util::bench;
+use plantd::util::json::Json;
+
+/// The committed trajectory files, resolved from the crate manifest —
+/// NOT via `bench::workspace_root()`, so a `PLANTD_BENCH_DIR` override
+/// in the environment cannot point this test away from the repo.
+fn committed(file: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ sits one level below the workspace root")
+        .join(file)
+}
+
+fn load(file: &str) -> Json {
+    let path = committed(file);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+fn entry_by_label<'a>(doc: &'a Json, label: &str) -> &'a Json {
+    doc.get("entries")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .find(|e| e.get_str("label") == Some(label))
+        .unwrap_or_else(|| panic!("no entry labeled '{label}'"))
+}
+
+#[test]
+fn committed_trajectories_validate_against_the_schema() {
+    for (file, bench_name) in [
+        ("BENCH_sim.json", "sim_campaign"),
+        ("BENCH_hotpaths.json", "perf_hotpaths"),
+    ] {
+        let doc = load(file);
+        bench::validate_trajectory(&doc).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(doc.get_str("schema"), Some(bench::TRAJECTORY_SCHEMA), "{file}");
+        assert_eq!(doc.get_u64("version"), Some(bench::TRAJECTORY_VERSION), "{file}");
+        assert_eq!(doc.get_str("bench"), Some(bench_name), "{file}");
+        let entries = doc.get("entries").and_then(Json::as_arr).unwrap();
+        assert!(!entries.is_empty(), "{file}: trajectory must not be empty");
+    }
+}
+
+#[test]
+fn sim_trajectory_entries_carry_the_required_metrics() {
+    let doc = load("BENCH_sim.json");
+    for e in doc.get("entries").and_then(Json::as_arr).unwrap() {
+        let m = e.get("metrics").unwrap();
+        for name in ["cells_per_s", "events_per_s", "grid_mean_s", "cells", "threads"] {
+            let v = m
+                .get_f64(name)
+                .unwrap_or_else(|| panic!("entry '{}' missing {name}", e.get_str("label").unwrap()));
+            assert!(v.is_finite() && v >= 0.0);
+        }
+        assert!(m.get_f64("cells_per_s").unwrap() > 0.0, "rates must be positive");
+        assert!(m.get_f64("events_per_s").unwrap() > 0.0, "rates must be positive");
+    }
+}
+
+#[test]
+fn hotpaths_trajectory_entries_carry_stage_percentiles() {
+    let doc = load("BENCH_hotpaths.json");
+    for e in doc.get("entries").and_then(Json::as_arr).unwrap() {
+        let m = e.get("metrics").unwrap();
+        for stage in ["enqueue", "pop", "service_draw", "stats_accrue"] {
+            for pct in ["p50", "p95", "p99"] {
+                let name = format!("{stage}_{pct}_ns");
+                let v = m.get_f64(&name).unwrap_or_else(|| {
+                    panic!("entry '{}' missing {name}", e.get_str("label").unwrap())
+                });
+                assert!(v.is_finite() && v >= 0.0, "{name} = {v}");
+            }
+        }
+        assert!(m.get_f64("events_per_s").unwrap() > 0.0);
+        assert!(m.get_f64("queue_ops_per_s").unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn index_heap_entry_doubles_the_baseline_events_rate() {
+    // the PR 6 acceptance bar: >= 2x events/sec over the pre-rewrite
+    // baseline, recorded as same-host entries in the same trajectory
+    for file in ["BENCH_sim.json", "BENCH_hotpaths.json"] {
+        let doc = load(file);
+        let base = entry_by_label(&doc, "pr6-baseline-binaryheap");
+        let opt = entry_by_label(&doc, "pr6-indexheap");
+        assert_eq!(
+            base.get_str("host"),
+            opt.get_str("host"),
+            "{file}: the 2x claim only holds within one host"
+        );
+        let base_rate = base.get("metrics").unwrap().get_f64("events_per_s").unwrap();
+        let opt_rate = opt.get("metrics").unwrap().get_f64("events_per_s").unwrap();
+        let ratio = opt_rate / base_rate;
+        assert!(
+            ratio >= 2.0,
+            "{file}: events/sec ratio {ratio:.2} < 2.0 ({opt_rate:.0} vs {base_rate:.0})"
+        );
+    }
+}
+
+#[test]
+fn append_harness_rejects_malformed_entries_without_corrupting_the_file() {
+    let dir = std::env::temp_dir().join(format!("plantd-bench-schema-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_reject.json");
+    let _ = std::fs::remove_file(&path);
+
+    let good = bench::entry("ok", 1_754_611_200, "host", vec![("events_per_s", 10.0)]);
+    bench::append_entry(&path, "rejectbench", good).unwrap();
+    let before = std::fs::read_to_string(&path).unwrap();
+
+    // every malformed shape is refused and the file stays byte-identical
+    let malformed = [
+        bench::entry("", 1, "h", vec![("a", 1.0)]),                    // empty label
+        bench::entry("x", 0, "h", vec![("a", 1.0)]),                   // zero time
+        bench::entry("x", 1, "", vec![("a", 1.0)]),                    // empty host
+        bench::entry("x", 1, "h", vec![]),                             // no metrics
+        bench::entry("x", 1, "h", vec![("events_per_s", 0.0)]),        // zero rate
+        bench::entry("x", 1, "h", vec![("p50_ns", f64::INFINITY)]),    // non-finite
+        bench::entry("x", 1, "h", vec![("p50_ns", -3.0)]),             // negative
+        Json::obj(vec![("label", Json::str("x"))]),                    // missing fields
+        Json::str("not an object"),                                    // wrong type
+    ];
+    for (i, bad) in malformed.into_iter().enumerate() {
+        let err = bench::append_entry(&path, "rejectbench", bad)
+            .expect_err(&format!("malformed entry {i} must be refused"));
+        assert!(err.contains("refusing to append"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            before,
+            "malformed entry {i} mutated the trajectory"
+        );
+    }
+
+    // appending to a trajectory owned by another bench is refused too
+    let good2 = bench::entry("ok2", 2, "host", vec![("events_per_s", 11.0)]);
+    assert!(bench::append_entry(&path, "somethingelse", good2).is_err());
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), before);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn committed_trajectories_round_trip_through_the_writer() {
+    // the files must stay parse -> serialize stable so bench appends
+    // produce minimal diffs
+    for file in ["BENCH_sim.json", "BENCH_hotpaths.json"] {
+        let path = committed(file);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(
+            doc.to_string_pretty(),
+            text,
+            "{file} is not in canonical serialized form"
+        );
+    }
+}

@@ -1,0 +1,389 @@
+//! Differential tests pinning the hot-path rewrites (PR 6) to simple
+//! reference implementations.
+//!
+//! The index-based 4-ary heap arena behind `sim::EventQueue`, the
+//! batch-draining `Station::start_batch`, and the instrumented
+//! `Tandem::run_recorded` path are all performance rewrites whose
+//! contract is *behavioral identity*: same pop order, same admissions,
+//! same bytes out. Each test here holds the optimized structure against
+//! a deliberately naive model under randomized workloads (equal-time
+//! entries included — tie-breaking is where heap rewrites go wrong):
+//!
+//! - `EventQueue` vs a `BinaryHeap` of `(time, seq)` entries — the
+//!   exact structure the kernel used before the arena rewrite;
+//! - `Station` (FIFO, LIFO, batching, DropNewest, Block) vs a
+//!   `Vec`-based model that queues with `insert(0, ..)` / `remove(0)`;
+//! - `Tandem::run` vs `Tandem::run_recorded` — instrumentation must
+//!   not move a single bit of the outcome.
+//!
+//! The golden snapshots (`tests/golden_snapshots.rs`) and the queueing
+//! conformance suite (`tests/validation_oracle.rs`) prove the same
+//! property end-to-end; these tests localize a violation to the
+//! structure that caused it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use plantd::sim::{
+    Discipline, EventQueue, Offered, PerfRecorder, QueuePolicy, Served, Station, StationConfig,
+    Tandem,
+};
+use plantd::util::proptest::check;
+use plantd::util::rng::Rng;
+
+// ---- EventQueue vs BinaryHeap reference ------------------------------------
+
+/// The pre-rewrite event-queue entry: a max-heap entry ordered so the
+/// smallest `(time, seq)` pops first, with `total_cmp` tie-breaking —
+/// byte-for-byte the ordering the kernel documented before the arena.
+struct RefEntry {
+    time: f64,
+    seq: u64,
+    payload: u64,
+}
+
+impl PartialEq for RefEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for RefEntry {}
+impl PartialOrd for RefEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RefEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // inverted: BinaryHeap pops the max, we want the min key
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[test]
+fn event_queue_matches_binaryheap_reference_model() {
+    check("event-queue-vs-binaryheap", 150, |rng| {
+        let mut queue: EventQueue<u64> = if rng.chance(0.5) {
+            EventQueue::new()
+        } else {
+            EventQueue::with_capacity(rng.int_range(0, 32) as usize)
+        };
+        let mut model: BinaryHeap<RefEntry> = BinaryHeap::new();
+        let mut next_seq = 0u64;
+        let mut next_payload = 0u64;
+
+        let ops = rng.int_range(1, 250);
+        for _ in 0..ops {
+            if rng.chance(0.6) {
+                // a coarse grid (quarter steps, negatives included)
+                // forces frequent equal-time collisions
+                let time = rng.int_range(-6, 14) as f64 * 0.25;
+                queue.push(time, next_payload);
+                model.push(RefEntry {
+                    time,
+                    seq: next_seq,
+                    payload: next_payload,
+                });
+                next_seq += 1;
+                next_payload += 1;
+            } else {
+                let got = queue.pop();
+                let want = model.pop().map(|e| e.payload);
+                assert_eq!(got, want, "pop order diverged");
+            }
+            assert_eq!(queue.len(), model.len(), "len diverged");
+            assert_eq!(
+                queue.peek_time(),
+                model.peek().map(|e| e.time),
+                "peek_time diverged"
+            );
+        }
+        // full drain: every remaining entry must come out in the same order
+        while let Some(want) = model.pop() {
+            assert_eq!(queue.pop(), Some(want.payload), "drain order diverged");
+        }
+        assert!(queue.is_empty());
+    });
+}
+
+// ---- Station vs a naive Vec model ------------------------------------------
+
+/// Deliberately naive station model: queue as a `Vec` with `insert(0)` /
+/// `remove(0)`, batches taken by repeated `remove(0)` — the semantics
+/// `Station` had before the drain-based batching.
+struct RefStation {
+    batch_max: usize,
+    lifo: bool,
+    cap: Option<usize>,
+    drop_newest: bool,
+    idle: usize,
+    queue: Vec<u64>,
+    blocked: Vec<u64>,
+    offered: u64,
+    served: u64,
+    dropped: u64,
+    backpressured: u64,
+    batches: u64,
+    max_queue: usize,
+}
+
+impl RefStation {
+    fn new(servers: usize, batch_max: usize, lifo: bool, cap: Option<usize>, drop_newest: bool) -> Self {
+        RefStation {
+            batch_max,
+            lifo,
+            cap,
+            drop_newest,
+            idle: servers,
+            queue: Vec::new(),
+            blocked: Vec::new(),
+            offered: 0,
+            served: 0,
+            dropped: 0,
+            backpressured: 0,
+            batches: 0,
+            max_queue: 0,
+        }
+    }
+
+    fn enqueue(&mut self, job: u64) {
+        if self.lifo {
+            self.queue.insert(0, job);
+        } else {
+            self.queue.push(job);
+        }
+        self.max_queue = self.max_queue.max(self.queue.len());
+    }
+
+    fn offer(&mut self, job: u64) -> Offered {
+        self.offered += 1;
+        if let Some(cap) = self.cap {
+            if self.queue.len() >= cap {
+                return if self.drop_newest {
+                    self.dropped += 1;
+                    Offered::Dropped
+                } else {
+                    self.backpressured += 1;
+                    self.blocked.push(job);
+                    Offered::Blocked
+                };
+            }
+        }
+        self.enqueue(job);
+        Offered::Queued
+    }
+
+    fn start(&mut self) -> Option<Vec<u64>> {
+        if self.queue.is_empty() || self.idle == 0 {
+            return None;
+        }
+        self.idle -= 1;
+        let n = self.batch_max.min(self.queue.len());
+        let jobs: Vec<u64> = (0..n).map(|_| self.queue.remove(0)).collect();
+        if let Some(cap) = self.cap {
+            while self.queue.len() < cap && !self.blocked.is_empty() {
+                let j = self.blocked.remove(0);
+                self.enqueue(j);
+            }
+        }
+        self.batches += 1;
+        Some(jobs)
+    }
+
+    fn complete(&mut self, n_jobs: usize) {
+        self.idle += 1;
+        self.served += n_jobs as u64;
+    }
+}
+
+#[test]
+fn station_matches_naive_reference_under_random_workloads() {
+    check("station-vs-naive-model", 200, |rng| {
+        let servers = rng.int_range(1, 3) as usize;
+        let batch_max = rng.int_range(1, 4) as usize;
+        let lifo = rng.chance(0.5);
+        let discipline = if lifo { Discipline::Lifo } else { Discipline::Fifo };
+        let (policy, cap, drop_newest) = match rng.int_range(0, 2) {
+            0 => (QueuePolicy::Unbounded, None, false),
+            1 => {
+                let c = rng.int_range(0, 3) as usize;
+                (QueuePolicy::DropNewest { capacity: c }, Some(c), true)
+            }
+            _ => {
+                let c = rng.int_range(0, 3) as usize;
+                (QueuePolicy::Block { capacity: c }, Some(c), false)
+            }
+        };
+        let mut station: Station<u64> = Station::new(
+            StationConfig::single("diff")
+                .with_servers(servers)
+                .with_batch(batch_max)
+                .with_discipline(discipline)
+                .with_policy(policy),
+        );
+        let mut model = RefStation::new(servers, batch_max, lifo, cap, drop_newest);
+        // (server id, batch size) pairs in flight, shared by both models
+        let mut busy: Vec<(usize, usize)> = Vec::new();
+        let mut next_job = 0u64;
+
+        let ops = rng.int_range(20, 160);
+        for _ in 0..ops {
+            match rng.int_range(0, 2) {
+                0 => {
+                    let got = station.offer(next_job);
+                    let want = model.offer(next_job);
+                    assert_eq!(got, want, "admission decision diverged");
+                    next_job += 1;
+                }
+                1 => {
+                    let got = station.start_batch();
+                    let want = model.start();
+                    match (got, want) {
+                        (Some((server, jobs)), Some(want_jobs)) => {
+                            assert_eq!(jobs, want_jobs, "batch contents diverged");
+                            busy.push((server, jobs.len()));
+                        }
+                        (None, None) => {}
+                        (got, want) => panic!(
+                            "batch availability diverged: station {:?} vs model {:?}",
+                            got.map(|(_, j)| j),
+                            want
+                        ),
+                    }
+                }
+                _ => {
+                    if !busy.is_empty() {
+                        let i = rng.int_range(0, busy.len() as i64 - 1) as usize;
+                        let (server, n_jobs) = busy.swap_remove(i);
+                        station.complete(server, n_jobs);
+                        model.complete(n_jobs);
+                    }
+                }
+            }
+            assert_eq!(station.queue_len(), model.queue.len(), "queue length diverged");
+        }
+        // drain to quiescence: start everything startable, complete everything
+        loop {
+            match (station.start_batch(), model.start()) {
+                (Some((server, jobs)), Some(want_jobs)) => {
+                    assert_eq!(jobs, want_jobs, "drain batch diverged");
+                    busy.push((server, jobs.len()));
+                }
+                (None, None) => {
+                    if let Some((server, n_jobs)) = busy.pop() {
+                        station.complete(server, n_jobs);
+                        model.complete(n_jobs);
+                    } else {
+                        break;
+                    }
+                }
+                (got, want) => panic!(
+                    "drain availability diverged: station {:?} vs model {:?}",
+                    got.map(|(_, j)| j),
+                    want
+                ),
+            }
+        }
+        assert!(station.is_quiescent(), "station retained work");
+        assert!(model.queue.is_empty() && model.blocked.is_empty());
+
+        let s = station.stats();
+        assert_eq!(s.offered, model.offered);
+        assert_eq!(s.served, model.served);
+        assert_eq!(s.dropped, model.dropped);
+        assert_eq!(s.backpressured, model.backpressured);
+        assert_eq!(s.batches, model.batches);
+        assert_eq!(s.max_queue, model.max_queue);
+        assert_eq!(s.offered, s.served + s.dropped, "conservation");
+    });
+}
+
+// ---- Tandem::run vs Tandem::run_recorded -----------------------------------
+
+/// Deterministic pseudo-random service time from (station, job) alone,
+/// so both runs see identical draws without sharing an RNG.
+fn service_for(station: usize, job: u64) -> f64 {
+    let h = (job ^ (station as u64) << 32).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    ((h >> 40) % 1000) as f64 * 1e-3
+}
+
+#[test]
+fn recorded_tandem_run_is_bit_identical_to_plain_run() {
+    check("tandem-recorded-vs-plain", 60, |rng| {
+        let n_stations = rng.int_range(1, 3) as usize;
+        let configs = || -> Vec<StationConfig> {
+            (0..n_stations)
+                .map(|i| {
+                    let mut c = StationConfig::single(&format!("s{i}"));
+                    if i == 0 {
+                        c = c.with_batch(3);
+                    }
+                    if i == 1 {
+                        c = c.with_policy(QueuePolicy::DropNewest { capacity: 5 });
+                    }
+                    c
+                })
+                .collect()
+        };
+        // coarse-grid arrival times force equal-timestamp events
+        let n = rng.int_range(1, 60) as usize;
+        let arrivals: Vec<(f64, u64)> = (0..n as u64)
+            .map(|i| ((i % 7) as f64 * 0.5, i))
+            .collect();
+        let servicer = |station: usize, _start: f64, jobs: &mut Vec<u64>| Served {
+            service_s: service_for(station, jobs[0]),
+            next: jobs.iter().map(|j| j.wrapping_mul(3)).collect(),
+        };
+
+        let plain = Tandem::new(configs()).run(arrivals.clone(), servicer);
+        let mut rec = PerfRecorder::with_stride(7);
+        let recorded = Tandem::new(configs()).run_recorded(arrivals, servicer, &mut rec);
+
+        assert_eq!(plain.events, recorded.events);
+        assert_eq!(plain.completions.len(), recorded.completions.len());
+        for ((ta, ja), (tb, jb)) in plain.completions.iter().zip(&recorded.completions) {
+            assert_eq!(ta.to_bits(), tb.to_bits(), "completion time moved");
+            assert_eq!(ja, jb, "completion order moved");
+        }
+        for (a, b) in plain.stations.iter().zip(&recorded.stations) {
+            assert_eq!(a.offered, b.offered);
+            assert_eq!(a.served, b.served);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
+            assert_eq!(a.queue_area_s.to_bits(), b.queue_area_s.to_bits());
+            assert_eq!(a.max_queue, b.max_queue);
+        }
+        let report = rec.report();
+        assert_eq!(report.events, recorded.events, "recorder missed events");
+    });
+}
+
+// ---- arena stress: slot recycling under sustained load ---------------------
+
+#[test]
+fn event_queue_arena_stays_bounded_under_steady_churn() {
+    // push/pop churn with bounded in-flight count must not grow the
+    // arena: the free list recycles slots (this is the allocation-churn
+    // claim the rewrite makes)
+    let mut q: EventQueue<u64> = EventQueue::with_capacity(64);
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut t = 0.0;
+    for i in 0..10_000u64 {
+        t += rng.exponential(1.0);
+        q.push(t, i);
+        if q.len() > 32 {
+            while q.len() > 16 {
+                q.pop();
+            }
+        }
+    }
+    assert!(
+        q.arena_len() <= 64,
+        "arena grew to {} slots with at most 33 in flight",
+        q.arena_len()
+    );
+}
