@@ -1,5 +1,7 @@
 //! Sim-kernel campaign throughput: cells/second for a fixed 3×3×2 grid,
-//! plus raw kernel events/second on a canonical M/M/1 workload.
+//! raw kernel events/second on a canonical M/M/1 workload, and a
+//! fleet-scale grid timed exhaustively vs clustered (tolerance 0.05) —
+//! the committed trajectory pins the cluster-and-extrapolate speedup.
 //!
 //! This is the perf-trajectory anchor for the shared DES kernel: every
 //! cell is a full discrete-event simulation (three stations, fan-out,
@@ -56,6 +58,43 @@ fn fixed_grid(seed: u64) -> Campaign {
         )
 }
 
+/// A fleet-shaped grid: 3 variants × `n_loads` near-duplicate device
+/// loads × 2 datasets. The loads differ by a fraction of a percent in
+/// rate — exactly the shape cluster-and-extrapolate is built for, so
+/// the clustered leg collapses the load axis to one representative per
+/// (variant, dataset) column.
+fn fleet_grid(seed: u64, n_loads: usize) -> Campaign {
+    let mut campaign = Campaign::new("bench-fleet", seed)
+        .variant(VariantConfig::blocking_write())
+        .variant(VariantConfig::no_blocking_write())
+        .variant(VariantConfig::cpu_limited())
+        .dataset(
+            "fleet-a",
+            DataSetSpec {
+                payloads: 8,
+                records_per_subsystem: 4,
+                bad_rate: 0.0,
+                seed: 0,
+            },
+        )
+        .dataset(
+            "fleet-b",
+            DataSetSpec {
+                payloads: 8,
+                records_per_subsystem: 6,
+                bad_rate: 0.01,
+                seed: 0,
+            },
+        );
+    for i in 0..n_loads {
+        campaign = campaign.load(
+            &format!("dev-{i:03}"),
+            LoadPattern::steady(24.0, 1.6 + i as f64 * 0.0004),
+        );
+    }
+    campaign
+}
+
 /// Time a bare `Tandem::run` over a pre-sampled M/M/1 at ρ = 0.9 —
 /// the same canonical workload `validate --suite perf` profiles —
 /// and return events/second (2 kernel events per arrival).
@@ -109,6 +148,38 @@ fn main() {
     let events_per_s = raw_kernel_events_per_s(kernel_n, warmup, iters);
     println!("raw kernel: {events_per_s:.0} events/s (M/M/1 rho=0.9, n={kernel_n})");
 
+    // fleet leg: the same kernel on a fleet-shaped grid, exhaustive vs
+    // clustered — the committed ratio is the cluster-and-extrapolate
+    // speedup the trajectory pins
+    let n_loads = if quick { 24 } else { 100 };
+    let fleet = fleet_grid(0xF1EE7, n_loads);
+    let fleet_cells = fleet.n_cells() as u64;
+    let (ex_result, ex_report) =
+        bench::run("sim/fleet-exhaustive", warmup, iters, || runner.run(&fleet));
+    assert_eq!(ex_report.cells.len() as u64, fleet_cells);
+    let ex_cells_per_s = bench::throughput(fleet_cells, &ex_result);
+    println!(
+        "fleet exhaustive: {fleet_cells} cells in {:.3}s mean -> {:.1} cells/s",
+        ex_result.mean_s, ex_cells_per_s
+    );
+
+    let cl_runner = CampaignRunner::new(threads).with_cluster_tolerance(0.05);
+    let (cl_result, cl_report) =
+        bench::run("sim/fleet-clustered", warmup, iters, || cl_runner.run(&fleet));
+    assert_eq!(cl_report.cells.len() as u64, fleet_cells);
+    let summary = cl_report
+        .clustering
+        .expect("clustered fleet run must emit a cluster summary");
+    let cl_cells_per_s = bench::throughput(fleet_cells, &cl_result);
+    println!(
+        "fleet clustered: {fleet_cells} cells via {} representatives in {:.3}s mean \
+         -> {:.1} cells/s ({:.0}x)",
+        summary.clusters.len(),
+        cl_result.mean_s,
+        cl_cells_per_s,
+        cl_cells_per_s / ex_cells_per_s
+    );
+
     let label = std::env::var("PLANTD_BENCH_LABEL").unwrap_or_else(|_| "local".into());
     let host = std::env::var("PLANTD_BENCH_HOST").unwrap_or_else(|_| "local".into());
     let unix_s = SystemTime::now()
@@ -132,4 +203,32 @@ fn main() {
     let path = bench::trajectory_path("BENCH_sim.json");
     bench::append_entry(&path, "sim_campaign", entry).expect("append BENCH_sim.json entry");
     println!("appended entry '{label}' to {}", path.display());
+
+    for (suffix, res, cps, extra) in [
+        ("fleet-exhaustive", &ex_result, ex_cells_per_s, None),
+        (
+            "fleet-clustered",
+            &cl_result,
+            cl_cells_per_s,
+            Some(summary.clusters.len() as f64),
+        ),
+    ] {
+        let mut metrics = vec![
+            ("cells", fleet_cells as f64),
+            ("threads", threads as f64),
+            ("iters", iters as f64),
+            ("grid_mean_s", res.mean_s),
+            ("grid_min_s", res.min_s),
+            ("cells_per_s", cps),
+            ("events_per_s", events_per_s),
+        ];
+        if let Some(n_clusters) = extra {
+            metrics.push(("n_clusters", n_clusters));
+        }
+        let fleet_label = format!("{label}-{suffix}");
+        let entry = bench::entry(&fleet_label, unix_s, &host, metrics);
+        bench::append_entry(&path, "sim_campaign", entry)
+            .expect("append fleet BENCH_sim.json entry");
+        println!("appended entry '{fleet_label}' to {}", path.display());
+    }
 }

@@ -96,6 +96,19 @@ pub(crate) fn run_cell(
     members: &[Vec<MemberInfo>],
     prices: &PriceBook,
 ) -> CellResult {
+    run_cell_full(spec, dataset, members, prices).0
+}
+
+/// [`run_cell`] plus the raw per-member end-to-end latency samples (in
+/// completion order) — cluster representatives keep them so member cells
+/// can be extrapolated as rescaled empirical distributions
+/// ([`super::cluster`]).
+pub(crate) fn run_cell_full(
+    spec: &CellSpec,
+    dataset: &DataSet,
+    members: &[Vec<MemberInfo>],
+    prices: &PriceBook,
+) -> (CellResult, Vec<f64>) {
     let cfg = &spec.variant;
     let mut rng = Rng::new(spec.seed);
     let sends = spec.load.pattern.send_times();
@@ -272,7 +285,7 @@ pub(crate) fn run_cell(
         f64::NAN
     };
 
-    CellResult {
+    let result = CellResult {
         variant: cfg.name.to_string(),
         load: spec.load.name.clone(),
         dataset: spec.dataset_name.clone(),
@@ -292,5 +305,7 @@ pub(crate) fn run_cell(
         cost_per_record_usd,
         spans_collected,
         metered_cpu_s,
-    }
+        provenance: None,
+    };
+    (result, latencies)
 }

@@ -1,0 +1,552 @@
+//! Cluster-and-extrapolate: fleet-scale campaigns without fleet-scale
+//! simulation.
+//!
+//! Realistic campaign grids are large and *highly redundant*: a fleet of
+//! a million devices differs cell-to-cell by a fraction of a percent of
+//! arrival rate or payload size, and exhaustively simulating every cell
+//! re-derives nearly identical queueing behaviour a million times. This
+//! module implements the Parsimon-style decomposition (ROADMAP item 1):
+//!
+//! 1. **Featurize** every [`CellSpec`] into a fixed-dimension numeric
+//!    vector ([`featurize`], dimensions named by [`FEATURE_NAMES`]):
+//!    arrival-rate level and shape, the variant's per-stage service
+//!    profile, dataset size/schema, and topology depth.
+//! 2. **Cluster** cells greedily under a user-set relative feature
+//!    distance tolerance ([`cluster_greedy`] — Parsimon's greedy
+//!    representative-link scheme: each cell joins the first existing
+//!    cluster whose *representative* is within tolerance, else founds a
+//!    new cluster).
+//! 3. **Simulate** only each cluster's representative through the
+//!    ordinary exhaustive `run_cell` path.
+//! 4. **Redistribute** the representative's result to member cells as a
+//!    rescaled empirical distribution ([`super::edist::EDist`]), with
+//!    structural counts (zips/files/rows) recomputed *exactly* per
+//!    member and every extrapolated metric annotated with a
+//!    conservative relative [`error_bound`].
+//!
+//! Tolerance `0` is the exact degenerate case: every cell founds its own
+//! cluster (even bitwise-identical feature vectors are not merged,
+//! because cells with identical features still carry distinct seeds),
+//! nothing is extrapolated, and the report is byte-identical to the
+//! exhaustive run.
+//!
+//! ## Error model
+//!
+//! The DES itself is held to within [`BASE_REL_TOL`] of closed form by
+//! `validate --suite queueing` (docs/VALIDATION.md). Extrapolation adds
+//! error that grows with the feature distance `d` and — because waiting
+//! time has elasticity ~ρ/(1−ρ) in offered load — with utilization. The
+//! reported per-cell bound is
+//! `BASE_REL_TOL + 2·d·(1 + u/(1−u))` with `u` clamped at 0.95, which
+//! the M/M/c oracle test (`tests/campaign_cluster.rs`) verifies is
+//! conservative against closed form. See docs/CAMPAIGNS.md for when
+//! *not* to cluster.
+
+use crate::cost::PriceBook;
+use crate::datagen::DataSet;
+use crate::pipeline::{EtlStage, WriteMode};
+
+use super::cell::{self, MemberInfo};
+use super::edist::EDist;
+use super::report::{CellProvenance, CellResult};
+use super::{Campaign, CellSpec};
+
+/// The relative tolerance the validation suite holds the DES to against
+/// the analytic oracle — the error floor even for an exactly simulated
+/// cell (docs/VALIDATION.md).
+pub const BASE_REL_TOL: f64 = 0.02;
+
+/// Names of the feature-vector dimensions produced by [`featurize`],
+/// in order.
+pub const FEATURE_NAMES: [&str; 12] = [
+    "load_total_records",
+    "load_duration_s",
+    "load_mean_rps",
+    "load_peak_rps",
+    "svc_unzipper_s",
+    "svc_v2x_s",
+    "svc_etl_s",
+    "svc_blocking_put_s",
+    "dataset_payloads",
+    "dataset_records_per_subsystem",
+    "dataset_bad_rate",
+    "topology_depth",
+];
+
+/// One cluster: the grid index of the cell that was actually simulated,
+/// plus every member cell (ascending grid order, representative
+/// included).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cluster {
+    /// Grid index of the simulated representative.
+    pub representative: usize,
+    /// Grid indices of all member cells (includes the representative).
+    pub members: Vec<usize>,
+}
+
+/// Per-cell cluster assignment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// Cluster id (index into [`Clustering::clusters`]).
+    pub cluster: usize,
+    /// Feature distance to the cluster's representative (0 for the
+    /// representative itself).
+    pub distance: f64,
+}
+
+/// The output of [`cluster_greedy`]: a total, deterministic assignment
+/// of every cell to exactly one cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Clustering {
+    /// The tolerance the clustering was built with.
+    pub tolerance: f64,
+    /// Clusters in founding order (representatives ascend).
+    pub clusters: Vec<Cluster>,
+    /// Index-aligned assignment for every input cell.
+    pub assignment: Vec<Assignment>,
+}
+
+impl Clustering {
+    /// Number of clusters (= cells that will actually be simulated).
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// True when every cell is its own representative (the exact
+    /// degenerate case — nothing is extrapolated).
+    pub fn is_identity(&self) -> bool {
+        self.clusters.len() == self.assignment.len()
+    }
+}
+
+/// Relative L∞ distance between two feature vectors: the worst
+/// per-dimension relative difference `|a−b| / max(|a|,|b|)`, with a
+/// dimension where both sides are exactly zero contributing nothing.
+/// Symmetric, zero iff the vectors are equal, and scale-free — a 5%
+/// tolerance means "no feature differs by more than 5%".
+pub fn distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "feature vectors must share a dimension");
+    let mut d = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let scale = x.abs().max(y.abs());
+        if scale > 0.0 {
+            d = d.max((x - y).abs() / scale);
+        }
+    }
+    d
+}
+
+/// Greedy representative-link clustering (Parsimon's scheme).
+///
+/// Cells are visited in index order. Each cell joins the *first*
+/// existing cluster whose representative is within `tolerance` of it
+/// (members are compared to representatives only — never to each other,
+/// so the distance of every member to its simulated stand-in is bounded
+/// by construction); otherwise it founds a new cluster with itself as
+/// representative. The scan order makes the result deterministic and
+/// total: same features + same tolerance ⇒ identical clustering, and
+/// every cell lands in exactly one cluster.
+///
+/// A non-positive (or NaN) tolerance yields the identity clustering —
+/// deliberately *not* merging even bitwise-equal feature vectors,
+/// because equal features do not imply equal cells (seeds differ) and
+/// tolerance 0 promises byte-identical reports.
+pub fn cluster_greedy(features: &[Vec<f64>], tolerance: f64) -> Clustering {
+    let mut clusters: Vec<Cluster> = Vec::new();
+    let mut assignment: Vec<Assignment> = Vec::with_capacity(features.len());
+    for (i, f) in features.iter().enumerate() {
+        let mut joined = None;
+        if tolerance > 0.0 {
+            for (ci, c) in clusters.iter().enumerate() {
+                let d = distance(f, &features[c.representative]);
+                if d <= tolerance {
+                    joined = Some((ci, d));
+                    break;
+                }
+            }
+        }
+        match joined {
+            Some((ci, d)) => {
+                clusters[ci].members.push(i);
+                assignment.push(Assignment {
+                    cluster: ci,
+                    distance: d,
+                });
+            }
+            None => {
+                let ci = clusters.len();
+                clusters.push(Cluster {
+                    representative: i,
+                    members: vec![i],
+                });
+                assignment.push(Assignment {
+                    cluster: ci,
+                    distance: 0.0,
+                });
+            }
+        }
+    }
+    Clustering {
+        tolerance,
+        clusters,
+        assignment,
+    }
+}
+
+/// Conservative relative error bound reported for an extrapolated
+/// metric: the DES floor plus a term linear in the feature distance and
+/// amplified by queueing sensitivity `1 + u/(1−u)` (utilization clamped
+/// at 0.95 so the bound stays finite for overloaded cells — where it is
+/// honest about being very wide).
+pub fn error_bound(distance: f64, utilization: f64) -> f64 {
+    let u = utilization.clamp(0.0, 0.95);
+    BASE_REL_TOL + 2.0 * distance * (1.0 + u / (1.0 - u))
+}
+
+/// First-order rescale of a measured queueing delay from the
+/// representative's utilization to a member's: waiting time behaves as
+/// `ρ/(1−ρ)` to first order, so
+/// `Wq_member ≈ Wq_rep · (ρ_m/ρ_r) · (1−ρ_r)/(1−ρ_m)`.
+///
+/// For M/M/1 this is *exact* (`Wq = ρ/(μ(1−ρ))`); for M/M/c and the
+/// campaign tandem the residual is second order in the feature distance
+/// and covered by [`error_bound`]. Utilizations are clamped to `[0,
+/// 0.99]` to keep the factor finite.
+pub fn scale_wait(wq_rep: f64, rho_rep: f64, rho_member: f64) -> f64 {
+    let r = rho_rep.clamp(0.0, 0.99);
+    let m = rho_member.clamp(0.0, 0.99);
+    if r <= 0.0 {
+        return wq_rep;
+    }
+    wq_rep * (m / r) * ((1.0 - r) / (1.0 - m))
+}
+
+/// Featurize one cell of a campaign grid. Pure and cheap: nothing is
+/// simulated and no dataset is inflated — dataset dimensions come from
+/// the spec, and the nominal member size for the blocking-put feature
+/// uses the datagen scale of ~64 encoded bytes per subsystem record.
+pub fn featurize(campaign: &Campaign, spec: &CellSpec) -> Vec<f64> {
+    let p = &spec.load.pattern;
+    let total = p.total_records() as f64;
+    let dur = p.total_duration_s();
+    let mean_rps = if dur > 0.0 { total / dur } else { 0.0 };
+    let peak_rps = p
+        .segments
+        .iter()
+        .map(|s| s.start_rps.max(s.end_rps))
+        .fold(0.0, f64::max);
+    let cfg = &spec.variant;
+    let ds = &campaign.datasets[spec.dataset_index].spec;
+    let nominal_member_bytes = ds.records_per_subsystem * 64;
+    let put_s = match cfg.write_mode {
+        WriteMode::Blocking => cfg.blob_latency.put_latency_s(nominal_member_bytes),
+        WriteMode::NonBlocking => 0.0,
+    };
+    vec![
+        total,
+        dur,
+        mean_rps,
+        peak_rps,
+        cfg.unzipper_service_s,
+        cfg.v2x_parse_s * cfg.v2x_throttle,
+        cfg.etl_service_s,
+        put_s,
+        ds.payloads as f64,
+        ds.records_per_subsystem as f64,
+        ds.bad_rate,
+        3.0, // tandem depth: unzipper → v2x → etl
+    ]
+}
+
+/// Featurize every cell of a grid, index-aligned with `specs`.
+pub fn featurize_campaign(campaign: &Campaign, specs: &[CellSpec]) -> Vec<Vec<f64>> {
+    specs.iter().map(|s| featurize(campaign, s)).collect()
+}
+
+/// Analytic (jitter-free) workload profile of a cell: exact structural
+/// counts plus the mean-jitter per-station busy seconds the DES would
+/// accrue. O(sends × members) arithmetic — the cheap stand-in for a
+/// simulation that extrapolation rests on.
+#[derive(Debug, Clone)]
+pub(crate) struct CellProfile {
+    pub(crate) zips: u64,
+    pub(crate) files: u64,
+    pub(crate) rows: u64,
+    pub(crate) first_send: f64,
+    /// Offered window: last send − first send.
+    pub(crate) span_s: f64,
+    /// Expected busy seconds per station (unzipper, v2x, etl) at the
+    /// mean (1.0) jitter multiplier.
+    pub(crate) busy_s: [f64; 3],
+}
+
+impl CellProfile {
+    pub(crate) fn total_busy_s(&self) -> f64 {
+        self.busy_s.iter().sum()
+    }
+
+    /// Bottleneck-station utilization proxy: worst busy/span ratio
+    /// across the three single-server stations. May exceed 1 for
+    /// overloaded cells; consumers clamp as appropriate.
+    pub(crate) fn utilization(&self) -> f64 {
+        if self.span_s <= 0.0 {
+            return 0.0;
+        }
+        let bottleneck = self.busy_s.iter().fold(0.0f64, |a, &b| a.max(b));
+        bottleneck / self.span_s
+    }
+}
+
+/// Compute a cell's [`CellProfile`] from its spec and the dataset's
+/// decoded member facts — the same payload-cycling (`i % payloads`) and
+/// per-member service model as the exhaustive `run_cell`, minus jitter.
+pub(crate) fn profile_cell(spec: &CellSpec, members: &[Vec<MemberInfo>]) -> CellProfile {
+    let cfg = &spec.variant;
+    let sends = spec.load.pattern.send_times();
+    let mut files = 0u64;
+    let mut rows = 0u64;
+    let mut busy = [0.0f64; 3];
+    for (i, _) in sends.iter().enumerate() {
+        let pm = &members[i % members.len()];
+        busy[0] += cfg.unzipper_service_s;
+        for m in pm {
+            let io_s = match cfg.write_mode {
+                WriteMode::Blocking => cfg.blob_latency.put_latency_s(m.bytes),
+                WriteMode::NonBlocking => 0.0,
+            };
+            busy[1] += cfg.v2x_parse_s * cfg.v2x_throttle + io_s;
+            busy[2] += cfg.etl_service_s
+                + EtlStage::INSERT_LATENCY.per_batch_s
+                + EtlStage::INSERT_LATENCY.per_row_s * m.rows as f64;
+            files += 1;
+            rows += m.rows as u64;
+        }
+    }
+    let first_send = sends.first().copied().unwrap_or(0.0);
+    let last_send = sends.last().copied().unwrap_or(0.0);
+    CellProfile {
+        zips: sends.len() as u64,
+        files,
+        rows,
+        first_send,
+        span_s: (last_send - first_send).max(0.0),
+        busy_s: busy,
+    }
+}
+
+/// Everything the redistribution step needs from a simulated
+/// representative: its exact result, its end-to-end latency
+/// distribution, and its analytic profile.
+pub(crate) struct RepData {
+    pub(crate) result: CellResult,
+    pub(crate) latencies: EDist,
+    pub(crate) profile: CellProfile,
+}
+
+/// Simulate a cluster representative through the ordinary exhaustive
+/// cell path, keeping the raw latency samples for redistribution.
+pub(crate) fn run_representative(
+    spec: &CellSpec,
+    dataset: &DataSet,
+    members: &[Vec<MemberInfo>],
+    prices: &PriceBook,
+) -> RepData {
+    let (result, latencies) = cell::run_cell_full(spec, dataset, members, prices);
+    RepData {
+        result,
+        latencies: EDist::from_samples(&latencies),
+        profile: profile_cell(spec, members),
+    }
+}
+
+/// The latency rescale factor from a representative's profile to a
+/// member's: the per-job service ratio times the first-order queueing
+/// amplification `(1−u_r)/(1−u_m)` (utilizations clamped at 0.9 —
+/// beyond that the backlog term already dominates the busy ratio).
+fn latency_scale(rep: &CellProfile, member: &CellProfile) -> f64 {
+    let per_job_rep = rep.total_busy_s() / rep.files.max(1) as f64;
+    let per_job_member = member.total_busy_s() / member.files.max(1) as f64;
+    if per_job_rep <= 0.0 {
+        return 1.0;
+    }
+    let u_rep = rep.utilization().min(0.9);
+    let u_member = member.utilization().min(0.9);
+    (per_job_member / per_job_rep) * ((1.0 - u_rep) / (1.0 - u_member))
+}
+
+/// Redistribute a representative's result to one member cell.
+///
+/// Structural counts (zips/files/rows/spans) and rate-card costs are
+/// recomputed *exactly* from the member's own spec — only time-behaviour
+/// is extrapolated: the latency distribution is the representative's
+/// [`EDist`] scaled by [`latency_scale`], the post-span drain tail is
+/// rescaled likewise, and busy-seconds scale by the analytic busy
+/// ratio. The result carries [`CellProvenance::Extrapolated`] with the
+/// cluster id, representative index/distance, and the reported
+/// [`error_bound`].
+pub(crate) fn extrapolate_cell(
+    rep: &RepData,
+    rep_index: usize,
+    cluster: usize,
+    spec: &CellSpec,
+    profile: &CellProfile,
+    dist: f64,
+    prices: &PriceBook,
+) -> CellResult {
+    let cfg = &spec.variant;
+    let f = latency_scale(&rep.profile, profile);
+    let lat = if profile.files == 0 {
+        EDist::empty() // an empty member reports NaN latencies, like run_cell
+    } else {
+        rep.latencies.scaled(f)
+    };
+
+    // time behaviour: member's own offered span, plus the representative's
+    // drain tail rescaled by the latency factor
+    let rep_tail = (rep.result.duration_s - rep.profile.span_s).max(0.0);
+    let duration_s = (profile.span_s + rep_tail * f).max(1e-9);
+    let window = (profile.first_send + duration_s).max(1e-9);
+
+    let zips = profile.zips;
+    let throughput_rps = zips as f64 / duration_s;
+    let cost_per_hr_usd = cfg.cost_per_hr(prices);
+    let puts = zips + profile.files; // raw zip put + one put per member
+    let run_cost_usd =
+        cost_per_hr_usd * window / 3600.0 + puts as f64 * prices.blob_put_per_1k / 1000.0;
+    let cost_per_record_usd = if zips > 0 {
+        run_cost_usd / zips as f64
+    } else {
+        f64::NAN
+    };
+    let busy_ratio = if rep.profile.total_busy_s() > 0.0 {
+        profile.total_busy_s() / rep.profile.total_busy_s()
+    } else {
+        1.0
+    };
+    let utilization = profile.utilization().max(rep.profile.utilization());
+
+    CellResult {
+        variant: cfg.name.to_string(),
+        load: spec.load.name.clone(),
+        dataset: spec.dataset_name.clone(),
+        seed: spec.seed,
+        zips,
+        files: profile.files,
+        rows: profile.rows,
+        duration_s,
+        throughput_rps,
+        latency_mean_s: lat.mean(),
+        latency_p50_s: lat.quantile(0.5),
+        latency_p95_s: lat.quantile(0.95),
+        latency_p99_s: lat.quantile(0.99),
+        cost_per_hr_usd,
+        run_cost_usd,
+        annual_cost_usd: cost_per_hr_usd * 8760.0,
+        cost_per_record_usd,
+        spans_collected: zips + 2 * profile.files,
+        metered_cpu_s: rep.result.metered_cpu_s * busy_ratio,
+        provenance: Some(CellProvenance::Extrapolated {
+            cluster,
+            representative: rep_index,
+            distance: dist,
+            error_bound_rel: error_bound(dist, utilization),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::DataSetSpec;
+    use crate::loadgen::LoadPattern;
+    use crate::pipeline::VariantConfig;
+
+    #[test]
+    fn distance_is_relative_symmetric_and_zero_on_equal() {
+        let a = vec![1.0, 0.0, 2.0];
+        let b = vec![1.1, 0.0, 2.0];
+        assert_eq!(distance(&a, &a), 0.0);
+        let d = distance(&a, &b);
+        assert_eq!(d.to_bits(), distance(&b, &a).to_bits());
+        // |1.0 - 1.1| / 1.1
+        assert!((d - 0.1 / 1.1).abs() < 1e-12, "d = {d}");
+        // a zero dimension against a nonzero one is maximally distant
+        assert_eq!(distance(&[0.0], &[5.0]), 1.0);
+    }
+
+    #[test]
+    fn tolerance_zero_is_the_identity_even_for_duplicate_features() {
+        let features = vec![vec![1.0, 2.0], vec![1.0, 2.0], vec![3.0, 4.0]];
+        let c = cluster_greedy(&features, 0.0);
+        assert!(c.is_identity());
+        assert_eq!(c.n_clusters(), 3);
+        for (i, a) in c.assignment.iter().enumerate() {
+            assert_eq!(c.clusters[a.cluster].representative, i);
+            assert_eq!(a.distance, 0.0);
+        }
+    }
+
+    #[test]
+    fn members_link_to_representatives_not_to_each_other() {
+        // chain a—b—c where each step is within tolerance but the ends
+        // are not: b joins a's cluster, then c is compared against the
+        // *representative* a (too far) and founds its own cluster —
+        // which is exactly what bounds every member's distance
+        let features = vec![vec![1.00], vec![1.04], vec![1.08]];
+        let c = cluster_greedy(&features, 0.05);
+        assert_eq!(c.n_clusters(), 2);
+        assert_eq!(c.clusters[0].members, vec![0, 1]);
+        assert_eq!(c.clusters[1].members, vec![2]);
+        assert!(c.assignment[1].distance <= 0.05);
+    }
+
+    #[test]
+    fn error_bound_grows_with_distance_and_utilization() {
+        assert_eq!(error_bound(0.0, 0.0), BASE_REL_TOL);
+        assert!(error_bound(0.05, 0.5) > error_bound(0.01, 0.5));
+        assert!(error_bound(0.05, 0.9) > error_bound(0.05, 0.5));
+        // clamped: finite even in overload
+        assert!(error_bound(0.05, 2.0).is_finite());
+    }
+
+    #[test]
+    fn scale_wait_is_exact_for_mm1() {
+        // M/M/1 with mu = 1: Wq(rho) = rho / (1 - rho)
+        let wq = |rho: f64| rho / (1.0 - rho);
+        let got = scale_wait(wq(0.5), 0.5, 0.8);
+        assert!((got - wq(0.8)).abs() < 1e-12, "got {got}, want {}", wq(0.8));
+        let down = scale_wait(wq(0.8), 0.8, 0.5);
+        assert!((down - wq(0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn featurization_separates_variants_loads_and_datasets() {
+        let campaign = Campaign::new("f", 1)
+            .variant(VariantConfig::blocking_write())
+            .variant(VariantConfig::no_blocking_write())
+            .load("a", LoadPattern::steady(10.0, 2.0))
+            .load("b", LoadPattern::steady(10.0, 2.01))
+            .dataset(
+                "tiny",
+                DataSetSpec {
+                    payloads: 2,
+                    records_per_subsystem: 2,
+                    bad_rate: 0.0,
+                    seed: 0,
+                },
+            );
+        let specs = campaign.cells();
+        let features = featurize_campaign(&campaign, &specs);
+        assert_eq!(features.len(), 4);
+        for f in &features {
+            assert_eq!(f.len(), FEATURE_NAMES.len());
+        }
+        // near-duplicate loads under the same variant sit close...
+        let d_loads = distance(&features[0], &features[1]);
+        assert!(d_loads < 0.02, "near-duplicate loads too far: {d_loads}");
+        // ...but different variants are far apart (service profile and
+        // blocking-put dimensions move a lot)
+        let d_variants = distance(&features[0], &features[2]);
+        assert!(d_variants > 0.2, "variants too close: {d_variants}");
+    }
+}

@@ -1,0 +1,143 @@
+//! Empirical distributions for cluster-and-extrapolate campaigns.
+//!
+//! When a campaign simulates only one representative cell per cluster
+//! (see [`super::cluster`]), the member cells do not get scalar copies
+//! of the representative's latency statistics — they get the
+//! representative's *empirical distribution*, rescaled by the member's
+//! feature deltas, and their statistics are then read off that rescaled
+//! distribution. This is Parsimon's `edist` idea: extrapolation operates
+//! on whole sample sets, so quantiles stay mutually consistent (a
+//! rescaled p99 can never undercut a rescaled p50) and any future
+//! percentile can be answered without re-simulating.
+//!
+//! The type is deliberately tiny: a sorted sample vector with `mean`,
+//! `quantile`, and a positive-factor `scaled` view. All operations are
+//! deterministic pure functions of the samples, which keeps clustered
+//! campaign reports byte-identical at any thread count.
+
+use crate::util::stats;
+
+/// An empirical distribution: a set of samples held in sorted order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EDist {
+    sorted: Vec<f64>,
+}
+
+impl EDist {
+    /// Build from samples (any order). Samples are sorted by total order,
+    /// so construction is deterministic even for equal values.
+    pub fn from_samples(samples: &[f64]) -> EDist {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        EDist { sorted }
+    }
+
+    /// A distribution with no samples (all statistics are NaN).
+    pub fn empty() -> EDist {
+        EDist { sorted: Vec::new() }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True when there are no samples.
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// The sorted samples.
+    pub fn samples(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// Sample mean; NaN for an empty distribution (matching
+    /// [`stats::mean`], so extrapolated cells report empty-cell metrics
+    /// exactly like exhaustively simulated ones).
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.sorted)
+    }
+
+    /// Linear-interpolated quantile (`q` in `[0, 1]`); NaN when empty.
+    /// Same estimator as [`stats::quantile`], which the exhaustive cell
+    /// path uses on its raw latency vector.
+    pub fn quantile(&self, q: f64) -> f64 {
+        stats::quantile_sorted(&self.sorted, q)
+    }
+
+    /// The distribution with every sample multiplied by `factor`
+    /// (`factor >= 0`, so sortedness is preserved). This is the
+    /// redistribution primitive: a member cell's latency distribution is
+    /// the representative's, scaled by the member's service/queueing
+    /// deltas.
+    pub fn scaled(&self, factor: f64) -> EDist {
+        assert!(
+            factor >= 0.0,
+            "EDist::scaled wants a non-negative factor, got {factor}"
+        );
+        EDist {
+            sorted: self.sorted.iter().map(|&x| x * factor).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_sorts_and_preserves_count() {
+        let d = EDist::from_samples(&[3.0, 1.0, 2.0, 2.0]);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.samples(), &[1.0, 2.0, 2.0, 3.0]);
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn stats_match_the_exhaustive_path_estimators() {
+        // the exhaustive cell path computes stats::mean/quantile on an
+        // unsorted latency vector; EDist must agree bit-for-bit
+        let raw = [0.9, 0.1, 0.5, 0.7, 0.3, 0.2, 0.8];
+        let d = EDist::from_samples(&raw);
+        assert_eq!(d.mean().to_bits(), stats::mean(&raw).to_bits());
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                d.quantile(q).to_bits(),
+                stats::quantile(&raw, q).to_bits(),
+                "q = {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_distribution_reports_nan() {
+        let d = EDist::empty();
+        assert!(d.is_empty());
+        assert!(d.mean().is_nan());
+        assert!(d.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn scaling_scales_mean_and_quantiles() {
+        let d = EDist::from_samples(&[1.0, 2.0, 4.0]);
+        let s = d.scaled(2.5);
+        assert_eq!(s.samples(), &[2.5, 5.0, 10.0]);
+        assert!((s.mean() - 2.5 * d.mean()).abs() < 1e-12);
+        assert!((s.quantile(0.5) - 2.5 * d.quantile(0.5)).abs() < 1e-12);
+        // quantile consistency survives scaling by construction
+        assert!(s.quantile(0.99) >= s.quantile(0.5));
+    }
+
+    #[test]
+    fn zero_scale_collapses_to_zero() {
+        let d = EDist::from_samples(&[1.0, 2.0]).scaled(0.0);
+        assert_eq!(d.samples(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_scale_panics() {
+        let _ = EDist::from_samples(&[1.0]).scaled(-1.0);
+    }
+}

@@ -8,12 +8,17 @@
 //! executes every cell of that grid on a thread pool and aggregates a
 //! ranked [`CampaignReport`].
 //!
-//! The module splits along its three concerns:
+//! The module splits along its concerns:
 //!
 //! - `mod.rs` (this file) — the grid: [`Campaign`], [`CellSpec`], and the
 //!   thread-pooled [`CampaignRunner`];
 //! - `cell` (private) — single-cell execution on the shared
 //!   [`crate::sim`] discrete-event kernel;
+//! - [`cluster`] — fleet-scale cluster-and-extrapolate: featurize cells,
+//!   simulate only each cluster's representative, redistribute with an
+//!   error bound;
+//! - [`edist`] — the empirical-distribution primitive redistribution
+//!   rests on;
 //! - `report` — [`CellResult`] / [`CampaignReport`] data and rendering.
 //!
 //! ## Determinism
@@ -41,12 +46,14 @@
 //! and `docs/SIMULATION.md` for the underlying kernel.
 
 mod cell;
+pub mod cluster;
+pub mod edist;
 mod report;
 
-pub use report::{CampaignReport, CellResult};
+pub use report::{CampaignReport, CellProvenance, CellResult, ClusterRow, ClusterSummary};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::cost::PriceBook;
 use crate::datagen::{DataSet, DataSetSpec};
@@ -117,14 +124,18 @@ pub struct Campaign {
 }
 
 /// One fully-specified cell of the campaign grid.
+///
+/// The variant and load are shared (`Arc`) with every other cell on the
+/// same grid row/column: enumerating a fleet-scale grid clones two
+/// pointers per cell, not a `VariantConfig`/`LoadPattern` per cell.
 #[derive(Debug, Clone)]
 pub struct CellSpec {
     /// Position in the flattened grid (row-major: variant, load, dataset).
     pub index: usize,
-    /// Pipeline variant for this cell.
-    pub variant: VariantConfig,
-    /// Load case for this cell.
-    pub load: LoadCase,
+    /// Pipeline variant for this cell (shared across the variant's row).
+    pub variant: Arc<VariantConfig>,
+    /// Load case for this cell (shared across the load's column).
+    pub load: Arc<LoadCase>,
     /// Dataset case index (into the campaign's pre-generated datasets).
     pub dataset_index: usize,
     /// Dataset display name.
@@ -226,15 +237,22 @@ impl Campaign {
 
     /// Flatten the grid into fully-specified cells, row-major
     /// (variant → load → dataset), each with its derived seed.
+    ///
+    /// Variants and loads are `Arc`-wrapped once per axis entry and
+    /// shared across the grid, so enumerating a million-cell fleet costs
+    /// a million small structs — not a million `VariantConfig` clones.
     pub fn cells(&self) -> Vec<CellSpec> {
+        let variants: Vec<Arc<VariantConfig>> =
+            self.variants.iter().cloned().map(Arc::new).collect();
+        let loads: Vec<Arc<LoadCase>> = self.loads.iter().cloned().map(Arc::new).collect();
         let mut out = Vec::with_capacity(self.n_cells());
-        for (vi, v) in self.variants.iter().enumerate() {
-            for (li, l) in self.loads.iter().enumerate() {
+        for (vi, v) in variants.iter().enumerate() {
+            for (li, l) in loads.iter().enumerate() {
                 for (di, d) in self.datasets.iter().enumerate() {
                     out.push(CellSpec {
                         index: out.len(),
-                        variant: v.clone(),
-                        load: l.clone(),
+                        variant: Arc::clone(v),
+                        load: Arc::clone(l),
                         dataset_index: di,
                         dataset_name: d.name.clone(),
                         seed: derive_seed(self.seed, [vi as u64, li as u64, di as u64]),
@@ -268,6 +286,13 @@ pub struct CampaignRunner {
     pub threads: usize,
     /// Price book used for all cost figures.
     pub prices: PriceBook,
+    /// `None` ⇒ exhaustive execution (every cell simulated).
+    /// `Some(t)` ⇒ cluster-and-extrapolate at feature-distance tolerance
+    /// `t` ([`cluster`]): only cluster representatives are simulated and
+    /// member results are redistributed with a per-cell error bound.
+    /// `Some(0.0)` is the exact degenerate case — identity clustering,
+    /// byte-identical to the exhaustive report.
+    pub cluster_tolerance: Option<f64>,
 }
 
 impl CampaignRunner {
@@ -276,6 +301,7 @@ impl CampaignRunner {
         CampaignRunner {
             threads: threads.max(1),
             prices: PriceBook::default(),
+            cluster_tolerance: None,
         }
     }
 
@@ -285,12 +311,29 @@ impl CampaignRunner {
         self
     }
 
-    /// Execute every cell of the grid and aggregate the report.
+    /// Enable cluster-and-extrapolate at the given feature-distance
+    /// tolerance (builder style). Tolerance 0 keeps the report
+    /// byte-identical to the exhaustive run.
+    pub fn with_cluster_tolerance(mut self, tolerance: f64) -> Self {
+        self.cluster_tolerance = Some(tolerance);
+        self
+    }
+
+    /// Execute the campaign and aggregate the report: exhaustively, or
+    /// clustered when [`CampaignRunner::cluster_tolerance`] is set.
     ///
-    /// Work distribution is an atomic cursor over the flattened grid;
-    /// results land in their grid slot, so the report is identical for
-    /// any thread count.
+    /// Work distribution is an atomic cursor over the simulated cells;
+    /// results land in their slot, so the report is identical for any
+    /// thread count.
     pub fn run(&self, campaign: &Campaign) -> CampaignReport {
+        match self.cluster_tolerance {
+            Some(tolerance) => self.run_clustered(campaign, tolerance),
+            None => self.run_exhaustive(campaign),
+        }
+    }
+
+    /// Exhaustive execution: simulate every cell of the grid.
+    fn run_exhaustive(&self, campaign: &Campaign) -> CampaignReport {
         let specs = campaign.cells();
         let datasets = campaign.build_datasets();
         // real inflation once per dataset (it is shared read-only across
@@ -329,6 +372,119 @@ impl CampaignRunner {
             campaign: campaign.name.clone(),
             seed: campaign.seed,
             cells,
+            clustering: None,
+        }
+    }
+
+    /// Clustered execution: featurize + greedily cluster the grid,
+    /// simulate only each cluster's representative (thread-pooled, same
+    /// atomic-cursor distribution as the exhaustive path), then
+    /// redistribute to members serially in grid order — pure arithmetic,
+    /// so the report stays byte-identical at any thread count.
+    fn run_clustered(&self, campaign: &Campaign, tolerance: f64) -> CampaignReport {
+        let specs = campaign.cells();
+        let datasets = campaign.build_datasets();
+        let members: Vec<Vec<Vec<cell::MemberInfo>>> =
+            datasets.iter().map(cell::decode_members).collect();
+        let features = cluster::featurize_campaign(campaign, &specs);
+        let clustering = cluster::cluster_greedy(&features, tolerance);
+        // tolerance 0 (or negative/NaN) is the exact degenerate case: no
+        // provenance, no summary — byte-identical to the exhaustive run.
+        // A positive tolerance always marks provenance, even if nothing
+        // happened to cluster.
+        let exact_mode = !(tolerance > 0.0);
+
+        // simulate the representatives only
+        let reps: Vec<usize> = clustering
+            .clusters
+            .iter()
+            .map(|c| c.representative)
+            .collect();
+        let n = reps.len();
+        let next = AtomicUsize::new(0);
+        let rep_data: Mutex<Vec<Option<cluster::RepData>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        let workers = self.threads.min(n.max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::SeqCst);
+                    if k >= n {
+                        break;
+                    }
+                    let spec = &specs[reps[k]];
+                    let data = cluster::run_representative(
+                        spec,
+                        &datasets[spec.dataset_index],
+                        &members[spec.dataset_index],
+                        &self.prices,
+                    );
+                    rep_data.lock().unwrap()[k] = Some(data);
+                });
+            }
+        });
+        let rep_data: Vec<cluster::RepData> = rep_data
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("every representative executed"))
+            .collect();
+
+        // redistribute to members, in grid order
+        let mut max_distance = vec![0.0f64; n];
+        let mut max_bound = vec![0.0f64; n];
+        let mut cells = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let a = &clustering.assignment[i];
+            let rd = &rep_data[a.cluster];
+            if clustering.clusters[a.cluster].representative == i {
+                let mut r = rd.result.clone();
+                r.provenance =
+                    (!exact_mode).then_some(CellProvenance::Exact { cluster: a.cluster });
+                cells.push(r);
+            } else {
+                let profile = cluster::profile_cell(spec, &members[spec.dataset_index]);
+                let r = cluster::extrapolate_cell(
+                    rd,
+                    clustering.clusters[a.cluster].representative,
+                    a.cluster,
+                    spec,
+                    &profile,
+                    a.distance,
+                    &self.prices,
+                );
+                if let Some(CellProvenance::Extrapolated {
+                    error_bound_rel, ..
+                }) = &r.provenance
+                {
+                    max_bound[a.cluster] = max_bound[a.cluster].max(*error_bound_rel);
+                }
+                max_distance[a.cluster] = max_distance[a.cluster].max(a.distance);
+                cells.push(r);
+            }
+        }
+
+        let clustering_summary = (!exact_mode).then(|| ClusterSummary {
+            tolerance,
+            clusters: clustering
+                .clusters
+                .iter()
+                .enumerate()
+                .map(|(id, c)| ClusterRow {
+                    id,
+                    representative_index: c.representative,
+                    representative: rep_data[id].result.label(),
+                    members: c.members.len() as u64,
+                    max_distance: max_distance[id],
+                    max_error_bound_rel: max_bound[id],
+                })
+                .collect(),
+        });
+        CampaignReport {
+            campaign: campaign.name.clone(),
+            seed: campaign.seed,
+            cells,
+            clustering: clustering_summary,
         }
     }
 }
@@ -520,6 +676,115 @@ mod tests {
             report.to_json().to_string_pretty(),
             again.to_json().to_string_pretty()
         );
+    }
+
+    #[test]
+    fn cells_share_variant_and_load_allocations() {
+        // the clone-churn fix: enumerating the grid Arc-shares each
+        // variant/load instead of cloning them per cell
+        let c = small_campaign(1);
+        let cells = c.cells();
+        // cells 0 and 1: same variant, different loads
+        assert!(Arc::ptr_eq(&cells[0].variant, &cells[1].variant));
+        assert!(!Arc::ptr_eq(&cells[0].load, &cells[1].load));
+        // cells 0 and 2: different variants, same load
+        assert!(!Arc::ptr_eq(&cells[0].variant, &cells[2].variant));
+        assert!(Arc::ptr_eq(&cells[0].load, &cells[2].load));
+    }
+
+    #[test]
+    fn tolerance_zero_clustered_run_is_byte_identical_to_exhaustive() {
+        let c = small_campaign(13);
+        let exhaustive = CampaignRunner::new(1).run(&c);
+        assert!(exhaustive.clustering.is_none());
+        for threads in [1, 3] {
+            let clustered = CampaignRunner::new(threads)
+                .with_cluster_tolerance(0.0)
+                .run(&c);
+            assert!(clustered.clustering.is_none());
+            assert_eq!(
+                clustered.to_json().to_string_pretty(),
+                exhaustive.to_json().to_string_pretty()
+            );
+            assert_eq!(clustered.render(), exhaustive.render());
+        }
+    }
+
+    #[test]
+    fn positive_tolerance_marks_every_cell_and_summarizes_clusters() {
+        // two near-duplicate loads cluster; the third is too far
+        let c = Campaign::new("fleet", 21)
+            .variant(VariantConfig::blocking_write())
+            .load("dev-a", LoadPattern::steady(30.0, 2.0))
+            .load("dev-b", LoadPattern::steady(30.0, 2.02))
+            .load("hot", LoadPattern::steady(30.0, 6.0))
+            .dataset("tiny", tiny_dataset());
+        let report = CampaignRunner::new(2)
+            .with_cluster_tolerance(0.05)
+            .run(&c);
+        let summary = report.clustering.as_ref().expect("summary present");
+        assert_eq!(summary.tolerance, 0.05);
+        assert_eq!(summary.clusters.len(), 2, "dev-a+dev-b cluster, hot alone");
+        assert_eq!(summary.clusters[0].members, 2);
+        let mut exact = 0;
+        let mut extrapolated = 0;
+        for cell in &report.cells {
+            match cell.provenance.as_ref().expect("every cell marked") {
+                CellProvenance::Exact { .. } => exact += 1,
+                CellProvenance::Extrapolated {
+                    distance,
+                    error_bound_rel,
+                    ..
+                } => {
+                    assert!(*distance <= 0.05);
+                    assert!(*error_bound_rel >= cluster::BASE_REL_TOL);
+                    extrapolated += 1;
+                }
+            }
+        }
+        assert_eq!((exact, extrapolated), (2, 1));
+        // same seed + same tolerance replays byte-identically at any
+        // thread count
+        let again = CampaignRunner::new(5)
+            .with_cluster_tolerance(0.05)
+            .run(&c);
+        assert_eq!(
+            report.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty()
+        );
+        // the render carries the cluster table
+        assert!(report.render().contains("simulated representatives"));
+    }
+
+    #[test]
+    fn extrapolated_cells_keep_exact_structure_and_rate_card() {
+        // structural counts and fixed costs are recomputed per member,
+        // not copied from the representative — compare against the
+        // exhaustive run of the same campaign
+        let c = Campaign::new("fleet", 33)
+            .variant(VariantConfig::blocking_write())
+            .load("dev-a", LoadPattern::steady(30.0, 2.0))
+            .load("dev-b", LoadPattern::steady(30.0, 2.03))
+            .dataset("tiny", tiny_dataset());
+        let clustered = CampaignRunner::new(2)
+            .with_cluster_tolerance(0.05)
+            .run(&c);
+        let exhaustive = CampaignRunner::new(2).run(&c);
+        assert!(clustered
+            .cells
+            .iter()
+            .any(|x| matches!(x.provenance, Some(CellProvenance::Extrapolated { .. }))));
+        for (cl, ex) in clustered.cells.iter().zip(&exhaustive.cells) {
+            assert_eq!(cl.zips, ex.zips);
+            assert_eq!(cl.files, ex.files);
+            assert_eq!(cl.rows, ex.rows);
+            assert_eq!(cl.spans_collected, ex.spans_collected);
+            assert_eq!(cl.seed, ex.seed, "members keep their own seeds");
+            assert_eq!(cl.cost_per_hr_usd.to_bits(), ex.cost_per_hr_usd.to_bits());
+            assert_eq!(cl.annual_cost_usd.to_bits(), ex.annual_cost_usd.to_bits());
+            assert!(cl.duration_s > 0.0 && cl.throughput_rps > 0.0);
+            assert!(cl.latency_p95_s >= cl.latency_p50_s);
+        }
     }
 
     #[test]

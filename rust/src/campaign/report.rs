@@ -6,6 +6,34 @@
 use crate::util::json::Json;
 use crate::util::table::{fnum, Table};
 
+/// How a cell's numbers were produced in a clustered campaign run
+/// (`cluster_tolerance > 0`; see [`super::cluster`]). Exhaustive runs —
+/// and tolerance-0 clustered runs, which are byte-identical to them —
+/// carry no provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellProvenance {
+    /// The cell was simulated exactly: it is its cluster's
+    /// representative.
+    Exact {
+        /// Cluster id this cell represents.
+        cluster: usize,
+    },
+    /// The cell's time-behaviour was extrapolated from its cluster's
+    /// representative (structural counts and rate-card costs are still
+    /// exact).
+    Extrapolated {
+        /// Cluster id the cell belongs to.
+        cluster: usize,
+        /// Grid index of the representative it was extrapolated from.
+        representative: usize,
+        /// Relative feature distance to the representative.
+        distance: f64,
+        /// Reported relative error bound for the extrapolated metrics
+        /// ([`super::cluster::error_bound`]).
+        error_bound_rel: f64,
+    },
+}
+
 /// Everything measured for one executed campaign cell.
 #[derive(Debug, Clone)]
 pub struct CellResult {
@@ -47,6 +75,10 @@ pub struct CellResult {
     pub spans_collected: u64,
     /// CPU core-seconds metered against this cell's isolated cloud.
     pub metered_cpu_s: f64,
+    /// Exact-vs-extrapolated marking for clustered runs; `None` for
+    /// exhaustive (and tolerance-0) runs, keeping their serialized form
+    /// untouched.
+    pub provenance: Option<CellProvenance>,
 }
 
 impl CellResult {
@@ -60,12 +92,12 @@ impl CellResult {
         }
     }
 
-    fn label(&self) -> String {
+    pub(crate) fn label(&self) -> String {
         format!("{} × {} × {}", self.variant, self.load, self.dataset)
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("variant", Json::str(self.variant.clone())),
             ("load", Json::str(self.load.clone())),
             ("dataset", Json::str(self.dataset.clone())),
@@ -85,7 +117,102 @@ impl CellResult {
             ("cost_per_record_usd", Json::num(self.cost_per_record_usd)),
             ("spans_collected", Json::num(self.spans_collected as f64)),
             ("metered_cpu_s", Json::num(self.metered_cpu_s)),
+        ];
+        match &self.provenance {
+            None => {}
+            Some(CellProvenance::Exact { cluster }) => {
+                fields.push(("cluster", Json::num(*cluster as f64)));
+                fields.push(("exact", Json::Bool(true)));
+            }
+            Some(CellProvenance::Extrapolated {
+                cluster,
+                representative,
+                distance,
+                error_bound_rel,
+            }) => {
+                fields.push(("cluster", Json::num(*cluster as f64)));
+                fields.push(("exact", Json::Bool(false)));
+                fields.push(("representative", Json::num(*representative as f64)));
+                fields.push(("representative_distance", Json::num(*distance)));
+                fields.push(("error_bound_rel", Json::num(*error_bound_rel)));
+            }
+        }
+        Json::obj(fields)
+    }
+}
+
+/// One row of a clustered run's per-cluster summary.
+#[derive(Debug, Clone)]
+pub struct ClusterRow {
+    /// Cluster id.
+    pub id: usize,
+    /// Grid index of the simulated representative.
+    pub representative_index: usize,
+    /// Display label of the representative cell.
+    pub representative: String,
+    /// Member count (representative included).
+    pub members: u64,
+    /// Worst member feature distance to the representative.
+    pub max_distance: f64,
+    /// Worst reported error bound among extrapolated members (0 for a
+    /// singleton cluster — nothing was extrapolated).
+    pub max_error_bound_rel: f64,
+}
+
+/// Summary of the clustering a `cluster_tolerance > 0` run used:
+/// tolerance, and one [`ClusterRow`] per cluster in founding order.
+#[derive(Debug, Clone)]
+pub struct ClusterSummary {
+    /// The feature-distance tolerance the run clustered under.
+    pub tolerance: f64,
+    /// Per-cluster rows, in cluster-id order.
+    pub clusters: Vec<ClusterRow>,
+}
+
+impl ClusterSummary {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tolerance", Json::num(self.tolerance)),
+            (
+                "clusters",
+                Json::arr(self.clusters.iter().map(|c| {
+                    Json::obj(vec![
+                        ("id", Json::num(c.id as f64)),
+                        ("representative_index", Json::num(c.representative_index as f64)),
+                        ("representative", Json::str(c.representative.clone())),
+                        ("members", Json::num(c.members as f64)),
+                        ("max_distance", Json::num(c.max_distance)),
+                        ("max_error_bound_rel", Json::num(c.max_error_bound_rel)),
+                    ])
+                })),
+            ),
         ])
+    }
+
+    fn render(&self) -> String {
+        let simulated = self.clusters.len();
+        let cells: u64 = self.clusters.iter().map(|c| c.members).sum();
+        let mut t = Table::new(&[
+            "cluster",
+            "representative",
+            "members",
+            "max dist",
+            "max err bound",
+        ])
+        .with_title(&format!(
+            "clustered: {cells} cells -> {simulated} simulated representatives (tolerance {})",
+            self.tolerance
+        ));
+        for c in &self.clusters {
+            t.row(vec![
+                c.id.to_string(),
+                c.representative.clone(),
+                c.members.to_string(),
+                fnum(c.max_distance, 4),
+                fnum(c.max_error_bound_rel, 4),
+            ]);
+        }
+        t.render()
     }
 }
 
@@ -98,6 +225,10 @@ pub struct CampaignReport {
     pub seed: u64,
     /// One result per grid cell, in grid (row-major) order.
     pub cells: Vec<CellResult>,
+    /// Per-cluster summary for `cluster_tolerance > 0` runs; `None` for
+    /// exhaustive and tolerance-0 runs (whose reports stay byte-identical
+    /// to each other).
+    pub clustering: Option<ClusterSummary>,
 }
 
 impl CampaignReport {
@@ -156,6 +287,10 @@ impl CampaignReport {
             ]);
         }
         let mut out = t.render();
+        if let Some(cs) = &self.clustering {
+            out.push('\n');
+            out.push_str(&cs.render());
+        }
         out.push_str("\nranking (transmissions per fixed-cost dollar):\n");
         for (i, c) in self.ranking().iter().enumerate() {
             out.push_str(&format!(
@@ -173,13 +308,17 @@ impl CampaignReport {
     /// Canonical JSON form (sorted keys, cells in grid order). Two
     /// same-seed campaign executions serialize byte-identically.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("campaign", Json::str(self.campaign.clone())),
             ("seed", Json::str(format!("{:#018x}", self.seed))),
             (
                 "cells",
                 Json::arr(self.cells.iter().map(CellResult::to_json)),
             ),
-        ])
+        ];
+        if let Some(cs) = &self.clustering {
+            fields.push(("clustering", cs.to_json()));
+        }
+        Json::obj(fields)
     }
 }

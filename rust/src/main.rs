@@ -30,9 +30,11 @@
 //!     year-long what-if simulations; prints Table II (Figs. 6–7 CSVs)
 //! plantd retention [--months-a 3] [--months-b 6]
 //!     storage-policy what-if; prints Table IV
-//! plantd campaign  [--threads N] [--seed S] [--out DIR]
+//! plantd campaign  [--threads N] [--seed S] [--cluster-tolerance T] [--out DIR]
 //!     parallel {variant × load × dataset} sweep; prints a ranked
-//!     CampaignReport (same seed ⇒ byte-identical numbers)
+//!     CampaignReport (same seed ⇒ byte-identical numbers); with a
+//!     cluster tolerance, simulates one representative per cell
+//!     cluster and extrapolates the rest (marked, with error bounds)
 //! plantd resources (demo of the declarative resource registry)
 //! plantd demo      [--out DIR] [--scale X]
 //!     the full paper reproduction: experiments → twins → simulations →
@@ -44,7 +46,7 @@ use std::process::ExitCode;
 use std::sync::Once;
 
 use plantd::bizsim::{monthly_costs, simulate_batch, CostSpec, SloSpec};
-use plantd::campaign::Campaign;
+use plantd::campaign::{cluster, Campaign};
 use plantd::datagen::{DataSet, DataSetSpec};
 use plantd::experiment::ExperimentRecord;
 use plantd::loadgen::LoadPattern;
@@ -113,7 +115,15 @@ CAMPAIGN OPTIONS
   --grid NAME        paper (default) or extended (adds burst + drain
                      load cases)
   --dry-run          enumerate the grid cells (with derived seeds) and
-                     exit without executing anything
+                     exit without executing anything; with
+                     --cluster-tolerance, also print the cluster plan
+  --cluster-tolerance T
+                     cluster cells whose feature vectors are within
+                     relative distance T, simulate one representative
+                     per cluster, and extrapolate the members (marked
+                     in the report with an error bound); T = 0 runs the
+                     clustered path but reproduces the exhaustive
+                     report byte-for-byte
   --out DIR          also write the report JSON to DIR/campaign.json
 
 EXPERIMENT OPTIONS
@@ -650,6 +660,18 @@ fn cmd_campaign(args: &Args) -> CmdResult {
     let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
     let seed = opt_seed(args, "seed", 0xD5)?;
     let grid = args.opt_or("grid", "paper");
+    let cluster_tolerance = match args.opt("cluster-tolerance") {
+        None => None,
+        Some(_) => Some(
+            args.opt_f64("cluster-tolerance", 0.0)
+                .map_err(anyhow::Error::msg)?,
+        ),
+    };
+    if let Some(t) = cluster_tolerance {
+        if !t.is_finite() || t < 0.0 {
+            anyhow::bail!("--cluster-tolerance: expected a finite number >= 0, got {t}");
+        }
+    }
     let campaign = Campaign::from_grid_name(&grid, seed).map_err(anyhow::Error::msg)?;
     if args.flag("dry-run") {
         eprintln!(
@@ -667,7 +689,8 @@ fn cmd_campaign(args: &Args) -> CmdResult {
             campaign.seed,
             campaign.n_cells()
         );
-        for spec in campaign.cells() {
+        let specs = campaign.cells();
+        for spec in &specs {
             println!(
                 "  #{:>3}  {:<18} × {:<12} × {:<12}  cell-seed {:#018x}  ({} sends)",
                 spec.index,
@@ -678,6 +701,28 @@ fn cmd_campaign(args: &Args) -> CmdResult {
                 spec.load.pattern.total_records(),
             );
         }
+        // the clustering plan is a pure function of the grid, so the dry
+        // run can show exactly which cells a clustered run would simulate
+        if let Some(t) = cluster_tolerance {
+            let features = cluster::featurize_campaign(&campaign, &specs);
+            let clustering = cluster::cluster_greedy(&features, t);
+            println!(
+                "cluster plan (tolerance {t}): {} cells -> {} simulated representatives",
+                specs.len(),
+                clustering.n_clusters()
+            );
+            for (id, c) in clustering.clusters.iter().enumerate() {
+                let rep = &specs[c.representative];
+                println!(
+                    "  cluster {id}: rep #{:>3} {} × {} × {}  ({} members)",
+                    rep.index,
+                    rep.variant.name,
+                    rep.load.name,
+                    rep.dataset_name,
+                    c.members.len(),
+                );
+            }
+        }
         return Ok(());
     }
     let name = format!("campaign-{grid}");
@@ -685,6 +730,7 @@ fn cmd_campaign(args: &Args) -> CmdResult {
         grid: grid.clone(),
         seed,
         threads,
+        cluster_tolerance,
         out: args.opt("out").map(str::to_string),
     };
     let manifest = Json::obj(vec![(

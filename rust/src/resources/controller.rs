@@ -521,6 +521,7 @@ impl Controller {
                 grid,
                 seed,
                 threads,
+                cluster_tolerance,
                 out,
             } => {
                 let campaign = Campaign::from_grid_name(grid, *seed)?;
@@ -533,7 +534,12 @@ impl Controller {
                     campaign.n_cells(),
                     threads
                 );
-                let report = CampaignRunner::new(*threads).run(&campaign);
+                let mut runner = CampaignRunner::new(*threads);
+                if let Some(t) = cluster_tolerance {
+                    eprintln!("clustering cells at feature tolerance {t}");
+                    runner = runner.with_cluster_tolerance(*t);
+                }
+                let report = runner.run(&campaign);
                 let mut output = format!("{}\n", report.render());
                 if let Some(dir) = out {
                     let path = std::path::Path::new(dir).join("campaign.json");
@@ -547,18 +553,37 @@ impl Controller {
                     .first()
                     .map(|c| c.variant.clone())
                     .unwrap_or_default();
-                let summary = format!(
-                    "campaign '{}': {} cells, seed {:#x}, best '{best}'",
-                    campaign.name,
-                    campaign.n_cells(),
-                    campaign.seed
-                );
-                let status = Json::obj(vec![
+                let summary = match &report.clustering {
+                    Some(cs) => format!(
+                        "campaign '{}': {} cells ({} simulated, tolerance {}), \
+                         seed {:#x}, best '{best}'",
+                        campaign.name,
+                        campaign.n_cells(),
+                        cs.clusters.len(),
+                        cs.tolerance,
+                        campaign.seed
+                    ),
+                    None => format!(
+                        "campaign '{}': {} cells, seed {:#x}, best '{best}'",
+                        campaign.name,
+                        campaign.n_cells(),
+                        campaign.seed
+                    ),
+                };
+                let mut status = vec![
                     ("grid", Json::str(grid.clone())),
                     ("cells", Json::Num(campaign.n_cells() as f64)),
                     ("seed", super::spec::seed_json(*seed)),
                     ("best_variant", Json::str(best)),
-                ]);
+                ];
+                if let Some(cs) = &report.clustering {
+                    status.push(("cluster_tolerance", Json::Num(cs.tolerance)));
+                    status.push((
+                        "simulated_cells",
+                        Json::Num(cs.clusters.len() as f64),
+                    ));
+                }
+                let status = Json::obj(status);
                 Ok((summary, output, status))
             }
             ExperimentSpec::WindTunnel {

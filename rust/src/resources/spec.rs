@@ -313,6 +313,11 @@ pub enum ExperimentSpec {
         seed: u64,
         /// Worker threads for the cell grid.
         threads: usize,
+        /// Cluster-and-extrapolate feature-distance tolerance
+        /// ([`crate::campaign::cluster`]): `None` = exhaustive, `0` =
+        /// clustered code path but byte-identical to exhaustive, `> 0` =
+        /// simulate representatives only and extrapolate members.
+        cluster_tolerance: Option<f64>,
         /// Optional directory to write `campaign.json` into.
         out: Option<String>,
     },
@@ -331,10 +336,18 @@ impl ResourceSpec for ExperimentSpec {
                         .ok_or("out: expected a string")?,
                 ),
             };
+            let cluster_tolerance = match c.get("cluster_tolerance") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_f64()
+                        .ok_or("cluster_tolerance: expected a number")?,
+                ),
+            };
             return Ok(ExperimentSpec::Campaign {
                 grid: str_field(c, "grid", "paper")?,
                 seed: seed_field(c, "seed", 0xD5)?,
                 threads: u64_field(c, "threads", 4)? as usize,
+                cluster_tolerance,
                 out,
             });
         }
@@ -392,6 +405,7 @@ impl ResourceSpec for ExperimentSpec {
                 grid,
                 seed,
                 threads,
+                cluster_tolerance,
                 out,
             } => {
                 let mut inner = vec![
@@ -399,6 +413,9 @@ impl ResourceSpec for ExperimentSpec {
                     ("seed", seed_json(*seed)),
                     ("threads", Json::Num(*threads as f64)),
                 ];
+                if let Some(t) = cluster_tolerance {
+                    inner.push(("cluster_tolerance", Json::Num(*t)));
+                }
                 if let Some(dir) = out {
                     inner.push(("out", Json::str(dir.clone())));
                 }
@@ -428,10 +445,23 @@ impl ResourceSpec for ExperimentSpec {
                 }
                 Ok(())
             }
-            ExperimentSpec::Campaign { grid, threads, .. } => {
+            ExperimentSpec::Campaign {
+                grid,
+                threads,
+                cluster_tolerance,
+                ..
+            } => {
                 Campaign::from_grid_name(grid, 0)?;
                 if *threads == 0 {
                     return Err("campaign: threads must be > 0".into());
+                }
+                if let Some(t) = cluster_tolerance {
+                    if !t.is_finite() || *t < 0.0 {
+                        return Err(
+                            "campaign: cluster_tolerance must be a finite number >= 0"
+                                .into(),
+                        );
+                    }
                 }
                 Ok(())
             }
@@ -887,6 +917,10 @@ mod tests {
             Kind::Experiment,
             r#"{"campaign": {"grid": "paper", "seed": 213, "threads": 4}}"#,
         );
+        fixed_point(
+            Kind::Experiment,
+            r#"{"campaign": {"grid": "extended", "cluster_tolerance": 0.05}}"#,
+        );
         fixed_point(Kind::TrafficModel, r#"{"preset": "nominal"}"#);
         fixed_point(
             Kind::TrafficModel,
@@ -1005,6 +1039,10 @@ mod tests {
             ),
             (Kind::Validation, r#"{"suite": "vibes"}"#),
             (Kind::Validation, r#"{"threads": 0}"#),
+            (
+                Kind::Experiment,
+                r#"{"campaign": {"grid": "paper", "cluster_tolerance": -0.1}}"#,
+            ),
         ];
         for (kind, raw) in cases {
             let j = Json::parse(raw).unwrap();
@@ -1030,6 +1068,10 @@ mod tests {
                     "mode": 1}"#,
             ),
             (Kind::Experiment, r#"{"campaign": {"threads": "8"}}"#),
+            (
+                Kind::Experiment,
+                r#"{"campaign": {"cluster_tolerance": "0.05"}}"#,
+            ),
             (
                 Kind::Simulation,
                 r#"{"twin": "t", "traffic_model": "m", "slo_hours": "4"}"#,

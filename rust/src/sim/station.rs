@@ -143,6 +143,11 @@ pub struct StationStats {
     /// run's makespan gives the time-average queue length L_q that the
     /// analytic oracle checks against Erlang-C).
     pub queue_area_s: f64,
+    /// Batch buffers allocated from the heap. With the spare-buffer
+    /// arena ([`Station::recycle`]) this saturates at the server count:
+    /// steady-state runs reuse the same buffers for every batch instead
+    /// of allocating one `Vec` per service.
+    pub buffer_allocs: u64,
 }
 
 /// Outcome of offering one arrival to a station.
@@ -164,6 +169,11 @@ pub struct Station<T> {
     idle: Vec<usize>,
     queue: VecDeque<T>,
     blocked: VecDeque<T>,
+    /// Recycled batch buffers ([`Station::recycle`]): `start_batch`
+    /// reuses these instead of allocating a fresh `Vec` per service.
+    /// At most `servers` batches are ever in flight, so the pool (and
+    /// the total allocation count) is bounded by the server count.
+    spare: Vec<Vec<T>>,
     stats: StationStats,
 }
 
@@ -181,6 +191,7 @@ impl<T> Station<T> {
             cfg,
             queue: VecDeque::new(),
             blocked: VecDeque::new(),
+            spare: Vec::new(),
             stats,
         }
     }
@@ -233,8 +244,16 @@ impl<T> Station<T> {
         let n = self.cfg.batch_max.min(self.queue.len());
         // drain the front of the deque in one pass — identical order to
         // repeated pop_front (both disciplines enqueue so that the next
-        // job to serve is at the front), one exact-size allocation
-        let jobs: Vec<T> = self.queue.drain(..n).collect();
+        // job to serve is at the front) — into a recycled buffer when
+        // one is pooled, so steady-state batching allocates nothing
+        let mut jobs: Vec<T> = match self.spare.pop() {
+            Some(buf) => buf,
+            None => {
+                self.stats.buffer_allocs += 1;
+                Vec::new()
+            }
+        };
+        jobs.extend(self.queue.drain(..n));
         // admit parked arrivals into the freed queue space, oldest first
         if let Some(cap) = self.cfg.policy.capacity() {
             while self.queue.len() < cap {
@@ -261,6 +280,18 @@ impl<T> Station<T> {
         debug_assert!(server < self.cfg.servers);
         self.idle.push(server);
         self.stats.served += n_jobs as u64;
+    }
+
+    /// Return a batch buffer to the spare pool for reuse by a later
+    /// [`Station::start_batch`]. The buffer is cleared (its jobs are
+    /// dropped — callers move jobs out before recycling); buffers beyond
+    /// a small cap are released to keep the pool from hoarding fan-out
+    /// vectors the servicer handed downstream.
+    pub fn recycle(&mut self, mut buf: Vec<T>) {
+        buf.clear();
+        if self.spare.len() < self.cfg.servers + 2 {
+            self.spare.push(buf);
+        }
     }
 
     /// Number of jobs currently waiting in the queue (excludes jobs in
@@ -501,6 +532,46 @@ mod tests {
         s.complete(srv, batch.len());
         assert_eq!(s.stats().queue_area_s, 11.0);
         assert_eq!(s.stats().max_queue, 4);
+    }
+
+    #[test]
+    fn recycled_buffers_cap_allocations_at_the_server_count() {
+        // serve 100 jobs through one server, recycling each batch buffer
+        // the way the tandem loop does: exactly one allocation total
+        let mut s: Station<u32> = Station::new(StationConfig::single("s"));
+        for round in 0..100u32 {
+            s.offer(round);
+            let (srv, batch) = s.start_batch().unwrap();
+            assert_eq!(batch, vec![round], "recycled buffer leaked stale jobs");
+            s.complete(srv, batch.len());
+            s.recycle(batch);
+        }
+        assert_eq!(s.stats().buffer_allocs, 1);
+
+        // two servers, batches in flight simultaneously: at most two
+        let mut s: Station<u32> = Station::new(StationConfig::single("s").with_servers(2));
+        for round in 0..50u32 {
+            s.offer(2 * round);
+            s.offer(2 * round + 1);
+            let a = s.start_batch().unwrap();
+            let b = s.start_batch().unwrap();
+            s.complete(a.0, a.1.len());
+            s.complete(b.0, b.1.len());
+            s.recycle(a.1);
+            s.recycle(b.1);
+        }
+        assert_eq!(s.stats().buffer_allocs, 2);
+    }
+
+    #[test]
+    fn recycle_pool_is_bounded() {
+        // foreign buffers (fan-out vectors from a servicer) beyond the
+        // pool cap are dropped, not hoarded
+        let mut s: Station<u32> = Station::new(StationConfig::single("s"));
+        for _ in 0..16 {
+            s.recycle(Vec::with_capacity(1024));
+        }
+        assert!(s.spare.len() <= s.cfg.servers + 2);
     }
 
     #[test]

@@ -269,13 +269,13 @@ impl<T> Tandem<T> {
                 Ev::Complete {
                     station,
                     server,
-                    jobs,
-                    next,
+                    mut jobs,
+                    mut next,
                 } => {
                     self.stations[station].complete(server, jobs.len());
                     if station + 1 < n_stations {
                         self.kernel.reserve(next.len());
-                        for job in next {
+                        for job in next.drain(..) {
                             timed::<PERF, _>(rec, PerfStage::Enqueue, || {
                                 self.kernel.schedule_at(
                                     t,
@@ -287,8 +287,13 @@ impl<T> Tandem<T> {
                             });
                         }
                     } else {
-                        completions.extend(jobs.into_iter().map(|j| (t, j)));
+                        completions.extend(jobs.drain(..).map(|j| (t, j)));
                     }
+                    // hand both buffers back to the station's spare pool
+                    // before starting the next batch, so the batch that
+                    // starts at this very timestamp reuses them
+                    self.stations[station].recycle(jobs);
+                    self.stations[station].recycle(next);
                     start_ready::<PERF, _, _>(
                         station,
                         &mut self.stations[station],

@@ -8,7 +8,9 @@
 //! PR 6 acceptance claim: the index-heap entry must show at least 2×
 //! the events/sec of the BinaryHeap baseline recorded in the same file
 //! (both measured on the same reference host; later `local` / CI
-//! entries are machine-relative and deliberately not compared).
+//! entries are machine-relative and deliberately not compared), and the
+//! PR 7 claim: clustered fleet campaigns clear >= 10x the cells/sec of
+//! the exhaustive run recorded alongside them.
 
 use std::path::{Path, PathBuf};
 
@@ -113,6 +115,39 @@ fn index_heap_entry_doubles_the_baseline_events_rate() {
             "{file}: events/sec ratio {ratio:.2} < 2.0 ({opt_rate:.0} vs {base_rate:.0})"
         );
     }
+}
+
+#[test]
+fn clustered_fleet_entry_is_an_order_of_magnitude_over_exhaustive() {
+    // the PR 7 acceptance bar: cluster-and-extrapolate must clear >= 10x
+    // cells/sec over the exhaustive run of the same fleet grid, recorded
+    // as same-host same-size entries in the same trajectory
+    let doc = load("BENCH_sim.json");
+    let exhaustive = entry_by_label(&doc, "pr7-fleet-exhaustive");
+    let clustered = entry_by_label(&doc, "pr7-fleet-clustered");
+    assert_eq!(
+        exhaustive.get_str("host"),
+        clustered.get_str("host"),
+        "the speedup claim only holds within one host"
+    );
+    let ex_m = exhaustive.get("metrics").unwrap();
+    let cl_m = clustered.get("metrics").unwrap();
+    assert_eq!(
+        ex_m.get_f64("cells"),
+        cl_m.get_f64("cells"),
+        "both legs must cover the same fleet grid"
+    );
+    assert!(
+        cl_m.get_f64("n_clusters").unwrap() < cl_m.get_f64("cells").unwrap(),
+        "the clustered leg must actually merge cells"
+    );
+    let ex_rate = ex_m.get_f64("cells_per_s").unwrap();
+    let cl_rate = cl_m.get_f64("cells_per_s").unwrap();
+    let ratio = cl_rate / ex_rate;
+    assert!(
+        ratio >= 10.0,
+        "cells/sec ratio {ratio:.1} < 10.0 ({cl_rate:.0} vs {ex_rate:.0})"
+    );
 }
 
 #[test]

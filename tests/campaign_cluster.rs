@@ -1,0 +1,354 @@
+//! Cluster-and-extrapolate guarantees, tested across module boundaries:
+//! tolerance 0 is byte-identical to the exhaustive path at any thread
+//! count, clustered reports themselves replay byte-identically across
+//! thread counts, greedy clustering is deterministic and total under
+//! random feature sets, and — the accuracy contract — extrapolated
+//! M/M/c metrics land within the *reported* error bound of the PR-4
+//! closed-form oracle.
+
+use plantd::campaign::{cluster, Campaign, CampaignRunner, CellProvenance};
+use plantd::datagen::DataSetSpec;
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::sim::{derive_seed, Served, StationConfig, Tandem};
+use plantd::util::proptest::check;
+use plantd::util::rng::Rng;
+use plantd::validate::oracle;
+
+/// 2 variants × 3 loads: two near-duplicate dev loads (mergeable at 5%
+/// tolerance) and one hot load far outside it.
+fn mixed_campaign(seed: u64) -> Campaign {
+    Campaign::new("cluster-mix", seed)
+        .variant(VariantConfig::blocking_write())
+        .variant(VariantConfig::cpu_limited())
+        .load("dev-a", LoadPattern::steady(6.0, 2.0))
+        .load("dev-b", LoadPattern::steady(6.0, 2.02))
+        .load("hot", LoadPattern::steady(6.0, 5.0))
+        .dataset(
+            "tiny",
+            DataSetSpec {
+                payloads: 4,
+                records_per_subsystem: 3,
+                bad_rate: 0.01,
+                seed: 0,
+            },
+        )
+}
+
+#[test]
+fn tolerance_zero_is_byte_identical_to_exhaustive_at_any_thread_count() {
+    let campaign = mixed_campaign(0xC1D0);
+    let exhaustive = CampaignRunner::new(1).run(&campaign);
+    let baseline = exhaustive.to_json().to_string_pretty();
+    for threads in [1, 2, 5] {
+        let clustered = CampaignRunner::new(threads)
+            .with_cluster_tolerance(0.0)
+            .run(&campaign);
+        assert!(
+            clustered.clustering.is_none(),
+            "tolerance 0 must not emit a cluster summary"
+        );
+        assert_eq!(
+            clustered.to_json().to_string_pretty().as_bytes(),
+            baseline.as_bytes(),
+            "tolerance-0 clustered run must be byte-identical (threads={threads})"
+        );
+        assert_eq!(clustered.render(), exhaustive.render());
+    }
+}
+
+#[test]
+fn clustered_report_is_byte_identical_across_thread_counts() {
+    let campaign = mixed_campaign(0x7E57);
+    let serial = CampaignRunner::new(1)
+        .with_cluster_tolerance(0.05)
+        .run(&campaign);
+    let summary = serial.clustering.as_ref().expect("cluster summary");
+    assert!(
+        summary.clusters.len() < campaign.n_cells(),
+        "near-duplicate loads must actually merge"
+    );
+    let baseline = serial.to_json().to_string_pretty();
+    for threads in [2, 4, 8] {
+        let wide = CampaignRunner::new(threads)
+            .with_cluster_tolerance(0.05)
+            .run(&campaign);
+        assert_eq!(
+            wide.to_json().to_string_pretty().as_bytes(),
+            baseline.as_bytes(),
+            "clustered report must not depend on thread count (threads={threads})"
+        );
+    }
+}
+
+#[test]
+fn greedy_clustering_is_deterministic_total_and_within_tolerance() {
+    check("cluster-greedy-invariants", 60, |rng| {
+        let n = rng.int_range(1, 40) as usize;
+        let dims = rng.int_range(1, 6) as usize;
+        let mut features: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for i in 0..n {
+            if i > 0 && rng.chance(0.25) {
+                // exact duplicates must still cluster deterministically
+                let j = rng.int_range(0, i as i64 - 1) as usize;
+                features.push(features[j].clone());
+            } else {
+                features.push(
+                    (0..dims)
+                        .map(|_| {
+                            if rng.chance(0.2) {
+                                0.0
+                            } else {
+                                rng.uniform(-5.0, 10.0)
+                            }
+                        })
+                        .collect(),
+                );
+            }
+        }
+        let tolerance = if rng.chance(0.3) {
+            0.0
+        } else {
+            rng.uniform(0.0, 0.6)
+        };
+
+        let a = cluster::cluster_greedy(&features, tolerance);
+        let b = cluster::cluster_greedy(&features, tolerance);
+        assert_eq!(a, b, "same input must yield the same clustering");
+
+        // totality: every index lands in exactly one cluster
+        let mut seen = vec![0u32; n];
+        for (id, c) in a.clusters.iter().enumerate() {
+            assert_eq!(
+                c.members.first().copied(),
+                Some(c.representative),
+                "representative is the lowest-index member"
+            );
+            let mut prev = None;
+            for &m in &c.members {
+                if let Some(p) = prev {
+                    assert!(m > p, "members must ascend");
+                }
+                prev = Some(m);
+                seen[m] += 1;
+                let asg = &a.assignment[m];
+                assert_eq!(asg.cluster, id);
+                let d = cluster::distance(&features[m], &features[c.representative]);
+                assert_eq!(asg.distance.to_bits(), d.to_bits());
+                if m == c.representative {
+                    assert_eq!(asg.distance, 0.0);
+                } else {
+                    assert!(asg.distance <= tolerance);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1), "assignment must be total");
+        if tolerance <= 0.0 {
+            assert!(a.is_identity(), "tolerance 0 is the identity clustering");
+            assert_eq!(a.n_clusters(), n);
+        }
+    });
+}
+
+/// Measured rho / mean wait / mean sojourn from one DES run of an
+/// unbounded M/M/c station (pre-sampled streams, same scheme as the
+/// PR-4 validation suite).
+struct MmcMeasurement {
+    rho: f64,
+    wq: f64,
+    w: f64,
+}
+
+fn simulate_mmc(
+    servers: usize,
+    lambda: f64,
+    mu: f64,
+    seed: u64,
+    arrivals: usize,
+    warmup: usize,
+) -> MmcMeasurement {
+    let mut arr = Rng::new(derive_seed(seed, [0xA221, 0, 0]));
+    let mut t = 0.0;
+    let mut arrival_times = Vec::with_capacity(arrivals);
+    for _ in 0..arrivals {
+        t += arr.exponential(lambda);
+        arrival_times.push(t);
+    }
+    let mut svc = Rng::new(derive_seed(seed, [0x5E2C, 0, 0]));
+    let services: Vec<f64> = (0..arrivals).map(|_| svc.exponential(mu)).collect();
+
+    let tandem = Tandem::new(vec![StationConfig::single("mmc").with_servers(servers)]);
+    let jobs: Vec<(f64, usize)> = arrival_times.iter().copied().zip(0..arrivals).collect();
+    let out = tandem.run(jobs, |_station, _start, batch| Served {
+        service_s: services[batch[0]],
+        next: Vec::new(),
+    });
+
+    let makespan = out.drained_s();
+    let rho = out.stations[0].busy_s / (servers as f64 * makespan);
+    let (mut wq_sum, mut w_sum, mut n) = (0.0, 0.0, 0usize);
+    for (tc, idx) in &out.completions {
+        if *idx < warmup {
+            continue;
+        }
+        let sojourn = tc - arrival_times[*idx];
+        wq_sum += sojourn - services[*idx];
+        w_sum += sojourn;
+        n += 1;
+    }
+    assert!(n > 0, "warmup must not swallow every completion");
+    MmcMeasurement {
+        rho,
+        wq: wq_sum / n as f64,
+        w: w_sum / n as f64,
+    }
+}
+
+#[test]
+fn extrapolated_mmc_metrics_land_within_the_reported_error_bound() {
+    // a fleet of M/M/c cells: for each server count, five utilizations
+    // of which only three are feature-distinct at 5% tolerance
+    let mu = 1.0;
+    let rhos = [0.60, 0.62, 0.64, 0.80, 0.82];
+    let mut cells: Vec<(usize, f64, f64)> = Vec::new(); // (c, lambda, rho_nominal)
+    for servers in [1usize, 2] {
+        for r in rhos {
+            cells.push((servers, r * servers as f64 * mu, r));
+        }
+    }
+    let features: Vec<Vec<f64>> = cells
+        .iter()
+        .map(|&(c, lambda, _)| vec![lambda, c as f64, mu])
+        .collect();
+
+    let clustering = cluster::cluster_greedy(&features, 0.05);
+    assert_eq!(
+        clustering.n_clusters(),
+        6,
+        "expected representatives at rho 0.60/0.64/0.80 per server count"
+    );
+
+    let mut n_extrapolated = 0;
+    for cl in &clustering.clusters {
+        let (c_r, l_r, rho_r) = cells[cl.representative];
+        // simulate ONLY the representative, like the campaign runner does
+        let rep = simulate_mmc(c_r, l_r, mu, 0xC1A5, 80_000, 8_000);
+        let exact_rep = oracle::mmc(c_r, l_r, mu);
+        assert!(
+            (rep.rho - exact_rep.rho).abs() / exact_rep.rho < 0.08,
+            "rep DES sanity (rho): c={c_r} lambda={l_r}"
+        );
+        assert!(
+            (rep.w - exact_rep.w).abs() / exact_rep.w < 0.08,
+            "rep DES sanity (w): c={c_r} lambda={l_r}"
+        );
+
+        for &m in &cl.members {
+            if m == cl.representative {
+                continue;
+            }
+            n_extrapolated += 1;
+            let (c_m, l_m, rho_m) = cells[m];
+            assert_eq!(c_m, c_r, "server-count dimension must never merge");
+            let d = clustering.assignment[m].distance;
+            let bound = cluster::error_bound(d, rho_m);
+
+            // extrapolate exactly like the campaign layer: rescale the
+            // representative's measured behaviour by the feature delta
+            let rho_est = rep.rho * (l_m / l_r);
+            let wq_est = cluster::scale_wait(rep.wq, rho_r, rho_m);
+            let w_est = wq_est + (rep.w - rep.wq);
+
+            let truth = oracle::mmc(c_m, l_m, mu);
+            let rel = |est: f64, exact: f64| (est - exact).abs() / exact;
+            assert!(
+                rel(rho_est, truth.rho) <= bound,
+                "rho: c={c_m} lambda={l_m}: est {rho_est} vs exact {} (bound {bound})",
+                truth.rho
+            );
+            assert!(
+                rel(wq_est, truth.wq) <= bound,
+                "wq: c={c_m} lambda={l_m}: est {wq_est} vs exact {} (bound {bound})",
+                truth.wq
+            );
+            assert!(
+                rel(w_est, truth.w) <= bound,
+                "w: c={c_m} lambda={l_m}: est {w_est} vs exact {} (bound {bound})",
+                truth.w
+            );
+        }
+    }
+    assert_eq!(n_extrapolated, 4, "two merged cells per server count");
+}
+
+#[test]
+fn extrapolated_campaign_cells_match_exhaustive_within_the_reported_bound() {
+    // near-duplicate fleet loads: the clustered run simulates one and
+    // extrapolates the other; the exhaustive run simulates both. The
+    // extrapolated cell must agree with its exhaustively-simulated twin
+    // to within the error bound it *reports*.
+    let campaign = Campaign::new("fleet-acc", 0xACC)
+        .variant(VariantConfig::blocking_write())
+        .load("dev-a", LoadPattern::steady(60.0, 2.0))
+        .load("dev-b", LoadPattern::steady(60.0, 2.01))
+        .dataset(
+            "tiny",
+            DataSetSpec {
+                payloads: 6,
+                records_per_subsystem: 4,
+                bad_rate: 0.0,
+                seed: 0,
+            },
+        );
+    let exhaustive = CampaignRunner::new(1).run(&campaign);
+    let clustered = CampaignRunner::new(1)
+        .with_cluster_tolerance(0.05)
+        .run(&campaign);
+    let summary = clustered.clustering.as_ref().expect("cluster summary");
+    assert_eq!(summary.clusters.len(), 1, "the two loads must merge");
+
+    let mut n_exact = 0;
+    let mut n_extrapolated = 0;
+    for (cl, ex) in clustered.cells.iter().zip(&exhaustive.cells) {
+        match &cl.provenance {
+            Some(CellProvenance::Exact { .. }) => {
+                n_exact += 1;
+                // the representative ran through the ordinary cell path
+                assert_eq!(cl.latency_mean_s.to_bits(), ex.latency_mean_s.to_bits());
+                assert_eq!(cl.duration_s.to_bits(), ex.duration_s.to_bits());
+                assert_eq!(cl.run_cost_usd.to_bits(), ex.run_cost_usd.to_bits());
+            }
+            Some(CellProvenance::Extrapolated {
+                error_bound_rel, ..
+            }) => {
+                n_extrapolated += 1;
+                let bound = *error_bound_rel;
+                assert!(bound > 0.0 && bound < 0.5, "bound must be meaningful");
+                // structural counts and the rate card are exact
+                assert_eq!(cl.zips, ex.zips);
+                assert_eq!(cl.files, ex.files);
+                assert_eq!(cl.rows, ex.rows);
+                assert_eq!(cl.spans_collected, ex.spans_collected);
+                assert_eq!(cl.cost_per_hr_usd.to_bits(), ex.cost_per_hr_usd.to_bits());
+                // time behaviour is extrapolated — within the bound
+                let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+                for (name, got, want) in [
+                    ("latency_mean_s", cl.latency_mean_s, ex.latency_mean_s),
+                    ("latency_p50_s", cl.latency_p50_s, ex.latency_p50_s),
+                    ("duration_s", cl.duration_s, ex.duration_s),
+                    ("throughput_rps", cl.throughput_rps, ex.throughput_rps),
+                    ("run_cost_usd", cl.run_cost_usd, ex.run_cost_usd),
+                    ("metered_cpu_s", cl.metered_cpu_s, ex.metered_cpu_s),
+                ] {
+                    assert!(
+                        rel(got, want) <= bound,
+                        "{name}: extrapolated {got} vs exhaustive {want} \
+                         exceeds reported bound {bound}"
+                    );
+                }
+            }
+            None => panic!("tolerance > 0 must annotate every cell"),
+        }
+    }
+    assert_eq!((n_exact, n_extrapolated), (1, 1));
+}

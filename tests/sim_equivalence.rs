@@ -356,6 +356,7 @@ fn recorded_tandem_run_is_bit_identical_to_plain_run() {
             assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
             assert_eq!(a.queue_area_s.to_bits(), b.queue_area_s.to_bits());
             assert_eq!(a.max_queue, b.max_queue);
+            assert_eq!(a.buffer_allocs, b.buffer_allocs);
         }
         let report = rec.report();
         assert_eq!(report.events, recorded.events, "recorder missed events");
@@ -386,4 +387,56 @@ fn event_queue_arena_stays_bounded_under_steady_churn() {
         "arena grew to {} slots with at most 33 in flight",
         q.arena_len()
     );
+}
+
+#[test]
+fn tandem_batch_buffers_are_recycled_not_reallocated() {
+    // A long steady run through a fan-out tandem must allocate at most
+    // `servers` batch buffers per station: the Complete arm returns both
+    // the batch and the fan-out vector to the station's spare pool, so
+    // steady-state service is allocation-free. Randomized shapes so the
+    // bound holds for batching and multi-server stations alike.
+    check("tandem-buffer-arena-bounded", 40, |rng| {
+        let servers: Vec<usize> = (0..3).map(|_| rng.int_range(1, 3) as usize).collect();
+        let configs: Vec<StationConfig> = servers
+            .iter()
+            .enumerate()
+            .map(|(i, &sv)| {
+                let mut c = StationConfig::single(&format!("s{i}")).with_servers(sv);
+                if i == 0 {
+                    c = c.with_batch(rng.int_range(1, 3) as usize);
+                }
+                c
+            })
+            .collect();
+        let n = rng.int_range(200, 800) as u64;
+        let mut t = 0.0;
+        let arrivals: Vec<(f64, u64)> = (0..n)
+            .map(|i| {
+                t += rng.exponential(2.0);
+                (t, i)
+            })
+            .collect();
+        let out = Tandem::new(configs).run(arrivals, |station, _, jobs| Served {
+            service_s: service_for(station, jobs[0]),
+            // station 0 fans each zip into two members, like the cell model
+            next: if station == 0 {
+                jobs.iter().flat_map(|&j| [j, j + 1]).collect()
+            } else {
+                jobs.clone()
+            },
+        });
+        assert_eq!(out.completions.len(), 2 * n as usize);
+        for (stats, &sv) in out.stations.iter().zip(&servers) {
+            assert!(
+                stats.buffer_allocs <= sv as u64,
+                "station '{}' allocated {} batch buffers for {} servers over {} batches",
+                stats.name,
+                stats.buffer_allocs,
+                sv,
+                stats.batches
+            );
+            assert!(stats.batches > stats.buffer_allocs);
+        }
+    });
 }
