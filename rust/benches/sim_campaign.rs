@@ -24,6 +24,8 @@ use std::time::SystemTime;
 
 use plantd::campaign::{Campaign, CampaignRunner};
 use plantd::datagen::DataSetSpec;
+use plantd::dist::driver::{FleetClient, DEFAULT_SHARD_CELLS};
+use plantd::dist::worker;
 use plantd::loadgen::LoadPattern;
 use plantd::pipeline::VariantConfig;
 use plantd::sim::{Served, StationConfig, Tandem};
@@ -231,4 +233,54 @@ fn main() {
             .expect("append fleet BENCH_sim.json entry");
         println!("appended entry '{fleet_label}' to {}", path.display());
     }
+
+    // distributed leg: the same exhaustive fleet grid dealt to two
+    // loopback workers over the fleet protocol. The committed ratio
+    // against the in-process run above pins the protocol overhead
+    // (serialization, framing, loopback TCP) at under 20%, and the
+    // merged report is asserted byte-identical before timing counts.
+    let fleet_workers: Vec<worker::WorkerHandle> = (0..2)
+        .map(|_| worker::spawn_local(threads, None).expect("spawn loopback worker"))
+        .collect();
+    let endpoints: Vec<String> = fleet_workers.iter().map(|w| w.endpoint()).collect();
+    let client = FleetClient::new(endpoints).with_shard_cells(DEFAULT_SHARD_CELLS);
+    let (dist_result, dist_report) = bench::run("sim/fleet-dist-2workers", warmup, iters, || {
+        client
+            .run_campaign(&fleet, None)
+            .expect("distributed fleet run")
+    });
+    assert_eq!(
+        dist_report.to_json().to_string_pretty(),
+        ex_report.to_json().to_string_pretty(),
+        "distributed report must be byte-identical to the local exhaustive run"
+    );
+    let dist_cells_per_s = bench::throughput(fleet_cells, &dist_result);
+    println!(
+        "fleet distributed: {fleet_cells} cells over 2 workers in {:.3}s mean \
+         -> {:.1} cells/s ({:.2}x local)",
+        dist_result.mean_s,
+        dist_cells_per_s,
+        dist_cells_per_s / ex_cells_per_s
+    );
+    let dist_label = format!("{label}-dist-2workers");
+    let entry = bench::entry(
+        &dist_label,
+        unix_s,
+        &host,
+        vec![
+            ("baseline_cells_per_s", ex_cells_per_s),
+            ("cells", fleet_cells as f64),
+            ("cells_per_s", dist_cells_per_s),
+            ("events_per_s", events_per_s),
+            ("grid_mean_s", dist_result.mean_s),
+            ("grid_min_s", dist_result.min_s),
+            ("iters", iters as f64),
+            ("shard_cells", DEFAULT_SHARD_CELLS as f64),
+            ("threads", threads as f64),
+            ("workers", 2.0),
+        ],
+    );
+    bench::append_entry(&path, "sim_campaign", entry)
+        .expect("append distributed BENCH_sim.json entry");
+    println!("appended entry '{dist_label}' to {}", path.display());
 }

@@ -45,7 +45,7 @@
 //! See `docs/CAMPAIGNS.md` for the full model and how to read a report,
 //! and `docs/SIMULATION.md` for the underlying kernel.
 
-mod cell;
+pub(crate) mod cell;
 pub mod cluster;
 pub mod edist;
 mod report;
@@ -242,25 +242,33 @@ impl Campaign {
     /// shared across the grid, so enumerating a million-cell fleet costs
     /// a million small structs — not a million `VariantConfig` clones.
     pub fn cells(&self) -> Vec<CellSpec> {
+        self.cells_iter().collect()
+    }
+
+    /// Lazy grid enumeration: yields the exact same cells, in the exact
+    /// same row-major order and with the exact same derived seeds, as
+    /// [`Campaign::cells`] — without materializing the whole grid. The
+    /// distributed driver deals shards straight off this iterator, so a
+    /// fleet-scale grid never needs every `CellSpec` in memory at once.
+    pub fn cells_iter(&self) -> impl Iterator<Item = CellSpec> + '_ {
         let variants: Vec<Arc<VariantConfig>> =
             self.variants.iter().cloned().map(Arc::new).collect();
         let loads: Vec<Arc<LoadCase>> = self.loads.iter().cloned().map(Arc::new).collect();
-        let mut out = Vec::with_capacity(self.n_cells());
-        for (vi, v) in variants.iter().enumerate() {
-            for (li, l) in loads.iter().enumerate() {
-                for (di, d) in self.datasets.iter().enumerate() {
-                    out.push(CellSpec {
-                        index: out.len(),
-                        variant: Arc::clone(v),
-                        load: Arc::clone(l),
-                        dataset_index: di,
-                        dataset_name: d.name.clone(),
-                        seed: derive_seed(self.seed, [vi as u64, li as u64, di as u64]),
-                    });
-                }
+        let (nl, nd) = (self.loads.len(), self.datasets.len());
+        let seed = self.seed;
+        (0..self.n_cells()).map(move |i| {
+            let di = i % nd;
+            let li = (i / nd) % nl;
+            let vi = i / (nd * nl);
+            CellSpec {
+                index: i,
+                variant: Arc::clone(&variants[vi]),
+                load: Arc::clone(&loads[li]),
+                dataset_index: di,
+                dataset_name: self.datasets[di].name.clone(),
+                seed: derive_seed(seed, [vi as u64, li as u64, di as u64]),
             }
-        }
-        out
+        })
     }
 
     /// Synthesize the campaign's datasets. Seeds derive from the campaign
@@ -388,13 +396,9 @@ impl CampaignRunner {
             datasets.iter().map(cell::decode_members).collect();
         let features = cluster::featurize_campaign(campaign, &specs);
         let clustering = cluster::cluster_greedy(&features, tolerance);
-        // tolerance 0 (or negative/NaN) is the exact degenerate case: no
-        // provenance, no summary — byte-identical to the exhaustive run.
-        // A positive tolerance always marks provenance, even if nothing
-        // happened to cluster.
-        let exact_mode = !(tolerance > 0.0);
 
-        // simulate the representatives only
+        // simulate the representatives only; redistribution (and the
+        // tolerance-0 exact degenerate case) is `redistribute`'s concern
         let reps: Vec<usize> = clustering
             .clusters
             .iter()
@@ -430,56 +434,8 @@ impl CampaignRunner {
             .map(|r| r.expect("every representative executed"))
             .collect();
 
-        // redistribute to members, in grid order
-        let mut max_distance = vec![0.0f64; n];
-        let mut max_bound = vec![0.0f64; n];
-        let mut cells = Vec::with_capacity(specs.len());
-        for (i, spec) in specs.iter().enumerate() {
-            let a = &clustering.assignment[i];
-            let rd = &rep_data[a.cluster];
-            if clustering.clusters[a.cluster].representative == i {
-                let mut r = rd.result.clone();
-                r.provenance =
-                    (!exact_mode).then_some(CellProvenance::Exact { cluster: a.cluster });
-                cells.push(r);
-            } else {
-                let profile = cluster::profile_cell(spec, &members[spec.dataset_index]);
-                let r = cluster::extrapolate_cell(
-                    rd,
-                    clustering.clusters[a.cluster].representative,
-                    a.cluster,
-                    spec,
-                    &profile,
-                    a.distance,
-                    &self.prices,
-                );
-                if let Some(CellProvenance::Extrapolated {
-                    error_bound_rel, ..
-                }) = &r.provenance
-                {
-                    max_bound[a.cluster] = max_bound[a.cluster].max(*error_bound_rel);
-                }
-                max_distance[a.cluster] = max_distance[a.cluster].max(a.distance);
-                cells.push(r);
-            }
-        }
-
-        let clustering_summary = (!exact_mode).then(|| ClusterSummary {
-            tolerance,
-            clusters: clustering
-                .clusters
-                .iter()
-                .enumerate()
-                .map(|(id, c)| ClusterRow {
-                    id,
-                    representative_index: c.representative,
-                    representative: rep_data[id].result.label(),
-                    members: c.members.len() as u64,
-                    max_distance: max_distance[id],
-                    max_error_bound_rel: max_bound[id],
-                })
-                .collect(),
-        });
+        let (cells, clustering_summary) =
+            redistribute(&specs, &members, &clustering, &rep_data, &self.prices, tolerance);
         CampaignReport {
             campaign: campaign.name.clone(),
             seed: campaign.seed,
@@ -487,6 +443,74 @@ impl CampaignRunner {
             clustering: clustering_summary,
         }
     }
+}
+
+/// Redistribute representative results to every grid cell, in grid
+/// order — pure arithmetic, so the caller's worker topology (thread
+/// count, worker count, shard size) cannot leak into the report. Shared
+/// by [`CampaignRunner::run_clustered`] and the distributed driver
+/// ([`crate::dist::driver`]), which is what keeps the two paths
+/// byte-identical by construction rather than by coincidence.
+pub(crate) fn redistribute(
+    specs: &[CellSpec],
+    members: &[Vec<Vec<cell::MemberInfo>>],
+    clustering: &cluster::Clustering,
+    rep_data: &[cluster::RepData],
+    prices: &PriceBook,
+    tolerance: f64,
+) -> (Vec<CellResult>, Option<ClusterSummary>) {
+    let exact_mode = !(tolerance > 0.0);
+    let n = clustering.clusters.len();
+    let mut max_distance = vec![0.0f64; n];
+    let mut max_bound = vec![0.0f64; n];
+    let mut cells = Vec::with_capacity(specs.len());
+    for (i, spec) in specs.iter().enumerate() {
+        let a = &clustering.assignment[i];
+        let rd = &rep_data[a.cluster];
+        if clustering.clusters[a.cluster].representative == i {
+            let mut r = rd.result.clone();
+            r.provenance =
+                (!exact_mode).then_some(CellProvenance::Exact { cluster: a.cluster });
+            cells.push(r);
+        } else {
+            let profile = cluster::profile_cell(spec, &members[spec.dataset_index]);
+            let r = cluster::extrapolate_cell(
+                rd,
+                clustering.clusters[a.cluster].representative,
+                a.cluster,
+                spec,
+                &profile,
+                a.distance,
+                prices,
+            );
+            if let Some(CellProvenance::Extrapolated {
+                error_bound_rel, ..
+            }) = &r.provenance
+            {
+                max_bound[a.cluster] = max_bound[a.cluster].max(*error_bound_rel);
+            }
+            max_distance[a.cluster] = max_distance[a.cluster].max(a.distance);
+            cells.push(r);
+        }
+    }
+
+    let clustering_summary = (!exact_mode).then(|| ClusterSummary {
+        tolerance,
+        clusters: clustering
+            .clusters
+            .iter()
+            .enumerate()
+            .map(|(id, c)| ClusterRow {
+                id,
+                representative_index: c.representative,
+                representative: rep_data[id].result.label(),
+                members: c.members.len() as u64,
+                max_distance: max_distance[id],
+                max_error_bound_rel: max_bound[id],
+            })
+            .collect(),
+    });
+    (cells, clustering_summary)
 }
 
 #[cfg(test)]
@@ -676,6 +700,33 @@ mod tests {
             report.to_json().to_string_pretty(),
             again.to_json().to_string_pretty()
         );
+    }
+
+    #[test]
+    fn cells_iter_is_pinned_to_the_materialized_order() {
+        // the lazy iterator must replay cells() exactly: same order,
+        // same indices, same derived seeds — the distributed driver
+        // deals shards off it, so any drift would silently change the
+        // grid a worker executes
+        for c in [
+            small_campaign(0xFEED),
+            Campaign::paper_automotive_extended(0xD5),
+        ] {
+            let eager = c.cells();
+            let lazy: Vec<CellSpec> = c.cells_iter().collect();
+            assert_eq!(eager.len(), lazy.len());
+            for (e, l) in eager.iter().zip(&lazy) {
+                assert_eq!(e.index, l.index);
+                assert_eq!(e.variant.name, l.variant.name);
+                assert_eq!(e.load.name, l.load.name);
+                assert_eq!(e.dataset_index, l.dataset_index);
+                assert_eq!(e.dataset_name, l.dataset_name);
+                assert_eq!(e.seed, l.seed);
+            }
+        }
+        // an empty axis yields an empty grid, not a division panic
+        let empty = Campaign::new("empty", 1);
+        assert_eq!(empty.cells_iter().count(), 0);
     }
 
     #[test]

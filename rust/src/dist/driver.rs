@@ -1,0 +1,525 @@
+//! The sharding driver: deals campaign cells and validation cases
+//! across fleet workers and merges the results deterministically.
+//!
+//! ## Determinism guarantee
+//!
+//! A distributed report is **byte-identical** to the serial
+//! single-process run, regardless of worker count, shard size, or
+//! reply arrival order. Three facts combine to make that structural
+//! rather than coincidental:
+//!
+//! 1. Seeds are never negotiated: every worker re-derives the grid (and
+//!    each cell's seed) from the shipped campaign definition through
+//!    [`Campaign::cells_iter`] — the same derivation the local thread
+//!    pool runs.
+//! 2. Each result carries its grid index and lands in its own slot;
+//!    the merged vector is read out in grid order, so arrival order is
+//!    invisible.
+//! 3. Cells are pure functions of `(seed, variant, load, dataset)`, so
+//!    a shard re-executed after a worker failure produces the *same
+//!    bytes* on the survivor — double-fill is harmless by construction.
+//!
+//! ## Failure semantics
+//!
+//! Shards are dealt work-stealing style off a shared queue: fast
+//! workers take more shards, a failed or disconnected worker's
+//! outstanding shard is pushed back and retried by the survivors (with
+//! a one-shot warning via [`crate::util::log::warn_once`]). Only when
+//! *every* worker has died with work still queued does the run fail.
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::{Mutex, Once};
+use std::time::Duration;
+
+use crate::campaign::{
+    cell, cluster, redistribute, Campaign, CampaignReport, CellResult,
+};
+use crate::cost::PriceBook;
+use crate::util::log::warn_once;
+use crate::validate::suite::{SuiteReport, ValidationSuite};
+
+use super::proto::{self, Msg, PROTO_VERSION};
+
+/// Default number of grid cells per shard.
+pub const DEFAULT_SHARD_CELLS: usize = 8;
+
+/// One-shot gate for the "lost a worker, requeueing" warning.
+static WORKER_LOSS_GATE: Once = Once::new();
+
+/// Client for a fleet of `plantd worker` processes.
+pub struct FleetClient {
+    /// Worker endpoints, `host:port`.
+    pub endpoints: Vec<String>,
+    /// Grid cells per `RunCells` shard (validation always ships one
+    /// case per shard — cases are minutes-long, cells are not).
+    pub shard_cells: usize,
+    /// TCP connect timeout per worker.
+    pub connect_timeout: Duration,
+    /// Read/write timeout per protocol exchange; generous because a
+    /// shard legitimately takes as long as its slowest cell.
+    pub io_timeout: Duration,
+    /// Price book used for redistribution arithmetic (must match the
+    /// workers', which use the default book).
+    pub prices: PriceBook,
+}
+
+impl FleetClient {
+    /// A client over the given endpoints with default shard size,
+    /// timeouts, and price book.
+    pub fn new(endpoints: Vec<String>) -> FleetClient {
+        FleetClient {
+            endpoints,
+            shard_cells: DEFAULT_SHARD_CELLS,
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(600),
+            prices: PriceBook::default(),
+        }
+    }
+
+    /// Override the shard size (builder style); clamped to ≥ 1.
+    pub fn with_shard_cells(mut self, shard_cells: usize) -> FleetClient {
+        self.shard_cells = shard_cells.max(1);
+        self
+    }
+
+    /// Execute a campaign across the fleet. `cluster_tolerance` mirrors
+    /// [`crate::campaign::CampaignRunner::cluster_tolerance`]: `None`
+    /// is exhaustive, `Some(t)` clusters locally and ships only the
+    /// representatives. Either way the report is byte-identical to the
+    /// corresponding single-process run.
+    pub fn run_campaign(
+        &self,
+        campaign: &Campaign,
+        cluster_tolerance: Option<f64>,
+    ) -> Result<CampaignReport, String> {
+        // fail fast on non-preset variants: the wire carries preset
+        // names only (proto module docs)
+        for v in &campaign.variants {
+            if crate::pipeline::VariantConfig::by_name(v.name).is_none() {
+                return Err(format!(
+                    "variant '{}' is not a preset; distributed execution ships variants by name",
+                    v.name
+                ));
+            }
+        }
+        match cluster_tolerance {
+            None => self.run_exhaustive(campaign),
+            Some(t) => self.run_clustered(campaign, t),
+        }
+    }
+
+    /// Exhaustive distribution: every grid cell is shipped, in shards
+    /// of [`FleetClient::shard_cells`]. The driver never materializes
+    /// `CellSpec`s at all — indices are enough, because workers rebuild
+    /// the grid themselves.
+    fn run_exhaustive(&self, campaign: &Campaign) -> Result<CampaignReport, String> {
+        let n = campaign.n_cells();
+        let indices: Vec<usize> = (0..n).collect();
+        let requests: Vec<(Msg, Vec<usize>)> = indices
+            .chunks(self.shard_cells.max(1))
+            .map(|chunk| {
+                (
+                    Msg::RunCells {
+                        campaign: campaign.clone(),
+                        cells: chunk.to_vec(),
+                        full: false,
+                    },
+                    chunk.to_vec(),
+                )
+            })
+            .collect();
+        let cells: Vec<CellResult> = self.distribute(requests, n, |reply| match reply {
+            Msg::CellResults { cells } => Ok(cells
+                .into_iter()
+                .map(|e| (e.index, e.result))
+                .collect()),
+            other => Err(format!("unexpected reply '{}'", other.type_name())),
+        })?;
+        Ok(CampaignReport {
+            campaign: campaign.name.clone(),
+            seed: campaign.seed,
+            cells,
+            clustering: None,
+        })
+    }
+
+    /// Clustered distribution: featurize + cluster locally (pure
+    /// arithmetic), ship only each cluster's representative with
+    /// `full: true` so the raw latency samples come back, then run the
+    /// exact same [`redistribute`] the single-process clustered path
+    /// runs — which is what keeps the two byte-identical.
+    fn run_clustered(
+        &self,
+        campaign: &Campaign,
+        tolerance: f64,
+    ) -> Result<CampaignReport, String> {
+        let specs = campaign.cells();
+        let datasets = campaign.build_datasets();
+        let members: Vec<Vec<Vec<cell::MemberInfo>>> =
+            datasets.iter().map(cell::decode_members).collect();
+        let features = cluster::featurize_campaign(campaign, &specs);
+        let clustering = cluster::cluster_greedy(&features, tolerance);
+        let reps: Vec<usize> = clustering
+            .clusters
+            .iter()
+            .map(|c| c.representative)
+            .collect();
+
+        // slots are positions in the reps list; replies carry grid
+        // indices, so map them back
+        let pos_of: std::collections::HashMap<usize, usize> =
+            reps.iter().enumerate().map(|(p, &gi)| (gi, p)).collect();
+        let requests: Vec<(Msg, Vec<usize>)> = reps
+            .chunks(self.shard_cells.max(1))
+            .map(|chunk| {
+                (
+                    Msg::RunCells {
+                        campaign: campaign.clone(),
+                        cells: chunk.to_vec(),
+                        full: true,
+                    },
+                    chunk.iter().map(|gi| pos_of[gi]).collect(),
+                )
+            })
+            .collect();
+        let rep_results: Vec<(CellResult, Vec<f64>)> =
+            self.distribute(requests, reps.len(), |reply| match reply {
+                Msg::CellResults { cells } => cells
+                    .into_iter()
+                    .map(|e| {
+                        let pos = *pos_of
+                            .get(&e.index)
+                            .ok_or_else(|| format!("cell {} is not a representative", e.index))?;
+                        let lat = e
+                            .latencies
+                            .ok_or("representative reply is missing latency samples")?;
+                        Ok((pos, (e.result, lat)))
+                    })
+                    .collect(),
+                other => Err(format!("unexpected reply '{}'", other.type_name())),
+            })?;
+
+        let rep_data: Vec<cluster::RepData> = reps
+            .iter()
+            .zip(rep_results)
+            .map(|(&gi, (result, latencies))| {
+                let spec = &specs[gi];
+                cluster::RepData {
+                    result,
+                    latencies: crate::campaign::edist::EDist::from_samples(&latencies),
+                    profile: cluster::profile_cell(spec, &members[spec.dataset_index]),
+                }
+            })
+            .collect();
+        let (cells, clustering_summary) = redistribute(
+            &specs,
+            &members,
+            &clustering,
+            &rep_data,
+            &self.prices,
+            tolerance,
+        );
+        Ok(CampaignReport {
+            campaign: campaign.name.clone(),
+            seed: campaign.seed,
+            cells,
+            clustering: clustering_summary,
+        })
+    }
+
+    /// Execute a subset of the queueing validation suite across the
+    /// fleet, one case per shard (cases run for minutes; cells do not).
+    /// `indices` address `ValidationSuite::queueing().cases`; results
+    /// come back in `indices` order, byte-identical to running the same
+    /// cases locally.
+    pub fn run_queueing_cases(&self, indices: &[usize]) -> Result<SuiteReport, String> {
+        let suite = ValidationSuite::queueing();
+        let mut seen = vec![false; suite.cases.len()];
+        for &i in indices {
+            if i >= suite.cases.len() {
+                return Err(format!(
+                    "case index {i} out of range (queueing suite has {} cases)",
+                    suite.cases.len()
+                ));
+            }
+            if std::mem::replace(&mut seen[i], true) {
+                return Err(format!("case index {i} listed twice"));
+            }
+        }
+        let pos_of: std::collections::HashMap<usize, usize> =
+            indices.iter().enumerate().map(|(p, &gi)| (gi, p)).collect();
+        let requests: Vec<(Msg, Vec<usize>)> = indices
+            .iter()
+            .enumerate()
+            .map(|(p, &gi)| (Msg::RunValidation { cases: vec![gi] }, vec![p]))
+            .collect();
+        let results = self.distribute(requests, indices.len(), |reply| match reply {
+            Msg::ValidationResults { cases } => cases
+                .into_iter()
+                .map(|e| {
+                    let pos = *pos_of
+                        .get(&e.index)
+                        .ok_or_else(|| format!("case {} was not requested", e.index))?;
+                    Ok((pos, e.result))
+                })
+                .collect(),
+            other => Err(format!("unexpected reply '{}'", other.type_name())),
+        })?;
+        Ok(SuiteReport {
+            suite: suite.name.clone(),
+            results,
+        })
+    }
+
+    /// Run the full queueing suite across the fleet; byte-identical to
+    /// `ValidationSuite::queueing().run(threads)` at any worker count.
+    pub fn run_queueing(&self) -> Result<SuiteReport, String> {
+        let n = ValidationSuite::queueing().cases.len();
+        let indices: Vec<usize> = (0..n).collect();
+        self.run_queueing_cases(&indices)
+    }
+
+    /// The work-stealing shard loop shared by every distributed run.
+    ///
+    /// `requests` pairs each shard message with the result-slot ids it
+    /// is expected to fill; `parse` turns a reply into `(slot, value)`
+    /// pairs. One thread per endpoint pops shards off a shared queue;
+    /// any failure (connect, I/O timeout, worker `Err`, short or
+    /// malformed reply) requeues the shard and retires that worker.
+    fn distribute<R, F>(
+        &self,
+        requests: Vec<(Msg, Vec<usize>)>,
+        n_slots: usize,
+        parse: F,
+    ) -> Result<Vec<R>, String>
+    where
+        R: Send,
+        F: Fn(Msg) -> Result<Vec<(usize, R)>, String> + Sync,
+    {
+        if self.endpoints.is_empty() {
+            return Err("no worker endpoints configured".to_string());
+        }
+        let queue: Mutex<VecDeque<(Msg, Vec<usize>)>> = Mutex::new(requests.into());
+        let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n_slots).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for endpoint in &self.endpoints {
+                let parse = &parse;
+                let queue = &queue;
+                let slots = &slots;
+                scope.spawn(move || {
+                    let mut stream = match self.connect(endpoint) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            warn_once(
+                                &WORKER_LOSS_GATE,
+                                &format!("fleet worker {endpoint} unavailable ({e}); its shards go to the survivors"),
+                            );
+                            return;
+                        }
+                    };
+                    loop {
+                        let shard = queue.lock().unwrap().pop_front();
+                        let Some((req, expect)) = shard else { break };
+                        match exchange(&mut stream, &req, &expect, parse) {
+                            Ok(pairs) => {
+                                let mut sl = slots.lock().unwrap();
+                                for (slot, value) in pairs {
+                                    sl[slot] = Some(value);
+                                }
+                            }
+                            Err(e) => {
+                                warn_once(
+                                    &WORKER_LOSS_GATE,
+                                    &format!("fleet worker {endpoint} failed ({e}); requeueing its shard on the survivors"),
+                                );
+                                queue.lock().unwrap().push_front((req, expect));
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let merged = slots.into_inner().unwrap();
+        let missing = merged.iter().filter(|s| s.is_none()).count();
+        if missing > 0 {
+            return Err(format!(
+                "all fleet workers failed with {missing} result slot(s) unfilled"
+            ));
+        }
+        Ok(merged.into_iter().map(|s| s.unwrap()).collect())
+    }
+
+    /// Connect to one endpoint and complete the versioned handshake.
+    fn connect(&self, endpoint: &str) -> Result<TcpStream, String> {
+        let mut stream =
+            open_stream(endpoint, self.connect_timeout, self.io_timeout)?;
+        handshake(&mut stream, endpoint)?;
+        Ok(stream)
+    }
+}
+
+/// Resolve and open a TCP connection with timeouts applied.
+fn open_stream(
+    endpoint: &str,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+) -> Result<TcpStream, String> {
+    let addrs: Vec<SocketAddr> = endpoint
+        .to_socket_addrs()
+        .map_err(|e| format!("cannot resolve '{endpoint}': {e}"))?
+        .collect();
+    let addr = addrs
+        .first()
+        .ok_or_else(|| format!("'{endpoint}' resolved to no addresses"))?;
+    let stream = TcpStream::connect_timeout(addr, connect_timeout)
+        .map_err(|e| format!("cannot connect to {endpoint}: {e}"))?;
+    stream
+        .set_read_timeout(Some(io_timeout))
+        .map_err(|e| e.to_string())?;
+    stream
+        .set_write_timeout(Some(io_timeout))
+        .map_err(|e| e.to_string())?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+/// Hello/ack exchange on a fresh stream.
+fn handshake(stream: &mut TcpStream, endpoint: &str) -> Result<(), String> {
+    proto::send_msg(
+        stream,
+        &Msg::Hello {
+            version: PROTO_VERSION,
+        },
+    )
+    .map_err(|e| format!("handshake send to {endpoint} failed: {e}"))?;
+    match proto::recv_msg(stream) {
+        Ok(Msg::Ack { version }) if version == PROTO_VERSION => Ok(()),
+        Ok(Msg::Ack { version }) => Err(format!(
+            "{endpoint} speaks protocol v{version}, this driver speaks v{PROTO_VERSION}"
+        )),
+        Ok(Msg::Err { msg }) => Err(format!("{endpoint} refused the handshake: {msg}")),
+        Ok(other) => Err(format!(
+            "{endpoint} answered the handshake with '{}'",
+            other.type_name()
+        )),
+        Err(e) => Err(format!("handshake with {endpoint} failed: {e}")),
+    }
+}
+
+/// One request/reply exchange; validates the reply fills exactly the
+/// expected slots.
+fn exchange<R, F>(
+    stream: &mut TcpStream,
+    req: &Msg,
+    expect: &[usize],
+    parse: &F,
+) -> Result<Vec<(usize, R)>, String>
+where
+    F: Fn(Msg) -> Result<Vec<(usize, R)>, String>,
+{
+    proto::send_msg(stream, req).map_err(|e| format!("send failed: {e}"))?;
+    let reply = proto::recv_msg(stream).map_err(|e| e.to_string())?;
+    if let Msg::Err { msg } = reply {
+        return Err(format!("worker error: {msg}"));
+    }
+    let pairs = parse(reply)?;
+    if pairs.len() != expect.len() {
+        return Err(format!(
+            "short reply: {} of {} shard results",
+            pairs.len(),
+            expect.len()
+        ));
+    }
+    for (slot, _) in &pairs {
+        if !expect.contains(slot) {
+            return Err(format!("reply filled unexpected slot {slot}"));
+        }
+    }
+    Ok(pairs)
+}
+
+/// Health-check one worker endpoint: connect and complete the
+/// handshake within `timeout`. This is what the Fleet controller arm
+/// runs per declared worker.
+pub fn hello(endpoint: &str, timeout: Duration) -> Result<(), String> {
+    let mut stream = open_stream(endpoint, timeout, timeout)?;
+    handshake(&mut stream, endpoint)
+}
+
+/// Ask a worker process to shut down (handshake + [`Msg::Shutdown`],
+/// awaiting the ack). Used by CI to stop background workers cleanly.
+pub fn shutdown(endpoint: &str, timeout: Duration) -> Result<(), String> {
+    let mut stream = open_stream(endpoint, timeout, timeout)?;
+    handshake(&mut stream, endpoint)?;
+    proto::send_msg(&mut stream, &Msg::Shutdown).map_err(|e| e.to_string())?;
+    match proto::recv_msg(&mut stream) {
+        Ok(Msg::Ack { .. }) => Ok(()),
+        Ok(other) => Err(format!(
+            "shutdown answered with '{}', expected ack",
+            other.type_name()
+        )),
+        Err(e) => Err(e.to_string()),
+    }
+}
+
+/// Parse a comma-separated `host:port,host:port` workers list (the
+/// `--workers` flag and the Fleet spec's addr validation share this).
+pub fn parse_endpoints(s: &str) -> Result<Vec<String>, String> {
+    let endpoints: Vec<String> = s
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(str::to_string)
+        .collect();
+    if endpoints.is_empty() {
+        return Err("workers list is empty".to_string());
+    }
+    for e in &endpoints {
+        let Some((host, port)) = e.rsplit_once(':') else {
+            return Err(format!("worker '{e}' is not host:port"));
+        };
+        if host.is_empty() {
+            return Err(format!("worker '{e}' has an empty host"));
+        }
+        if port.parse::<u16>().is_err() {
+            return Err(format!("worker '{e}' has an invalid port '{port}'"));
+        }
+    }
+    Ok(endpoints)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_lists_parse_and_reject() {
+        assert_eq!(
+            parse_endpoints("127.0.0.1:7401, 127.0.0.1:7402").unwrap(),
+            vec!["127.0.0.1:7401", "127.0.0.1:7402"]
+        );
+        assert!(parse_endpoints("").is_err());
+        assert!(parse_endpoints("localhost").is_err(), "no port");
+        assert!(parse_endpoints("host:99999").is_err(), "port overflow");
+        assert!(parse_endpoints(":7401").is_err(), "empty host");
+    }
+
+    #[test]
+    fn empty_fleet_and_dead_endpoint_fail_readably() {
+        let client = FleetClient::new(vec![]);
+        let err = client
+            .run_campaign(&Campaign::paper_automotive(1), None)
+            .unwrap_err();
+        assert!(err.contains("no worker endpoints"), "{err}");
+        // connecting to a port nothing listens on surfaces as "all
+        // workers failed", not a hang (connect_timeout applies)
+        let mut client = FleetClient::new(vec!["127.0.0.1:1".to_string()]);
+        client.connect_timeout = Duration::from_millis(200);
+        let err = client.run_queueing_cases(&[]).is_ok();
+        // zero cases → zero slots → trivially complete even with no
+        // reachable worker
+        assert!(err, "empty work should not require a live fleet");
+    }
+}

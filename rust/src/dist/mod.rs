@@ -1,0 +1,28 @@
+//! Distributed campaign execution: shard grid cells and validation
+//! cases across `plantd worker` processes, byte-identically.
+//!
+//! One box's thread pool caps sweep scale; this module is the path to
+//! production-scale sweeps (ROADMAP item 2, mirroring Parsimon's TCP
+//! worker). It splits along its concerns:
+//!
+//! - [`proto`] — the wire format: length-prefixed JSON frames with a
+//!   hard size bound, a versioned hello/ack handshake, typed messages,
+//!   and bit-exact float/seed codecs;
+//! - [`worker`] — the server (`plantd worker --port P`): an accept
+//!   loop that rebuilds shipped campaigns and executes cell/case
+//!   shards on a local thread pool;
+//! - [`driver`] — the client ([`driver::FleetClient`]): deals shards
+//!   work-stealing style over the fleet, survives worker failures by
+//!   requeueing on the survivors, and merges results in grid order.
+//!
+//! The headline guarantee extends `tests/campaign_determinism.rs`
+//! across processes: **a distributed report is byte-identical to the
+//! serial single-process run** for any worker count, shard size,
+//! arrival order — and even a mid-run worker crash. Fleets are also
+//! declarable: the `Fleet` resource kind names worker endpoints, and
+//! Experiment/Validation resources reference it by name
+//! ([`crate::resources`]). See `docs/DISTRIBUTED.md`.
+
+pub mod driver;
+pub mod proto;
+pub mod worker;

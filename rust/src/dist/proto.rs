@@ -1,0 +1,850 @@
+//! The fleet wire protocol: length-prefixed JSON frames and typed
+//! messages.
+//!
+//! ## Framing
+//!
+//! Every message travels as one frame: a `u32` big-endian payload
+//! length followed by exactly that many payload bytes. The length is
+//! bounded by [`MAX_FRAME`] and must be non-zero; both bounds are
+//! checked *before* any allocation, so a corrupt or hostile length
+//! prefix can never make a worker allocate gigabytes. The payload is a
+//! compact-serialized JSON object carrying a `"type"` tag — see
+//! [`Msg`].
+//!
+//! ## Handshake
+//!
+//! A connection opens with `Hello { version }` from the client and
+//! `Ack { version }` from the worker. A version mismatch is answered
+//! with `Err` and the connection is closed — the framing layer is
+//! version-independent, so even a future incompatible peer gets a
+//! readable refusal instead of a hang.
+//!
+//! ## Error taxonomy
+//!
+//! [`RecvError`] splits failures into two classes with different
+//! recovery semantics:
+//!
+//! - [`RecvError::Frame`] — the byte stream itself is broken (EOF,
+//!   short read, zero-length or over-limit frame). Nothing after it can
+//!   be trusted; the connection must be closed.
+//! - [`RecvError::Decode`] — the frame arrived intact but its payload
+//!   is not a valid message (bad UTF-8, bad JSON, unknown type, bad
+//!   field). The framing layer is still sound, so the worker answers
+//!   `Err` and keeps serving.
+//!
+//! ## Float fidelity
+//!
+//! The report writer ([`crate::util::json`]) serializes non-finite
+//! numbers as `null` and trims integral floats — fine for reports,
+//! fatal for a wire format that promises **byte-identical** distributed
+//! reports (empty cells legitimately carry NaN latencies). Every `f64`
+//! therefore crosses the wire as its exact 16-hex-digit IEEE-754 bit
+//! pattern and every `u64` (seeds span the full range, beyond f64's
+//! 2^53 integer window) as a `0x`-prefixed hex string. Decode restores
+//! the bits verbatim, so NaN payloads, `-0.0`, infinities, and
+//! subnormals all round-trip exactly.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::campaign::{Campaign, CellResult, DataSetCase, LoadCase};
+use crate::datagen::DataSetSpec;
+use crate::loadgen::{LoadPattern, Segment};
+use crate::pipeline::VariantConfig;
+use crate::util::json::Json;
+use crate::validate::suite::{CaseResult, MetricCheck};
+
+/// Protocol version spoken by this build; carried in the handshake.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Hard upper bound on a frame payload (16 MiB). Checked before
+/// allocating on receive and before sending.
+pub const MAX_FRAME: usize = 16 * 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one frame: `u32` big-endian payload length, then the payload.
+/// Empty and over-[`MAX_FRAME`] payloads are refused with
+/// `InvalidInput` — the receiver would reject them anyway.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.is_empty() {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "refusing to send an empty frame",
+        ));
+    }
+    if payload.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+                payload.len()
+            ),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame payload. Zero-length and over-[`MAX_FRAME`] length
+/// prefixes are rejected with `InvalidData` *before* any allocation;
+/// EOF and short reads surface as the underlying I/O error.
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<Vec<u8>> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_be_bytes(len_bytes) as usize;
+    if len == 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "zero-length frame",
+        ));
+    }
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME ({MAX_FRAME})"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// Why receiving a message failed — see the module docs for the
+/// recovery semantics of each class.
+#[derive(Debug)]
+pub enum RecvError {
+    /// The byte stream is broken; close the connection.
+    Frame(String),
+    /// The frame was sound but the payload was not a valid message;
+    /// answer `Err` and keep the connection.
+    Decode(String),
+}
+
+impl fmt::Display for RecvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecvError::Frame(m) => write!(f, "frame error: {m}"),
+            RecvError::Decode(m) => write!(f, "decode error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Serialize and send one [`Msg`] as a frame.
+pub fn send_msg<W: Write>(w: &mut W, msg: &Msg) -> io::Result<()> {
+    write_frame(w, msg.to_json().to_string_compact().as_bytes())
+}
+
+/// Receive and decode one [`Msg`].
+pub fn recv_msg<R: Read>(r: &mut R) -> Result<Msg, RecvError> {
+    let bytes = read_frame(r).map_err(|e| RecvError::Frame(e.to_string()))?;
+    let text = std::str::from_utf8(&bytes)
+        .map_err(|e| RecvError::Decode(format!("frame payload is not UTF-8: {e}")))?;
+    let json = Json::parse(text).map_err(|e| RecvError::Decode(e.to_string()))?;
+    Msg::from_json(&json).map_err(RecvError::Decode)
+}
+
+// ---------------------------------------------------------------------------
+// bit-exact scalar codecs
+// ---------------------------------------------------------------------------
+
+/// Encode an `f64` as its exact IEEE-754 bit pattern (16 hex digits).
+pub fn f64_to_wire(x: f64) -> Json {
+    Json::str(format!("{:016x}", x.to_bits()))
+}
+
+/// Decode an `f64` encoded by [`f64_to_wire`], restoring the bits
+/// verbatim (NaN, `-0.0`, infinities, subnormals included).
+pub fn f64_from_wire(j: &Json) -> Result<f64, String> {
+    let s = j
+        .as_str()
+        .ok_or("expected a 16-hex-digit float bit pattern string")?;
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(format!("'{s}' is not a 16-hex-digit float bit pattern"));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad float bit pattern '{s}': {e}"))
+}
+
+/// Encode a `u64` as a `0x`-prefixed hex string (f64-backed JSON
+/// numbers lose integers beyond 2^53; seeds span the full range).
+pub fn u64_to_wire(v: u64) -> Json {
+    Json::str(format!("{v:#x}"))
+}
+
+/// Decode a `u64` encoded by [`u64_to_wire`].
+pub fn u64_from_wire(j: &Json) -> Result<u64, String> {
+    let s = j.as_str().ok_or("expected a 0x-prefixed hex string")?;
+    let hex = s
+        .strip_prefix("0x")
+        .ok_or_else(|| format!("'{s}' is missing the 0x prefix"))?;
+    u64::from_str_radix(hex, 16).map_err(|e| format!("bad hex integer '{s}': {e}"))
+}
+
+// field accessors with path-bearing error messages --------------------------
+
+fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json, String> {
+    obj.get(key).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn wstr(obj: &Json, key: &str) -> Result<String, String> {
+    field(obj, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| format!("field '{key}' must be a string"))
+}
+
+fn wf64(obj: &Json, key: &str) -> Result<f64, String> {
+    f64_from_wire(field(obj, key)?).map_err(|e| format!("field '{key}': {e}"))
+}
+
+fn wu64(obj: &Json, key: &str) -> Result<u64, String> {
+    u64_from_wire(field(obj, key)?).map_err(|e| format!("field '{key}': {e}"))
+}
+
+fn wusize(obj: &Json, key: &str) -> Result<usize, String> {
+    field(obj, key)?
+        .as_u64()
+        .map(|v| v as usize)
+        .ok_or_else(|| format!("field '{key}' must be a non-negative integer"))
+}
+
+fn wbool(obj: &Json, key: &str) -> Result<bool, String> {
+    field(obj, key)?
+        .as_bool()
+        .ok_or_else(|| format!("field '{key}' must be a boolean"))
+}
+
+fn warr<'a>(obj: &'a Json, key: &str) -> Result<&'a [Json], String> {
+    field(obj, key)?
+        .as_arr()
+        .ok_or_else(|| format!("field '{key}' must be an array"))
+}
+
+fn windex_list(obj: &Json, key: &str) -> Result<Vec<usize>, String> {
+    warr(obj, key)?
+        .iter()
+        .map(|j| {
+            j.as_u64()
+                .map(|v| v as usize)
+                .ok_or_else(|| format!("field '{key}' must hold non-negative integers"))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// campaign codec
+// ---------------------------------------------------------------------------
+
+/// Encode a [`Campaign`] definition for shipping to a worker. Variants
+/// travel as their stable preset names ([`VariantConfig::by_name`]) —
+/// distributed execution supports preset variants only, which is the
+/// invariant the decode side enforces.
+pub fn campaign_to_wire(c: &Campaign) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(c.name.clone())),
+        ("seed", u64_to_wire(c.seed)),
+        (
+            "variants",
+            Json::arr(c.variants.iter().map(|v| Json::str(v.name))),
+        ),
+        (
+            "loads",
+            Json::arr(c.loads.iter().map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(l.name.clone())),
+                    (
+                        "segments",
+                        Json::arr(l.pattern.segments.iter().map(|s| {
+                            Json::obj(vec![
+                                ("duration_s", f64_to_wire(s.duration_s)),
+                                ("start_rps", f64_to_wire(s.start_rps)),
+                                ("end_rps", f64_to_wire(s.end_rps)),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+        (
+            "datasets",
+            Json::arr(c.datasets.iter().map(|d| {
+                Json::obj(vec![
+                    ("name", Json::str(d.name.clone())),
+                    ("payloads", Json::num(d.spec.payloads as f64)),
+                    (
+                        "records_per_subsystem",
+                        Json::num(d.spec.records_per_subsystem as f64),
+                    ),
+                    ("bad_rate", f64_to_wire(d.spec.bad_rate)),
+                    ("seed", u64_to_wire(d.spec.seed)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Decode a shipped campaign. Every value is validated *before* any
+/// constructor that could panic runs (`LoadPattern::new` asserts on
+/// bad segments; `Campaign::dataset` asserts on empty payload pools) —
+/// a worker must answer garbage with `Err`, never with a panic.
+pub fn campaign_from_wire(j: &Json) -> Result<Campaign, String> {
+    let name = wstr(j, "name")?;
+    let seed = wu64(j, "seed")?;
+    let mut c = Campaign::new(&name, seed);
+    for v in warr(j, "variants")? {
+        let vname = v
+            .as_str()
+            .ok_or("field 'variants' must hold variant name strings")?;
+        let cfg = VariantConfig::by_name(vname).ok_or_else(|| {
+            format!(
+                "unknown variant '{vname}' (known: {})",
+                VariantConfig::known_names().join(", ")
+            )
+        })?;
+        c.variants.push(cfg);
+    }
+    for l in warr(j, "loads")? {
+        let lname = wstr(l, "name")?;
+        let mut segments = Vec::new();
+        for s in warr(l, "segments")? {
+            let seg = Segment {
+                duration_s: wf64(s, "duration_s")?,
+                start_rps: wf64(s, "start_rps")?,
+                end_rps: wf64(s, "end_rps")?,
+            };
+            if !(seg.duration_s.is_finite() && seg.duration_s > 0.0) {
+                return Err(format!(
+                    "load '{lname}': segment duration must be finite and positive"
+                ));
+            }
+            if !(seg.start_rps.is_finite()
+                && seg.end_rps.is_finite()
+                && seg.start_rps >= 0.0
+                && seg.end_rps >= 0.0)
+            {
+                return Err(format!(
+                    "load '{lname}': segment rates must be finite and non-negative"
+                ));
+            }
+            segments.push(seg);
+        }
+        c.loads.push(LoadCase {
+            name: lname,
+            pattern: LoadPattern::new(segments),
+        });
+    }
+    for d in warr(j, "datasets")? {
+        let dname = wstr(d, "name")?;
+        let spec = DataSetSpec {
+            payloads: wusize(d, "payloads")?,
+            records_per_subsystem: wusize(d, "records_per_subsystem")?,
+            bad_rate: wf64(d, "bad_rate")?,
+            seed: wu64(d, "seed")?,
+        };
+        if spec.payloads == 0 {
+            return Err(format!(
+                "dataset '{dname}' must have at least one payload"
+            ));
+        }
+        if !(spec.bad_rate.is_finite() && spec.bad_rate >= 0.0) {
+            return Err(format!(
+                "dataset '{dname}': bad_rate must be finite and non-negative"
+            ));
+        }
+        c.datasets.push(DataSetCase { name: dname, spec });
+    }
+    Ok(c)
+}
+
+// ---------------------------------------------------------------------------
+// result codecs
+// ---------------------------------------------------------------------------
+
+/// One executed cell in a [`Msg::CellResults`] reply: the grid index it
+/// belongs to, its result, and (for cluster representatives) the raw
+/// end-to-end latency samples redistribution needs.
+#[derive(Debug, Clone)]
+pub struct CellEntry {
+    /// Grid index of the executed cell.
+    pub index: usize,
+    /// The cell's measurements. Provenance never travels: the driver
+    /// annotates clustered results locally during redistribution.
+    pub result: CellResult,
+    /// Raw latency samples, present only for `full: true` requests.
+    pub latencies: Option<Vec<f64>>,
+}
+
+/// One executed validation case in a [`Msg::ValidationResults`] reply.
+#[derive(Debug, Clone)]
+pub struct CaseEntry {
+    /// Index into the queueing suite's case roster.
+    pub index: usize,
+    /// The case's measured-vs-analytic checks.
+    pub result: CaseResult,
+}
+
+fn cell_result_to_wire(r: &CellResult) -> Json {
+    Json::obj(vec![
+        ("variant", Json::str(r.variant.clone())),
+        ("load", Json::str(r.load.clone())),
+        ("dataset", Json::str(r.dataset.clone())),
+        ("seed", u64_to_wire(r.seed)),
+        ("zips", u64_to_wire(r.zips)),
+        ("files", u64_to_wire(r.files)),
+        ("rows", u64_to_wire(r.rows)),
+        ("duration_s", f64_to_wire(r.duration_s)),
+        ("throughput_rps", f64_to_wire(r.throughput_rps)),
+        ("latency_mean_s", f64_to_wire(r.latency_mean_s)),
+        ("latency_p50_s", f64_to_wire(r.latency_p50_s)),
+        ("latency_p95_s", f64_to_wire(r.latency_p95_s)),
+        ("latency_p99_s", f64_to_wire(r.latency_p99_s)),
+        ("cost_per_hr_usd", f64_to_wire(r.cost_per_hr_usd)),
+        ("run_cost_usd", f64_to_wire(r.run_cost_usd)),
+        ("annual_cost_usd", f64_to_wire(r.annual_cost_usd)),
+        ("cost_per_record_usd", f64_to_wire(r.cost_per_record_usd)),
+        ("spans_collected", u64_to_wire(r.spans_collected)),
+        ("metered_cpu_s", f64_to_wire(r.metered_cpu_s)),
+    ])
+}
+
+fn cell_result_from_wire(j: &Json) -> Result<CellResult, String> {
+    Ok(CellResult {
+        variant: wstr(j, "variant")?,
+        load: wstr(j, "load")?,
+        dataset: wstr(j, "dataset")?,
+        seed: wu64(j, "seed")?,
+        zips: wu64(j, "zips")?,
+        files: wu64(j, "files")?,
+        rows: wu64(j, "rows")?,
+        duration_s: wf64(j, "duration_s")?,
+        throughput_rps: wf64(j, "throughput_rps")?,
+        latency_mean_s: wf64(j, "latency_mean_s")?,
+        latency_p50_s: wf64(j, "latency_p50_s")?,
+        latency_p95_s: wf64(j, "latency_p95_s")?,
+        latency_p99_s: wf64(j, "latency_p99_s")?,
+        cost_per_hr_usd: wf64(j, "cost_per_hr_usd")?,
+        run_cost_usd: wf64(j, "run_cost_usd")?,
+        annual_cost_usd: wf64(j, "annual_cost_usd")?,
+        cost_per_record_usd: wf64(j, "cost_per_record_usd")?,
+        spans_collected: wu64(j, "spans_collected")?,
+        metered_cpu_s: wf64(j, "metered_cpu_s")?,
+        provenance: None,
+    })
+}
+
+fn cell_entry_to_wire(e: &CellEntry) -> Json {
+    let mut fields = vec![
+        ("index", Json::num(e.index as f64)),
+        ("result", cell_result_to_wire(&e.result)),
+    ];
+    if let Some(lat) = &e.latencies {
+        fields.push(("latencies", Json::arr(lat.iter().map(|&x| f64_to_wire(x)))));
+    }
+    Json::obj(fields)
+}
+
+fn cell_entry_from_wire(j: &Json) -> Result<CellEntry, String> {
+    let latencies = match j.get("latencies") {
+        None => None,
+        Some(arr) => Some(
+            arr.as_arr()
+                .ok_or("field 'latencies' must be an array")?
+                .iter()
+                .map(f64_from_wire)
+                .collect::<Result<Vec<f64>, String>>()?,
+        ),
+    };
+    Ok(CellEntry {
+        index: wusize(j, "index")?,
+        result: cell_result_from_wire(field(j, "result")?)?,
+        latencies,
+    })
+}
+
+fn case_result_to_wire(r: &CaseResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(r.name.clone())),
+        ("seed", u64_to_wire(r.seed)),
+        ("arrivals", Json::num(r.arrivals as f64)),
+        ("events", u64_to_wire(r.events)),
+        ("makespan_s", f64_to_wire(r.makespan_s)),
+        (
+            "checks",
+            Json::arr(r.checks.iter().map(|c| {
+                Json::obj(vec![
+                    ("metric", Json::str(c.metric.clone())),
+                    ("analytic", f64_to_wire(c.analytic)),
+                    ("measured", f64_to_wire(c.measured)),
+                    ("err", f64_to_wire(c.err)),
+                    ("tol", f64_to_wire(c.tol)),
+                    ("mode", Json::str(c.mode)),
+                    ("pass", Json::Bool(c.pass)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn case_result_from_wire(j: &Json) -> Result<CaseResult, String> {
+    let mut checks = Vec::new();
+    for c in warr(j, "checks")? {
+        // `mode` is a &'static str in MetricCheck; map the wire string
+        // back onto the two statics the suite uses
+        let mode = match wstr(c, "mode")?.as_str() {
+            "rel" => "rel",
+            "abs" => "abs",
+            other => return Err(format!("unknown check mode '{other}' (rel|abs)")),
+        };
+        checks.push(MetricCheck {
+            metric: wstr(c, "metric")?,
+            analytic: wf64(c, "analytic")?,
+            measured: wf64(c, "measured")?,
+            err: wf64(c, "err")?,
+            tol: wf64(c, "tol")?,
+            mode,
+            pass: wbool(c, "pass")?,
+        });
+    }
+    Ok(CaseResult {
+        name: wstr(j, "name")?,
+        seed: wu64(j, "seed")?,
+        arrivals: wusize(j, "arrivals")?,
+        events: wu64(j, "events")?,
+        makespan_s: wf64(j, "makespan_s")?,
+        checks,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// messages
+// ---------------------------------------------------------------------------
+
+/// A protocol message, JSON-encoded with a `"type"` tag.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Client → worker connection opener.
+    Hello {
+        /// Protocol version the client speaks.
+        version: u32,
+    },
+    /// Worker → client handshake acceptance (also acknowledges
+    /// [`Msg::Shutdown`]).
+    Ack {
+        /// Protocol version the worker speaks.
+        version: u32,
+    },
+    /// Execute a shard of campaign grid cells.
+    RunCells {
+        /// The full campaign definition; the worker re-derives the
+        /// grid (and every per-cell seed) from it exactly as the local
+        /// thread pool does.
+        campaign: Campaign,
+        /// Grid indices of the cells to execute.
+        cells: Vec<usize>,
+        /// When true, include raw latency samples per cell (cluster
+        /// representatives need them for redistribution).
+        full: bool,
+    },
+    /// Reply to [`Msg::RunCells`]: one entry per requested cell.
+    CellResults {
+        /// Executed cells, in the shard's request order.
+        cells: Vec<CellEntry>,
+    },
+    /// Execute a shard of queueing-suite validation cases by index.
+    RunValidation {
+        /// Indices into `ValidationSuite::queueing().cases`.
+        cases: Vec<usize>,
+    },
+    /// Reply to [`Msg::RunValidation`]: one entry per requested case.
+    ValidationResults {
+        /// Executed cases, in the shard's request order.
+        cases: Vec<CaseEntry>,
+    },
+    /// Ask the worker process to stop accepting connections and exit.
+    Shutdown,
+    /// Any failure the peer should read about (decode errors, unknown
+    /// cell indices, version mismatches).
+    Err {
+        /// Human-readable description.
+        msg: String,
+    },
+}
+
+impl Msg {
+    /// The message's `"type"` tag (for logs and error messages).
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "hello",
+            Msg::Ack { .. } => "ack",
+            Msg::RunCells { .. } => "run_cells",
+            Msg::CellResults { .. } => "cell_results",
+            Msg::RunValidation { .. } => "run_validation",
+            Msg::ValidationResults { .. } => "validation_results",
+            Msg::Shutdown => "shutdown",
+            Msg::Err { .. } => "err",
+        }
+    }
+
+    /// Canonical JSON encoding (sorted keys; deterministic, so two
+    /// encodings of equal messages are byte-equal).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("type", Json::str(self.type_name()))];
+        match self {
+            Msg::Hello { version } | Msg::Ack { version } => {
+                fields.push(("version", Json::num(*version as f64)));
+            }
+            Msg::RunCells {
+                campaign,
+                cells,
+                full,
+            } => {
+                fields.push(("campaign", campaign_to_wire(campaign)));
+                fields.push((
+                    "cells",
+                    Json::arr(cells.iter().map(|&i| Json::num(i as f64))),
+                ));
+                fields.push(("full", Json::Bool(*full)));
+            }
+            Msg::CellResults { cells } => {
+                fields.push(("cells", Json::arr(cells.iter().map(cell_entry_to_wire))));
+            }
+            Msg::RunValidation { cases } => {
+                fields.push((
+                    "cases",
+                    Json::arr(cases.iter().map(|&i| Json::num(i as f64))),
+                ));
+            }
+            Msg::ValidationResults { cases } => {
+                fields.push((
+                    "cases",
+                    Json::arr(cases.iter().map(|e| {
+                        Json::obj(vec![
+                            ("index", Json::num(e.index as f64)),
+                            ("result", case_result_to_wire(&e.result)),
+                        ])
+                    })),
+                ));
+            }
+            Msg::Shutdown => {}
+            Msg::Err { msg } => fields.push(("msg", Json::str(msg.clone()))),
+        }
+        Json::obj(fields)
+    }
+
+    /// Decode a message from its JSON form; errors are
+    /// [`RecvError::Decode`]-class.
+    pub fn from_json(j: &Json) -> Result<Msg, String> {
+        let tag = j
+            .get_str("type")
+            .ok_or("message has no string 'type' tag")?;
+        match tag {
+            "hello" => Ok(Msg::Hello {
+                version: wusize(j, "version")? as u32,
+            }),
+            "ack" => Ok(Msg::Ack {
+                version: wusize(j, "version")? as u32,
+            }),
+            "run_cells" => Ok(Msg::RunCells {
+                campaign: campaign_from_wire(field(j, "campaign")?)
+                    .map_err(|e| format!("bad campaign: {e}"))?,
+                cells: windex_list(j, "cells")?,
+                full: wbool(j, "full")?,
+            }),
+            "cell_results" => Ok(Msg::CellResults {
+                cells: warr(j, "cells")?
+                    .iter()
+                    .map(cell_entry_from_wire)
+                    .collect::<Result<Vec<CellEntry>, String>>()?,
+            }),
+            "run_validation" => Ok(Msg::RunValidation {
+                cases: windex_list(j, "cases")?,
+            }),
+            "validation_results" => Ok(Msg::ValidationResults {
+                cases: warr(j, "cases")?
+                    .iter()
+                    .map(|e| {
+                        Ok(CaseEntry {
+                            index: wusize(e, "index")?,
+                            result: case_result_from_wire(field(e, "result")?)?,
+                        })
+                    })
+                    .collect::<Result<Vec<CaseEntry>, String>>()?,
+            }),
+            "shutdown" => Ok(Msg::Shutdown),
+            "err" => Ok(Msg::Err {
+                msg: wstr(j, "msg")?,
+            }),
+            other => Err(format!("unknown message type '{other}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_wire_is_bit_exact_for_the_awkward_values() {
+        for x in [
+            0.0,
+            -0.0,
+            1.5,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE / 2.0, // subnormal
+            1e-300,
+            std::f64::consts::PI,
+        ] {
+            let back = f64_from_wire(&f64_to_wire(x)).unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x} did not round-trip");
+        }
+        assert!(f64_from_wire(&Json::str("xyz")).is_err());
+        assert!(f64_from_wire(&Json::num(1.0)).is_err());
+        assert!(f64_from_wire(&Json::str("0123456789abcde")).is_err(), "15 digits");
+    }
+
+    #[test]
+    fn u64_wire_survives_the_full_range() {
+        for v in [0u64, 1, u64::MAX, 1 << 53, (1 << 53) + 1] {
+            assert_eq!(u64_from_wire(&u64_to_wire(v)).unwrap(), v);
+        }
+        assert!(u64_from_wire(&Json::str("123")).is_err(), "prefix required");
+    }
+
+    #[test]
+    fn campaign_round_trips_through_the_wire() {
+        let c = Campaign::paper_automotive_extended(0xD5);
+        let wire = campaign_to_wire(&c);
+        let back = campaign_from_wire(&wire).unwrap();
+        // the canonical wire encoding doubles as an equality check
+        assert_eq!(
+            wire.to_string_compact(),
+            campaign_to_wire(&back).to_string_compact()
+        );
+        // and the re-derived grid is the same grid
+        let a = c.cells();
+        let b = back.cells();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.variant.name, y.variant.name);
+        }
+    }
+
+    #[test]
+    fn campaign_decode_rejects_bad_shapes_instead_of_panicking() {
+        let base = campaign_to_wire(&Campaign::paper_automotive(1)).to_string_compact();
+        // unknown variant
+        let j = Json::parse(&base.replace("blocking-write", "warp-drive")).unwrap();
+        assert!(campaign_from_wire(&j).unwrap_err().contains("warp-drive"));
+        // a zero-duration segment must be refused before LoadPattern::new
+        let zero = f64_to_wire(0.0).to_string_compact();
+        let sixty = f64_to_wire(120.0).to_string_compact();
+        let j = Json::parse(&base.replace(&sixty, &zero)).unwrap();
+        assert!(campaign_from_wire(&j).is_err());
+    }
+
+    #[test]
+    fn frame_bounds_are_enforced_on_both_sides() {
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, b"").is_err());
+        write_frame(&mut buf, b"hello").unwrap();
+        assert_eq!(buf.len(), 4 + 5);
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+
+        // an over-limit length prefix is rejected without allocating
+        let huge = (u32::MAX).to_be_bytes();
+        let mut r: &[u8] = &huge;
+        assert!(read_frame(&mut r).is_err());
+        let mut r: &[u8] = &[0, 0, 0, 0];
+        assert!(read_frame(&mut r).is_err(), "zero-length frame");
+        let mut r: &[u8] = &[0, 0, 0, 9, b'x'];
+        assert!(read_frame(&mut r).is_err(), "truncated payload");
+    }
+
+    #[test]
+    fn every_message_kind_round_trips() {
+        let case = crate::validate::suite::ValidationSuite::queueing().cases[0].clone();
+        let result = CaseResult {
+            name: case.name.clone(),
+            seed: case.seed,
+            arrivals: 10,
+            events: u64::MAX,
+            makespan_s: f64::NAN,
+            checks: vec![MetricCheck {
+                metric: "utilization".into(),
+                analytic: 0.5,
+                measured: -0.0,
+                err: f64::INFINITY,
+                tol: 0.02,
+                mode: "abs",
+                pass: false,
+            }],
+        };
+        let cell = CellResult {
+            variant: "blocking-write".into(),
+            load: "steady".into(),
+            dataset: "tiny".into(),
+            seed: u64::MAX,
+            zips: 0,
+            files: 0,
+            rows: 0,
+            duration_s: 1e-9,
+            throughput_rps: 0.0,
+            latency_mean_s: f64::NAN,
+            latency_p50_s: f64::NAN,
+            latency_p95_s: f64::NAN,
+            latency_p99_s: f64::NAN,
+            cost_per_hr_usd: 0.1,
+            run_cost_usd: 0.2,
+            annual_cost_usd: 0.3,
+            cost_per_record_usd: f64::NAN,
+            spans_collected: 0,
+            metered_cpu_s: 0.0,
+            provenance: None,
+        };
+        let msgs = vec![
+            Msg::Hello { version: 1 },
+            Msg::Ack { version: 7 },
+            Msg::RunCells {
+                campaign: Campaign::paper_automotive(3),
+                cells: vec![0, 2, 5],
+                full: true,
+            },
+            Msg::CellResults {
+                cells: vec![CellEntry {
+                    index: 4,
+                    result: cell,
+                    latencies: Some(vec![f64::NAN, -0.0, 1.25]),
+                }],
+            },
+            Msg::RunValidation { cases: vec![3, 4] },
+            Msg::ValidationResults {
+                cases: vec![CaseEntry { index: 3, result }],
+            },
+            Msg::Shutdown,
+            Msg::Err {
+                msg: "nope".into(),
+            },
+        ];
+        for m in msgs {
+            let wire = m.to_json().to_string_compact();
+            let back = Msg::from_json(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(
+                wire,
+                back.to_json().to_string_compact(),
+                "message '{}' did not round-trip",
+                m.type_name()
+            );
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! The `plantd worker` server: executes shipped campaign-cell and
+//! validation-case shards over the fleet protocol.
+//!
+//! A worker is deliberately stateless between connections: each
+//! [`Msg::RunCells`] request carries the *full* campaign definition,
+//! and the worker re-derives the grid — every [`CellSpec`] and every
+//! per-cell seed — from it through the exact same
+//! [`Campaign::cells_iter`] path the local thread pool uses. Determinism
+//! is therefore structural: there is no way for a worker to execute a
+//! cell with a different seed than the serial run would, because both
+//! sides run the same derivation from the same bytes.
+//!
+//! Within a connection, prepared campaigns (specs + generated datasets
+//! + decoded members) are cached keyed on the canonical wire encoding,
+//! so a driver dealing many shards of one campaign pays dataset
+//! generation once per worker, not once per shard.
+//!
+//! ## Failure containment
+//!
+//! Decode-class errors ([`proto::RecvError::Decode`], unknown grid or
+//! case indices, mid-stream `Hello`) are answered with [`Msg::Err`] and
+//! the connection keeps serving — a confused or malicious client cannot
+//! take a worker down. Frame-class errors close only the offending
+//! connection; the accept loop keeps running until [`Msg::Shutdown`].
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::campaign::{cell, Campaign, CellSpec};
+use crate::cost::PriceBook;
+use crate::datagen::DataSet;
+use crate::validate::suite::{run_case, ValidationSuite};
+
+use super::proto::{self, CaseEntry, CellEntry, Msg, RecvError, PROTO_VERSION};
+
+/// Shared server state: configuration plus the stop/fault machinery.
+struct WorkerCfg {
+    /// Worker-local thread-pool width for executing a shard.
+    threads: usize,
+    /// Set to stop the accept loop (checked when a connection arrives).
+    stop: AtomicBool,
+    /// `RunCells` requests served so far (drives `fault_after`).
+    served: AtomicUsize,
+    /// After serving this many `RunCells` requests, drop the next one's
+    /// connection without replying and stop accepting — the
+    /// worker-failure drill for driver tests.
+    fault_after: Option<usize>,
+    /// Own address, for the self-connect nudge that unblocks `accept`.
+    addr: SocketAddr,
+}
+
+impl WorkerCfg {
+    /// Flag the server stopped and poke the (blocking) accept loop.
+    fn shut_down(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // accept() is blocking; a throwaway self-connection makes it
+        // return so the loop can observe the stop flag
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+/// A campaign prepared for execution: materialized specs, generated
+/// datasets, and per-dataset decoded member facts — everything
+/// `run_cell` needs, built once per distinct campaign per connection.
+struct Prepared {
+    specs: Vec<CellSpec>,
+    datasets: Vec<DataSet>,
+    members: Vec<Vec<Vec<cell::MemberInfo>>>,
+}
+
+impl Prepared {
+    fn build(campaign: &Campaign) -> Prepared {
+        let specs = campaign.cells();
+        let datasets = campaign.build_datasets();
+        let members = datasets.iter().map(cell::decode_members).collect();
+        Prepared {
+            specs,
+            datasets,
+            members,
+        }
+    }
+}
+
+/// Handle to an in-process worker started by [`spawn_local`]: tests and
+/// benches use it to run real driver↔worker TCP traffic over loopback
+/// without spawning processes.
+pub struct WorkerHandle {
+    addr: SocketAddr,
+    cfg: Arc<WorkerCfg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// The worker's bound loopback address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The worker's endpoint in the `host:port` form the driver and the
+    /// Fleet spec use.
+    pub fn endpoint(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Stop the accept loop and join the server thread. Idempotent;
+    /// also runs on drop.
+    pub fn stop(&mut self) {
+        self.cfg.shut_down();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start an in-process worker on an ephemeral loopback port.
+///
+/// `fault_after: Some(n)` arms the failure drill: the worker serves `n`
+/// `RunCells` requests normally, then *drops the connection without
+/// replying* on the next one and stops accepting — exactly the
+/// mid-campaign crash the driver must survive by requeueing the shard
+/// on the surviving workers.
+pub fn spawn_local(threads: usize, fault_after: Option<usize>) -> io::Result<WorkerHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let cfg = Arc::new(WorkerCfg {
+        threads: threads.max(1),
+        stop: AtomicBool::new(false),
+        served: AtomicUsize::new(0),
+        fault_after,
+        addr,
+    });
+    let loop_cfg = Arc::clone(&cfg);
+    let join = std::thread::spawn(move || accept_loop(listener, loop_cfg));
+    Ok(WorkerHandle {
+        addr,
+        cfg,
+        join: Some(join),
+    })
+}
+
+/// Run a worker in the foreground (the `plantd worker` verb): bind,
+/// announce the address on stdout, and serve until a [`Msg::Shutdown`]
+/// arrives. `port` 0 binds an ephemeral port (printed).
+pub fn serve(bind: &str, port: u16, threads: usize) -> io::Result<()> {
+    let listener = TcpListener::bind((bind, port))?;
+    let addr = listener.local_addr()?;
+    println!("plantd worker listening on {addr} (threads {}, protocol v{PROTO_VERSION})", threads.max(1));
+    use std::io::Write as _;
+    let _ = io::stdout().flush();
+    let cfg = Arc::new(WorkerCfg {
+        threads: threads.max(1),
+        stop: AtomicBool::new(false),
+        served: AtomicUsize::new(0),
+        fault_after: None,
+        addr,
+    });
+    accept_loop(listener, cfg);
+    Ok(())
+}
+
+/// Accept connections until the stop flag is raised. Each connection is
+/// served on its own thread, so a slow shard on one connection never
+/// blocks the handshake of another.
+fn accept_loop(listener: TcpListener, cfg: Arc<WorkerCfg>) {
+    for conn in listener.incoming() {
+        if cfg.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if let Ok(stream) = conn {
+            let cfg = Arc::clone(&cfg);
+            std::thread::spawn(move || handle_connection(stream, &cfg));
+        }
+    }
+}
+
+/// Serve one connection: handshake, then request/reply until the peer
+/// hangs up, breaks framing, or asks for shutdown.
+fn handle_connection(mut stream: TcpStream, cfg: &WorkerCfg) {
+    // versioned handshake; anything else is refused readably
+    match proto::recv_msg(&mut stream) {
+        Ok(Msg::Hello { version }) if version == PROTO_VERSION => {
+            if proto::send_msg(
+                &mut stream,
+                &Msg::Ack {
+                    version: PROTO_VERSION,
+                },
+            )
+            .is_err()
+            {
+                return;
+            }
+        }
+        Ok(Msg::Hello { version }) => {
+            let _ = proto::send_msg(
+                &mut stream,
+                &Msg::Err {
+                    msg: format!(
+                        "unsupported protocol version {version} (worker speaks {PROTO_VERSION})"
+                    ),
+                },
+            );
+            return;
+        }
+        Ok(other) => {
+            let _ = proto::send_msg(
+                &mut stream,
+                &Msg::Err {
+                    msg: format!("expected hello, got '{}'", other.type_name()),
+                },
+            );
+            return;
+        }
+        Err(_) => return,
+    }
+
+    // per-connection cache of prepared campaigns, keyed on the
+    // canonical wire encoding of the campaign definition
+    let mut cache: HashMap<String, Arc<Prepared>> = HashMap::new();
+    let prices = PriceBook::default();
+
+    loop {
+        let msg = match proto::recv_msg(&mut stream) {
+            Ok(m) => m,
+            Err(RecvError::Decode(e)) => {
+                // the framing layer is still sound: report and carry on
+                if proto::send_msg(&mut stream, &Msg::Err { msg: e }).is_err() {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvError::Frame(_)) => return, // includes clean EOF
+        };
+        let reply = match msg {
+            Msg::RunCells {
+                campaign,
+                cells,
+                full,
+            } => {
+                if let Some(n) = cfg.fault_after {
+                    if cfg.served.load(Ordering::SeqCst) >= n {
+                        // the armed fault: die mid-request, no reply
+                        cfg.shut_down();
+                        return;
+                    }
+                }
+                cfg.served.fetch_add(1, Ordering::SeqCst);
+                let key = proto::campaign_to_wire(&campaign).to_string_compact();
+                let prep = Arc::clone(
+                    cache
+                        .entry(key)
+                        .or_insert_with(|| Arc::new(Prepared::build(&campaign))),
+                );
+                run_cells(&prep, &cells, full, cfg.threads, &prices)
+            }
+            Msg::RunValidation { cases } => run_validation(&cases, cfg.threads),
+            Msg::Shutdown => {
+                let _ = proto::send_msg(
+                    &mut stream,
+                    &Msg::Ack {
+                        version: PROTO_VERSION,
+                    },
+                );
+                cfg.shut_down();
+                return;
+            }
+            other => Msg::Err {
+                msg: format!("unexpected message '{}'", other.type_name()),
+            },
+        };
+        if proto::send_msg(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// Execute a shard of grid cells on the worker's thread pool (same
+/// atomic-cursor distribution as [`crate::campaign::CampaignRunner`])
+/// and package the reply. Bad indices yield [`Msg::Err`], not a panic.
+fn run_cells(
+    prep: &Prepared,
+    cells: &[usize],
+    full: bool,
+    threads: usize,
+    prices: &PriceBook,
+) -> Msg {
+    if let Some(&bad) = cells.iter().find(|&&i| i >= prep.specs.len()) {
+        return Msg::Err {
+            msg: format!(
+                "cell index {bad} out of range (grid has {} cells)",
+                prep.specs.len()
+            ),
+        };
+    }
+    let n = cells.len();
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<CellEntry>>> = Mutex::new((0..n).map(|_| None).collect());
+    let workers = threads.min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::SeqCst);
+                if k >= n {
+                    break;
+                }
+                let gi = cells[k];
+                let spec = &prep.specs[gi];
+                let dataset = &prep.datasets[spec.dataset_index];
+                let members = &prep.members[spec.dataset_index];
+                let entry = if full {
+                    let (result, latencies) =
+                        cell::run_cell_full(spec, dataset, members, prices);
+                    CellEntry {
+                        index: gi,
+                        result,
+                        latencies: Some(latencies),
+                    }
+                } else {
+                    CellEntry {
+                        index: gi,
+                        result: cell::run_cell(spec, dataset, members, prices),
+                        latencies: None,
+                    }
+                };
+                out.lock().unwrap()[k] = Some(entry);
+            });
+        }
+    });
+    Msg::CellResults {
+        cells: out
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|e| e.expect("every shard cell executed"))
+            .collect(),
+    }
+}
+
+/// Execute a shard of queueing-suite cases (by roster index) on the
+/// thread pool. Bad indices yield [`Msg::Err`].
+fn run_validation(cases: &[usize], threads: usize) -> Msg {
+    let suite = ValidationSuite::queueing();
+    if let Some(&bad) = cases.iter().find(|&&i| i >= suite.cases.len()) {
+        return Msg::Err {
+            msg: format!(
+                "case index {bad} out of range (queueing suite has {} cases)",
+                suite.cases.len()
+            ),
+        };
+    }
+    let n = cases.len();
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<CaseEntry>>> = Mutex::new((0..n).map(|_| None).collect());
+    let workers = threads.min(n.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::SeqCst);
+                if k >= n {
+                    break;
+                }
+                let gi = cases[k];
+                let result = run_case(&suite.cases[gi]);
+                out.lock().unwrap()[k] = Some(CaseEntry { index: gi, result });
+            });
+        }
+    });
+    Msg::ValidationResults {
+        cases: out
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|e| e.expect("every shard case executed"))
+            .collect(),
+    }
+}

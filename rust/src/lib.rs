@@ -67,6 +67,7 @@ pub mod campaign;
 pub mod cloud;
 pub mod cost;
 pub mod datagen;
+pub mod dist;
 pub mod experiment;
 pub mod loadgen;
 pub mod pipeline;

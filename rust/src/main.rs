@@ -2,8 +2,8 @@
 //!
 //! The declarative resource registry is the front door: a manifest of
 //! typed resources (Schema, DataSet, LoadPattern, Pipeline, Experiment,
-//! TrafficModel, DigitalTwin, Simulation) is applied, reconciled, and
-//! executed by the controller. See `docs/RESOURCES.md`.
+//! TrafficModel, DigitalTwin, Simulation, Validation, Fleet) is applied,
+//! reconciled, and executed by the controller. See `docs/RESOURCES.md`.
 //!
 //! ```text
 //! plantd apply -f <manifest.json>      register + reconcile resources
@@ -34,7 +34,12 @@
 //!     parallel {variant × load × dataset} sweep; prints a ranked
 //!     CampaignReport (same seed ⇒ byte-identical numbers); with a
 //!     cluster tolerance, simulates one representative per cell
-//!     cluster and extrapolates the rest (marked, with error bounds)
+//!     cluster and extrapolates the rest (marked, with error bounds);
+//!     with --workers host:port,..., deals the grid to remote
+//!     `plantd worker` processes instead of the local thread pool —
+//!     still byte-identical (docs/DISTRIBUTED.md)
+//! plantd worker    --port P [--bind A] [--threads N]
+//!     serve campaign cell shards and validation cases to a driver
 //! plantd resources (demo of the declarative resource registry)
 //! plantd demo      [--out DIR] [--scale X]
 //!     the full paper reproduction: experiments → twins → simulations →
@@ -54,8 +59,8 @@ use plantd::pipeline::VariantConfig;
 use plantd::report;
 use plantd::resources::controller::Controller;
 use plantd::resources::spec::{
-    DataSetSpecRes, DigitalTwinSpec, ExperimentSpec, PipelineSpec, ResourceSpec,
-    SchemaSpec, SimulationSpec, TrafficModelSpec,
+    DataSetSpecRes, DigitalTwinSpec, ExperimentSpec, FleetSpec, PipelineSpec,
+    ResourceSpec, SchemaSpec, SimulationSpec, TrafficModelSpec,
 };
 use plantd::resources::{Kind, Phase, Registry};
 use plantd::runtime::{default_backend, SimBackend};
@@ -64,7 +69,7 @@ use plantd::twin::TwinParams;
 use plantd::util::cli::Args;
 use plantd::util::json::Json;
 use plantd::util::units;
-use plantd::validate::{snapshot, SnapshotMode};
+use plantd::validate::{snapshot, SnapshotMode, ValidationRun};
 
 const HELP: &str = "plantd — a data-pipeline wind tunnel (PlantD reproduction)
 
@@ -90,6 +95,14 @@ VALIDATION (prove the sim kernel against ground truth, docs/VALIDATION.md)
     --threads N      worker threads for the queueing cases (default 4)
     --golden DIR     golden directory (default tests/golden)
     --out DIR        also write validation.json to DIR
+    --workers H:P,.. run the queueing cases on remote workers instead
+                     (queueing suite only; byte-identical report)
+
+DISTRIBUTED EXECUTION (shard work across processes, docs/DISTRIBUTED.md)
+  worker             serve campaign cells / validation cases over TCP
+    --port P         listen port (required)
+    --bind A         bind address (default 127.0.0.1)
+    --threads N      sim threads per shard (default 4)
 
 LEGACY SUBCOMMANDS (shims over the same controller)
   generate    synthesize a telematics dataset (--payloads, --records, --seed)
@@ -124,6 +137,11 @@ CAMPAIGN OPTIONS
                      in the report with an error bound); T = 0 runs the
                      clustered path but reproduces the exhaustive
                      report byte-for-byte
+  --workers H:P,...  execute on these `plantd worker` endpoints instead
+                     of the local thread pool; the report stays
+                     byte-identical to the serial run for any worker
+                     count, shard size, or arrival order
+  --shard-cells N    grid cells per shard dealt to a worker (default 8)
   --out DIR          also write the report JSON to DIR/campaign.json
 
 EXPERIMENT OPTIONS
@@ -166,6 +184,7 @@ fn main() -> ExitCode {
         "retention" => cmd_retention(&args),
         "campaign" => cmd_campaign(&args),
         "validate" => cmd_validate(&args),
+        "worker" => cmd_worker(&args),
         "resources" => cmd_resources(),
         "demo" => cmd_demo(&args),
         "help" | "--help" => {
@@ -726,17 +745,41 @@ fn cmd_campaign(args: &Args) -> CmdResult {
         return Ok(());
     }
     let name = format!("campaign-{grid}");
+    // --workers: synthesize a Fleet resource alongside the campaign so
+    // the manifest written by shim_notice replays the distributed run
+    let mut resources = Vec::new();
+    let fleet = match args.opt("workers") {
+        None => None,
+        Some(list) => {
+            let endpoints =
+                plantd::dist::driver::parse_endpoints(list).map_err(anyhow::Error::msg)?;
+            let shard_cells =
+                args.opt_u64("shard-cells", 8).map_err(anyhow::Error::msg)? as usize;
+            if shard_cells == 0 {
+                anyhow::bail!("--shard-cells must be > 0");
+            }
+            let fs = FleetSpec {
+                workers: endpoints
+                    .iter()
+                    .enumerate()
+                    .map(|(i, addr)| (format!("w{i}"), addr.clone()))
+                    .collect(),
+                shard_cells,
+            };
+            resources.push(resource_json("Fleet", "cli-workers", fs.to_json()));
+            Some("cli-workers".to_string())
+        }
+    };
     let spec = ExperimentSpec::Campaign {
         grid: grid.clone(),
         seed,
         threads,
         cluster_tolerance,
+        fleet,
         out: args.opt("out").map(str::to_string),
     };
-    let manifest = Json::obj(vec![(
-        "resources",
-        Json::arr([resource_json("Experiment", &name, spec.to_json())]),
-    )]);
+    resources.push(resource_json("Experiment", &name, spec.to_json()));
+    let manifest = Json::obj(vec![("resources", Json::arr(resources))]);
     shim_notice("campaign", args, &manifest, &CAMPAIGN_SHIM_GATE);
     let controller = Controller::new(Registry::new());
     controller
@@ -757,7 +800,6 @@ fn cmd_campaign(args: &Args) -> CmdResult {
 /// owns `--update`, which mutates the golden tree and therefore never
 /// runs through a resource.
 fn cmd_validate(args: &Args) -> CmdResult {
-    let suite = args.opt_or("suite", "all");
     let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
     let golden = args
         .opt("golden")
@@ -768,8 +810,37 @@ fn cmd_validate(args: &Args) -> CmdResult {
     } else {
         SnapshotMode::Verify
     };
-    let run = plantd::validate::run_suites(&suite, threads, &golden, mode)
-        .map_err(anyhow::Error::msg)?;
+    // --workers: run the queueing cases on remote workers. Only that
+    // suite can travel — snapshots/perf read the local tree and clock —
+    // so the suite defaults to (and must be) "queueing" here.
+    let (suite, run) = if let Some(list) = args.opt("workers") {
+        let suite = args.opt_or("suite", "queueing");
+        if suite != "queueing" {
+            anyhow::bail!(
+                "--workers runs the queueing suite only (the '{suite}' suite \
+                 reads the local golden tree / clock)"
+            );
+        }
+        if args.flag("update") {
+            anyhow::bail!("--workers cannot combine with --update");
+        }
+        let endpoints =
+            plantd::dist::driver::parse_endpoints(list).map_err(anyhow::Error::msg)?;
+        let report = plantd::dist::driver::FleetClient::new(endpoints)
+            .run_queueing()
+            .map_err(anyhow::Error::msg)?;
+        let run = ValidationRun {
+            queueing: Some(report),
+            snapshots: None,
+            perf: None,
+        };
+        (suite, run)
+    } else {
+        let suite = args.opt_or("suite", "all");
+        let run = plantd::validate::run_suites(&suite, threads, &golden, mode)
+            .map_err(anyhow::Error::msg)?;
+        (suite, run)
+    };
     print!("{}", run.output());
     if let Some(dir) = args.opt("out") {
         // the combined report covers whichever suites ran (queueing
@@ -790,6 +861,24 @@ fn cmd_validate(args: &Args) -> CmdResult {
         );
     }
     Ok(())
+}
+
+/// `plantd worker --port P [--bind A] [--threads N]` — serve campaign
+/// cell shards and validation cases to a driver over the length-prefixed
+/// JSON protocol. Blocks until a driver sends Shutdown (or the process
+/// is killed); see `docs/DISTRIBUTED.md`.
+fn cmd_worker(args: &Args) -> CmdResult {
+    let port = args.opt_u64("port", 0).map_err(anyhow::Error::msg)?;
+    if port == 0 || port > u64::from(u16::MAX) {
+        anyhow::bail!("worker: need --port <1..65535>");
+    }
+    let bind = args.opt_or("bind", "127.0.0.1");
+    let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
+    if threads == 0 {
+        anyhow::bail!("worker: --threads must be > 0");
+    }
+    plantd::dist::worker::serve(&bind, port as u16, threads)
+        .map_err(|e| anyhow::anyhow!("worker: {e}"))
 }
 
 fn cmd_resources() -> CmdResult {

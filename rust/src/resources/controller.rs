@@ -40,8 +40,9 @@ use crate::util::units;
 use crate::validate::SnapshotMode;
 
 use super::spec::{
-    DigitalTwinSpec, ExperimentSpec, LoadPatternSpec, PipelineSpec, ResourceSpec,
-    SchemaSpec, SimulationSpec, TrafficModelSpec, TypedSpec, ValidationSpec,
+    DigitalTwinSpec, ExperimentSpec, FleetSpec, LoadPatternSpec, PipelineSpec,
+    ResourceSpec, SchemaSpec, SimulationSpec, TrafficModelSpec, TypedSpec,
+    ValidationSpec,
 };
 use super::{Kind, Phase, Registry, Resource};
 
@@ -429,7 +430,61 @@ impl Controller {
             }
             TypedSpec::Simulation(s) => self.exec_simulation(s),
             TypedSpec::Validation(s) => self.exec_validation(s),
+            TypedSpec::Fleet(s) => self.exec_fleet(s, res),
         }
+    }
+
+    /// "Run" a Fleet: health-check every worker endpoint with a protocol
+    /// handshake (hello/ack, ~2s timeout each). At least one worker must
+    /// answer for the run to Complete — a fully dark fleet is an
+    /// *execution* failure (retryable once workers come up), while a
+    /// partially-healthy fleet Completes with the roll call in its
+    /// status (the driver requeues shards around dead workers anyway).
+    fn exec_fleet(
+        &self,
+        s: &FleetSpec,
+        res: &Resource,
+    ) -> Result<(String, String, Json), String> {
+        let timeout = std::time::Duration::from_secs(2);
+        let mut output = String::new();
+        let mut worker_status = Vec::new();
+        let mut healthy = 0usize;
+        for (name, addr) in &s.workers {
+            let verdict = crate::dist::driver::hello(addr, timeout);
+            let mut fields = vec![
+                ("addr", Json::str(addr.clone())),
+                ("healthy", Json::Bool(verdict.is_ok())),
+                ("name", Json::str(name.clone())),
+            ];
+            match verdict {
+                Ok(()) => {
+                    healthy += 1;
+                    output += &format!("  worker '{name}' {addr}: ok\n");
+                }
+                Err(e) => {
+                    output += &format!("  worker '{name}' {addr}: {e}\n");
+                    fields.push(("error", Json::str(e)));
+                }
+            }
+            worker_status.push(Json::obj(fields));
+        }
+        let total = s.workers.len();
+        let summary =
+            format!("{healthy}/{total} worker(s) healthy, {} cells/shard", s.shard_cells);
+        let output = format!("Fleet/{}: {summary}\n{output}", res.name);
+        if healthy == 0 {
+            return Err(format!(
+                "fleet '{}': no worker answered the handshake \
+                 (start them with `plantd worker --port <p>`):\n{output}",
+                res.name
+            ));
+        }
+        let status = Json::obj(vec![
+            ("healthy", Json::Num(healthy as f64)),
+            ("shard_cells", Json::Num(s.shard_cells as f64)),
+            ("workers", Json::arr(worker_status)),
+        ]);
+        Ok((summary, output, status))
     }
 
     /// Run the conformance suite(s) a Validation resource names, through
@@ -450,8 +505,35 @@ impl Controller {
             .clone()
             .map(PathBuf::from)
             .unwrap_or_else(crate::validate::snapshot::default_golden_dir);
-        let run =
-            crate::validate::run_suites(&s.suite, s.threads, &dir, SnapshotMode::Verify)?;
+        let run = match &s.fleet {
+            // distributed leg: run the queueing cases on the named
+            // Fleet's workers (spec validation pinned suite == "queueing",
+            // so the golden tree is never needed remotely). The report is
+            // byte-identical to the local run — same cases, same seeds.
+            Some(fname) => {
+                let fs: FleetSpec = self.parse_ref(fname)?;
+                eprintln!(
+                    "validating on fleet '{fname}': {} worker(s)",
+                    fs.workers.len()
+                );
+                let endpoints: Vec<String> =
+                    fs.workers.iter().map(|(_, addr)| addr.clone()).collect();
+                let report = crate::dist::driver::FleetClient::new(endpoints)
+                    .with_shard_cells(fs.shard_cells)
+                    .run_queueing()?;
+                crate::validate::ValidationRun {
+                    queueing: Some(report),
+                    snapshots: None,
+                    perf: None,
+                }
+            }
+            None => crate::validate::run_suites(
+                &s.suite,
+                s.threads,
+                &dir,
+                SnapshotMode::Verify,
+            )?,
+        };
         let failed = run.failed();
         let total = run.targets();
         if failed.is_empty() {
@@ -522,6 +604,7 @@ impl Controller {
                 seed,
                 threads,
                 cluster_tolerance,
+                fleet,
                 out,
             } => {
                 let campaign = Campaign::from_grid_name(grid, *seed)?;
@@ -534,12 +617,33 @@ impl Controller {
                     campaign.n_cells(),
                     threads
                 );
-                let mut runner = CampaignRunner::new(*threads);
                 if let Some(t) = cluster_tolerance {
                     eprintln!("clustering cells at feature tolerance {t}");
-                    runner = runner.with_cluster_tolerance(*t);
                 }
-                let report = runner.run(&campaign);
+                let report = match fleet {
+                    // distributed execution: deal shards to the named
+                    // Fleet's workers (byte-identical report either way)
+                    Some(fname) => {
+                        let fs: FleetSpec = self.parse_ref(fname)?;
+                        eprintln!(
+                            "executing on fleet '{fname}': {} worker(s), {} cells/shard",
+                            fs.workers.len(),
+                            fs.shard_cells
+                        );
+                        let endpoints: Vec<String> =
+                            fs.workers.iter().map(|(_, addr)| addr.clone()).collect();
+                        crate::dist::driver::FleetClient::new(endpoints)
+                            .with_shard_cells(fs.shard_cells)
+                            .run_campaign(&campaign, *cluster_tolerance)?
+                    }
+                    None => {
+                        let mut runner = CampaignRunner::new(*threads);
+                        if let Some(t) = cluster_tolerance {
+                            runner = runner.with_cluster_tolerance(*t);
+                        }
+                        runner.run(&campaign)
+                    }
+                };
                 let mut output = format!("{}\n", report.render());
                 if let Some(dir) = out {
                     let path = std::path::Path::new(dir).join("campaign.json");
@@ -582,6 +686,9 @@ impl Controller {
                         "simulated_cells",
                         Json::Num(cs.clusters.len() as f64),
                     ));
+                }
+                if let Some(fname) = fleet {
+                    status.push(("fleet", Json::str(fname.clone())));
                 }
                 let status = Json::obj(status);
                 Ok((summary, output, status))

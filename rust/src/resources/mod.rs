@@ -5,7 +5,8 @@
 //! (Fig. 3): *Schema*, *DataSet*, *LoadPattern*, *Pipeline*, *Experiment*,
 //! *TrafficModel*, *DigitalTwin*, *Simulation* — plus the repo's own
 //! *Validation* kind (sim-kernel conformance suites, declarable in
-//! manifests like everything else). This module provides the
+//! manifests like everything else) and *Fleet* (named `plantd worker`
+//! endpoints for distributed execution). This module provides the
 //! in-process equivalent: typed specs ([`spec::ResourceSpec`]) registered
 //! by name, a status/phase state machine per resource, a reconciler that
 //! validates specs and resolves references between resources (an
@@ -51,6 +52,9 @@ pub enum Kind {
     /// Sim-kernel conformance suite (analytic oracle + golden
     /// snapshots) — see `docs/VALIDATION.md`.
     Validation,
+    /// Named set of `plantd worker` endpoints for distributed campaign
+    /// execution — see `docs/DISTRIBUTED.md`.
+    Fleet,
 }
 
 impl Kind {
@@ -66,11 +70,12 @@ impl Kind {
             Kind::DigitalTwin => "DigitalTwin",
             Kind::Simulation => "Simulation",
             Kind::Validation => "Validation",
+            Kind::Fleet => "Fleet",
         }
     }
 
     /// Every kind, in a stable order.
-    pub fn all() -> [Kind; 9] {
+    pub fn all() -> [Kind; 10] {
         [
             Kind::Schema,
             Kind::DataSet,
@@ -81,6 +86,7 @@ impl Kind {
             Kind::DigitalTwin,
             Kind::Simulation,
             Kind::Validation,
+            Kind::Fleet,
         ]
     }
 
@@ -536,8 +542,9 @@ mod tests {
         assert_eq!(Kind::parse("load_pattern"), Some(Kind::LoadPattern));
         assert_eq!(Kind::parse("digital-twin"), Some(Kind::DigitalTwin));
         assert_eq!(Kind::parse("validation"), Some(Kind::Validation));
+        assert_eq!(Kind::parse("fleet"), Some(Kind::Fleet));
         assert_eq!(Kind::parse("nope"), None);
-        assert_eq!(Kind::all().len(), 9, "Validation is the ninth kind");
+        assert_eq!(Kind::all().len(), 10, "Fleet is the tenth kind");
         assert_eq!(Phase::parse("Ready"), Some(Phase::Ready));
         assert_eq!(Phase::parse("ready"), None);
     }

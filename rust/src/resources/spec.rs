@@ -12,7 +12,7 @@
 //!
 //! [`TypedSpec`] is the closed-world dispatcher the [`super::Registry`]
 //! reconciler and the [`super::controller::Controller`] use to treat all
-//! nine kinds uniformly.
+//! ten kinds uniformly.
 
 use crate::campaign::Campaign;
 use crate::datagen::{DataSetSpec, FieldSpec};
@@ -318,6 +318,10 @@ pub enum ExperimentSpec {
         /// clustered code path but byte-identical to exhaustive, `> 0` =
         /// simulate representatives only and extrapolate members.
         cluster_tolerance: Option<f64>,
+        /// Referenced Fleet resource name: execute the grid on remote
+        /// `plantd worker` processes instead of the local thread pool
+        /// (byte-identical report either way — `docs/DISTRIBUTED.md`).
+        fleet: Option<String>,
         /// Optional directory to write `campaign.json` into.
         out: Option<String>,
     },
@@ -343,11 +347,20 @@ impl ResourceSpec for ExperimentSpec {
                         .ok_or("cluster_tolerance: expected a number")?,
                 ),
             };
+            let fleet = match c.get("fleet") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or("fleet: expected a string")?,
+                ),
+            };
             return Ok(ExperimentSpec::Campaign {
                 grid: str_field(c, "grid", "paper")?,
                 seed: seed_field(c, "seed", 0xD5)?,
                 threads: u64_field(c, "threads", 4)? as usize,
                 cluster_tolerance,
+                fleet,
                 out,
             });
         }
@@ -406,6 +419,7 @@ impl ResourceSpec for ExperimentSpec {
                 seed,
                 threads,
                 cluster_tolerance,
+                fleet,
                 out,
             } => {
                 let mut inner = vec![
@@ -415,6 +429,9 @@ impl ResourceSpec for ExperimentSpec {
                 ];
                 if let Some(t) = cluster_tolerance {
                     inner.push(("cluster_tolerance", Json::Num(*t)));
+                }
+                if let Some(f) = fleet {
+                    inner.push(("fleet", Json::str(f.clone())));
                 }
                 if let Some(dir) = out {
                     inner.push(("out", Json::str(dir.clone())));
@@ -483,7 +500,10 @@ impl ResourceSpec for ExperimentSpec {
                 deps.extend(pipelines.iter().map(|p| (Kind::Pipeline, p.clone())));
                 deps
             }
-            ExperimentSpec::Campaign { .. } => Vec::new(),
+            ExperimentSpec::Campaign { fleet, .. } => match fleet {
+                Some(f) => vec![(Kind::Fleet, f.clone())],
+                None => Vec::new(),
+            },
         }
     }
 }
@@ -715,6 +735,11 @@ pub struct ValidationSpec {
     /// Override the golden directory (default: `tests/golden`, or
     /// `$PLANTD_GOLDEN_DIR`).
     pub golden_dir: Option<String>,
+    /// Referenced Fleet resource name: run the queueing cases on remote
+    /// `plantd worker` processes. Only valid with `suite: "queueing"` —
+    /// the snapshot leg reads the local golden tree, which the fleet's
+    /// workers cannot see.
+    pub fleet: Option<String>,
 }
 
 impl ResourceSpec for ValidationSpec {
@@ -729,10 +754,19 @@ impl ResourceSpec for ValidationSpec {
                     .ok_or("golden_dir: expected a string")?,
             ),
         };
+        let fleet = match j.get("fleet") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or("fleet: expected a string")?,
+            ),
+        };
         Ok(ValidationSpec {
             suite: str_field(j, "suite", "queueing")?,
             threads: u64_field(j, "threads", 4)? as usize,
             golden_dir,
+            fleet,
         })
     }
 
@@ -743,6 +777,9 @@ impl ResourceSpec for ValidationSpec {
         ];
         if let Some(dir) = &self.golden_dir {
             fields.push(("golden_dir", Json::str(dir.clone())));
+        }
+        if let Some(f) = &self.fleet {
+            fields.push(("fleet", Json::str(f.clone())));
         }
         Json::obj(fields)
     }
@@ -756,6 +793,104 @@ impl ResourceSpec for ValidationSpec {
         }
         if self.threads == 0 {
             return Err("validation: threads must be > 0".into());
+        }
+        if self.fleet.is_some() && self.suite != "queueing" {
+            return Err(format!(
+                "validation: fleet execution only supports suite 'queueing' \
+                 (the '{}' suite reads the local golden tree)",
+                self.suite
+            ));
+        }
+        Ok(())
+    }
+
+    fn dependencies(&self) -> Vec<(Kind, String)> {
+        match &self.fleet {
+            Some(f) => vec![(Kind::Fleet, f.clone())],
+            None => Vec::new(),
+        }
+    }
+}
+
+// ----------------------------------------------------------------- Fleet
+
+/// *Fleet* spec: named `plantd worker` endpoints for distributed
+/// campaign/validation execution, plus the shard size the driver deals
+/// to them. Validation is shape-only — endpoints are *not* dialed here,
+/// so a Fleet reconciles to `Ready` before its workers are up; the
+/// controller's `run` health-checks each endpoint with a protocol
+/// handshake (see [`crate::dist`] and `docs/DISTRIBUTED.md`).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Named worker endpoints, `(name, "host:port")`.
+    pub workers: Vec<(String, String)>,
+    /// Grid cells per shard the driver deals to a worker at a time.
+    pub shard_cells: usize,
+}
+
+impl ResourceSpec for FleetSpec {
+    const KIND: Kind = Kind::Fleet;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        let arr = j
+            .get("workers")
+            .and_then(Json::as_arr)
+            .ok_or("fleet: missing 'workers' array")?;
+        let mut workers = Vec::with_capacity(arr.len());
+        for (i, w) in arr.iter().enumerate() {
+            let name = w
+                .get_str("name")
+                .ok_or_else(|| format!("fleet: workers[{i}] missing 'name'"))?
+                .to_string();
+            let addr = w
+                .get_str("addr")
+                .ok_or_else(|| format!("fleet: workers[{i}] missing 'addr'"))?
+                .to_string();
+            workers.push((name, addr));
+        }
+        Ok(FleetSpec {
+            workers,
+            shard_cells: u64_field(j, "shard_cells", 8)? as usize,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard_cells", Json::Num(self.shard_cells as f64)),
+            (
+                "workers",
+                Json::arr(self.workers.iter().map(|(name, addr)| {
+                    Json::obj(vec![
+                        ("addr", Json::str(addr.clone())),
+                        ("name", Json::str(name.clone())),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.workers.is_empty() {
+            return Err("fleet: needs at least one worker".into());
+        }
+        if self.shard_cells == 0 {
+            return Err("fleet: shard_cells must be > 0".into());
+        }
+        let mut names: Vec<&str> =
+            self.workers.iter().map(|(n, _)| n.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.workers.len() {
+            return Err("fleet: worker names must be unique".into());
+        }
+        for (name, addr) in &self.workers {
+            crate::dist::driver::parse_endpoints(addr)
+                .map_err(|e| format!("fleet: worker '{name}': {e}"))?;
+            if addr.contains(',') {
+                return Err(format!(
+                    "fleet: worker '{name}': one 'host:port' per worker entry"
+                ));
+            }
         }
         Ok(())
     }
@@ -786,6 +921,8 @@ pub enum TypedSpec {
     Simulation(SimulationSpec),
     /// Parsed *Validation* spec.
     Validation(ValidationSpec),
+    /// Parsed *Fleet* spec.
+    Fleet(FleetSpec),
 }
 
 impl TypedSpec {
@@ -803,6 +940,7 @@ impl TypedSpec {
             Kind::DigitalTwin => TypedSpec::DigitalTwin(DigitalTwinSpec::from_json(j)?),
             Kind::Simulation => TypedSpec::Simulation(SimulationSpec::from_json(j)?),
             Kind::Validation => TypedSpec::Validation(ValidationSpec::from_json(j)?),
+            Kind::Fleet => TypedSpec::Fleet(FleetSpec::from_json(j)?),
         })
     }
 
@@ -818,6 +956,7 @@ impl TypedSpec {
             TypedSpec::DigitalTwin(_) => Kind::DigitalTwin,
             TypedSpec::Simulation(_) => Kind::Simulation,
             TypedSpec::Validation(_) => Kind::Validation,
+            TypedSpec::Fleet(_) => Kind::Fleet,
         }
     }
 
@@ -833,6 +972,7 @@ impl TypedSpec {
             TypedSpec::DigitalTwin(s) => s.to_json(),
             TypedSpec::Simulation(s) => s.to_json(),
             TypedSpec::Validation(s) => s.to_json(),
+            TypedSpec::Fleet(s) => s.to_json(),
         }
     }
 
@@ -848,6 +988,7 @@ impl TypedSpec {
             TypedSpec::DigitalTwin(s) => s.validate(),
             TypedSpec::Simulation(s) => s.validate(),
             TypedSpec::Validation(s) => s.validate(),
+            TypedSpec::Fleet(s) => s.validate(),
         }
     }
 
@@ -863,6 +1004,7 @@ impl TypedSpec {
             TypedSpec::DigitalTwin(s) => s.dependencies(),
             TypedSpec::Simulation(s) => s.dependencies(),
             TypedSpec::Validation(s) => s.dependencies(),
+            TypedSpec::Fleet(s) => s.dependencies(),
         }
     }
 }
@@ -947,6 +1089,20 @@ mod tests {
             Kind::Validation,
             r#"{"suite": "all", "threads": 8, "golden_dir": "tests/golden"}"#,
         );
+        fixed_point(
+            Kind::Validation,
+            r#"{"suite": "queueing", "fleet": "lab"}"#,
+        );
+        fixed_point(
+            Kind::Experiment,
+            r#"{"campaign": {"grid": "paper", "fleet": "lab"}}"#,
+        );
+        fixed_point(
+            Kind::Fleet,
+            r#"{"workers": [{"name": "a", "addr": "10.0.0.1:7401"},
+                {"name": "b", "addr": "10.0.0.2:7401"}], "shard_cells": 4}"#,
+        );
+        fixed_point(Kind::Fleet, r#"{"workers": [{"name": "solo", "addr": "localhost:7401"}]}"#);
     }
 
     #[test]
@@ -1017,6 +1173,23 @@ mod tests {
             .unwrap()
             .dependencies()
             .is_empty());
+        // a fleet-referencing campaign (and validation) depends on its Fleet
+        let j = Json::parse(r#"{"campaign": {"grid": "paper", "fleet": "lab"}}"#)
+            .unwrap();
+        assert_eq!(
+            TypedSpec::parse(Kind::Experiment, &j).unwrap().dependencies(),
+            vec![(Kind::Fleet, "lab".to_string())]
+        );
+        let j = Json::parse(r#"{"suite": "queueing", "fleet": "lab"}"#).unwrap();
+        assert_eq!(
+            TypedSpec::parse(Kind::Validation, &j).unwrap().dependencies(),
+            vec![(Kind::Fleet, "lab".to_string())]
+        );
+        let j = Json::parse(r#"{"workers": [{"name": "a", "addr": "h:1"}]}"#).unwrap();
+        assert!(TypedSpec::parse(Kind::Fleet, &j)
+            .unwrap()
+            .dependencies()
+            .is_empty());
     }
 
     #[test]
@@ -1042,6 +1215,27 @@ mod tests {
             (
                 Kind::Experiment,
                 r#"{"campaign": {"grid": "paper", "cluster_tolerance": -0.1}}"#,
+            ),
+            // fleet execution is queueing-only: the snapshot leg reads
+            // the driver's local golden tree
+            (Kind::Validation, r#"{"suite": "all", "fleet": "lab"}"#),
+            (Kind::Fleet, r#"{"workers": []}"#),
+            (
+                Kind::Fleet,
+                r#"{"workers": [{"name": "a", "addr": "h:1"}], "shard_cells": 0}"#,
+            ),
+            (
+                Kind::Fleet,
+                r#"{"workers": [{"name": "a", "addr": "h:1"},
+                    {"name": "a", "addr": "h:2"}]}"#,
+            ),
+            (
+                Kind::Fleet,
+                r#"{"workers": [{"name": "a", "addr": "no-port-here"}]}"#,
+            ),
+            (
+                Kind::Fleet,
+                r#"{"workers": [{"name": "a", "addr": "h:notaport"}]}"#,
             ),
         ];
         for (kind, raw) in cases {
@@ -1080,6 +1274,13 @@ mod tests {
             (Kind::Validation, r#"{"suite": 4}"#),
             (Kind::Validation, r#"{"threads": "8"}"#),
             (Kind::Validation, r#"{"golden_dir": 7}"#),
+            (Kind::Validation, r#"{"fleet": 7}"#),
+            (Kind::Experiment, r#"{"campaign": {"fleet": 7}}"#),
+            (Kind::Fleet, r#"{"workers": "all"}"#),
+            (
+                Kind::Fleet,
+                r#"{"workers": [{"name": "a", "addr": "h:1"}], "shard_cells": "4"}"#,
+            ),
         ];
         for (kind, raw) in cases {
             let j = Json::parse(raw).unwrap();

@@ -10,7 +10,9 @@
 //! (both measured on the same reference host; later `local` / CI
 //! entries are machine-relative and deliberately not compared), and the
 //! PR 7 claim: clustered fleet campaigns clear >= 10x the cells/sec of
-//! the exhaustive run recorded alongside them.
+//! the exhaustive run recorded alongside them, and the PR 8 claim:
+//! dealing the same grid to two loopback workers keeps >= 0.8x the
+//! local cells/sec (the fleet protocol tax stays under 20%).
 
 use std::path::{Path, PathBuf};
 
@@ -147,6 +149,38 @@ fn clustered_fleet_entry_is_an_order_of_magnitude_over_exhaustive() {
     assert!(
         ratio >= 10.0,
         "cells/sec ratio {ratio:.1} < 10.0 ({cl_rate:.0} vs {ex_rate:.0})"
+    );
+}
+
+#[test]
+fn distributed_fleet_entry_stays_within_20pct_of_the_local_run() {
+    // the PR 8 acceptance bar: dealing the fleet grid to two loopback
+    // workers must keep >= 0.8x the cells/sec of the in-process run of
+    // the same grid (the protocol tax — serialization, framing, TCP —
+    // stays under 20%). The local baseline travels inside the entry so
+    // the claim is self-contained and host-consistent.
+    let doc = load("BENCH_sim.json");
+    let exhaustive = entry_by_label(&doc, "pr7-fleet-exhaustive");
+    let dist = entry_by_label(&doc, "pr8-dist-2workers");
+    assert_eq!(
+        exhaustive.get_str("host"),
+        dist.get_str("host"),
+        "the overhead claim only holds within one host"
+    );
+    let m = dist.get("metrics").unwrap();
+    assert_eq!(
+        m.get_f64("cells"),
+        exhaustive.get("metrics").unwrap().get_f64("cells"),
+        "both legs must cover the same fleet grid"
+    );
+    assert_eq!(m.get_f64("workers"), Some(2.0));
+    assert!(m.get_f64("shard_cells").unwrap() >= 1.0);
+    let baseline = m.get_f64("baseline_cells_per_s").unwrap();
+    let rate = m.get_f64("cells_per_s").unwrap();
+    let ratio = rate / baseline;
+    assert!(
+        ratio >= 0.8,
+        "distributed cells/sec ratio {ratio:.2} < 0.8 ({rate:.1} vs {baseline:.1} local)"
     );
 }
 

@@ -1,0 +1,234 @@
+//! Distributed campaign execution, tested end to end over real
+//! loopback TCP: the fleet report must be **byte-identical** to the
+//! serial single-process run at every worker count and shard size,
+//! through the clustered path, across a mid-campaign worker kill, for
+//! validation cases, and through the Fleet resource kind + controller.
+
+use std::time::Duration;
+
+use plantd::campaign::{Campaign, CampaignRunner};
+use plantd::datagen::DataSetSpec;
+use plantd::dist::driver::FleetClient;
+use plantd::dist::worker::{spawn_local, WorkerHandle};
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::resources::controller::Controller;
+use plantd::resources::{Kind, Phase, Registry};
+use plantd::util::json::Json;
+use plantd::validate::suite::{run_case, SuiteReport, ValidationSuite};
+
+/// The same 2×2×1 grid `tests/campaign_determinism.rs` pins for the
+/// thread pool — the fleet must meet the exact same bar.
+fn four_cell_campaign(seed: u64) -> Campaign {
+    Campaign::new("det-4", seed)
+        .variant(VariantConfig::blocking_write())
+        .variant(VariantConfig::cpu_limited())
+        .load("steady", LoadPattern::steady(6.0, 2.0))
+        .load("ramp", LoadPattern::ramp(6.0, 0.0, 4.0))
+        .dataset(
+            "tiny",
+            DataSetSpec {
+                payloads: 4,
+                records_per_subsystem: 3,
+                bad_rate: 0.01,
+                seed: 0,
+            },
+        )
+}
+
+/// Spawn `n` in-process workers and collect their endpoints.
+fn spawn_fleet(n: usize) -> (Vec<WorkerHandle>, Vec<String>) {
+    let workers: Vec<WorkerHandle> = (0..n)
+        .map(|_| spawn_local(2, None).expect("spawn local worker"))
+        .collect();
+    let endpoints = workers.iter().map(|w| w.endpoint()).collect();
+    (workers, endpoints)
+}
+
+fn report_bytes(r: &plantd::campaign::CampaignReport) -> Vec<u8> {
+    r.to_json().to_string_pretty().into_bytes()
+}
+
+#[test]
+fn exhaustive_fleet_report_byte_identical_at_any_worker_count_and_shard_size() {
+    let campaign = four_cell_campaign(0x5EED);
+    let serial = report_bytes(&CampaignRunner::new(1).run(&campaign));
+    // shard 1 (max dealing), shard 3 (uneven split of 4), shard 9
+    // (bigger than the whole grid → a single shard)
+    for workers in [1usize, 2, 4] {
+        for shard in [1usize, 3, 9] {
+            let (_fleet, endpoints) = spawn_fleet(workers);
+            let report = FleetClient::new(endpoints)
+                .with_shard_cells(shard)
+                .run_campaign(&campaign, None)
+                .unwrap_or_else(|e| panic!("{workers} workers, shard {shard}: {e}"));
+            assert_eq!(
+                report_bytes(&report),
+                serial,
+                "{workers} workers, shard {shard}: distributed report must \
+                 be byte-identical to the serial run"
+            );
+        }
+    }
+}
+
+#[test]
+fn clustered_fleet_report_matches_local_clustered_byte_for_byte() {
+    let campaign = four_cell_campaign(0xC105);
+    // tolerance 0.0: every cell is its own cluster, all four
+    // representatives ship with full latency samples. A loose tolerance
+    // actually merges cells, exercising redistribution over the wire.
+    for tolerance in [0.0, 0.35] {
+        let local = CampaignRunner::new(2)
+            .with_cluster_tolerance(tolerance)
+            .run(&campaign);
+        let (_fleet, endpoints) = spawn_fleet(2);
+        let dist = FleetClient::new(endpoints)
+            .with_shard_cells(1)
+            .run_campaign(&campaign, Some(tolerance))
+            .unwrap();
+        assert_eq!(
+            report_bytes(&dist),
+            report_bytes(&local),
+            "tolerance {tolerance}: clustered fleet run must match the \
+             local clustered run byte-for-byte"
+        );
+    }
+}
+
+#[test]
+fn worker_killed_mid_campaign_report_unchanged() {
+    let campaign = four_cell_campaign(0xDEAD);
+    let serial = report_bytes(&CampaignRunner::new(1).run(&campaign));
+    // worker A is armed to die on its first shard *after the handshake,
+    // without replying* — the driver must requeue that shard on worker
+    // B and still merge a byte-identical report
+    let doomed = spawn_local(2, Some(0)).unwrap();
+    let survivor = spawn_local(2, None).unwrap();
+    let endpoints = vec![doomed.endpoint(), survivor.endpoint()];
+    let report = FleetClient::new(endpoints)
+        .with_shard_cells(1)
+        .run_campaign(&campaign, None)
+        .expect("the surviving worker must finish the campaign");
+    assert_eq!(
+        report_bytes(&report),
+        serial,
+        "losing a worker mid-campaign must not change a single byte"
+    );
+}
+
+#[test]
+fn all_workers_dead_fails_readably() {
+    // port 9 (discard) has no listener: connects are refused, shards
+    // never run, and the driver reports the loss instead of hanging
+    let mut client = FleetClient::new(vec!["127.0.0.1:9".to_string()]);
+    client.connect_timeout = Duration::from_millis(300);
+    let err = client
+        .run_campaign(&four_cell_campaign(1), None)
+        .unwrap_err();
+    assert!(err.contains("unfilled"), "{err}");
+}
+
+#[test]
+fn distributed_validation_cases_byte_identical_to_local() {
+    let suite = ValidationSuite::queueing();
+    // a two-case subset keeps the test inside a sane wall-clock budget;
+    // index order is intentionally not grid order
+    let picks = [3usize, 4];
+    let local = SuiteReport {
+        suite: suite.name.clone(),
+        results: picks.iter().map(|&i| run_case(&suite.cases[i])).collect(),
+    };
+    let (_fleet, endpoints) = spawn_fleet(2);
+    let dist = FleetClient::new(endpoints)
+        .run_queueing_cases(&picks)
+        .unwrap();
+    assert_eq!(
+        dist.to_json().to_string_pretty().as_bytes(),
+        local.to_json().to_string_pretty().as_bytes(),
+        "distributed validation cases must match local execution"
+    );
+    // index validation happens before any network traffic
+    let lonely = FleetClient::new(vec!["127.0.0.1:9".to_string()]);
+    assert!(lonely.run_queueing_cases(&[99]).unwrap_err().contains("out of range"));
+    assert!(lonely.run_queueing_cases(&[1, 1]).unwrap_err().contains("twice"));
+}
+
+#[test]
+fn fleet_resource_and_fleet_campaign_run_through_controller() {
+    let (_fleet, endpoints) = spawn_fleet(2);
+    let manifest = format!(
+        r#"{{"resources": [
+            {{"kind": "Fleet", "name": "lab",
+             "spec": {{"shard_cells": 3, "workers": [
+                 {{"name": "a", "addr": "{0}"}},
+                 {{"name": "b", "addr": "{1}"}}]}}}},
+            {{"kind": "Experiment", "name": "sweep",
+             "spec": {{"campaign": {{"grid": "paper", "seed": 7,
+                                     "threads": 2, "fleet": "lab"}}}}}}
+        ]}}"#,
+        endpoints[0], endpoints[1]
+    );
+    let c = Controller::new(Registry::new());
+    c.apply_manifest(&Json::parse(&manifest).unwrap()).unwrap();
+    c.reconcile();
+    for (kind, name) in [(Kind::Fleet, "lab"), (Kind::Experiment, "sweep")] {
+        let r = c.registry().get(kind, name).unwrap();
+        assert_eq!(r.phase, Phase::Ready, "{}/{name}: {:?}", kind.as_str(), r.conditions);
+    }
+
+    // running the Fleet health-checks every declared worker
+    let out = c.run(Kind::Fleet, "lab").unwrap().output;
+    assert!(out.contains("2/2 worker(s) healthy"), "{out}");
+    assert!(out.contains("worker 'a'"), "{out}");
+    let lab = c.registry().get(Kind::Fleet, "lab").unwrap();
+    assert_eq!(lab.phase, Phase::Completed);
+    assert_eq!(lab.status.get("healthy").and_then(Json::as_u64), Some(2));
+
+    // the fleet-referencing campaign reproduces the local report
+    // byte-for-byte (same comparison tests/resource_api.rs makes for
+    // the thread-pool path)
+    let out = c.run(Kind::Experiment, "sweep").unwrap().output;
+    let direct = CampaignRunner::new(2).run(&Campaign::paper_automotive(7));
+    assert_eq!(
+        out,
+        format!("{}\n", direct.render()),
+        "fleet execution through the controller must reproduce the \
+         direct campaign report byte-for-byte"
+    );
+    let sweep = c.registry().get(Kind::Experiment, "sweep").unwrap();
+    assert_eq!(sweep.phase, Phase::Completed);
+    assert_eq!(sweep.status.get_str("fleet"), Some("lab"));
+}
+
+#[test]
+fn dead_fleet_fails_at_run_time_not_apply_time() {
+    // Fleet specs validate shape only — a fleet whose workers are not
+    // up yet must still reconcile Ready (declare first, start later)...
+    let c = Controller::new(Registry::new());
+    c.apply_manifest(
+        &Json::parse(
+            r#"{"resources": [
+                {"kind": "Fleet", "name": "ghost",
+                 "spec": {"workers": [{"name": "w", "addr": "127.0.0.1:9"}]}},
+                {"kind": "Experiment", "name": "sweep",
+                 "spec": {"campaign": {"grid": "paper", "seed": 7,
+                                       "fleet": "ghost"}}}
+            ]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    c.reconcile();
+    assert_eq!(
+        c.registry().get(Kind::Fleet, "ghost").unwrap().phase,
+        Phase::Ready,
+        "fleet shape validation must not require live workers"
+    );
+    // ...but running it reports the dead workers, with the fix in hand
+    let err = c.run(Kind::Fleet, "ghost").unwrap_err();
+    assert!(err.contains("plantd worker"), "{err}");
+    // and a campaign pointed at the dead fleet fails readably too
+    let err = c.run(Kind::Experiment, "sweep").unwrap_err();
+    assert!(err.contains("worker") || err.contains("unfilled"), "{err}");
+}
