@@ -1,7 +1,9 @@
 //! Sim-kernel campaign throughput: cells/second for a fixed 3×3×2 grid,
-//! raw kernel events/second on a canonical M/M/1 workload, and a
+//! raw kernel events/second on a canonical M/M/1 workload, a
 //! fleet-scale grid timed exhaustively vs clustered (tolerance 0.05) —
-//! the committed trajectory pins the cluster-and-extrapolate speedup.
+//! the committed trajectory pins the cluster-and-extrapolate speedup —
+//! and an adaptive `explore` leg whose committed entry pins the
+//! SLO-frontier bisection at <= 50% of the exhaustive sweep's cells.
 //!
 //! This is the perf-trajectory anchor for the shared DES kernel: every
 //! cell is a full discrete-event simulation (three stations, fan-out,
@@ -22,12 +24,15 @@
 
 use std::time::SystemTime;
 
+use plantd::campaign::explore::{self, ExploreConfig, SloMetric};
 use plantd::campaign::{Campaign, CampaignRunner};
+use plantd::cost::PriceBook;
 use plantd::datagen::DataSetSpec;
 use plantd::dist::driver::{FleetClient, DEFAULT_SHARD_CELLS};
 use plantd::dist::worker;
 use plantd::loadgen::LoadPattern;
 use plantd::pipeline::VariantConfig;
+use plantd::scenario::Scenario;
 use plantd::sim::{Served, StationConfig, Tandem};
 use plantd::util::bench;
 use plantd::util::rng::Rng;
@@ -283,4 +288,69 @@ fn main() {
     bench::append_entry(&path, "sim_campaign", entry)
         .expect("append distributed BENCH_sim.json entry");
     println!("appended entry '{dist_label}' to {}", path.display());
+
+    // explore leg: adaptive SLO-frontier bisection over the fleet's
+    // variants under a baseline and a brownout scenario. The committed
+    // ratio of bisection-simulated cells to the exhaustive sweep of the
+    // same load range pins the adaptivity claim at <= 50%.
+    let scenarios = vec![
+        Scenario::empty("baseline"),
+        Scenario::empty("brownout").with_outage("v2x", 10.0, 30.0, 1),
+    ];
+    let cfg = ExploreConfig {
+        name: "bench-explore".into(),
+        seed: 0xE5,
+        metric: SloMetric::P95,
+        limit: 2.5,
+        load_lo_rps: 0.5,
+        load_hi_rps: 32.0,
+        tol_rps: 0.5,
+        duration_s: 30.0,
+        threads,
+    };
+    let prices = PriceBook::default();
+    let (xp_result, xp_report) = bench::run("sim/explore-frontier", warmup, iters, || {
+        explore::explore(&cfg, &fleet, &scenarios, &prices)
+    });
+    assert_eq!(xp_report.rows.len(), 3 * scenarios.len());
+    let combos = xp_report.rows.len() as u64;
+    assert_eq!(xp_report.cells_exhaustive, combos * cfg.exhaustive_steps());
+    assert!(
+        2 * xp_report.cells_simulated <= xp_report.cells_exhaustive,
+        "bisection simulated {} of {} exhaustive cells — the adaptivity \
+         claim needs <= 50%",
+        xp_report.cells_simulated,
+        xp_report.cells_exhaustive
+    );
+    let xp_cells_per_s = bench::throughput(xp_report.cells_simulated, &xp_result);
+    println!(
+        "explore frontier: {combos} combos, {} cells simulated of {} exhaustive \
+         ({:.0}%) in {:.3}s mean -> {:.1} cells/s",
+        xp_report.cells_simulated,
+        xp_report.cells_exhaustive,
+        100.0 * xp_report.cells_simulated as f64 / xp_report.cells_exhaustive as f64,
+        xp_result.mean_s,
+        xp_cells_per_s
+    );
+    let xp_label = format!("{label}-explore");
+    let entry = bench::entry(
+        &xp_label,
+        unix_s,
+        &host,
+        vec![
+            ("cells", xp_report.cells_simulated as f64),
+            ("cells_exhaustive", xp_report.cells_exhaustive as f64),
+            ("cells_per_s", xp_cells_per_s),
+            ("cells_simulated", xp_report.cells_simulated as f64),
+            ("combos", combos as f64),
+            ("events_per_s", events_per_s),
+            ("grid_mean_s", xp_result.mean_s),
+            ("grid_min_s", xp_result.min_s),
+            ("iters", iters as f64),
+            ("threads", threads as f64),
+        ],
+    );
+    bench::append_entry(&path, "sim_campaign", entry)
+        .expect("append explore BENCH_sim.json entry");
+    println!("appended entry '{xp_label}' to {}", path.display());
 }

@@ -111,7 +111,14 @@ pub(crate) fn run_cell_full(
 ) -> (CellResult, Vec<f64>) {
     let cfg = &spec.variant;
     let mut rng = Rng::new(spec.seed);
-    let sends = spec.load.pattern.send_times();
+    // a non-empty scenario may overlay the load curve, clamp queues and
+    // inject faults; None (unattached or empty) is the byte-identical
+    // plain path — no overlay arithmetic, no fault hooks, no extra RNG
+    let scen = spec.active_scenario();
+    let sends = match scen {
+        Some(s) => s.apply_overlay(&spec.load.pattern).send_times(),
+        None => spec.load.pattern.send_times(),
+    };
 
     // isolated telemetry for this cell
     let spans = SpanSink::new();
@@ -156,20 +163,28 @@ pub(crate) fn run_cell_full(
         .collect();
 
     // one single-server FIFO station per stage, like the threaded
-    // pipeline (one StageRunner thread per stage)
-    let tandem: Tandem<CellMsg> = Tandem::new(vec![
+    // pipeline (one StageRunner thread per stage); a scenario's capacity
+    // clamps bound the matching stage's queue
+    let mut configs = vec![
         StationConfig::single("unzipper_phase"),
         StationConfig::single("v2x_phase"),
         StationConfig::single("etl_phase"),
-    ]);
+    ];
+    if let Some(s) = scen {
+        for (i, stage) in crate::scenario::STAGES.iter().enumerate() {
+            if let Some(policy) = s.queue_policy_for(stage) {
+                configs[i].policy = policy;
+            }
+        }
+    }
+    let tandem: Tandem<CellMsg> = Tandem::new(configs);
 
     let mut puts = 0u64;
-    let outcome = tandem.run(
-        plans
-            .iter()
-            .enumerate()
-            .map(|(send, p)| (p.t_send, CellMsg::Zip { send })),
-        |station, start, batch| {
+    let arrivals = plans
+        .iter()
+        .enumerate()
+        .map(|(send, p)| (p.t_send, CellMsg::Zip { send }));
+    let servicer = |station: usize, start: f64, batch: &[CellMsg]| {
             let msg = batch[0];
             match (station, msg) {
                 // unzipper_phase: inflate + forward; raw zip persisted async
@@ -229,8 +244,14 @@ pub(crate) fn run_cell_full(
                 }
                 _ => unreachable!("zip jobs exist only at station 0"),
             }
-        },
-    );
+        };
+    let outcome = match scen {
+        // the faulted loop monomorphizes the hooks in; compile() forks
+        // the scenario RNG stream off the cell seed without touching the
+        // pre-sampled jitter stream above
+        Some(s) => tandem.run_faulted(arrivals, servicer, &mut s.compile(spec.seed)),
+        None => tandem.run(arrivals, servicer),
+    };
 
     // per-member end-to-end latencies, in completion (= FIFO) order
     let mut latencies: Vec<f64> = Vec::with_capacity(outcome.completions.len());

@@ -48,18 +48,85 @@
 pub(crate) mod cell;
 pub mod cluster;
 pub mod edist;
+pub mod explore;
 mod report;
 
 pub use report::{CampaignReport, CellProvenance, CellResult, ClusterRow, ClusterSummary};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Once};
 
 use crate::cost::PriceBook;
 use crate::datagen::{DataSet, DataSetSpec};
 use crate::loadgen::LoadPattern;
 use crate::pipeline::VariantConfig;
+use crate::scenario::Scenario;
 use crate::sim::derive_seed;
+
+/// Live/peak accounting of [`CellSpec`] values in existence, pinned by
+/// the streaming tests: the grid executors construct specs lazily, so
+/// the peak must track the worker count — not the grid size — even on
+/// fleet-scale campaigns.
+pub mod alloc_stats {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static LIVE: AtomicUsize = AtomicUsize::new(0);
+    static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+    /// `CellSpec` values currently alive (process-wide).
+    pub fn live() -> usize {
+        LIVE.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of [`live`] since the last [`reset_peak`].
+    pub fn peak() -> usize {
+        PEAK.load(Ordering::SeqCst)
+    }
+
+    /// Reset the high-water mark to the current live count.
+    pub fn reset_peak() {
+        PEAK.store(LIVE.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    pub(super) fn inc() {
+        let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+        PEAK.fetch_max(live, Ordering::SeqCst);
+    }
+
+    pub(super) fn dec() {
+        LIVE.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Zero-sized RAII token counting [`CellSpec`] lifetimes into
+/// [`alloc_stats`]. Every construction path (enumeration, clone) goes
+/// through it, so the streaming tests can pin peak materialization.
+pub(crate) struct AllocGuard(());
+
+impl AllocGuard {
+    fn new() -> Self {
+        alloc_stats::inc();
+        AllocGuard(())
+    }
+}
+
+impl Clone for AllocGuard {
+    fn clone(&self) -> Self {
+        AllocGuard::new()
+    }
+}
+
+impl Drop for AllocGuard {
+    fn drop(&mut self) {
+        alloc_stats::dec();
+    }
+}
+
+impl std::fmt::Debug for AllocGuard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("AllocGuard")
+    }
+}
 
 /// A named load pattern inside a campaign grid.
 #[derive(Debug, Clone)]
@@ -121,6 +188,12 @@ pub struct Campaign {
     pub loads: Vec<LoadCase>,
     /// Dataset configurations to synthesize (grid axis 3).
     pub datasets: Vec<DataSetCase>,
+    /// Optional degraded-mode scenario applied to **every** cell
+    /// ([`crate::scenario::Scenario`]): outage/slowdown windows, retry
+    /// storms, capacity clamps, load overlays. `None` — or an empty
+    /// scenario — leaves the campaign byte-identical to the un-faulted
+    /// run at any thread or worker count.
+    pub scenario: Option<Arc<Scenario>>,
 }
 
 /// One fully-specified cell of the campaign grid.
@@ -142,6 +215,68 @@ pub struct CellSpec {
     pub dataset_name: String,
     /// Derived deterministic seed for this cell's service-time jitter.
     pub seed: u64,
+    /// Scenario attached to the whole grid, shared across every cell
+    /// (`None` or empty ⇒ the plain, fault-free code path).
+    pub scenario: Option<Arc<Scenario>>,
+    /// Lifetime token feeding [`alloc_stats`] (see [`AllocGuard`]).
+    _alloc: AllocGuard,
+}
+
+impl CellSpec {
+    /// The scenario this cell must inject, if it actually does anything:
+    /// `None` for both an unattached and an attached-but-empty scenario,
+    /// which is what keeps the empty case on the byte-identical plain
+    /// path.
+    pub fn active_scenario(&self) -> Option<&Scenario> {
+        self.scenario.as_deref().filter(|s| !s.is_empty())
+    }
+}
+
+/// A shared, O(1)-indexable view of a campaign grid: the per-axis
+/// `Arc`s and derived-seed arithmetic of [`Campaign::cells_iter`],
+/// without any per-cell storage. Executors hold one `CellGrid` and
+/// construct each [`CellSpec`] on demand, so a fleet-scale grid never
+/// materializes every cell at once (pinned by [`alloc_stats`]).
+pub struct CellGrid {
+    variants: Vec<Arc<VariantConfig>>,
+    loads: Vec<Arc<LoadCase>>,
+    dataset_names: Vec<String>,
+    scenario: Option<Arc<Scenario>>,
+    seed: u64,
+    n: usize,
+}
+
+impl CellGrid {
+    /// Number of cells in the grid.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when the grid has no cells (an axis is empty).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Construct cell `i` (row-major: variant → load → dataset), with
+    /// the exact same `Arc` sharing and derived seed as
+    /// [`Campaign::cells`] — same index, same bytes.
+    pub fn spec(&self, i: usize) -> CellSpec {
+        assert!(i < self.n, "cell index {i} out of range ({})", self.n);
+        let (nl, nd) = (self.loads.len(), self.dataset_names.len());
+        let di = i % nd;
+        let li = (i / nd) % nl;
+        let vi = i / (nd * nl);
+        CellSpec {
+            index: i,
+            variant: Arc::clone(&self.variants[vi]),
+            load: Arc::clone(&self.loads[li]),
+            dataset_index: di,
+            dataset_name: self.dataset_names[di].clone(),
+            seed: derive_seed(self.seed, [vi as u64, li as u64, di as u64]),
+            scenario: self.scenario.clone(),
+            _alloc: AllocGuard::new(),
+        }
+    }
 }
 
 impl Campaign {
@@ -153,7 +288,16 @@ impl Campaign {
             variants: Vec::new(),
             loads: Vec::new(),
             datasets: Vec::new(),
+            scenario: None,
         }
+    }
+
+    /// Attach a degraded-mode scenario to every cell (builder style).
+    /// An empty scenario is accepted and is byte-identical to not
+    /// attaching one at all.
+    pub fn with_scenario(mut self, scenario: Scenario) -> Self {
+        self.scenario = Some(Arc::new(scenario));
+        self
     }
 
     /// Add a pipeline variant (builder style).
@@ -251,24 +395,23 @@ impl Campaign {
     /// distributed driver deals shards straight off this iterator, so a
     /// fleet-scale grid never needs every `CellSpec` in memory at once.
     pub fn cells_iter(&self) -> impl Iterator<Item = CellSpec> + '_ {
-        let variants: Vec<Arc<VariantConfig>> =
-            self.variants.iter().cloned().map(Arc::new).collect();
-        let loads: Vec<Arc<LoadCase>> = self.loads.iter().cloned().map(Arc::new).collect();
-        let (nl, nd) = (self.loads.len(), self.datasets.len());
-        let seed = self.seed;
-        (0..self.n_cells()).map(move |i| {
-            let di = i % nd;
-            let li = (i / nd) % nl;
-            let vi = i / (nd * nl);
-            CellSpec {
-                index: i,
-                variant: Arc::clone(&variants[vi]),
-                load: Arc::clone(&loads[li]),
-                dataset_index: di,
-                dataset_name: self.datasets[di].name.clone(),
-                seed: derive_seed(seed, [vi as u64, li as u64, di as u64]),
-            }
-        })
+        let grid = self.grid();
+        (0..grid.len()).map(move |i| grid.spec(i))
+    }
+
+    /// The O(1)-indexable grid view every executor enumerates through:
+    /// per-axis `Arc`s are wrapped once here, so any number of
+    /// [`CellGrid::spec`] calls share them (and the attached scenario)
+    /// without re-cloning per cell.
+    pub fn grid(&self) -> CellGrid {
+        CellGrid {
+            variants: self.variants.iter().cloned().map(Arc::new).collect(),
+            loads: self.loads.iter().cloned().map(Arc::new).collect(),
+            dataset_names: self.datasets.iter().map(|d| d.name.clone()).collect(),
+            scenario: self.scenario.clone(),
+            seed: self.seed,
+            n: self.n_cells(),
+        }
     }
 
     /// Synthesize the campaign's datasets. Seeds derive from the campaign
@@ -334,21 +477,37 @@ impl CampaignRunner {
     /// results land in their slot, so the report is identical for any
     /// thread count.
     pub fn run(&self, campaign: &Campaign) -> CampaignReport {
+        let faulted = campaign.scenario.as_ref().is_some_and(|s| !s.is_empty());
         match self.cluster_tolerance {
-            Some(tolerance) => self.run_clustered(campaign, tolerance),
+            Some(tolerance) if !faulted => self.run_clustered(campaign, tolerance),
+            Some(_) => {
+                // extrapolation rests on fault-free utilization
+                // profiles; a scenario invalidates them, so fall back
+                // to simulating every cell
+                static GATE: Once = Once::new();
+                crate::util::log::warn_once(
+                    &GATE,
+                    "campaign has a non-empty scenario: cluster-and-extrapolate is \
+                     disabled, running exhaustively",
+                );
+                self.run_exhaustive(campaign)
+            }
             None => self.run_exhaustive(campaign),
         }
     }
 
-    /// Exhaustive execution: simulate every cell of the grid.
+    /// Exhaustive execution: simulate every cell of the grid,
+    /// constructing each [`CellSpec`] lazily off the [`CellGrid`] — the
+    /// peak number of specs alive tracks the worker count, not the grid
+    /// size.
     fn run_exhaustive(&self, campaign: &Campaign) -> CampaignReport {
-        let specs = campaign.cells();
+        let grid = campaign.grid();
         let datasets = campaign.build_datasets();
         // real inflation once per dataset (it is shared read-only across
         // every cell in that column), not once per cell
         let members: Vec<Vec<Vec<cell::MemberInfo>>> =
             datasets.iter().map(cell::decode_members).collect();
-        let n = specs.len();
+        let n = grid.len();
         let next = AtomicUsize::new(0);
         let results: Mutex<Vec<Option<CellResult>>> = Mutex::new(vec![None; n]);
         let workers = self.threads.min(n.max(1));
@@ -359,9 +518,9 @@ impl CampaignRunner {
                     if i >= n {
                         break;
                     }
-                    let spec = &specs[i];
+                    let spec = grid.spec(i);
                     let result = cell::run_cell(
-                        spec,
+                        &spec,
                         &datasets[spec.dataset_index],
                         &members[spec.dataset_index],
                         &self.prices,
@@ -390,11 +549,15 @@ impl CampaignRunner {
     /// redistribute to members serially in grid order — pure arithmetic,
     /// so the report stays byte-identical at any thread count.
     fn run_clustered(&self, campaign: &Campaign, tolerance: f64) -> CampaignReport {
-        let specs = campaign.cells();
+        let grid = campaign.grid();
         let datasets = campaign.build_datasets();
         let members: Vec<Vec<Vec<cell::MemberInfo>>> =
             datasets.iter().map(cell::decode_members).collect();
-        let features = cluster::featurize_campaign(campaign, &specs);
+        // featurize off transient specs: 12 floats per cell persist, the
+        // specs themselves do not
+        let features: Vec<Vec<f64>> = (0..grid.len())
+            .map(|i| cluster::featurize(campaign, &grid.spec(i)))
+            .collect();
         let clustering = cluster::cluster_greedy(&features, tolerance);
 
         // simulate the representatives only; redistribution (and the
@@ -416,9 +579,9 @@ impl CampaignRunner {
                     if k >= n {
                         break;
                     }
-                    let spec = &specs[reps[k]];
+                    let spec = grid.spec(reps[k]);
                     let data = cluster::run_representative(
-                        spec,
+                        &spec,
                         &datasets[spec.dataset_index],
                         &members[spec.dataset_index],
                         &self.prices,
@@ -435,7 +598,7 @@ impl CampaignRunner {
             .collect();
 
         let (cells, clustering_summary) =
-            redistribute(&specs, &members, &clustering, &rep_data, &self.prices, tolerance);
+            redistribute(&grid, &members, &clustering, &rep_data, &self.prices, tolerance);
         CampaignReport {
             campaign: campaign.name.clone(),
             seed: campaign.seed,
@@ -452,7 +615,7 @@ impl CampaignRunner {
 /// ([`crate::dist::driver`]), which is what keeps the two paths
 /// byte-identical by construction rather than by coincidence.
 pub(crate) fn redistribute(
-    specs: &[CellSpec],
+    grid: &CellGrid,
     members: &[Vec<Vec<cell::MemberInfo>>],
     clustering: &cluster::Clustering,
     rep_data: &[cluster::RepData],
@@ -463,8 +626,8 @@ pub(crate) fn redistribute(
     let n = clustering.clusters.len();
     let mut max_distance = vec![0.0f64; n];
     let mut max_bound = vec![0.0f64; n];
-    let mut cells = Vec::with_capacity(specs.len());
-    for (i, spec) in specs.iter().enumerate() {
+    let mut cells = Vec::with_capacity(grid.len());
+    for i in 0..grid.len() {
         let a = &clustering.assignment[i];
         let rd = &rep_data[a.cluster];
         if clustering.clusters[a.cluster].representative == i {
@@ -473,12 +636,13 @@ pub(crate) fn redistribute(
                 (!exact_mode).then_some(CellProvenance::Exact { cluster: a.cluster });
             cells.push(r);
         } else {
-            let profile = cluster::profile_cell(spec, &members[spec.dataset_index]);
+            let spec = grid.spec(i);
+            let profile = cluster::profile_cell(&spec, &members[spec.dataset_index]);
             let r = cluster::extrapolate_cell(
                 rd,
                 clustering.clusters[a.cluster].representative,
                 a.cluster,
-                spec,
+                &spec,
                 &profile,
                 a.distance,
                 prices,
@@ -835,6 +999,62 @@ mod tests {
             assert_eq!(cl.annual_cost_usd.to_bits(), ex.annual_cost_usd.to_bits());
             assert!(cl.duration_s > 0.0 && cl.throughput_rps > 0.0);
             assert!(cl.latency_p95_s >= cl.latency_p50_s);
+        }
+    }
+
+    #[test]
+    fn empty_scenario_campaign_is_byte_identical_to_none() {
+        // attaching an empty scenario must route through the exact
+        // plain code path — same bytes at any thread count
+        let plain = CampaignRunner::new(2).run(&small_campaign(23));
+        let with_empty = CampaignRunner::new(3)
+            .run(&small_campaign(23).with_scenario(Scenario::empty("noop")));
+        assert_eq!(
+            plain.to_json().to_string_pretty(),
+            with_empty.to_json().to_string_pretty()
+        );
+        assert_eq!(plain.render(), with_empty.render());
+    }
+
+    #[test]
+    fn scenario_disables_clustering_and_falls_back_to_exhaustive() {
+        // extrapolation assumes fault-free profiles, so a non-empty
+        // scenario forces the exhaustive path even under a tolerance
+        let scen = Scenario::empty("brownout").with_slowdown("etl", 0.0, 3.0, 2.0);
+        let c = small_campaign(19).with_scenario(scen);
+        let clustered = CampaignRunner::new(2)
+            .with_cluster_tolerance(0.05)
+            .run(&c);
+        assert!(clustered.clustering.is_none());
+        let exhaustive = CampaignRunner::new(1).run(&c);
+        assert_eq!(
+            clustered.to_json().to_string_pretty(),
+            exhaustive.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn faulted_campaign_changes_numbers_but_stays_deterministic() {
+        let scen = || Scenario::empty("slow").with_slowdown("v2x", 0.0, 5.0, 3.0);
+        let faulted = small_campaign(29).with_scenario(scen());
+        let a = CampaignRunner::new(4).run(&faulted);
+        let b = CampaignRunner::new(1).run(&faulted);
+        assert_eq!(
+            a.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty(),
+            "faulted runs replay bit-identically at any thread count"
+        );
+        let plain = CampaignRunner::new(2).run(&small_campaign(29));
+        assert_ne!(
+            a.to_json().to_string_pretty(),
+            plain.to_json().to_string_pretty(),
+            "a 3x slowdown must move the numbers"
+        );
+        // structure is conserved: same offered work drains through
+        for (f, p) in a.cells.iter().zip(&plain.cells) {
+            assert_eq!(f.zips, p.zips);
+            assert_eq!(f.files, p.files);
+            assert!(f.latency_p95_s >= p.latency_p50_s);
         }
     }
 

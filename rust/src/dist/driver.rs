@@ -103,9 +103,22 @@ impl FleetClient {
                 ));
             }
         }
+        let faulted = campaign.scenario.as_ref().is_some_and(|s| !s.is_empty());
         match cluster_tolerance {
+            Some(t) if !faulted => self.run_clustered(campaign, t),
+            Some(_) => {
+                // same rule as the local runner: extrapolation rests on
+                // fault-free utilization profiles, so a scenario forces
+                // exhaustive distribution
+                static GATE: Once = Once::new();
+                warn_once(
+                    &GATE,
+                    "campaign has a non-empty scenario: cluster-and-extrapolate is \
+                     disabled, distributing exhaustively",
+                );
+                self.run_exhaustive(campaign)
+            }
             None => self.run_exhaustive(campaign),
-            Some(t) => self.run_clustered(campaign, t),
         }
     }
 
@@ -154,11 +167,15 @@ impl FleetClient {
         campaign: &Campaign,
         tolerance: f64,
     ) -> Result<CampaignReport, String> {
-        let specs = campaign.cells();
+        let grid = campaign.grid();
         let datasets = campaign.build_datasets();
         let members: Vec<Vec<Vec<cell::MemberInfo>>> =
             datasets.iter().map(cell::decode_members).collect();
-        let features = cluster::featurize_campaign(campaign, &specs);
+        // featurize off transient specs — the driver holds 12 floats
+        // per cell, never the whole materialized grid
+        let features: Vec<Vec<f64>> = (0..grid.len())
+            .map(|i| cluster::featurize(campaign, &grid.spec(i)))
+            .collect();
         let clustering = cluster::cluster_greedy(&features, tolerance);
         let reps: Vec<usize> = clustering
             .clusters
@@ -204,16 +221,16 @@ impl FleetClient {
             .iter()
             .zip(rep_results)
             .map(|(&gi, (result, latencies))| {
-                let spec = &specs[gi];
+                let spec = grid.spec(gi);
                 cluster::RepData {
                     result,
                     latencies: crate::campaign::edist::EDist::from_samples(&latencies),
-                    profile: cluster::profile_cell(spec, &members[spec.dataset_index]),
+                    profile: cluster::profile_cell(&spec, &members[spec.dataset_index]),
                 }
             })
             .collect();
         let (cells, clustering_summary) = redistribute(
-            &specs,
+            &grid,
             &members,
             &clustering,
             &rep_data,

@@ -51,6 +51,7 @@ use crate::campaign::{Campaign, CellResult, DataSetCase, LoadCase};
 use crate::datagen::DataSetSpec;
 use crate::loadgen::{LoadPattern, Segment};
 use crate::pipeline::VariantConfig;
+use crate::scenario::Scenario;
 use crate::util::json::Json;
 use crate::validate::suite::{CaseResult, MetricCheck};
 
@@ -246,8 +247,15 @@ fn windex_list(obj: &Json, key: &str) -> Result<Vec<usize>, String> {
 /// travel as their stable preset names ([`VariantConfig::by_name`]) —
 /// distributed execution supports preset variants only, which is the
 /// invariant the decode side enforces.
+///
+/// A non-empty attached [`Scenario`] ships as its canonical spec JSON
+/// (validated values are all finite, and the JSON writer's float
+/// formatting is shortest-round-trip, so the plan survives bit-exactly).
+/// `None` and an *empty* scenario are both omitted: they run the same
+/// plain code path, so collapsing them keeps pre-scenario wire bytes —
+/// and worker-side campaign cache keys — unchanged.
 pub fn campaign_to_wire(c: &Campaign) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("name", Json::str(c.name.clone())),
         ("seed", u64_to_wire(c.seed)),
         (
@@ -287,7 +295,13 @@ pub fn campaign_to_wire(c: &Campaign) -> Json {
                 ])
             })),
         ),
-    ])
+    ];
+    if let Some(s) = c.scenario.as_deref() {
+        if !s.is_empty() {
+            fields.push(("scenario", s.to_json()));
+        }
+    }
+    Json::obj(fields)
 }
 
 /// Decode a shipped campaign. Every value is validated *before* any
@@ -359,6 +373,13 @@ pub fn campaign_from_wire(j: &Json) -> Result<Campaign, String> {
             ));
         }
         c.datasets.push(DataSetCase { name: dname, spec });
+    }
+    if let Some(sj) = j.get("scenario") {
+        let s = Scenario::from_json(sj).map_err(|e| format!("bad scenario: {e}"))?;
+        // compile() trusts validated stage names — garbage must be
+        // refused here, not panic inside a cell
+        s.validate().map_err(|e| format!("bad scenario: {e}"))?;
+        c = c.with_scenario(s);
     }
     Ok(c)
 }
@@ -737,6 +758,35 @@ mod tests {
             assert_eq!(x.seed, y.seed);
             assert_eq!(x.variant.name, y.variant.name);
         }
+    }
+
+    #[test]
+    fn scenario_rides_the_wire_and_empty_collapses_to_absent() {
+        // a faulted campaign ships its scenario and re-derives it exactly
+        let sc = Scenario::empty("brownout")
+            .with_outage("v2x", 10.0, 20.0, 1)
+            .with_slowdown("etl", 0.0, 30.0, 2.5)
+            .with_clamp("unzipper", 8, crate::scenario::ClampPolicy::Drop);
+        let c = Campaign::paper_automotive(0xD5).with_scenario(sc.clone());
+        let wire = campaign_to_wire(&c);
+        let back = campaign_from_wire(&wire).unwrap();
+        assert_eq!(back.scenario.as_deref(), Some(&sc));
+        assert_eq!(
+            wire.to_string_compact(),
+            campaign_to_wire(&back).to_string_compact()
+        );
+        // an EMPTY scenario is byte-identical on the wire to none at
+        // all — pre-scenario peers and worker cache keys see no change
+        let plain = campaign_to_wire(&Campaign::paper_automotive(0xD5));
+        let noop = campaign_to_wire(
+            &Campaign::paper_automotive(0xD5).with_scenario(Scenario::empty("noop")),
+        );
+        assert_eq!(plain.to_string_compact(), noop.to_string_compact());
+        assert!(campaign_from_wire(&plain).unwrap().scenario.is_none());
+        // a scenario naming an unknown stage is refused, not a panic
+        let bad = wire.to_string_compact().replace("\"v2x\"", "\"turbo\"");
+        let err = campaign_from_wire(&Json::parse(&bad).unwrap()).unwrap_err();
+        assert!(err.contains("bad scenario"), "{err}");
     }
 
     #[test]

@@ -30,7 +30,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::campaign::{cell, Campaign, CellSpec};
+use crate::campaign::{cell, Campaign, CellGrid};
 use crate::cost::PriceBook;
 use crate::datagen::DataSet;
 use crate::validate::suite::{run_case, ValidationSuite};
@@ -63,22 +63,24 @@ impl WorkerCfg {
     }
 }
 
-/// A campaign prepared for execution: materialized specs, generated
-/// datasets, and per-dataset decoded member facts — everything
-/// `run_cell` needs, built once per distinct campaign per connection.
+/// A campaign prepared for execution: the O(1)-indexable grid view,
+/// generated datasets, and per-dataset decoded member facts —
+/// everything `run_cell` needs, built once per distinct campaign per
+/// connection. Specs themselves are derived lazily per shard cell, so
+/// a fleet-scale grid never materializes on the worker either.
 struct Prepared {
-    specs: Vec<CellSpec>,
+    grid: CellGrid,
     datasets: Vec<DataSet>,
     members: Vec<Vec<Vec<cell::MemberInfo>>>,
 }
 
 impl Prepared {
     fn build(campaign: &Campaign) -> Prepared {
-        let specs = campaign.cells();
+        let grid = campaign.grid();
         let datasets = campaign.build_datasets();
         let members = datasets.iter().map(cell::decode_members).collect();
         Prepared {
-            specs,
+            grid,
             datasets,
             members,
         }
@@ -293,11 +295,11 @@ fn run_cells(
     threads: usize,
     prices: &PriceBook,
 ) -> Msg {
-    if let Some(&bad) = cells.iter().find(|&&i| i >= prep.specs.len()) {
+    if let Some(&bad) = cells.iter().find(|&&i| i >= prep.grid.len()) {
         return Msg::Err {
             msg: format!(
                 "cell index {bad} out of range (grid has {} cells)",
-                prep.specs.len()
+                prep.grid.len()
             ),
         };
     }
@@ -313,12 +315,12 @@ fn run_cells(
                     break;
                 }
                 let gi = cells[k];
-                let spec = &prep.specs[gi];
+                let spec = prep.grid.spec(gi);
                 let dataset = &prep.datasets[spec.dataset_index];
                 let members = &prep.members[spec.dataset_index];
                 let entry = if full {
                     let (result, latencies) =
-                        cell::run_cell_full(spec, dataset, members, prices);
+                        cell::run_cell_full(&spec, dataset, members, prices);
                     CellEntry {
                         index: gi,
                         result,
@@ -327,7 +329,7 @@ fn run_cells(
                 } else {
                     CellEntry {
                         index: gi,
-                        result: cell::run_cell(spec, dataset, members, prices),
+                        result: cell::run_cell(&spec, dataset, members, prices),
                         latencies: None,
                     }
                 };

@@ -37,6 +37,11 @@
 //! seeds and isolated telemetry/cost sinks, and ranks the results in
 //! business terms. See `docs/CAMPAIGNS.md`.
 //!
+//! A [`scenario`] layers deterministic fault injection on top — outage
+//! windows, slowdowns, retry storms, capacity clamps, load overlays —
+//! and `plantd explore` bisects load per {variant × scenario} to map
+//! the SLO frontier. See `docs/SCENARIOS.md`.
+//!
 //! ## The declarative resource API
 //!
 //! Everything above is also drivable declaratively, mirroring the paper's
@@ -74,6 +79,7 @@ pub mod pipeline;
 pub mod report;
 pub mod resources;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod tablestore;
 pub mod telemetry;

@@ -2,8 +2,9 @@
 //!
 //! The declarative resource registry is the front door: a manifest of
 //! typed resources (Schema, DataSet, LoadPattern, Pipeline, Experiment,
-//! TrafficModel, DigitalTwin, Simulation, Validation, Fleet) is applied,
-//! reconciled, and executed by the controller. See `docs/RESOURCES.md`.
+//! TrafficModel, DigitalTwin, Simulation, Validation, Fleet, Scenario)
+//! is applied, reconciled, and executed by the controller. See
+//! `docs/RESOURCES.md`.
 //!
 //! ```text
 //! plantd apply -f <manifest.json>      register + reconcile resources
@@ -38,6 +39,10 @@
 //!     with --workers host:port,..., deals the grid to remote
 //!     `plantd worker` processes instead of the local thread pool —
 //!     still byte-identical (docs/DISTRIBUTED.md)
+//! plantd explore   [--grid NAME] [--slo-metric p95|p99|loss] [--slo-limit X]
+//!     bisect load per {variant × scenario} to find the SLO knee and
+//!     cost cliff; --scenarios-file pulls Scenario resources from a
+//!     manifest, --dry-run prints the bisection plan without simulating
 //! plantd worker    --port P [--bind A] [--threads N]
 //!     serve campaign cell shards and validation cases to a driver
 //! plantd resources (demo of the declarative resource registry)
@@ -51,7 +56,7 @@ use std::process::ExitCode;
 use std::sync::Once;
 
 use plantd::bizsim::{monthly_costs, simulate_batch, CostSpec, SloSpec};
-use plantd::campaign::{cluster, Campaign};
+use plantd::campaign::{cluster, explore, Campaign};
 use plantd::datagen::{DataSet, DataSetSpec};
 use plantd::experiment::ExperimentRecord;
 use plantd::loadgen::LoadPattern;
@@ -64,6 +69,7 @@ use plantd::resources::spec::{
 };
 use plantd::resources::{Kind, Phase, Registry};
 use plantd::runtime::{default_backend, SimBackend};
+use plantd::scenario::Scenario;
 use plantd::traffic::TrafficModel;
 use plantd::twin::TwinParams;
 use plantd::util::cli::Args;
@@ -112,6 +118,7 @@ LEGACY SUBCOMMANDS (shims over the same controller)
   simulate    year-long what-if simulations      -> Table II + Figs. 6-7
   retention   storage-policy what-if             -> Table IV
   campaign    parallel {variant x load x dataset} sweep -> ranked report
+  explore     adaptive SLO-frontier search per {variant x scenario}
   resources   demo the declarative resource registry
   demo        the full paper reproduction (all of the above)
 
@@ -143,6 +150,32 @@ CAMPAIGN OPTIONS
                      count, shard size, or arrival order
   --shard-cells N    grid cells per shard dealt to a worker (default 8)
   --out DIR          also write the report JSON to DIR/campaign.json
+  --scenario NAME --scenarios-file FILE
+                     attach a named Scenario (outages, slowdowns, retry
+                     storms, capacity clamps, load overlays) from FILE's
+                     Scenario resources to every cell; an empty scenario
+                     is byte-identical to not attaching one
+                     (docs/SCENARIOS.md)
+
+EXPLORE OPTIONS (adaptive SLO-frontier search, docs/SCENARIOS.md)
+  --grid NAME        paper (default) or extended — supplies the variants
+                     and dataset shape; loads are swept, not taken from
+                     the grid
+  --seed S           master seed (default 0xE5); same seed reproduces a
+                     byte-identical frontier at any thread count
+  --slo-metric M     p95 (default), p99, or loss
+  --slo-limit X      SLO predicate is metric <= X (default 2.0; seconds
+                     for p95/p99, fraction for loss)
+  --lo RPS --hi RPS  bisection load bounds (defaults 0.5, 64)
+  --tol RPS          stop when the bracket is narrower than this
+                     (default 0.5)
+  --duration S       steady-load probe duration, virtual s (default 60)
+  --scenarios-file F probe every Scenario resource in manifest F (plus
+                     the implicit fault-free baseline when F is omitted)
+  --dry-run          print the bisection plan (combos, bounds, SLO
+                     predicate) without simulating anything
+  --threads N        parallel probe waves (default 4)
+  --out DIR          also write DIR/explore.json
 
 EXPERIMENT OPTIONS
   --mode M           real (default): threaded wall-clock wind tunnel;
@@ -183,6 +216,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args),
         "retention" => cmd_retention(&args),
         "campaign" => cmd_campaign(&args),
+        "explore" => cmd_explore(&args),
         "validate" => cmd_validate(&args),
         "worker" => cmd_worker(&args),
         "resources" => cmd_resources(),
@@ -386,6 +420,7 @@ fn cmd_delete(args: &Args) -> CmdResult {
 static EXPERIMENT_SHIM_GATE: Once = Once::new();
 static CAMPAIGN_SHIM_GATE: Once = Once::new();
 static SIMULATE_SHIM_GATE: Once = Once::new();
+static EXPLORE_SHIM_GATE: Once = Once::new();
 
 fn resource_json(kind: &str, name: &str, spec: Json) -> Json {
     Json::obj(vec![
@@ -708,8 +743,11 @@ fn cmd_campaign(args: &Args) -> CmdResult {
             campaign.seed,
             campaign.n_cells()
         );
-        let specs = campaign.cells();
-        for spec in &specs {
+        // specs are derived one at a time off the O(1) grid view — the
+        // dry run streams a fleet-scale grid without materializing it
+        let grid = campaign.grid();
+        for i in 0..grid.len() {
+            let spec = grid.spec(i);
             println!(
                 "  #{:>3}  {:<18} × {:<12} × {:<12}  cell-seed {:#018x}  ({} sends)",
                 spec.index,
@@ -723,15 +761,17 @@ fn cmd_campaign(args: &Args) -> CmdResult {
         // the clustering plan is a pure function of the grid, so the dry
         // run can show exactly which cells a clustered run would simulate
         if let Some(t) = cluster_tolerance {
-            let features = cluster::featurize_campaign(&campaign, &specs);
+            let features: Vec<Vec<f64>> = (0..grid.len())
+                .map(|i| cluster::featurize(&campaign, &grid.spec(i)))
+                .collect();
             let clustering = cluster::cluster_greedy(&features, t);
             println!(
                 "cluster plan (tolerance {t}): {} cells -> {} simulated representatives",
-                specs.len(),
+                grid.len(),
                 clustering.n_clusters()
             );
             for (id, c) in clustering.clusters.iter().enumerate() {
-                let rep = &specs[c.representative];
+                let rep = grid.spec(c.representative);
                 println!(
                     "  cluster {id}: rep #{:>3} {} × {} × {}  ({} members)",
                     rep.index,
@@ -770,17 +810,167 @@ fn cmd_campaign(args: &Args) -> CmdResult {
             Some("cli-workers".to_string())
         }
     };
+    // --scenario NAME: pull that Scenario resource out of
+    // --scenarios-file and attach it to every cell of the grid
+    let scenario = match args.opt("scenario") {
+        None => None,
+        Some(name) => {
+            let file = args.opt("scenarios-file").ok_or_else(|| {
+                anyhow::anyhow!("--scenario needs --scenarios-file <manifest.json>")
+            })?;
+            let known = scenarios_from_file(file)?;
+            let (sname, res, _) = known
+                .into_iter()
+                .find(|(n, _, _)| n == name)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{file}: no Scenario resource named '{name}'")
+                })?;
+            resources.push(res);
+            Some(sname)
+        }
+    };
     let spec = ExperimentSpec::Campaign {
         grid: grid.clone(),
         seed,
         threads,
         cluster_tolerance,
         fleet,
+        scenario,
         out: args.opt("out").map(str::to_string),
     };
     resources.push(resource_json("Experiment", &name, spec.to_json()));
     let manifest = Json::obj(vec![("resources", Json::arr(resources))]);
     shim_notice("campaign", args, &manifest, &CAMPAIGN_SHIM_GATE);
+    let controller = Controller::new(Registry::new());
+    controller
+        .apply_manifest(&manifest)
+        .map_err(anyhow::Error::msg)?;
+    let outcome = controller
+        .run(Kind::Experiment, &name)
+        .map_err(anyhow::Error::msg)?;
+    print!("{}", outcome.output);
+    Ok(())
+}
+
+/// Pull every `Scenario` resource out of a manifest file, in manifest
+/// order: `(name, resource JSON, parsed + validated scenario)` triples.
+/// Shared by `plantd campaign --scenario` and `plantd explore
+/// --scenarios-file`.
+fn scenarios_from_file(path: &str) -> Result<Vec<(String, Json, Scenario)>, anyhow::Error> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let resources = manifest
+        .get("resources")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{path}: manifest has no 'resources' array"))?;
+    let mut out = Vec::new();
+    for r in resources {
+        if r.get_str("kind") != Some("Scenario") {
+            continue;
+        }
+        let name = r
+            .get_str("name")
+            .ok_or_else(|| anyhow::anyhow!("{path}: Scenario resource without a name"))?
+            .to_string();
+        let spec = r
+            .get("spec")
+            .ok_or_else(|| anyhow::anyhow!("{path}: Scenario '{name}' has no spec"))?;
+        let sc = Scenario::from_json(spec)
+            .and_then(|s| s.validate().map(|()| s))
+            .map_err(|e| anyhow::anyhow!("{path}: Scenario '{name}': {e}"))?;
+        out.push((name, r.clone(), sc));
+    }
+    if out.is_empty() {
+        anyhow::bail!("{path}: no Scenario resources found");
+    }
+    Ok(out)
+}
+
+/// `plantd explore` — adaptive SLO-frontier search: bisect load per
+/// {variant × scenario} to find the first load where the SLO predicate
+/// fails (the knee) and the cost at that point. `--dry-run` prints the
+/// bisection plan without simulating, mirroring `campaign --dry-run`;
+/// otherwise the verb is a shim over the same controller as everything
+/// else (an `Experiment` resource with an `explore` spec).
+fn cmd_explore(args: &Args) -> CmdResult {
+    let threads = args.opt_u64("threads", 4).map_err(anyhow::Error::msg)? as usize;
+    if threads == 0 {
+        anyhow::bail!("explore: --threads must be > 0");
+    }
+    let seed = opt_seed(args, "seed", 0xE5)?;
+    let grid = args.opt_or("grid", "paper");
+    let slo_metric = args.opt_or("slo-metric", "p95");
+    let slo_limit = args.opt_f64("slo-limit", 2.0).map_err(anyhow::Error::msg)?;
+    let load_lo = args.opt_f64("lo", 0.5).map_err(anyhow::Error::msg)?;
+    let load_hi = args.opt_f64("hi", 64.0).map_err(anyhow::Error::msg)?;
+    let tol_rps = args.opt_f64("tol", 0.5).map_err(anyhow::Error::msg)?;
+    let duration_s = args.opt_f64("duration", 60.0).map_err(anyhow::Error::msg)?;
+    let scenarios = match args.opt("scenarios-file") {
+        Some(file) => scenarios_from_file(file)?,
+        None => Vec::new(),
+    };
+
+    if args.flag("dry-run") {
+        // the plan is a pure function of the flags: validate them, then
+        // print combos, bounds, and the SLO predicate without touching
+        // the sim kernel
+        let campaign =
+            Campaign::from_grid_name(&grid, seed).map_err(anyhow::Error::msg)?;
+        let metric = explore::SloMetric::parse(&slo_metric).ok_or_else(|| {
+            anyhow::anyhow!("--slo-metric: expected p95|p99|loss, got '{slo_metric}'")
+        })?;
+        let cfg = explore::ExploreConfig {
+            name: format!("explore-{grid}"),
+            seed,
+            metric,
+            limit: slo_limit,
+            load_lo_rps: load_lo,
+            load_hi_rps: load_hi,
+            tol_rps,
+            duration_s,
+            threads,
+        };
+        cfg.validate().map_err(anyhow::Error::msg)?;
+        let variants: Vec<String> = campaign
+            .variants
+            .iter()
+            .map(|v| v.name.to_string())
+            .collect();
+        let plans: Vec<Scenario> = if scenarios.is_empty() {
+            vec![Scenario::empty("baseline")]
+        } else {
+            scenarios.into_iter().map(|(_, _, s)| s).collect()
+        };
+        print!("{}", explore::plan_render(&cfg, &variants, &plans));
+        return Ok(());
+    }
+
+    let name = format!("explore-{grid}");
+    let mut resources: Vec<Json> = Vec::new();
+    let scenario_names: Vec<String> = scenarios
+        .into_iter()
+        .map(|(n, res, _)| {
+            resources.push(res);
+            n
+        })
+        .collect();
+    let spec = ExperimentSpec::Explore {
+        grid: grid.clone(),
+        seed,
+        scenarios: scenario_names,
+        slo_metric,
+        slo_limit,
+        load_lo,
+        load_hi,
+        tol_rps,
+        duration_s,
+        threads,
+        out: args.opt("out").map(str::to_string),
+    };
+    resources.push(resource_json("Experiment", &name, spec.to_json()));
+    let manifest = Json::obj(vec![("resources", Json::arr(resources))]);
+    shim_notice("explore", args, &manifest, &EXPLORE_SHIM_GATE);
     let controller = Controller::new(Registry::new());
     controller
         .apply_manifest(&manifest)

@@ -24,6 +24,7 @@ use std::path::PathBuf;
 use std::sync::Mutex;
 
 use crate::bizsim::{simulate_batch, SloSpec};
+use crate::campaign::explore::{self, ExploreConfig, SloMetric};
 use crate::campaign::{Campaign, CampaignRunner};
 use crate::cost::PriceBook;
 use crate::datagen::{DataSet, Schema};
@@ -41,8 +42,8 @@ use crate::validate::SnapshotMode;
 
 use super::spec::{
     DigitalTwinSpec, ExperimentSpec, FleetSpec, LoadPatternSpec, PipelineSpec,
-    ResourceSpec, SchemaSpec, SimulationSpec, TrafficModelSpec, TypedSpec,
-    ValidationSpec,
+    ResourceSpec, ScenarioSpec, SchemaSpec, SimulationSpec, TrafficModelSpec,
+    TypedSpec, ValidationSpec,
 };
 use super::{Kind, Phase, Registry, Resource};
 
@@ -431,7 +432,48 @@ impl Controller {
             TypedSpec::Simulation(s) => self.exec_simulation(s),
             TypedSpec::Validation(s) => self.exec_validation(s),
             TypedSpec::Fleet(s) => self.exec_fleet(s, res),
+            TypedSpec::Scenario(s) => self.exec_scenario(s, res),
         }
+    }
+
+    /// "Run" a Scenario: re-validate the fault plan and summarize what it
+    /// injects. Scenarios have no side effects of their own — they act
+    /// when a campaign or explore experiment references them — so the
+    /// run is a shape report, like LoadPattern's.
+    fn exec_scenario(
+        &self,
+        s: &ScenarioSpec,
+        res: &Resource,
+    ) -> Result<(String, String, Json), String> {
+        let sc = &s.0;
+        sc.validate()?;
+        let summary = if sc.is_empty() {
+            "empty scenario (byte-identical no-fault control)".to_string()
+        } else {
+            format!(
+                "{} outage(s), {} slowdown(s), {} retry policy(ies), \
+                 {} clamp(s){}",
+                sc.outages.len(),
+                sc.slowdowns.len(),
+                sc.retries.len(),
+                sc.clamps.len(),
+                if sc.overlay.is_some() {
+                    ", load overlay"
+                } else {
+                    ""
+                }
+            )
+        };
+        let output = format!("Scenario/{} ('{}'): {summary}\n", res.name, sc.name);
+        let status = Json::obj(vec![
+            ("clamps", Json::Num(sc.clamps.len() as f64)),
+            ("empty", Json::Bool(sc.is_empty())),
+            ("outages", Json::Num(sc.outages.len() as f64)),
+            ("overlay", Json::Bool(sc.overlay.is_some())),
+            ("retries", Json::Num(sc.retries.len() as f64)),
+            ("slowdowns", Json::Num(sc.slowdowns.len() as f64)),
+        ]);
+        Ok((summary, output, status))
     }
 
     /// "Run" a Fleet: health-check every worker endpoint with a protocol
@@ -605,9 +647,22 @@ impl Controller {
                 threads,
                 cluster_tolerance,
                 fleet,
+                scenario,
                 out,
             } => {
-                let campaign = Campaign::from_grid_name(grid, *seed)?;
+                let mut campaign = Campaign::from_grid_name(grid, *seed)?;
+                if let Some(sname) = scenario {
+                    let sc: ScenarioSpec = self.parse_ref(sname)?;
+                    eprintln!(
+                        "scenario '{sname}' attached{}",
+                        if sc.0.is_empty() {
+                            " (empty: report stays byte-identical)"
+                        } else {
+                            ""
+                        }
+                    );
+                    campaign = campaign.with_scenario(sc.0);
+                }
                 eprintln!(
                     "campaign '{}': {} variants × {} loads × {} datasets = {} cells on {} threads",
                     campaign.name,
@@ -690,7 +745,91 @@ impl Controller {
                 if let Some(fname) = fleet {
                     status.push(("fleet", Json::str(fname.clone())));
                 }
+                if let Some(sname) = scenario {
+                    status.push(("scenario", Json::str(sname.clone())));
+                }
                 let status = Json::obj(status);
+                Ok((summary, output, status))
+            }
+            ExperimentSpec::Explore {
+                grid,
+                seed,
+                scenarios,
+                slo_metric,
+                slo_limit,
+                load_lo,
+                load_hi,
+                tol_rps,
+                duration_s,
+                threads,
+                out,
+            } => {
+                let campaign = Campaign::from_grid_name(grid, *seed)?;
+                // resolve the swept scenarios; no references = baseline only
+                let plans: Vec<crate::scenario::Scenario> = if scenarios.is_empty() {
+                    vec![crate::scenario::Scenario::empty("baseline")]
+                } else {
+                    scenarios
+                        .iter()
+                        .map(|n| Ok(self.parse_ref::<ScenarioSpec>(n)?.0))
+                        .collect::<Result<_, String>>()?
+                };
+                let metric = SloMetric::parse(slo_metric).ok_or_else(|| {
+                    format!("explore: unknown slo metric '{slo_metric}' (p95|p99|loss)")
+                })?;
+                let cfg = ExploreConfig {
+                    name: res.name.clone(),
+                    seed: *seed,
+                    metric,
+                    limit: *slo_limit,
+                    load_lo_rps: *load_lo,
+                    load_hi_rps: *load_hi,
+                    tol_rps: *tol_rps,
+                    duration_s: *duration_s,
+                    threads: *threads,
+                };
+                cfg.validate()?;
+                eprintln!(
+                    "explore '{}': {} variants × {} scenarios, bisecting \
+                     [{}, {}] rps at tolerance {} on {} threads",
+                    res.name,
+                    campaign.variants.len(),
+                    plans.len(),
+                    load_lo,
+                    load_hi,
+                    tol_rps,
+                    threads
+                );
+                let report =
+                    explore::explore(&cfg, &campaign, &plans, &PriceBook::default());
+                let mut output = format!("{}\n", report.render());
+                if let Some(dir) = out {
+                    let path = std::path::Path::new(dir).join("explore.json");
+                    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                    std::fs::write(&path, report.to_json().to_string_pretty())
+                        .map_err(|e| e.to_string())?;
+                    output += &format!("frontier JSON written to {}\n", path.display());
+                }
+                let knees_found =
+                    report.rows.iter().filter(|r| r.knee_rps.is_some()).count();
+                let summary = format!(
+                    "explore '{}': {} combos, {} knee(s) found, {} of {} \
+                     exhaustive cells simulated",
+                    res.name,
+                    report.rows.len(),
+                    knees_found,
+                    report.cells_simulated,
+                    report.cells_exhaustive
+                );
+                let status = Json::obj(vec![
+                    ("cells_exhaustive", Json::Num(report.cells_exhaustive as f64)),
+                    ("cells_simulated", Json::Num(report.cells_simulated as f64)),
+                    ("combos", Json::Num(report.rows.len() as f64)),
+                    ("knees_found", Json::Num(knees_found as f64)),
+                    ("seed", super::spec::seed_json(*seed)),
+                    ("slo_limit", Json::Num(*slo_limit)),
+                    ("slo_metric", Json::str(metric.as_str())),
+                ]);
                 Ok((summary, output, status))
             }
             ExperimentSpec::WindTunnel {
@@ -861,15 +1000,21 @@ impl Controller {
                 // sweep never yields fitted twins, so silently executing
                 // the whole grid here would be wasted work ending in an
                 // error anyway
-                if matches!(
-                    ExperimentSpec::from_json(&exp_res.spec),
-                    Ok(ExperimentSpec::Campaign { .. })
-                ) {
-                    return Err(format!(
-                        "Experiment '{experiment}' is a campaign grid; twins fit \
-                         only from wind-tunnel experiments (dataset/load_pattern/\
-                         pipeline form)"
-                    ));
+                match ExperimentSpec::from_json(&exp_res.spec) {
+                    Ok(ExperimentSpec::Campaign { .. }) => {
+                        return Err(format!(
+                            "Experiment '{experiment}' is a campaign grid; twins fit \
+                             only from wind-tunnel experiments (dataset/load_pattern/\
+                             pipeline form)"
+                        ));
+                    }
+                    Ok(ExperimentSpec::Explore { .. }) => {
+                        return Err(format!(
+                            "Experiment '{experiment}' is an SLO-frontier explore; \
+                             twins fit only from wind-tunnel experiments"
+                        ));
+                    }
+                    _ => {}
                 }
                 if !has_twins(&exp_res) {
                     // run the experiment (silently) to fit twins
@@ -1182,5 +1327,75 @@ mod tests {
         // re-running reproduces byte-identical output (same seed)
         let b = c.run(Kind::Experiment, "sweep").unwrap();
         assert_eq!(a.output, b.output);
+    }
+
+    #[test]
+    fn empty_scenario_campaign_matches_plain_campaign_byte_for_byte() {
+        let c = Controller::new(Registry::new());
+        c.apply_manifest(
+            &Json::parse(
+                r#"{"resources": [
+                    {"kind": "Scenario", "name": "noop", "spec": {}},
+                    {"kind": "Experiment", "name": "plain",
+                     "spec": {"campaign": {"grid": "paper", "seed": 7,
+                                           "threads": 2}}},
+                    {"kind": "Experiment", "name": "faultless",
+                     "spec": {"campaign": {"grid": "paper", "seed": 7,
+                                           "threads": 2,
+                                           "scenario": "noop"}}}
+                ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let sc = c.run(Kind::Scenario, "noop").unwrap();
+        assert!(sc.summary.contains("empty"), "{}", sc.summary);
+        let plain = c.run(Kind::Experiment, "plain").unwrap();
+        let faultless = c.run(Kind::Experiment, "faultless").unwrap();
+        assert_eq!(
+            plain.output, faultless.output,
+            "an empty scenario must not change a single byte"
+        );
+        let status = c.registry().get(Kind::Experiment, "faultless").unwrap().status;
+        assert_eq!(status.get_str("scenario"), Some("noop"));
+    }
+
+    #[test]
+    fn explore_experiment_reports_a_frontier() {
+        let c = Controller::new(Registry::new());
+        c.apply_manifest(
+            &Json::parse(
+                r#"{"resources": [
+                    {"kind": "Scenario", "name": "brownout", "spec":
+                        {"slowdowns": [{"station": "v2x", "start_s": 0,
+                                        "end_s": 1000, "factor": 2}]}},
+                    {"kind": "Experiment", "name": "frontier", "spec":
+                        {"explore": {"grid": "paper", "seed": 11,
+                                     "scenarios": ["brownout"],
+                                     "slo_metric": "p95", "slo_limit": 2.0,
+                                     "load_lo": 0.5, "load_hi": 16.5,
+                                     "tol_rps": 1.0, "duration_s": 6,
+                                     "threads": 2}}}
+                ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let outcome = c.run(Kind::Experiment, "frontier").unwrap();
+        assert!(outcome.output.contains("EXPLORE 'frontier'"), "{}", outcome.output);
+        let status = c.registry().get(Kind::Experiment, "frontier").unwrap().status;
+        // 3 paper variants × 1 scenario
+        assert_eq!(status.get_u64("combos"), Some(3));
+        let simulated = status.get_u64("cells_simulated").unwrap();
+        let exhaustive = status.get_u64("cells_exhaustive").unwrap();
+        assert!(simulated > 0);
+        assert!(
+            simulated * 2 <= exhaustive,
+            "bisection must simulate <= half the exhaustive sweep \
+             ({simulated} vs {exhaustive})"
+        );
+        // deterministic: same spec, same bytes
+        let again = c.run(Kind::Experiment, "frontier").unwrap();
+        assert_eq!(outcome.output, again.output);
     }
 }

@@ -5,8 +5,9 @@
 //! (Fig. 3): *Schema*, *DataSet*, *LoadPattern*, *Pipeline*, *Experiment*,
 //! *TrafficModel*, *DigitalTwin*, *Simulation* — plus the repo's own
 //! *Validation* kind (sim-kernel conformance suites, declarable in
-//! manifests like everything else) and *Fleet* (named `plantd worker`
-//! endpoints for distributed execution). This module provides the
+//! manifests like everything else), *Fleet* (named `plantd worker`
+//! endpoints for distributed execution), and *Scenario* (deterministic
+//! fault-injection plans attachable to campaigns). This module provides the
 //! in-process equivalent: typed specs ([`spec::ResourceSpec`]) registered
 //! by name, a status/phase state machine per resource, a reconciler that
 //! validates specs and resolves references between resources (an
@@ -55,6 +56,10 @@ pub enum Kind {
     /// Named set of `plantd worker` endpoints for distributed campaign
     /// execution — see `docs/DISTRIBUTED.md`.
     Fleet,
+    /// Deterministic fault-injection scenario (outage windows, slowdowns,
+    /// retry storms, capacity clamps, load overlays) attachable to
+    /// Experiment campaigns — see `docs/SCENARIOS.md`.
+    Scenario,
 }
 
 impl Kind {
@@ -71,11 +76,12 @@ impl Kind {
             Kind::Simulation => "Simulation",
             Kind::Validation => "Validation",
             Kind::Fleet => "Fleet",
+            Kind::Scenario => "Scenario",
         }
     }
 
     /// Every kind, in a stable order.
-    pub fn all() -> [Kind; 10] {
+    pub fn all() -> [Kind; 11] {
         [
             Kind::Schema,
             Kind::DataSet,
@@ -87,6 +93,7 @@ impl Kind {
             Kind::Simulation,
             Kind::Validation,
             Kind::Fleet,
+            Kind::Scenario,
         ]
     }
 
@@ -543,8 +550,9 @@ mod tests {
         assert_eq!(Kind::parse("digital-twin"), Some(Kind::DigitalTwin));
         assert_eq!(Kind::parse("validation"), Some(Kind::Validation));
         assert_eq!(Kind::parse("fleet"), Some(Kind::Fleet));
+        assert_eq!(Kind::parse("scenario"), Some(Kind::Scenario));
         assert_eq!(Kind::parse("nope"), None);
-        assert_eq!(Kind::all().len(), 10, "Fleet is the tenth kind");
+        assert_eq!(Kind::all().len(), 11, "Scenario is the eleventh kind");
         assert_eq!(Phase::parse("Ready"), Some(Phase::Ready));
         assert_eq!(Phase::parse("ready"), None);
     }

@@ -12,12 +12,14 @@
 //!
 //! [`TypedSpec`] is the closed-world dispatcher the [`super::Registry`]
 //! reconciler and the [`super::controller::Controller`] use to treat all
-//! ten kinds uniformly.
+//! eleven kinds uniformly.
 
+use crate::campaign::explore::{ExploreConfig, SloMetric};
 use crate::campaign::Campaign;
 use crate::datagen::{DataSetSpec, FieldSpec};
 use crate::loadgen::LoadPattern;
 use crate::pipeline::VariantConfig;
+use crate::scenario::Scenario;
 use crate::traffic::TrafficModel;
 use crate::twin::TwinParams;
 use crate::util::cli::seed_from_json;
@@ -322,7 +324,40 @@ pub enum ExperimentSpec {
         /// `plantd worker` processes instead of the local thread pool
         /// (byte-identical report either way — `docs/DISTRIBUTED.md`).
         fleet: Option<String>,
+        /// Referenced Scenario resource name: deterministic fault
+        /// injection layered over every cell (`docs/SCENARIOS.md`). An
+        /// *empty* scenario leaves the report byte-identical to running
+        /// with none.
+        scenario: Option<String>,
         /// Optional directory to write `campaign.json` into.
+        out: Option<String>,
+    },
+    /// Adaptive SLO-frontier search: bisect offered load per
+    /// {pipeline variant × scenario} to find the knee where the SLO
+    /// first fails (`plantd explore`, `docs/SCENARIOS.md`).
+    Explore {
+        /// Grid preset name supplying the variants and dataset shape
+        /// (`paper` or `extended`).
+        grid: String,
+        /// Master seed (same seed ⇒ byte-identical frontier).
+        seed: u64,
+        /// Referenced Scenario resource names; empty = baseline only.
+        scenarios: Vec<String>,
+        /// SLO metric (`p95` | `p99` | `loss`).
+        slo_metric: String,
+        /// SLO limit: the predicate is `metric <= limit`.
+        slo_limit: f64,
+        /// Lower load bound, records/s.
+        load_lo: f64,
+        /// Upper load bound, records/s.
+        load_hi: f64,
+        /// Bisection tolerance, rps.
+        tol_rps: f64,
+        /// Probe duration, virtual seconds of steady load.
+        duration_s: f64,
+        /// Worker threads for parallel probe waves.
+        threads: usize,
+        /// Optional directory to write `explore.json` into.
         out: Option<String>,
     },
 }
@@ -355,12 +390,59 @@ impl ResourceSpec for ExperimentSpec {
                         .ok_or("fleet: expected a string")?,
                 ),
             };
+            let scenario = match c.get("scenario") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or("scenario: expected a string")?,
+                ),
+            };
             return Ok(ExperimentSpec::Campaign {
                 grid: str_field(c, "grid", "paper")?,
                 seed: seed_field(c, "seed", 0xD5)?,
                 threads: u64_field(c, "threads", 4)? as usize,
                 cluster_tolerance,
                 fleet,
+                scenario,
+                out,
+            });
+        }
+        if let Some(x) = j.get("explore") {
+            let out = match x.get("out") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or("out: expected a string")?,
+                ),
+            };
+            let scenarios: Vec<String> = if let Some(arr) =
+                x.get("scenarios").and_then(Json::as_arr)
+            {
+                arr.iter()
+                    .map(|s| {
+                        s.as_str()
+                            .map(str::to_string)
+                            .ok_or("scenarios: entries must be strings".to_string())
+                    })
+                    .collect::<Result<_, _>>()?
+            } else if let Some(s) = x.get_str("scenario") {
+                vec![s.to_string()]
+            } else {
+                Vec::new()
+            };
+            return Ok(ExperimentSpec::Explore {
+                grid: str_field(x, "grid", "paper")?,
+                seed: seed_field(x, "seed", 0xE5)?,
+                scenarios,
+                slo_metric: str_field(x, "slo_metric", "p95")?,
+                slo_limit: f64_field(x, "slo_limit", 2.0)?,
+                load_lo: f64_field(x, "load_lo", 0.5)?,
+                load_hi: f64_field(x, "load_hi", 64.0)?,
+                tol_rps: f64_field(x, "tol_rps", 0.5)?,
+                duration_s: f64_field(x, "duration_s", 60.0)?,
+                threads: u64_field(x, "threads", 4)? as usize,
                 out,
             });
         }
@@ -420,6 +502,7 @@ impl ResourceSpec for ExperimentSpec {
                 threads,
                 cluster_tolerance,
                 fleet,
+                scenario,
                 out,
             } => {
                 let mut inner = vec![
@@ -433,10 +516,48 @@ impl ResourceSpec for ExperimentSpec {
                 if let Some(f) = fleet {
                     inner.push(("fleet", Json::str(f.clone())));
                 }
+                if let Some(s) = scenario {
+                    inner.push(("scenario", Json::str(s.clone())));
+                }
                 if let Some(dir) = out {
                     inner.push(("out", Json::str(dir.clone())));
                 }
                 Json::obj(vec![("campaign", Json::obj(inner))])
+            }
+            ExperimentSpec::Explore {
+                grid,
+                seed,
+                scenarios,
+                slo_metric,
+                slo_limit,
+                load_lo,
+                load_hi,
+                tol_rps,
+                duration_s,
+                threads,
+                out,
+            } => {
+                let mut inner = vec![
+                    ("grid", Json::str(grid.clone())),
+                    ("seed", seed_json(*seed)),
+                    ("slo_metric", Json::str(slo_metric.clone())),
+                    ("slo_limit", Json::Num(*slo_limit)),
+                    ("load_lo", Json::Num(*load_lo)),
+                    ("load_hi", Json::Num(*load_hi)),
+                    ("tol_rps", Json::Num(*tol_rps)),
+                    ("duration_s", Json::Num(*duration_s)),
+                    ("threads", Json::Num(*threads as f64)),
+                ];
+                if !scenarios.is_empty() {
+                    inner.push((
+                        "scenarios",
+                        Json::arr(scenarios.iter().map(|s| Json::str(s.clone()))),
+                    ));
+                }
+                if let Some(dir) = out {
+                    inner.push(("out", Json::str(dir.clone())));
+                }
+                Json::obj(vec![("explore", Json::obj(inner))])
             }
         }
     }
@@ -482,6 +603,39 @@ impl ResourceSpec for ExperimentSpec {
                 }
                 Ok(())
             }
+            ExperimentSpec::Explore {
+                grid,
+                seed,
+                slo_metric,
+                slo_limit,
+                load_lo,
+                load_hi,
+                tol_rps,
+                duration_s,
+                threads,
+                ..
+            } => {
+                Campaign::from_grid_name(grid, 0)?;
+                let metric = SloMetric::parse(slo_metric).ok_or_else(|| {
+                    format!("explore: unknown slo metric '{slo_metric}' (p95|p99|loss)")
+                })?;
+                if *threads == 0 {
+                    return Err("explore: threads must be > 0".into());
+                }
+                // re-use the engine's own bound checks
+                ExploreConfig {
+                    name: "spec-check".to_string(),
+                    seed: *seed,
+                    metric,
+                    limit: *slo_limit,
+                    load_lo_rps: *load_lo,
+                    load_hi_rps: *load_hi,
+                    tol_rps: *tol_rps,
+                    duration_s: *duration_s,
+                    threads: *threads,
+                }
+                .validate()
+            }
         }
     }
 
@@ -500,10 +654,20 @@ impl ResourceSpec for ExperimentSpec {
                 deps.extend(pipelines.iter().map(|p| (Kind::Pipeline, p.clone())));
                 deps
             }
-            ExperimentSpec::Campaign { fleet, .. } => match fleet {
-                Some(f) => vec![(Kind::Fleet, f.clone())],
-                None => Vec::new(),
-            },
+            ExperimentSpec::Campaign { fleet, scenario, .. } => {
+                let mut deps = Vec::new();
+                if let Some(f) = fleet {
+                    deps.push((Kind::Fleet, f.clone()));
+                }
+                if let Some(s) = scenario {
+                    deps.push((Kind::Scenario, s.clone()));
+                }
+                deps
+            }
+            ExperimentSpec::Explore { scenarios, .. } => scenarios
+                .iter()
+                .map(|s| (Kind::Scenario, s.clone()))
+                .collect(),
         }
     }
 }
@@ -896,6 +1060,35 @@ impl ResourceSpec for FleetSpec {
     }
 }
 
+// -------------------------------------------------------------- Scenario
+
+/// *Scenario* spec: a newtype over the domain fault-injection plan
+/// ([`crate::scenario::Scenario`]). Attach it to an Experiment campaign
+/// via the campaign's `scenario` reference, or sweep several in one
+/// `explore` experiment. An empty plan is valid and leaves any report it
+/// is attached to byte-identical — the no-fault control.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec(
+    /// The fault-injection plan itself.
+    pub Scenario,
+);
+
+impl ResourceSpec for ScenarioSpec {
+    const KIND: Kind = Kind::Scenario;
+
+    fn from_json(j: &Json) -> Result<Self, String> {
+        Scenario::from_json(j).map(ScenarioSpec)
+    }
+
+    fn to_json(&self) -> Json {
+        self.0.to_json()
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        self.0.validate()
+    }
+}
+
 // ------------------------------------------------------------ dispatcher
 
 /// A parsed spec of any kind — the closed-world dispatcher the registry
@@ -923,6 +1116,8 @@ pub enum TypedSpec {
     Validation(ValidationSpec),
     /// Parsed *Fleet* spec.
     Fleet(FleetSpec),
+    /// Parsed *Scenario* spec.
+    Scenario(ScenarioSpec),
 }
 
 impl TypedSpec {
@@ -941,6 +1136,7 @@ impl TypedSpec {
             Kind::Simulation => TypedSpec::Simulation(SimulationSpec::from_json(j)?),
             Kind::Validation => TypedSpec::Validation(ValidationSpec::from_json(j)?),
             Kind::Fleet => TypedSpec::Fleet(FleetSpec::from_json(j)?),
+            Kind::Scenario => TypedSpec::Scenario(ScenarioSpec::from_json(j)?),
         })
     }
 
@@ -957,6 +1153,7 @@ impl TypedSpec {
             TypedSpec::Simulation(_) => Kind::Simulation,
             TypedSpec::Validation(_) => Kind::Validation,
             TypedSpec::Fleet(_) => Kind::Fleet,
+            TypedSpec::Scenario(_) => Kind::Scenario,
         }
     }
 
@@ -973,6 +1170,7 @@ impl TypedSpec {
             TypedSpec::Simulation(s) => s.to_json(),
             TypedSpec::Validation(s) => s.to_json(),
             TypedSpec::Fleet(s) => s.to_json(),
+            TypedSpec::Scenario(s) => s.to_json(),
         }
     }
 
@@ -989,6 +1187,7 @@ impl TypedSpec {
             TypedSpec::Simulation(s) => s.validate(),
             TypedSpec::Validation(s) => s.validate(),
             TypedSpec::Fleet(s) => s.validate(),
+            TypedSpec::Scenario(s) => s.validate(),
         }
     }
 
@@ -1005,6 +1204,7 @@ impl TypedSpec {
             TypedSpec::Simulation(s) => s.dependencies(),
             TypedSpec::Validation(s) => s.dependencies(),
             TypedSpec::Fleet(s) => s.dependencies(),
+            TypedSpec::Scenario(s) => s.dependencies(),
         }
     }
 }
@@ -1103,6 +1303,34 @@ mod tests {
                 {"name": "b", "addr": "10.0.0.2:7401"}], "shard_cells": 4}"#,
         );
         fixed_point(Kind::Fleet, r#"{"workers": [{"name": "solo", "addr": "localhost:7401"}]}"#);
+        fixed_point(Kind::Scenario, r#"{}"#);
+        fixed_point(
+            Kind::Scenario,
+            r#"{"name": "brownout",
+                "outages": [{"station": "v2x", "start_s": 10, "end_s": 20}],
+                "slowdowns": [{"station": "etl", "start_s": 0, "end_s": 30,
+                               "factor": 2.5}],
+                "retries": [{"station": "v2x", "fail_rate": 0.1,
+                             "max_attempts": 4, "base_backoff_s": 0.05,
+                             "max_backoff_s": 1.0, "jitter_frac": 0.2}],
+                "clamps": [{"station": "unzipper", "capacity": 8,
+                            "policy": "drop"}],
+                "overlay": {"kind": "cold_start_burst", "until_s": 30,
+                            "factor": 3}}"#,
+        );
+        fixed_point(
+            Kind::Experiment,
+            r#"{"campaign": {"grid": "paper", "scenario": "brownout"}}"#,
+        );
+        fixed_point(Kind::Experiment, r#"{"explore": {}}"#);
+        fixed_point(
+            Kind::Experiment,
+            r#"{"explore": {"grid": "paper", "seed": 99,
+                "scenarios": ["noop", "brownout"], "slo_metric": "p99",
+                "slo_limit": 1.5, "load_lo": 1, "load_hi": 32,
+                "tol_rps": 0.25, "duration_s": 20, "threads": 2,
+                "out": "out-x"}}"#,
+        );
     }
 
     #[test]
@@ -1190,6 +1418,32 @@ mod tests {
             .unwrap()
             .dependencies()
             .is_empty());
+        // a scenario-referencing campaign depends on its Scenario...
+        let j = Json::parse(
+            r#"{"campaign": {"grid": "paper", "fleet": "lab", "scenario": "sc"}}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            TypedSpec::parse(Kind::Experiment, &j).unwrap().dependencies(),
+            vec![
+                (Kind::Fleet, "lab".to_string()),
+                (Kind::Scenario, "sc".to_string())
+            ]
+        );
+        // ...and an explore experiment on every scenario it sweeps
+        let j = Json::parse(r#"{"explore": {"scenarios": ["a", "b"]}}"#).unwrap();
+        assert_eq!(
+            TypedSpec::parse(Kind::Experiment, &j).unwrap().dependencies(),
+            vec![
+                (Kind::Scenario, "a".to_string()),
+                (Kind::Scenario, "b".to_string())
+            ]
+        );
+        let j = Json::parse(r#"{"outages": []}"#).unwrap();
+        assert!(TypedSpec::parse(Kind::Scenario, &j)
+            .unwrap()
+            .dependencies()
+            .is_empty());
     }
 
     #[test]
@@ -1237,6 +1491,28 @@ mod tests {
                 Kind::Fleet,
                 r#"{"workers": [{"name": "a", "addr": "h:notaport"}]}"#,
             ),
+            // unknown stage names, inverted windows, and certain-failure
+            // retry rates are scenario shape errors
+            (
+                Kind::Scenario,
+                r#"{"outages": [{"station": "turbo", "start_s": 0, "end_s": 5}]}"#,
+            ),
+            (
+                Kind::Scenario,
+                r#"{"slowdowns": [{"station": "etl", "start_s": 9, "end_s": 3,
+                    "factor": 2}]}"#,
+            ),
+            (
+                Kind::Scenario,
+                r#"{"retries": [{"station": "v2x", "fail_rate": 1.0}]}"#,
+            ),
+            (Kind::Experiment, r#"{"explore": {"slo_metric": "p42"}}"#),
+            (
+                Kind::Experiment,
+                r#"{"explore": {"load_lo": 8, "load_hi": 2}}"#,
+            ),
+            (Kind::Experiment, r#"{"explore": {"tol_rps": 0}}"#),
+            (Kind::Experiment, r#"{"explore": {"threads": 0}}"#),
         ];
         for (kind, raw) in cases {
             let j = Json::parse(raw).unwrap();
@@ -1276,6 +1552,9 @@ mod tests {
             (Kind::Validation, r#"{"golden_dir": 7}"#),
             (Kind::Validation, r#"{"fleet": 7}"#),
             (Kind::Experiment, r#"{"campaign": {"fleet": 7}}"#),
+            (Kind::Experiment, r#"{"campaign": {"scenario": 7}}"#),
+            (Kind::Experiment, r#"{"explore": {"slo_limit": "2"}}"#),
+            (Kind::Experiment, r#"{"explore": {"scenarios": [7]}}"#),
             (Kind::Fleet, r#"{"workers": "all"}"#),
             (
                 Kind::Fleet,

@@ -1,0 +1,754 @@
+//! Scenarios: typed, seeded, deterministic degraded-mode specs.
+//!
+//! The campaign grid sweeps happy-path load shapes; a [`Scenario`]
+//! describes what else can go wrong while that load is applied —
+//! backend **outage windows** (a station's servers go down and come
+//! back on a schedule), **slowdown windows** (service-time
+//! multipliers), **retry storms** (failure-prone puts retried with
+//! exponential backoff), **capacity clamps** (bounded queues that shed
+//! or backpressure), and **load overlays** (a cold-start burst or a
+//! regional diurnal mix multiplying the arrival-rate curve).
+//!
+//! Scenarios are *resources* (the eleventh [`crate::resources::Kind`]):
+//! they round-trip through JSON byte-identically, validate before they
+//! reconcile Ready, and are referenced by name from campaign and
+//! explore Experiments. At execution time a scenario **compiles** per
+//! cell into a [`crate::sim::FaultPlan`] whose RNG stream is forked off
+//! the cell seed via [`crate::sim::derive_seed`] with a dedicated tag —
+//! the cell's own pre-sampled jitter stream is untouched, so:
+//!
+//! - an **empty** scenario is byte-identical to no scenario at all, at
+//!   any thread or worker count (the cell routes through the plain
+//!   `Tandem::run` path — the fault hooks are compiled out);
+//! - a **faulted** run is a pure function of `(cell seed, scenario)`,
+//!   reproducible across machines and over the `dist` wire protocol.
+//!
+//! See `docs/SCENARIOS.md` for spec shapes and the determinism
+//! contract, and `campaign::explore` for the SLO-frontier search that
+//! consumes scenarios.
+
+use crate::loadgen::{LoadPattern, Segment};
+use crate::sim::{derive_seed, FaultPlan, QueuePolicy, RetryPolicy};
+use crate::util::json::Json;
+
+/// The canonical stage names scenarios may target, in tandem order.
+/// These are the three stations every campaign cell runs
+/// (`unzipper → v2x → etl`); a scenario naming anything else fails
+/// validation.
+pub const STAGES: [&str; 3] = ["unzipper", "v2x", "etl"];
+
+/// The seed-derivation tag separating a scenario's RNG stream from the
+/// cell's pre-sampled jitter stream.
+const SCENARIO_STREAM_TAG: u64 = 0x5C3A;
+
+/// Resolve a canonical stage name to its tandem station index.
+pub fn stage_index(name: &str) -> Option<usize> {
+    STAGES.iter().position(|s| *s == name)
+}
+
+/// Servers of one stage go down over `[start_s, end_s)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutageWindow {
+    /// Target stage (one of [`STAGES`]).
+    pub station: String,
+    /// Window start, virtual seconds.
+    pub start_s: f64,
+    /// Window end, virtual seconds (> `start_s`).
+    pub end_s: f64,
+    /// Servers taken down (≥ 1).
+    pub servers_down: u64,
+}
+
+/// Service times of one stage stretch by `factor` over
+/// `[start_s, end_s)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlowdownSpec {
+    /// Target stage (one of [`STAGES`]).
+    pub station: String,
+    /// Window start, virtual seconds.
+    pub start_s: f64,
+    /// Window end, virtual seconds (> `start_s`).
+    pub end_s: f64,
+    /// Service-time multiplier (> 0).
+    pub factor: f64,
+}
+
+/// Failure-prone hand-off out of one stage, retried with exponential
+/// backoff and bounded attempts (see [`crate::sim::RetryPolicy`] for
+/// the compiled form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetrySpec {
+    /// Stage whose outbound put is failure-prone.
+    pub station: String,
+    /// Per-attempt failure probability, `[0, 1)`.
+    pub fail_rate: f64,
+    /// Total attempts allowed (≥ 1).
+    pub max_attempts: u64,
+    /// Backoff before the first retry, seconds.
+    pub base_backoff_s: f64,
+    /// Ceiling on a single backoff, seconds.
+    pub max_backoff_s: f64,
+    /// Uniform jitter fraction stretching each backoff (≥ 0).
+    pub jitter_frac: f64,
+}
+
+/// What a clamped (bounded) queue does when full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClampPolicy {
+    /// Shed arrivals beyond capacity (load shedding).
+    Drop,
+    /// Park arrivals in a backpressure buffer (cascading stall).
+    Block,
+}
+
+impl ClampPolicy {
+    /// The canonical spec string.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClampPolicy::Drop => "drop",
+            ClampPolicy::Block => "block",
+        }
+    }
+
+    /// Parse a spec string.
+    pub fn parse(s: &str) -> Option<ClampPolicy> {
+        match s {
+            "drop" => Some(ClampPolicy::Drop),
+            "block" => Some(ClampPolicy::Block),
+            _ => None,
+        }
+    }
+}
+
+/// Bound one stage's queue at `capacity` waiting jobs for the whole
+/// run — the backpressure-cascade primitive: clamping a downstream
+/// stage propagates stall (or shed) behaviour upstream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityClamp {
+    /// Target stage (one of [`STAGES`]).
+    pub station: String,
+    /// Maximum waiting jobs (≥ 1).
+    pub capacity: u64,
+    /// Full-queue behaviour.
+    pub policy: ClampPolicy,
+}
+
+/// A multiplicative transform on the arrival-rate curve.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoadOverlay {
+    /// Cold-start burst: rates before `until_s` are multiplied by
+    /// `factor` (a thundering herd reconnecting after a restart).
+    ColdStartBurst {
+        /// Burst end, virtual seconds into the run.
+        until_s: f64,
+        /// Rate multiplier during the burst (≥ 0).
+        factor: f64,
+    },
+    /// Regional diurnal mix: rates are modulated by
+    /// `1 + amplitude · sin(2π t / period_s)` — segments are subdivided
+    /// so the sinusoid is tracked piecewise-linearly.
+    DiurnalMix {
+        /// Modulation period, seconds.
+        period_s: f64,
+        /// Modulation amplitude, `[0, 1]` (1 swings between 0× and 2×).
+        amplitude: f64,
+    },
+}
+
+/// A named bundle of degraded-mode primitives. Empty scenarios are
+/// legal (and byte-identical to no scenario); see the module docs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Scenario {
+    /// Display name (carried in reports and wire frames).
+    pub name: String,
+    /// Outage windows.
+    pub outages: Vec<OutageWindow>,
+    /// Slowdown windows.
+    pub slowdowns: Vec<SlowdownSpec>,
+    /// At most one retry policy per stage.
+    pub retries: Vec<RetrySpec>,
+    /// Queue-capacity clamps (at most one per stage).
+    pub clamps: Vec<CapacityClamp>,
+    /// Arrival-rate overlay.
+    pub overlay: Option<LoadOverlay>,
+}
+
+impl Scenario {
+    /// An empty scenario: attaching it changes nothing, byte for byte.
+    pub fn empty(name: &str) -> Self {
+        Scenario {
+            name: name.to_string(),
+            ..Scenario::default()
+        }
+    }
+
+    /// Add an outage window (builder style).
+    pub fn with_outage(mut self, station: &str, start_s: f64, end_s: f64, servers_down: u64) -> Self {
+        self.outages.push(OutageWindow {
+            station: station.to_string(),
+            start_s,
+            end_s,
+            servers_down,
+        });
+        self
+    }
+
+    /// Add a slowdown window (builder style).
+    pub fn with_slowdown(mut self, station: &str, start_s: f64, end_s: f64, factor: f64) -> Self {
+        self.slowdowns.push(SlowdownSpec {
+            station: station.to_string(),
+            start_s,
+            end_s,
+            factor,
+        });
+        self
+    }
+
+    /// Attach a retry policy (builder style).
+    pub fn with_retry(mut self, retry: RetrySpec) -> Self {
+        self.retries.push(retry);
+        self
+    }
+
+    /// Clamp one stage's queue (builder style).
+    pub fn with_clamp(mut self, station: &str, capacity: u64, policy: ClampPolicy) -> Self {
+        self.clamps.push(CapacityClamp {
+            station: station.to_string(),
+            capacity,
+            policy,
+        });
+        self
+    }
+
+    /// Set the load overlay (builder style).
+    pub fn with_overlay(mut self, overlay: LoadOverlay) -> Self {
+        self.overlay = Some(overlay);
+        self
+    }
+
+    /// True when the scenario injects nothing at all.
+    pub fn is_empty(&self) -> bool {
+        self.outages.is_empty()
+            && self.slowdowns.is_empty()
+            && self.retries.is_empty()
+            && self.clamps.is_empty()
+            && self.overlay.is_none()
+    }
+
+    /// Shape-check every primitive (stage names, window ordering,
+    /// probability ranges). A scenario that validates compiles without
+    /// panicking for any cell seed.
+    pub fn validate(&self) -> Result<(), String> {
+        let stage = |name: &str, what: &str| -> Result<(), String> {
+            if stage_index(name).is_none() {
+                return Err(format!(
+                    "{what}: unknown stage '{name}' (expected one of {STAGES:?})"
+                ));
+            }
+            Ok(())
+        };
+        let window = |start: f64, end: f64, what: &str| -> Result<(), String> {
+            if !(start.is_finite() && end.is_finite() && start >= 0.0 && end > start) {
+                return Err(format!(
+                    "{what}: window [{start}, {end}) must be finite, non-negative and ordered"
+                ));
+            }
+            Ok(())
+        };
+        for o in &self.outages {
+            stage(&o.station, "outage")?;
+            window(o.start_s, o.end_s, "outage")?;
+            if o.servers_down < 1 {
+                return Err("outage: servers_down must be >= 1".into());
+            }
+        }
+        for s in &self.slowdowns {
+            stage(&s.station, "slowdown")?;
+            window(s.start_s, s.end_s, "slowdown")?;
+            if !(s.factor.is_finite() && s.factor > 0.0) {
+                return Err(format!("slowdown: factor {} must be positive", s.factor));
+            }
+        }
+        for r in &self.retries {
+            stage(&r.station, "retry")?;
+            if !(0.0..1.0).contains(&r.fail_rate) {
+                return Err(format!("retry: fail_rate {} must be in [0, 1)", r.fail_rate));
+            }
+            if r.max_attempts < 1 {
+                return Err("retry: max_attempts must be >= 1".into());
+            }
+            if !(r.base_backoff_s.is_finite() && r.base_backoff_s >= 0.0) {
+                return Err("retry: base_backoff_s must be finite and >= 0".into());
+            }
+            if !(r.max_backoff_s.is_finite() && r.max_backoff_s >= r.base_backoff_s) {
+                return Err("retry: max_backoff_s must be finite and >= base_backoff_s".into());
+            }
+            if !(r.jitter_frac.is_finite() && r.jitter_frac >= 0.0) {
+                return Err("retry: jitter_frac must be finite and >= 0".into());
+            }
+            if self.retries.iter().filter(|x| x.station == r.station).count() > 1 {
+                return Err(format!("retry: duplicate policy for stage '{}'", r.station));
+            }
+        }
+        for c in &self.clamps {
+            stage(&c.station, "clamp")?;
+            if c.capacity < 1 {
+                return Err("clamp: capacity must be >= 1".into());
+            }
+            if self.clamps.iter().filter(|x| x.station == c.station).count() > 1 {
+                return Err(format!("clamp: duplicate clamp for stage '{}'", c.station));
+            }
+        }
+        match &self.overlay {
+            Some(LoadOverlay::ColdStartBurst { until_s, factor }) => {
+                if !(until_s.is_finite() && *until_s > 0.0) {
+                    return Err("overlay: until_s must be finite and positive".into());
+                }
+                if !(factor.is_finite() && *factor >= 0.0) {
+                    return Err("overlay: factor must be finite and >= 0".into());
+                }
+            }
+            Some(LoadOverlay::DiurnalMix { period_s, amplitude }) => {
+                if !(period_s.is_finite() && *period_s > 0.0) {
+                    return Err("overlay: period_s must be finite and positive".into());
+                }
+                if !(amplitude.is_finite() && (0.0..=1.0).contains(amplitude)) {
+                    return Err("overlay: amplitude must be in [0, 1]".into());
+                }
+            }
+            None => {}
+        }
+        Ok(())
+    }
+
+    /// Compile into a sim-level [`FaultPlan`] for one cell. The plan's
+    /// RNG stream is `derive_seed(cell_seed, [0x5C3A, 0, 0])` — forked
+    /// away from the cell's own jitter stream, so the same scenario on
+    /// the same cell draws the same retry outcomes everywhere. Clamps
+    /// and overlays are *not* part of the plan: clamps apply at station
+    /// construction ([`Scenario::queue_policy_for`]) and overlays to
+    /// the load pattern ([`Scenario::apply_overlay`]).
+    pub fn compile(&self, cell_seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::new(derive_seed(cell_seed, [SCENARIO_STREAM_TAG, 0, 0]));
+        for o in &self.outages {
+            let idx = stage_index(&o.station).expect("validated stage name");
+            plan = plan.with_outage(idx, o.start_s, o.end_s, o.servers_down as usize);
+        }
+        for s in &self.slowdowns {
+            let idx = stage_index(&s.station).expect("validated stage name");
+            plan = plan.with_slowdown(idx, s.start_s, s.end_s, s.factor);
+        }
+        for r in &self.retries {
+            let idx = stage_index(&r.station).expect("validated stage name");
+            plan = plan.with_retry(RetryPolicy {
+                station: idx,
+                fail_rate: r.fail_rate,
+                max_attempts: r.max_attempts.min(u32::MAX as u64) as u32,
+                base_backoff_s: r.base_backoff_s,
+                max_backoff_s: r.max_backoff_s,
+                jitter_frac: r.jitter_frac,
+            });
+        }
+        plan
+    }
+
+    /// The queue policy a clamp imposes on `stage`, if any.
+    pub fn queue_policy_for(&self, stage: &str) -> Option<QueuePolicy> {
+        let c = self.clamps.iter().find(|c| c.station == stage)?;
+        let capacity = c.capacity as usize;
+        Some(match c.policy {
+            ClampPolicy::Drop => QueuePolicy::DropNewest { capacity },
+            ClampPolicy::Block => QueuePolicy::Block { capacity },
+        })
+    }
+
+    /// Apply the load overlay (if any) to an arrival-rate pattern,
+    /// returning the transformed pattern. Pure segment arithmetic: the
+    /// total duration is preserved exactly, rates stay non-negative,
+    /// and no RNG is involved — the overlay reshapes *when* records are
+    /// offered, not how they are drawn.
+    pub fn apply_overlay(&self, pattern: &LoadPattern) -> LoadPattern {
+        match &self.overlay {
+            None => pattern.clone(),
+            Some(LoadOverlay::ColdStartBurst { until_s, factor }) => {
+                let mut out: Vec<Segment> = Vec::with_capacity(pattern.segments.len() + 1);
+                let mut t0 = 0.0f64;
+                for s in &pattern.segments {
+                    let t1 = t0 + s.duration_s;
+                    if t1 <= *until_s {
+                        // entirely inside the burst
+                        out.push(Segment {
+                            duration_s: s.duration_s,
+                            start_rps: s.start_rps * factor,
+                            end_rps: s.end_rps * factor,
+                        });
+                    } else if t0 >= *until_s {
+                        // entirely after the burst
+                        out.push(*s);
+                    } else {
+                        // straddles the boundary: split at until_s
+                        let frac = (*until_s - t0) / s.duration_s;
+                        let mid = s.start_rps + (s.end_rps - s.start_rps) * frac;
+                        out.push(Segment {
+                            duration_s: *until_s - t0,
+                            start_rps: s.start_rps * factor,
+                            end_rps: mid * factor,
+                        });
+                        out.push(Segment {
+                            duration_s: t1 - *until_s,
+                            start_rps: mid,
+                            end_rps: s.end_rps,
+                        });
+                    }
+                    t0 = t1;
+                }
+                LoadPattern::new(out)
+            }
+            Some(LoadOverlay::DiurnalMix { period_s, amplitude }) => {
+                // subdivide so chunks track the sinusoid: at most an
+                // eighth of a period per chunk
+                let max_chunk = period_s / 8.0;
+                let modulate = |t: f64| {
+                    1.0 + amplitude * (2.0 * std::f64::consts::PI * t / period_s).sin()
+                };
+                let mut out: Vec<Segment> = Vec::new();
+                let mut t0 = 0.0f64;
+                for s in &pattern.segments {
+                    let chunks = (s.duration_s / max_chunk).ceil().max(1.0) as usize;
+                    let dt = s.duration_s / chunks as f64;
+                    for k in 0..chunks {
+                        let a = t0 + dt * k as f64;
+                        let b = t0 + dt * (k + 1) as f64;
+                        let rate = |t: f64| {
+                            s.start_rps + (s.end_rps - s.start_rps) * ((t - t0) / s.duration_s)
+                        };
+                        out.push(Segment {
+                            duration_s: dt,
+                            start_rps: rate(a) * modulate(a),
+                            end_rps: rate(b) * modulate(b),
+                        });
+                    }
+                    t0 += s.duration_s;
+                }
+                LoadPattern::new(out)
+            }
+        }
+    }
+
+    /// Parse from the canonical JSON spec shape (see `docs/SCENARIOS.md`).
+    pub fn from_json(j: &Json) -> Result<Scenario, String> {
+        let name = j
+            .get_str("name")
+            .map(str::to_string)
+            .unwrap_or_else(|| "scenario".to_string());
+        let station = |o: &Json, what: &str| -> Result<String, String> {
+            o.get_str("station")
+                .map(str::to_string)
+                .ok_or_else(|| format!("scenario {what}: missing 'station'"))
+        };
+        let num = |o: &Json, key: &str, what: &str| -> Result<f64, String> {
+            o.get_f64(key)
+                .ok_or_else(|| format!("scenario {what}: missing or non-numeric '{key}'"))
+        };
+        let list = |key: &str| -> Result<Vec<Json>, String> {
+            match j.get(key) {
+                None => Ok(Vec::new()),
+                Some(v) => v
+                    .as_arr()
+                    .map(|a| a.to_vec())
+                    .ok_or_else(|| format!("scenario: '{key}' must be an array")),
+            }
+        };
+        let mut outages = Vec::new();
+        for o in list("outages")? {
+            outages.push(OutageWindow {
+                station: station(&o, "outage")?,
+                start_s: num(&o, "start_s", "outage")?,
+                end_s: num(&o, "end_s", "outage")?,
+                servers_down: o.get_u64("servers_down").unwrap_or(1),
+            });
+        }
+        let mut slowdowns = Vec::new();
+        for s in list("slowdowns")? {
+            slowdowns.push(SlowdownSpec {
+                station: station(&s, "slowdown")?,
+                start_s: num(&s, "start_s", "slowdown")?,
+                end_s: num(&s, "end_s", "slowdown")?,
+                factor: num(&s, "factor", "slowdown")?,
+            });
+        }
+        let mut retries = Vec::new();
+        for r in list("retries")? {
+            retries.push(RetrySpec {
+                station: station(&r, "retry")?,
+                fail_rate: num(&r, "fail_rate", "retry")?,
+                max_attempts: r.get_u64("max_attempts").unwrap_or(3),
+                base_backoff_s: num(&r, "base_backoff_s", "retry")?,
+                max_backoff_s: num(&r, "max_backoff_s", "retry")?,
+                jitter_frac: r.get_f64("jitter_frac").unwrap_or(0.0),
+            });
+        }
+        let mut clamps = Vec::new();
+        for c in list("clamps")? {
+            let policy = c
+                .get_str("policy")
+                .ok_or_else(|| "scenario clamp: missing 'policy'".to_string())?;
+            clamps.push(CapacityClamp {
+                station: station(&c, "clamp")?,
+                capacity: c
+                    .get_u64("capacity")
+                    .ok_or_else(|| "scenario clamp: missing 'capacity'".to_string())?,
+                policy: ClampPolicy::parse(policy)
+                    .ok_or_else(|| format!("scenario clamp: unknown policy '{policy}'"))?,
+            });
+        }
+        let overlay = match j.get("overlay") {
+            None => None,
+            Some(o) => {
+                let kind = o
+                    .get_str("kind")
+                    .ok_or_else(|| "scenario overlay: missing 'kind'".to_string())?;
+                Some(match kind {
+                    "cold_start_burst" => LoadOverlay::ColdStartBurst {
+                        until_s: num(o, "until_s", "overlay")?,
+                        factor: num(o, "factor", "overlay")?,
+                    },
+                    "diurnal_mix" => LoadOverlay::DiurnalMix {
+                        period_s: num(o, "period_s", "overlay")?,
+                        amplitude: num(o, "amplitude", "overlay")?,
+                    },
+                    other => return Err(format!("scenario overlay: unknown kind '{other}'")),
+                })
+            }
+        };
+        Ok(Scenario {
+            name,
+            outages,
+            slowdowns,
+            retries,
+            clamps,
+            overlay,
+        })
+    }
+
+    /// Serialize to the canonical JSON spec shape: `name` always,
+    /// collections only when non-empty, `overlay` only when set — a
+    /// byte-identical fixed point under [`Scenario::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("name", Json::str(self.name.as_str()))];
+        if !self.outages.is_empty() {
+            fields.push((
+                "outages",
+                Json::arr(
+                    self.outages
+                        .iter()
+                        .map(|o| {
+                            Json::obj(vec![
+                                ("station", Json::str(o.station.as_str())),
+                                ("start_s", Json::num(o.start_s)),
+                                ("end_s", Json::num(o.end_s)),
+                                ("servers_down", Json::num(o.servers_down as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.slowdowns.is_empty() {
+            fields.push((
+                "slowdowns",
+                Json::arr(
+                    self.slowdowns
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("station", Json::str(s.station.as_str())),
+                                ("start_s", Json::num(s.start_s)),
+                                ("end_s", Json::num(s.end_s)),
+                                ("factor", Json::num(s.factor)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.retries.is_empty() {
+            fields.push((
+                "retries",
+                Json::arr(
+                    self.retries
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("station", Json::str(r.station.as_str())),
+                                ("fail_rate", Json::num(r.fail_rate)),
+                                ("max_attempts", Json::num(r.max_attempts as f64)),
+                                ("base_backoff_s", Json::num(r.base_backoff_s)),
+                                ("max_backoff_s", Json::num(r.max_backoff_s)),
+                                ("jitter_frac", Json::num(r.jitter_frac)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.clamps.is_empty() {
+            fields.push((
+                "clamps",
+                Json::arr(
+                    self.clamps
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("station", Json::str(c.station.as_str())),
+                                ("capacity", Json::num(c.capacity as f64)),
+                                ("policy", Json::str(c.policy.as_str())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(o) = &self.overlay {
+            fields.push((
+                "overlay",
+                match o {
+                    LoadOverlay::ColdStartBurst { until_s, factor } => Json::obj(vec![
+                        ("kind", Json::str("cold_start_burst")),
+                        ("until_s", Json::num(*until_s)),
+                        ("factor", Json::num(*factor)),
+                    ]),
+                    LoadOverlay::DiurnalMix { period_s, amplitude } => Json::obj(vec![
+                        ("kind", Json::str("diurnal_mix")),
+                        ("period_s", Json::num(*period_s)),
+                        ("amplitude", Json::num(*amplitude)),
+                    ]),
+                },
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_scenario() -> Scenario {
+        Scenario::empty("brownout")
+            .with_outage("v2x", 30.0, 60.0, 1)
+            .with_slowdown("etl", 10.0, 40.0, 2.5)
+            .with_retry(RetrySpec {
+                station: "v2x".into(),
+                fail_rate: 0.2,
+                max_attempts: 4,
+                base_backoff_s: 0.05,
+                max_backoff_s: 1.0,
+                jitter_frac: 0.5,
+            })
+            .with_clamp("unzipper", 64, ClampPolicy::Drop)
+            .with_overlay(LoadOverlay::ColdStartBurst {
+                until_s: 30.0,
+                factor: 3.0,
+            })
+    }
+
+    #[test]
+    fn json_round_trip_is_a_fixed_point() {
+        for s in [Scenario::empty("noop"), full_scenario()] {
+            let j = s.to_json();
+            let back = Scenario::from_json(&j).unwrap();
+            assert_eq!(back, s);
+            assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+        }
+    }
+
+    #[test]
+    fn validation_accepts_the_full_scenario_and_rejects_bad_shapes() {
+        assert!(full_scenario().validate().is_ok());
+        assert!(Scenario::empty("e").validate().is_ok());
+        let bad_stage = Scenario::empty("x").with_outage("kafka", 0.0, 1.0, 1);
+        assert!(bad_stage.validate().unwrap_err().contains("unknown stage"));
+        let bad_window = Scenario::empty("x").with_outage("v2x", 5.0, 5.0, 1);
+        assert!(bad_window.validate().is_err());
+        let bad_rate = Scenario::empty("x").with_retry(RetrySpec {
+            station: "v2x".into(),
+            fail_rate: 1.0,
+            max_attempts: 1,
+            base_backoff_s: 0.0,
+            max_backoff_s: 0.0,
+            jitter_frac: 0.0,
+        });
+        assert!(bad_rate.validate().unwrap_err().contains("fail_rate"));
+        let bad_factor = Scenario::empty("x").with_slowdown("etl", 0.0, 1.0, 0.0);
+        assert!(bad_factor.validate().is_err());
+        let mut dup = Scenario::empty("x").with_clamp("etl", 2, ClampPolicy::Block);
+        dup = dup.with_clamp("etl", 3, ClampPolicy::Drop);
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn compile_resolves_stages_and_seeds_deterministically() {
+        let s = full_scenario();
+        let plan = s.compile(0xD5);
+        assert_eq!(plan.events.len(), 2);
+        assert_eq!(plan.events[0].station, 1, "v2x is station 1");
+        assert_eq!(plan.slowdowns[0].station, 2, "etl is station 2");
+        assert_eq!(plan.retries[0].max_attempts, 4);
+        // clamps and overlays are not part of the plan
+        assert!(s.queue_policy_for("unzipper").is_some());
+        assert!(s.queue_policy_for("etl").is_none());
+        // same seed ⇒ same plan skeleton (RNG equality is covered by
+        // the faulted-run determinism tests)
+        let again = s.compile(0xD5);
+        assert_eq!(plan.events, again.events);
+        assert_eq!(plan.slowdowns, again.slowdowns);
+    }
+
+    #[test]
+    fn cold_start_overlay_splits_and_scales_preserving_duration() {
+        let s = Scenario::empty("burst").with_overlay(LoadOverlay::ColdStartBurst {
+            until_s: 30.0,
+            factor: 3.0,
+        });
+        let p = LoadPattern::ramp(120.0, 0.0, 40.0);
+        let out = s.apply_overlay(&p);
+        assert_eq!(out.segments.len(), 2);
+        assert_eq!(out.total_duration_s(), p.total_duration_s());
+        // the ramp reaches 10 rps at t=30; the burst triples up to there
+        assert_eq!(out.segments[0].start_rps, 0.0);
+        assert!((out.segments[0].end_rps - 30.0).abs() < 1e-12);
+        assert!((out.segments[1].start_rps - 10.0).abs() < 1e-12);
+        assert_eq!(out.segments[1].end_rps, 40.0);
+    }
+
+    #[test]
+    fn diurnal_overlay_modulates_without_negative_rates() {
+        let s = Scenario::empty("mix").with_overlay(LoadOverlay::DiurnalMix {
+            period_s: 60.0,
+            amplitude: 1.0,
+        });
+        let p = LoadPattern::steady(120.0, 2.0);
+        let out = s.apply_overlay(&p);
+        assert!(out.segments.len() >= 16, "subdivided for sinusoid tracking");
+        assert!((out.total_duration_s() - 120.0).abs() < 1e-9);
+        for seg in &out.segments {
+            assert!(seg.start_rps >= 0.0 && seg.end_rps >= 0.0);
+        }
+        // zero amplitude is the identity
+        let id = Scenario::empty("id").with_overlay(LoadOverlay::DiurnalMix {
+            period_s: 60.0,
+            amplitude: 0.0,
+        });
+        let same = id.apply_overlay(&p);
+        assert_eq!(same.total_records(), p.total_records());
+    }
+
+    #[test]
+    fn empty_scenario_overlay_is_identity() {
+        let p = LoadPattern::steady(10.0, 1.0);
+        let out = Scenario::empty("e").apply_overlay(&p);
+        assert_eq!(out.segments.len(), 1);
+        assert_eq!(out.segments[0].start_rps, 1.0);
+    }
+}

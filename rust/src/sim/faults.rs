@@ -1,0 +1,300 @@
+//! Compiled fault-injection plans for the DES kernel.
+//!
+//! A [`FaultPlan`] is the *sim-level* form of a scenario
+//! (`crate::scenario::Scenario` compiles into one per cell): station
+//! indices instead of names, a flat pre-sorted schedule of outage
+//! events, slowdown windows, and an optional retry policy with its own
+//! seeded RNG stream. The tandem event loop consumes it through
+//! `Tandem::run_faulted`; the un-faulted `run` path monomorphizes the
+//! fault hooks away entirely (`FAULTS = false`), so an absent or empty
+//! plan is not merely cheap — it is the byte-identical original code
+//! path.
+//!
+//! Determinism: the plan owns a dedicated RNG forked off the cell seed
+//! by the scenario compiler, so retry jitter draws never disturb the
+//! pre-sampled service-jitter stream of the cell itself. Same plan +
+//! same arrivals ⇒ same trajectory, at any thread count.
+
+use crate::util::rng::Rng;
+
+/// One scheduled capacity change: at `t_s`, park (`park > 0`) or
+/// unpark (`park < 0`) that many servers of station `station`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time the change takes effect, seconds.
+    pub t_s: f64,
+    /// Target station index (position in the tandem).
+    pub station: usize,
+    /// Servers to park (positive) or bring back (negative).
+    pub park: i64,
+}
+
+/// A service-time multiplier active on one station over a half-open
+/// window `[start_s, end_s)`. Overlapping windows multiply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlowdownWindow {
+    /// Target station index.
+    pub station: usize,
+    /// Window start, virtual seconds (inclusive).
+    pub start_s: f64,
+    /// Window end, virtual seconds (exclusive).
+    pub end_s: f64,
+    /// Service-time multiplier (> 0; 2.0 doubles every service drawn
+    /// inside the window).
+    pub factor: f64,
+}
+
+/// Retry-with-exponential-backoff on the hand-off out of one station:
+/// each job leaving `station` fails independently with `fail_rate`,
+/// retries after `base_backoff_s · 2^k` (capped at `max_backoff_s`,
+/// stretched by up to `jitter_frac`), and is abandoned once
+/// `max_attempts` attempts have all failed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Station whose outbound put is failure-prone.
+    pub station: usize,
+    /// Per-attempt failure probability, in `[0, 1)`.
+    pub fail_rate: f64,
+    /// Total attempts allowed (≥ 1); the job drops when all fail.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, seconds.
+    pub base_backoff_s: f64,
+    /// Ceiling on a single backoff, seconds.
+    pub max_backoff_s: f64,
+    /// Uniform jitter fraction: each backoff is stretched by a factor
+    /// in `[1, 1 + jitter_frac)` drawn from the plan's RNG stream.
+    pub jitter_frac: f64,
+}
+
+/// The result of pushing one job through [`FaultPlan::draw_retries`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryDraw {
+    /// Total backoff delay accumulated before the outcome, seconds.
+    pub delay_s: f64,
+    /// Attempts that failed (each is counted in
+    /// [`crate::sim::StationStats::retries`]).
+    pub failed: u32,
+    /// Whether the job eventually went through (false ⇒ retry drop).
+    pub delivered: bool,
+}
+
+/// A compiled, self-contained fault schedule for one simulation run.
+pub struct FaultPlan {
+    /// Outage schedule, in schedule order (ties broken by position).
+    pub events: Vec<FaultEvent>,
+    /// Slowdown windows (order irrelevant; overlaps multiply).
+    pub slowdowns: Vec<SlowdownWindow>,
+    /// At most one retry policy per station.
+    pub retries: Vec<RetryPolicy>,
+    rng: Rng,
+}
+
+impl FaultPlan {
+    /// A plan seeded for its retry/jitter stream but with no faults
+    /// scheduled yet; populate it with the `with_*` builders.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            events: Vec::new(),
+            slowdowns: Vec::new(),
+            retries: Vec::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// The no-fault plan (`is_empty() == true`).
+    pub fn empty() -> Self {
+        FaultPlan::new(0)
+    }
+
+    /// True when the plan injects nothing — the faulted loop then
+    /// behaves identically to the plain one.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.slowdowns.is_empty() && self.retries.is_empty()
+    }
+
+    /// Schedule an outage window: `n` servers of `station` go down at
+    /// `start_s` and come back at `end_s` (builder style).
+    pub fn with_outage(mut self, station: usize, start_s: f64, end_s: f64, n: usize) -> Self {
+        assert!(
+            start_s.is_finite() && end_s.is_finite() && start_s >= 0.0 && end_s > start_s,
+            "outage window must be finite and ordered"
+        );
+        assert!(n >= 1, "an outage must take down at least one server");
+        self.events.push(FaultEvent {
+            t_s: start_s,
+            station,
+            park: n as i64,
+        });
+        self.events.push(FaultEvent {
+            t_s: end_s,
+            station,
+            park: -(n as i64),
+        });
+        self
+    }
+
+    /// Add a slowdown window (builder style).
+    pub fn with_slowdown(mut self, station: usize, start_s: f64, end_s: f64, factor: f64) -> Self {
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "slowdown factor must be positive"
+        );
+        assert!(
+            start_s.is_finite() && end_s.is_finite() && start_s >= 0.0 && end_s > start_s,
+            "slowdown window must be finite and ordered"
+        );
+        self.slowdowns.push(SlowdownWindow {
+            station,
+            start_s,
+            end_s,
+            factor,
+        });
+        self
+    }
+
+    /// Attach a retry policy (builder style; one per station).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> Self {
+        assert!(
+            (0.0..1.0).contains(&policy.fail_rate),
+            "fail_rate must be in [0, 1)"
+        );
+        assert!(policy.max_attempts >= 1, "at least one attempt is required");
+        assert!(
+            self.retries.iter().all(|r| r.station != policy.station),
+            "one retry policy per station"
+        );
+        self.retries.push(policy);
+        self
+    }
+
+    /// The combined service-time multiplier for `station` at time `t`
+    /// (product of all active windows; `1.0` outside every window).
+    pub fn slowdown_factor(&self, station: usize, t: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.slowdowns {
+            if w.station == station && t >= w.start_s && t < w.end_s {
+                f *= w.factor;
+            }
+        }
+        f
+    }
+
+    /// Push one job leaving `station` through its retry policy, if one
+    /// is attached: draws failures and backoff jitter from the plan's
+    /// own RNG stream. `None` means the station has no policy (the job
+    /// forwards untouched — and, crucially, no RNG is consumed).
+    pub fn draw_retries(&mut self, station: usize) -> Option<RetryDraw> {
+        let p = *self.retries.iter().find(|r| r.station == station)?;
+        let mut delay = 0.0f64;
+        let mut failed = 0u32;
+        loop {
+            if !self.rng.chance(p.fail_rate) {
+                return Some(RetryDraw {
+                    delay_s: delay,
+                    failed,
+                    delivered: true,
+                });
+            }
+            failed += 1;
+            if failed >= p.max_attempts {
+                return Some(RetryDraw {
+                    delay_s: delay,
+                    failed,
+                    delivered: false,
+                });
+            }
+            let backoff = (p.base_backoff_s * 2f64.powi(failed as i32 - 1)).min(p.max_backoff_s);
+            delay += backoff * (1.0 + p.jitter_frac * self.rng.f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_slowdown_is_unity() {
+        let p = FaultPlan::empty();
+        assert!(p.is_empty());
+        assert_eq!(p.slowdown_factor(0, 10.0), 1.0);
+    }
+
+    #[test]
+    fn outage_builder_emits_paired_park_unpark_events() {
+        let p = FaultPlan::new(1).with_outage(2, 10.0, 25.0, 3);
+        assert!(!p.is_empty());
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.events[0].park, 3);
+        assert_eq!(p.events[1].park, -3);
+        assert_eq!(p.events[1].t_s, 25.0);
+    }
+
+    #[test]
+    fn overlapping_slowdowns_multiply_and_windows_are_half_open() {
+        let p = FaultPlan::new(1)
+            .with_slowdown(0, 0.0, 10.0, 2.0)
+            .with_slowdown(0, 5.0, 15.0, 3.0)
+            .with_slowdown(1, 0.0, 100.0, 10.0);
+        assert_eq!(p.slowdown_factor(0, 2.0), 2.0);
+        assert_eq!(p.slowdown_factor(0, 7.0), 6.0);
+        assert_eq!(p.slowdown_factor(0, 10.0), 3.0, "end is exclusive");
+        assert_eq!(p.slowdown_factor(0, 20.0), 1.0);
+        assert_eq!(p.slowdown_factor(1, 7.0), 10.0);
+    }
+
+    #[test]
+    fn certain_failure_exhausts_the_retry_budget_deterministically() {
+        // fail_rate just below 1 with a forced stream: chance(p) with
+        // p ~ 1 fails every draw in practice for this seed
+        let mut p = FaultPlan::new(42).with_retry(RetryPolicy {
+            station: 1,
+            fail_rate: 0.999_999,
+            max_attempts: 3,
+            base_backoff_s: 0.1,
+            max_backoff_s: 0.15,
+            jitter_frac: 0.0,
+        });
+        let d = p.draw_retries(1).unwrap();
+        assert!(!d.delivered);
+        assert_eq!(d.failed, 3);
+        // backoffs: 0.1, then 0.2 capped at 0.15 — no jitter
+        assert!((d.delay_s - 0.25).abs() < 1e-12, "delay {}", d.delay_s);
+        assert!(p.draw_retries(0).is_none(), "no policy on station 0");
+    }
+
+    #[test]
+    fn zero_fail_rate_delivers_without_consuming_backoff() {
+        let mut p = FaultPlan::new(7).with_retry(RetryPolicy {
+            station: 0,
+            fail_rate: 0.0,
+            max_attempts: 5,
+            base_backoff_s: 1.0,
+            max_backoff_s: 10.0,
+            jitter_frac: 0.5,
+        });
+        let d = p.draw_retries(0).unwrap();
+        assert!(d.delivered);
+        assert_eq!(d.failed, 0);
+        assert_eq!(d.delay_s, 0.0);
+    }
+
+    #[test]
+    fn draws_are_reproducible_for_a_fixed_seed() {
+        let mk = || {
+            FaultPlan::new(0xBEEF).with_retry(RetryPolicy {
+                station: 0,
+                fail_rate: 0.5,
+                max_attempts: 4,
+                base_backoff_s: 0.01,
+                max_backoff_s: 0.08,
+                jitter_frac: 0.3,
+            })
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..64 {
+            let (x, y) = (a.draw_retries(0).unwrap(), b.draw_retries(0).unwrap());
+            assert_eq!(x, y);
+        }
+    }
+}

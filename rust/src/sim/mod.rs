@@ -24,7 +24,11 @@
 //!   execution shape of every PlantD pipeline;
 //! - [`PerfRecorder`] — an opt-in stage-level profiler over that loop
 //!   (enqueue / pop / service-draw / stats-accrue), compiled out of the
-//!   default path; see `docs/PERF.md`.
+//!   default path; see `docs/PERF.md`;
+//! - [`FaultPlan`] — an opt-in fault-injection schedule (outage windows,
+//!   slowdown windows, retry-with-backoff) consumed by
+//!   [`Tandem::run_faulted`] and compiled out of the default path the
+//!   same way; see `docs/SCENARIOS.md`.
 //!
 //! Consumers:
 //!
@@ -39,11 +43,13 @@
 //! See `docs/SIMULATION.md` for event ordering, seeding, and Station
 //! semantics in detail.
 
+mod faults;
 mod kernel;
 mod perf;
 mod station;
 mod tandem;
 
+pub use faults::{FaultEvent, FaultPlan, RetryDraw, RetryPolicy, SlowdownWindow};
 pub use kernel::{derive_seed, EventQueue, Kernel, SimClock};
 pub use perf::{profile_kernel, PerfRecorder, PerfReport, PerfStage, StagePerf, STAGE_NAMES};
 pub use station::{Discipline, Offered, QueuePolicy, Station, StationConfig, StationStats};

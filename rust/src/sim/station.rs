@@ -148,6 +148,15 @@ pub struct StationStats {
     /// steady-state runs reuse the same buffers for every batch instead
     /// of allocating one `Vec` per service.
     pub buffer_allocs: u64,
+    /// Failed put attempts that were retried (fault injection; see
+    /// [`crate::sim::FaultPlan`]). Zero on every un-faulted run.
+    pub retries: u64,
+    /// Jobs abandoned after exhausting their retry budget. Zero on
+    /// every un-faulted run.
+    pub retry_drops: u64,
+    /// Server·seconds spent parked by outage windows — the time integral
+    /// of the parked-server count. Zero on every un-faulted run.
+    pub outage_busy_s: f64,
 }
 
 /// Outcome of offering one arrival to a station.
@@ -174,6 +183,12 @@ pub struct Station<T> {
     /// At most `servers` batches are ever in flight, so the pool (and
     /// the total allocation count) is bounded by the server count.
     spare: Vec<Vec<T>>,
+    /// Server ids taken down by an outage window ([`Station::park`]).
+    /// Parked servers are out of the idle pool and start no batches.
+    parked: Vec<usize>,
+    /// Outstanding park requests that arrived while every server was
+    /// busy: the next `park_deficit` completions park instead of idling.
+    park_deficit: usize,
     stats: StationStats,
 }
 
@@ -192,6 +207,8 @@ impl<T> Station<T> {
             queue: VecDeque::new(),
             blocked: VecDeque::new(),
             spare: Vec::new(),
+            parked: Vec::new(),
+            park_deficit: 0,
             stats,
         }
     }
@@ -275,11 +292,75 @@ impl<T> Station<T> {
     }
 
     /// Return a server to the idle pool after its batch of `n_jobs`
-    /// completed.
+    /// completed. If an outage parked more servers than were idle
+    /// ([`Station::park`]), the freed server settles that deficit and
+    /// parks instead of idling.
     pub fn complete(&mut self, server: usize, n_jobs: usize) {
         debug_assert!(server < self.cfg.servers);
-        self.idle.push(server);
+        if self.park_deficit > 0 {
+            self.park_deficit -= 1;
+            self.parked.push(server);
+        } else {
+            self.idle.push(server);
+        }
         self.stats.served += n_jobs as u64;
+    }
+
+    /// Take `n` servers down (an outage window opening). Idle servers
+    /// park immediately; if fewer than `n` are idle the remainder is
+    /// recorded as a deficit and the next completions park instead of
+    /// returning to the pool (an outage cannot preempt in-flight work —
+    /// it keeps the server once the current batch finishes).
+    pub fn park(&mut self, n: usize) {
+        for _ in 0..n {
+            match self.idle.pop() {
+                Some(server) => self.parked.push(server),
+                None => self.park_deficit += 1,
+            }
+        }
+    }
+
+    /// Bring `n` servers back up (an outage window closing). Pending
+    /// park deficits are cancelled first; beyond that, parked servers
+    /// return to the idle pool. The caller should try to start batches
+    /// afterwards — recovered servers can pick up backlog immediately.
+    pub fn unpark(&mut self, n: usize) {
+        for _ in 0..n {
+            if self.park_deficit > 0 {
+                self.park_deficit -= 1;
+            } else if let Some(server) = self.parked.pop() {
+                self.idle.push(server);
+            }
+        }
+    }
+
+    /// Servers currently down, counting deficits an outage is still
+    /// waiting to collect from busy servers.
+    pub fn parked(&self) -> usize {
+        self.parked.len() + self.park_deficit
+    }
+
+    /// Count one retried put attempt ([`StationStats::retries`]).
+    pub fn note_retry(&mut self) {
+        self.stats.retries += 1;
+    }
+
+    /// Count one job abandoned after exhausting its retry budget
+    /// ([`StationStats::retry_drops`]).
+    pub fn note_retry_drop(&mut self) {
+        self.stats.retry_drops += 1;
+    }
+
+    /// Accrue `dt` seconds of the current parked-server count into
+    /// [`StationStats::outage_busy_s`]. Called by the faulted event loop
+    /// alongside [`Station::accrue_queue_area`]; never called (and the
+    /// counter stays exactly `0.0`) on un-faulted runs.
+    pub fn accrue_outage(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "time cannot flow backwards");
+        let down = self.parked.len() + self.park_deficit;
+        if down > 0 {
+            self.stats.outage_busy_s += down as f64 * dt;
+        }
     }
 
     /// Return a batch buffer to the spare pool for reuse by a later
@@ -310,9 +391,13 @@ impl<T> Station<T> {
         self.stats.queue_area_s += self.queue.len() as f64 * dt;
     }
 
-    /// Whether the station holds no work (all servers idle, queues empty).
+    /// Whether the station holds no work (every server idle or parked
+    /// by an outage, queues empty, no outstanding park deficit).
     pub fn is_quiescent(&self) -> bool {
-        self.queue.is_empty() && self.blocked.is_empty() && self.idle.len() == self.cfg.servers
+        self.queue.is_empty()
+            && self.blocked.is_empty()
+            && self.park_deficit == 0
+            && self.idle.len() + self.parked.len() == self.cfg.servers
     }
 
     /// The accumulated counters.
@@ -572,6 +657,51 @@ mod tests {
             s.recycle(Vec::with_capacity(1024));
         }
         assert!(s.spare.len() <= s.cfg.servers + 2);
+    }
+
+    #[test]
+    fn park_takes_servers_out_of_rotation_and_unpark_restores_them() {
+        let mut s: Station<u32> = Station::new(StationConfig::single("s").with_servers(2));
+        s.park(1);
+        assert_eq!(s.parked(), 1);
+        s.offer(1);
+        s.offer(2);
+        let a = s.start_batch().unwrap();
+        assert!(s.start_batch().is_none(), "the parked server must not serve");
+        s.accrue_outage(3.0);
+        assert_eq!(s.stats().outage_busy_s, 3.0);
+        s.unpark(1);
+        assert_eq!(s.parked(), 0);
+        let b = s.start_batch().unwrap();
+        assert_ne!(a.0, b.0, "the recovered server picks up backlog");
+        s.complete(a.0, 1);
+        s.complete(b.0, 1);
+        assert!(s.is_quiescent());
+    }
+
+    #[test]
+    fn park_deficit_collects_from_busy_servers_on_completion() {
+        // both servers busy when the outage opens: parking is deferred
+        // until completions, and unparking cancels a pending deficit
+        let mut s: Station<u32> = Station::new(StationConfig::single("s").with_servers(2));
+        s.offer(1);
+        s.offer(2);
+        let a = s.start_batch().unwrap();
+        let b = s.start_batch().unwrap();
+        s.park(2);
+        assert_eq!(s.parked(), 2);
+        assert!(!s.is_quiescent(), "deficit keeps the station non-quiescent");
+        s.complete(a.0, 1);
+        assert_eq!(s.parked(), 2, "first completion parks instead of idling");
+        s.unpark(1); // cancels the remaining deficit
+        s.complete(b.0, 1);
+        assert_eq!(s.parked(), 1);
+        s.offer(3);
+        let c = s.start_batch().unwrap();
+        s.complete(c.0, 1);
+        s.unpark(1);
+        assert!(s.is_quiescent());
+        assert_eq!(s.stats().served, 3);
     }
 
     #[test]

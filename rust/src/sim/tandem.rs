@@ -32,10 +32,19 @@
 //! [`PerfRecorder`]; the two paths execute the same statements in the
 //! same order, so a recorded run returns the identical outcome
 //! (pinned by `tests/sim_equivalence.rs`).
+//!
+//! Fault injection uses the same idiom with a second const parameter:
+//! `FAULTS = false` (the default paths) folds every hook — outage
+//! events, slowdown lookups, retry draws, outage-time accrual — to
+//! nothing at compile time, while [`Tandem::run_faulted`] instantiates
+//! `FAULTS = true` and consumes a [`FaultPlan`]. An *empty* plan
+//! through the faulted path is behaviorally identical to `run` (pinned
+//! by `tests/sim_equivalence.rs` too).
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use super::faults::FaultPlan;
 use super::kernel::{Kernel, SimClock};
 use super::perf::{PerfRecorder, PerfStage};
 use super::station::{Station, StationConfig, StationStats};
@@ -85,6 +94,9 @@ enum Ev<T> {
         jobs: Vec<T>,
         next: Vec<T>,
     },
+    /// A scheduled capacity change (outage window edge); only ever
+    /// scheduled when `FAULTS` is instantiated true.
+    Fault { station: usize, park: i64 },
 }
 
 /// A pipeline of stations executed by one deterministic event loop
@@ -116,7 +128,8 @@ fn timed<const PERF: bool, R>(
 /// completions. Separate function (not a method) so the borrow of one
 /// station stays disjoint from the kernel. `clock` is the kernel's clock,
 /// hoisted by the caller so the loop does not clone an `Arc` per batch.
-fn start_ready<const PERF: bool, T, F>(
+#[allow(clippy::too_many_arguments)] // internal: mirrors the loop's state, monomorphized away
+fn start_ready<const PERF: bool, const FAULTS: bool, T, F>(
     station_idx: usize,
     station: &mut Station<T>,
     kernel: &mut Kernel<Ev<T>>,
@@ -124,6 +137,7 @@ fn start_ready<const PERF: bool, T, F>(
     now: f64,
     servicer: &mut F,
     rec: &mut Option<&mut PerfRecorder>,
+    plan: &FaultPlan,
 ) where
     F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
 {
@@ -136,15 +150,21 @@ fn start_ready<const PERF: bool, T, F>(
         let served = timed::<PERF, _>(rec, PerfStage::ServiceDraw, || {
             servicer(station_idx, now, &mut jobs)
         });
-        assert!(
-            served.service_s >= 0.0 && served.service_s.is_finite(),
-            "service time must be finite and non-negative, got {}",
+        // a slowdown window stretches the drawn service time; the draw
+        // itself is untouched so the cell's RNG stream stays identical
+        let service_s = if FAULTS {
+            served.service_s * plan.slowdown_factor(station_idx, now)
+        } else {
             served.service_s
+        };
+        assert!(
+            service_s >= 0.0 && service_s.is_finite(),
+            "service time must be finite and non-negative, got {service_s}"
         );
-        station.note_busy(served.service_s);
+        station.note_busy(service_s);
         timed::<PERF, _>(rec, PerfStage::Enqueue, || {
             kernel.schedule_at(
-                now + served.service_s,
+                now + service_s,
                 Ev::Complete {
                     station: station_idx,
                     server,
@@ -184,7 +204,7 @@ impl<T> Tandem<T> {
         I: IntoIterator<Item = (f64, T)>,
         F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
     {
-        self.run_impl::<false, _, _>(arrivals, servicer, &mut None)
+        self.run_impl::<false, false, _, _>(arrivals, servicer, &mut None, &mut FaultPlan::empty())
     }
 
     /// [`Tandem::run`] with stage-level instrumentation: every probe
@@ -202,22 +222,56 @@ impl<T> Tandem<T> {
         F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
     {
         let t0 = Instant::now();
-        let out = self.run_impl::<true, _, _>(arrivals, servicer, &mut Some(&mut *rec));
+        let out = self.run_impl::<true, false, _, _>(
+            arrivals,
+            servicer,
+            &mut Some(&mut *rec),
+            &mut FaultPlan::empty(),
+        );
         rec.note_run(out.events, t0.elapsed().as_secs_f64());
         out
     }
 
-    fn run_impl<const PERF: bool, I, F>(
+    /// [`Tandem::run`] with fault injection: outage windows park and
+    /// restore servers on schedule, slowdown windows stretch drawn
+    /// service times, and retry policies gate each station hand-off
+    /// through seeded failure/backoff draws. The plan's RNG stream is
+    /// its own — the servicer's inputs are untouched — so a faulted run
+    /// is a pure function of `(arrivals, servicer, plan)`. Passing
+    /// [`FaultPlan::empty`] yields exactly the `run` trajectory.
+    pub fn run_faulted<I, F>(self, arrivals: I, servicer: F, plan: &mut FaultPlan) -> TandemOutcome<T>
+    where
+        I: IntoIterator<Item = (f64, T)>,
+        F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
+    {
+        self.run_impl::<false, true, _, _>(arrivals, servicer, &mut None, plan)
+    }
+
+    fn run_impl<const PERF: bool, const FAULTS: bool, I, F>(
         mut self,
         arrivals: I,
         mut servicer: F,
         rec: &mut Option<&mut PerfRecorder>,
+        plan: &mut FaultPlan,
     ) -> TandemOutcome<T>
     where
         I: IntoIterator<Item = (f64, T)>,
         F: FnMut(usize, f64, &mut Vec<T>) -> Served<T>,
     {
         let arrivals = arrivals.into_iter();
+        if FAULTS {
+            // capacity changes are scheduled ahead of every arrival so a
+            // fault at an arrival's exact timestamp applies first
+            for ev in &plan.events {
+                self.kernel.schedule_at(
+                    ev.t_s,
+                    Ev::Fault {
+                        station: ev.station,
+                        park: ev.park,
+                    },
+                );
+            }
+        }
         // Pre-size for the common shape (known arrival count, ~1 output
         // per input): the event arena holds every pre-scheduled arrival
         // at once, and completions usually ends at the arrival count.
@@ -251,12 +305,17 @@ impl<T> Tandem<T> {
                         s.accrue_queue_area(dt);
                     }
                 });
+                if FAULTS {
+                    for s in &mut self.stations {
+                        s.accrue_outage(dt);
+                    }
+                }
             }
             prev_t = t;
             match ev {
                 Ev::Arrive { station, job } => {
                     self.stations[station].offer(job);
-                    start_ready::<PERF, _, _>(
+                    start_ready::<PERF, FAULTS, _, _>(
                         station,
                         &mut self.stations[station],
                         &mut self.kernel,
@@ -264,6 +323,7 @@ impl<T> Tandem<T> {
                         t,
                         &mut servicer,
                         rec,
+                        plan,
                     );
                 }
                 Ev::Complete {
@@ -276,15 +336,39 @@ impl<T> Tandem<T> {
                     if station + 1 < n_stations {
                         self.kernel.reserve(next.len());
                         for job in next.drain(..) {
-                            timed::<PERF, _>(rec, PerfStage::Enqueue, || {
-                                self.kernel.schedule_at(
-                                    t,
-                                    Ev::Arrive {
-                                        station: station + 1,
-                                        job,
-                                    },
-                                )
-                            });
+                            // the retry gauntlet gates the hand-off: a
+                            // station with no policy attached draws
+                            // nothing and forwards untouched
+                            let draw = if FAULTS { plan.draw_retries(station) } else { None };
+                            match draw {
+                                Some(d) => {
+                                    for _ in 0..d.failed {
+                                        self.stations[station].note_retry();
+                                    }
+                                    if d.delivered {
+                                        self.kernel.schedule_at(
+                                            t + d.delay_s,
+                                            Ev::Arrive {
+                                                station: station + 1,
+                                                job,
+                                            },
+                                        );
+                                    } else {
+                                        self.stations[station].note_retry_drop();
+                                    }
+                                }
+                                None => {
+                                    timed::<PERF, _>(rec, PerfStage::Enqueue, || {
+                                        self.kernel.schedule_at(
+                                            t,
+                                            Ev::Arrive {
+                                                station: station + 1,
+                                                job,
+                                            },
+                                        )
+                                    });
+                                }
+                            }
                         }
                     } else {
                         completions.extend(jobs.drain(..).map(|j| (t, j)));
@@ -294,7 +378,7 @@ impl<T> Tandem<T> {
                     // starts at this very timestamp reuses them
                     self.stations[station].recycle(jobs);
                     self.stations[station].recycle(next);
-                    start_ready::<PERF, _, _>(
+                    start_ready::<PERF, FAULTS, _, _>(
                         station,
                         &mut self.stations[station],
                         &mut self.kernel,
@@ -302,7 +386,28 @@ impl<T> Tandem<T> {
                         t,
                         &mut servicer,
                         rec,
+                        plan,
                     );
+                }
+                Ev::Fault { station, park } => {
+                    debug_assert!(FAULTS, "fault events only exist on faulted runs");
+                    debug_assert!(station < n_stations, "fault targets a real station");
+                    if park > 0 {
+                        self.stations[station].park(park as usize);
+                    } else {
+                        self.stations[station].unpark((-park) as usize);
+                        // recovered servers pick up backlog immediately
+                        start_ready::<PERF, FAULTS, _, _>(
+                            station,
+                            &mut self.stations[station],
+                            &mut self.kernel,
+                            &clock,
+                            t,
+                            &mut servicer,
+                            rec,
+                            plan,
+                        );
+                    }
                 }
             }
         }
@@ -481,5 +586,79 @@ mod tests {
         let report = rec.report();
         assert!(report.sane(), "{report:?}");
         assert_eq!(report.events, recorded.events);
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_plain_run_exactly() {
+        let arrivals: Vec<(f64, u32)> = (0..30).map(|i| (0.17 * i as f64, i)).collect();
+        let make = || {
+            Tandem::new(vec![
+                StationConfig::single("a").with_batch(2),
+                StationConfig::single("b"),
+            ])
+        };
+        let svc = |station: usize, _: f64, jobs: &mut Vec<u32>| Served {
+            service_s: if station == 0 { 0.3 } else { 0.2 },
+            next: jobs.clone(),
+        };
+        let plain = make().run(arrivals.clone(), svc);
+        let faulted = make().run_faulted(arrivals, svc, &mut FaultPlan::empty());
+        assert_eq!(plain.completions, faulted.completions);
+        assert_eq!(plain.events, faulted.events);
+        for (a, b) in plain.stations.iter().zip(&faulted.stations) {
+            assert_eq!(a.served, b.served);
+            assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
+            assert_eq!(a.queue_area_s.to_bits(), b.queue_area_s.to_bits());
+            assert_eq!((a.retries, a.retry_drops), (0, 0));
+            assert_eq!(b.outage_busy_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn outage_window_parks_the_server_and_accrues_outage_time() {
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let mut plan = FaultPlan::new(1).with_outage(0, 1.0, 3.0, 1);
+        let out = t.run_faulted(vec![(0.0, 1u32), (1.5, 2)], fixed(0.5), &mut plan);
+        // job 1 served before the outage; job 2 waits until the server
+        // comes back at 3.0 and completes at 3.5
+        let times: Vec<f64> = out.completions.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![0.5, 3.5]);
+        assert_eq!(out.stations[0].outage_busy_s, 2.0);
+        assert_eq!(out.stations[0].served, 2);
+    }
+
+    #[test]
+    fn slowdown_window_stretches_service_times() {
+        let t = Tandem::new(vec![StationConfig::single("s")]);
+        let mut plan = FaultPlan::new(1).with_slowdown(0, 0.0, 100.0, 2.0);
+        let out = t.run_faulted(vec![(0.0, 1u32)], fixed(1.0), &mut plan);
+        assert_eq!(out.completions[0].0, 2.0);
+        assert_eq!(out.stations[0].busy_s, 2.0);
+    }
+
+    #[test]
+    fn retry_gauntlet_conserves_jobs_between_stations() {
+        use crate::sim::faults::RetryPolicy;
+        let t = Tandem::new(vec![StationConfig::single("a"), StationConfig::single("b")]);
+        let mut plan = FaultPlan::new(99).with_retry(RetryPolicy {
+            station: 0,
+            fail_rate: 0.999_999,
+            max_attempts: 2,
+            base_backoff_s: 0.01,
+            max_backoff_s: 0.05,
+            jitter_frac: 0.0,
+        });
+        let arrivals: Vec<(f64, u32)> = (0..5).map(|i| (i as f64, i)).collect();
+        let out = t.run_faulted(arrivals, fixed(0.1), &mut plan);
+        let a = &out.stations[0];
+        let b = &out.stations[1];
+        // every hand-off either reached b or was counted as a retry drop
+        assert_eq!(b.offered, a.served - a.retry_drops);
+        assert_eq!(out.completions.len() as u64, b.served);
+        // with near-certain failure virtually everything drops after two
+        // failed attempts apiece
+        assert!(a.retry_drops >= 4, "retry_drops = {}", a.retry_drops);
+        // each dropped job burned its full two-attempt budget
+        assert!(a.retries >= 2 * a.retry_drops, "retries = {}", a.retries);
     }
 }

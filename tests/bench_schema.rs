@@ -10,9 +10,11 @@
 //! (both measured on the same reference host; later `local` / CI
 //! entries are machine-relative and deliberately not compared), and the
 //! PR 7 claim: clustered fleet campaigns clear >= 10x the cells/sec of
-//! the exhaustive run recorded alongside them, and the PR 8 claim:
-//! dealing the same grid to two loopback workers keeps >= 0.8x the
-//! local cells/sec (the fleet protocol tax stays under 20%).
+//! the exhaustive run recorded alongside them, the PR 8 claim: dealing
+//! the same grid to two loopback workers keeps >= 0.8x the local
+//! cells/sec (the fleet protocol tax stays under 20%), and the PR 9
+//! claim: the adaptive SLO-frontier bisection simulates at most half
+//! the cells an exhaustive sweep of the same load range would.
 
 use std::path::{Path, PathBuf};
 
@@ -181,6 +183,35 @@ fn distributed_fleet_entry_stays_within_20pct_of_the_local_run() {
     assert!(
         ratio >= 0.8,
         "distributed cells/sec ratio {ratio:.2} < 0.8 ({rate:.1} vs {baseline:.1} local)"
+    );
+}
+
+#[test]
+fn explore_entry_simulates_at_most_half_the_exhaustive_cells() {
+    // the PR 9 acceptance bar: `plantd explore` must find the SLO knee
+    // by simulating <= 50% of the cells an exhaustive sweep of the same
+    // {variant x scenario x load-step} grid would run
+    let doc = load("BENCH_sim.json");
+    let e = entry_by_label(&doc, "pr9-explore");
+    let m = e.get("metrics").unwrap();
+    let simulated = m.get_f64("cells_simulated").unwrap();
+    let exhaustive = m.get_f64("cells_exhaustive").unwrap();
+    let combos = m.get_f64("combos").unwrap();
+    assert!(combos >= 2.0, "the frontier must cover several combinations");
+    assert!(
+        simulated >= combos,
+        "every combination costs at least one probe"
+    );
+    assert_eq!(
+        m.get_f64("cells"),
+        Some(simulated),
+        "the generic cells metric counts what was actually simulated"
+    );
+    let ratio = simulated / exhaustive;
+    assert!(
+        ratio <= 0.5,
+        "bisection simulated {simulated:.0} of {exhaustive:.0} exhaustive \
+         cells ({ratio:.2} > 0.50)"
     );
 }
 

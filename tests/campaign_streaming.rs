@@ -1,0 +1,121 @@
+//! Streaming-grid pins (PR 9): no executor may materialize the whole
+//! campaign grid.
+//!
+//! `CellSpec` lifetimes are counted process-wide by
+//! `campaign::alloc_stats` (an RAII token inside every spec), so the
+//! high-water mark directly measures how many specs an execution path
+//! held alive at once. The lazy `CellGrid` contract is that the peak
+//! tracks the *worker count*, not the grid size — on the local thread
+//! pool, on the clustered path, and on the fleet driver/worker pair
+//! (which shares this process via the loopback worker).
+//!
+//! Everything runs inside one `#[test]` because the counters are
+//! process-global: parallel tests in this binary would smear each
+//! other's peaks.
+
+use plantd::campaign::{alloc_stats, Campaign, CampaignRunner};
+use plantd::datagen::DataSetSpec;
+use plantd::dist::driver::FleetClient;
+use plantd::dist::worker::spawn_local;
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+
+/// 2 preset variants × 25 near-duplicate loads × 2 datasets = 100 cells,
+/// each tiny (≤ 4 sends) so the whole grid simulates in well under a
+/// second. Loads are near-duplicates so the clustered path actually
+/// merges them.
+fn hundred_cell_campaign(seed: u64) -> Campaign {
+    let mut c = Campaign::new("streaming-pin", seed)
+        .variant(VariantConfig::blocking_write())
+        .variant(VariantConfig::cpu_limited());
+    for i in 0..25 {
+        c = c.load(
+            &format!("l{i:02}"),
+            LoadPattern::steady(2.0, 1.5 + i as f64 * 0.01),
+        );
+    }
+    c.dataset(
+        "tiny-a",
+        DataSetSpec {
+            payloads: 2,
+            records_per_subsystem: 2,
+            bad_rate: 0.01,
+            seed: 0,
+        },
+    )
+    .dataset(
+        "tiny-b",
+        DataSetSpec {
+            payloads: 3,
+            records_per_subsystem: 2,
+            bad_rate: 0.01,
+            seed: 0,
+        },
+    )
+}
+
+/// Run `f`, returning `(peak specs alive, f's result)` measured from a
+/// fresh high-water mark.
+fn measured<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let floor = alloc_stats::live();
+    alloc_stats::reset_peak();
+    let r = f();
+    let peak = alloc_stats::peak() - floor;
+    (peak, r)
+}
+
+#[test]
+fn no_execution_path_materializes_the_grid() {
+    let campaign = hundred_cell_campaign(0x57A);
+    let n = campaign.n_cells();
+    assert_eq!(n, 100);
+    let threads = 4;
+    // generous slack over the thread count: transient clones inside a
+    // cell run (plus the loop's own scratch spec) — the pin is that the
+    // peak scales with workers, nowhere near the 100-cell grid
+    let budget = threads + 8;
+
+    // exhaustive local thread pool
+    let (peak, exhaustive) =
+        measured(|| CampaignRunner::new(threads).run(&campaign));
+    assert_eq!(exhaustive.cells.len(), n);
+    assert!(
+        peak <= budget,
+        "exhaustive path held {peak} specs alive (budget {budget} for {n} cells)"
+    );
+
+    // clustered path: featurization, representative runs, and
+    // redistribution must all stream off the grid view
+    let (peak, clustered) = measured(|| {
+        CampaignRunner::new(threads)
+            .with_cluster_tolerance(0.05)
+            .run(&campaign)
+    });
+    assert_eq!(clustered.cells.len(), n);
+    assert!(
+        clustered.clustering.is_some(),
+        "near-duplicate loads must actually cluster"
+    );
+    assert!(
+        peak <= budget,
+        "clustered path held {peak} specs alive (budget {budget} for {n} cells)"
+    );
+
+    // fleet driver + loopback worker (same process, so the counter sees
+    // both sides): the driver ships indices, the worker derives specs
+    // shard-by-shard
+    let mut worker = spawn_local(threads, None).expect("loopback worker");
+    let client = FleetClient::new(vec![worker.endpoint()]).with_shard_cells(8);
+    let (peak, dist) = measured(|| client.run_campaign(&campaign, None));
+    let dist = dist.expect("distributed run");
+    worker.stop();
+    assert_eq!(
+        dist.to_json().to_string_pretty(),
+        exhaustive.to_json().to_string_pretty(),
+        "distributed report must stay byte-identical"
+    );
+    assert!(
+        peak <= budget,
+        "fleet path held {peak} specs alive (budget {budget} for {n} cells)"
+    );
+}

@@ -54,7 +54,7 @@ fn temp_dir(tag: &str) -> PathBuf {
 fn example_manifest_covers_all_kinds_and_reconciles_ready() {
     let c = Controller::new(Registry::new());
     let applied = c.apply_manifest(&example_manifest()).unwrap();
-    assert_eq!(applied.len(), 13);
+    assert_eq!(applied.len(), 14);
     c.reconcile();
     for r in c.registry().list_all() {
         assert_eq!(

@@ -1,0 +1,270 @@
+//! Oracle-backed accuracy tests for the scenario engine (fault
+//! injection, PR 9).
+//!
+//! The contract under test has three parts:
+//!
+//! 1. **Conservation** — an M/M/1 station with a mid-run outage window
+//!    must conserve arrivals exactly: every offered job is either served
+//!    or dropped by the time the tandem drains (in-system is zero at
+//!    quiescence by construction), with or without load shedding.
+//! 2. **Piecewise analytics** — the faulted trajectory must match the
+//!    piecewise-analytic expectation within tolerance: pre-outage
+//!    throughput ≈ λ (the queue is stable at ρ = λ/μ < 1), no service
+//!    completes inside the outage window beyond the one batch in flight
+//!    when it opened, `outage_busy_s` accounts the window exactly, total
+//!    busy time ≈ served/μ, and the post-outage backlog peak ≈ λ·window.
+//! 3. **Determinism and the empty-scenario identity** — a faulted run is
+//!    a pure function of `(arrivals, services, plan)`; an *empty*
+//!    `Scenario` attached to the paper campaign is byte-identical to no
+//!    scenario at any thread count, and a non-empty one replays
+//!    byte-identically across thread counts.
+//!
+//! `tests/sim_equivalence.rs` pins the same identity at the kernel
+//! level (empty `FaultPlan` vs `Tandem::run`, bit for bit); these tests
+//! work the scenario layer end-to-end.
+
+use plantd::campaign::{Campaign, CampaignRunner};
+use plantd::scenario::{ClampPolicy, LoadOverlay, RetrySpec, Scenario};
+use plantd::sim::{FaultPlan, QueuePolicy, Served, StationConfig, Tandem};
+use plantd::util::rng::Rng;
+
+/// Arrival rate, jobs/s (λ).
+const LAMBDA: f64 = 2.0;
+/// Service rate, jobs/s (μ); ρ = 0.5 keeps the queue stable.
+const MU: f64 = 4.0;
+/// Arrival horizon, virtual seconds.
+const HORIZON_S: f64 = 400.0;
+/// Outage window: the single server goes down for 60 s mid-run.
+const OUTAGE_START_S: f64 = 120.0;
+const OUTAGE_END_S: f64 = 180.0;
+
+/// Poisson arrivals over the horizon, pre-sampled so the faulted and
+/// plain runs consume identical inputs.
+fn mm1_arrivals(seed: u64) -> Vec<(f64, u64)> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut arrivals = Vec::new();
+    let mut i = 0u64;
+    loop {
+        t += rng.exponential(LAMBDA);
+        if t >= HORIZON_S {
+            break;
+        }
+        arrivals.push((t, i));
+        i += 1;
+    }
+    assert!(arrivals.len() > 500, "horizon too short for LLN tolerances");
+    arrivals
+}
+
+/// Pre-sampled exponential service times, indexed by job id — the same
+/// pre-sampling idiom the campaign cell model uses, so the service draw
+/// stream is independent of the order faults impose.
+fn mm1_services(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    (0..n).map(|_| rng.exponential(MU)).collect()
+}
+
+fn servicer(services: &[f64]) -> impl FnMut(usize, f64, &mut Vec<u64>) -> Served<u64> + '_ {
+    move |_, _, jobs| Served {
+        service_s: services[jobs[0] as usize],
+        next: jobs.clone(),
+    }
+}
+
+#[test]
+fn outage_conserves_arrivals_and_matches_piecewise_analytics() {
+    let arrivals = mm1_arrivals(0xA11);
+    let services = mm1_services(0xA11, arrivals.len());
+    let n = arrivals.len() as u64;
+
+    let tandem = Tandem::new(vec![StationConfig::single("svc")]);
+    let mut plan =
+        FaultPlan::new(0xFA).with_outage(0, OUTAGE_START_S, OUTAGE_END_S, 1);
+    let out = tandem.run_faulted(arrivals.clone(), servicer(&services), &mut plan);
+    let stats = &out.stations[0];
+
+    // conservation: the tandem drains to quiescence, so in-system is 0
+    // and every arrival was served (the queue is unbounded — no drops)
+    assert_eq!(stats.offered, n);
+    assert_eq!(stats.offered, stats.served + stats.dropped, "conservation");
+    assert_eq!(stats.dropped, 0, "unbounded queue must not shed");
+    assert_eq!(out.completions.len() as u64, stats.served);
+
+    // outage accounting is exact: the counter accrues one server for
+    // precisely the window (deficit parking starts the clock at the
+    // window edge even if a batch is still in flight)
+    let window = OUTAGE_END_S - OUTAGE_START_S;
+    assert!(
+        (stats.outage_busy_s - window).abs() < 1e-6,
+        "outage_busy_s = {}, want {window}",
+        stats.outage_busy_s
+    );
+
+    // piecewise analytics, pre-outage phase: the M/M/1 is stable at
+    // ρ = 0.5, so throughput ≈ λ — completions before the window within
+    // 15% of λ·t (LLN over ~240 jobs)
+    let before = out
+        .completions
+        .iter()
+        .filter(|(t, _)| *t < OUTAGE_START_S)
+        .count() as f64;
+    let expect_before = LAMBDA * OUTAGE_START_S;
+    assert!(
+        (before - expect_before).abs() / expect_before < 0.15,
+        "pre-outage completions {before}, analytic {expect_before}"
+    );
+
+    // outage phase: nothing completes while the server is parked except
+    // the single batch in flight when the window opened
+    let during = out
+        .completions
+        .iter()
+        .filter(|(t, _)| *t > OUTAGE_START_S && *t < OUTAGE_END_S)
+        .count();
+    assert!(during <= 1, "{during} completions inside the outage window");
+
+    // total busy time is the served work: Σ service ≈ served·E[S]
+    let expect_busy = stats.served as f64 / MU;
+    assert!(
+        (stats.busy_s - expect_busy).abs() / expect_busy < 0.10,
+        "busy_s = {}, analytic {expect_busy}",
+        stats.busy_s
+    );
+
+    // backlog peak ≈ λ·window jobs queued while the server was down
+    // (Poisson(120): ±3σ ≈ ±33)
+    let expect_backlog = LAMBDA * window;
+    assert!(
+        stats.max_queue as f64 > expect_backlog - 35.0,
+        "max_queue = {} never reached the analytic backlog ≈ {expect_backlog}",
+        stats.max_queue
+    );
+
+    // the faulted run visibly differs from the un-faulted one: same
+    // arrivals drain strictly later
+    let plain = Tandem::new(vec![StationConfig::single("svc")])
+        .run(arrivals, servicer(&services));
+    assert!(out.drained_s() > plain.drained_s());
+    assert_eq!(plain.stations[0].outage_busy_s, 0.0);
+}
+
+#[test]
+fn outage_with_load_shedding_conserves_via_drops() {
+    let arrivals = mm1_arrivals(0xB22);
+    let services = mm1_services(0xB22, arrivals.len());
+    let n = arrivals.len() as u64;
+
+    // a bounded queue: the 60 s outage accumulates ~120 arrivals against
+    // capacity 25, so shedding is certain — conservation must now route
+    // through the dropped counter
+    let tandem = Tandem::new(vec![StationConfig::single("svc")
+        .with_policy(QueuePolicy::DropNewest { capacity: 25 })]);
+    let mut plan =
+        FaultPlan::new(0xFB).with_outage(0, OUTAGE_START_S, OUTAGE_END_S, 1);
+    let out = tandem.run_faulted(arrivals, servicer(&services), &mut plan);
+    let stats = &out.stations[0];
+
+    assert_eq!(stats.offered, n);
+    assert_eq!(stats.offered, stats.served + stats.dropped, "conservation");
+    assert!(stats.dropped > 0, "the clamped outage must shed load");
+    assert_eq!(out.completions.len() as u64, stats.served);
+    assert!((stats.outage_busy_s - (OUTAGE_END_S - OUTAGE_START_S)).abs() < 1e-6);
+}
+
+#[test]
+fn faulted_runs_replay_bit_identically() {
+    let arrivals = mm1_arrivals(0xC33);
+    let services = mm1_services(0xC33, arrivals.len());
+    let run = || {
+        let mut plan = FaultPlan::new(0xD4)
+            .with_outage(0, OUTAGE_START_S, OUTAGE_END_S, 1)
+            .with_slowdown(0, 250.0, 300.0, 3.0);
+        Tandem::new(vec![StationConfig::single("svc")]).run_faulted(
+            arrivals.clone(),
+            servicer(&services),
+            &mut plan,
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.completions.len(), b.completions.len());
+    for ((ta, ja), (tb, jb)) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(ta.to_bits(), tb.to_bits());
+        assert_eq!(ja, jb);
+    }
+    assert_eq!(a.stations[0].busy_s.to_bits(), b.stations[0].busy_s.to_bits());
+    assert_eq!(
+        a.stations[0].outage_busy_s.to_bits(),
+        b.stations[0].outage_busy_s.to_bits()
+    );
+}
+
+// ---- campaign level: the Scenario resource end-to-end ----------------------
+
+/// The paper scenario exercised across the campaign layer: every
+/// primitive class at once.
+fn stress_scenario() -> Scenario {
+    Scenario::empty("stress")
+        .with_outage("v2x", 5.0, 15.0, 1)
+        .with_slowdown("etl", 0.0, 10.0, 2.0)
+        .with_retry(RetrySpec {
+            station: "unzipper".to_string(),
+            fail_rate: 0.2,
+            max_attempts: 3,
+            base_backoff_s: 0.05,
+            max_backoff_s: 0.4,
+            jitter_frac: 0.25,
+        })
+        .with_clamp("v2x", 64, ClampPolicy::Drop)
+        .with_overlay(LoadOverlay::ColdStartBurst {
+            until_s: 5.0,
+            factor: 2.0,
+        })
+}
+
+#[test]
+fn empty_scenario_on_the_paper_campaign_is_byte_identical_at_any_thread_count() {
+    let plain = CampaignRunner::new(1).run(&Campaign::paper_automotive(0x99));
+    let baseline = plain.to_json().to_string_pretty();
+    for threads in [1, 3] {
+        let with_empty = CampaignRunner::new(threads)
+            .run(&Campaign::paper_automotive(0x99).with_scenario(Scenario::empty("noop")));
+        assert_eq!(
+            baseline,
+            with_empty.to_json().to_string_pretty(),
+            "empty scenario diverged at {threads} thread(s)"
+        );
+        assert_eq!(plain.render(), with_empty.render());
+    }
+}
+
+#[test]
+fn faulted_paper_campaign_is_deterministic_and_differs_from_baseline() {
+    let scen = stress_scenario();
+    scen.validate().expect("stress scenario is well-formed");
+    let faulted = Campaign::paper_automotive(0x99).with_scenario(scen);
+    let a = CampaignRunner::new(1).run(&faulted);
+    let b = CampaignRunner::new(4).run(&faulted);
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "faulted campaign must replay byte-identically across thread counts"
+    );
+    let plain = CampaignRunner::new(1).run(&Campaign::paper_automotive(0x99));
+    assert_ne!(
+        a.to_json().to_string_pretty(),
+        plain.to_json().to_string_pretty(),
+        "a non-empty scenario must change the numbers"
+    );
+}
+
+#[test]
+fn scenario_json_round_trips_to_a_fixed_point() {
+    let scen = stress_scenario();
+    let j = scen.to_json();
+    let back = Scenario::from_json(&j).expect("serialized scenario parses");
+    assert_eq!(back, scen);
+    assert_eq!(back.to_json().to_string_pretty(), j.to_string_pretty());
+}

@@ -25,8 +25,8 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use plantd::sim::{
-    Discipline, EventQueue, Offered, PerfRecorder, QueuePolicy, Served, Station, StationConfig,
-    Tandem,
+    Discipline, EventQueue, FaultPlan, Offered, PerfRecorder, QueuePolicy, Served, Station,
+    StationConfig, Tandem,
 };
 use plantd::util::proptest::check;
 use plantd::util::rng::Rng;
@@ -360,6 +360,66 @@ fn recorded_tandem_run_is_bit_identical_to_plain_run() {
         }
         let report = rec.report();
         assert_eq!(report.events, recorded.events, "recorder missed events");
+    });
+}
+
+// ---- Tandem::run vs Tandem::run_faulted with an empty plan -----------------
+
+#[test]
+fn faulted_tandem_run_with_empty_plan_is_bit_identical_to_plain_run() {
+    // the FAULTS=true monomorphization with a plan that injects nothing
+    // must not move a single bit: same completions, same stats, same
+    // event count, and the new fault counters stay zero
+    check("tandem-faulted-empty-vs-plain", 60, |rng| {
+        let n_stations = rng.int_range(1, 3) as usize;
+        let configs = || -> Vec<StationConfig> {
+            (0..n_stations)
+                .map(|i| {
+                    let mut c = StationConfig::single(&format!("s{i}"));
+                    if i == 0 {
+                        c = c.with_batch(3);
+                    }
+                    if i == 1 {
+                        c = c.with_policy(QueuePolicy::Block { capacity: 4 });
+                    }
+                    c
+                })
+                .collect()
+        };
+        let n = rng.int_range(1, 60) as usize;
+        let arrivals: Vec<(f64, u64)> = (0..n as u64)
+            .map(|i| ((i % 7) as f64 * 0.5, i))
+            .collect();
+        let servicer = |station: usize, _start: f64, jobs: &mut Vec<u64>| Served {
+            service_s: service_for(station, jobs[0]),
+            next: jobs.iter().map(|j| j.wrapping_mul(3)).collect(),
+        };
+
+        let plain = Tandem::new(configs()).run(arrivals.clone(), servicer);
+        let mut plan = FaultPlan::empty();
+        assert!(plan.is_empty());
+        let faulted = Tandem::new(configs()).run_faulted(arrivals, servicer, &mut plan);
+
+        assert_eq!(plain.events, faulted.events);
+        assert_eq!(plain.completions.len(), faulted.completions.len());
+        for ((ta, ja), (tb, jb)) in plain.completions.iter().zip(&faulted.completions) {
+            assert_eq!(ta.to_bits(), tb.to_bits(), "completion time moved");
+            assert_eq!(ja, jb, "completion order moved");
+        }
+        for (a, b) in plain.stations.iter().zip(&faulted.stations) {
+            assert_eq!(a.offered, b.offered);
+            assert_eq!(a.served, b.served);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.backpressured, b.backpressured);
+            assert_eq!(a.batches, b.batches);
+            assert_eq!(a.busy_s.to_bits(), b.busy_s.to_bits());
+            assert_eq!(a.queue_area_s.to_bits(), b.queue_area_s.to_bits());
+            assert_eq!(a.max_queue, b.max_queue);
+            assert_eq!(a.buffer_allocs, b.buffer_allocs);
+            assert_eq!(b.retries, 0, "empty plan must not retry");
+            assert_eq!(b.retry_drops, 0);
+            assert_eq!(b.outage_busy_s.to_bits(), 0f64.to_bits());
+        }
     });
 }
 
