@@ -90,6 +90,7 @@ fn main() -> anyhow::Result<()> {
         stage: "v2x_phase",
         start_s: 1.0,
         duration_s: 0.1,
+        ingest_s: 0.9,
         records: 1,
         bytes: 900,
         ok: true,

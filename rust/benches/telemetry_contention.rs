@@ -1,0 +1,170 @@
+//! BENCH — telemetry-plane contention: mutex-shared span sink vs SPSC rings.
+//!
+//! PlantD's harness must observe the pipeline without perturbing it
+//! (§V.B). The pre-PR10 route shared one `Mutex<Vec<Span>>` across every
+//! stage thread, so span emission serialized the very workers being
+//! measured; the ring route gives each producer a private SPSC ring
+//! drained by one aggregator. This bench measures spans/sec through both
+//! routes at 1 and 8 producer threads:
+//!
+//!  - `spans_per_s_locked_1p` / `spans_per_s_locked_8p` — shared sink
+//!  - `spans_per_s_ring_1p`   / `spans_per_s_ring_8p`   — per-producer rings
+//!
+//! The locked route *collapses* under contention (8 threads are slower
+//! than 1); the ring route scales. The committed `pr10-telemetry` entry
+//! in `BENCH_hotpaths.json` pins the ≥ 3× ratio at 8 producers
+//! (tests/bench_schema.rs). `PLANTD_BENCH_QUICK=1` shrinks the span
+//! counts; `PLANTD_BENCH_DIR` / `PLANTD_BENCH_LABEL` / `PLANTD_BENCH_HOST`
+//! redirect and tag the appended entry as usual. See docs/PERF.md.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::SystemTime;
+
+use plantd::telemetry::{ring, RingConsumer, RingProducer, Span, SpanSink};
+use plantd::util::bench::{self, throughput};
+
+/// Per-producer ring capacity. Deliberately smaller than one round's span
+/// count so the bench exercises the wrap path; producers spin-retry on
+/// full, mirroring a sustained-rate workload.
+const RING_CAPACITY: usize = 1 << 12;
+
+fn probe_span(i: u64) -> Span {
+    Span {
+        trace_id: i,
+        stage: "v2x_phase",
+        start_s: i as f64 * 1e-6,
+        duration_s: 1e-4,
+        ingest_s: i as f64 * 1e-6,
+        records: 1,
+        bytes: 900,
+        ok: true,
+    }
+}
+
+/// All producers hammer one mutex-guarded [`SpanSink`] — the pre-PR10
+/// telemetry route. Returns the number of spans that landed.
+fn locked_round(producers: usize, spans_each: u64) -> u64 {
+    let sink = SpanSink::new();
+    std::thread::scope(|s| {
+        for _ in 0..producers {
+            let sink = sink.clone();
+            s.spawn(move || {
+                for i in 0..spans_each {
+                    sink.push(probe_span(i));
+                }
+            });
+        }
+    });
+    sink.drain().len() as u64
+}
+
+/// Each producer owns a private SPSC ring; one consumer thread drains
+/// them all — the PR10 telemetry route. Returns spans consumed.
+fn ring_round(producers: usize, spans_each: u64) -> u64 {
+    let mut prods: Vec<RingProducer<Span>> = Vec::with_capacity(producers);
+    let mut cons: Vec<RingConsumer<Span>> = Vec::with_capacity(producers);
+    for _ in 0..producers {
+        let (p, c) = ring::<Span>(RING_CAPACITY);
+        prods.push(p);
+        cons.push(c);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let consumed = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        let stop_c = stop.clone();
+        let consumed_c = consumed.clone();
+        s.spawn(move || {
+            let mut out: Vec<Span> = Vec::with_capacity(RING_CAPACITY);
+            let mut total = 0u64;
+            loop {
+                let mut n = 0;
+                for c in &mut cons {
+                    n += c.drain_into(&mut out);
+                }
+                out.clear(); // downstream aggregation is not under test
+                total += n as u64;
+                if n == 0 {
+                    if stop_c.load(Ordering::Acquire) {
+                        // producers joined before stop was raised: one
+                        // final sweep sees everything still in flight
+                        for c in &mut cons {
+                            total += c.drain_into(&mut out) as u64;
+                        }
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+            }
+            consumed_c.store(total, Ordering::Release);
+        });
+        std::thread::scope(|inner| {
+            for mut p in prods.drain(..) {
+                inner.spawn(move || {
+                    for i in 0..spans_each {
+                        // spin until the consumer frees a slot: sustained
+                        // rate, no span lost to the throughput count
+                        while !p.push(probe_span(i)) {
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+        });
+        stop.store(true, Ordering::Release);
+    });
+    consumed.load(Ordering::Acquire)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("PLANTD_BENCH_QUICK").is_ok_and(|v| v == "1");
+    println!(
+        "== telemetry contention: locked sink vs SPSC rings{} ==",
+        if quick { " (quick)" } else { "" }
+    );
+    let spans_each: u64 = if quick { 20_000 } else { 200_000 };
+    let iters = if quick { 1 } else { 5 };
+    let warmup = if quick { 0 } else { 1 };
+
+    let mut rates: Vec<(String, f64)> = Vec::new();
+    for producers in [1usize, 8] {
+        let total = producers as u64 * spans_each;
+
+        let (r, landed) = bench::run(
+            &format!("telemetry/locked-{producers}p"),
+            warmup,
+            iters,
+            || locked_round(producers, spans_each),
+        );
+        assert_eq!(landed, total, "locked route lost spans");
+        let locked_rate = throughput(total, &r);
+        println!("    locked {producers}p: {:.2} M spans/s", locked_rate / 1e6);
+        rates.push((format!("spans_per_s_locked_{producers}p"), locked_rate));
+
+        let (r, drained) = bench::run(
+            &format!("telemetry/ring-{producers}p"),
+            warmup,
+            iters,
+            || ring_round(producers, spans_each),
+        );
+        assert_eq!(drained, total, "ring route lost spans");
+        let ring_rate = throughput(total, &r);
+        println!("    ring   {producers}p: {:.2} M spans/s", ring_rate / 1e6);
+        rates.push((format!("spans_per_s_ring_{producers}p"), ring_rate));
+    }
+
+    // --- trajectory entry ---------------------------------------------------
+    let label = std::env::var("PLANTD_BENCH_LABEL").unwrap_or_else(|_| "local".into());
+    let host = std::env::var("PLANTD_BENCH_HOST").unwrap_or_else(|_| "local".into());
+    let unix_s = SystemTime::now()
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(1);
+    let metrics: Vec<(&str, f64)> = rates.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let entry = bench::entry(&format!("{label}-telemetry"), unix_s, &host, metrics);
+    let path = bench::trajectory_path("BENCH_hotpaths.json");
+    bench::append_entry(&path, "perf_hotpaths", entry)
+        .expect("append BENCH_hotpaths.json entry");
+    println!("appended entry '{label}-telemetry' to {}", path.display());
+    Ok(())
+}

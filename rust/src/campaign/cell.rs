@@ -196,6 +196,7 @@ pub(crate) fn run_cell_full(
                         stage: "unzipper_phase",
                         start_s: start,
                         duration_s: p.svc_unzipper,
+                        ingest_s: p.t_send,
                         records: 1,
                         bytes: p.zip_bytes,
                         ok: true,
@@ -216,6 +217,7 @@ pub(crate) fn run_cell_full(
                         stage: "v2x_phase",
                         start_s: start,
                         duration_s: svc_v2x,
+                        ingest_s: plans[send].t_send,
                         records: 1,
                         bytes,
                         ok: true,
@@ -233,6 +235,7 @@ pub(crate) fn run_cell_full(
                         stage: "etl_phase",
                         start_s: start,
                         duration_s: svc_etl,
+                        ingest_s: plans[send].t_send,
                         records: rows,
                         bytes: rows * 40,
                         ok: true,
@@ -269,8 +272,9 @@ pub(crate) fn run_cell_full(
     }
     let busy: Vec<f64> = outcome.stations.iter().map(|s| s.busy_s).collect();
 
-    // collect spans into the cell's isolated TSDB
-    let collector = Collector::new(tsdb.clone());
+    // collect spans into the cell's isolated TSDB (no pipeline label, so
+    // no cum-latency series — the cell's goldens stay byte-identical)
+    let mut collector = Collector::new(tsdb.clone());
     let spans_collected = collector.collect_from(&spans) as u64;
 
     // isolated cost meter: deploy this cell's containers on its own

@@ -49,6 +49,30 @@ pub struct HourlyUsage {
 }
 
 impl HourlyUsage {
+    /// Accrue `cpu_core_s` of CPU burn and `mem_gb` held for `duration_s`
+    /// starting at `t`, splitting usage that spans hour boundaries
+    /// proportionally into the right buckets. This is the single source of
+    /// the bucketing math — [`Container::record_usage`] (locked) and the
+    /// lock-free cost meter both route through it, so their ledgers agree
+    /// bit for bit.
+    pub fn accrue(&mut self, t: f64, duration_s: f64, cpu_core_s: f64, mem_gb: f64) {
+        if duration_s <= 0.0 {
+            return;
+        }
+        let mut remaining = duration_s;
+        let mut cursor = t.max(0.0);
+        while remaining > 1e-12 {
+            let hour = (cursor / 3600.0).floor() as u64;
+            let hour_end = (hour + 1) as f64 * 3600.0;
+            let span = remaining.min(hour_end - cursor);
+            let frac = span / duration_s;
+            *self.cpu_core_s.entry(hour).or_insert(0.0) += cpu_core_s * frac;
+            *self.mem_gb_s.entry(hour).or_insert(0.0) += mem_gb * span;
+            cursor += span;
+            remaining -= span;
+        }
+    }
+
     /// Total CPU core-seconds across all hours.
     pub fn total_cpu_core_s(&self) -> f64 {
         self.cpu_core_s.values().sum()
@@ -88,17 +112,20 @@ impl Container {
             return;
         }
         let mut st = self.state.lock().unwrap();
-        let mut remaining = duration_s;
-        let mut cursor = t.max(0.0);
-        while remaining > 1e-12 {
-            let hour = (cursor / 3600.0).floor() as u64;
-            let hour_end = (hour + 1) as f64 * 3600.0;
-            let span = remaining.min(hour_end - cursor);
-            let frac = span / duration_s;
-            *st.usage.cpu_core_s.entry(hour).or_insert(0.0) += cpu_core_s * frac;
-            *st.usage.mem_gb_s.entry(hour).or_insert(0.0) += mem_gb * span;
-            cursor += span;
-            remaining -= span;
+        st.usage.accrue(t, duration_s, cpu_core_s, mem_gb);
+    }
+
+    /// Merge an externally accumulated usage ledger into this container's
+    /// meter under a single lock hold. This is how a lock-free
+    /// [`cost::Meter`](crate::cost::Meter) flushes its per-worker buckets
+    /// when its worker finishes.
+    pub fn merge_usage(&self, usage: &HourlyUsage) {
+        let mut st = self.state.lock().unwrap();
+        for (hour, v) in &usage.cpu_core_s {
+            *st.usage.cpu_core_s.entry(*hour).or_insert(0.0) += v;
+        }
+        for (hour, v) in &usage.mem_gb_s {
+            *st.usage.mem_gb_s.entry(*hour).or_insert(0.0) += v;
         }
     }
 

@@ -1,0 +1,210 @@
+//! Lock-free per-worker cost metering.
+//!
+//! [`Container::record_usage`] takes the container mutex on every tick;
+//! called from `burn_cpu` inside each stage's service loop, that lock put
+//! cost accounting on the real-mode hot path. A [`Meter`] moves the
+//! accounting off it: each worker owns one `&mut` meter, accrues usage
+//! into a *private* hour-bucket ledger (the exact
+//! [`HourlyUsage::accrue`] math the container uses), publishes running
+//! totals through a [`Seqlock`] snapshot cell that any number of readers
+//! can poll without blocking the worker, and merges the ledger into the
+//! container under a single lock when the worker finishes (or the meter
+//! drops). After the flush, [`Container::usage`] is bit-identical to what
+//! per-tick `record_usage` calls would have produced.
+
+use std::sync::Arc;
+
+use crate::cloud::{Container, HourlyUsage};
+use crate::telemetry::Seqlock;
+
+/// Seqlock word layout: ticks, cpu bits, mem bits, busy bits, last-t bits.
+const WORDS: usize = 5;
+
+/// A consistent view of a meter's running totals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostSnapshot {
+    /// Usage ticks recorded so far.
+    pub ticks: u64,
+    /// Total CPU core-seconds burned.
+    pub cpu_core_s: f64,
+    /// Total GB·seconds of memory residency.
+    pub mem_gb_s: f64,
+    /// Total busy wall (virtual) seconds across ticks.
+    pub busy_s: f64,
+    /// Latest virtual end time covered by a tick (0 before the first).
+    pub last_t_s: f64,
+}
+
+/// Single-writer usage meter for one container (deliberately not `Clone`).
+#[derive(Debug)]
+pub struct Meter {
+    container: Container,
+    pending: HourlyUsage,
+    ticks: u64,
+    total_cpu_s: f64,
+    total_mem_gb_s: f64,
+    busy_s: f64,
+    last_t_s: f64,
+    cell: Arc<Seqlock<WORDS>>,
+}
+
+/// Read handle for a meter's published totals. Cheap to clone; reads are
+/// lock-free and never slow the metered worker down.
+#[derive(Debug, Clone)]
+pub struct MeterReader {
+    cell: Arc<Seqlock<WORDS>>,
+}
+
+impl MeterReader {
+    /// The meter's totals as of the last completed tick.
+    pub fn snapshot(&self) -> CostSnapshot {
+        let [ticks, cpu, mem, busy, last_t] = self.cell.read();
+        CostSnapshot {
+            ticks,
+            cpu_core_s: f64::from_bits(cpu),
+            mem_gb_s: f64::from_bits(mem),
+            busy_s: f64::from_bits(busy),
+            last_t_s: f64::from_bits(last_t),
+        }
+    }
+}
+
+impl Meter {
+    /// Meter accruing usage for `container`.
+    pub fn new(container: Container) -> Self {
+        Meter {
+            container,
+            pending: HourlyUsage::default(),
+            ticks: 0,
+            total_cpu_s: 0.0,
+            total_mem_gb_s: 0.0,
+            busy_s: 0.0,
+            last_t_s: 0.0,
+            cell: Arc::new(Seqlock::new()),
+        }
+    }
+
+    /// The container this meter accounts for.
+    pub fn container(&self) -> &Container {
+        &self.container
+    }
+
+    /// A lock-free reader over the running totals.
+    pub fn reader(&self) -> MeterReader {
+        MeterReader {
+            cell: self.cell.clone(),
+        }
+    }
+
+    /// Record one usage tick: `cpu_core_s` of CPU burn and `mem_gb` held
+    /// for `duration_s`, starting at virtual time `t`. Same contract as
+    /// [`Container::record_usage`], but lock-free: the ledger is private
+    /// until [`Meter::flush`], and the totals go out via the seqlock.
+    pub fn tick(&mut self, t: f64, duration_s: f64, cpu_core_s: f64, mem_gb: f64) {
+        if duration_s <= 0.0 {
+            return;
+        }
+        self.pending.accrue(t, duration_s, cpu_core_s, mem_gb);
+        self.ticks += 1;
+        self.total_cpu_s += cpu_core_s;
+        self.total_mem_gb_s += mem_gb * duration_s;
+        self.busy_s += duration_s;
+        self.last_t_s = self.last_t_s.max(t + duration_s);
+        self.cell.write(&[
+            self.ticks,
+            self.total_cpu_s.to_bits(),
+            self.total_mem_gb_s.to_bits(),
+            self.busy_s.to_bits(),
+            self.last_t_s.to_bits(),
+        ]);
+    }
+
+    /// Merge the private ledger into the container (one lock hold). Called
+    /// automatically on drop; call it earlier if the container's
+    /// [`Container::usage`] must be current before the worker exits.
+    pub fn flush(&mut self) {
+        if self.pending.cpu_core_s.is_empty() && self.pending.mem_gb_s.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        self.container.merge_usage(&pending);
+    }
+}
+
+impl Drop for Meter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::{Cloud, Resources};
+
+    fn container() -> (Container, Container) {
+        let cloud = Cloud::new();
+        cloud.add_node("n1", Resources::new(16.0, 64.0), 0.40);
+        let a = cloud.deploy("a", "ns", "n1", Resources::new(1.0, 2.0));
+        let b = cloud.deploy("b", "ns", "n1", Resources::new(1.0, 2.0));
+        (a, b)
+    }
+
+    #[test]
+    fn flushed_ledger_matches_locked_record_usage() {
+        let (a, b) = container();
+        let mut m = Meter::new(a.clone());
+        // ticks that straddle an hour boundary and overlap buckets
+        let ticks = [
+            (0.0, 10.0, 5.0, 2.0),
+            (3500.0, 200.0, 120.0, 2.0),
+            (7100.0, 250.0, 60.0, 2.0),
+        ];
+        for (t, d, c, g) in ticks {
+            m.tick(t, d, c, g);
+            b.record_usage(t, d, c, g);
+        }
+        m.flush();
+        let (ua, ub) = (a.usage(), b.usage());
+        assert_eq!(ua.cpu_core_s, ub.cpu_core_s, "cpu buckets diverged");
+        assert_eq!(ua.mem_gb_s, ub.mem_gb_s, "mem buckets diverged");
+    }
+
+    #[test]
+    fn snapshot_tracks_totals_without_flush() {
+        let (a, _) = container();
+        let mut m = Meter::new(a.clone());
+        let r = m.reader();
+        assert_eq!(r.snapshot().ticks, 0);
+        m.tick(10.0, 4.0, 3.0, 2.0);
+        m.tick(14.0, 6.0, 1.0, 2.0);
+        let s = r.snapshot();
+        assert_eq!(s.ticks, 2);
+        assert!((s.cpu_core_s - 4.0).abs() < 1e-12);
+        assert!((s.mem_gb_s - 20.0).abs() < 1e-12);
+        assert!((s.busy_s - 10.0).abs() < 1e-12);
+        assert_eq!(s.last_t_s, 20.0);
+        // nothing reached the container yet — the ledger is still private
+        assert_eq!(a.usage().total_cpu_core_s(), 0.0);
+    }
+
+    #[test]
+    fn drop_flushes_pending_usage() {
+        let (a, _) = container();
+        {
+            let mut m = Meter::new(a.clone());
+            m.tick(0.0, 10.0, 7.0, 2.0);
+        }
+        assert!((a.usage().total_cpu_core_s() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_duration_tick_ignored() {
+        let (a, _) = container();
+        let mut m = Meter::new(a.clone());
+        m.tick(5.0, 0.0, 1.0, 1.0);
+        assert_eq!(m.reader().snapshot().ticks, 0);
+        m.flush();
+        assert_eq!(a.usage().total_cpu_core_s(), 0.0);
+    }
+}

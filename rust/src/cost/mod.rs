@@ -18,6 +18,10 @@ use std::collections::BTreeMap;
 
 use crate::cloud::{Cloud, Container};
 
+mod meter;
+
+pub use meter::{CostSnapshot, Meter, MeterReader};
+
 /// Price book (USD). Defaults are in the neighbourhood of us-east-1
 /// on-demand prices; the absolute values only matter relatively.
 #[derive(Debug, Clone, Copy)]

@@ -9,8 +9,12 @@
 //! 2. marks the pipeline **engaged** (concurrent experiments refused);
 //! 3. drives the load pattern open-loop from the pre-generated dataset;
 //! 4. waits for the pipeline to **drain** (all stages idle);
-//! 5. collects spans into the TSDB and snapshots the metric/cost summary
-//!    (a Table III row) into an [`ExperimentRecord`].
+//! 5. snapshots the metric/cost summary (a Table III row) into an
+//!    [`ExperimentRecord`]. Telemetry reaches the TSDB through per-stage
+//!    lock-free span rings drained by a single aggregator thread, so the
+//!    measurement plane never blocks the pipeline under test (§V.B);
+//!    [`ExperimentHarness::run_locked`] keeps the old mutex-shared sink
+//!    alive purely to prove the ring path changes no numbers.
 //!
 //! Every experiment can also run **simulated**: the same stages, the same
 //! arrival schedule, executed in virtual time on the [`crate::sim`]
@@ -20,7 +24,10 @@
 
 mod sim;
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -28,10 +35,56 @@ use crate::cloud::{Cloud, Resources};
 use crate::cost::PriceBook;
 use crate::datagen::DataSet;
 use crate::loadgen::{LoadGenerator, LoadPattern, LoadReport};
-use crate::pipeline::{PipelineDeployment, VariantConfig};
-use crate::telemetry::{Collector, SpanSink, Tsdb};
+use crate::pipeline::{PipelineDeployment, SpanRoute, VariantConfig};
+use crate::telemetry::{ring, Collector, RingConsumer, Span, SpanSink, Tsdb};
 use crate::util::clock::{ScaledClock, SharedClock};
 use crate::util::stats;
+
+/// Capacity (spans) of each per-stage telemetry ring. Power of two, and
+/// comfortably above any single experiment's span count, so the ring path
+/// is lossless in practice — overflow is *counted*, never blocked on.
+const SPAN_RING_CAPACITY: usize = 1 << 14;
+
+/// Drain the per-stage telemetry rings until the stop flag is raised,
+/// recording each batch into the collector as it arrives. Returns every
+/// span seen plus the total ring-overflow drop count.
+///
+/// The stop flag must be raised only after the stage threads have been
+/// joined: observing `stop == true` (Acquire, paired with the Release
+/// store) happens-after every producer push, so the one final sweep below
+/// is guaranteed to see all published spans.
+fn spawn_span_aggregator(
+    mut consumers: Vec<RingConsumer<Span>>,
+    mut collector: Collector,
+    stop: Arc<AtomicBool>,
+) -> thread::JoinHandle<(Vec<Span>, u64)> {
+    thread::spawn(move || {
+        let mut spans: Vec<Span> = Vec::new();
+        loop {
+            let batch_start = spans.len();
+            let mut drained = 0;
+            for c in &mut consumers {
+                drained += c.drain_into(&mut spans);
+            }
+            if drained > 0 {
+                collector.record_all(&spans[batch_start..]);
+            } else if stop.load(Ordering::Acquire) {
+                let final_start = spans.len();
+                for c in &mut consumers {
+                    c.drain_into(&mut spans);
+                }
+                if spans.len() > final_start {
+                    collector.record_all(&spans[final_start..]);
+                }
+                break;
+            } else {
+                thread::sleep(Duration::from_micros(50));
+            }
+        }
+        let dropped = consumers.iter().map(|c| c.dropped()).sum();
+        (spans, dropped)
+    })
+}
 
 /// A named experiment: what to send and how fast, plus (optionally) a
 /// query workload against the pipeline's output store and a scheduled
@@ -113,6 +166,10 @@ pub struct ExperimentRecord {
     pub rows_scrubbed: u64,
     /// Failed spans across all stages.
     pub stage_errors: u64,
+    /// Spans lost to telemetry-ring overflow (0 on the locked path and in
+    /// simulation; 0 in practice on the ring path too, since the rings are
+    /// sized well above one run's span count).
+    pub spans_dropped: u64,
     /// Query-workload median latency, if a QueryLoad ran.
     pub query_p50_s: Option<f64>,
     /// Query-workload 95th-percentile latency, if a QueryLoad ran.
@@ -234,9 +291,9 @@ pub(crate) fn run_query_load(
 }
 
 /// Shared wind-tunnel infrastructure. `run` is `&self` and every run gets
-/// its own span sink, so experiments on *different* pipelines may run
-/// concurrently (multi-endpoint experiments, §IV); one pipeline still
-/// refuses concurrent engagement.
+/// its own span rings and aggregator thread, so experiments on *different*
+/// pipelines may run concurrently (multi-endpoint experiments, §IV); one
+/// pipeline still refuses concurrent engagement.
 pub struct ExperimentHarness {
     /// The simulated cloud experiments deploy onto.
     pub cloud: Cloud,
@@ -264,8 +321,31 @@ impl ExperimentHarness {
         }
     }
 
-    /// Run one experiment against one pipeline variant.
+    /// Run one experiment against one pipeline variant. Telemetry flows
+    /// through per-stage lock-free SPSC rings drained by one aggregator
+    /// thread — the default, non-perturbing path.
     pub fn run(&self, variant: &VariantConfig, exp: &Experiment) -> Result<ExperimentRecord> {
+        self.run_instrumented(variant, exp, true)
+    }
+
+    /// Run one experiment with the legacy mutex-shared span sink instead
+    /// of the rings. Retained to prove the ring path changes no numbers:
+    /// a ring-drained run must produce identical aggregate totals (spans,
+    /// records, bytes, errors, cost rate) on the same seed.
+    pub fn run_locked(
+        &self,
+        variant: &VariantConfig,
+        exp: &Experiment,
+    ) -> Result<ExperimentRecord> {
+        self.run_instrumented(variant, exp, false)
+    }
+
+    fn run_instrumented(
+        &self,
+        variant: &VariantConfig,
+        exp: &Experiment,
+        lock_free: bool,
+    ) -> Result<ExperimentRecord> {
         // scheduled start (§IV: "start immediately or at some scheduled time")
         if let Some(at) = exp.start_at_s {
             let now = self.clock.now_s();
@@ -273,20 +353,59 @@ impl ExperimentHarness {
                 self.clock.sleep_s(at - now);
             }
         }
-        let run_spans = SpanSink::new();
-        let handle = PipelineDeployment::deploy(
+
+        // Telemetry routing: each stage gets a private SPSC ring drained
+        // by one aggregator thread (lock-free path), or all three stages
+        // share one mutex-guarded sink (locked path, equivalence checks
+        // only). Routes are ordered [unzipper, v2x, etl].
+        let collector = Collector::with_pipeline(self.tsdb.clone(), variant.name);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut aggregator = None;
+        let mut shared_sink = None;
+        let routes = if lock_free {
+            let (p_unzipper, c_unzipper) = ring::<Span>(SPAN_RING_CAPACITY);
+            let (p_v2x, c_v2x) = ring::<Span>(SPAN_RING_CAPACITY);
+            let (p_etl, c_etl) = ring::<Span>(SPAN_RING_CAPACITY);
+            aggregator = Some(spawn_span_aggregator(
+                vec![c_unzipper, c_v2x, c_etl],
+                collector,
+                stop.clone(),
+            ));
+            [
+                SpanRoute::Ring(p_unzipper),
+                SpanRoute::Ring(p_v2x),
+                SpanRoute::Ring(p_etl),
+            ]
+        } else {
+            let sink = SpanSink::new();
+            shared_sink = Some((sink.clone(), collector));
+            [
+                SpanRoute::Shared(sink.clone()),
+                SpanRoute::Shared(sink.clone()),
+                SpanRoute::Shared(sink),
+            ]
+        };
+        let handle = PipelineDeployment::deploy_routed(
             variant,
             &self.cloud,
             &self.node_id,
             self.clock.clone(),
-            run_spans.clone(),
-            &self.tsdb,
+            routes,
         );
-        if !handle.is_reachable() {
-            bail!("pipeline '{}' is not reachable", variant.name);
-        }
-        if !handle.engage() {
-            bail!("pipeline '{}' is already engaged", variant.name);
+        let engage_err = if !handle.is_reachable() {
+            Some(format!("pipeline '{}' is not reachable", variant.name))
+        } else if !handle.engage() {
+            Some(format!("pipeline '{}' is already engaged", variant.name))
+        } else {
+            None
+        };
+        if let Some(msg) = engage_err {
+            // shut the aggregator down before bailing so no thread leaks
+            stop.store(true, Ordering::Release);
+            if let Some(agg) = aggregator {
+                let _ = agg.join();
+            }
+            bail!("{msg}");
         }
 
         // 3. drive the load. Payloads are pre-wrapped in Arcs so the
@@ -307,20 +426,30 @@ impl ExperimentHarness {
         // when the data it queries has landed)
         let table = handle.table.clone();
         let run_stats = handle.finish();
+
+        // 5. collect spans → metrics. `finish()` joined the stage threads,
+        // so every span is already committed: raise the stop flag and the
+        // aggregator's final sweep hands back this run's complete span set
+        // plus the ring-overflow count. Latency summaries come from *this
+        // run's* spans, not from TSDB queries — the shared TSDB
+        // accumulates across sequential experiments on the harness.
+        let (spans, spans_dropped) = match (aggregator, shared_sink) {
+            (Some(agg), _) => {
+                stop.store(true, Ordering::Release);
+                agg.join().expect("span aggregator panicked")
+            }
+            (None, Some((sink, mut collector))) => {
+                let spans = sink.drain();
+                collector.record_all(&spans);
+                (spans, 0)
+            }
+            (None, None) => unreachable!("one telemetry route is always wired"),
+        };
+
         let query_stats = exp
             .queries
             .map(|q| self.run_queries(&table, q))
             .transpose()?;
-
-        // 5. collect spans → metrics. Latency summaries come from *this
-        // run's* spans (the sink holds exactly one run), not from TSDB
-        // queries — the shared TSDB accumulates across sequential
-        // experiments on the harness.
-        let spans = run_spans.drain();
-        let collector = Collector::new(self.tsdb.clone());
-        for s in &spans {
-            collector.record(s);
-        }
 
         let started_s = load.start_s;
         let drained_s = run_stats.drained_at_s;
@@ -342,11 +471,14 @@ impl ExperimentHarness {
         let latency_nq_median_s: f64 =
             stages.iter().map(|s| stats::median(&durations_of(s))).sum();
 
+        // `values_range` is inclusive on both ends and every ETL span ends
+        // at or before the drain timestamp, so [started_s, drained_s]
+        // captures exactly this run's samples — no fudge term.
         let e2e = self.tsdb.values_range(
             "stage_cum_latency_s",
             &[("stage", "etl_phase"), ("pipeline", variant.name)],
             started_s,
-            drained_s + 1.0,
+            drained_s,
         );
         let cost_per_hr_usd = variant.cost_per_hr(&self.prices);
         let total_cost_usd = cost_per_hr_usd * duration_s / 3600.0;
@@ -379,6 +511,7 @@ impl ExperimentHarness {
             rows_inserted: run_stats.rows_inserted,
             rows_scrubbed: run_stats.rows_scrubbed,
             stage_errors,
+            spans_dropped,
             query_p50_s: query_stats.map(|(p50, _, _)| p50),
             query_p95_s: query_stats.map(|(_, p95, _)| p95),
             query_achieved_qps: query_stats.map(|(_, _, qps)| qps),
@@ -446,7 +579,9 @@ mod tests {
         assert!(rec.total_cost_usd > 0.0);
         assert!(rec.rows_inserted > 0);
         assert_eq!(rec.per_stage.len(), 3);
-        // spans landed in the TSDB
+        // rings sized far above one run's span count: nothing dropped
+        assert_eq!(rec.spans_dropped, 0);
+        // spans landed in the TSDB (via the aggregator thread)
         assert!(harness.tsdb.sum_range("stage_records", &[], 0.0, f64::MAX) > 0.0);
     }
 

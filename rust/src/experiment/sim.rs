@@ -100,30 +100,23 @@ pub(super) fn simulate(
     };
 
     let spans = SpanSink::new();
-    let ctx = |cname: &str, throttle: f64| StageContext {
-        clock: clock.clone(),
-        spans: spans.clone(),
-        container: container_for(cname),
-        throttle,
-    };
-    let ctx_unzipper = ctx("unzipper", 1.0);
-    let ctx_v2x = ctx("v2x", cfg.v2x_throttle);
-    let ctx_etl = ctx("etl", 1.0);
+    let ctx =
+        |cname: &str, throttle: f64| StageContext::new(clock.clone(), container_for(cname), throttle);
+    let mut ctx_unzipper = ctx("unzipper", 1.0);
+    let mut ctx_v2x = ctx("v2x", cfg.v2x_throttle);
+    let mut ctx_etl = ctx("etl", 1.0);
 
     let mut unzipper = UnzipperStage {
         service_s: cfg.unzipper_service_s,
         persist: raw_writer.clone(),
-        cum_latency: None,
     };
     let mut v2x = V2xStage {
         parse_s: cfg.v2x_parse_s,
         write: v2x_write,
-        cum_latency: None,
     };
     let mut etl = EtlStage {
         service_s: cfg.etl_service_s,
         table: table.clone(),
-        cum_latency: None,
     };
 
     // identical arrival schedule to what the wall-clock generator paces
@@ -158,30 +151,39 @@ pub(super) fn simulate(
         // sleeps advance the kernel clock) and emit the span it would
         // have emitted on a thread
         let msg = batch[0].clone();
-        let (name, out_records, out_bytes, ok, next) = match (station, msg) {
+        let (name, out_records, out_bytes, out_ingest, ok, next) = match (station, msg) {
             (0, SimMsg::Zip(m)) => {
-                let out = unzipper.process(m, &ctx_unzipper);
+                let out = unzipper.process(m, &mut ctx_unzipper);
                 (
                     unzipper.name(),
                     out.records,
                     out.bytes,
+                    out.ingest_s,
                     out.ok,
                     out.emit.into_iter().map(SimMsg::Bin).collect::<Vec<_>>(),
                 )
             }
             (1, SimMsg::Bin(m)) => {
-                let out = v2x.process(m, &ctx_v2x);
+                let out = v2x.process(m, &mut ctx_v2x);
                 (
                     v2x.name(),
                     out.records,
                     out.bytes,
+                    out.ingest_s,
                     out.ok,
                     out.emit.into_iter().map(SimMsg::Rows).collect::<Vec<_>>(),
                 )
             }
             (2, SimMsg::Rows(m)) => {
-                let out = etl.process(m, &ctx_etl);
-                (etl.name(), out.records, out.bytes, out.ok, Vec::new())
+                let out = etl.process(m, &mut ctx_etl);
+                (
+                    etl.name(),
+                    out.records,
+                    out.bytes,
+                    out.ingest_s,
+                    out.ok,
+                    Vec::new(),
+                )
             }
             _ => unreachable!("message kind routed to the wrong station"),
         };
@@ -191,6 +193,7 @@ pub(super) fn simulate(
             stage: name,
             start_s: start,
             duration_s: end - start,
+            ingest_s: out_ingest,
             records: out_records,
             bytes: out_bytes,
             ok,
@@ -284,6 +287,7 @@ pub(super) fn simulate(
         rows_inserted: table.row_count(),
         rows_scrubbed: table.scrubbed_count(),
         stage_errors,
+        spans_dropped: 0, // sim mode never routes spans through rings
         query_p50_s: query_stats.map(|(p50, _, _)| p50),
         query_p95_s: query_stats.map(|(_, p95, _)| p95),
         query_achieved_qps: query_stats.map(|(_, _, qps)| qps),

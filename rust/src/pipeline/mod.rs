@@ -26,7 +26,7 @@ mod stages;
 mod variant;
 
 pub use stages::{
-    BinMsg, EtlStage, RowsMsg, Stage, StageContext, StageOutput, StageRunner, StageStats,
-    UnzipperStage, V2xStage, V2xWrite, ZipMsg,
+    BinMsg, EtlStage, RowsMsg, SpanRoute, Stage, StageContext, StageOutput, StageRunner,
+    StageStats, UnzipperStage, V2xStage, V2xWrite, ZipMsg,
 };
 pub use variant::{PipelineDeployment, PipelineHandle, VariantConfig, WriteMode};

@@ -5,15 +5,22 @@
 //! latencies (S3 puts, CPU time) through the shared scaled clock, so the
 //! wind tunnel measures a pipeline whose bottlenecks behave like the
 //! paper's (§VI.A), at any clock scale.
+//!
+//! Telemetry stays off the hot path (§V.B): each stage thread owns its
+//! [`StageContext`] exclusively — CPU burn is metered through a lock-free
+//! [`cost::Meter`](crate::cost::Meter) — and finished spans leave through
+//! a [`SpanRoute`], either a shared locked sink (sim mode, tests) or a
+//! private SPSC ring drained by the experiment aggregator (real mode).
 
 use std::sync::Arc;
 
 use crate::blob::{AsyncWriter, BlobStore};
 use crate::bus::Topic;
 use crate::cloud::Container;
+use crate::cost::Meter;
 use crate::datagen::{decode_subsystem_binary, SUBSYSTEMS};
 use crate::tablestore::{InsertLatency, Table, Value};
-use crate::telemetry::{SeriesHandle, Span, SpanSink};
+use crate::telemetry::{RingProducer, Span, SpanSink};
 use crate::util::clock::SharedClock;
 
 /// Message: one vehicle transmission (a zip) entering the pipeline.
@@ -63,6 +70,9 @@ pub struct RowsMsg {
 pub struct StageOutput<T> {
     /// Downstream messages to forward.
     pub emit: Vec<T>,
+    /// Virtual time the traced payload entered the pipeline (for the
+    /// span's cumulative-latency derivation); `NaN` when unknown.
+    pub ingest_s: f64,
     /// Records this span processed (a stage may split/join records —
     /// PlantD makes no assumption about cross-stage record ratios, §VII.A).
     pub records: u64,
@@ -72,15 +82,13 @@ pub struct StageOutput<T> {
     pub ok: bool,
 }
 
-/// Shared per-stage runtime context.
-#[derive(Clone)]
+/// Per-stage runtime context, owned exclusively by one stage thread
+/// (deliberately not `Clone`: the embedded [`Meter`] is single-writer).
 pub struct StageContext {
     /// The wind tunnel's (scaled) clock.
     pub clock: SharedClock,
-    /// Where this stage's spans go.
-    pub spans: SpanSink,
-    /// The container whose meter this stage's CPU burn is charged to.
-    pub container: Container,
+    /// Lock-free usage meter for the container this stage runs in.
+    pub meter: Meter,
     /// CPU throttle multiplier (1.0 = unthrottled; the `cpu-limited`
     /// variant stretches v2x service times by this factor, modeling a
     /// Kubernetes CPU quota).
@@ -88,14 +96,28 @@ pub struct StageContext {
 }
 
 impl StageContext {
+    /// Context metering against `container`.
+    pub fn new(clock: SharedClock, container: Container, throttle: f64) -> Self {
+        StageContext {
+            clock,
+            meter: Meter::new(container),
+            throttle,
+        }
+    }
+
+    /// The container this stage's CPU burn is charged to.
+    pub fn container(&self) -> &Container {
+        self.meter.container()
+    }
+
     /// Burn `cpu_s` of CPU-bound service time (stretched by the throttle)
     /// and meter it against the container. Returns virtual seconds spent.
-    pub fn burn_cpu(&self, cpu_s: f64) -> f64 {
+    pub fn burn_cpu(&mut self, cpu_s: f64) -> f64 {
         let spent = cpu_s * self.throttle;
         let t0 = self.clock.now_s();
         self.clock.sleep_s(spent);
-        self.container
-            .record_usage(t0, spent, cpu_s.min(spent), self.container.requests.mem_gb);
+        let mem_gb = self.meter.container().requests.mem_gb;
+        self.meter.tick(t0, spent, cpu_s.min(spent), mem_gb);
         spent
     }
 }
@@ -110,20 +132,44 @@ pub trait Stage: Send + 'static {
     /// Stage name, used for spans and metrics labels.
     fn name(&self) -> &'static str;
     /// Transform one input message into zero or more outputs.
-    fn process(&mut self, input: Self::In, ctx: &StageContext) -> StageOutput<Self::Out>;
+    fn process(&mut self, input: Self::In, ctx: &mut StageContext) -> StageOutput<Self::Out>;
     /// Called once after the input topic drains (flush buffers etc.).
-    fn finish(&mut self, _ctx: &StageContext) {}
+    fn finish(&mut self, _ctx: &mut StageContext) {}
+}
+
+/// Where a stage runner sends finished spans.
+pub enum SpanRoute {
+    /// Shared mutex-guarded sink (sim mode, campaign cells, tests).
+    Shared(SpanSink),
+    /// Private SPSC ring: the lock-free real-mode path. Overflow drops
+    /// the span and bumps the ring's drop counter — the producer never
+    /// blocks on a slow aggregator.
+    Ring(RingProducer<Span>),
+}
+
+impl SpanRoute {
+    fn push(&mut self, span: Span) -> bool {
+        match self {
+            SpanRoute::Shared(sink) => {
+                sink.push(span);
+                true
+            }
+            SpanRoute::Ring(producer) => producer.push(span),
+        }
+    }
 }
 
 /// Aggregate stats a stage runner returns when its input drains.
 #[derive(Debug, Clone, Default)]
 pub struct StageStats {
-    /// Messages processed (= spans emitted).
+    /// Messages processed (= spans emitted, minus any ring drops).
     pub spans: u64,
     /// Records processed across all spans.
     pub records: u64,
     /// Failed spans.
     pub errors: u64,
+    /// Spans dropped on ring overflow (always 0 on the shared route).
+    pub spans_dropped: u64,
     /// Total virtual seconds spent in `process`.
     pub busy_s: f64,
     /// Virtual time of the last span completion.
@@ -141,7 +187,8 @@ impl StageRunner {
         mut stage: S,
         input: Topic<S::In>,
         output: Option<Topic<S::Out>>,
-        ctx: StageContext,
+        mut ctx: StageContext,
+        mut route: SpanRoute,
     ) -> std::thread::JoinHandle<StageStats> {
         std::thread::Builder::new()
             .name(stage.name().to_string())
@@ -149,7 +196,7 @@ impl StageRunner {
                 let mut stats = StageStats::default();
                 while let Some(msg) = input.recv() {
                     let t0 = ctx.clock.now_s();
-                    let out = stage.process(msg, &ctx);
+                    let out = stage.process(msg, &mut ctx);
                     let t1 = ctx.clock.now_s();
                     stats.spans += 1;
                     stats.records += out.records;
@@ -158,15 +205,18 @@ impl StageRunner {
                     if !out.ok {
                         stats.errors += 1;
                     }
-                    ctx.spans.push(Span {
+                    if !route.push(Span {
                         trace_id: 0,
                         stage: stage.name(),
                         start_s: t0,
                         duration_s: t1 - t0,
+                        ingest_s: out.ingest_s,
                         records: out.records,
                         bytes: out.bytes,
                         ok: out.ok,
-                    });
+                    }) {
+                        stats.spans_dropped += 1;
+                    }
                     if let Some(topic) = &output {
                         for o in out.emit {
                             if topic.send(o).is_err() {
@@ -175,10 +225,14 @@ impl StageRunner {
                         }
                     }
                 }
-                stage.finish(&ctx);
+                stage.finish(&mut ctx);
                 if let Some(topic) = &output {
                     topic.close();
                 }
+                // merge this worker's private usage ledger into the
+                // container before the join completes, so cost queries
+                // after `finish()` see exact totals
+                ctx.meter.flush();
                 stats
             })
             .expect("spawn stage thread")
@@ -197,9 +251,6 @@ pub struct UnzipperStage {
     pub service_s: f64,
     /// Raw-zip persistence sink.
     pub persist: Arc<AsyncWriter>,
-    /// Optional cumulative-latency series (span end − ingest time) — the
-    /// per-stage latency curves of Fig. 8.
-    pub cum_latency: Option<SeriesHandle>,
 }
 
 impl Stage for UnzipperStage {
@@ -210,12 +261,8 @@ impl Stage for UnzipperStage {
         "unzipper_phase"
     }
 
-    fn process(&mut self, input: ZipMsg, ctx: &StageContext) -> StageOutput<BinMsg> {
+    fn process(&mut self, input: ZipMsg, ctx: &mut StageContext) -> StageOutput<BinMsg> {
         ctx.burn_cpu(self.service_s);
-        if let Some(series) = &self.cum_latency {
-            let now = ctx.clock.now_s();
-            series.push(now, now - input.ingest_s);
-        }
         let bytes = input.zip.len() as u64;
         // persist the raw transmission (async: not on the critical path)
         self.persist
@@ -233,6 +280,7 @@ impl Stage for UnzipperStage {
                     })
                     .collect();
                 StageOutput {
+                    ingest_s: input.ingest_s,
                     records: 1, // one vehicle transmission
                     bytes,
                     ok: true,
@@ -241,6 +289,7 @@ impl Stage for UnzipperStage {
             }
             Err(_) => StageOutput {
                 emit: vec![],
+                ingest_s: input.ingest_s,
                 records: 1,
                 bytes,
                 ok: false,
@@ -268,8 +317,6 @@ pub struct V2xStage {
     pub parse_s: f64,
     /// Blocking or background blob-write path.
     pub write: V2xWrite,
-    /// Optional cumulative-latency series (Fig. 8).
-    pub cum_latency: Option<SeriesHandle>,
 }
 
 impl Stage for V2xStage {
@@ -280,7 +327,7 @@ impl Stage for V2xStage {
         "v2x_phase"
     }
 
-    fn process(&mut self, input: BinMsg, ctx: &StageContext) -> StageOutput<RowsMsg> {
+    fn process(&mut self, input: BinMsg, ctx: &mut StageContext) -> StageOutput<RowsMsg> {
         let bytes = input.data.len() as u64;
         let parsed = decode_subsystem_binary(&input.data);
         // "parquet" backup — the architecture-defining write. CPU service
@@ -299,12 +346,9 @@ impl Stage for V2xStage {
         };
         let t0 = ctx.clock.now_s();
         ctx.clock.sleep_s(cpu_s + io_s);
-        ctx.container
-            .record_usage(t0, cpu_s + io_s, self.parse_s.min(cpu_s), ctx.container.requests.mem_gb);
-        if let Some(series) = &self.cum_latency {
-            let now = ctx.clock.now_s();
-            series.push(now, now - input.ingest_s);
-        }
+        let mem_gb = ctx.meter.container().requests.mem_gb;
+        ctx.meter
+            .tick(t0, cpu_s + io_s, self.parse_s.min(cpu_s), mem_gb);
         let (ok, emit) = match parsed {
             Ok((subsys_idx, records)) => (
                 true,
@@ -320,6 +364,7 @@ impl Stage for V2xStage {
         };
         StageOutput {
             emit,
+            ingest_s: input.ingest_s,
             records: 1, // one subsystem file
             bytes,
             ok,
@@ -337,9 +382,6 @@ pub struct EtlStage {
     pub service_s: f64,
     /// The warehouse table rows are loaded into.
     pub table: Table,
-    /// Optional cumulative (end-to-end) latency series (Fig. 8; also the
-    /// source of the twin's per-record latency distribution).
-    pub cum_latency: Option<SeriesHandle>,
 }
 
 impl EtlStage {
@@ -378,7 +420,7 @@ impl Stage for EtlStage {
         "etl_phase"
     }
 
-    fn process(&mut self, input: RowsMsg, ctx: &StageContext) -> StageOutput<()> {
+    fn process(&mut self, input: RowsMsg, ctx: &mut StageContext) -> StageOutput<()> {
         ctx.burn_cpu(self.service_s);
         // long-format row expansion happens here, off the bottleneck stage
         let (subsys_name, fields) = SUBSYSTEMS[input.subsys_idx];
@@ -396,12 +438,9 @@ impl Stage for EtlStage {
         }
         let n = rows.len() as u64;
         let (_inserted, _scrubbed) = self.table.insert_batch(rows);
-        if let Some(series) = &self.cum_latency {
-            let now = ctx.clock.now_s();
-            series.push(now, now - input.ingest_s);
-        }
         StageOutput {
             emit: vec![],
+            ingest_s: input.ingest_s,
             records: 1, // one converted file loaded
             bytes: n * 40,
             ok: true,
@@ -418,20 +457,23 @@ mod tests {
     use crate::util::clock::ScaledClock;
     use crate::util::rng::Rng;
 
-    fn test_ctx(throttle: f64) -> (StageContext, SharedClock) {
+    /// One cloud + one scaled clock; contexts are minted per stage (each
+    /// stage thread owns its context and meter exclusively).
+    fn test_rig() -> (Cloud, SharedClock) {
         let clock = ScaledClock::new(50_000.0);
         let cloud = Cloud::new();
         cloud.add_node("n", Resources::new(16.0, 64.0), 0.4);
-        let container = cloud.deploy("c", "ns", "n", Resources::new(1.0, 1.0));
-        (
-            StageContext {
-                clock: clock.clone(),
-                spans: SpanSink::new(),
-                container,
-                throttle,
-            },
-            clock,
-        )
+        (cloud, clock)
+    }
+
+    fn ctx_on(cloud: &Cloud, clock: &SharedClock, cname: &str, throttle: f64) -> StageContext {
+        let container = cloud.deploy(cname, "ns", "n", Resources::new(1.0, 1.0));
+        StageContext::new(clock.clone(), container, throttle)
+    }
+
+    fn test_ctx(throttle: f64) -> (StageContext, SharedClock) {
+        let (cloud, clock) = test_rig();
+        (ctx_on(&cloud, &clock, "c", throttle), clock)
     }
 
     fn store(clock: &SharedClock) -> BlobStore {
@@ -456,18 +498,18 @@ mod tests {
 
     #[test]
     fn unzipper_emits_five_bins_and_persists() {
-        let (ctx, clock) = test_ctx(1.0);
+        let (mut ctx, clock) = test_ctx(1.0);
         let s = store(&clock);
         let persist = Arc::new(AsyncWriter::new(s.clone(), 64));
         let mut stage = UnzipperStage {
             service_s: 0.001,
             persist: persist.clone(),
-            cum_latency: None,
         };
-        let out = stage.process(zip_msg(), &ctx);
+        let out = stage.process(zip_msg(), &mut ctx);
         assert_eq!(out.emit.len(), 5);
         assert!(out.ok);
         assert_eq!(out.records, 1);
+        assert_eq!(out.ingest_s, 0.0);
         drop(stage);
         // wait for the async persist to land
         let persist = Arc::try_unwrap(persist).ok().expect("sole owner");
@@ -477,12 +519,11 @@ mod tests {
 
     #[test]
     fn unzipper_flags_garbage_zip() {
-        let (ctx, clock) = test_ctx(1.0);
+        let (mut ctx, clock) = test_ctx(1.0);
         let persist = Arc::new(AsyncWriter::new(store(&clock), 8));
         let mut stage = UnzipperStage {
             service_s: 0.0,
             persist,
-            cum_latency: None,
         };
         let out = stage.process(
             ZipMsg {
@@ -490,7 +531,7 @@ mod tests {
                 ingest_s: 0.0,
                 zip: Arc::new(b"garbage".to_vec()),
             },
-            &ctx,
+            &mut ctx,
         );
         assert!(!out.ok);
         assert!(out.emit.is_empty());
@@ -498,21 +539,19 @@ mod tests {
 
     #[test]
     fn v2x_parses_rows_blocking_write_lands_synchronously() {
-        let (ctx, clock) = test_ctx(1.0);
+        let (mut ctx, clock) = test_ctx(1.0);
         let s = store(&clock);
         let persist = Arc::new(AsyncWriter::new(s.clone(), 64));
         let mut unzipper = UnzipperStage {
             service_s: 0.0,
             persist,
-            cum_latency: None,
         };
-        let bins = unzipper.process(zip_msg(), &ctx).emit;
+        let bins = unzipper.process(zip_msg(), &mut ctx).emit;
         let mut v2x = V2xStage {
             parse_s: 0.001,
             write: V2xWrite::Blocking(s.clone()),
-            cum_latency: None,
         };
-        let out = v2x.process(bins[0].clone(), &ctx);
+        let out = v2x.process(bins[0].clone(), &mut ctx);
         assert!(out.ok);
         assert_eq!(out.emit.len(), 1);
         // 10 decoded samples, expanded to rows later by etl
@@ -524,12 +563,11 @@ mod tests {
 
     #[test]
     fn v2x_flags_corrupt_binary() {
-        let (ctx, clock) = test_ctx(1.0);
+        let (mut ctx, clock) = test_ctx(1.0);
         let s = store(&clock);
         let mut v2x = V2xStage {
             parse_s: 0.0,
             write: V2xWrite::Blocking(s),
-            cum_latency: None,
         };
         let out = v2x.process(
             BinMsg {
@@ -538,7 +576,7 @@ mod tests {
                 member_name: "x.bin".into(),
                 data: vec![0u8; 64],
             },
-            &ctx,
+            &mut ctx,
         );
         assert!(!out.ok);
         assert!(out.emit.is_empty());
@@ -546,12 +584,11 @@ mod tests {
 
     #[test]
     fn etl_inserts_and_scrubs() {
-        let (ctx, clock) = test_ctx(1.0);
+        let (mut ctx, clock) = test_ctx(1.0);
         let table = EtlStage::warehouse_table(clock.clone());
         let mut etl = EtlStage {
             service_s: 0.0,
             table: table.clone(),
-            cum_latency: None,
         };
         use crate::datagen::SubsystemRecord;
         // speed subsystem: 2 fields/record; one record carries a NaN
@@ -575,7 +612,7 @@ mod tests {
                 records,
                 bytes: 100,
             },
-            &ctx,
+            &mut ctx,
         );
         assert_eq!(table.row_count(), 3);
         assert_eq!(table.scrubbed_count(), 1);
@@ -583,12 +620,28 @@ mod tests {
 
     #[test]
     fn throttle_stretches_service_time() {
-        let (ctx_full, _) = test_ctx(1.0);
-        let (ctx_throttled, _) = test_ctx(8.0);
+        let (mut ctx_full, _) = test_ctx(1.0);
+        let (mut ctx_throttled, _) = test_ctx(8.0);
         let spent_full = ctx_full.burn_cpu(0.01);
         let spent_thr = ctx_throttled.burn_cpu(0.01);
         assert!((spent_full - 0.01).abs() < 1e-12);
         assert!((spent_thr - 0.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn burn_cpu_meters_usage_through_the_lockfree_meter() {
+        let (mut ctx, _) = test_ctx(1.0);
+        let reader = ctx.meter.reader();
+        ctx.burn_cpu(0.01);
+        ctx.burn_cpu(0.02);
+        let snap = reader.snapshot();
+        assert_eq!(snap.ticks, 2);
+        assert!((snap.cpu_core_s - 0.03).abs() < 1e-9);
+        // nothing on the container yet; an explicit flush lands it
+        assert_eq!(ctx.container().usage().total_cpu_core_s(), 0.0);
+        ctx.meter.flush();
+        let total = ctx.container().usage().total_cpu_core_s();
+        assert!((total - 0.03).abs() < 1e-9);
     }
 
     #[test]
@@ -598,15 +651,16 @@ mod tests {
         let persist = Arc::new(AsyncWriter::new(s, 64));
         let input: Topic<ZipMsg> = Topic::new("ingest", 100);
         let output: Topic<BinMsg> = Topic::new("bins", 100);
+        let sink = SpanSink::new();
         let h = StageRunner::spawn(
             UnzipperStage {
                 service_s: 0.0001,
                 persist,
-                cum_latency: None,
             },
             input.clone(),
             Some(output.clone()),
-            ctx.clone(),
+            ctx,
+            SpanRoute::Shared(sink.clone()),
         );
         for _ in 0..4 {
             input.send(zip_msg()).unwrap();
@@ -616,54 +670,86 @@ mod tests {
         assert_eq!(stats.spans, 4);
         assert_eq!(stats.records, 4);
         assert_eq!(stats.errors, 0);
+        assert_eq!(stats.spans_dropped, 0);
         assert!(output.is_closed());
         let mut n = 0;
         while output.recv().is_some() {
             n += 1;
         }
         assert_eq!(n, 20); // 4 zips × 5 members
-        assert_eq!(ctx.spans.len(), 4);
+        assert_eq!(sink.len(), 4);
+    }
+
+    #[test]
+    fn runner_counts_ring_overflow_drops() {
+        let (ctx, clock) = test_ctx(1.0);
+        let persist = Arc::new(AsyncWriter::new(store(&clock), 64));
+        let input: Topic<ZipMsg> = Topic::new("ingest", 100);
+        // a 2-slot ring that nobody drains: all but 2 spans must drop,
+        // and the runner must keep going regardless
+        let (producer, mut consumer) = crate::telemetry::ring(2);
+        let h = StageRunner::spawn(
+            UnzipperStage {
+                service_s: 0.0,
+                persist,
+            },
+            input.clone(),
+            None,
+            ctx,
+            SpanRoute::Ring(producer),
+        );
+        for _ in 0..6 {
+            input.send(zip_msg()).unwrap();
+        }
+        input.close();
+        let stats = h.join().unwrap();
+        assert_eq!(stats.spans, 6);
+        assert_eq!(stats.spans_dropped, 4);
+        assert_eq!(consumer.dropped(), 4);
+        let mut out = Vec::new();
+        assert_eq!(consumer.drain_into(&mut out), 2);
     }
 
     #[test]
     fn full_three_stage_chain_processes_all_records() {
-        let (ctx, clock) = test_ctx(1.0);
+        let (cloud, clock) = test_rig();
         let s = store(&clock);
         let persist = Arc::new(AsyncWriter::new(s.clone(), 256));
         let ingest: Topic<ZipMsg> = Topic::new("ingest", 100);
         let bins: Topic<BinMsg> = Topic::new("bins", 100);
         let rows: Topic<RowsMsg> = Topic::new("rows", 100);
         let table = EtlStage::warehouse_table(clock.clone());
+        let sink = SpanSink::new();
 
         let h1 = StageRunner::spawn(
             UnzipperStage {
                 service_s: 0.0001,
                 persist,
-                cum_latency: None,
             },
             ingest.clone(),
             Some(bins.clone()),
-            ctx.clone(),
+            ctx_on(&cloud, &clock, "c-unzipper", 1.0),
+            SpanRoute::Shared(sink.clone()),
         );
         let h2 = StageRunner::spawn(
             V2xStage {
                 parse_s: 0.0001,
                 write: V2xWrite::Blocking(s.clone()),
-                cum_latency: None,
             },
             bins,
             Some(rows.clone()),
-            ctx.clone(),
+            ctx_on(&cloud, &clock, "c-v2x", 1.0),
+            SpanRoute::Shared(sink.clone()),
         );
         let h3 = StageRunner::spawn(
             EtlStage {
                 service_s: 0.0001,
                 table: table.clone(),
-                cum_latency: None,
             },
             rows,
             None,
-            ctx.clone(),
+            ctx_on(&cloud, &clock, "c-etl", 1.0),
+            SpanRoute::Shared(sink.clone()),
         );
 
         let n_zips = 6;
@@ -679,6 +765,7 @@ mod tests {
         assert_eq!(s1.spans, n_zips);
         assert_eq!(s2.spans, n_zips * 5);
         assert_eq!(s3.spans, n_zips * 5);
+        assert_eq!(sink.len() as u64, n_zips + 2 * (n_zips * 5));
         // every sample row landed or was scrubbed: 6 zips × 5 files × 10
         // samples × n_fields rows
         let expected_rows: u64 = SUBSYSTEMS

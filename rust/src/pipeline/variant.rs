@@ -15,11 +15,11 @@ use crate::blob::{AsyncWriter, BlobLatency, BlobStore};
 use crate::bus::Topic;
 use crate::cloud::{Cloud, Resources};
 use crate::tablestore::Table;
-use crate::telemetry::{SpanSink, Tsdb};
+use crate::telemetry::SpanSink;
 use crate::util::clock::SharedClock;
 
 use super::stages::{
-    BinMsg, EtlStage, RowsMsg, StageContext, StageRunner, StageStats, UnzipperStage,
+    BinMsg, EtlStage, RowsMsg, SpanRoute, StageContext, StageRunner, StageStats, UnzipperStage,
     V2xStage, V2xWrite, ZipMsg,
 };
 
@@ -212,15 +212,35 @@ pub struct PipelineHandle {
 
 impl PipelineDeployment {
     /// Deploy `cfg` onto `cloud` (placing containers on `node_id`), with
-    /// spans flowing into `spans` and per-stage latency series into
-    /// `tsdb`.
+    /// every stage's spans flowing into the shared `spans` sink. This is
+    /// the synchronous telemetry path (sim mode, tests); real-mode
+    /// experiments use [`PipelineDeployment::deploy_routed`] with
+    /// per-stage lock-free rings.
     pub fn deploy(
         cfg: &VariantConfig,
         cloud: &Cloud,
         node_id: &str,
         clock: SharedClock,
         spans: SpanSink,
-        tsdb: &Tsdb,
+    ) -> PipelineHandle {
+        let routes = [
+            SpanRoute::Shared(spans.clone()),
+            SpanRoute::Shared(spans.clone()),
+            SpanRoute::Shared(spans),
+        ];
+        Self::deploy_routed(cfg, cloud, node_id, clock, routes)
+    }
+
+    /// Deploy `cfg` with an explicit span route per stage, in pipeline
+    /// order `[unzipper, v2x, etl]` — the real-mode path hands each stage
+    /// a private SPSC ring producer so telemetry never blocks the
+    /// pipeline-under-test.
+    pub fn deploy_routed(
+        cfg: &VariantConfig,
+        cloud: &Cloud,
+        node_id: &str,
+        clock: SharedClock,
+        routes: [SpanRoute; 3],
     ) -> PipelineHandle {
         let namespace = format!("pipeline-{}", cfg.name);
         let blob = BlobStore::new(clock.clone(), cfg.blob_latency);
@@ -257,17 +277,11 @@ impl PipelineDeployment {
             }
         };
 
-        let lat_series = |stage: &str| {
-            Some(tsdb.series("stage_cum_latency_s", &[("stage", stage), ("pipeline", cfg.name)]))
+        let base_ctx = |cname: &str, throttle: f64| {
+            StageContext::new(clock.clone(), container_for(cname), throttle)
         };
 
-        let base_ctx = |cname: &str, throttle: f64| StageContext {
-            clock: clock.clone(),
-            spans: spans.clone(),
-            container: container_for(cname),
-            throttle,
-        };
-
+        let [route_unzipper, route_v2x, route_etl] = routes;
         let mut stage_joins = Vec::new();
         stage_joins.push((
             "unzipper_phase",
@@ -275,11 +289,11 @@ impl PipelineDeployment {
                 UnzipperStage {
                     service_s: cfg.unzipper_service_s,
                     persist: raw_writer.clone(),
-                    cum_latency: lat_series("unzipper_phase"),
                 },
                 ingress.clone(),
                 Some(bins.clone()),
                 base_ctx("unzipper", 1.0),
+                route_unzipper,
             ),
         ));
         stage_joins.push((
@@ -288,11 +302,11 @@ impl PipelineDeployment {
                 V2xStage {
                     parse_s: cfg.v2x_parse_s,
                     write: v2x_write,
-                    cum_latency: lat_series("v2x_phase"),
                 },
                 bins,
                 Some(rows.clone()),
                 base_ctx("v2x", cfg.v2x_throttle),
+                route_v2x,
             ),
         ));
         stage_joins.push((
@@ -301,11 +315,11 @@ impl PipelineDeployment {
                 EtlStage {
                     service_s: cfg.etl_service_s,
                     table: table.clone(),
-                    cum_latency: lat_series("etl_phase"),
                 },
                 rows,
                 None,
                 base_ctx("etl", 1.0),
+                route_etl,
             ),
         ));
 
@@ -404,14 +418,13 @@ mod tests {
     use crate::datagen::{DataSet, DataSetSpec};
     use crate::util::clock::ScaledClock;
 
-    fn deploy(cfg: &VariantConfig, scale: f64) -> (PipelineHandle, Tsdb, SpanSink) {
+    fn deploy(cfg: &VariantConfig, scale: f64) -> (PipelineHandle, SpanSink) {
         let clock = ScaledClock::new(scale);
         let cloud = Cloud::new();
         cloud.add_node("n1", Resources::new(16.0, 64.0), 0.40);
-        let tsdb = Tsdb::new();
         let spans = SpanSink::new();
-        let h = PipelineDeployment::deploy(cfg, &cloud, "n1", clock, spans.clone(), &tsdb);
-        (h, tsdb, spans)
+        let h = PipelineDeployment::deploy(cfg, &cloud, "n1", clock, spans.clone());
+        (h, spans)
     }
 
     fn small_dataset() -> DataSet {
@@ -450,7 +463,7 @@ mod tests {
 
     #[test]
     fn deploy_ingest_drain_blocking() {
-        let (h, _tsdb, spans) = deploy(&VariantConfig::blocking_write(), 20_000.0);
+        let (h, spans) = deploy(&VariantConfig::blocking_write(), 20_000.0);
         assert!(h.is_reachable());
         let ds = small_dataset();
         for i in 0..10 {
@@ -475,14 +488,19 @@ mod tests {
 
     #[test]
     fn deploy_ingest_drain_non_blocking() {
-        let (h, tsdb, _) = deploy(&VariantConfig::no_blocking_write(), 20_000.0);
+        let (h, spans) = deploy(&VariantConfig::no_blocking_write(), 20_000.0);
         let ds = small_dataset();
         for i in 0..6 {
             h.ingest(Arc::new(ds.payload(i).zip_bytes.clone()));
         }
         let stats = h.finish();
         assert_eq!(stats.blob_objects, 6 + 30);
-        // cumulative latency series present for all stages
+        // cumulative latency is derived from span ingest times by a
+        // pipeline-labelled collector
+        let tsdb = crate::telemetry::Tsdb::new();
+        let mut collector =
+            crate::telemetry::Collector::with_pipeline(tsdb.clone(), "no-blocking-write");
+        collector.collect_from(&spans);
         for stage in ["unzipper_phase", "v2x_phase", "etl_phase"] {
             assert!(
                 !tsdb
@@ -495,7 +513,7 @@ mod tests {
 
     #[test]
     fn engage_is_exclusive() {
-        let (h, _, _) = deploy(&VariantConfig::blocking_write(), 50_000.0);
+        let (h, _) = deploy(&VariantConfig::blocking_write(), 50_000.0);
         assert!(h.engage());
         assert!(!h.engage());
         assert!(h.is_engaged());
@@ -515,7 +533,7 @@ mod tests {
             VariantConfig::no_blocking_write(),
             VariantConfig::cpu_limited(),
         ] {
-            let (h, _, _) = deploy(&cfg, 1000.0);
+            let (h, _) = deploy(&cfg, 1000.0);
             let ds = small_dataset();
             let n = 12;
             let t0 = {

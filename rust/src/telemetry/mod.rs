@@ -8,9 +8,19 @@
 //! sink, collector, and TSDB are in-process equivalents with the same
 //! surface: stages emit [`Span`]s, the [`Collector`] derives per-stage
 //! counters/histograms, and reports run range queries against the [`Tsdb`].
+//!
+//! The real-mode hot path hands spans off through lock-free [`ring`]
+//! SPSC buffers (one per worker, drained by a single aggregator) and
+//! publishes running cost counters through [`seqlock`] snapshot cells, so
+//! measurement never blocks the pipeline-under-test — see
+//! `docs/TELEMETRY.md` for the full design.
 
+pub mod ring;
+pub mod seqlock;
 mod span;
 mod tsdb;
 
+pub use ring::{ring, RingConsumer, RingProducer};
+pub use seqlock::Seqlock;
 pub use span::{Collector, Span, SpanSink};
 pub use tsdb::{Labels, SeriesHandle, SeriesKey, Tsdb};

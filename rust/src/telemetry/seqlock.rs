@@ -1,0 +1,164 @@
+//! Seqlock-published snapshot cells for multi-word counters.
+//!
+//! The real-mode cost meter needs to expose a *consistent* multi-word
+//! snapshot (cpu seconds, memory seconds, tick count, …) to readers while
+//! a pipeline worker updates it on every tick. A mutex would put the
+//! harness back on the hot path — the exact perturbation §V.B of the
+//! paper tells the measurement layer to avoid. A seqlock keeps the writer
+//! wait-free: it bumps a version counter to an odd value, stores the
+//! payload words, then bumps the version to the next even value. Readers
+//! retry until they observe the *same even version* before and after
+//! loading the words, which proves no write overlapped the read.
+//!
+//! The payload travels as `u64` words (floats via [`f64::to_bits`]), so
+//! the cell is plain safe Rust over atomics — no `unsafe`, no torn loads
+//! at the word level, and the version protocol rules out torn *snapshots*
+//! across words. Writes are expected to come from one thread at a time
+//! (the meter is `&mut`-owned by its worker); the writer nonetheless
+//! claims the cell with a compare-exchange so a misuse from two threads
+//! degrades to one of them spinning, never to a torn snapshot.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// An `N`-word seqlock cell. Writers publish all `N` words atomically
+/// with respect to readers; readers never block the writer.
+#[derive(Debug)]
+pub struct Seqlock<const N: usize> {
+    /// Even = stable, odd = write in progress.
+    version: AtomicU64,
+    words: [AtomicU64; N],
+}
+
+impl<const N: usize> Default for Seqlock<N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<const N: usize> Seqlock<N> {
+    /// A cell whose words all start at zero (version 0 = stable).
+    pub fn new() -> Self {
+        Seqlock {
+            version: AtomicU64::new(0),
+            words: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Publish a new snapshot. Wait-free for the single intended writer;
+    /// if two writers race (a misuse), the loser spins until the cell is
+    /// stable again rather than corrupting it.
+    pub fn write(&self, words: &[u64; N]) {
+        let mut v = self.version.load(Ordering::Relaxed);
+        loop {
+            // only claim a stable (even) version; odd means another write
+            // is mid-flight
+            if v % 2 == 0 {
+                match self.version.compare_exchange_weak(
+                    v,
+                    v + 1,
+                    Ordering::Acquire,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => v = actual,
+                }
+            } else {
+                std::hint::spin_loop();
+                v = self.version.load(Ordering::Relaxed);
+            }
+        }
+        for (slot, w) in self.words.iter().zip(words) {
+            slot.store(*w, Ordering::Release);
+        }
+        // v+2 is even again; Release orders the word stores before it
+        self.version.store(v + 2, Ordering::Release);
+    }
+
+    /// Read a consistent snapshot. Lock-free: retries while a write is in
+    /// flight, which on the intended single-writer cell is a few loads.
+    pub fn read(&self) -> [u64; N] {
+        loop {
+            let v1 = self.version.load(Ordering::Acquire);
+            if v1 % 2 != 0 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let mut out = [0u64; N];
+            for (o, w) in out.iter_mut().zip(&self.words) {
+                *o = w.load(Ordering::Acquire);
+            }
+            // the fence orders the word loads before the version re-check:
+            // if the version still matches, no writer touched the cell
+            // while we were reading
+            fence(Ordering::Acquire);
+            if self.version.load(Ordering::Relaxed) == v1 {
+                return out;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn fresh_cell_reads_zero() {
+        let cell: Seqlock<3> = Seqlock::new();
+        assert_eq!(cell.read(), [0, 0, 0]);
+    }
+
+    #[test]
+    fn write_then_read_round_trips() {
+        let cell: Seqlock<2> = Seqlock::new();
+        cell.write(&[7, 9]);
+        assert_eq!(cell.read(), [7, 9]);
+        cell.write(&[1, 2]);
+        assert_eq!(cell.read(), [1, 2]);
+    }
+
+    #[test]
+    fn f64_bits_round_trip() {
+        let cell: Seqlock<1> = Seqlock::new();
+        cell.write(&[1.25f64.to_bits()]);
+        assert_eq!(f64::from_bits(cell.read()[0]), 1.25);
+    }
+
+    #[test]
+    fn reader_never_sees_torn_snapshot() {
+        // writer publishes [k, 2k]; any snapshot where the second word is
+        // not exactly twice the first is torn
+        let cell: Arc<Seqlock<2>> = Arc::new(Seqlock::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let w = {
+            let cell = cell.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut k = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    k += 1;
+                    cell.write(&[k, 2 * k]);
+                }
+            })
+        };
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let cell = cell.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200_000 {
+                        let [a, b] = cell.read();
+                        assert_eq!(b, 2 * a, "torn snapshot: [{a}, {b}]");
+                    }
+                })
+            })
+            .collect();
+        for r in readers {
+            r.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        w.join().unwrap();
+    }
+}

@@ -2,19 +2,24 @@
 //!
 //! A [`Span`] is the unit of white-box instrumentation the paper asks
 //! pipeline engineers to add (§V.B): stage name, start time, duration, and
-//! payload counters. Stages push spans into a [`SpanSink`]; the
+//! payload counters. Stages push spans into a [`SpanSink`] (or, on the
+//! real-mode hot path, a lock-free [`ring`](super::ring)); the
 //! [`Collector`] converts each span into TSDB samples:
 //!
 //! - `stage_records{stage=..}`   — records processed by the span
 //! - `stage_bytes{stage=..}`     — bytes processed
 //! - `stage_latency_s{stage=..}` — span duration (seconds)
 //! - `stage_errors{stage=..}`    — 1 per failed span
+//! - `stage_cum_latency_s{stage=..,pipeline=..}` — ingest-to-stage-exit
+//!   latency, derived from [`Span::ingest_s`] when the collector was built
+//!   with [`Collector::with_pipeline`]
 //!
 //! Samples are timestamped at span *end* (start + duration), which is when
 //! the work became externally visible.
 
 use std::sync::{Arc, Mutex};
 
+use super::ring::RingConsumer;
 use super::tsdb::{SeriesHandle, Tsdb};
 
 /// One instrumented unit of stage work.
@@ -28,6 +33,9 @@ pub struct Span {
     pub start_s: f64,
     /// Span duration, virtual seconds.
     pub duration_s: f64,
+    /// Virtual time the traced payload entered the *pipeline* (not this
+    /// stage) — the anchor for cumulative latency. `NaN` when unknown.
+    pub ingest_s: f64,
     /// Records handled in this span (a stage may split/join records).
     pub records: u64,
     /// Payload bytes handled.
@@ -41,10 +49,21 @@ impl Span {
     pub fn end_s(&self) -> f64 {
         self.start_s + self.duration_s
     }
+
+    /// Ingest-to-stage-exit latency, if the ingest time is known.
+    pub fn cum_latency_s(&self) -> Option<f64> {
+        let lat = self.end_s() - self.ingest_s;
+        lat.is_finite().then_some(lat)
+    }
 }
 
 /// Shared buffer the pipeline's stages push spans into. The experiment
 /// controller drains it through a [`Collector`].
+///
+/// This is the *synchronous* hand-off (sim mode, tests, campaign cells):
+/// pushes take a mutex. The real-mode hot path uses per-worker
+/// [`ring`](super::ring)s instead, so measurement never blocks the
+/// pipeline-under-test.
 #[derive(Debug, Clone, Default)]
 pub struct SpanSink {
     spans: Arc<Mutex<Vec<Span>>>,
@@ -81,6 +100,9 @@ impl SpanSink {
 /// stage (ingest is hot during experiments).
 pub struct Collector {
     tsdb: Tsdb,
+    /// When set, spans with a known ingest time also produce
+    /// `stage_cum_latency_s{stage, pipeline}` samples.
+    pipeline: Option<String>,
     by_stage: Mutex<std::collections::HashMap<&'static str, StageSeries>>,
 }
 
@@ -89,6 +111,34 @@ struct StageSeries {
     bytes: SeriesHandle,
     latency: SeriesHandle,
     errors: SeriesHandle,
+    cum: Option<SeriesHandle>,
+}
+
+impl StageSeries {
+    fn new(tsdb: &Tsdb, pipeline: Option<&str>, stage: &'static str) -> Self {
+        StageSeries {
+            records: tsdb.series("stage_records", &[("stage", stage)]),
+            bytes: tsdb.series("stage_bytes", &[("stage", stage)]),
+            latency: tsdb.series("stage_latency_s", &[("stage", stage)]),
+            errors: tsdb.series("stage_errors", &[("stage", stage)]),
+            cum: pipeline.map(|p| {
+                tsdb.series("stage_cum_latency_s", &[("stage", stage), ("pipeline", p)])
+            }),
+        }
+    }
+
+    fn record(&self, span: &Span) {
+        let t = span.end_s();
+        self.records.push(t, span.records as f64);
+        self.bytes.push(t, span.bytes as f64);
+        self.latency.push(t, span.duration_s);
+        if !span.ok {
+            self.errors.push(t, 1.0);
+        }
+        if let (Some(cum), Some(lat)) = (&self.cum, span.cum_latency_s()) {
+            cum.push(t, lat);
+        }
+    }
 }
 
 impl Collector {
@@ -96,6 +146,17 @@ impl Collector {
     pub fn new(tsdb: Tsdb) -> Self {
         Collector {
             tsdb,
+            pipeline: None,
+            by_stage: Mutex::new(Default::default()),
+        }
+    }
+
+    /// Collector that additionally derives per-stage cumulative latency
+    /// (`stage_cum_latency_s{stage, pipeline}`) from [`Span::ingest_s`].
+    pub fn with_pipeline(tsdb: Tsdb, pipeline: &str) -> Self {
+        Collector {
+            tsdb,
+            pipeline: Some(pipeline.to_string()),
             by_stage: Mutex::new(Default::default()),
         }
     }
@@ -108,30 +169,45 @@ impl Collector {
     /// Convert one span into metric samples.
     pub fn record(&self, span: &Span) {
         let mut map = self.by_stage.lock().unwrap();
-        let series = map.entry(span.stage).or_insert_with(|| StageSeries {
-            records: self.tsdb.series("stage_records", &[("stage", span.stage)]),
-            bytes: self.tsdb.series("stage_bytes", &[("stage", span.stage)]),
-            latency: self
-                .tsdb
-                .series("stage_latency_s", &[("stage", span.stage)]),
-            errors: self.tsdb.series("stage_errors", &[("stage", span.stage)]),
-        });
-        let t = span.end_s();
-        series.records.push(t, span.records as f64);
-        series.bytes.push(t, span.bytes as f64);
-        series.latency.push(t, span.duration_s);
-        if !span.ok {
-            series.errors.push(t, 1.0);
+        let series = map
+            .entry(span.stage)
+            .or_insert_with(|| StageSeries::new(&self.tsdb, self.pipeline.as_deref(), span.stage));
+        series.record(span);
+    }
+
+    /// Convert a batch of spans with a single `by_stage` access — `&mut`
+    /// proves exclusivity, so the aggregator's drain loop pays no lock at
+    /// all instead of one per span.
+    pub fn record_all(&mut self, spans: &[Span]) {
+        let Collector {
+            tsdb,
+            pipeline,
+            by_stage,
+        } = self;
+        let map = by_stage.get_mut().unwrap();
+        for span in spans {
+            let series = map
+                .entry(span.stage)
+                .or_insert_with(|| StageSeries::new(tsdb, pipeline.as_deref(), span.stage));
+            series.record(span);
         }
     }
 
     /// Drain a sink into the TSDB; returns the number of spans collected.
-    pub fn collect_from(&self, sink: &SpanSink) -> usize {
+    pub fn collect_from(&mut self, sink: &SpanSink) -> usize {
         let spans = sink.drain();
-        for s in &spans {
-            self.record(s);
-        }
+        self.record_all(&spans);
         spans.len()
+    }
+
+    /// Drain a span ring into the TSDB. Returns `(collected, dropped)`
+    /// where `dropped` is the ring's cumulative overflow count — callers
+    /// must surface it rather than silently undercounting.
+    pub fn collect_from_ring(&mut self, consumer: &mut RingConsumer<Span>) -> (usize, u64) {
+        let mut buf = Vec::new();
+        consumer.drain_into(&mut buf);
+        self.record_all(&buf);
+        (buf.len(), consumer.dropped())
     }
 }
 
@@ -145,6 +221,7 @@ mod tests {
             stage,
             start_s: start,
             duration_s: dur,
+            ingest_s: f64::NAN,
             records: recs,
             bytes: recs * 100,
             ok,
@@ -154,6 +231,14 @@ mod tests {
     #[test]
     fn span_end_time() {
         assert_eq!(span("s", 2.0, 0.5, 1, true).end_s(), 2.5);
+    }
+
+    #[test]
+    fn cum_latency_requires_known_ingest() {
+        let mut s = span("s", 2.0, 0.5, 1, true);
+        assert_eq!(s.cum_latency_s(), None);
+        s.ingest_s = 1.0;
+        assert_eq!(s.cum_latency_s(), Some(1.5));
     }
 
     #[test]
@@ -177,6 +262,27 @@ mod tests {
         let lat = db.samples("stage_latency_s", &[("stage", "etl")]);
         assert_eq!(lat, vec![(1.25, 0.25)]);
         assert!(db.samples("stage_errors", &[("stage", "etl")]).is_empty());
+        // no pipeline configured → no cumulative-latency series, even if
+        // a span carries an ingest time
+        let mut s = span("etl", 2.0, 0.25, 5, true);
+        s.ingest_s = 0.0;
+        c.record(&s);
+        assert!(db.samples("stage_cum_latency_s", &[]).is_empty());
+    }
+
+    #[test]
+    fn with_pipeline_derives_cum_latency() {
+        let db = Tsdb::new();
+        let c = Collector::with_pipeline(db.clone(), "demo");
+        let mut s = span("etl", 3.0, 0.5, 1, true);
+        s.ingest_s = 1.0;
+        c.record(&s);
+        c.record(&span("etl", 4.0, 0.5, 1, true)); // NaN ingest → skipped
+        let cum = db.samples(
+            "stage_cum_latency_s",
+            &[("stage", "etl"), ("pipeline", "demo")],
+        );
+        assert_eq!(cum, vec![(3.5, 2.5)]);
     }
 
     #[test]
@@ -191,7 +297,7 @@ mod tests {
     #[test]
     fn collect_from_drains_sink() {
         let db = Tsdb::new();
-        let c = Collector::new(db.clone());
+        let mut c = Collector::new(db.clone());
         let sink = SpanSink::new();
         for i in 0..10 {
             sink.push(span("u", i as f64, 0.5, 2, true));
@@ -199,6 +305,43 @@ mod tests {
         assert_eq!(c.collect_from(&sink), 10);
         assert!(sink.is_empty());
         assert_eq!(db.sum_range("stage_records", &[("stage", "u")], 0.0, 100.0), 20.0);
+    }
+
+    #[test]
+    fn record_all_matches_per_span_record() {
+        let spans: Vec<Span> = (0..20)
+            .map(|i| span(if i % 2 == 0 { "a" } else { "b" }, i as f64, 0.1, i, i % 5 != 0))
+            .collect();
+        let one = Tsdb::new();
+        let c1 = Collector::new(one.clone());
+        for s in &spans {
+            c1.record(s);
+        }
+        let batch = Tsdb::new();
+        let mut c2 = Collector::new(batch.clone());
+        c2.record_all(&spans);
+        for metric in ["stage_records", "stage_bytes", "stage_latency_s", "stage_errors"] {
+            for stage in ["a", "b"] {
+                assert_eq!(
+                    one.samples(metric, &[("stage", stage)]),
+                    batch.samples(metric, &[("stage", stage)]),
+                    "{metric}/{stage} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn collect_from_ring_reports_drops() {
+        let db = Tsdb::new();
+        let mut c = Collector::new(db.clone());
+        let (mut p, mut consumer) = super::super::ring::ring(4);
+        for i in 0..6 {
+            p.push(span("r", i as f64, 0.1, 1, true));
+        }
+        let (collected, dropped) = c.collect_from_ring(&mut consumer);
+        assert_eq!((collected, dropped), (4, 2));
+        assert_eq!(db.sum_range("stage_records", &[("stage", "r")], 0.0, 100.0), 4.0);
     }
 
     #[test]

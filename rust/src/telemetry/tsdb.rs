@@ -10,6 +10,7 @@
 //! happens once at registration, appends are a single short mutex hold.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Label set (sorted, so the key is canonical).
@@ -45,20 +46,41 @@ impl SeriesKey {
 type Samples = Arc<Mutex<Vec<(f64, f64)>>>;
 
 /// Writer handle for one series: append without map lookups.
+///
+/// Non-finite timestamps or values (NaN, ±inf) are rejected at the door
+/// and counted on the store's drop counter — a single poisoned sample
+/// must never make every later range query panic in the sort.
 #[derive(Debug, Clone)]
 pub struct SeriesHandle {
     samples: Samples,
+    dropped: Arc<AtomicU64>,
 }
 
 impl SeriesHandle {
     /// Append a sample. Caller supplies the (virtual) timestamp.
+    /// Non-finite `t` or `v` is dropped (and counted), not stored.
     pub fn push(&self, t: f64, v: f64) {
+        if !t.is_finite() || !v.is_finite() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         self.samples.lock().unwrap().push((t, v));
     }
 
-    /// Append many samples at once (single lock hold).
+    /// Append many samples at once (single lock hold). Non-finite entries
+    /// are dropped (and counted) individually; the rest are stored.
     pub fn push_batch(&self, batch: &[(f64, f64)]) {
-        self.samples.lock().unwrap().extend_from_slice(batch);
+        let bad = batch
+            .iter()
+            .filter(|(t, v)| !t.is_finite() || !v.is_finite())
+            .count() as u64;
+        if bad > 0 {
+            self.dropped.fetch_add(bad, Ordering::Relaxed);
+        }
+        self.samples
+            .lock()
+            .unwrap()
+            .extend(batch.iter().filter(|(t, v)| t.is_finite() && v.is_finite()));
     }
 }
 
@@ -66,6 +88,7 @@ impl SeriesHandle {
 #[derive(Debug, Clone, Default)]
 pub struct Tsdb {
     inner: Arc<Mutex<BTreeMap<SeriesKey, Samples>>>,
+    dropped: Arc<AtomicU64>,
 }
 
 impl Tsdb {
@@ -82,7 +105,10 @@ impl Tsdb {
             .entry(key)
             .or_insert_with(|| Arc::new(Mutex::new(Vec::new())))
             .clone();
-        SeriesHandle { samples }
+        SeriesHandle {
+            samples,
+            dropped: self.dropped.clone(),
+        }
     }
 
     /// One-shot write (registration + append). Convenient off the hot path.
@@ -115,7 +141,10 @@ impl Tsdb {
                 out.extend_from_slice(&s.lock().unwrap());
             }
         }
-        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp: a NaN timestamp (should be impossible — handles
+        // reject them — but e.g. old snapshots could carry one) sorts
+        // last instead of panicking the whole query surface
+        out.sort_by(|a, b| a.0.total_cmp(&b.0));
         out
     }
 
@@ -225,6 +254,13 @@ impl Tsdb {
         map.values().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// Samples rejected at ingest because the timestamp or value was
+    /// non-finite. Survives [`Tsdb::clear`]: the count is a data-quality
+    /// signal about the writers, not about the stored data.
+    pub fn dropped_samples(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
     /// Drop all data (between experiments on a shared harness).
     pub fn clear(&self) {
         self.inner.lock().unwrap().clear();
@@ -331,6 +367,45 @@ mod tests {
         db.write("a", &[], 1.0, 1.0);
         db.clear();
         assert_eq!(db.total_samples(), 0);
+    }
+
+    #[test]
+    fn non_finite_samples_are_dropped_and_counted() {
+        let db = Tsdb::new();
+        let h = db.series("m", &[]);
+        h.push(f64::NAN, 1.0);
+        h.push(1.0, f64::NAN);
+        h.push(f64::INFINITY, 1.0);
+        h.push(2.0, f64::NEG_INFINITY);
+        h.push(3.0, 4.0);
+        h.push_batch(&[(4.0, 1.0), (f64::NAN, f64::NAN), (5.0, 2.0)]);
+        assert_eq!(db.dropped_samples(), 5);
+        assert_eq!(db.samples("m", &[]), vec![(3.0, 4.0), (4.0, 1.0), (5.0, 2.0)]);
+        // range queries over the store still work — the regression this
+        // guards: one NaN timestamp used to panic every later query
+        assert_eq!(db.sum_range("m", &[], 0.0, 10.0), 7.0);
+    }
+
+    #[test]
+    fn query_survives_nan_bearing_series() {
+        // simulate a store that somehow holds a NaN timestamp anyway
+        // (e.g. loaded from an old snapshot): sorting must not panic
+        let db = Tsdb::new();
+        let key = SeriesKey::new("m", &[]);
+        db.inner
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::new(Mutex::new(Vec::new())))
+            .lock()
+            .unwrap()
+            .extend_from_slice(&[(2.0, 1.0), (f64::NAN, 9.0), (1.0, 3.0)]);
+        let s = db.samples("m", &[]);
+        assert_eq!(s.len(), 3);
+        assert_eq!((s[0], s[1]), ((1.0, 3.0), (2.0, 1.0)));
+        assert!(s[2].0.is_nan());
+        // the NaN sample fails every range predicate, so folds stay finite
+        assert_eq!(db.sum_range("m", &[], 0.0, 10.0), 4.0);
     }
 
     #[test]

@@ -12,9 +12,11 @@
 //! PR 7 claim: clustered fleet campaigns clear >= 10x the cells/sec of
 //! the exhaustive run recorded alongside them, the PR 8 claim: dealing
 //! the same grid to two loopback workers keeps >= 0.8x the local
-//! cells/sec (the fleet protocol tax stays under 20%), and the PR 9
+//! cells/sec (the fleet protocol tax stays under 20%), the PR 9
 //! claim: the adaptive SLO-frontier bisection simulates at most half
-//! the cells an exhaustive sweep of the same load range would.
+//! the cells an exhaustive sweep of the same load range would, and the
+//! PR 10 claim: at 8 producer threads the SPSC-ring telemetry route
+//! clears >= 3x the spans/sec of the mutex-shared span sink.
 
 use std::path::{Path, PathBuf};
 
@@ -81,21 +83,70 @@ fn sim_trajectory_entries_carry_the_required_metrics() {
 
 #[test]
 fn hotpaths_trajectory_entries_carry_stage_percentiles() {
+    // BENCH_hotpaths.json holds two entry shapes: kernel entries from
+    // `perf_hotpaths` (stage percentiles + rates) and telemetry entries
+    // from `telemetry_contention` (locked-vs-ring spans/sec at 1 and 8
+    // producers, recognized by `spans_per_s_ring_8p`). Each shape must
+    // carry its full metric set.
     let doc = load("BENCH_hotpaths.json");
     for e in doc.get("entries").and_then(Json::as_arr).unwrap() {
         let m = e.get("metrics").unwrap();
+        let label = e.get_str("label").unwrap();
+        if m.get_f64("spans_per_s_ring_8p").is_some() {
+            for name in [
+                "spans_per_s_locked_1p",
+                "spans_per_s_locked_8p",
+                "spans_per_s_ring_1p",
+                "spans_per_s_ring_8p",
+            ] {
+                let v = m
+                    .get_f64(name)
+                    .unwrap_or_else(|| panic!("entry '{label}' missing {name}"));
+                assert!(v > 0.0, "{name} = {v} must be a positive rate");
+            }
+            continue;
+        }
         for stage in ["enqueue", "pop", "service_draw", "stats_accrue"] {
             for pct in ["p50", "p95", "p99"] {
                 let name = format!("{stage}_{pct}_ns");
-                let v = m.get_f64(&name).unwrap_or_else(|| {
-                    panic!("entry '{}' missing {name}", e.get_str("label").unwrap())
-                });
+                let v = m
+                    .get_f64(&name)
+                    .unwrap_or_else(|| panic!("entry '{label}' missing {name}"));
                 assert!(v.is_finite() && v >= 0.0, "{name} = {v}");
             }
         }
         assert!(m.get_f64("events_per_s").unwrap() > 0.0);
         assert!(m.get_f64("queue_ops_per_s").unwrap() > 0.0);
     }
+}
+
+#[test]
+fn telemetry_ring_entry_triples_the_locked_rate() {
+    // the PR 10 acceptance bar: at 8 producer threads the SPSC-ring
+    // telemetry route must clear >= 3x the spans/sec of the mutex-shared
+    // sink, recorded as one self-contained reference-host entry
+    let doc = load("BENCH_hotpaths.json");
+    let e = entry_by_label(&doc, "pr10-telemetry");
+    assert_eq!(
+        e.get_str("host"),
+        Some("reference"),
+        "the 3x claim is pinned on the reference host"
+    );
+    let m = e.get("metrics").unwrap();
+    let locked = m.get_f64("spans_per_s_locked_8p").unwrap();
+    let ring = m.get_f64("spans_per_s_ring_8p").unwrap();
+    let ratio = ring / locked;
+    assert!(
+        ratio >= 3.0,
+        "spans/sec ratio {ratio:.2} < 3.0 ({ring:.0} ring vs {locked:.0} locked)"
+    );
+    // and the locked route must actually collapse under contention —
+    // that regression is the whole reason the rings exist
+    let locked_1p = m.get_f64("spans_per_s_locked_1p").unwrap();
+    assert!(
+        locked < locked_1p,
+        "locked sink at 8p ({locked:.0}) should be slower than at 1p ({locked_1p:.0})"
+    );
 }
 
 #[test]

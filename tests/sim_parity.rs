@@ -12,17 +12,22 @@
 //! sleeps — at clock scale ~300–1000 that distortion is below a few
 //! percent in release mode but can reach tens of percent on loaded CI
 //! machines (the in-tree overload test historically allowed a 0.5–1.4×
-//! band vs the analytic capacity for the same reason). We therefore
-//! assert **relative throughput error < 0.45** per variant — wide enough
-//! to never flake on a noisy runner, tight enough to catch a broken
-//! service model (the three variants' capacities are 1.95 / 6.15 / 0.66
-//! zips/s, i.e. 3–9× apart).
+//! band vs the analytic capacity for the same reason). We assert
+//! **relative throughput error < 0.30** per variant. The band was 0.45
+//! while every stage thread serialized its span emission through one
+//! shared mutex — the telemetry plane itself perturbed the measured run
+//! under load. With spans routed through per-stage lock-free SPSC rings
+//! (PR 10) the measurement overhead no longer backs up the stages, so
+//! the residual error is the OS-noise floor: the band tightens to 0.30,
+//! still wide enough not to flake on a loaded runner, tight enough to
+//! catch a broken service model (the three variants' capacities are
+//! 1.95 / 6.15 / 0.66 zips/s, i.e. 3–9× apart).
 //!
-//! The 0.45 band covers *real-vs-sim* only. The simulator itself is
+//! The 0.30 band covers *real-vs-sim* only. The simulator itself is
 //! held to a far tighter bar: the sim-vs-analytic case at the bottom of
 //! this file reuses the `validate` oracle to pin the DES within **2%**
 //! of closed-form M/M/1 ground truth — a parity regression in the
-//! kernel is caught there at 2%, not here at 45%.
+//! kernel is caught there at 2%, not here at 30%.
 
 use plantd::datagen::{DataSet, DataSetSpec};
 use plantd::experiment::{Experiment, ExperimentHarness};
@@ -30,7 +35,7 @@ use plantd::loadgen::LoadPattern;
 use plantd::pipeline::VariantConfig;
 
 /// Documented real-vs-sim throughput tolerance (see module docs).
-const THROUGHPUT_REL_TOL: f64 = 0.45;
+const THROUGHPUT_REL_TOL: f64 = 0.30;
 
 fn saturating_experiment() -> Experiment {
     Experiment::new(

@@ -1,0 +1,246 @@
+//! Multi-threaded stress tests for the lock-free telemetry plane
+//! (PR 10): SPSC span rings, seqlock cost snapshots, and the
+//! ring-vs-locked `ExperimentRecord` equivalence claim — a ring-drained
+//! real-mode run must produce the same aggregate totals (spans, records,
+//! bytes, errors, cost rate) as the legacy mutex-shared sink on the same
+//! seed. Every test name starts with `telemetry_` so CI can run the
+//! whole file with `cargo test telemetry_`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use plantd::datagen::{DataSet, DataSetSpec};
+use plantd::experiment::{Experiment, ExperimentHarness};
+use plantd::loadgen::LoadPattern;
+use plantd::pipeline::VariantConfig;
+use plantd::telemetry::{ring, RingConsumer, Seqlock};
+
+/// The paper's automotive-telemetry workload at integration-test scale:
+/// a ramp of vehicle transmissions with a few percent of bad records.
+fn paper_automotive_exp() -> Experiment {
+    Experiment::new(
+        "paper-automotive",
+        LoadPattern::ramp(10.0, 0.0, 8.0), // 40 zips
+        DataSet::generate(DataSetSpec {
+            payloads: 16,
+            records_per_subsystem: 5,
+            bad_rate: 0.05,
+            seed: 0xCAB5,
+        }),
+    )
+}
+
+#[test]
+fn telemetry_ring_no_loss_below_capacity() {
+    // N producers x 1 consumer (one SPSC ring per producer, as the
+    // harness wires it): staying below capacity, every value arrives
+    const PRODUCERS: usize = 8;
+    const PER_PRODUCER: u64 = 50_000;
+    const CAPACITY: usize = 1024;
+
+    let mut producers = Vec::new();
+    let mut consumers: Vec<RingConsumer<u64>> = Vec::new();
+    for _ in 0..PRODUCERS {
+        let (p, c) = ring::<u64>(CAPACITY);
+        producers.push(p);
+        consumers.push(c);
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        let stop_c = stop.clone();
+        let drainer = s.spawn(move || {
+            let mut got: Vec<Vec<u64>> = vec![Vec::new(); PRODUCERS];
+            loop {
+                let mut n = 0;
+                for (i, c) in consumers.iter_mut().enumerate() {
+                    n += c.drain_into(&mut got[i]);
+                }
+                if n == 0 {
+                    if stop_c.load(Ordering::Acquire) {
+                        for (i, c) in consumers.iter_mut().enumerate() {
+                            c.drain_into(&mut got[i]);
+                        }
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+            }
+            let dropped: u64 = consumers.iter().map(|c| c.dropped()).sum();
+            (got, dropped)
+        });
+        std::thread::scope(|inner| {
+            for mut p in producers.drain(..) {
+                inner.spawn(move || {
+                    for v in 0..PER_PRODUCER {
+                        // below-capacity contract: wait for the consumer
+                        // instead of dropping
+                        while !p.push(v) {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+        stop.store(true, Ordering::Release);
+        let (got, dropped) = drainer.join().unwrap();
+        for (i, vals) in got.iter().enumerate() {
+            assert_eq!(
+                vals.len() as u64,
+                PER_PRODUCER,
+                "producer {i} lost values"
+            );
+            // publish-order visibility: each ring is FIFO
+            for (j, v) in vals.iter().enumerate() {
+                assert_eq!(*v, j as u64, "producer {i} reordered at {j}");
+            }
+        }
+        // the retry loop above pushes the same value again after a
+        // failed attempt, so every drop is later compensated — but the
+        // counter still records each refusal honestly; with 50k values
+        // through a 1k ring some backpressure refusals are expected
+        let _ = dropped;
+    });
+}
+
+#[test]
+fn telemetry_ring_exact_drop_accounting() {
+    // no consumer draining: past capacity every push is refused and
+    // counted, and what was accepted survives in publish order
+    const CAPACITY: usize = 1024; // already a power of two
+    let (mut p, mut c) = ring::<u64>(CAPACITY);
+    assert_eq!(p.capacity(), CAPACITY);
+    let total = 3 * CAPACITY as u64;
+    let mut accepted = 0u64;
+    for v in 0..total {
+        if p.push(v) {
+            accepted += 1;
+        }
+    }
+    assert_eq!(accepted, CAPACITY as u64, "exactly one ring's worth fits");
+    assert_eq!(p.dropped(), total - CAPACITY as u64);
+    assert_eq!(c.dropped(), total - CAPACITY as u64);
+    let mut out = Vec::new();
+    c.drain_into(&mut out);
+    assert_eq!(out, (0..CAPACITY as u64).collect::<Vec<_>>());
+    // after draining, the ring accepts again without forgetting drops
+    assert!(p.push(999));
+    assert_eq!(p.dropped(), total - CAPACITY as u64);
+    assert_eq!(c.pop(), Some(999));
+    assert_eq!(c.pop(), None);
+}
+
+#[test]
+fn telemetry_seqlock_never_tears() {
+    // writer storm vs readers: the invariant (b == 2a, c == 3a) can only
+    // break if a reader observes a half-updated snapshot
+    let cell: Arc<Seqlock<3>> = Arc::new(Seqlock::new());
+    cell.write(&[0, 0, 0]);
+    let stop = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        let writer_cell = cell.clone();
+        let writer_stop = stop.clone();
+        s.spawn(move || {
+            let mut k = 1u64;
+            while !writer_stop.load(Ordering::Relaxed) {
+                writer_cell.write(&[k, 2 * k, 3 * k]);
+                k = k.wrapping_add(1);
+            }
+        });
+        let mut readers = Vec::new();
+        for _ in 0..3 {
+            let cell = cell.clone();
+            readers.push(s.spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..200_000 {
+                    let [a, b, c] = cell.read();
+                    assert_eq!(b, 2 * a, "torn read: [{a}, {b}, {c}]");
+                    assert_eq!(c, 3 * a, "torn read: [{a}, {b}, {c}]");
+                    last = last.max(a);
+                }
+                last
+            }));
+        }
+        let progressed = readers
+            .into_iter()
+            .map(|r| r.join().unwrap())
+            .max()
+            .unwrap();
+        stop.store(true, Ordering::Relaxed);
+        assert!(progressed > 0, "readers never saw a published write");
+    });
+}
+
+#[test]
+fn telemetry_ring_vs_locked_record_equivalence() {
+    // the PR 10 pinned claim: a ring-drained run produces the same
+    // ExperimentRecord aggregate totals as the locked path on the same
+    // seed. Wall-noise-dependent fields (durations, latencies) are
+    // excluded; everything counted is compared exactly.
+    let exp = paper_automotive_exp();
+    let variant = VariantConfig::blocking_write();
+
+    let ring_h = ExperimentHarness::new(600.0);
+    let ring_rec = ring_h.run(&variant, &exp).unwrap();
+    let locked_h = ExperimentHarness::new(600.0);
+    let locked_rec = locked_h.run_locked(&variant, &exp).unwrap();
+
+    assert_eq!(ring_rec.zips_sent, locked_rec.zips_sent);
+    assert_eq!(ring_rec.rows_inserted, locked_rec.rows_inserted);
+    assert_eq!(ring_rec.rows_scrubbed, locked_rec.rows_scrubbed);
+    assert_eq!(ring_rec.stage_errors, locked_rec.stage_errors);
+    assert_eq!(ring_rec.cost_per_hr_usd, locked_rec.cost_per_hr_usd);
+    assert_eq!(ring_rec.spans_dropped, 0, "rings must not overflow here");
+    assert_eq!(locked_rec.spans_dropped, 0, "the locked path never drops");
+
+    assert_eq!(ring_rec.per_stage.len(), locked_rec.per_stage.len());
+    for ((rn, rspans, rrecs, _), (ln, lspans, lrecs, _)) in
+        ring_rec.per_stage.iter().zip(&locked_rec.per_stage)
+    {
+        assert_eq!(rn, ln);
+        assert_eq!(rspans, lspans, "stage {rn}: span totals diverged");
+        assert_eq!(rrecs, lrecs, "stage {rn}: record totals diverged");
+    }
+
+    // the TSDB saw identical span-derived totals through both routes
+    for metric in ["stage_records", "stage_bytes", "stage_errors"] {
+        let ring_total = ring_h.tsdb.sum_range(metric, &[], 0.0, f64::MAX);
+        let locked_total = locked_h.tsdb.sum_range(metric, &[], 0.0, f64::MAX);
+        assert_eq!(
+            ring_total as u64, locked_total as u64,
+            "{metric}: ring {ring_total} vs locked {locked_total}"
+        );
+    }
+
+    // total cost is rate x prorated duration on both paths (duration
+    // itself is wall-noise, the identity is not)
+    for rec in [&ring_rec, &locked_rec] {
+        let expect = rec.cost_per_hr_usd * rec.duration_s / 3600.0;
+        assert!((rec.total_cost_usd - expect).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn telemetry_e2e_sample_count_matches_etl_span_count() {
+    // satellite of the drained_s+1.0 fix: with the fudge gone, the
+    // inclusive [started_s, drained_s] window captures exactly one
+    // cum-latency sample per ETL span — no more, no fewer
+    let harness = ExperimentHarness::new(600.0);
+    let variant = VariantConfig::no_blocking_write();
+    let rec = harness.run(&variant, &paper_automotive_exp()).unwrap();
+    let e2e = harness.tsdb.values_range(
+        "stage_cum_latency_s",
+        &[("stage", "etl_phase"), ("pipeline", variant.name)],
+        rec.started_s,
+        rec.drained_s,
+    );
+    let etl_spans = rec
+        .per_stage
+        .iter()
+        .find(|(name, ..)| name.as_str() == "etl_phase")
+        .map(|(_, spans, ..)| *spans)
+        .expect("etl_phase stats present");
+    assert!(etl_spans > 0);
+    assert_eq!(e2e.len() as u64, etl_spans);
+}
